@@ -1,0 +1,64 @@
+//! Ablation bench: the design choices DESIGN.md §4 calls out —
+//! threshold multiplier X, stability ε, and the entropy estimator.
+//! (registered as a bench so `cargo bench` regenerates the ablation tables)
+
+use ewq::ewq::ablation::{eps_spread, histogram_entropy, x_sweep};
+use ewq::ewq::{analyze_model, EwqConfig};
+use ewq::bench_util::{black_box, Bench};
+use ewq::report::Table;
+use ewq::zoo::load_flagships;
+
+fn main() {
+    println!("== bench_ablation: EWQ design-choice ablations ==");
+    let Ok(flagships) = load_flagships(&ewq::artifacts_dir()) else {
+        eprintln!("need artifacts (make artifacts)");
+        return;
+    };
+
+    // --- X sweep ---------------------------------------------------------------
+    let mut t = Table::new(
+        "X-sweep (threshold T = mu - X*sigma)",
+        &["model", "X", "aggressive", "8bit", "raw", "blocks saving"],
+    );
+    for m in &flagships {
+        let a = analyze_model(m, &EwqConfig::default());
+        for row in x_sweep(&a, &m.schema, &[0.0, 0.5, 1.0, 1.5, 2.0]) {
+            t.row(vec![
+                m.schema.name.clone(),
+                format!("{:.1}", row.x),
+                row.n_aggressive.to_string(),
+                row.n_moderate.to_string(),
+                row.n_raw.to_string(),
+                format!("{:.1}%", 100.0 * row.saving_frac),
+            ]);
+        }
+    }
+    println!("{}", t.render());
+
+    // --- eps sensitivity --------------------------------------------------------
+    let mut t = Table::new(
+        "eps sensitivity (block-entropy spread sigma/mu)",
+        &["model", "eps=1e-12", "eps=1e-6", "eps=1e-2"],
+    );
+    for m in &flagships {
+        let views: Vec<Vec<&[f32]>> =
+            m.weights.blocks.iter().map(|b| b.mat_slices()).collect();
+        t.row(vec![
+            m.schema.name.clone(),
+            format!("{:.2e}", eps_spread(&views, 1e-12)),
+            format!("{:.2e}", eps_spread(&views, 1e-6)),
+            format!("{:.2e}", eps_spread(&views, 1e-2)),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // --- estimator cost ------------------------------------------------------------
+    let b = Bench::quick();
+    let w = &flagships[0].weights.blocks[0].mats[4].data; // d x ff matrix
+    b.run("softmax_entropy (paper)", || {
+        black_box(ewq::entropy::entropy(black_box(w)));
+    });
+    b.run("histogram_entropy (plug-in, 64 bins)", || {
+        black_box(histogram_entropy(black_box(w), 64));
+    });
+}

@@ -1,0 +1,49 @@
+//! Bench: the O(n) EWQ entropy scan — scaling with tensor size and the full
+//! per-flagship analysis cost (the quantity FastEWQ's O(1) path eliminates;
+//! Table 14's "Complexity" column).
+
+use ewq::bench_util::{black_box, Bench};
+use ewq::entropy::{entropy, softmax_entropy};
+use ewq::ewq::{analyze_model, EwqConfig};
+use ewq::rng::Xoshiro256pp;
+use ewq::zoo::load_flagships;
+
+fn main() {
+    println!("== bench_entropy: softmax-entropy scan (O(n) in parameters) ==");
+    let b = Bench::default();
+
+    let mut r = Xoshiro256pp::new(1);
+    for n in [1 << 12, 1 << 15, 1 << 18, 1 << 21] {
+        let w: Vec<f32> = (0..n).map(|_| r.normal_f32(0.0, 0.5)).collect();
+        let s = b.run(&format!("softmax_entropy n={n}"), || {
+            black_box(entropy(black_box(&w)));
+        });
+        println!("    -> {:.1} Melem/s", s.throughput(n as f64) / 1e6);
+    }
+
+    // eps sensitivity (same cost regardless of eps — it's one ln per element)
+    let w: Vec<f32> = (0..1 << 16).map(|_| r.normal_f32(0.0, 0.5)).collect();
+    for eps in [1e-12, 1e-2] {
+        b.run(&format!("softmax_entropy eps={eps}"), || {
+            black_box(softmax_entropy(black_box(&w), eps));
+        });
+    }
+
+    // full flagship analyses — the deployment-time cost EWQ pays
+    match load_flagships(&ewq::artifacts_dir()) {
+        Ok(flagships) => {
+            for m in &flagships {
+                let s = b.run(&format!("analyze_model {}", m.schema.name), || {
+                    black_box(analyze_model(black_box(m), &EwqConfig::default()));
+                });
+                let params: usize = m.schema.block_params() * m.schema.n_blocks;
+                println!(
+                    "    -> {} params, {:.1} Mparam/s",
+                    params,
+                    s.throughput(params as f64) / 1e6
+                );
+            }
+        }
+        Err(e) => eprintln!("skipping flagship analyses (run `make artifacts`): {e}"),
+    }
+}

@@ -1,0 +1,45 @@
+//! Bench: FastEWQ O(1) classification vs the O(n) EWQ scan — the paper's
+//! ">=100x efficiency gain" claim (§6.5) and Table 14's complexity column.
+
+use ewq::bench_util::{black_box, Bench};
+use ewq::ewq::{analyze_model, EwqConfig};
+use ewq::fastewq::{load_or_build_dataset, FastEwq};
+use ewq::zoo::{load_flagships, ModelDir};
+
+fn main() {
+    println!("== bench_fastewq: O(1) classifier vs O(n) entropy analysis ==");
+    let artifacts = ewq::artifacts_dir();
+    let flagships = match load_flagships(&artifacts) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("need artifacts: {e}");
+            return;
+        }
+    };
+    let refs: Vec<&ModelDir> = flagships.iter().collect();
+    let rows = load_or_build_dataset(&artifacts, 700, 2025, &refs, &EwqConfig::default())
+        .expect("dataset");
+    let fe = FastEwq::train(&rows, 120, 8, 1);
+
+    let b = Bench::default();
+    let mut speedups = Vec::new();
+    for m in &flagships {
+        let fast = b.run(&format!("fastewq classify {}", m.schema.name), || {
+            black_box(fe.classify_model(black_box(&m.schema)));
+        });
+        let slow = b.run(&format!("ewq analyze    {}", m.schema.name), || {
+            black_box(analyze_model(black_box(m), &EwqConfig::default()));
+        });
+        let speedup = slow.mean.as_secs_f64() / fast.mean.as_secs_f64();
+        speedups.push(speedup);
+        println!("    -> speedup {speedup:.0}x (paper claims >=100x)");
+    }
+    let gmean =
+        (speedups.iter().map(|s| s.ln()).sum::<f64>() / speedups.len() as f64).exp();
+    println!("geometric-mean speedup across flagships: {gmean:.0}x");
+
+    // training cost (one-off, amortized across every future model)
+    Bench::quick().run("fastewq train (700 rows, 120 trees)", || {
+        black_box(FastEwq::train(black_box(&rows), 120, 8, 1));
+    });
+}

@@ -1,0 +1,43 @@
+//! Bench: quantize/pack and dequantize throughput for every precision
+//! (the load-time cost of applying a plan; Table 9's size ladder).
+
+use ewq::bench_util::{black_box, Bench};
+use ewq::quant::{dequantize, quantize, Precision};
+use ewq::rng::Xoshiro256pp;
+use ewq::tensor::Tensor;
+
+fn main() {
+    println!("== bench_quant: pack/unpack throughput ==");
+    let b = Bench::default();
+    let mut r = Xoshiro256pp::new(3);
+    let (k, n) = (448, 112); // largest flagship matrix shape (w2 of tl-qwen)
+    let w = Tensor::new(vec![k, n], (0..k * n).map(|_| r.normal_f32(0.0, 0.4)).collect());
+    let elems = (k * n) as f64;
+
+    for p in [Precision::Q8, Precision::Q4, Precision::Q3, Precision::T2] {
+        let s = b.run(&format!("quantize {} {k}x{n}", p.label()), || {
+            black_box(quantize(black_box(&w), p));
+        });
+        println!("    -> {:.1} Melem/s", s.throughput(elems) / 1e6);
+        let q = quantize(&w, p);
+        let s = b.run(&format!("dequantize {} {k}x{n}", p.label()), || {
+            black_box(dequantize(black_box(&q)));
+        });
+        println!("    -> {:.1} Melem/s, {} bytes stored", s.throughput(elems) / 1e6, q.size_bytes());
+    }
+
+    // whole-block quantization (6 matrices) — what QuantizedModel::build pays
+    let mats: Vec<Tensor> = vec![
+        Tensor::new(vec![112, 112], (0..112 * 112).map(|_| r.normal_f32(0.0, 0.4)).collect()),
+        Tensor::new(vec![112, 112], (0..112 * 112).map(|_| r.normal_f32(0.0, 0.4)).collect()),
+        Tensor::new(vec![112, 112], (0..112 * 112).map(|_| r.normal_f32(0.0, 0.4)).collect()),
+        Tensor::new(vec![112, 112], (0..112 * 112).map(|_| r.normal_f32(0.0, 0.4)).collect()),
+        Tensor::new(vec![112, 448], (0..112 * 448).map(|_| r.normal_f32(0.0, 0.4)).collect()),
+        Tensor::new(vec![448, 112], (0..448 * 112).map(|_| r.normal_f32(0.0, 0.4)).collect()),
+    ];
+    b.run("quantize whole block (tl-qwen, Q4)", || {
+        for m in &mats {
+            black_box(quantize(black_box(m), Precision::Q4));
+        }
+    });
+}

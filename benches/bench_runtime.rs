@@ -1,0 +1,43 @@
+//! Bench: PJRT forward-pass latency by precision variant — the inference-
+//! path cost behind Tables 6/7 (who pays what for dequant-in-graph).
+
+use ewq::bench_util::{black_box, Bench};
+use ewq::ewq::QuantPlan;
+use ewq::model::{ModelExecutor, QuantizedModel};
+use ewq::quant::Precision;
+use ewq::runtime::Runtime;
+use ewq::zoo::ModelDir;
+
+fn main() {
+    println!("== bench_runtime: full-sequence forward latency by precision ==");
+    let artifacts = ewq::artifacts_dir();
+    let Ok(model) = ModelDir::load(artifacts.join("models/tl-phi")) else {
+        eprintln!("need artifacts (make artifacts)");
+        return;
+    };
+    let rt = Runtime::cpu().expect("pjrt cpu client");
+    let ex = ModelExecutor::new(&rt, &model);
+    ex.warmup().expect("warmup");
+
+    let (bsz, s) = (model.schema.eval_batch, model.schema.seq_len);
+    let mut toks = vec![0i32; bsz * s];
+    for row in 0..bsz {
+        toks[row * s..row * s + 4].copy_from_slice(&[1, 160 + row as i32, 100 + row as i32, 2]);
+    }
+
+    let bench = Bench::default();
+    let n = model.schema.n_blocks;
+    let tokens_per_pass = (bsz * s) as f64;
+    for p in [Precision::Raw, Precision::Q8, Precision::Q4, Precision::T2] {
+        let qm = QuantizedModel::build(&model, &QuantPlan::uniform("m", n, p)).unwrap();
+        let sres = bench.run(&format!("forward tl-phi uniform {}", p.label()), || {
+            black_box(ex.forward(&qm, black_box(&toks)).unwrap());
+        });
+        println!("    -> {:.0} tok/s", sres.throughput(tokens_per_pass));
+    }
+
+    // model build cost (quantize + literal encode)
+    Bench::quick().run("QuantizedModel::build (Q4)", || {
+        black_box(QuantizedModel::build(&model, &QuantPlan::uniform("m", n, Precision::Q4)).unwrap());
+    });
+}

@@ -1,0 +1,45 @@
+//! Bench: end-to-end serving throughput/latency under the dynamic batcher —
+//! batch-size sweep and precision sweep (the coordinator-level counterpart
+//! of the paper's deployment claims).
+
+use ewq::config::ServeConfig;
+use ewq::ewq::QuantPlan;
+use ewq::quant::Precision;
+use ewq::serving::Coordinator;
+use ewq::zoo::ModelDir;
+
+fn run_trace(model: &ModelDir, plan: QuantPlan, max_batch: usize, requests: usize) {
+    let cfg = ServeConfig { max_batch, max_wait_us: 1_000, ..Default::default() };
+    let coord = Coordinator::start(model.dir.clone(), plan, cfg, 1, 200).expect("start");
+    let mut rxs = Vec::with_capacity(requests);
+    for i in 0..requests {
+        rxs.push(coord.submit(vec![1, 160 + (i as i32 % 16), 100 + (i as i32 % 57), 2]));
+    }
+    for rx in rxs {
+        let _ = rx.recv();
+    }
+    let m = coord.shutdown();
+    println!("  max_batch={max_batch:<2} -> {}", m.summary());
+}
+
+fn main() {
+    println!("== bench_serving: coordinator throughput/latency ==");
+    let artifacts = ewq::artifacts_dir();
+    let Ok(model) = ModelDir::load(artifacts.join("models/tl-phi")) else {
+        eprintln!("need artifacts (make artifacts)");
+        return;
+    };
+    let n = model.schema.n_blocks;
+    let requests = 64;
+
+    println!("batch-size sweep (uniform 8-bit):");
+    for mb in [1, 2, 4, 8] {
+        run_trace(&model, QuantPlan::uniform("m", n, Precision::Q8), mb, requests);
+    }
+
+    println!("precision sweep (max_batch=8):");
+    for p in [Precision::Raw, Precision::Q8, Precision::Q4] {
+        println!(" {}:", p.label());
+        run_trace(&model, QuantPlan::uniform("m", n, p), 8, requests);
+    }
+}

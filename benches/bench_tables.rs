@@ -1,0 +1,58 @@
+//! Bench: regenerate the paper's headline tables end-to-end (small question
+//! budget) and time each stage — workload generation, plan construction,
+//! quantization, evaluation. `ewq exp table6/table7` produce the full-budget
+//! versions; this bench proves the whole pipeline composes and reports where
+//! the time goes.
+
+use std::time::Instant;
+
+use ewq::eval::{build_questions, evaluate, FactTable};
+use ewq::exp::variants::{plan_for, Variant};
+use ewq::exp::ExpContext;
+use ewq::model::{ModelExecutor, QuantizedModel};
+use ewq::report::Table;
+
+fn main() {
+    println!("== bench_tables: end-to-end table regeneration (per_subject=2) ==");
+    let mut ctx = match ExpContext::new(2) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("need artifacts: {e:#}");
+            return;
+        }
+    };
+    let t0 = Instant::now();
+    ctx.fast_full().expect("classifier");
+    ctx.fast_train().expect("classifier");
+    println!("classifier prep: {:?}", t0.elapsed());
+
+    let facts = FactTable::load(&ctx.artifacts.join("corpus/facts.txt")).unwrap();
+    let questions = build_questions(&facts, 2, 4242);
+    ctx.runtime().expect("runtime");
+
+    let mut table = Table::new(
+        "Table 6/7 (quick) — tl-phi all variants",
+        &["Variant", "Accuracy", "Perplexity", "Blocks MB", "raw/8/4", "eval time"],
+    );
+    let model = ctx.flagship("tl-phi").unwrap();
+    let rt = ctx.runtime.as_ref().unwrap();
+    let ex = ModelExecutor::new(rt, model);
+    for v in Variant::ALL {
+        let t0 = Instant::now();
+        let plan =
+            plan_for(v, model, ctx.fast_full.as_ref().unwrap(), ctx.fast_train.as_ref().unwrap())
+                .unwrap();
+        let qm = QuantizedModel::build(model, &plan).unwrap();
+        let e = evaluate(&ex, &qm, &questions).unwrap();
+        let (r, q8, q4, _, _) = plan.counts();
+        table.row(vec![
+            v.label().into(),
+            format!("{:.4}", e.accuracy),
+            format!("{:.4}", e.perplexity),
+            format!("{:.2}", plan.blocks_bytes(&model.schema) as f64 / 1e6),
+            format!("{r}/{q8}/{q4}"),
+            format!("{:?}", t0.elapsed()),
+        ]);
+    }
+    println!("{}", table.render());
+}

@@ -1,0 +1,63 @@
+//! FastEWQ training walkthrough: build the 700-row dataset, train all six
+//! classifiers, print the evaluation report, and persist the winning forest.
+//!
+//! ```bash
+//! cargo run --release --example fastewq_train
+//! ```
+
+use anyhow::Result;
+
+use ewq::ewq::EwqConfig;
+use ewq::fastewq::{load_or_build_dataset, rows_to_xy, FastEwq};
+use ewq::ml::{
+    all_classifiers, auc, predict_all, proba_all, train_test_split, ClassificationReport,
+    StandardScaler,
+};
+use ewq::zoo::ModelDir;
+
+fn main() -> Result<()> {
+    let artifacts = ewq::artifacts_dir();
+    let flagships = ewq::zoo::load_flagships(&artifacts)?;
+    let refs: Vec<&ModelDir> = flagships.iter().collect();
+
+    println!("building dataset (full EWQ analysis over the synthetic zoo)...");
+    let rows = load_or_build_dataset(&artifacts, 700, 2025, &refs, &EwqConfig::default())?;
+    let n_q = rows.iter().filter(|r| r.quantized).count();
+    println!("dataset: {} rows, {} quantized / {} raw\n", rows.len(), n_q, rows.len() - n_q);
+
+    let (x, y) = rows_to_xy(&rows);
+    let (xtr, ytr, xte, yte) = train_test_split(&x, &y, 0.3, 42);
+    let (scaler, xtr_s) = StandardScaler::fit_transform(&xtr);
+    let xte_s = scaler.transform(&xte);
+
+    println!("{:<22} {:>9} {:>7}", "classifier", "accuracy", "AUC");
+    let mut best = (String::new(), 0.0f64);
+    for mut c in all_classifiers(5) {
+        c.fit(&xtr_s, &ytr);
+        let rep = ClassificationReport::from_predictions(&yte, &predict_all(c.as_ref(), &xte_s));
+        let a = auc(&yte, &proba_all(c.as_ref(), &xte_s));
+        println!("{:<22} {:>9.3} {:>7.3}", c.name(), rep.accuracy, a);
+        if rep.accuracy > best.1 {
+            best = (c.name().to_string(), rep.accuracy);
+        }
+    }
+    println!("\nbest classifier: {} ({:.3}) — paper picks random forest at 0.80", best.0, best.1);
+
+    // persist the production forest (trained on the full dataset, like the
+    // paper's "centralized knowledge base" variant)
+    let fe = FastEwq::train(&rows, 120, 8, 1);
+    let path = artifacts.join("fastewq.fewq");
+    fe.save(&path)?;
+    println!("saved FastEWQ forest -> {}", path.display());
+
+    for m in &flagships {
+        let mask = fe.classify_model(&m.schema);
+        println!(
+            "  {}: quantize {}/{} blocks",
+            m.schema.name,
+            mask.iter().filter(|&&q| q).count(),
+            m.schema.n_blocks
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,101 @@
+//! End-to-end serving driver (the DESIGN.md §5 headline example).
+//!
+//! Loads tl-llama, uses **Algorithm 1** to fit it into a simulated 2-machine
+//! cluster budget, boots the serving coordinator, replays a batched request
+//! trace, and reports latency/throughput plus a SynthMMLU spot-accuracy of
+//! the deployed (quantized) model. Results are recorded in EXPERIMENTS.md.
+//!
+//! ```bash
+//! cargo run --release --example serve -- [budget_mb] [requests]
+//! ```
+
+use anyhow::Result;
+
+use ewq::cluster::{optimize_distribution, Cluster};
+use ewq::config::ServeConfig;
+use ewq::eval::{build_questions, evaluate, FactTable};
+use ewq::ewq::{analyze_model, EwqConfig};
+use ewq::model::{ModelExecutor, QuantizedModel};
+use ewq::runtime::Runtime;
+use ewq::serving::Coordinator;
+use ewq::zoo::ModelDir;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let budget_mb: f64 = args.first().and_then(|s| s.parse().ok()).unwrap_or(2.8);
+    let requests: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(128);
+
+    let artifacts = ewq::artifacts_dir();
+    let model = ModelDir::load(artifacts.join("models/tl-llama"))?;
+    let raw_mb = model.schema.total_raw_bytes() as f64 / 1e6;
+    println!(
+        "model: {} ({raw_mb:.2} MB raw) | cluster budget {budget_mb:.2} MB",
+        model.schema.name
+    );
+
+    // --- Algorithm 1: fit the model into the cluster --------------------------
+    let per = (budget_mb * 1e6 / 2.0) as usize;
+    let cluster = Cluster::uniform(2, per, per);
+    let analysis = analyze_model(&model, &EwqConfig::default());
+    let dist = optimize_distribution(&analysis, &model.schema, &cluster, &EwqConfig::default());
+    println!(
+        "plan: {} | fits: {} | total {:.2} MB | hops {} (+{} us/pass virtual)",
+        dist.plan.summary(),
+        dist.fits,
+        dist.total_bytes(&model.schema) as f64 / 1e6,
+        dist.hops,
+        dist.network_latency_us(&cluster)
+    );
+
+    // --- spot accuracy of the deployed plan -----------------------------------
+    let facts = FactTable::load(&artifacts.join("corpus/facts.txt"))?;
+    let questions = build_questions(&facts, 4, 4242);
+    {
+        let rt = Runtime::cpu()?;
+        let ex = ModelExecutor::new(&rt, &model);
+        let qm = QuantizedModel::build(&model, &dist.plan)?;
+        let e = evaluate(&ex, &qm, &questions)?;
+        println!(
+            "deployed-model SynthMMLU: accuracy {:.4}, perplexity {:.4} ({} questions)",
+            e.accuracy, e.perplexity, e.n_questions
+        );
+    }
+
+    // --- serve a request trace -------------------------------------------------
+    let cfg = ServeConfig { max_batch: 8, max_wait_us: 1_500, ..Default::default() };
+    let coord = Coordinator::start(
+        model.dir.clone(),
+        dist.plan.clone(),
+        cfg,
+        dist.hops,
+        cluster.link_latency_us,
+    )?;
+
+    let t0 = std::time::Instant::now();
+    let mut rxs = Vec::with_capacity(requests);
+    for i in 0..requests {
+        let s = (i % 16) as i32;
+        let r = (i % 57) as i32;
+        rxs.push(coord.submit(vec![1, 160 + s, 100 + r, 2]));
+        // bursty arrivals: pause between bursts of 8
+        if i % 8 == 7 {
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+    }
+    let mut correct = 0usize;
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx.recv()?;
+        let (s, r) = (i % 16, i % 57);
+        if resp.next_token == facts.objs[r][s] {
+            correct += 1;
+        }
+    }
+    let wall = t0.elapsed();
+    let m = coord.shutdown();
+    println!("\nserving metrics: {}", m.summary());
+    println!(
+        "trace: {requests} requests in {wall:?} -> {:.1} req/s, {correct}/{requests} fact-correct",
+        requests as f64 / wall.as_secs_f64()
+    );
+    Ok(())
+}

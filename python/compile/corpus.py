@@ -1,0 +1,125 @@
+"""Synthetic fact corpus + SynthMMLU specification.
+
+The paper evaluates on MMLU (57 subjects, 4-choice QA) over pretrained HF
+models. Offline we substitute a *fact-retrieval language*: a vocabulary of
+entities and 57 relation families ("subjects"); each relation `r` maps every
+subject entity `s` to a deterministic object `obj_r(s)`. Models are trained
+to memorize fact sentences `[Q s r A o SEP]` mixed with Markov background
+noise, then evaluated on 4-choice questions `[Q s r A] -> ?` — accuracy and
+the paper's Section-5.2 perplexity formulas apply verbatim.
+
+Everything here is deterministic given SEED so the Rust side can rebuild the
+same questions from `facts.txt`.
+"""
+
+import numpy as np
+
+SEED = 20250711
+
+# ---- token space ------------------------------------------------------------
+VOCAB = 512
+PAD, Q, A, SEP = 0, 1, 2, 3
+NOISE_BASE, N_NOISE = 4, 96          # background "prose" tokens
+REL_BASE, N_REL = 100, 57            # 57 relation families == MMLU subjects
+ENT_BASE, N_ENT = 160, 16            # subject/object entities (57*16 = 912 facts,
+                                     # sized so ~1M-param models can memorize)
+
+SEQ_LEN = 32
+FACT_LEN = 6                         # [Q, s, r, A, o, SEP]
+
+assert REL_BASE + N_REL <= ENT_BASE
+assert ENT_BASE + N_ENT <= VOCAB
+
+
+def fact_table(seed: int = SEED) -> np.ndarray:
+    """(N_REL, N_ENT) int array: obj[r, s] = object *entity id* for relation r,
+    subject entity s. Objects are a per-relation permutation of the entities so
+    every relation has a uniform object marginal (no degenerate priors)."""
+    rng = np.random.default_rng(seed)
+    objs = np.empty((N_REL, N_ENT), dtype=np.int64)
+    for r in range(N_REL):
+        objs[r] = ENT_BASE + rng.permutation(N_ENT)
+    return objs
+
+
+def noise_chain(seed: int = SEED) -> np.ndarray:
+    """Sparse bigram transition table over the noise vocabulary: each noise
+    token has 4 plausible successors. Gives the 'prose' filler structure."""
+    rng = np.random.default_rng(seed + 1)
+    return rng.integers(0, N_NOISE, size=(N_NOISE, 4))
+
+
+class CorpusSampler:
+    """Streams training batches of token sequences (fact-heavy LM data)."""
+
+    def __init__(self, seed: int = SEED, fact_frac: float = 0.9):
+        # facts/noise-chain are ALWAYS the canonical SEED tables (shared with
+        # the rust eval side); `seed` only varies the sampling stream.
+        self.rng = np.random.default_rng(seed + 2)
+        self.objs = fact_table(SEED)
+        self.chain = noise_chain(SEED)
+        self.fact_frac = fact_frac
+
+    def _fact_segment(self) -> list:
+        r = int(self.rng.integers(0, N_REL))
+        s = int(self.rng.integers(0, N_ENT))
+        o = int(self.objs[r, s])
+        return [Q, ENT_BASE + s, REL_BASE + r, A, o, SEP]
+
+    def _noise_segment(self, n: int) -> list:
+        t = int(self.rng.integers(0, N_NOISE))
+        out = []
+        for _ in range(n):
+            out.append(NOISE_BASE + t)
+            t = int(self.chain[t, int(self.rng.integers(0, 4))])
+        return out
+
+    def sequence(self) -> np.ndarray:
+        toks: list = []
+        while len(toks) < SEQ_LEN:
+            if self.rng.random() < self.fact_frac:
+                toks.extend(self._fact_segment())
+            else:
+                toks.extend(self._noise_segment(FACT_LEN))
+        return np.asarray(toks[:SEQ_LEN], dtype=np.int32)
+
+    def batch(self, batch_size: int) -> np.ndarray:
+        return np.stack([self.sequence() for _ in range(batch_size)])
+
+
+def eval_questions(per_subject: int = 16, seed: int = SEED):
+    """SynthMMLU: per relation ('subject'), `per_subject` questions.
+    Returns list of (subject, context_tokens, choices[4], correct_idx).
+    Deterministic; Rust rebuilds the identical set from facts.txt + seed."""
+    rng = np.random.default_rng(seed + 3)
+    objs = fact_table(seed)
+    questions = []
+    for r in range(N_REL):
+        subjects = rng.permutation(N_ENT)[:per_subject]
+        for s in subjects:
+            s = int(s)
+            correct = int(objs[r, s])
+            distractors = set()
+            while len(distractors) < 3:
+                d = int(objs[r, int(rng.integers(0, N_ENT))])
+                if d != correct:
+                    distractors.add(d)
+            choices = sorted(distractors) + [correct]
+            rng.shuffle(choices)
+            ctx = [Q, ENT_BASE + s, REL_BASE + r, A]
+            questions.append((r, ctx, list(choices), choices.index(correct)))
+    return questions
+
+
+def write_facts(path: str, seed: int = SEED) -> None:
+    """facts.txt: header line with constants, then `r s o` token-id triples."""
+    objs = fact_table(seed)
+    with open(path, "w") as f:
+        f.write(
+            f"# vocab={VOCAB} pad={PAD} q={Q} a={A} sep={SEP} "
+            f"rel_base={REL_BASE} n_rel={N_REL} ent_base={ENT_BASE} "
+            f"n_ent={N_ENT} seq_len={SEQ_LEN} seed={SEED}\n"
+        )
+        for r in range(N_REL):
+            for s in range(N_ENT):
+                f.write(f"{REL_BASE + r} {ENT_BASE + s} {int(objs[r, s])}\n")

@@ -1,0 +1,67 @@
+"""ETS — the EWQ Tensor Store binary format (writer side; reader lives in
+rust/src/tensor/store.rs — keep the two in lockstep).
+
+Layout (little-endian):
+    magic  b"ETS1"
+    u32    n_tensors
+    per tensor:
+        u16  name_len, name utf-8 bytes
+        u8   dtype     (0=f32, 1=i8, 2=u8, 3=i32)
+        u8   ndim
+        u32  dims[ndim]
+        u64  data_len (bytes)
+        data
+        u32  crc32(data)
+"""
+
+import struct
+import zlib
+
+import numpy as np
+
+MAGIC = b"ETS1"
+DTYPES = {np.dtype(np.float32): 0, np.dtype(np.int8): 1,
+          np.dtype(np.uint8): 2, np.dtype(np.int32): 3}
+DTYPES_INV = {0: np.float32, 1: np.int8, 2: np.uint8, 3: np.int32}
+
+
+def write_ets(path: str, tensors: dict) -> None:
+    """tensors: {name: np.ndarray} with dtype in DTYPES."""
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", len(tensors)))
+        for name, arr in tensors.items():
+            arr = np.ascontiguousarray(arr)
+            if arr.dtype not in DTYPES:
+                raise ValueError(f"{name}: unsupported dtype {arr.dtype}")
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BB", DTYPES[arr.dtype], arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            data = arr.tobytes()
+            f.write(struct.pack("<Q", len(data)))
+            f.write(data)
+            f.write(struct.pack("<I", zlib.crc32(data) & 0xFFFFFFFF))
+
+
+def read_ets(path: str) -> dict:
+    """Reader (used by pytest round-trip checks against the rust reader)."""
+    out = {}
+    with open(path, "rb") as f:
+        if f.read(4) != MAGIC:
+            raise ValueError("bad magic")
+        (n,) = struct.unpack("<I", f.read(4))
+        for _ in range(n):
+            (nl,) = struct.unpack("<H", f.read(2))
+            name = f.read(nl).decode("utf-8")
+            dt, nd = struct.unpack("<BB", f.read(2))
+            dims = [struct.unpack("<I", f.read(4))[0] for _ in range(nd)]
+            (dl,) = struct.unpack("<Q", f.read(8))
+            data = f.read(dl)
+            (crc,) = struct.unpack("<I", f.read(4))
+            if crc != (zlib.crc32(data) & 0xFFFFFFFF):
+                raise ValueError(f"{name}: crc mismatch")
+            out[name] = np.frombuffer(data, DTYPES_INV[dt]).reshape(dims).copy()
+    return out

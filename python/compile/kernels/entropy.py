@@ -1,0 +1,108 @@
+"""L1 Pallas kernel: streaming softmax-entropy of a flattened weight tensor.
+
+TPU mental model: the tensor is streamed HBM->VMEM in (8,128)-aligned chunks;
+each grid step reduces its chunk into a scalar accumulator that lives in the
+output block (grid iterations are sequential on TPU, so the accumulator is
+carried across steps — the Pallas analogue of the paper's single-core
+streaming pass). Three passes: global max, partition Z, entropy sum.
+
+Everything runs under interpret=True — real-TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute (see DESIGN.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# One chunk = 16 TPU sublane rows of 128 lanes.
+CHUNK = 2048
+NEG_PAD = -1e30  # padding value: exp(NEG_PAD - max) == 0, contributes nothing
+
+
+def _max_kernel(w_ref, o_ref):
+    i = pl.program_id(0)
+    m = jnp.max(w_ref[...])
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[0] = m
+
+    @pl.when(i > 0)
+    def _acc():
+        o_ref[0] = jnp.maximum(o_ref[0], m)
+
+
+def _sumexp_kernel(w_ref, m_ref, o_ref):
+    i = pl.program_id(0)
+    z = jnp.sum(jnp.exp(w_ref[...] - m_ref[0]))
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[0] = z
+
+    @pl.when(i > 0)
+    def _acc():
+        o_ref[0] = o_ref[0] + z
+
+
+def _plogp_kernel(w_ref, m_ref, z_ref, o_ref, *, eps: float):
+    i = pl.program_id(0)
+    p = jnp.exp(w_ref[...] - m_ref[0]) / z_ref[0]
+    h = -jnp.sum(p * jnp.log(p + eps))
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[0] = h
+
+    @pl.when(i > 0)
+    def _acc():
+        o_ref[0] = o_ref[0] + h
+
+
+def _scalar_spec():
+    # every grid step maps to the same (1,)-block: a carried accumulator
+    return pl.BlockSpec((1,), lambda i: (0,))
+
+
+def _reduce(kernel, grid, args):
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((CHUNK,), lambda i: (i,))]
+        + [_scalar_spec() for _ in args[1:]],
+        out_specs=_scalar_spec(),
+        out_shape=jax.ShapeDtypeStruct((1,), jnp.float32),
+        interpret=True,
+    )(*args)
+
+
+def pad_to_chunks(w):
+    """Flatten and pad with NEG_PAD to a CHUNK multiple."""
+    w = jnp.ravel(w).astype(jnp.float32)
+    n = w.shape[0]
+    rem = (-n) % CHUNK
+    if rem:
+        w = jnp.concatenate([w, jnp.full((rem,), NEG_PAD, jnp.float32)])
+    return w
+
+
+def softmax_entropy_pallas(w, eps: float = 1e-12):
+    """Pallas counterpart of ref.softmax_entropy. Accepts any shape/size."""
+    w = pad_to_chunks(w)
+    grid = (w.shape[0] // CHUNK,)
+    m = _reduce(_max_kernel, grid, (w,))
+    z = _reduce(_sumexp_kernel, grid, (w, m))
+    h = _reduce(functools.partial(_plogp_kernel, eps=eps), grid, (w, m, z))
+    return h[0]
+
+
+def entropy_fixed(w, eps: float = 1e-12):
+    """Fixed-size variant for AOT lowering: `w` is already padded (rust pads
+    with NEG_PAD). Returns a (1,)-shaped tensor for a stable HLO signature."""
+    grid = (w.shape[0] // CHUNK,)
+    m = _reduce(_max_kernel, grid, (w,))
+    z = _reduce(_sumexp_kernel, grid, (w, m))
+    h = _reduce(functools.partial(_plogp_kernel, eps=eps), grid, (w, m, z))
+    return h

@@ -1,0 +1,114 @@
+"""L1 Pallas kernels: fused dequantize->matmul — the weight-only-quantization
+inference hot-spot (the paper's GPTQ-style "convert quantized weights to
+float during the matmul" path, Section 1).
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): output is tiled (bm, bn) with
+bm/bn MXU-friendly (128 when divisible); the packed weight tile is unpacked
+and rescaled in VMEM registers immediately before feeding the MXU, so HBM
+traffic is 1/4 (q8), 1/8 (q4) or 1/16 (t2) of the f32 baseline. The reduction
+dimension k is carried whole per tile — model dims here (<=448) keep the
+x-tile + w-tile VMEM footprint under 1 MiB (see EXPERIMENTS.md §Perf).
+
+interpret=True everywhere (CPU PJRT cannot run Mosaic custom-calls).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _tile(n: int, pref: int = 128) -> int:
+    """Largest MXU-friendly tile that divides n (fall back to n itself)."""
+    for cand in (pref, 64, 32, 16, 8):
+        if n % cand == 0 and cand <= n:
+            return cand
+    return n
+
+
+# ---- int8 ---------------------------------------------------------------------
+def _mm_q8_kernel(x_ref, q_ref, s_ref, o_ref):
+    w = q_ref[...].astype(jnp.float32) * s_ref[...][None, :]
+    o_ref[...] = jnp.dot(x_ref[...], w)
+
+
+def matmul_q8(x, q, s):
+    """x[m,k] @ (q[k,n] i8 * s[n]) -> f32[m,n]"""
+    m, k = x.shape
+    _, n = q.shape
+    bm, bn = _tile(m), _tile(n)
+    return pl.pallas_call(
+        _mm_q8_kernel,
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, q, s)
+
+
+# ---- int4 (two nibbles per byte along k) ---------------------------------------
+def _mm_q4_kernel(x_ref, p_ref, s_ref, o_ref):
+    p = p_ref[...].astype(jnp.int32)
+    lo = ((p & 0xF) - 8).astype(jnp.float32)
+    hi = (((p >> 4) & 0xF) - 8).astype(jnp.float32)
+    s = s_ref[...][None, :]
+    x = x_ref[...]
+    # rows 0::2 of W multiply x columns 0::2 — split-x formulation avoids an
+    # interleave/scatter in VMEM: x @ W = x[:,0::2] @ W[0::2] + x[:,1::2] @ W[1::2]
+    o_ref[...] = jnp.dot(x[:, 0::2], lo * s) + jnp.dot(x[:, 1::2], hi * s)
+
+
+def matmul_q4(x, packed, s):
+    """x[m,k] @ dequant_q4(packed[k//2,n], s[n]) -> f32[m,n]"""
+    m, k = x.shape
+    k2, n = packed.shape
+    assert k2 * 2 == k
+    bm, bn = _tile(m), _tile(n)
+    return pl.pallas_call(
+        _mm_q4_kernel,
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k2, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, packed, s)
+
+
+# ---- ternary 1.58-bit (four 2-bit codes per byte along k) ------------------------
+def _mm_t2_kernel(x_ref, p_ref, s_ref, o_ref):
+    p = p_ref[...].astype(jnp.int32)
+    s = s_ref[...][None, :]
+    x = x_ref[...]
+    acc = jnp.dot(x[:, 0::4], ((p & 3) - 1).astype(jnp.float32) * s)
+    acc += jnp.dot(x[:, 1::4], (((p >> 2) & 3) - 1).astype(jnp.float32) * s)
+    acc += jnp.dot(x[:, 2::4], (((p >> 4) & 3) - 1).astype(jnp.float32) * s)
+    acc += jnp.dot(x[:, 3::4], (((p >> 6) & 3) - 1).astype(jnp.float32) * s)
+    o_ref[...] = acc
+
+
+def matmul_t2(x, packed, s):
+    """x[m,k] @ dequant_t2(packed[k//4,n], s[n]) -> f32[m,n]"""
+    m, k = x.shape
+    k4, n = packed.shape
+    assert k4 * 4 == k
+    bm, bn = _tile(m), _tile(n)
+    return pl.pallas_call(
+        _mm_t2_kernel,
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k4, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, packed, s)

@@ -1,0 +1,113 @@
+"""Pure-jnp correctness oracles for every Pallas kernel.
+
+These are the ground truth the pytest suite checks kernels against, and the
+same formulas the Rust `entropy`/`quant` modules mirror (cross-checked via
+exported HLO in integration tests).
+"""
+
+import jax.numpy as jnp
+
+EPS_DEFAULT = 1e-12
+
+
+# ---- entropy (paper Section 3.1) --------------------------------------------
+def softmax_entropy(w, eps: float = EPS_DEFAULT):
+    """H = -sum_i p_i * log(p_i + eps), p = softmax(flatten(w)).
+
+    Numerically stable via max-shift. `eps` is the paper's stability constant;
+    we default it tiny (1e-12) because for n >= 1e4 parameters a large eps
+    (the paper's illustrative 0.01) saturates log(p+eps) ~= log(eps) and
+    washes out inter-block differences. Configurable everywhere.
+    """
+    w = jnp.ravel(w).astype(jnp.float32)
+    m = jnp.max(w)
+    e = jnp.exp(w - m)
+    z = jnp.sum(e)
+    p = e / z
+    return -jnp.sum(p * jnp.log(p + eps))
+
+
+def block_entropy(mats, eps: float = EPS_DEFAULT):
+    """Weighted block entropy (paper eq. 3.2): size-weighted mean of H(W_i)."""
+    num = 0.0
+    den = 0.0
+    for w in mats:
+        n = w.size
+        num = num + n * softmax_entropy(w, eps)
+        den += n
+    return num / den
+
+
+# ---- quantization formats ----------------------------------------------------
+# Per-output-column symmetric scales; packing layouts match rust/src/quant/.
+def quantize_q8(w):
+    """w[k,n] -> (q i8[k,n], scale f32[n]); q = round(w/s) clamp [-127,127]."""
+    s = jnp.maximum(jnp.max(jnp.abs(w), axis=0), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(w / s), -127, 127).astype(jnp.int8)
+    return q, s.astype(jnp.float32)
+
+
+def dequant_q8(q, s):
+    return q.astype(jnp.float32) * s[None, :]
+
+
+def quantize_q4(w):
+    """w[k,n] -> (packed u8[k//2,n], scale f32[n]).
+
+    q = round(w/s) clamp [-7,7], stored biased (q+8 in [1,15]), two per byte
+    along k: byte = lo | hi<<4 with lo = row 2i, hi = row 2i+1.
+    """
+    s = jnp.maximum(jnp.max(jnp.abs(w), axis=0), 1e-12) / 7.0
+    q = jnp.clip(jnp.round(w / s), -7, 7).astype(jnp.int32) + 8
+    lo = q[0::2, :]
+    hi = q[1::2, :]
+    packed = (lo | (hi << 4)).astype(jnp.uint8)
+    return packed, s.astype(jnp.float32)
+
+
+def dequant_q4(packed, s):
+    p = packed.astype(jnp.int32)
+    lo = (p & 0xF) - 8
+    hi = ((p >> 4) & 0xF) - 8
+    k2, n = packed.shape
+    q = jnp.zeros((k2 * 2, n), dtype=jnp.int32)
+    q = q.at[0::2, :].set(lo)
+    q = q.at[1::2, :].set(hi)
+    return q.astype(jnp.float32) * s[None, :]
+
+
+def quantize_t2(w):
+    """Ternary 1.58-bit (BitNet-style): scale = mean|w| per column,
+    q = clamp(round(w/s), -1, 1); code = q+1 in {0,1,2}; 4 codes per byte
+    along k: byte = c0 | c1<<2 | c2<<4 | c3<<6."""
+    s = jnp.maximum(jnp.mean(jnp.abs(w), axis=0), 1e-12)
+    q = jnp.clip(jnp.round(w / s), -1, 1).astype(jnp.int32)
+    c = q + 1
+    c0, c1, c2, c3 = c[0::4, :], c[1::4, :], c[2::4, :], c[3::4, :]
+    packed = (c0 | (c1 << 2) | (c2 << 4) | (c3 << 6)).astype(jnp.uint8)
+    return packed, s.astype(jnp.float32)
+
+
+def dequant_t2(packed, s):
+    p = packed.astype(jnp.int32)
+    k4, n = packed.shape
+    q = jnp.zeros((k4 * 4, n), dtype=jnp.int32)
+    q = q.at[0::4, :].set((p & 3) - 1)
+    q = q.at[1::4, :].set(((p >> 2) & 3) - 1)
+    q = q.at[2::4, :].set(((p >> 4) & 3) - 1)
+    q = q.at[3::4, :].set(((p >> 6) & 3) - 1)
+    return q.astype(jnp.float32) * s[None, :]
+
+
+# ---- fused dequant-matmul references ------------------------------------------
+def matmul_dequant_q8(x, q, s):
+    """x[m,k] @ dequant_q8(q,s)[k,n] -> [m,n]"""
+    return x @ dequant_q8(q, s)
+
+
+def matmul_dequant_q4(x, packed, s):
+    return x @ dequant_q4(packed, s)
+
+
+def matmul_dequant_t2(x, packed, s):
+    return x @ dequant_t2(packed, s)

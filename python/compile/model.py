@@ -1,0 +1,189 @@
+"""L2: JAX transformer model — forward passes (raw + quantized block variants
+that call the L1 Pallas kernels), parameter init, and training loss.
+
+Architecture: pre-RMSNorm decoder blocks (LLaMA-style, no biases):
+    h = x + Attn(rms(x, g1); Wq, Wk, Wv, Wo)
+    y = h + W2 @ gelu(W1 @ rms(h, g2))
+Embedding and LM head stay fp32 (the paper quantizes transformer blocks'
+Linear/Embedding layers; embed/head sit outside the block pool, §6.2).
+
+Per-block quantizable matrices (the EWQ unit of analysis):
+    wq, wk, wv, wo [d,d], w1 [d,ff], w2 [ff,d]   — 6 matrices
+plus fp32 RMSNorm gains g1, g2 (never quantized; negligible size).
+"""
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import quant as kq
+from .kernels import ref as kr
+
+
+class Arch(NamedTuple):
+    name: str
+    n_blocks: int
+    d_model: int
+    n_heads: int
+    d_ff: int
+    vocab: int
+    seq_len: int
+
+
+# The flagship zoo: four families mirroring the paper's evaluated models in
+# depth/width ratios (Llama: deep+wide, Qwen: wider, Gemma: deepest, Phi:
+# smallest). Tiny absolute sizes — see DESIGN.md §2 substitutions.
+ARCHS = [
+    Arch("tl-llama", n_blocks=8, d_model=96, n_heads=4, d_ff=384, vocab=512, seq_len=32),
+    Arch("tl-qwen", n_blocks=7, d_model=112, n_heads=4, d_ff=448, vocab=512, seq_len=32),
+    Arch("tl-gemma", n_blocks=10, d_model=80, n_heads=4, d_ff=320, vocab=512, seq_len=32),
+    Arch("tl-phi", n_blocks=8, d_model=64, n_heads=4, d_ff=256, vocab=512, seq_len=32),
+]
+
+EVAL_BATCH = 8  # static batch dim of the AOT-lowered artifacts
+
+BLOCK_MATS = ["wq", "wk", "wv", "wo", "w1", "w2"]
+
+
+# ---- init ----------------------------------------------------------------------
+def init_params(arch: Arch, seed: int) -> dict:
+    rng = np.random.default_rng(seed)
+    d, ff, v = arch.d_model, arch.d_ff, arch.vocab
+
+    def dense(k, n):
+        return rng.normal(0.0, 1.0 / math.sqrt(k), size=(k, n)).astype(np.float32)
+
+    params = {
+        "embed": rng.normal(0.0, 0.02, size=(v, d)).astype(np.float32),
+        "pos": rng.normal(0.0, 0.02, size=(arch.seq_len, d)).astype(np.float32),
+        "gf": np.ones((d,), np.float32),
+        "head": dense(d, v),
+        "blocks": [],
+    }
+    for _ in range(arch.n_blocks):
+        params["blocks"].append(
+            {
+                "g1": np.ones((d,), np.float32),
+                "wq": dense(d, d),
+                "wk": dense(d, d),
+                "wv": dense(d, d),
+                "wo": dense(d, d),
+                "g2": np.ones((d,), np.float32),
+                "w1": dense(d, ff),
+                "w2": dense(ff, d),
+            }
+        )
+    return jax.tree_util.tree_map(jnp.asarray, params)
+
+
+# ---- building blocks -------------------------------------------------------------
+def rms(x, g, eps=1e-6):
+    return x * g * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+
+
+def attention(q, k, v, n_heads):
+    """q,k,v: [B,S,d] -> [B,S,d], causal multi-head attention (plain jnp —
+    attention is activation-only and never weight-quantized)."""
+    b, s, d = q.shape
+    hd = d // n_heads
+
+    def split(t):
+        return t.reshape(b, s, n_heads, hd).transpose(0, 2, 1, 3)
+
+    qh, kh, vh = split(q), split(k), split(v)
+    att = jnp.einsum("bhqd,bhkd->bhqk", qh, kh) / math.sqrt(hd)
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    att = jnp.where(mask[None, None], att, -1e30)
+    att = jax.nn.softmax(att, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", att, vh)
+    return out.transpose(0, 2, 1, 3).reshape(b, s, d)
+
+
+def _block_core(x, n_heads, g1, g2, mm):
+    """Shared block skeleton; `mm(x2d, name)` performs the named matmul so the
+    same code path serves raw fp32 and every quantized variant."""
+    b, s, d = x.shape
+
+    def flat(t):
+        return t.reshape(b * s, -1)
+
+    def unflat(t):
+        return t.reshape(b, s, -1)
+
+    xn = rms(x, g1)
+    q = unflat(mm(flat(xn), "wq"))
+    k = unflat(mm(flat(xn), "wk"))
+    v = unflat(mm(flat(xn), "wv"))
+    a = attention(q, k, v, n_heads)
+    x = x + unflat(mm(flat(a), "wo"))
+
+    hn = rms(x, g2)
+    h1 = jax.nn.gelu(mm(flat(hn), "w1"))
+    return x + unflat(mm(h1, "w2"))
+
+
+def block_raw(x, p, n_heads):
+    return _block_core(x, n_heads, p["g1"], p["g2"], lambda t, n: t @ p[n])
+
+
+def block_q8(x, g1, g2, qs, n_heads):
+    """qs: {name: (q i8, scale f32)} for the six matrices. Pallas fused path."""
+    return _block_core(
+        x, n_heads, g1, g2, lambda t, n: kq.matmul_q8(t, qs[n][0], qs[n][1])
+    )
+
+
+def block_q4(x, g1, g2, qs, n_heads):
+    return _block_core(
+        x, n_heads, g1, g2, lambda t, n: kq.matmul_q4(t, qs[n][0], qs[n][1])
+    )
+
+
+def block_t2(x, g1, g2, qs, n_heads):
+    return _block_core(
+        x, n_heads, g1, g2, lambda t, n: kq.matmul_t2(t, qs[n][0], qs[n][1])
+    )
+
+
+def embed_fwd(tokens, embed, pos):
+    return embed[tokens] + pos[None, : tokens.shape[1], :]
+
+
+def head_fwd(x, gf, head):
+    return rms(x, gf) @ head
+
+
+# ---- whole-model (training / reference eval) ---------------------------------------
+def model_fwd(params, tokens, n_heads):
+    x = embed_fwd(tokens, params["embed"], params["pos"])
+    for p in params["blocks"]:
+        x = block_raw(x, p, n_heads)
+    return head_fwd(x, params["gf"], params["head"])
+
+
+def loss_fn(params, tokens, n_heads):
+    """Next-token cross-entropy over the full sequence (PAD positions excluded).
+
+    Fact-answer positions (the token right after the `A` marker) are weighted
+    4x: they are the retrieval signal SynthMMLU evaluates, everything else is
+    background prose.
+    """
+    logits = model_fwd(params, tokens[:, :-1], n_heads)
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    mask = (targets != 0).astype(jnp.float32)
+    answer = (tokens[:, :-1] == 2).astype(jnp.float32)  # prev token == A
+    w = mask * (1.0 + 4.0 * answer)
+    return jnp.sum(nll * w) / jnp.maximum(jnp.sum(w), 1.0)
+
+
+# ---- quantization of a block's parameter dict ---------------------------------------
+def quantize_block(p, fmt: str):
+    """Return (g1, g2, {name: (q, s)}) using the ref (= rust) format `fmt`."""
+    fn = {"q8": kr.quantize_q8, "q4": kr.quantize_q4, "t2": kr.quantize_t2}[fmt]
+    qs = {n: fn(p[n]) for n in BLOCK_MATS}
+    return p["g1"], p["g2"], qs

@@ -1,0 +1,72 @@
+"""Build-time training of the flagship tiny models on the synthetic fact
+corpus. Hand-rolled Adam (optax unavailable offline); jitted step; cosine LR
+with warmup. Python runs ONCE — never on the request path.
+"""
+
+import math
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import corpus
+from .model import Arch, init_params, loss_fn
+
+
+def adam_init(params):
+    zeros = lambda p: jnp.zeros_like(p)
+    return jax.tree_util.tree_map(zeros, params), jax.tree_util.tree_map(zeros, params)
+
+
+def make_step(arch: Arch, lr_max: float, steps: int, warmup: int):
+    b1, b2, eps = 0.9, 0.999, 1e-8
+
+    def lr_at(step):
+        warm = lr_max * (step + 1) / warmup
+        prog = jnp.clip((step - warmup) / max(steps - warmup, 1), 0.0, 1.0)
+        cos = lr_max * 0.5 * (1 + jnp.cos(math.pi * prog))
+        return jnp.where(step < warmup, warm, cos)
+
+    @jax.jit
+    def step(params, m, v, tokens, i):
+        loss, grads = jax.value_and_grad(loss_fn)(params, tokens, arch.n_heads)
+        lr = lr_at(i)
+        t = i.astype(jnp.float32) + 1.0
+
+        def upd(p, g, mm, vv):
+            mm = b1 * mm + (1 - b1) * g
+            vv = b2 * vv + (1 - b2) * g * g
+            mhat = mm / (1 - b1**t)
+            vhat = vv / (1 - b2**t)
+            return p - lr * mhat / (jnp.sqrt(vhat) + eps), mm, vv
+
+        flat_p, treedef = jax.tree_util.tree_flatten(params)
+        flat_g = jax.tree_util.tree_leaves(grads)
+        flat_m = jax.tree_util.tree_leaves(m)
+        flat_v = jax.tree_util.tree_leaves(v)
+        out = [upd(p, g, mm, vv) for p, g, mm, vv in zip(flat_p, flat_g, flat_m, flat_v)]
+        params = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+        m = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+        v = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+        return params, m, v, loss
+
+    return step
+
+
+def train(arch: Arch, steps: int, batch: int = 24, lr: float = 2e-3, seed: int = 7,
+          fact_frac: float = 0.97, log=print):
+    params = init_params(arch, seed)
+    m, v = adam_init(params)
+    step = make_step(arch, lr, steps, warmup=max(20, steps // 20))
+    sampler = corpus.CorpusSampler(seed=corpus.SEED + seed, fact_frac=fact_frac)
+    t0 = time.time()
+    losses = []
+    for i in range(steps):
+        tokens = jnp.asarray(sampler.batch(batch))
+        params, m, v, loss = step(params, m, v, tokens, jnp.asarray(i))
+        if i % 50 == 0 or i == steps - 1:
+            losses.append((i, float(loss)))
+            log(f"[{arch.name}] step {i:4d} loss {float(loss):.4f} "
+                f"({time.time() - t0:.1f}s)")
+    return params, losses

@@ -1,0 +1,47 @@
+"""AOT lowering smoke: artifacts exist, are HLO text, entropy module computes."""
+
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model as M
+from compile.kernels.entropy import NEG_PAD, entropy_fixed
+from compile.kernels import ref
+
+
+def test_lower_arch_produces_hlo_text(tmp_path):
+    aot.lower_arch(str(tmp_path), M.ARCHS[3])
+    names = ["embed", "head", "block_raw", "block_q8", "block_q4", "block_t2"]
+    for n in names:
+        p = tmp_path / f"{n}.hlo.txt"
+        assert p.exists()
+        text = p.read_text()
+        assert text.startswith("HloModule"), n
+        assert "ROOT" in text
+
+
+def test_entropy_fixed_matches_ref():
+    rng = np.random.default_rng(0)
+    n = 5000
+    w = np.full(aot.ENTROPY_PAD, NEG_PAD, np.float32)
+    w[:n] = rng.normal(0, 0.4, size=n)
+    h = float(entropy_fixed(jnp.asarray(w))[0])
+    h_ref = float(ref.softmax_entropy(w[:n]))
+    assert abs(h - h_ref) < 2e-3
+
+
+def test_entropy_pad_covers_largest_matrix():
+    biggest = max(a.d_model * a.d_ff for a in M.ARCHS)
+    assert aot.ENTROPY_PAD >= biggest
+
+
+def test_schema_write(tmp_path):
+    p = tmp_path / "schema.txt"
+    aot.write_schema(str(p), M.ARCHS[0])
+    kv = dict(line.split("=") for line in p.read_text().strip().splitlines())
+    assert kv["name"] == "tl-llama"
+    assert int(kv["n_blocks"]) == 8
+    assert int(kv["eval_batch"]) == aot.EVAL_BATCH

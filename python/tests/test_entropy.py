@@ -1,0 +1,98 @@
+"""L1 entropy kernel vs pure-jnp/numpy oracle — the core correctness signal."""
+
+import math
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.entropy import CHUNK, softmax_entropy_pallas, pad_to_chunks
+
+
+def numpy_entropy(w, eps=1e-12):
+    w = np.ravel(np.asarray(w, np.float64))
+    m = w.max()
+    e = np.exp(w - m)
+    p = e / e.sum()
+    return float(-(p * np.log(p + eps)).sum())
+
+
+def test_uniform_weights_give_log_n():
+    # all-equal weights -> uniform p -> H = log(n)
+    w = np.zeros(4096, np.float32)
+    assert math.isclose(float(ref.softmax_entropy(w)), math.log(4096), rel_tol=1e-5)
+    assert math.isclose(
+        float(softmax_entropy_pallas(jnp.asarray(w))), math.log(4096), rel_tol=1e-4
+    )
+
+
+def test_one_hot_gives_zero():
+    w = np.zeros(2048, np.float32)
+    w[7] = 200.0  # softmax ~ one-hot
+    assert float(ref.softmax_entropy(w)) < 1e-3
+    assert float(softmax_entropy_pallas(jnp.asarray(w))) < 1e-3
+
+
+def test_pad_preserves_entropy():
+    rng = np.random.default_rng(0)
+    w = rng.normal(0, 0.5, size=1234).astype(np.float32)  # not a CHUNK multiple
+    h = float(softmax_entropy_pallas(jnp.asarray(w)))
+    assert math.isclose(h, numpy_entropy(w), rel_tol=1e-4)
+
+
+def test_padding_layout():
+    w = np.ones(10, np.float32)
+    padded = np.asarray(pad_to_chunks(jnp.asarray(w)))
+    assert padded.shape[0] == CHUNK
+    assert (padded[:10] == 1.0).all() and (padded[10:] < -1e29).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(min_value=2, max_value=3 * CHUNK + 5),
+    scale=st.floats(min_value=0.01, max_value=3.0),
+    loc=st.floats(min_value=-5.0, max_value=5.0),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_pallas_matches_oracle(n, scale, loc, seed):
+    rng = np.random.default_rng(seed)
+    w = (rng.normal(loc, scale, size=n)).astype(np.float32)
+    h_ref = numpy_entropy(w)
+    h_jnp = float(ref.softmax_entropy(w))
+    h_pal = float(softmax_entropy_pallas(jnp.asarray(w)))
+    assert math.isclose(h_jnp, h_ref, rel_tol=2e-3, abs_tol=2e-3)
+    assert math.isclose(h_pal, h_ref, rel_tol=2e-3, abs_tol=2e-3)
+
+
+def test_eps_monotone():
+    # entropy with larger eps is strictly smaller (log(p+eps) grows)
+    rng = np.random.default_rng(1)
+    w = rng.normal(size=4096).astype(np.float32)
+    h_small = float(ref.softmax_entropy(w, eps=1e-12))
+    h_big = float(ref.softmax_entropy(w, eps=1e-2))
+    assert h_big < h_small
+
+
+def test_shift_invariance():
+    # softmax is shift invariant -> entropy must be too
+    rng = np.random.default_rng(2)
+    w = rng.normal(size=2048).astype(np.float32)
+    h1 = float(ref.softmax_entropy(w))
+    h2 = float(ref.softmax_entropy(w + 3.5))
+    assert math.isclose(h1, h2, rel_tol=1e-4)
+
+
+def test_block_entropy_weighting():
+    # block entropy is the size-weighted mean: a 3x larger matrix dominates
+    rng = np.random.default_rng(3)
+    a = rng.normal(0, 0.1, size=(32, 32)).astype(np.float32)   # low spread
+    b = rng.normal(0, 2.0, size=(96, 32)).astype(np.float32)   # high spread
+    hb = float(ref.block_entropy([a, b]))
+    ha_only = float(ref.softmax_entropy(a))
+    hb_only = float(ref.softmax_entropy(b))
+    lo, hi = min(ha_only, hb_only), max(ha_only, hb_only)
+    assert lo <= hb <= hi
+    expect = (a.size * ha_only + b.size * hb_only) / (a.size + b.size)
+    assert math.isclose(hb, expect, rel_tol=1e-5)

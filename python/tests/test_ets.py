@@ -1,0 +1,44 @@
+"""ETS tensor-store round-trips (format shared with rust/src/tensor/store.rs)."""
+
+import numpy as np
+import pytest
+
+from compile import ets
+
+
+def test_roundtrip_all_dtypes(tmp_path):
+    p = str(tmp_path / "t.ets")
+    tensors = {
+        "a": np.arange(12, dtype=np.float32).reshape(3, 4),
+        "b": (np.arange(8, dtype=np.int8) - 4),
+        "c": np.arange(16, dtype=np.uint8).reshape(2, 2, 4),
+        "d": np.asarray([7, -9], dtype=np.int32),
+    }
+    ets.write_ets(p, tensors)
+    out = ets.read_ets(p)
+    assert set(out) == set(tensors)
+    for k in tensors:
+        assert out[k].dtype == tensors[k].dtype
+        assert out[k].shape == tensors[k].shape
+        assert (out[k] == tensors[k]).all()
+
+
+def test_crc_detects_corruption(tmp_path):
+    p = str(tmp_path / "t.ets")
+    ets.write_ets(p, {"w": np.ones((4, 4), np.float32)})
+    raw = bytearray(open(p, "rb").read())
+    raw[20] ^= 0xFF  # flip a data byte
+    open(p, "wb").write(bytes(raw))
+    with pytest.raises(ValueError):
+        ets.read_ets(p)
+
+
+def test_rejects_unsupported_dtype(tmp_path):
+    with pytest.raises(ValueError):
+        ets.write_ets(str(tmp_path / "x.ets"), {"w": np.ones(3, np.float64)})
+
+
+def test_empty_store(tmp_path):
+    p = str(tmp_path / "e.ets")
+    ets.write_ets(p, {})
+    assert ets.read_ets(p) == {}

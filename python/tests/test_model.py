@@ -1,0 +1,87 @@
+"""L2 model: shapes, quantized-block fidelity, loss sanity."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model as M
+
+
+@pytest.fixture(scope="module")
+def arch():
+    return M.ARCHS[3]  # tl-phi, smallest
+
+
+@pytest.fixture(scope="module")
+def params(arch):
+    return M.init_params(arch, seed=0)
+
+
+@pytest.fixture(scope="module")
+def tokens(arch):
+    rng = np.random.default_rng(0)
+    return jnp.asarray(rng.integers(1, arch.vocab, size=(2, arch.seq_len)), jnp.int32)
+
+
+def test_model_fwd_shape(arch, params, tokens):
+    logits = M.model_fwd(params, tokens, arch.n_heads)
+    assert logits.shape == (2, arch.seq_len, arch.vocab)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_loss_finite_and_better_than_uniform(arch, params, tokens):
+    loss = float(M.loss_fn(params, tokens, arch.n_heads))
+    assert np.isfinite(loss)
+    # random init should be near log(vocab), certainly below 2x it
+    assert loss < 2 * np.log(arch.vocab)
+
+
+def test_block_variants_match_raw(arch, params):
+    """q8 block output must track the raw block closely; q4 less so; t2 worst.
+    This ordering IS the paper's premise."""
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(2, arch.seq_len, arch.d_model)), jnp.float32)
+    p = params["blocks"][0]
+    y_raw = M.block_raw(x, p, arch.n_heads)
+
+    errs = {}
+    for fmt, fn in [("q8", M.block_q8), ("q4", M.block_q4), ("t2", M.block_t2)]:
+        g1, g2, qs = M.quantize_block(p, fmt)
+        y = fn(x, g1, g2, qs, arch.n_heads)
+        errs[fmt] = float(jnp.abs(y - y_raw).max())
+    assert errs["q8"] < 0.15
+    assert errs["q8"] < errs["q4"] < errs["t2"]
+
+
+def test_embed_head_roundtrip(arch, params, tokens):
+    x = M.embed_fwd(tokens, params["embed"], params["pos"])
+    assert x.shape == (2, arch.seq_len, arch.d_model)
+    logits = M.head_fwd(x, params["gf"], params["head"])
+    assert logits.shape == (2, arch.seq_len, arch.vocab)
+
+
+def test_attention_is_causal(arch):
+    rng = np.random.default_rng(2)
+    d = arch.d_model
+    q = jnp.asarray(rng.normal(size=(1, 8, d)), jnp.float32)
+    k, v = q, q
+    out1 = M.attention(q, k, v, arch.n_heads)
+    # perturb a *future* position; earlier outputs must not change
+    v2 = v.at[0, 7].add(10.0)
+    k2 = k.at[0, 7].add(10.0)
+    out2 = M.attention(q, k2, v2, arch.n_heads)
+    np.testing.assert_allclose(out1[0, :7], out2[0, :7], atol=1e-5)
+    assert float(jnp.abs(out1[0, 7] - out2[0, 7]).max()) > 1e-3
+
+
+def test_quantize_block_covers_all_mats(arch, params):
+    _, _, qs = M.quantize_block(params["blocks"][0], "q8")
+    assert set(qs) == set(M.BLOCK_MATS)
+
+
+def test_archs_are_well_formed():
+    for a in M.ARCHS:
+        assert a.d_model % a.n_heads == 0
+        assert a.d_model % 4 == 0 and a.d_ff % 4 == 0  # t2 packing needs k%4==0
+        assert a.vocab == 512 and a.seq_len == 32

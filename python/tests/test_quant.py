@@ -1,0 +1,117 @@
+"""Quantization formats + fused Pallas dequant-matmul kernels vs oracle."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels import quant as kq
+
+
+def rand_w(k, n, seed, scale=0.5):
+    return np.random.default_rng(seed).normal(0, scale, size=(k, n)).astype(np.float32)
+
+
+# ---- format round-trips ------------------------------------------------------
+def test_q8_roundtrip_error_bounded():
+    w = rand_w(64, 48, 0)
+    q, s = ref.quantize_q8(w)
+    wd = np.asarray(ref.dequant_q8(q, s))
+    # error per element bounded by half a quantization step per column
+    assert (np.abs(wd - w) <= 0.5 * np.asarray(s)[None, :] + 1e-7).all()
+
+
+def test_q4_roundtrip_error_bounded():
+    w = rand_w(64, 48, 1)
+    p, s = ref.quantize_q4(w)
+    wd = np.asarray(ref.dequant_q4(p, s))
+    assert (np.abs(wd - w) <= 0.5 * np.asarray(s)[None, :] + 1e-7).all()
+    assert p.shape == (32, 48) and p.dtype == np.uint8
+
+
+def test_t2_codes_are_ternary():
+    w = rand_w(64, 16, 2)
+    p, s = ref.quantize_t2(w)
+    wd = np.asarray(ref.dequant_t2(p, s))
+    ratio = wd / np.maximum(np.asarray(s)[None, :], 1e-12)
+    assert set(np.round(ratio.ravel()).astype(int)) <= {-1, 0, 1}
+
+
+def test_q8_preserves_sign_of_large_entries():
+    w = rand_w(32, 8, 3, scale=1.0)
+    q, s = ref.quantize_q8(w)
+    big = np.abs(w) > np.asarray(s)[None, :]
+    assert (np.sign(np.asarray(q))[big] == np.sign(w)[big]).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    k=st.sampled_from([8, 32, 64, 96]),
+    n=st.sampled_from([8, 16, 48, 128]),
+    seed=st.integers(min_value=0, max_value=10**6),
+)
+def test_q4_pack_unpack_exact(k, n, seed):
+    w = rand_w(k, n, seed)
+    p, s = ref.quantize_q4(w)
+    wd = np.asarray(ref.dequant_q4(p, s))
+    # re-quantizing the dequantized weights is a fixed point
+    p2, s2 = ref.quantize_q4(wd)
+    assert np.allclose(np.asarray(s), np.asarray(s2), rtol=1e-5)
+    assert (np.asarray(p) == np.asarray(p2)).all()
+
+
+# ---- fused kernels vs oracle ---------------------------------------------------
+@settings(max_examples=8, deadline=None)
+@given(
+    m=st.sampled_from([8, 64, 256]),
+    k=st.sampled_from([64, 96, 112]),
+    n=st.sampled_from([64, 96, 384]),
+    seed=st.integers(min_value=0, max_value=10**6),
+)
+def test_matmul_q8_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(m, k)).astype(np.float32)
+    q, s = ref.quantize_q8(rand_w(k, n, seed + 1))
+    o_ref = np.asarray(ref.matmul_dequant_q8(x, q, s))
+    o_pal = np.asarray(kq.matmul_q8(jnp.asarray(x), q, s))
+    np.testing.assert_allclose(o_pal, o_ref, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    m=st.sampled_from([8, 128]),
+    k=st.sampled_from([64, 96]),
+    n=st.sampled_from([48, 256]),
+    seed=st.integers(min_value=0, max_value=10**6),
+)
+def test_matmul_q4_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(m, k)).astype(np.float32)
+    p, s = ref.quantize_q4(rand_w(k, n, seed + 1))
+    o_ref = np.asarray(ref.matmul_dequant_q4(x, p, s))
+    o_pal = np.asarray(kq.matmul_q4(jnp.asarray(x), p, s))
+    np.testing.assert_allclose(o_pal, o_ref, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    m=st.sampled_from([8, 64]),
+    k=st.sampled_from([64, 128]),
+    n=st.sampled_from([32, 96]),
+    seed=st.integers(min_value=0, max_value=10**6),
+)
+def test_matmul_t2_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(m, k)).astype(np.float32)
+    p, s = ref.quantize_t2(rand_w(k, n, seed + 1))
+    o_ref = np.asarray(ref.matmul_dequant_t2(x, p, s))
+    o_pal = np.asarray(kq.matmul_t2(jnp.asarray(x), p, s))
+    np.testing.assert_allclose(o_pal, o_ref, rtol=1e-4, atol=1e-4)
+
+
+def test_tile_helper():
+    assert kq._tile(256) == 128
+    assert kq._tile(96) == 32
+    assert kq._tile(112) == 16
+    assert kq._tile(7) == 7

@@ -1,0 +1,48 @@
+"""Training-loop sanity: the hand-rolled Adam actually optimizes."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import corpus as C
+from compile.model import ARCHS, init_params, loss_fn
+from compile.train import adam_init, make_step, train
+
+
+def test_loss_decreases_over_a_few_steps():
+    arch = ARCHS[3]  # tl-phi
+    params = init_params(arch, seed=3)
+    m, v = adam_init(params)
+    step = make_step(arch, lr_max=2e-3, steps=30, warmup=5)
+    sampler = C.CorpusSampler(seed=C.SEED + 3, fact_frac=1.0)
+    losses = []
+    for i in range(30):
+        tokens = jnp.asarray(sampler.batch(8))
+        params, m, v, loss = step(params, m, v, tokens, jnp.asarray(i))
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.8, f"{losses[0]} -> {losses[-1]}"
+    assert all(np.isfinite(losses))
+
+
+def test_train_wrapper_returns_log():
+    arch = ARCHS[3]
+    params, log = train(arch, steps=3, batch=4, log=lambda m: None)
+    assert len(log) >= 1
+    assert all(np.isfinite(l) for _, l in log)
+    # params keep their structure
+    assert params["embed"].shape == (arch.vocab, arch.d_model)
+    assert len(params["blocks"]) == arch.n_blocks
+
+
+def test_warmup_then_decay_lr_shape():
+    # the cosine schedule must warm up then decay (probe via two short runs)
+    arch = ARCHS[3]
+    step = make_step(arch, lr_max=1e-2, steps=100, warmup=10)
+    # indirectly verified by optimization stability above; here check the
+    # step function is jittable and reusable across step indices
+    params = init_params(arch, seed=1)
+    m, v = adam_init(params)
+    toks = jnp.asarray(C.CorpusSampler(seed=1).batch(4))
+    for i in [0, 5, 50, 99]:
+        params, m, v, loss = step(params, m, v, toks, jnp.asarray(i))
+        assert np.isfinite(float(loss))

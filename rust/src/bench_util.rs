@@ -1,0 +1,112 @@
+//! Tiny benchmarking harness (criterion is unavailable offline).
+//!
+//! `Bench::run` warms up, then samples wall-clock over adaptive iteration
+//! counts and reports min/median/mean/p95 per iteration. Used by every
+//! `benches/bench_*.rs` target (`cargo bench`, harness = false).
+
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct Sample {
+    pub name: String,
+    pub iters: u64,
+    pub min: Duration,
+    pub median: Duration,
+    pub mean: Duration,
+    pub p95: Duration,
+}
+
+impl Sample {
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / self.mean.as_secs_f64()
+    }
+}
+
+impl std::fmt::Display for Sample {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<44} min {:>10?}  med {:>10?}  mean {:>10?}  p95 {:>10?}  ({} iters)",
+            self.name, self.min, self.median, self.mean, self.p95, self.iters
+        )
+    }
+}
+
+pub struct Bench {
+    /// Target total measurement time per benchmark.
+    pub budget: Duration,
+    /// Number of timed samples.
+    pub samples: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self { budget: Duration::from_secs(2), samples: 20 }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Self {
+        Self { budget: Duration::from_millis(400), samples: 8 }
+    }
+
+    /// Measure `f`, printing and returning the sample.
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> Sample {
+        // warmup + calibration: how many iters fit in budget/samples?
+        let t0 = Instant::now();
+        f();
+        let once = t0.elapsed().max(Duration::from_nanos(50));
+        let per_sample = self.budget / self.samples as u32;
+        let iters = (per_sample.as_secs_f64() / once.as_secs_f64()).ceil().max(1.0) as u64;
+
+        let mut times: Vec<Duration> = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            times.push(t.elapsed() / iters as u32);
+        }
+        times.sort();
+        let sample = Sample {
+            name: name.to_string(),
+            iters: iters * self.samples as u64,
+            min: times[0],
+            median: times[times.len() / 2],
+            mean: times.iter().sum::<Duration>() / times.len() as u32,
+            p95: times[((times.len() as f64 * 0.95) as usize).min(times.len() - 1)],
+        };
+        println!("{sample}");
+        sample
+    }
+}
+
+/// Prevent the optimizer from discarding a value (std::hint::black_box wrapper).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let b = Bench { budget: Duration::from_millis(50), samples: 4 };
+        let s = b.run("noop-ish", || {
+            black_box((0..100).sum::<u64>());
+        });
+        assert!(s.min <= s.median && s.median <= s.p95);
+        assert!(s.iters >= 4);
+    }
+
+    #[test]
+    fn throughput_positive() {
+        let b = Bench { budget: Duration::from_millis(30), samples: 3 };
+        let s = b.run("tp", || {
+            black_box(vec![0u8; 1024]);
+        });
+        assert!(s.throughput(1024.0) > 0.0);
+    }
+}

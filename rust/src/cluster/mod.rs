@@ -1,0 +1,506 @@
+//! Deployment-cluster modelling + the paper's distribution optimizers:
+//! **Algorithm 1** (EWQ-driven promote/demote under resource limit R) and
+//! **Algorithm 2** (FastEWQ classifier-driven, exec_index-ordered).
+//!
+//! The cluster is simulated (DESIGN.md §2): machines expose memory/disk
+//! budgets and a per-hop link latency used by the serving coordinator.
+//! `topology` adds pairwise-latency models + placement refinement.
+
+pub mod topology;
+
+use crate::ewq::{EwqConfig, ModelAnalysis, QuantPlan};
+use crate::quant::Precision;
+use crate::zoo::Schema;
+
+/// One inference machine: Z = min(memory, disk) is its usable capacity.
+#[derive(Clone, Debug)]
+pub struct Machine {
+    pub name: String,
+    pub mem_bytes: usize,
+    pub disk_bytes: usize,
+}
+
+impl Machine {
+    pub fn new(name: &str, mem_bytes: usize, disk_bytes: usize) -> Self {
+        Self { name: name.into(), mem_bytes, disk_bytes }
+    }
+
+    /// Z_i = min(X_i, Y_i) (paper §3.4).
+    pub fn capacity(&self) -> usize {
+        self.mem_bytes.min(self.disk_bytes)
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Cluster {
+    pub machines: Vec<Machine>,
+    /// Simulated one-way latency charged per cross-machine hop at inference.
+    pub link_latency_us: u64,
+}
+
+impl Cluster {
+    pub fn new(machines: Vec<Machine>) -> Self {
+        Self { machines, link_latency_us: 200 }
+    }
+
+    /// Uniform cluster of n identical machines.
+    pub fn uniform(n: usize, mem: usize, disk: usize) -> Self {
+        Self::new((0..n).map(|i| Machine::new(&format!("m{i}"), mem, disk)).collect())
+    }
+
+    /// R = Σ Z_i — aggregate resources (paper §3.4).
+    pub fn total_resources(&self) -> usize {
+        self.machines.iter().map(|m| m.capacity()).sum()
+    }
+}
+
+/// Outcome of a distribution optimization.
+#[derive(Clone, Debug)]
+pub struct Distribution {
+    pub plan: QuantPlan,
+    /// machine index for each block (same order as plan.assignments).
+    pub placement: Vec<usize>,
+    /// machine hosting embedding/head ("block 1" in the paper's numbering).
+    pub outer_machine: usize,
+    /// whether the final size fits in the cluster's R.
+    pub fits: bool,
+    /// cross-machine boundaries on the sequential inference path.
+    pub hops: usize,
+}
+
+impl Distribution {
+    pub fn total_bytes(&self, schema: &Schema) -> usize {
+        self.plan.total_bytes(schema)
+    }
+
+    /// Simulated added network latency for one forward pass.
+    pub fn network_latency_us(&self, cluster: &Cluster) -> u64 {
+        self.hops as u64 * cluster.link_latency_us
+    }
+}
+
+fn block_bytes(schema: &Schema, p: Precision) -> usize {
+    schema.mat_shapes().iter().map(|&(k, n)| p.matrix_bytes(k, n)).sum::<usize>()
+        + 4 * 2 * schema.d_model
+}
+
+fn outer_bytes(schema: &Schema) -> usize {
+    schema.total_raw_bytes() - schema.blocks_raw_bytes()
+}
+
+fn plan_total(plan: &QuantPlan, schema: &Schema) -> usize {
+    plan.total_bytes(schema)
+}
+
+/// **Algorithm 1** — Optimized distribution of transformer blocks.
+///
+/// 1. R = Σ Z_i; deploy raw if it fits.
+/// 2. Start from the EWQ quantization decision.
+/// 3. If S < R: promote blocks in DESCENDING entropy (8bit→raw, 4bit→8bit→raw)
+///    while resources allow.
+/// 4. If S > R: demote blocks in ASCENDING entropy to 1.58-bit until it fits.
+/// 5. Place blocks across machines (largest capacity first, contiguous runs
+///    to minimize cross-machine hops).
+pub fn optimize_distribution(
+    analysis: &ModelAnalysis,
+    schema: &Schema,
+    cluster: &Cluster,
+    cfg: &EwqConfig,
+) -> Distribution {
+    let r = cluster.total_resources();
+    let n = analysis.blocks.len();
+
+    // Step 1: unquantized deployment if possible.
+    let raw_plan = QuantPlan::uniform(&analysis.model, n, Precision::Raw);
+    if plan_total(&raw_plan, schema) <= r {
+        return place(raw_plan, schema, cluster);
+    }
+
+    // Step 2: EWQ decision as the starting point.
+    let mut plan = crate::ewq::decide(analysis, cfg);
+    let ascending = plan.priority.clone(); // ascending entropy
+    let mut s = plan_total(&plan, schema);
+
+    // Step 3: promotion loop — highest entropy first.
+    if s <= r {
+        for &b in ascending.iter().rev() {
+            loop {
+                let cur = plan.assignments[b];
+                let next = match cur {
+                    Precision::Raw => break,
+                    Precision::Q8 => Precision::Raw,
+                    Precision::Q4 | Precision::Q3 => Precision::Q8,
+                    Precision::T2 => Precision::Q4,
+                };
+                let delta = block_bytes(schema, next) - block_bytes(schema, cur);
+                if s + delta <= r {
+                    plan.assignments[b] = next;
+                    s += delta;
+                } else {
+                    break;
+                }
+            }
+        }
+    }
+
+    // Step 4: demotion loop — lowest entropy first, down to 1.58-bit.
+    if s > r {
+        for &b in &ascending {
+            if s <= r {
+                break;
+            }
+            let cur = plan.assignments[b];
+            if cur == Precision::T2 {
+                continue;
+            }
+            let delta = block_bytes(schema, cur) - block_bytes(schema, Precision::T2);
+            plan.assignments[b] = Precision::T2;
+            s -= delta;
+        }
+    }
+
+    place(plan, schema, cluster)
+}
+
+/// **Algorithm 2** — FastEWQ distribution: `selected` marks blocks the O(1)
+/// classifier flagged for quantization. Selected blocks start at 8-bit;
+/// spare resources promote LOW exec_index blocks back to raw; deficits
+/// demote HIGH exec_index blocks to 4-bit then 1.58-bit.
+pub fn fastewq_distribution(
+    model: &str,
+    selected: &[bool],
+    schema: &Schema,
+    cluster: &Cluster,
+) -> Distribution {
+    let r = cluster.total_resources();
+    let n = selected.len();
+    let mut plan = QuantPlan {
+        model: model.into(),
+        assignments: selected
+            .iter()
+            .map(|&q| if q { Precision::Q8 } else { Precision::Raw })
+            .collect(),
+        // priority = descending exec_index (later blocks quantize first)
+        priority: (0..n).rev().collect(),
+    };
+    let mut s = plan_total(&plan, schema);
+
+    if s <= r {
+        // promote selected blocks with LOWEST exec_index first
+        for b in 0..n {
+            if !selected[b] || plan.assignments[b] == Precision::Raw {
+                continue;
+            }
+            let delta = block_bytes(schema, Precision::Raw) - block_bytes(schema, Precision::Q8);
+            if s + delta <= r {
+                plan.assignments[b] = Precision::Raw;
+                s += delta;
+            } else {
+                break;
+            }
+        }
+    } else {
+        // demote selected blocks with HIGHEST exec_index first: Q8→Q4→T2
+        for step in [Precision::Q4, Precision::T2] {
+            for b in (0..n).rev() {
+                if s <= r {
+                    break;
+                }
+                if !selected[b] {
+                    continue;
+                }
+                let cur = plan.assignments[b];
+                if cur <= step {
+                    continue;
+                }
+                let delta = block_bytes(schema, cur) - block_bytes(schema, step);
+                plan.assignments[b] = step;
+                s -= delta;
+            }
+        }
+    }
+
+    place(plan, schema, cluster)
+}
+
+/// §3.4 edge mode: a 4-bit/3-bit combination for severely constrained
+/// devices — high-entropy blocks keep 4-bit, the rest drop to 3-bit.
+pub fn edge_plan(analysis: &ModelAnalysis, _schema: &Schema) -> QuantPlan {
+    let mu = analysis.stats.mean;
+    QuantPlan {
+        model: analysis.model.clone(),
+        assignments: analysis
+            .blocks
+            .iter()
+            .map(|b| if b.entropy > mu { Precision::Q4 } else { Precision::Q3 })
+            .collect(),
+        priority: analysis.ascending(),
+    }
+}
+
+/// Greedy placement: machines sorted by descending capacity; the outer
+/// (embedding/head) payload goes first, then blocks in execution order so
+/// contiguous runs share a machine and hops are minimized.
+fn place(plan: QuantPlan, schema: &Schema, cluster: &Cluster) -> Distribution {
+    let mut order: Vec<usize> = (0..cluster.machines.len()).collect();
+    order.sort_by_key(|&i| std::cmp::Reverse(cluster.machines[i].capacity()));
+
+    let fits = plan_total(&plan, schema) <= cluster.total_resources();
+    let mut remaining: Vec<usize> = order.iter().map(|&i| cluster.machines[i].capacity()).collect();
+
+    let mut cursor = 0usize;
+    let mut take = |bytes: usize, remaining: &mut Vec<usize>| -> usize {
+        while cursor < remaining.len() && remaining[cursor] < bytes {
+            cursor += 1;
+        }
+        let m = cursor.min(remaining.len() - 1);
+        remaining[m] = remaining[m].saturating_sub(bytes);
+        m
+    };
+
+    let outer_machine = order[take(outer_bytes(schema), &mut remaining)];
+    let mut placement = Vec::with_capacity(plan.assignments.len());
+    let mut hops = 0usize;
+    let mut prev = outer_machine;
+    for &p in &plan.assignments {
+        let m = order[take(block_bytes(schema, p), &mut remaining)];
+        if m != prev {
+            hops += 1;
+        }
+        prev = m;
+        placement.push(m);
+    }
+    // final head hop back to the outer machine if the last block is elsewhere
+    if prev != outer_machine {
+        hops += 1;
+    }
+
+    Distribution { plan, placement, outer_machine, fits, hops }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::entropy::EntropyStats;
+    use crate::ewq::BlockAnalysis;
+    use crate::proptest_lite::check;
+
+    fn schema(n_blocks: usize) -> Schema {
+        Schema {
+            name: "t".into(),
+            n_blocks,
+            d_model: 64,
+            n_heads: 4,
+            d_ff: 256,
+            vocab: 512,
+            seq_len: 32,
+            eval_batch: 8,
+        }
+    }
+
+    fn analysis(hs: &[f64]) -> ModelAnalysis {
+        let s = schema(hs.len());
+        ModelAnalysis {
+            model: "t".into(),
+            blocks: hs
+                .iter()
+                .enumerate()
+                .map(|(i, &h)| BlockAnalysis {
+                    block: i,
+                    exec_index: s.exec_index(i),
+                    entropy: h,
+                    params: s.block_params(),
+                })
+                .collect(),
+            stats: EntropyStats::from_values(hs),
+        }
+    }
+
+    #[test]
+    fn plentiful_cluster_deploys_raw() {
+        let hs: Vec<f64> = (0..8).map(|i| 4.0 + i as f64 * 0.2).collect();
+        let a = analysis(&hs);
+        let s = schema(8);
+        let cluster = Cluster::uniform(2, 1 << 30, 1 << 30);
+        let d = optimize_distribution(&a, &s, &cluster, &EwqConfig::default());
+        assert!(d.fits);
+        assert_eq!(d.plan.counts().0, 8, "all raw");
+    }
+
+    #[test]
+    fn starved_cluster_demotes_to_ternary() {
+        let hs: Vec<f64> = (0..8).map(|i| 4.0 + i as f64 * 0.2).collect();
+        let a = analysis(&hs);
+        let s = schema(8);
+        // capacity barely above the all-T2 floor
+        let t2_plan = QuantPlan::uniform("t", 8, Precision::T2);
+        let floor = t2_plan.total_bytes(&s);
+        let cluster = Cluster::uniform(1, floor + 2048, floor + 2048);
+        let d = optimize_distribution(&a, &s, &cluster, &EwqConfig::default());
+        assert!(d.fits, "should fit by demoting");
+        assert!(d.plan.counts().4 > 0, "uses 1.58-bit blocks: {:?}", d.plan.counts());
+        assert!(d.total_bytes(&s) <= cluster.total_resources());
+    }
+
+    #[test]
+    fn infeasible_cluster_reports_not_fitting() {
+        let hs: Vec<f64> = (0..8).map(|i| 4.0 + i as f64 * 0.2).collect();
+        let a = analysis(&hs);
+        let s = schema(8);
+        let cluster = Cluster::uniform(1, 1024, 1024); // absurdly small
+        let d = optimize_distribution(&a, &s, &cluster, &EwqConfig::default());
+        assert!(!d.fits);
+    }
+
+    #[test]
+    fn promotion_prefers_high_entropy_blocks() {
+        let hs = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0];
+        let a = analysis(&hs);
+        let s = schema(8);
+        // budget: EWQ plan + room to promote roughly two blocks to raw
+        let base = crate::ewq::decide(&a, &EwqConfig::default()).total_bytes(&s);
+        let room = 2 * (s.block_raw_bytes() - 50_000);
+        let cluster = Cluster::uniform(1, base + room, base + room);
+        let d = optimize_distribution(&a, &s, &cluster, &EwqConfig::default());
+        assert!(d.fits);
+        // any promoted-to-raw block must have entropy >= every still-quantized block
+        let worst_raw = d
+            .plan
+            .assignments
+            .iter()
+            .zip(&hs)
+            .filter(|(&p, _)| p == Precision::Raw)
+            .map(|(_, &h)| h)
+            .fold(f64::MAX, f64::min);
+        let best_quant = d
+            .plan
+            .assignments
+            .iter()
+            .zip(&hs)
+            .filter(|(&p, _)| p != Precision::Raw)
+            .map(|(_, &h)| h)
+            .fold(f64::MIN, f64::max);
+        assert!(worst_raw >= best_quant, "raw floor {worst_raw} < quant ceil {best_quant}");
+    }
+
+    #[test]
+    fn fastewq_promotes_low_exec_index_first() {
+        let s = schema(6);
+        let selected = vec![true; 6];
+        // room for everything raw except ~2 blocks
+        let raw_total = QuantPlan::uniform("t", 6, Precision::Raw).total_bytes(&s);
+        let budget = raw_total - 2 * (s.block_raw_bytes() * 7 / 8);
+        let cluster = Cluster::uniform(1, budget, budget);
+        let d = fastewq_distribution("t", &selected, &s, &cluster);
+        assert!(d.fits);
+        // raw blocks must be a prefix (low exec_index promoted first)
+        let first_quant =
+            d.plan.assignments.iter().position(|&p| p != Precision::Raw).unwrap_or(6);
+        assert!(
+            d.plan.assignments[first_quant..].iter().all(|&p| p != Precision::Raw),
+            "promotions not prefix-ordered: {:?}",
+            d.plan.assignments
+        );
+    }
+
+    #[test]
+    fn fastewq_demotes_high_exec_index_first() {
+        let s = schema(6);
+        let selected = vec![true; 6];
+        let q8_total = QuantPlan::uniform("t", 6, Precision::Q8).total_bytes(&s);
+        let budget = q8_total - s.block_raw_bytes() / 8; // force some demotion
+        let cluster = Cluster::uniform(1, budget, budget);
+        let d = fastewq_distribution("t", &selected, &s, &cluster);
+        assert!(d.fits);
+        let demoted: Vec<usize> = d
+            .plan
+            .assignments
+            .iter()
+            .enumerate()
+            .filter(|(_, &p)| p < Precision::Q8)
+            .map(|(i, _)| i)
+            .collect();
+        assert!(!demoted.is_empty());
+        // demotions concentrate at the tail
+        assert!(demoted.iter().all(|&i| i >= 6 - demoted.len() - 1));
+    }
+
+    #[test]
+    fn edge_plan_uses_only_q4_q3() {
+        let a = analysis(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0]);
+        let s = schema(8);
+        let p = edge_plan(&a, &s);
+        assert!(p.assignments.iter().all(|&x| x == Precision::Q4 || x == Precision::Q3));
+        let (_, _, q4, q3, _) = p.counts();
+        assert!(q4 > 0 && q3 > 0);
+        // §3.4 claim: 18-25% below uniform 4-bit
+        let uni4 = QuantPlan::uniform("t", 8, Precision::Q4);
+        let saving =
+            1.0 - p.blocks_bytes(&s) as f64 / uni4.blocks_bytes(&s) as f64;
+        assert!(saving > 0.05, "edge saving {saving}");
+    }
+
+    #[test]
+    fn placement_respects_capacity_and_counts_hops() {
+        let hs: Vec<f64> = (0..10).map(|i| 3.0 + 0.3 * i as f64).collect();
+        let a = analysis(&hs);
+        let s = schema(10);
+        let per_machine = s.total_raw_bytes() / 3 + 200_000;
+        let cluster = Cluster::uniform(4, per_machine, per_machine);
+        let d = optimize_distribution(&a, &s, &cluster, &EwqConfig::default());
+        assert!(d.fits);
+        // per-machine load <= capacity
+        let mut load = vec![0usize; 4];
+        load[d.outer_machine] += s.total_raw_bytes() - s.blocks_raw_bytes();
+        for (b, &m) in d.placement.iter().enumerate() {
+            load[m] += block_bytes(&s, d.plan.assignments[b]);
+        }
+        for (m, l) in load.iter().enumerate() {
+            assert!(*l <= cluster.machines[m].capacity(), "machine {m} overloaded");
+        }
+        assert!(d.hops >= 1, "multi-machine placement must hop");
+        assert!(d.network_latency_us(&cluster) == d.hops as u64 * 200);
+    }
+
+    #[test]
+    fn property_algorithm1_never_exceeds_r_when_feasible() {
+        check(
+            7,
+            40,
+            24,
+            |g| {
+                let n = g.usize_in(2, 16.max(3));
+                let hs = g.vec_f64(n, 1.0, 10.0);
+                let machines = g.usize_in(1, 5);
+                // budget between T2 floor and raw total
+                let frac = g.f64_in(0.28, 1.3);
+                (hs, machines, frac)
+            },
+            |(hs, machines, frac)| {
+                let a = analysis(hs);
+                let s = schema(hs.len());
+                let raw = s.total_raw_bytes();
+                let budget = ((raw as f64 * frac) as usize / machines).max(1);
+                let cluster = Cluster::uniform(*machines, budget, budget);
+                let d = optimize_distribution(&a, &s, &cluster, &EwqConfig::default());
+                let total = d.total_bytes(&s);
+                let r = cluster.total_resources();
+                if d.fits && total > r {
+                    return Err(format!("claims fit but {total} > {r}"));
+                }
+                if !d.fits {
+                    // only allowed when even all-T2 exceeds R
+                    let floor =
+                        QuantPlan::uniform("t", hs.len(), Precision::T2).total_bytes(&s);
+                    if floor <= r {
+                        return Err(format!("gave up although floor {floor} <= {r}"));
+                    }
+                }
+                if d.placement.len() != hs.len() {
+                    return Err("placement arity".into());
+                }
+                Ok(())
+            },
+        );
+    }
+}

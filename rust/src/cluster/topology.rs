@@ -1,0 +1,274 @@
+//! Network-topology-aware block placement (paper §3.4: "the block
+//! distribution algorithm dynamically adjusts to network topology,
+//! prioritizing block placement that minimizes cross-machine communication
+//! during inference").
+//!
+//! Topologies assign a per-pair latency; placement cost is the summed
+//! latency along the sequential inference path embed → block₀ → … → head.
+
+use crate::ewq::QuantPlan;
+use crate::quant::Precision;
+use crate::zoo::Schema;
+
+use super::{Cluster, Distribution};
+
+/// Pairwise latency model between machines.
+#[derive(Clone, Debug)]
+pub enum Topology {
+    /// every pair at the same latency
+    FullMesh { latency_us: u64 },
+    /// machines on a ring; latency = hop-distance * per_hop
+    Ring { per_hop_us: u64 },
+    /// leaf-spine: intra-rack cheap, cross-rack expensive
+    TwoTier { rack_size: usize, intra_us: u64, cross_us: u64 },
+}
+
+impl Topology {
+    pub fn latency_us(&self, a: usize, b: usize, n_machines: usize) -> u64 {
+        if a == b {
+            return 0;
+        }
+        match *self {
+            Topology::FullMesh { latency_us } => latency_us,
+            Topology::Ring { per_hop_us } => {
+                let d = a.abs_diff(b);
+                let d = d.min(n_machines - d);
+                d as u64 * per_hop_us
+            }
+            Topology::TwoTier { rack_size, intra_us, cross_us } => {
+                if a / rack_size == b / rack_size {
+                    intra_us
+                } else {
+                    cross_us
+                }
+            }
+        }
+    }
+}
+
+/// Total network latency of one forward pass under a placement
+/// (outer machine hosts embed + head, so the path returns to it).
+pub fn path_latency_us(
+    placement: &[usize],
+    outer_machine: usize,
+    topo: &Topology,
+    n_machines: usize,
+) -> u64 {
+    let mut total = 0u64;
+    let mut prev = outer_machine;
+    for &m in placement {
+        total += topo.latency_us(prev, m, n_machines);
+        prev = m;
+    }
+    total + topo.latency_us(prev, outer_machine, n_machines)
+}
+
+/// Per-machine byte loads of a placement.
+pub fn machine_loads(
+    plan: &QuantPlan,
+    placement: &[usize],
+    outer_machine: usize,
+    schema: &Schema,
+    n_machines: usize,
+) -> Vec<usize> {
+    let mut load = vec![0usize; n_machines];
+    load[outer_machine] += schema.total_raw_bytes() - schema.blocks_raw_bytes();
+    for (b, &m) in placement.iter().enumerate() {
+        let p = plan.assignments[b];
+        let mats: usize = schema.mat_shapes().iter().map(|&(k, n)| p.matrix_bytes(k, n)).sum();
+        load[m] += mats + 4 * 2 * schema.d_model;
+    }
+    load
+}
+
+/// Greedy topology-aware refinement: starting from a distribution, move
+/// single blocks between machines whenever the move reduces path latency
+/// and respects capacity. Deterministic, terminates (latency strictly
+/// decreases each accepted move).
+pub fn refine_placement(
+    dist: &Distribution,
+    schema: &Schema,
+    cluster: &Cluster,
+    topo: &Topology,
+) -> Distribution {
+    let n_machines = cluster.machines.len();
+    let mut placement = dist.placement.clone();
+    let mut loads =
+        machine_loads(&dist.plan, &placement, dist.outer_machine, schema, n_machines);
+
+    let block_bytes = |p: Precision| -> usize {
+        schema.mat_shapes().iter().map(|&(k, n)| p.matrix_bytes(k, n)).sum::<usize>()
+            + 4 * 2 * schema.d_model
+    };
+
+    let mut improved = true;
+    while improved {
+        improved = false;
+        for b in 0..placement.len() {
+            let cur = placement[b];
+            let bytes = block_bytes(dist.plan.assignments[b]);
+            let base = path_latency_us(&placement, dist.outer_machine, topo, n_machines);
+            let mut best: Option<(u64, usize)> = None;
+            for m in 0..n_machines {
+                if m == cur || loads[m] + bytes > cluster.machines[m].capacity() {
+                    continue;
+                }
+                placement[b] = m;
+                let lat = path_latency_us(&placement, dist.outer_machine, topo, n_machines);
+                if lat < base && best.map(|(l, _)| lat < l).unwrap_or(true) {
+                    best = Some((lat, m));
+                }
+            }
+            placement[b] = cur;
+            if let Some((_, m)) = best {
+                loads[cur] -= bytes;
+                loads[m] += bytes;
+                placement[b] = m;
+                improved = true;
+            }
+        }
+    }
+
+    let hops = {
+        let mut h = 0usize;
+        let mut prev = dist.outer_machine;
+        for &m in &placement {
+            if m != prev {
+                h += 1;
+            }
+            prev = m;
+        }
+        if prev != dist.outer_machine {
+            h += 1;
+        }
+        h
+    };
+    Distribution { plan: dist.plan.clone(), placement, outer_machine: dist.outer_machine, fits: dist.fits, hops }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{optimize_distribution, Cluster};
+    use crate::entropy::EntropyStats;
+    use crate::ewq::{BlockAnalysis, EwqConfig, ModelAnalysis};
+    use crate::proptest_lite::check;
+
+    fn schema(n_blocks: usize) -> Schema {
+        Schema {
+            name: "t".into(),
+            n_blocks,
+            d_model: 64,
+            n_heads: 4,
+            d_ff: 256,
+            vocab: 512,
+            seq_len: 32,
+            eval_batch: 8,
+        }
+    }
+
+    fn analysis(n: usize) -> ModelAnalysis {
+        let s = schema(n);
+        let hs: Vec<f64> = (0..n).map(|i| 4.0 + 0.3 * i as f64).collect();
+        ModelAnalysis {
+            model: "t".into(),
+            blocks: hs
+                .iter()
+                .enumerate()
+                .map(|(i, &h)| BlockAnalysis {
+                    block: i,
+                    exec_index: s.exec_index(i),
+                    entropy: h,
+                    params: s.block_params(),
+                })
+                .collect(),
+            stats: EntropyStats::from_values(&hs),
+        }
+    }
+
+    #[test]
+    fn ring_latency_is_symmetric_shortest_path() {
+        let t = Topology::Ring { per_hop_us: 10 };
+        assert_eq!(t.latency_us(0, 1, 6), 10);
+        assert_eq!(t.latency_us(0, 5, 6), 10); // wraps around
+        assert_eq!(t.latency_us(0, 3, 6), 30);
+        assert_eq!(t.latency_us(2, 2, 6), 0);
+        assert_eq!(t.latency_us(1, 4, 6), t.latency_us(4, 1, 6));
+    }
+
+    #[test]
+    fn two_tier_rack_locality() {
+        let t = Topology::TwoTier { rack_size: 2, intra_us: 5, cross_us: 100 };
+        assert_eq!(t.latency_us(0, 1, 4), 5);
+        assert_eq!(t.latency_us(0, 2, 4), 100);
+        assert_eq!(t.latency_us(2, 3, 4), 5);
+    }
+
+    #[test]
+    fn path_latency_counts_return_hop() {
+        let t = Topology::FullMesh { latency_us: 7 };
+        // outer=0, blocks on [0,1,1,0]: hops 0->0(0) 0->1(7) 1->1(0) 1->0(7) 0->0(0)
+        assert_eq!(path_latency_us(&[0, 1, 1, 0], 0, &t, 2), 14);
+        // all on outer machine: zero
+        assert_eq!(path_latency_us(&[0, 0, 0], 0, &t, 2), 0);
+    }
+
+    #[test]
+    fn refinement_never_increases_latency_and_respects_capacity() {
+        check(
+            11,
+            30,
+            12,
+            |g| (g.usize_in(4, 12), g.usize_in(2, 5), g.usize_in(0, 3)),
+            |&(n_blocks, n_machines, topo_kind)| {
+                let s = schema(n_blocks);
+                let a = analysis(n_blocks);
+                let per = s.total_raw_bytes() * 2 / n_machines.max(1) + 100_000;
+                let cluster = Cluster::uniform(n_machines, per, per);
+                let d = optimize_distribution(&a, &s, &cluster, &EwqConfig::default());
+                let topo = match topo_kind {
+                    0 => Topology::FullMesh { latency_us: 50 },
+                    1 => Topology::Ring { per_hop_us: 20 },
+                    _ => Topology::TwoTier { rack_size: 2, intra_us: 5, cross_us: 80 },
+                };
+                let before =
+                    path_latency_us(&d.placement, d.outer_machine, &topo, n_machines);
+                let r = refine_placement(&d, &s, &cluster, &topo);
+                let after = path_latency_us(&r.placement, r.outer_machine, &topo, n_machines);
+                if after > before {
+                    return Err(format!("refinement worsened latency {before} -> {after}"));
+                }
+                let loads = machine_loads(&r.plan, &r.placement, r.outer_machine, &s, n_machines);
+                for (m, l) in loads.iter().enumerate() {
+                    if *l > cluster.machines[m].capacity() {
+                        return Err(format!("machine {m} over capacity"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn refinement_consolidates_under_full_mesh() {
+        // with one machine big enough for everything, refinement should pull
+        // every block onto the outer machine (zero network latency)
+        let s = schema(6);
+        let a = analysis(6);
+        let big = s.total_raw_bytes() * 2;
+        let cluster = Cluster::new(vec![
+            super::super::Machine::new("big", big, big),
+            super::super::Machine::new("small", big, big),
+        ]);
+        let d = optimize_distribution(&a, &s, &cluster, &EwqConfig::default());
+        let topo = Topology::FullMesh { latency_us: 100 };
+        let r = refine_placement(&d, &s, &cluster, &topo);
+        assert_eq!(
+            path_latency_us(&r.placement, r.outer_machine, &topo, 2),
+            0,
+            "placement {:?} outer {}",
+            r.placement,
+            r.outer_machine
+        );
+    }
+}

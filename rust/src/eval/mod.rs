@@ -1,0 +1,369 @@
+//! SynthMMLU evaluation harness (paper Section 5).
+//!
+//! Questions are rebuilt deterministically from `artifacts/corpus/facts.txt`
+//! (the fact table the models were trained on): 57 relation families play
+//! the role of MMLU's 57 subjects; each question is a 4-choice object
+//! retrieval. Accuracy and the Section-5.2 perplexity pipeline (top-K
+//! membership, −100 default logprob, softmax over the 4 choices, exp-mean
+//! aggregate) are implemented verbatim.
+
+pub mod similarity;
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::{ModelExecutor, QuantizedModel};
+use crate::rng::Xoshiro256pp;
+
+/// The token-space constants baked into facts.txt's header.
+#[derive(Clone, Debug)]
+pub struct FactTable {
+    pub vocab: usize,
+    pub q_tok: i32,
+    pub a_tok: i32,
+    pub rel_base: usize,
+    pub n_rel: usize,
+    pub ent_base: usize,
+    pub n_ent: usize,
+    pub seq_len: usize,
+    /// objs[r][s] = object token for relation r, subject s.
+    pub objs: Vec<Vec<i32>>,
+}
+
+impl FactTable {
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read {}", path.display()))?;
+        let mut lines = text.lines();
+        let header = lines.next().context("empty facts.txt")?;
+        let mut kv = BTreeMap::new();
+        for part in header.trim_start_matches('#').split_whitespace() {
+            if let Some((k, v)) = part.split_once('=') {
+                kv.insert(k.to_string(), v.parse::<i64>()?);
+            }
+        }
+        let get = |k: &str| -> Result<i64> {
+            kv.get(k).copied().with_context(|| format!("facts header missing {k}"))
+        };
+        let (rel_base, n_rel) = (get("rel_base")? as usize, get("n_rel")? as usize);
+        let (ent_base, n_ent) = (get("ent_base")? as usize, get("n_ent")? as usize);
+        let mut objs = vec![vec![0i32; n_ent]; n_rel];
+        let mut count = 0usize;
+        for line in lines {
+            let mut f = line.split_whitespace();
+            let (Some(r), Some(s), Some(o)) = (f.next(), f.next(), f.next()) else {
+                bail!("bad fact line {line:?}");
+            };
+            let r: usize = r.parse::<usize>()? - rel_base;
+            let s: usize = s.parse::<usize>()? - ent_base;
+            objs[r][s] = o.parse()?;
+            count += 1;
+        }
+        if count != n_rel * n_ent {
+            bail!("facts.txt has {count} rows, expected {}", n_rel * n_ent);
+        }
+        Ok(Self {
+            vocab: get("vocab")? as usize,
+            q_tok: get("q")? as i32,
+            a_tok: get("a")? as i32,
+            rel_base,
+            n_rel,
+            ent_base,
+            n_ent,
+            seq_len: get("seq_len")? as usize,
+            objs,
+        })
+    }
+}
+
+/// One 4-choice question: context `[Q, s, r, A]`, answer = `choices[correct]`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Question {
+    /// relation family == MMLU subject
+    pub subject: usize,
+    pub context: [i32; 4],
+    pub choices: [i32; 4],
+    pub correct: usize,
+}
+
+/// Deterministic SynthMMLU build: `per_subject` questions per relation.
+pub fn build_questions(facts: &FactTable, per_subject: usize, seed: u64) -> Vec<Question> {
+    let mut rng = Xoshiro256pp::new(seed);
+    let mut out = Vec::with_capacity(per_subject * facts.n_rel);
+    for r in 0..facts.n_rel {
+        let subjects = rng.sample_indices(facts.n_ent, per_subject.min(facts.n_ent));
+        for s in subjects {
+            let correct_tok = facts.objs[r][s];
+            let mut distractors = Vec::with_capacity(3);
+            while distractors.len() < 3 {
+                let d = facts.objs[r][rng.below(facts.n_ent)];
+                if d != correct_tok && !distractors.contains(&d) {
+                    distractors.push(d);
+                }
+            }
+            let mut choices = [distractors[0], distractors[1], distractors[2], correct_tok];
+            // Fisher–Yates on the fixed array
+            for i in (1..4).rev() {
+                choices.swap(i, rng.below(i + 1));
+            }
+            let correct = choices.iter().position(|&c| c == correct_tok).unwrap();
+            out.push(Question {
+                subject: r,
+                context: [
+                    facts.q_tok,
+                    (facts.ent_base + s) as i32,
+                    (facts.rel_base + r) as i32,
+                    facts.a_tok,
+                ],
+                choices,
+                correct,
+            });
+        }
+    }
+    out
+}
+
+/// Evaluation outcome (one model variant, whole question set).
+#[derive(Clone, Debug)]
+pub struct EvalResult {
+    pub accuracy: f64,
+    /// Total Perplexity = exp(mean over questions of −ln p_correct).
+    pub perplexity: f64,
+    pub per_subject_accuracy: Vec<f64>,
+    pub per_subject_perplexity: Vec<f64>,
+    pub n_questions: usize,
+    /// Per-question choice probabilities (question order) — feeds the
+    /// Table-1 similarity/consistency metrics.
+    pub choice_probs: Vec<[f64; 4]>,
+}
+
+/// Paper §5.2 pipeline for one question given full-vocab logits at the
+/// answer position. K = 100 top-token membership; −100 default; uniform
+/// 1e-6 fallback when no choice is in the top-K.
+pub fn question_scores(logits: &[f32], q: &Question, top_k: usize) -> ([f64; 4], f64) {
+    let v = logits.len();
+    // log-softmax over the vocab
+    let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+    let z: f64 = logits.iter().map(|&x| ((x as f64) - m).exp()).sum();
+    let lz = z.ln() + m;
+    let logprob = |tok: i32| logits[tok as usize] as f64 - lz;
+
+    // top-K membership threshold
+    let mut sorted: Vec<f32> = logits.to_vec();
+    sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    let thresh = sorted[top_k.min(v) - 1] as f64 - lz;
+
+    let mut lps = [0.0f64; 4];
+    let mut any = false;
+    for (i, &c) in q.choices.iter().enumerate() {
+        let lp = logprob(c);
+        if lp >= thresh {
+            lps[i] = lp;
+            any = true;
+        } else {
+            lps[i] = -100.0;
+        }
+    }
+    if !any {
+        // paper: uniform 1e-6 probability per choice
+        lps = [(1e-6f64).ln(); 4];
+    }
+    // softmax over the four choices
+    let mx = lps.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let exps: Vec<f64> = lps.iter().map(|&l| (l - mx).exp()).collect();
+    let zs: f64 = exps.iter().sum();
+    let probs = [exps[0] / zs, exps[1] / zs, exps[2] / zs, exps[3] / zs];
+    let ppl_q = -probs[q.correct].max(1e-300).ln();
+    (probs, ppl_q)
+}
+
+/// Run the full evaluation of a quantized model over a question set.
+pub fn evaluate(
+    ex: &ModelExecutor,
+    qm: &QuantizedModel,
+    questions: &[Question],
+) -> Result<EvalResult> {
+    let schema = &ex.schema;
+    let (b, s, v) = (schema.eval_batch, schema.seq_len, schema.vocab);
+    let n_subjects = questions.iter().map(|q| q.subject).max().unwrap_or(0) + 1;
+
+    let mut subj_correct = vec![0usize; n_subjects];
+    let mut subj_total = vec![0usize; n_subjects];
+    let mut subj_ppl = vec![0.0f64; n_subjects];
+    let mut choice_probs = Vec::with_capacity(questions.len());
+
+    for chunk in questions.chunks(b) {
+        let mut toks = vec![0i32; b * s];
+        for (row, q) in chunk.iter().enumerate() {
+            toks[row * s..row * s + 4].copy_from_slice(&q.context);
+        }
+        let logits = ex.forward(qm, &toks)?;
+        for (row, q) in chunk.iter().enumerate() {
+            let base = (row * s + 3) * v; // answer position = 3
+            let lg = &logits[base..base + v];
+            // accuracy: argmax over the 4 choices on raw logits
+            let pred = (0..4)
+                .max_by(|&a, &bq| {
+                    lg[q.choices[a] as usize]
+                        .partial_cmp(&lg[q.choices[bq] as usize])
+                        .unwrap()
+                })
+                .unwrap();
+            let (probs, ppl_q) = question_scores(lg, q, 100);
+            choice_probs.push(probs);
+            subj_total[q.subject] += 1;
+            if pred == q.correct {
+                subj_correct[q.subject] += 1;
+            }
+            subj_ppl[q.subject] += ppl_q;
+        }
+    }
+
+    let n_questions: usize = subj_total.iter().sum();
+    let accuracy =
+        subj_correct.iter().sum::<usize>() as f64 / n_questions as f64;
+    let total_nll: f64 = subj_ppl.iter().sum();
+    let perplexity = (total_nll / n_questions as f64).exp();
+    let per_subject_accuracy = subj_correct
+        .iter()
+        .zip(&subj_total)
+        .map(|(&c, &t)| if t == 0 { 0.0 } else { c as f64 / t as f64 })
+        .collect();
+    let per_subject_perplexity = subj_ppl
+        .iter()
+        .zip(&subj_total)
+        .map(|(&p, &t)| if t == 0 { 0.0 } else { p / t as f64 })
+        .collect();
+    Ok(EvalResult {
+        accuracy,
+        perplexity,
+        per_subject_accuracy,
+        per_subject_perplexity,
+        n_questions,
+        choice_probs,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_facts() -> FactTable {
+        // 3 relations x 4 entities, objs = identity-ish permutation
+        let objs = vec![
+            vec![160, 161, 162, 163],
+            vec![161, 162, 163, 160],
+            vec![162, 163, 160, 161],
+        ];
+        FactTable {
+            vocab: 512,
+            q_tok: 1,
+            a_tok: 2,
+            rel_base: 100,
+            n_rel: 3,
+            ent_base: 160,
+            n_ent: 4,
+            seq_len: 32,
+            objs,
+        }
+    }
+
+    #[test]
+    fn questions_are_valid_and_deterministic() {
+        let f = fake_facts();
+        let a = build_questions(&f, 3, 7);
+        let b = build_questions(&f, 3, 7);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 9);
+        for q in &a {
+            assert_eq!(q.context[0], 1);
+            assert_eq!(q.context[3], 2);
+            let s = (q.context[1] - 160) as usize;
+            let r = (q.context[2] - 100) as usize;
+            assert_eq!(q.choices[q.correct], f.objs[r][s]);
+            let mut uniq = q.choices.to_vec();
+            uniq.sort();
+            uniq.dedup();
+            assert_eq!(uniq.len(), 4, "duplicate choices {:?}", q.choices);
+        }
+    }
+
+    #[test]
+    fn question_scores_prefers_high_logit_choice() {
+        let f = fake_facts();
+        let q = &build_questions(&f, 1, 1)[0];
+        let mut logits = vec![0.0f32; f.vocab];
+        logits[q.choices[q.correct] as usize] = 10.0;
+        let (probs, ppl) = question_scores(&logits, q, 100);
+        assert!(probs[q.correct] > 0.9);
+        assert!(ppl < 0.1);
+        assert!((probs.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn out_of_topk_choices_get_default() {
+        let f = fake_facts();
+        let q = &build_questions(&f, 1, 2)[0];
+        // make 100 other tokens dominate so every choice falls outside top-100
+        let mut logits = vec![0.0f32; f.vocab];
+        for (i, l) in logits.iter_mut().enumerate().take(120) {
+            if !q.choices.contains(&(i as i32)) {
+                *l = 50.0;
+            } else {
+                *l = -50.0;
+            }
+        }
+        let (probs, ppl) = question_scores(&logits, q, 100);
+        // uniform fallback
+        for p in probs {
+            assert!((p - 0.25).abs() < 1e-9);
+        }
+        assert!((ppl - 0.25f64.recip().ln()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn facts_load_from_artifacts() {
+        let art = crate::artifacts_dir();
+        let p = art.join("corpus/facts.txt");
+        if !p.exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let f = FactTable::load(&p).unwrap();
+        assert_eq!(f.n_rel, 57);
+        assert_eq!(f.n_ent, 16);
+        // every relation's objects are a permutation of the entity tokens
+        for r in 0..f.n_rel {
+            let mut o = f.objs[r].clone();
+            o.sort();
+            o.dedup();
+            assert_eq!(o.len(), f.n_ent);
+        }
+    }
+
+    #[test]
+    fn end_to_end_eval_on_phi() {
+        let art = crate::artifacts_dir();
+        if !art.join("models/tl-phi/weights.ets").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let rt = crate::runtime::Runtime::cpu().unwrap();
+        let model = crate::zoo::ModelDir::load(art.join("models/tl-phi")).unwrap();
+        let facts = FactTable::load(&art.join("corpus/facts.txt")).unwrap();
+        let questions = build_questions(&facts, 2, 5); // 114 questions
+        let plan = crate::ewq::QuantPlan::uniform(
+            "tl-phi",
+            model.schema.n_blocks,
+            crate::quant::Precision::Raw,
+        );
+        let qm = crate::model::QuantizedModel::build(&model, &plan).unwrap();
+        let ex = crate::model::ModelExecutor::new(&rt, &model);
+        let r = evaluate(&ex, &qm, &questions).unwrap();
+        assert!(r.accuracy > 0.5, "raw tl-phi accuracy {}", r.accuracy);
+        assert!(r.perplexity.is_finite() && r.perplexity >= 1.0);
+        assert_eq!(r.n_questions, questions.len());
+    }
+}

@@ -1,0 +1,116 @@
+//! Table-1 style QA metrics (the paper's Tonic-Validate substitutes,
+//! DESIGN.md §2): **answer similarity** — mean cosine similarity between a
+//! variant's choice-probability vectors and the raw model's; **answer
+//! consistency** — agreement rate of temperature-sampled answers across
+//! three seeded draws.
+
+use crate::rng::Xoshiro256pp;
+
+/// Cosine similarity between two probability vectors.
+pub fn cosine(a: &[f64], b: &[f64]) -> f64 {
+    let dot: f64 = a.iter().zip(b).map(|(x, y)| x * y).sum();
+    let na: f64 = a.iter().map(|x| x * x).sum::<f64>().sqrt();
+    let nb: f64 = b.iter().map(|x| x * x).sum::<f64>().sqrt();
+    if na == 0.0 || nb == 0.0 {
+        return 0.0;
+    }
+    dot / (na * nb)
+}
+
+/// Mean cosine similarity across questions (variant vs raw reference).
+pub fn answer_similarity(variant: &[[f64; 4]], reference: &[[f64; 4]]) -> f64 {
+    assert_eq!(variant.len(), reference.len());
+    variant.iter().zip(reference).map(|(v, r)| cosine(v, r)).sum::<f64>()
+        / variant.len().max(1) as f64
+}
+
+/// Sample an answer index from choice probabilities at `temperature`.
+pub fn sample_answer(probs: &[f64; 4], temperature: f64, rng: &mut Xoshiro256pp) -> usize {
+    let logits: Vec<f64> = probs.iter().map(|p| p.max(1e-12).ln() / temperature).collect();
+    let m = logits.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let exps: Vec<f64> = logits.iter().map(|l| (l - m).exp()).collect();
+    let z: f64 = exps.iter().sum();
+    let mut u = rng.next_f64() * z;
+    for (i, e) in exps.iter().enumerate() {
+        if u < *e {
+            return i;
+        }
+        u -= e;
+    }
+    3
+}
+
+/// Answer consistency: for each question, draw `n_draws` sampled answers
+/// (fixed seeds) and score 1 if all agree. Returns the mean agreement rate.
+pub fn answer_consistency(probs: &[[f64; 4]], temperature: f64, n_draws: usize, seed: u64) -> f64 {
+    let mut agree = 0usize;
+    for (qi, p) in probs.iter().enumerate() {
+        let mut rng = Xoshiro256pp::new(seed ^ (qi as u64 * 0x9E37_79B9));
+        let first = sample_answer(p, temperature, &mut rng);
+        let all_same =
+            (1..n_draws).all(|_| sample_answer(p, temperature, &mut rng) == first);
+        if all_same {
+            agree += 1;
+        }
+    }
+    agree as f64 / probs.len().max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cosine_identity_and_orthogonal() {
+        assert!((cosine(&[1.0, 0.0], &[1.0, 0.0]) - 1.0).abs() < 1e-12);
+        assert!(cosine(&[1.0, 0.0], &[0.0, 1.0]).abs() < 1e-12);
+        assert_eq!(cosine(&[0.0, 0.0], &[1.0, 0.0]), 0.0);
+    }
+
+    #[test]
+    fn similarity_perfect_match_is_one() {
+        let p = vec![[0.7, 0.1, 0.1, 0.1], [0.25, 0.25, 0.25, 0.25]];
+        assert!((answer_similarity(&p, &p) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn similarity_degrades_with_perturbation() {
+        let reference = vec![[0.9, 0.05, 0.03, 0.02]; 16];
+        let close = vec![[0.8, 0.1, 0.05, 0.05]; 16];
+        let far = vec![[0.1, 0.1, 0.1, 0.7]; 16];
+        let s_close = answer_similarity(&close, &reference);
+        let s_far = answer_similarity(&far, &reference);
+        assert!(s_close > s_far);
+    }
+
+    #[test]
+    fn consistency_peaked_vs_uniform() {
+        let peaked = vec![[0.97, 0.01, 0.01, 0.01]; 64];
+        let uniform = vec![[0.25, 0.25, 0.25, 0.25]; 64];
+        let c_peak = answer_consistency(&peaked, 0.7, 3, 1);
+        let c_unif = answer_consistency(&uniform, 0.7, 3, 1);
+        assert!(c_peak > 0.85, "peaked consistency {c_peak}");
+        assert!(c_unif < 0.4, "uniform consistency {c_unif}");
+    }
+
+    #[test]
+    fn sampling_is_seeded() {
+        let p = [0.4, 0.3, 0.2, 0.1];
+        let mut a = Xoshiro256pp::new(9);
+        let mut b = Xoshiro256pp::new(9);
+        for _ in 0..20 {
+            assert_eq!(sample_answer(&p, 0.7, &mut a), sample_answer(&p, 0.7, &mut b));
+        }
+    }
+
+    #[test]
+    fn low_temperature_sharpens() {
+        let p = [0.5, 0.3, 0.15, 0.05];
+        let mut rng = Xoshiro256pp::new(3);
+        let n = 500;
+        let cold = (0..n).filter(|_| sample_answer(&p, 0.1, &mut rng) == 0).count();
+        let hot = (0..n).filter(|_| sample_answer(&p, 3.0, &mut rng) == 0).count();
+        assert!(cold > hot);
+        assert!(cold as f64 / n as f64 > 0.9);
+    }
+}

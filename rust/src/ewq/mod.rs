@@ -1,0 +1,325 @@
+//! EWQ block selection (paper Section 3): weighted block entropy → sort →
+//! threshold T = μ − X·σ → quantization decision Q(b).
+
+pub mod ablation;
+
+use crate::entropy::{ascending_order, block_entropy, EntropyStats};
+use crate::quant::Precision;
+use crate::zoo::{ModelDir, Schema};
+
+/// EWQ configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct EwqConfig {
+    /// Threshold multiplier X in T = μ − X·σ (paper default 1.0).
+    pub x: f64,
+    /// Stability ε in the entropy formula.
+    pub eps: f64,
+    /// Precision for blocks below T (paper: 4-bit or 1.58-bit).
+    pub aggressive: Precision,
+    /// Precision for T < H ≤ μ (paper: 8-bit).
+    pub moderate: Precision,
+}
+
+impl Default for EwqConfig {
+    fn default() -> Self {
+        Self { x: 1.0, eps: 1e-12, aggressive: Precision::Q4, moderate: Precision::Q8 }
+    }
+}
+
+impl EwqConfig {
+    /// §3.4 edge mode: 4-bit for critical blocks, 3-bit for the rest.
+    pub fn edge() -> Self {
+        Self { aggressive: Precision::Q3, moderate: Precision::Q4, ..Self::default() }
+    }
+
+    /// "8bit mixed": a single threshold at μ — everything below mean goes 8-bit.
+    pub fn mixed8() -> Self {
+        // aggressive==moderate collapses the two bands into one
+        Self { aggressive: Precision::Q8, moderate: Precision::Q8, ..Self::default() }
+    }
+}
+
+/// Per-block analysis record.
+#[derive(Clone, Debug)]
+pub struct BlockAnalysis {
+    /// Zero-based block index.
+    pub block: usize,
+    /// Paper's exec_index convention (starts at 2; 1 = token embedding).
+    pub exec_index: usize,
+    pub entropy: f64,
+    pub params: usize,
+}
+
+/// Whole-model entropy analysis.
+#[derive(Clone, Debug)]
+pub struct ModelAnalysis {
+    pub model: String,
+    pub blocks: Vec<BlockAnalysis>,
+    pub stats: EntropyStats,
+}
+
+impl ModelAnalysis {
+    /// Block indices sorted ascending by entropy (quantization priority).
+    pub fn ascending(&self) -> Vec<usize> {
+        ascending_order(&self.blocks.iter().map(|b| b.entropy).collect::<Vec<_>>())
+    }
+}
+
+/// Analyze per-block weighted entropies from raw matrices.
+/// `mats_of` returns the quantizable matrices of block i.
+pub fn analyze_blocks<'a, F>(
+    model: &str,
+    n_blocks: usize,
+    schema: &Schema,
+    eps: f64,
+    mut mats_of: F,
+) -> ModelAnalysis
+where
+    F: FnMut(usize) -> Vec<&'a [f32]>,
+{
+    let blocks: Vec<BlockAnalysis> = (0..n_blocks)
+        .map(|i| {
+            let mats = mats_of(i);
+            BlockAnalysis {
+                block: i,
+                exec_index: schema.exec_index(i),
+                entropy: block_entropy(mats.iter().copied(), eps),
+                params: schema.block_params(),
+            }
+        })
+        .collect();
+    let hs: Vec<f64> = blocks.iter().map(|b| b.entropy).collect();
+    ModelAnalysis { model: model.to_string(), blocks, stats: EntropyStats::from_values(&hs) }
+}
+
+/// Full EWQ analysis of a loaded flagship model (O(n) in parameters — this is
+/// the scan FastEWQ's O(1) classifier replaces).
+pub fn analyze_model(model: &ModelDir, cfg: &EwqConfig) -> ModelAnalysis {
+    let weights = &model.weights;
+    analyze_blocks(
+        &model.schema.name,
+        model.schema.n_blocks,
+        &model.schema,
+        cfg.eps,
+        |i| weights.blocks[i].mat_slices(),
+    )
+}
+
+/// A per-block precision assignment.
+#[derive(Clone, Debug, PartialEq)]
+pub struct QuantPlan {
+    pub model: String,
+    pub assignments: Vec<Precision>,
+    /// Blocks in ascending-entropy order (quantization priority order).
+    pub priority: Vec<usize>,
+}
+
+impl QuantPlan {
+    pub fn uniform(model: &str, n: usize, p: Precision) -> Self {
+        Self { model: model.into(), assignments: vec![p; n], priority: (0..n).collect() }
+    }
+
+    pub fn counts(&self) -> (usize, usize, usize, usize, usize) {
+        let c = |p: Precision| self.assignments.iter().filter(|&&a| a == p).count();
+        (c(Precision::Raw), c(Precision::Q8), c(Precision::Q4), c(Precision::Q3), c(Precision::T2))
+    }
+
+    /// Total bytes of all blocks under this plan.
+    pub fn blocks_bytes(&self, schema: &Schema) -> usize {
+        self.assignments
+            .iter()
+            .map(|&p| {
+                let mats: usize =
+                    schema.mat_shapes().iter().map(|&(k, n)| p.matrix_bytes(k, n)).sum();
+                mats + 4 * 2 * schema.d_model // norms always fp32
+            })
+            .sum()
+    }
+
+    /// Total model bytes (blocks + fp32 embedding/pos/head/final-norm).
+    pub fn total_bytes(&self, schema: &Schema) -> usize {
+        self.blocks_bytes(schema) + (schema.total_raw_bytes() - schema.blocks_raw_bytes())
+    }
+
+    pub fn summary(&self) -> String {
+        let (r, q8, q4, q3, t2) = self.counts();
+        let mut s = format!("{}: raw/8bit/4bit = {}/{}/{}", self.model, r, q8, q4);
+        if q3 + t2 > 0 {
+            s.push_str(&format!(" (3bit={q3}, 1.58bit={t2})"));
+        }
+        s
+    }
+}
+
+/// The §3.3.4 quantization decision:
+/// H ≤ T → aggressive; T < H ≤ μ → moderate; H > μ → raw.
+pub fn decide(analysis: &ModelAnalysis, cfg: &EwqConfig) -> QuantPlan {
+    let t = analysis.stats.threshold(cfg.x);
+    let mu = analysis.stats.mean;
+    let assignments = analysis
+        .blocks
+        .iter()
+        .map(|b| {
+            if b.entropy <= t {
+                cfg.aggressive
+            } else if b.entropy <= mu {
+                cfg.moderate
+            } else {
+                Precision::Raw
+            }
+        })
+        .collect();
+    QuantPlan { model: analysis.model.clone(), assignments, priority: analysis.ascending() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proptest_lite::check;
+    use crate::rng::Xoshiro256pp;
+
+    fn test_schema(n_blocks: usize) -> Schema {
+        Schema {
+            name: "t".into(),
+            n_blocks,
+            d_model: 16,
+            n_heads: 2,
+            d_ff: 32,
+            vocab: 64,
+            seq_len: 8,
+            eval_batch: 2,
+        }
+    }
+
+    fn analysis_with_entropies(hs: &[f64]) -> ModelAnalysis {
+        let schema = test_schema(hs.len());
+        let blocks = hs
+            .iter()
+            .enumerate()
+            .map(|(i, &h)| BlockAnalysis {
+                block: i,
+                exec_index: schema.exec_index(i),
+                entropy: h,
+                params: schema.block_params(),
+            })
+            .collect::<Vec<_>>();
+        ModelAnalysis {
+            model: "t".into(),
+            stats: crate::entropy::EntropyStats::from_values(hs),
+            blocks,
+        }
+    }
+
+    #[test]
+    fn decision_bands() {
+        // entropies: mean = 5, std = sqrt(10/3)... use explicit values
+        let a = analysis_with_entropies(&[1.0, 4.9, 5.0, 9.0, 10.0]);
+        let cfg = EwqConfig::default();
+        let t = a.stats.threshold(1.0);
+        let plan = decide(&a, &cfg);
+        for (b, &p) in a.blocks.iter().zip(&plan.assignments) {
+            if b.entropy <= t {
+                assert_eq!(p, Precision::Q4);
+            } else if b.entropy <= a.stats.mean {
+                assert_eq!(p, Precision::Q8);
+            } else {
+                assert_eq!(p, Precision::Raw);
+            }
+        }
+    }
+
+    #[test]
+    fn x_zero_means_no_aggressive_band_below_mean_only() {
+        // X=0 -> T = mean: everything below mean is aggressive
+        let a = analysis_with_entropies(&[1.0, 2.0, 3.0, 10.0]);
+        let cfg = EwqConfig { x: 0.0, ..Default::default() };
+        let plan = decide(&a, &cfg);
+        let (raw, q8, q4, ..) = plan.counts();
+        assert_eq!(q8, 0, "T == mean leaves an empty moderate band");
+        assert!(q4 >= 1 && raw >= 1);
+    }
+
+    #[test]
+    fn larger_x_quantizes_fewer_blocks_aggressively() {
+        let mut r = Xoshiro256pp::new(1);
+        let hs: Vec<f64> = (0..32).map(|_| r.uniform(3.0, 9.0)).collect();
+        let a = analysis_with_entropies(&hs);
+        let count_q4 = |x: f64| {
+            let plan = decide(&a, &EwqConfig { x, ..Default::default() });
+            plan.counts().2
+        };
+        assert!(count_q4(0.0) >= count_q4(1.0));
+        assert!(count_q4(1.0) >= count_q4(2.5));
+    }
+
+    #[test]
+    fn plan_sizes_shrink_with_quantization() {
+        let schema = test_schema(4);
+        let raw = QuantPlan::uniform("t", 4, Precision::Raw);
+        let q8 = QuantPlan::uniform("t", 4, Precision::Q8);
+        let q4 = QuantPlan::uniform("t", 4, Precision::Q4);
+        assert!(raw.blocks_bytes(&schema) > q8.blocks_bytes(&schema));
+        assert!(q8.blocks_bytes(&schema) > q4.blocks_bytes(&schema));
+        assert_eq!(raw.blocks_bytes(&schema), schema.blocks_raw_bytes());
+        assert_eq!(raw.total_bytes(&schema), schema.total_raw_bytes());
+    }
+
+    #[test]
+    fn priority_is_ascending_entropy() {
+        let a = analysis_with_entropies(&[5.0, 1.0, 3.0]);
+        let plan = decide(&a, &EwqConfig::default());
+        assert_eq!(plan.priority, vec![1, 2, 0]);
+    }
+
+    #[test]
+    fn property_every_block_gets_assignment_and_bands_are_monotone() {
+        check(
+            42,
+            60,
+            64,
+            |g| {
+                let n = g.usize_in(2, g.size.max(3));
+                g.vec_f64(n, 0.0, 12.0)
+            },
+            |hs| {
+                let a = analysis_with_entropies(hs);
+                let plan = decide(&a, &EwqConfig::default());
+                if plan.assignments.len() != hs.len() {
+                    return Err("missing assignment".into());
+                }
+                // monotonicity: if H_i <= H_j then precision_i <= precision_j
+                for i in 0..hs.len() {
+                    for j in 0..hs.len() {
+                        if hs[i] <= hs[j] && plan.assignments[i] > plan.assignments[j] {
+                            return Err(format!(
+                                "non-monotone: H{i}={} -> {:?}, H{j}={} -> {:?}",
+                                hs[i], plan.assignments[i], hs[j], plan.assignments[j]
+                            ));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn analyze_blocks_on_generated_weights() {
+        use crate::zoo::gen::{gen_block_mats, synthetic_archs};
+        let arch = &synthetic_archs(1, 9)[0];
+        let mats: Vec<Vec<crate::tensor::Tensor>> =
+            (0..arch.schema.n_blocks).map(|b| gen_block_mats(arch, b)).collect();
+        let analysis = analyze_blocks(
+            &arch.schema.name,
+            arch.schema.n_blocks,
+            &arch.schema,
+            1e-12,
+            |i| mats[i].iter().map(|t| t.data.as_slice()).collect(),
+        );
+        assert_eq!(analysis.blocks.len(), arch.schema.n_blocks);
+        assert!(analysis.stats.std > 0.0, "entropy profile should vary");
+        let plan = decide(&analysis, &EwqConfig::default());
+        let (raw, ..) = plan.counts();
+        assert!(raw >= 1, "some blocks must stay raw");
+    }
+}

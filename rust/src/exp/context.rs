@@ -1,0 +1,246 @@
+//! Shared experiment context: artifacts, flagship models, the FastEWQ
+//! dataset + classifiers, and a persistent cache of per-(model, variant)
+//! evaluation results so tables 6/7/10/13/14 and fig. 7 don't re-run the
+//! expensive MMLU sweep.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use anyhow::{Context as _, Result};
+
+use crate::eval::{build_questions, evaluate, FactTable, Question};
+use crate::ewq::EwqConfig;
+use crate::fastewq::{load_or_build_dataset, DatasetRow, FastEwq};
+use crate::model::{ModelExecutor, QuantizedModel};
+use crate::runtime::Runtime;
+use crate::zoo::{load_flagships, ModelDir};
+
+use super::variants::{plan_for, Variant};
+
+pub const DATASET_ROWS: usize = 700;
+pub const DATASET_SEED: u64 = 2025;
+pub const QUESTION_SEED: u64 = 4242;
+
+/// Cached evaluation record for one (model, variant).
+#[derive(Clone, Debug)]
+pub struct VariantResult {
+    pub model: String,
+    pub variant: Variant,
+    pub accuracy: f64,
+    pub perplexity: f64,
+    pub blocks_bytes: usize,
+    pub total_bytes: usize,
+    pub n_raw: usize,
+    pub n_q8: usize,
+    pub n_q4: usize,
+}
+
+impl VariantResult {
+    pub fn blocks_mb(&self) -> f64 {
+        self.blocks_bytes as f64 / 1e6
+    }
+
+    pub fn total_mb(&self) -> f64 {
+        self.total_bytes as f64 / 1e6
+    }
+}
+
+pub struct ExpContext {
+    pub artifacts: PathBuf,
+    pub flagships: Vec<ModelDir>,
+    pub facts: FactTable,
+    pub per_subject: usize,
+    dataset: Option<Vec<DatasetRow>>,
+    /// Lazily initialized via [`Self::fast_full`] / [`Self::fast_train`] /
+    /// [`Self::runtime`]; public so benches/examples can borrow immutably
+    /// after initialization.
+    pub fast_full: Option<FastEwq>,
+    pub fast_train: Option<FastEwq>,
+    pub runtime: Option<Runtime>,
+    eval_cache: BTreeMap<(String, Variant), VariantResult>,
+}
+
+impl ExpContext {
+    pub fn new(per_subject: usize) -> Result<Self> {
+        let artifacts = crate::artifacts_dir();
+        let flagships = load_flagships(&artifacts)
+            .context("load flagship models — run `make artifacts` first")?;
+        let facts = FactTable::load(&artifacts.join("corpus/facts.txt"))?;
+        let mut ctx = Self {
+            artifacts,
+            flagships,
+            facts,
+            per_subject,
+            dataset: None,
+            fast_full: None,
+            fast_train: None,
+            runtime: None,
+            eval_cache: BTreeMap::new(),
+        };
+        ctx.load_eval_cache()?;
+        Ok(ctx)
+    }
+
+    pub fn flagship(&self, name: &str) -> Result<&ModelDir> {
+        self.flagships
+            .iter()
+            .find(|m| m.schema.name == name)
+            .with_context(|| format!("unknown flagship {name}"))
+    }
+
+    pub fn runtime(&mut self) -> Result<&Runtime> {
+        if self.runtime.is_none() {
+            self.runtime = Some(Runtime::cpu()?);
+        }
+        Ok(self.runtime.as_ref().unwrap())
+    }
+
+    pub fn questions(&self) -> Vec<Question> {
+        build_questions(&self.facts, self.per_subject, QUESTION_SEED)
+    }
+
+    /// The 700-row FastEWQ dataset (cached on disk).
+    pub fn dataset(&mut self) -> Result<&[DatasetRow]> {
+        if self.dataset.is_none() {
+            let flagships: Vec<&ModelDir> = self.flagships.iter().collect();
+            self.dataset = Some(load_or_build_dataset(
+                &self.artifacts,
+                DATASET_ROWS,
+                DATASET_SEED,
+                &flagships,
+                &EwqConfig::default(),
+            )?);
+        }
+        Ok(self.dataset.as_ref().unwrap())
+    }
+
+    /// FastEWQ classifier trained on 100% of the dataset ("fast": the
+    /// paper's overfitted centralized variant, 99% train accuracy).
+    pub fn fast_full(&mut self) -> Result<&FastEwq> {
+        if self.fast_full.is_none() {
+            let rows = self.dataset()?.to_vec();
+            self.fast_full = Some(FastEwq::train(&rows, 200, 16, 11));
+        }
+        Ok(self.fast_full.as_ref().unwrap())
+    }
+
+    /// FastEWQ classifier trained on a 70% split ("fast train").
+    pub fn fast_train(&mut self) -> Result<&FastEwq> {
+        if self.fast_train.is_none() {
+            let rows = self.dataset()?.to_vec();
+            let (x, y) = crate::fastewq::rows_to_xy(&rows);
+            let (xtr, ytr, _, _) = crate::ml::train_test_split(&x, &y, 0.3, 42);
+            // rebuild rows from split indices is awkward; train directly
+            let (scaler, xs) = crate::ml::StandardScaler::fit_transform(&xtr);
+            let mut forest = crate::ml::RandomForest::new(120, 8, 1);
+            use crate::ml::Classifier;
+            forest.fit(&xs, &ytr);
+            self.fast_train = Some(FastEwq { scaler, forest });
+        }
+        Ok(self.fast_train.as_ref().unwrap())
+    }
+
+    // ---- eval cache ----------------------------------------------------------
+    fn cache_path(&self) -> PathBuf {
+        self.artifacts.join(format!("eval_cache_ps{}.csv", self.per_subject))
+    }
+
+    fn load_eval_cache(&mut self) -> Result<()> {
+        let p = self.cache_path();
+        if !p.exists() {
+            return Ok(());
+        }
+        for line in std::fs::read_to_string(&p)?.lines().skip(1) {
+            let f: Vec<&str> = line.split(';').collect();
+            if f.len() != 9 {
+                continue;
+            }
+            let Some(variant) = Variant::from_label(f[1]) else { continue };
+            let r = VariantResult {
+                model: f[0].to_string(),
+                variant,
+                accuracy: f[2].parse()?,
+                perplexity: f[3].parse()?,
+                blocks_bytes: f[4].parse()?,
+                total_bytes: f[5].parse()?,
+                n_raw: f[6].parse()?,
+                n_q8: f[7].parse()?,
+                n_q4: f[8].parse()?,
+            };
+            self.eval_cache.insert((r.model.clone(), variant), r);
+        }
+        Ok(())
+    }
+
+    fn save_eval_cache(&self) -> Result<()> {
+        let mut s = String::from(
+            "model;variant;accuracy;perplexity;blocks_bytes;total_bytes;n_raw;n_q8;n_q4\n",
+        );
+        for r in self.eval_cache.values() {
+            s.push_str(&format!(
+                "{};{};{:.6};{:.6};{};{};{};{};{}\n",
+                r.model,
+                r.variant.label(),
+                r.accuracy,
+                r.perplexity,
+                r.blocks_bytes,
+                r.total_bytes,
+                r.n_raw,
+                r.n_q8,
+                r.n_q4
+            ));
+        }
+        std::fs::write(self.cache_path(), s)?;
+        Ok(())
+    }
+
+    /// Evaluate (or fetch cached) one model × variant.
+    pub fn eval_variant(&mut self, model_name: &str, variant: Variant) -> Result<VariantResult> {
+        let key = (model_name.to_string(), variant);
+        if let Some(r) = self.eval_cache.get(&key) {
+            return Ok(r.clone());
+        }
+        // prerequisites first (mutable borrows)
+        self.fast_full()?;
+        self.fast_train()?;
+        self.runtime()?;
+        let questions = self.questions();
+
+        let model = self.flagships.iter().find(|m| m.schema.name == model_name).unwrap();
+        let plan =
+            plan_for(variant, model, self.fast_full.as_ref().unwrap(), self.fast_train.as_ref().unwrap())?;
+        let qm = QuantizedModel::build(model, &plan)?;
+        let rt = self.runtime.as_ref().unwrap();
+        let ex = ModelExecutor::new(rt, model);
+        eprintln!("  evaluating {model_name} / {} ...", variant.label());
+        let e = evaluate(&ex, &qm, &questions)?;
+        let (n_raw, n_q8, n_q4, _, _) = plan.counts();
+        let r = VariantResult {
+            model: model_name.to_string(),
+            variant,
+            accuracy: e.accuracy,
+            perplexity: e.perplexity,
+            blocks_bytes: plan.blocks_bytes(&model.schema),
+            total_bytes: plan.total_bytes(&model.schema),
+            n_raw,
+            n_q8,
+            n_q4,
+        };
+        self.eval_cache.insert(key, r.clone());
+        self.save_eval_cache()?;
+        Ok(r)
+    }
+
+    /// All nine variants for all four flagships (Tables 6/7/14 backbone).
+    pub fn eval_all(&mut self) -> Result<Vec<VariantResult>> {
+        let names: Vec<String> =
+            self.flagships.iter().map(|m| m.schema.name.clone()).collect();
+        let mut out = Vec::new();
+        for name in names {
+            for v in Variant::ALL {
+                out.push(self.eval_variant(&name, v)?);
+            }
+        }
+        Ok(out)
+    }
+}

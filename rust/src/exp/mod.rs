@@ -1,0 +1,84 @@
+//! Experiment drivers: one entry per paper table/figure (`ewq exp <id>`).
+//! Each driver renders its artifact to stdout AND persists it under
+//! `artifacts/reports/<id>.txt` so EXPERIMENTS.md can reference stable runs.
+
+pub mod context;
+pub mod dataset_figs;
+pub mod model_tables;
+pub mod variants;
+
+use anyhow::{bail, Result};
+
+pub use context::ExpContext;
+pub use variants::Variant;
+
+/// Every regenerable experiment id, in paper order.
+pub const ALL_IDS: [&str; 20] = [
+    "fig1", "table1", "fig2", "fig3", "fig4", "table2", "fig5", "table3", "table4", "table5",
+    "fig6", "table6", "table7", "table8", "table9", "table10", "fig7", "table13", "table14",
+    "alg1",
+];
+
+/// Run one experiment (or `all`). Returns the rendered report.
+pub fn run(id: &str, ctx: &mut ExpContext) -> Result<String> {
+    let out = match id {
+        "fig1" => model_tables::fig1(ctx)?,
+        "table1" => model_tables::table1(ctx)?,
+        "fig2" => dataset_figs::fig2(ctx)?,
+        "fig3" => dataset_figs::fig3(ctx)?,
+        "fig4" => dataset_figs::fig4(ctx)?,
+        "table2" => dataset_figs::table2(ctx)?,
+        "fig5" => dataset_figs::fig5(ctx)?,
+        "table3" => dataset_figs::table3(ctx)?,
+        "table4" => dataset_figs::table4()?,
+        "table5" => dataset_figs::table5(ctx)?,
+        "fig6" => dataset_figs::fig6(ctx)?,
+        "table6" => model_tables::table6(ctx)?,
+        "table7" => model_tables::table7(ctx)?,
+        "table8" => model_tables::table8(ctx)?,
+        "table9" => model_tables::table9(ctx)?,
+        "table10" => model_tables::table10(ctx)?,
+        "fig7" => model_tables::fig7(ctx)?,
+        "table13" => model_tables::table13(ctx)?,
+        "table14" => model_tables::table14(ctx)?,
+        "alg1" => model_tables::alg1(ctx)?,
+        other => bail!("unknown experiment id {other:?}; known: {ALL_IDS:?} or `all`"),
+    };
+    persist(ctx, id, &out)?;
+    Ok(out)
+}
+
+pub fn run_all(ctx: &mut ExpContext) -> Result<String> {
+    let mut full = String::new();
+    for id in ALL_IDS {
+        eprintln!("== running {id} ==");
+        let out = run(id, ctx)?;
+        full.push_str(&format!("\n################ {id} ################\n"));
+        full.push_str(&out);
+    }
+    Ok(full)
+}
+
+fn persist(ctx: &ExpContext, id: &str, out: &str) -> Result<()> {
+    // quick runs (tiny question budgets, e.g. the test suite) must not
+    // clobber the canonical full-budget reports
+    let dir = if ctx.per_subject >= 4 {
+        ctx.artifacts.join("reports")
+    } else {
+        ctx.artifacts.join("reports/quick")
+    };
+    std::fs::create_dir_all(&dir)?;
+    std::fs::write(dir.join(format!("{id}.txt")), out)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn all_ids_unique() {
+        let mut ids = super::ALL_IDS.to_vec();
+        ids.sort();
+        ids.dedup();
+        assert_eq!(ids.len(), super::ALL_IDS.len());
+    }
+}

@@ -1,0 +1,175 @@
+//! The nine evaluation variants of Tables 6/7/14 and how each builds its
+//! `QuantPlan`.
+
+use anyhow::Result;
+
+use crate::ewq::{analyze_model, decide, EwqConfig, QuantPlan};
+use crate::fastewq::FastEwq;
+use crate::quant::Precision;
+use crate::zoo::ModelDir;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Variant {
+    Raw,
+    Uniform4,
+    Uniform8,
+    Mixed8,
+    Mixed48,
+    Fast8,
+    Fast48,
+    FastTrain8,
+    FastTrain48,
+}
+
+impl Variant {
+    pub const ALL: [Variant; 9] = [
+        Variant::Raw,
+        Variant::Uniform4,
+        Variant::Uniform8,
+        Variant::Mixed8,
+        Variant::Mixed48,
+        Variant::Fast8,
+        Variant::Fast48,
+        Variant::FastTrain8,
+        Variant::FastTrain48,
+    ];
+
+    /// Paper row labels.
+    pub fn label(self) -> &'static str {
+        match self {
+            Variant::Raw => "raw",
+            Variant::Uniform4 => "4bit",
+            Variant::Uniform8 => "8bit",
+            Variant::Mixed8 => "8bit mixed",
+            Variant::Mixed48 => "4bit/8bit mixed",
+            Variant::Fast8 => "fast 8bit mixed",
+            Variant::Fast48 => "fast 4bit/8bit mixed",
+            Variant::FastTrain8 => "fast train 8bit mixed",
+            Variant::FastTrain48 => "fast train 4bit/8bit mixed",
+        }
+    }
+
+    pub fn from_label(s: &str) -> Option<Self> {
+        Variant::ALL.into_iter().find(|v| v.label() == s)
+    }
+
+    /// Analysis complexity column of Table 14.
+    pub fn complexity(self) -> &'static str {
+        match self {
+            Variant::Raw => "-",
+            Variant::Uniform4 | Variant::Uniform8 => "O(1)",
+            Variant::Mixed8 | Variant::Mixed48 => "O(n)",
+            _ => "O(1)",
+        }
+    }
+
+    pub fn is_fast(self) -> bool {
+        matches!(
+            self,
+            Variant::Fast8 | Variant::Fast48 | Variant::FastTrain8 | Variant::FastTrain48
+        )
+    }
+}
+
+/// FastEWQ mixed plan from a selection mask: selected blocks get 8-bit; in
+/// the 4/8 variant the selected blocks with the HIGHEST exec_index drop to
+/// 4-bit (the paper's "maximal compression for final transformer blocks",
+/// §6.3 — their Table 8 shows exactly the tail block at 4-bit).
+pub fn fast_plan(model: &str, selected: &[bool], four_bit_tail: bool) -> QuantPlan {
+    let n = selected.len();
+    let mut assignments: Vec<Precision> = selected
+        .iter()
+        .map(|&q| if q { Precision::Q8 } else { Precision::Raw })
+        .collect();
+    if four_bit_tail {
+        let n_sel = selected.iter().filter(|&&q| q).count();
+        let n_q4 = (n_sel / 12).max(1);
+        let mut demoted = 0;
+        for b in (0..n).rev() {
+            if selected[b] {
+                assignments[b] = Precision::Q4;
+                demoted += 1;
+                if demoted >= n_q4 {
+                    break;
+                }
+            }
+        }
+    }
+    QuantPlan { model: model.into(), assignments, priority: (0..n).rev().collect() }
+}
+
+/// Build the plan for a variant. `fast_full`/`fast_train` are the FastEWQ
+/// classifiers trained on 100% / 70% of the dataset.
+pub fn plan_for(
+    variant: Variant,
+    model: &ModelDir,
+    fast_full: &FastEwq,
+    fast_train: &FastEwq,
+) -> Result<QuantPlan> {
+    let n = model.schema.n_blocks;
+    let name = &model.schema.name;
+    Ok(match variant {
+        Variant::Raw => QuantPlan::uniform(name, n, Precision::Raw),
+        Variant::Uniform4 => QuantPlan::uniform(name, n, Precision::Q4),
+        Variant::Uniform8 => QuantPlan::uniform(name, n, Precision::Q8),
+        Variant::Mixed8 => {
+            let a = analyze_model(model, &EwqConfig::mixed8());
+            decide(&a, &EwqConfig::mixed8())
+        }
+        Variant::Mixed48 => {
+            let a = analyze_model(model, &EwqConfig::default());
+            decide(&a, &EwqConfig::default())
+        }
+        Variant::Fast8 => fast_plan(name, &fast_full.classify_model(&model.schema), false),
+        Variant::Fast48 => fast_plan(name, &fast_full.classify_model(&model.schema), true),
+        Variant::FastTrain8 => {
+            fast_plan(name, &fast_train.classify_model(&model.schema), false)
+        }
+        Variant::FastTrain48 => {
+            fast_plan(name, &fast_train.classify_model(&model.schema), true)
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn labels_roundtrip() {
+        for v in Variant::ALL {
+            assert_eq!(Variant::from_label(v.label()), Some(v));
+        }
+        assert_eq!(Variant::from_label("nope"), None);
+    }
+
+    #[test]
+    fn fast_plan_shapes() {
+        let sel = vec![true, false, true, true, false, true];
+        let p8 = fast_plan("m", &sel, false);
+        assert_eq!(p8.counts().0, 2); // raw = unselected
+        assert_eq!(p8.counts().1, 4); // q8 = selected
+        let p48 = fast_plan("m", &sel, true);
+        let (raw, q8, q4, ..) = p48.counts();
+        assert_eq!(raw, 2);
+        assert_eq!(q4, 1, "one tail block at 4-bit");
+        assert_eq!(q8, 3);
+        // the 4-bit block is the selected block with the highest index
+        assert_eq!(p48.assignments[5], Precision::Q4);
+    }
+
+    #[test]
+    fn fast_plan_scales_q4_count() {
+        let sel = vec![true; 26];
+        let p = fast_plan("m", &sel, true);
+        assert_eq!(p.counts().2, 2); // 26/12 = 2 tail blocks
+    }
+
+    #[test]
+    fn complexity_labels() {
+        assert_eq!(Variant::Mixed48.complexity(), "O(n)");
+        assert_eq!(Variant::Fast48.complexity(), "O(1)");
+        assert!(Variant::Fast8.is_fast());
+        assert!(!Variant::Mixed8.is_fast());
+    }
+}

@@ -1,0 +1,306 @@
+//! FastEWQ (paper Section 4): an O(1) classifier that predicts a block's
+//! quantization suitability from schema metadata alone — `num_parameters`,
+//! `exec_index`, `num_blocks` — eliminating the O(n) weight scan.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::ewq::{analyze_blocks, decide, EwqConfig};
+use crate::ml::{Classifier, RandomForest, StandardScaler};
+use crate::quant::Precision;
+use crate::zoo::gen::{gen_block_mats, synthetic_archs};
+use crate::zoo::{ModelDir, Schema};
+
+/// Feature order used everywhere (paper Fig. 5): num_parameters, exec_index,
+/// num_blocks.
+pub const FEATURES: [&str; 3] = ["num_parameters", "exec_index", "num_blocks"];
+
+/// One row of the model dataset (paper Table 2).
+#[derive(Clone, Debug, PartialEq)]
+pub struct DatasetRow {
+    pub model_name: String,
+    pub num_blocks: usize,
+    pub exec_index: usize,
+    pub num_parameters: usize,
+    pub quantization_type: Precision,
+    pub quantized: bool,
+}
+
+impl DatasetRow {
+    pub fn features(&self) -> Vec<f64> {
+        vec![self.num_parameters as f64, self.exec_index as f64, self.num_blocks as f64]
+    }
+
+    pub fn label(&self) -> u8 {
+        u8::from(self.quantized)
+    }
+}
+
+/// Convert rows to (X, y).
+pub fn rows_to_xy(rows: &[DatasetRow]) -> (Vec<Vec<f64>>, Vec<u8>) {
+    (rows.iter().map(|r| r.features()).collect(), rows.iter().map(|r| r.label()).collect())
+}
+
+/// Build the FastEWQ training dataset by running the FULL EWQ analysis over
+/// synthetic zoo architectures (and optionally the trained flagships),
+/// labelling every block with its decision — the offline stand-in for the
+/// paper's 700-row HF survey.
+pub fn build_dataset(
+    target_rows: usize,
+    seed: u64,
+    flagships: &[&ModelDir],
+    cfg: &EwqConfig,
+) -> Vec<DatasetRow> {
+    let mut rows = Vec::with_capacity(target_rows + 64);
+
+    for m in flagships {
+        let analysis = crate::ewq::analyze_model(m, cfg);
+        let plan = decide(&analysis, cfg);
+        for (b, &p) in analysis.blocks.iter().zip(&plan.assignments) {
+            rows.push(DatasetRow {
+                model_name: m.schema.name.clone(),
+                num_blocks: m.schema.n_blocks,
+                exec_index: b.exec_index,
+                num_parameters: b.params,
+                quantization_type: p,
+                quantized: p != Precision::Raw,
+            });
+        }
+    }
+
+    // synthetic sweep until we reach the target
+    let archs = synthetic_archs(64, seed);
+    for arch in &archs {
+        if rows.len() >= target_rows {
+            break;
+        }
+        let mats: Vec<Vec<crate::tensor::Tensor>> =
+            (0..arch.schema.n_blocks).map(|b| gen_block_mats(arch, b)).collect();
+        let analysis =
+            analyze_blocks(&arch.schema.name, arch.schema.n_blocks, &arch.schema, cfg.eps, |i| {
+                mats[i].iter().map(|t| t.data.as_slice()).collect()
+            });
+        let plan = decide(&analysis, cfg);
+        for (b, &p) in analysis.blocks.iter().zip(&plan.assignments) {
+            rows.push(DatasetRow {
+                model_name: arch.schema.name.clone(),
+                num_blocks: arch.schema.n_blocks,
+                exec_index: b.exec_index,
+                num_parameters: b.params,
+                quantization_type: p,
+                quantized: p != Precision::Raw,
+            });
+        }
+    }
+    rows.truncate(target_rows);
+    rows
+}
+
+// ---- CSV cache (also feeds Figs. 2–4) ------------------------------------------
+pub fn rows_to_csv(rows: &[DatasetRow]) -> String {
+    let mut s =
+        String::from("model_name,num_blocks,exec_index,num_parameters,quantization_type,quantized\n");
+    for r in rows {
+        s.push_str(&format!(
+            "{},{},{},{},{},{}\n",
+            r.model_name,
+            r.num_blocks,
+            r.exec_index,
+            r.num_parameters,
+            r.quantization_type.label(),
+            r.quantized as u8
+        ));
+    }
+    s
+}
+
+pub fn rows_from_csv(text: &str) -> Result<Vec<DatasetRow>> {
+    let mut rows = Vec::new();
+    for (i, line) in text.lines().enumerate().skip(1) {
+        let f: Vec<&str> = line.split(',').collect();
+        if f.len() != 6 {
+            anyhow::bail!("line {i}: expected 6 fields");
+        }
+        let prec = match f[4] {
+            "raw" => Precision::Raw,
+            "8bit" => Precision::Q8,
+            "4bit" => Precision::Q4,
+            "3bit" => Precision::Q3,
+            "1.58bit" => Precision::T2,
+            other => anyhow::bail!("line {i}: bad precision {other}"),
+        };
+        rows.push(DatasetRow {
+            model_name: f[0].to_string(),
+            num_blocks: f[1].parse()?,
+            exec_index: f[2].parse()?,
+            num_parameters: f[3].parse()?,
+            quantization_type: prec,
+            quantized: f[5].trim() == "1",
+        });
+    }
+    Ok(rows)
+}
+
+/// Load the dataset from the artifacts cache or build + cache it.
+pub fn load_or_build_dataset(
+    artifacts: &Path,
+    target_rows: usize,
+    seed: u64,
+    flagships: &[&ModelDir],
+    cfg: &EwqConfig,
+) -> Result<Vec<DatasetRow>> {
+    let cache = artifacts.join("fastewq_dataset.csv");
+    if cache.exists() {
+        let rows = rows_from_csv(&std::fs::read_to_string(&cache)?)?;
+        if rows.len() == target_rows {
+            return Ok(rows);
+        }
+    }
+    let rows = build_dataset(target_rows, seed, flagships, cfg);
+    std::fs::write(&cache, rows_to_csv(&rows))?;
+    Ok(rows)
+}
+
+/// The trained FastEWQ classifier: StandardScaler + random forest.
+#[derive(Clone, Debug)]
+pub struct FastEwq {
+    pub scaler: StandardScaler,
+    pub forest: RandomForest,
+}
+
+impl FastEwq {
+    /// Train on rows (paper: random forest, 80% accuracy on a 70:30 split;
+    /// or "overfitted" on 100% of the data for the centralized variant).
+    pub fn train(rows: &[DatasetRow], n_trees: usize, max_depth: usize, seed: u64) -> Self {
+        let (x, y) = rows_to_xy(rows);
+        let (scaler, xs) = StandardScaler::fit_transform(&x);
+        let mut forest = RandomForest::new(n_trees, max_depth, seed);
+        forest.fit(&xs, &y);
+        Self { scaler, forest }
+    }
+
+    /// O(1) per-block decision from schema metadata only.
+    pub fn classify_block(&self, schema: &Schema, block: usize) -> bool {
+        let row = vec![
+            schema.block_params() as f64,
+            schema.exec_index(block) as f64,
+            schema.n_blocks as f64,
+        ];
+        self.forest.predict(&self.scaler.transform_row(&row)) == 1
+    }
+
+    /// Whole-model selection mask.
+    pub fn classify_model(&self, schema: &Schema) -> Vec<bool> {
+        (0..schema.n_blocks).map(|b| self.classify_block(schema, b)).collect()
+    }
+
+    // ---- persistence: scaler header + forest body -------------------------------
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut s = String::from("FASTEWQ1\n");
+        s.push_str(&format!(
+            "mean {}\n",
+            self.scaler.mean.iter().map(|v| format!("{v:.17}")).collect::<Vec<_>>().join(" ")
+        ));
+        s.push_str(&format!(
+            "std {}\n",
+            self.scaler.std.iter().map(|v| format!("{v:.17}")).collect::<Vec<_>>().join(" ")
+        ));
+        s.push_str(&self.forest.serialize());
+        std::fs::write(path, s)?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        let mut lines = text.splitn(4, '\n');
+        if lines.next() != Some("FASTEWQ1") {
+            anyhow::bail!("bad FastEWQ magic");
+        }
+        let parse_vec = |line: &str, tag: &str| -> Result<Vec<f64>> {
+            line.strip_prefix(tag)
+                .with_context(|| format!("missing {tag}"))?
+                .split_whitespace()
+                .map(|v| Ok(v.parse()?))
+                .collect()
+        };
+        let mean = parse_vec(lines.next().context("missing mean")?, "mean ")?;
+        let std = parse_vec(lines.next().context("missing std")?, "std ")?;
+        let forest = RandomForest::deserialize(lines.next().context("missing forest")?)?;
+        Ok(Self { scaler: StandardScaler { mean, std }, forest })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ml::{predict_all, train_test_split};
+
+    fn dataset() -> Vec<DatasetRow> {
+        build_dataset(700, 2025, &[], &EwqConfig::default())
+    }
+
+    #[test]
+    fn dataset_has_paper_shape() {
+        let rows = dataset();
+        assert_eq!(rows.len(), 700);
+        let quantized = rows.iter().filter(|r| r.quantized).count();
+        let frac = quantized as f64 / rows.len() as f64;
+        // paper Fig. 4: 42% quantized / 58% raw — ours should be in the band
+        assert!((0.25..0.60).contains(&frac), "quantized frac {frac}");
+        // 4-bit is a small minority (paper: 7%)
+        let q4 =
+            rows.iter().filter(|r| r.quantization_type == Precision::Q4).count() as f64 / 700.0;
+        assert!(q4 < 0.30, "q4 frac {q4}");
+        // exec_index starts at 2
+        assert!(rows.iter().all(|r| r.exec_index >= 2));
+        assert!(rows.iter().all(|r| r.exec_index <= r.num_blocks + 1));
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let rows = build_dataset(60, 7, &[], &EwqConfig::default());
+        let csv = rows_to_csv(&rows);
+        let back = rows_from_csv(&csv).unwrap();
+        assert_eq!(rows, back);
+    }
+
+    #[test]
+    fn forest_beats_chance_on_split() {
+        let rows = dataset();
+        let (x, y) = rows_to_xy(&rows);
+        let (xtr, ytr, xte, yte) = train_test_split(&x, &y, 0.3, 42);
+        let (scaler, xtr_s) = StandardScaler::fit_transform(&xtr);
+        let xte_s = scaler.transform(&xte);
+        let mut rf = RandomForest::new(120, 8, 1);
+        rf.fit(&xtr_s, &ytr);
+        let pred = predict_all(&rf, &xte_s);
+        let acc =
+            pred.iter().zip(&yte).filter(|(a, b)| a == b).count() as f64 / yte.len() as f64;
+        assert!(acc > 0.70, "forest accuracy {acc} (paper: 0.80)");
+    }
+
+    #[test]
+    fn save_load_preserves_decisions() {
+        let rows = build_dataset(200, 9, &[], &EwqConfig::default());
+        let fe = FastEwq::train(&rows, 30, 6, 3);
+        let dir = std::env::temp_dir().join("ewq_fastewq_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("clf.fewq");
+        fe.save(&p).unwrap();
+        let fe2 = FastEwq::load(&p).unwrap();
+        let schema = crate::zoo::gen::synthetic_archs(1, 77)[0].schema.clone();
+        assert_eq!(fe.classify_model(&schema), fe2.classify_model(&schema));
+    }
+
+    #[test]
+    fn classify_is_deterministic_and_total() {
+        let rows = build_dataset(200, 11, &[], &EwqConfig::default());
+        let fe = FastEwq::train(&rows, 30, 6, 5);
+        let schema = crate::zoo::gen::synthetic_archs(3, 13)[2].schema.clone();
+        let a = fe.classify_model(&schema);
+        let b = fe.classify_model(&schema);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), schema.n_blocks);
+    }
+}

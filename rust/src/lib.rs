@@ -1,0 +1,63 @@
+//! # EWQ — Entropy-Weighted Quantization
+//!
+//! Production reproduction of *"Universality of Layer-Level Entropy-Weighted
+//! Quantization Beyond Model Architecture and Size"* (webAI, 2025).
+//!
+//! Three-layer architecture (see `DESIGN.md`):
+//! - **L1** Pallas kernels + **L2** JAX model live in `python/compile/` and run
+//!   ONCE at build time (`make artifacts`), lowering to HLO text.
+//! - **L3** (this crate) is the paper's system: entropy analysis, EWQ block
+//!   selection, cluster distribution (Algorithms 1 & 2), the FastEWQ classifier
+//!   stack, the serving coordinator, and the full evaluation/benchmark harness.
+//! - `runtime` wraps the `xla` PJRT CPU client to execute the AOT artifacts on
+//!   the request path — python is never loaded at serve time.
+//!
+//! Quick tour:
+//! ```no_run
+//! use ewq::zoo::ModelDir;
+//! use ewq::ewq::{EwqConfig, analyze_model, decide};
+//!
+//! let model = ModelDir::load("artifacts/models/tl-llama").unwrap();
+//! let analysis = analyze_model(&model, &EwqConfig::default());
+//! let plan = decide(&analysis, &EwqConfig::default());
+//! println!("{}", plan.summary());
+//! ```
+
+pub mod bench_util;
+pub mod cluster;
+pub mod config;
+pub mod entropy;
+pub mod eval;
+pub mod ewq;
+pub mod exp;
+pub mod fastewq;
+pub mod ml;
+pub mod model;
+pub mod proptest_lite;
+pub mod quant;
+pub mod report;
+pub mod rng;
+pub mod runtime;
+pub mod serving;
+pub mod stats;
+pub mod tensor;
+pub mod zoo;
+
+/// Repository-relative artifacts directory (override with `EWQ_ARTIFACTS`).
+pub fn artifacts_dir() -> std::path::PathBuf {
+    if let Ok(p) = std::env::var("EWQ_ARTIFACTS") {
+        return p.into();
+    }
+    // Walk up from cwd looking for an `artifacts/` dir so examples/benches/tests
+    // work from any directory inside the repo.
+    let mut cur = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    loop {
+        let cand = cur.join("artifacts");
+        if cand.is_dir() {
+            return cand;
+        }
+        if !cur.pop() {
+            return "artifacts".into();
+        }
+    }
+}

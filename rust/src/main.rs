@@ -1,0 +1,198 @@
+//! `ewq` — CLI for the EWQ/FastEWQ reproduction.
+//!
+//! ```text
+//! ewq exp <id|all> [--per-subject N]     regenerate a paper table/figure
+//! ewq analyze --model <name>             entropy analysis + EWQ plan
+//! ewq plan --model <name> [--budget-mb M --machines K]  Algorithm 1
+//! ewq dataset [--rows N]                 (re)build the FastEWQ dataset
+//! ewq train-classifier [--out PATH]      train + save the FastEWQ forest
+//! ewq serve --model <name> [--requests N --batch B --variant V]  demo server
+//! ```
+
+use anyhow::{bail, Context, Result};
+
+use ewq::cluster::{optimize_distribution, Cluster};
+use ewq::config::{Args, ServeConfig};
+use ewq::ewq::{analyze_model, decide, EwqConfig};
+use ewq::exp::{self, ExpContext};
+use ewq::fastewq::{load_or_build_dataset, FastEwq};
+use ewq::report::Table;
+use ewq::serving::Coordinator;
+use ewq::zoo::ModelDir;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv)?;
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("exp") => cmd_exp(&args),
+        Some("analyze") => cmd_analyze(&args),
+        Some("plan") => cmd_plan(&args),
+        Some("dataset") => cmd_dataset(&args),
+        Some("train-classifier") => cmd_train_classifier(&args),
+        Some("serve") => cmd_serve(&args),
+        Some(other) => bail!(
+            "unknown command {other:?} (try: exp, analyze, plan, dataset, train-classifier, serve)"
+        ),
+        None => {
+            println!("ewq — Entropy-Weighted Quantization (see README for usage)");
+            println!("commands: exp | analyze | plan | dataset | train-classifier | serve");
+            Ok(())
+        }
+    }
+}
+
+fn cmd_exp(args: &Args) -> Result<()> {
+    let id = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
+    let per_subject = args.opt("per-subject", 8usize)?;
+    let mut ctx = ExpContext::new(per_subject)?;
+    let out = if id == "all" { exp::run_all(&mut ctx)? } else { exp::run(id, &mut ctx)? };
+    println!("{out}");
+    Ok(())
+}
+
+fn load_model(args: &Args) -> Result<ModelDir> {
+    let name: String = args.opt("model", "tl-llama".to_string())?;
+    ModelDir::load(ewq::artifacts_dir().join("models").join(&name))
+        .with_context(|| format!("load model {name} (run `make artifacts`?)"))
+}
+
+fn cmd_analyze(args: &Args) -> Result<()> {
+    let model = load_model(args)?;
+    let x = args.opt("x", 1.0f64)?;
+    let cfg = EwqConfig { x, ..Default::default() };
+    let a = analyze_model(&model, &cfg);
+    let plan = decide(&a, &cfg);
+    let mut t = Table::new(
+        &format!("EWQ analysis — {} (X={x})", model.schema.name),
+        &["block", "exec_index", "entropy", "decision"],
+    );
+    for (b, &p) in a.blocks.iter().zip(&plan.assignments) {
+        t.row(vec![
+            b.block.to_string(),
+            b.exec_index.to_string(),
+            format!("{:.4}", b.entropy),
+            p.label().into(),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "mu={:.4} sigma={:.4} T={:.4} | {} | blocks {:.2} MB -> {:.2} MB",
+        a.stats.mean,
+        a.stats.std,
+        a.stats.threshold(x),
+        plan.summary(),
+        model.schema.blocks_raw_bytes() as f64 / 1e6,
+        plan.blocks_bytes(&model.schema) as f64 / 1e6,
+    );
+    Ok(())
+}
+
+fn cmd_plan(args: &Args) -> Result<()> {
+    let model = load_model(args)?;
+    let budget_mb = args.opt("budget-mb", 2.0f64)?;
+    let machines = args.opt("machines", 2usize)?;
+    let per = (budget_mb * 1e6 / machines as f64) as usize;
+    let cluster = Cluster::uniform(machines, per, per);
+    let a = analyze_model(&model, &EwqConfig::default());
+    let d = optimize_distribution(&a, &model.schema, &cluster, &EwqConfig::default());
+    println!(
+        "cluster: {machines} x {:.2} MB (R = {:.2} MB)",
+        per as f64 / 1e6,
+        cluster.total_resources() as f64 / 1e6
+    );
+    println!("fits: {} | {}", d.fits, d.plan.summary());
+    println!(
+        "total {:.2} MB | placement {:?} | hops {} | +{} us/pass",
+        d.total_bytes(&model.schema) as f64 / 1e6,
+        d.placement,
+        d.hops,
+        d.network_latency_us(&cluster)
+    );
+    Ok(())
+}
+
+fn cmd_dataset(args: &Args) -> Result<()> {
+    let rows = args.opt("rows", exp::context::DATASET_ROWS)?;
+    let artifacts = ewq::artifacts_dir();
+    let flagships = ewq::zoo::load_flagships(&artifacts)?;
+    let refs: Vec<&ModelDir> = flagships.iter().collect();
+    let ds = load_or_build_dataset(
+        &artifacts,
+        rows,
+        exp::context::DATASET_SEED,
+        &refs,
+        &EwqConfig::default(),
+    )?;
+    let q = ds.iter().filter(|r| r.quantized).count();
+    println!(
+        "dataset: {} rows ({} quantized / {} raw) -> {}",
+        ds.len(),
+        q,
+        ds.len() - q,
+        artifacts.join("fastewq_dataset.csv").display()
+    );
+    Ok(())
+}
+
+fn cmd_train_classifier(args: &Args) -> Result<()> {
+    let artifacts = ewq::artifacts_dir();
+    let out: String = args.opt("out", artifacts.join("fastewq.fewq").display().to_string())?;
+    let flagships = ewq::zoo::load_flagships(&artifacts)?;
+    let refs: Vec<&ModelDir> = flagships.iter().collect();
+    let rows = load_or_build_dataset(
+        &artifacts,
+        exp::context::DATASET_ROWS,
+        exp::context::DATASET_SEED,
+        &refs,
+        &EwqConfig::default(),
+    )?;
+    let fe = FastEwq::train(&rows, 120, 8, 1);
+    fe.save(std::path::Path::new(&out))?;
+    println!("trained FastEWQ forest on {} rows -> {out}", rows.len());
+    for m in &flagships {
+        let mask = fe.classify_model(&m.schema);
+        let sel: Vec<usize> =
+            (0..mask.len()).filter(|&b| mask[b]).map(|b| m.schema.exec_index(b)).collect();
+        println!("  {}: quantize exec_index {sel:?}", m.schema.name);
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let model = load_model(args)?;
+    let variant: String = args.opt("variant", "8bit".to_string())?;
+    let requests = args.opt("requests", 64usize)?;
+    let batch = args.opt("batch", 8usize)?;
+    let n = model.schema.n_blocks;
+    let plan = match variant.as_str() {
+        "raw" => ewq::ewq::QuantPlan::uniform(&model.schema.name, n, ewq::quant::Precision::Raw),
+        "8bit" => ewq::ewq::QuantPlan::uniform(&model.schema.name, n, ewq::quant::Precision::Q8),
+        "4bit" => ewq::ewq::QuantPlan::uniform(&model.schema.name, n, ewq::quant::Precision::Q4),
+        "mixed" => {
+            let a = analyze_model(&model, &EwqConfig::default());
+            decide(&a, &EwqConfig::default())
+        }
+        other => bail!("unknown variant {other} (raw|8bit|4bit|mixed)"),
+    };
+    println!("serving {} [{}] — {}", model.schema.name, variant, plan.summary());
+
+    let cfg = ServeConfig { max_batch: batch, ..Default::default() };
+    let coord = Coordinator::start(model.dir.clone(), plan, cfg, 1, 200)?;
+    let mut rxs = Vec::new();
+    for i in 0..requests {
+        rxs.push(coord.submit(vec![1, 160 + (i as i32 % 16), 100 + (i as i32 % 57), 2]));
+    }
+    for rx in rxs {
+        let _ = rx.recv();
+    }
+    let m = coord.shutdown();
+    println!("{}", m.summary());
+    Ok(())
+}

@@ -1,0 +1,149 @@
+//! Stratified k-fold cross-validation + binomial confidence intervals —
+//! robustness checks behind the Table 3 classifier comparison (a single
+//! 70:30 split can flatter or punish a classifier; CV bounds that).
+
+use super::{predict_all, Classifier};
+use crate::rng::Xoshiro256pp;
+
+/// Stratified fold assignment: returns fold index per sample, balanced per
+/// class. Deterministic given the seed.
+pub fn stratified_folds(y: &[u8], k: usize, seed: u64) -> Vec<usize> {
+    assert!(k >= 2);
+    let mut rng = Xoshiro256pp::new(seed);
+    let mut folds = vec![0usize; y.len()];
+    for class in [0u8, 1u8] {
+        let mut idx: Vec<usize> = (0..y.len()).filter(|&i| y[i] == class).collect();
+        rng.shuffle(&mut idx);
+        for (j, &i) in idx.iter().enumerate() {
+            folds[i] = j % k;
+        }
+    }
+    folds
+}
+
+/// Cross-validated accuracy of a classifier factory: `make()` must return a
+/// fresh unfitted classifier. Returns per-fold accuracies.
+pub fn cross_val_accuracy<F, C>(
+    x: &[Vec<f64>],
+    y: &[u8],
+    k: usize,
+    seed: u64,
+    mut make: F,
+) -> Vec<f64>
+where
+    F: FnMut() -> C,
+    C: Classifier,
+{
+    let folds = stratified_folds(y, k, seed);
+    (0..k)
+        .map(|fold| {
+            let (mut xtr, mut ytr, mut xte, mut yte) =
+                (Vec::new(), Vec::new(), Vec::new(), Vec::new());
+            for i in 0..y.len() {
+                if folds[i] == fold {
+                    xte.push(x[i].clone());
+                    yte.push(y[i]);
+                } else {
+                    xtr.push(x[i].clone());
+                    ytr.push(y[i]);
+                }
+            }
+            let mut c = make();
+            c.fit(&xtr, &ytr);
+            let pred = predict_all(&c, &xte);
+            pred.iter().zip(&yte).filter(|(a, b)| a == b).count() as f64 / yte.len() as f64
+        })
+        .collect()
+}
+
+/// Wilson score interval for a binomial proportion (95% when z = 1.96).
+pub fn wilson_interval(successes: usize, n: usize, z: f64) -> (f64, f64) {
+    assert!(n > 0);
+    let p = successes as f64 / n as f64;
+    let n = n as f64;
+    let z2 = z * z;
+    let denom = 1.0 + z2 / n;
+    let center = (p + z2 / (2.0 * n)) / denom;
+    let half = (z / denom) * ((p * (1.0 - p) / n + z2 / (4.0 * n * n)).sqrt());
+    ((center - half).max(0.0), (center + half).min(1.0))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ml::{LogReg, RandomForest};
+    use crate::rng::Xoshiro256pp;
+
+    fn blobs(n: usize, seed: u64) -> (Vec<Vec<f64>>, Vec<u8>) {
+        let mut r = Xoshiro256pp::new(seed);
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for i in 0..n {
+            let c = (i % 2) as u8;
+            let mu = if c == 0 { -1.0 } else { 1.0 };
+            x.push(vec![mu + r.normal() * 0.5, r.normal()]);
+            y.push(c);
+        }
+        (x, y)
+    }
+
+    #[test]
+    fn folds_are_balanced_and_cover() {
+        let y: Vec<u8> = (0..100).map(|i| (i % 2) as u8).collect();
+        let folds = stratified_folds(&y, 5, 1);
+        for f in 0..5 {
+            let in_fold: Vec<usize> =
+                (0..100).filter(|&i| folds[i] == f).collect();
+            assert_eq!(in_fold.len(), 20);
+            let pos = in_fold.iter().filter(|&&i| y[i] == 1).count();
+            assert_eq!(pos, 10, "fold {f} class-imbalanced");
+        }
+    }
+
+    #[test]
+    fn cv_accuracy_high_on_separable_data() {
+        let (x, y) = blobs(300, 2);
+        let accs = cross_val_accuracy(&x, &y, 5, 3, LogReg::default);
+        assert_eq!(accs.len(), 5);
+        let mean = accs.iter().sum::<f64>() / 5.0;
+        assert!(mean > 0.9, "cv accs {accs:?}");
+    }
+
+    #[test]
+    fn cv_detects_chance_on_random_labels() {
+        let mut r = Xoshiro256pp::new(4);
+        let x: Vec<Vec<f64>> = (0..200).map(|_| vec![r.normal(), r.normal()]).collect();
+        let y: Vec<u8> = (0..200).map(|_| (r.next_u64() & 1) as u8).collect();
+        let accs = cross_val_accuracy(&x, &y, 5, 5, || RandomForest::new(20, 4, 1));
+        let mean = accs.iter().sum::<f64>() / 5.0;
+        assert!((0.3..0.7).contains(&mean), "should hover near chance: {accs:?}");
+    }
+
+    #[test]
+    fn wilson_interval_properties() {
+        let (lo, hi) = wilson_interval(80, 100, 1.96);
+        assert!(lo < 0.8 && 0.8 < hi);
+        assert!(hi - lo < 0.2);
+        // shrinks with n
+        let (lo2, hi2) = wilson_interval(800, 1000, 1.96);
+        assert!(hi2 - lo2 < hi - lo);
+        // degenerate cases stay in [0,1]
+        let (lo3, hi3) = wilson_interval(0, 10, 1.96);
+        assert!(lo3 >= 0.0 && hi3 <= 1.0 && hi3 > 0.0);
+    }
+
+    #[test]
+    fn fastewq_dataset_cv_confirms_forest_advantage() {
+        use crate::ewq::EwqConfig;
+        use crate::fastewq::{build_dataset, rows_to_xy};
+        use crate::ml::StandardScaler;
+        let rows = build_dataset(350, 99, &[], &EwqConfig::default());
+        let (x, y) = rows_to_xy(&rows);
+        let (_, xs) = StandardScaler::fit_transform(&x);
+        let rf = cross_val_accuracy(&xs, &y, 4, 7, || RandomForest::new(60, 8, 1));
+        let lr = cross_val_accuracy(&xs, &y, 4, 7, LogReg::default);
+        let rf_mean = rf.iter().sum::<f64>() / rf.len() as f64;
+        let lr_mean = lr.iter().sum::<f64>() / lr.len() as f64;
+        assert!(rf_mean > lr_mean, "rf {rf_mean} vs logreg {lr_mean}");
+    }
+}

@@ -1,0 +1,212 @@
+//! Random forest — bootstrap-bagged gini trees with sqrt(d) feature
+//! subsampling, impurity-based feature importances (Fig. 5) and a text
+//! serialization (`.fewq`) so FastEWQ can ship a pre-trained classifier.
+
+use super::tree::{fit_classification, Node, Tree, TreeConfig};
+use super::Classifier;
+use crate::rng::Xoshiro256pp;
+
+#[derive(Clone, Debug)]
+pub struct RandomForest {
+    pub n_trees: usize,
+    pub max_depth: usize,
+    pub seed: u64,
+    pub trees: Vec<Tree>,
+    pub n_features: usize,
+}
+
+impl RandomForest {
+    pub fn new(n_trees: usize, max_depth: usize, seed: u64) -> Self {
+        Self { n_trees, max_depth, seed, trees: Vec::new(), n_features: 0 }
+    }
+
+    /// Normalized impurity-decrease feature importances (sums to 1).
+    pub fn feature_importances(&self) -> Vec<f64> {
+        let mut imp = vec![0.0; self.n_features];
+        for t in &self.trees {
+            for (a, b) in imp.iter_mut().zip(&t.importance) {
+                *a += b;
+            }
+        }
+        let s: f64 = imp.iter().sum();
+        if s > 0.0 {
+            for v in &mut imp {
+                *v /= s;
+            }
+        }
+        imp
+    }
+
+    // ---- text serialization: one line per node -----------------------------
+    pub fn serialize(&self) -> String {
+        let mut out = format!("FEWQ1 trees={} features={}\n", self.trees.len(), self.n_features);
+        for t in &self.trees {
+            out.push_str(&format!("T {}\n", t.nodes.len()));
+            for n in &t.nodes {
+                match n {
+                    Node::Leaf { value } => out.push_str(&format!("L {value:.17}\n")),
+                    Node::Split { feat, thr, left, right } => {
+                        out.push_str(&format!("S {feat} {thr:.17} {left} {right}\n"))
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    pub fn deserialize(text: &str) -> anyhow::Result<Self> {
+        use anyhow::{bail, Context};
+        let mut lines = text.lines();
+        let header = lines.next().context("empty forest file")?;
+        let mut parts = header.split_whitespace();
+        if parts.next() != Some("FEWQ1") {
+            bail!("bad magic in forest file");
+        }
+        let mut n_trees = 0usize;
+        let mut n_features = 0usize;
+        for kv in parts {
+            let (k, v) = kv.split_once('=').context("bad header kv")?;
+            match k {
+                "trees" => n_trees = v.parse()?,
+                "features" => n_features = v.parse()?,
+                _ => {}
+            }
+        }
+        let mut trees = Vec::with_capacity(n_trees);
+        for _ in 0..n_trees {
+            let tl = lines.next().context("missing tree header")?;
+            let n_nodes: usize =
+                tl.strip_prefix("T ").context("bad tree header")?.trim().parse()?;
+            let mut nodes = Vec::with_capacity(n_nodes);
+            for _ in 0..n_nodes {
+                let l = lines.next().context("missing node")?;
+                let mut f = l.split_whitespace();
+                match f.next() {
+                    Some("L") => nodes.push(Node::Leaf {
+                        value: f.next().context("leaf value")?.parse()?,
+                    }),
+                    Some("S") => nodes.push(Node::Split {
+                        feat: f.next().context("feat")?.parse()?,
+                        thr: f.next().context("thr")?.parse()?,
+                        left: f.next().context("left")?.parse()?,
+                        right: f.next().context("right")?.parse()?,
+                    }),
+                    other => bail!("bad node tag {other:?}"),
+                }
+            }
+            trees.push(Tree { nodes, importance: vec![0.0; n_features] });
+        }
+        Ok(Self { n_trees, max_depth: 0, seed: 0, trees, n_features })
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        std::fs::write(path, self.serialize())?;
+        Ok(())
+    }
+
+    pub fn load(path: &std::path::Path) -> anyhow::Result<Self> {
+        Self::deserialize(&std::fs::read_to_string(path)?)
+    }
+}
+
+impl Classifier for RandomForest {
+    fn name(&self) -> &'static str {
+        "random forest"
+    }
+
+    fn fit(&mut self, x: &[Vec<f64>], y: &[u8]) {
+        let n = x.len();
+        let d = x[0].len();
+        self.n_features = d;
+        let mtry = (d as f64).sqrt().round().max(1.0) as usize;
+        let cfg = TreeConfig {
+            max_depth: self.max_depth,
+            min_samples_split: 2,
+            max_features: Some(mtry),
+        };
+        let mut rng = Xoshiro256pp::new(self.seed);
+        self.trees = (0..self.n_trees)
+            .map(|_| {
+                let idx = rng.bootstrap(n);
+                fit_classification(x, y, &idx, &cfg, &mut rng)
+            })
+            .collect();
+    }
+
+    fn predict_proba(&self, row: &[f64]) -> f64 {
+        if self.trees.is_empty() {
+            return 0.5;
+        }
+        self.trees.iter().map(|t| t.predict(row)).sum::<f64>() / self.trees.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ml::Classifier;
+    use crate::rng::Xoshiro256pp;
+
+    #[test]
+    fn fits_nonlinear_boundary() {
+        let mut r = Xoshiro256pp::new(5);
+        let x: Vec<Vec<f64>> =
+            (0..400).map(|_| vec![r.uniform(-1.0, 1.0), r.uniform(-1.0, 1.0)]).collect();
+        let y: Vec<u8> = x.iter().map(|p| u8::from(p[0] * p[1] > 0.0)).collect();
+        let mut rf = RandomForest::new(60, 8, 1);
+        rf.fit(&x, &y);
+        let acc = x
+            .iter()
+            .zip(&y)
+            .filter(|(row, &t)| rf.predict(row) == t)
+            .count() as f64
+            / x.len() as f64;
+        assert!(acc > 0.93, "acc={acc}");
+    }
+
+    #[test]
+    fn importances_identify_signal_feature() {
+        let mut r = Xoshiro256pp::new(6);
+        let x: Vec<Vec<f64>> = (0..300)
+            .map(|_| vec![r.normal(), r.normal(), r.normal()])
+            .collect();
+        let y: Vec<u8> = x.iter().map(|p| u8::from(p[1] > 0.0)).collect(); // only feat 1 matters
+        let mut rf = RandomForest::new(60, 6, 2);
+        rf.fit(&x, &y);
+        let imp = rf.feature_importances();
+        assert!((imp.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        assert!(imp[1] > 0.6, "importances {imp:?}");
+        assert!(imp[1] > imp[0] && imp[1] > imp[2]);
+    }
+
+    #[test]
+    fn serialize_roundtrip_preserves_predictions() {
+        let mut r = Xoshiro256pp::new(7);
+        let x: Vec<Vec<f64>> = (0..120).map(|_| vec![r.normal(), r.normal()]).collect();
+        let y: Vec<u8> = x.iter().map(|p| u8::from(p[0] + p[1] > 0.0)).collect();
+        let mut rf = RandomForest::new(20, 5, 3);
+        rf.fit(&x, &y);
+        let rf2 = RandomForest::deserialize(&rf.serialize()).unwrap();
+        for row in &x {
+            assert!((rf.predict_proba(row) - rf2.predict_proba(row)).abs() < 1e-15);
+        }
+    }
+
+    #[test]
+    fn deserialize_rejects_garbage() {
+        assert!(RandomForest::deserialize("not a forest").is_err());
+        assert!(RandomForest::deserialize("").is_err());
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut r = Xoshiro256pp::new(8);
+        let x: Vec<Vec<f64>> = (0..80).map(|_| vec![r.normal()]).collect();
+        let y: Vec<u8> = x.iter().map(|p| u8::from(p[0] > 0.0)).collect();
+        let mut a = RandomForest::new(10, 4, 9);
+        let mut b = RandomForest::new(10, 4, 9);
+        a.fit(&x, &y);
+        b.fit(&x, &y);
+        assert_eq!(a.serialize(), b.serialize());
+    }
+}

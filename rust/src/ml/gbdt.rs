@@ -1,0 +1,116 @@
+//! Gradient-boosted trees ("XGB" in the paper's line-up): logistic loss,
+//! regression trees on negative gradients, shrinkage learning rate.
+
+use super::tree::{fit_regression, Tree, TreeConfig};
+use super::Classifier;
+use crate::rng::Xoshiro256pp;
+
+#[derive(Clone, Debug)]
+pub struct Gbdt {
+    pub n_rounds: usize,
+    pub max_depth: usize,
+    pub lr: f64,
+    pub seed: u64,
+    pub base: f64,
+    pub trees: Vec<Tree>,
+}
+
+impl Gbdt {
+    pub fn new(n_rounds: usize, max_depth: usize, lr: f64, seed: u64) -> Self {
+        Self { n_rounds, max_depth, lr, seed, base: 0.0, trees: Vec::new() }
+    }
+
+    fn raw_score(&self, row: &[f64]) -> f64 {
+        self.base + self.lr * self.trees.iter().map(|t| t.predict(row)).sum::<f64>()
+    }
+}
+
+#[inline]
+fn sigmoid(z: f64) -> f64 {
+    if z >= 0.0 {
+        1.0 / (1.0 + (-z).exp())
+    } else {
+        let e = z.exp();
+        e / (1.0 + e)
+    }
+}
+
+impl Classifier for Gbdt {
+    fn name(&self) -> &'static str {
+        "XGB"
+    }
+
+    fn fit(&mut self, x: &[Vec<f64>], y: &[u8]) {
+        let n = x.len();
+        let pos = y.iter().filter(|&&v| v == 1).count() as f64;
+        // log-odds prior
+        let p = (pos / n as f64).clamp(1e-6, 1.0 - 1e-6);
+        self.base = (p / (1.0 - p)).ln();
+        self.trees.clear();
+
+        let cfg = TreeConfig {
+            max_depth: self.max_depth,
+            min_samples_split: 4,
+            max_features: None,
+        };
+        let mut rng = Xoshiro256pp::new(self.seed);
+        let idx: Vec<usize> = (0..n).collect();
+        let mut raw: Vec<f64> = vec![self.base; n];
+        for _ in 0..self.n_rounds {
+            // negative gradient of logloss: y - sigmoid(raw)
+            let grad: Vec<f64> =
+                raw.iter().zip(y).map(|(&r, &t)| t as f64 - sigmoid(r)).collect();
+            let tree = fit_regression(x, &grad, &idx, &cfg, &mut rng);
+            for (i, r) in raw.iter_mut().enumerate() {
+                *r += self.lr * tree.predict(&x[i]);
+            }
+            self.trees.push(tree);
+        }
+    }
+
+    fn predict_proba(&self, row: &[f64]) -> f64 {
+        sigmoid(self.raw_score(row))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ml::Classifier;
+    use crate::rng::Xoshiro256pp;
+
+    #[test]
+    fn fits_xor() {
+        let mut r = Xoshiro256pp::new(1);
+        let x: Vec<Vec<f64>> =
+            (0..300).map(|_| vec![r.uniform(-1.0, 1.0), r.uniform(-1.0, 1.0)]).collect();
+        let y: Vec<u8> = x.iter().map(|p| u8::from(p[0] * p[1] > 0.0)).collect();
+        let mut g = Gbdt::new(60, 3, 0.2, 2);
+        g.fit(&x, &y);
+        let acc =
+            x.iter().zip(&y).filter(|(row, &t)| g.predict(row) == t).count() as f64 / x.len() as f64;
+        assert!(acc > 0.9, "acc={acc}");
+    }
+
+    #[test]
+    fn base_is_class_prior() {
+        let x = vec![vec![0.0]; 10];
+        let y = [1, 1, 1, 1, 1, 1, 1, 1, 0, 0]; // 80% positive
+        let mut g = Gbdt::new(0, 3, 0.1, 0);
+        g.fit(&x, &y);
+        assert!((sigmoid(g.base) - 0.8).abs() < 1e-9);
+    }
+
+    #[test]
+    fn more_rounds_reduce_training_error() {
+        let mut r = Xoshiro256pp::new(3);
+        let x: Vec<Vec<f64>> = (0..200).map(|_| vec![r.normal(), r.normal()]).collect();
+        let y: Vec<u8> = x.iter().map(|p| u8::from(p[0].sin() + p[1] > 0.0)).collect();
+        let err_of = |rounds: usize| {
+            let mut g = Gbdt::new(rounds, 3, 0.2, 4);
+            g.fit(&x, &y);
+            x.iter().zip(&y).filter(|(row, &t)| g.predict(row) != t).count()
+        };
+        assert!(err_of(50) <= err_of(5));
+    }
+}

@@ -1,0 +1,118 @@
+//! Gaussian naive Bayes — per-class feature means/variances, independent
+//! likelihoods. Deliberately the weakest of the line-up on correlated
+//! features (the paper's Table 3 shows exactly this failure mode).
+
+use super::Classifier;
+
+#[derive(Clone, Debug, Default)]
+pub struct GaussianNb {
+    /// [class][feature]
+    mean: [Vec<f64>; 2],
+    var: [Vec<f64>; 2],
+    log_prior: [f64; 2],
+    fitted: bool,
+}
+
+impl Classifier for GaussianNb {
+    fn name(&self) -> &'static str {
+        "Gaussian naive Bayes"
+    }
+
+    fn fit(&mut self, x: &[Vec<f64>], y: &[u8]) {
+        let d = x[0].len();
+        for c in 0..2 {
+            let rows: Vec<&Vec<f64>> =
+                x.iter().zip(y).filter(|(_, &t)| t as usize == c).map(|(r, _)| r).collect();
+            let n = rows.len().max(1) as f64;
+            let mut mean = vec![0.0; d];
+            for r in &rows {
+                for (m, &v) in mean.iter_mut().zip(r.iter()) {
+                    *m += v;
+                }
+            }
+            for m in &mut mean {
+                *m /= n;
+            }
+            let mut var = vec![0.0; d];
+            for r in &rows {
+                for j in 0..d {
+                    let c = r[j] - mean[j];
+                    var[j] += c * c;
+                }
+            }
+            for v in &mut var {
+                *v = (*v / n).max(1e-9);
+            }
+            self.mean[c] = mean;
+            self.var[c] = var;
+            self.log_prior[c] = (rows.len().max(1) as f64 / x.len() as f64).ln();
+        }
+        self.fitted = true;
+    }
+
+    fn predict_proba(&self, row: &[f64]) -> f64 {
+        assert!(self.fitted, "GaussianNb not fitted");
+        let loglik = |c: usize| -> f64 {
+            let mut ll = self.log_prior[c];
+            for j in 0..row.len() {
+                let m = self.mean[c][j];
+                let v = self.var[c][j];
+                ll += -0.5 * ((2.0 * std::f64::consts::PI * v).ln() + (row[j] - m) * (row[j] - m) / v);
+            }
+            ll
+        };
+        let l0 = loglik(0);
+        let l1 = loglik(1);
+        let m = l0.max(l1);
+        let e0 = (l0 - m).exp();
+        let e1 = (l1 - m).exp();
+        e1 / (e0 + e1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ml::Classifier;
+    use crate::rng::Xoshiro256pp;
+
+    #[test]
+    fn separates_gaussian_clusters() {
+        let mut r = Xoshiro256pp::new(1);
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for i in 0..200 {
+            let c = (i % 2) as u8;
+            let mu = if c == 0 { -2.0 } else { 2.0 };
+            x.push(vec![mu + r.normal() * 0.5]);
+            y.push(c);
+        }
+        let mut m = GaussianNb::default();
+        m.fit(&x, &y);
+        assert_eq!(m.predict(&[-2.0]), 0);
+        assert_eq!(m.predict(&[2.0]), 1);
+        assert!(m.predict_proba(&[3.0]) > 0.99);
+    }
+
+    #[test]
+    fn respects_class_prior() {
+        // 90% of mass in class 0; ambiguous point should lean class 0
+        let mut x = vec![vec![0.0]; 90];
+        x.extend(vec![vec![0.5]; 10]);
+        let mut y = vec![0u8; 90];
+        y.extend(vec![1u8; 10]);
+        let mut m = GaussianNb::default();
+        m.fit(&x, &y);
+        assert!(m.predict_proba(&[0.25]) < 0.5);
+    }
+
+    #[test]
+    fn zero_variance_feature_is_guarded() {
+        let x = vec![vec![1.0, 0.0], vec![1.0, 1.0], vec![1.0, 2.0], vec![1.0, 3.0]];
+        let y = vec![0, 0, 1, 1];
+        let mut m = GaussianNb::default();
+        m.fit(&x, &y);
+        let p = m.predict_proba(&[1.0, 2.5]);
+        assert!(p.is_finite() && p > 0.5);
+    }
+}

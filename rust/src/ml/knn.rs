@@ -1,0 +1,77 @@
+//! k-nearest-neighbours (euclidean); probability = positive fraction among
+//! the k nearest training rows.
+
+use super::Classifier;
+
+#[derive(Clone, Debug)]
+pub struct Knn {
+    pub k: usize,
+    x: Vec<Vec<f64>>,
+    y: Vec<u8>,
+}
+
+impl Knn {
+    pub fn new(k: usize) -> Self {
+        Self { k, x: Vec::new(), y: Vec::new() }
+    }
+}
+
+fn dist2(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(&p, &q)| (p - q) * (p - q)).sum()
+}
+
+impl Classifier for Knn {
+    fn name(&self) -> &'static str {
+        "kNN"
+    }
+
+    fn fit(&mut self, x: &[Vec<f64>], y: &[u8]) {
+        self.x = x.to_vec();
+        self.y = y.to_vec();
+    }
+
+    fn predict_proba(&self, row: &[f64]) -> f64 {
+        assert!(!self.x.is_empty(), "kNN not fitted");
+        let k = self.k.min(self.x.len());
+        // partial selection of the k smallest distances
+        let mut d: Vec<(f64, u8)> =
+            self.x.iter().zip(&self.y).map(|(r, &t)| (dist2(row, r), t)).collect();
+        d.select_nth_unstable_by(k - 1, |a, b| a.0.partial_cmp(&b.0).unwrap());
+        let pos = d[..k].iter().filter(|(_, t)| *t == 1).count();
+        pos as f64 / k as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ml::Classifier;
+
+    #[test]
+    fn nearest_neighbour_wins() {
+        let x = vec![vec![0.0], vec![0.1], vec![10.0], vec![10.1], vec![10.2]];
+        let y = vec![0, 0, 1, 1, 1];
+        let mut m = Knn::new(3);
+        m.fit(&x, &y);
+        assert_eq!(m.predict(&[0.05]), 0);
+        assert_eq!(m.predict(&[10.05]), 1);
+    }
+
+    #[test]
+    fn proba_is_neighbour_fraction() {
+        let x = vec![vec![0.0], vec![0.2], vec![0.4]];
+        let y = vec![1, 0, 1];
+        let mut m = Knn::new(3);
+        m.fit(&x, &y);
+        assert!((m.predict_proba(&[0.1]) - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn k_larger_than_dataset_is_clamped() {
+        let x = vec![vec![0.0], vec![1.0]];
+        let y = vec![0, 1];
+        let mut m = Knn::new(50);
+        m.fit(&x, &y);
+        assert!((m.predict_proba(&[0.5]) - 0.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,98 @@
+//! Logistic regression — full-batch gradient descent with L2 regularization.
+
+use super::Classifier;
+
+#[derive(Clone, Debug)]
+pub struct LogReg {
+    pub lr: f64,
+    pub epochs: usize,
+    pub l2: f64,
+    pub w: Vec<f64>,
+    pub b: f64,
+}
+
+impl Default for LogReg {
+    fn default() -> Self {
+        Self { lr: 0.3, epochs: 400, l2: 1e-4, w: Vec::new(), b: 0.0 }
+    }
+}
+
+#[inline]
+fn sigmoid(z: f64) -> f64 {
+    if z >= 0.0 {
+        1.0 / (1.0 + (-z).exp())
+    } else {
+        let e = z.exp();
+        e / (1.0 + e)
+    }
+}
+
+impl Classifier for LogReg {
+    fn name(&self) -> &'static str {
+        "logistic regression"
+    }
+
+    fn fit(&mut self, x: &[Vec<f64>], y: &[u8]) {
+        let n = x.len();
+        let d = x[0].len();
+        self.w = vec![0.0; d];
+        self.b = 0.0;
+        let inv_n = 1.0 / n as f64;
+        for _ in 0..self.epochs {
+            let mut gw = vec![0.0; d];
+            let mut gb = 0.0;
+            for (row, &t) in x.iter().zip(y) {
+                let z: f64 = self.b + row.iter().zip(&self.w).map(|(a, b)| a * b).sum::<f64>();
+                let err = sigmoid(z) - t as f64;
+                for (g, &v) in gw.iter_mut().zip(row) {
+                    *g += err * v;
+                }
+                gb += err;
+            }
+            for (w, g) in self.w.iter_mut().zip(&gw) {
+                *w -= self.lr * (g * inv_n + self.l2 * *w);
+            }
+            self.b -= self.lr * gb * inv_n;
+        }
+    }
+
+    fn predict_proba(&self, row: &[f64]) -> f64 {
+        let z: f64 = self.b + row.iter().zip(&self.w).map(|(a, b)| a * b).sum::<f64>();
+        sigmoid(z)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ml::Classifier;
+
+    #[test]
+    fn learns_linearly_separable() {
+        // y = 1 iff x0 > 0
+        let x: Vec<Vec<f64>> = (-50..50).map(|i| vec![i as f64 / 10.0]).collect();
+        let y: Vec<u8> = x.iter().map(|r| u8::from(r[0] > 0.0)).collect();
+        let mut m = LogReg::default();
+        m.fit(&x, &y);
+        assert!(m.predict(&[2.0]) == 1 && m.predict(&[-2.0]) == 0);
+        assert!(m.predict_proba(&[3.0]) > 0.95);
+        assert!(m.predict_proba(&[-3.0]) < 0.05);
+    }
+
+    #[test]
+    fn sigmoid_stable_extremes() {
+        assert!(sigmoid(1000.0) <= 1.0 && sigmoid(1000.0) > 0.999);
+        assert!(sigmoid(-1000.0) >= 0.0 && sigmoid(-1000.0) < 1e-6);
+    }
+
+    #[test]
+    fn weights_shrink_with_l2() {
+        let x: Vec<Vec<f64>> = (-20..20).map(|i| vec![i as f64]).collect();
+        let y: Vec<u8> = x.iter().map(|r| u8::from(r[0] > 0.0)).collect();
+        let mut weak = LogReg { l2: 1.0, ..Default::default() };
+        let mut strong = LogReg { l2: 0.0, ..Default::default() };
+        weak.fit(&x, &y);
+        strong.fit(&x, &y);
+        assert!(weak.w[0].abs() < strong.w[0].abs());
+    }
+}

@@ -1,0 +1,183 @@
+//! Classification metrics: confusion matrix, precision/recall/F1 report
+//! (paper Tables 3–5), ROC curve and AUC (Fig. 6).
+
+/// Binary confusion counts with the paper's Table 5 orientation:
+/// class 0 = "not quantized" (negative), class 1 = "quantized" (positive).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Confusion {
+    pub tn: usize,
+    pub fp: usize,
+    pub fn_: usize,
+    pub tp: usize,
+}
+
+impl Confusion {
+    pub fn accuracy(&self) -> f64 {
+        (self.tp + self.tn) as f64 / self.total() as f64
+    }
+
+    pub fn total(&self) -> usize {
+        self.tp + self.tn + self.fp + self.fn_
+    }
+
+    /// Precision/recall/F1 for one class (0 or 1).
+    pub fn prf(&self, class: u8) -> (f64, f64, f64) {
+        let (tp, fp, fn_) = if class == 1 {
+            (self.tp, self.fp, self.fn_)
+        } else {
+            (self.tn, self.fn_, self.fp)
+        };
+        let p = if tp + fp == 0 { 0.0 } else { tp as f64 / (tp + fp) as f64 };
+        let r = if tp + fn_ == 0 { 0.0 } else { tp as f64 / (tp + fn_) as f64 };
+        let f1 = if p + r == 0.0 { 0.0 } else { 2.0 * p * r / (p + r) };
+        (p, r, f1)
+    }
+
+    pub fn support(&self, class: u8) -> usize {
+        if class == 1 {
+            self.tp + self.fn_
+        } else {
+            self.tn + self.fp
+        }
+    }
+}
+
+pub fn confusion(y_true: &[u8], y_pred: &[u8]) -> Confusion {
+    assert_eq!(y_true.len(), y_pred.len());
+    let mut c = Confusion::default();
+    for (&t, &p) in y_true.iter().zip(y_pred) {
+        match (t, p) {
+            (0, 0) => c.tn += 1,
+            (0, 1) => c.fp += 1,
+            (1, 0) => c.fn_ += 1,
+            (1, 1) => c.tp += 1,
+            _ => panic!("labels must be binary"),
+        }
+    }
+    c
+}
+
+/// Full classification report (mirrors sklearn's layout used in Table 3).
+#[derive(Clone, Debug)]
+pub struct ClassificationReport {
+    pub confusion: Confusion,
+    /// (precision, recall, f1, support) for class 0 and class 1
+    pub per_class: [(f64, f64, f64, usize); 2],
+    pub accuracy: f64,
+    pub macro_avg: (f64, f64, f64),
+    pub weighted_avg: (f64, f64, f64),
+}
+
+impl ClassificationReport {
+    pub fn from_predictions(y_true: &[u8], y_pred: &[u8]) -> Self {
+        let c = confusion(y_true, y_pred);
+        let (p0, r0, f0) = c.prf(0);
+        let (p1, r1, f1) = c.prf(1);
+        let (s0, s1) = (c.support(0), c.support(1));
+        let n = (s0 + s1) as f64;
+        let macro_avg = ((p0 + p1) / 2.0, (r0 + r1) / 2.0, (f0 + f1) / 2.0);
+        let weighted_avg = (
+            (p0 * s0 as f64 + p1 * s1 as f64) / n,
+            (r0 * s0 as f64 + r1 * s1 as f64) / n,
+            (f0 * s0 as f64 + f1 * s1 as f64) / n,
+        );
+        Self {
+            confusion: c,
+            per_class: [(p0, r0, f0, s0), (p1, r1, f1, s1)],
+            accuracy: c.accuracy(),
+            macro_avg,
+            weighted_avg,
+        }
+    }
+}
+
+/// ROC curve points (fpr, tpr) sorted by descending score threshold,
+/// beginning at (0,0) and ending at (1,1).
+pub fn roc_curve(y_true: &[u8], scores: &[f64]) -> Vec<(f64, f64)> {
+    assert_eq!(y_true.len(), scores.len());
+    let mut order: Vec<usize> = (0..scores.len()).collect();
+    order.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap());
+    let pos = y_true.iter().filter(|&&y| y == 1).count() as f64;
+    let neg = y_true.len() as f64 - pos;
+    let mut pts = vec![(0.0, 0.0)];
+    let (mut tp, mut fp) = (0.0, 0.0);
+    let mut i = 0;
+    while i < order.len() {
+        // advance over ties as a group
+        let s = scores[order[i]];
+        while i < order.len() && scores[order[i]] == s {
+            if y_true[order[i]] == 1 {
+                tp += 1.0;
+            } else {
+                fp += 1.0;
+            }
+            i += 1;
+        }
+        pts.push((if neg > 0.0 { fp / neg } else { 0.0 }, if pos > 0.0 { tp / pos } else { 0.0 }));
+    }
+    pts
+}
+
+/// Area under the ROC curve (trapezoidal).
+pub fn auc(y_true: &[u8], scores: &[f64]) -> f64 {
+    let pts = roc_curve(y_true, scores);
+    let mut area = 0.0;
+    for w in pts.windows(2) {
+        let (x0, y0) = w[0];
+        let (x1, y1) = w[1];
+        area += (x1 - x0) * (y0 + y1) / 2.0;
+    }
+    area
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn confusion_counts() {
+        let c = confusion(&[0, 0, 1, 1, 1], &[0, 1, 1, 0, 1]);
+        assert_eq!(c, Confusion { tn: 1, fp: 1, fn_: 1, tp: 2 });
+        assert!((c.accuracy() - 0.6).abs() < 1e-12);
+        assert_eq!(c.support(0), 2);
+        assert_eq!(c.support(1), 3);
+    }
+
+    #[test]
+    fn report_matches_hand_computation() {
+        let y = [0, 0, 0, 1, 1];
+        let p = [0, 0, 1, 1, 0];
+        let r = ClassificationReport::from_predictions(&y, &p);
+        // class 1: tp=1 fp=1 fn=1 -> p=0.5 r=0.5 f1=0.5
+        let (p1, r1, f1, s1) = r.per_class[1];
+        assert!((p1 - 0.5).abs() < 1e-12 && (r1 - 0.5).abs() < 1e-12 && (f1 - 0.5).abs() < 1e-12);
+        assert_eq!(s1, 2);
+        assert!((r.accuracy - 0.6).abs() < 1e-12);
+        // weighted avg weights by support 3/2
+        let (wp, _, _) = r.weighted_avg;
+        let (p0, ..) = r.per_class[0];
+        assert!((wp - (p0 * 3.0 + 0.5 * 2.0) / 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn auc_perfect_and_random_and_inverted() {
+        let y = [0, 0, 1, 1];
+        assert!((auc(&y, &[0.1, 0.2, 0.8, 0.9]) - 1.0).abs() < 1e-12);
+        assert!((auc(&y, &[0.9, 0.8, 0.2, 0.1]) - 0.0).abs() < 1e-12);
+        // all-equal scores -> diagonal -> 0.5
+        assert!((auc(&y, &[0.5, 0.5, 0.5, 0.5]) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn roc_endpoints() {
+        let y = [0, 1, 0, 1, 1];
+        let s = [0.1, 0.9, 0.4, 0.35, 0.8];
+        let pts = roc_curve(&y, &s);
+        assert_eq!(pts.first(), Some(&(0.0, 0.0)));
+        assert_eq!(pts.last(), Some(&(1.0, 1.0)));
+        // monotone non-decreasing in both axes
+        for w in pts.windows(2) {
+            assert!(w[1].0 >= w[0].0 && w[1].1 >= w[0].1);
+        }
+    }
+}

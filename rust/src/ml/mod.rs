@@ -1,0 +1,180 @@
+//! From-scratch ML toolkit backing FastEWQ (paper Section 4).
+//!
+//! Six classifiers (logistic regression, linear SVM, random forest, gradient
+//! boosting ("XGB"), kNN, Gaussian naive Bayes) + StandardScaler, stratified
+//! split, classification metrics, ROC/AUC and feature importances — enough
+//! to regenerate Tables 3/5 and Figures 5/6 without sklearn/xgboost.
+
+pub mod crossval;
+pub mod forest;
+pub mod gbdt;
+pub mod gnb;
+pub mod knn;
+pub mod logreg;
+pub mod metrics;
+pub mod scaler;
+pub mod svm;
+pub mod tree;
+
+pub use crossval::{cross_val_accuracy, stratified_folds, wilson_interval};
+pub use forest::RandomForest;
+pub use gbdt::Gbdt;
+pub use gnb::GaussianNb;
+pub use knn::Knn;
+pub use logreg::LogReg;
+pub use metrics::{auc, confusion, roc_curve, ClassificationReport, Confusion};
+pub use scaler::StandardScaler;
+pub use svm::LinearSvm;
+
+use crate::rng::Xoshiro256pp;
+
+/// Binary classifier over dense f64 feature rows.
+pub trait Classifier {
+    fn name(&self) -> &'static str;
+    fn fit(&mut self, x: &[Vec<f64>], y: &[u8]);
+    /// Score in [0,1] interpreted as P(class = 1).
+    fn predict_proba(&self, row: &[f64]) -> f64;
+    fn predict(&self, row: &[f64]) -> u8 {
+        u8::from(self.predict_proba(row) >= 0.5)
+    }
+}
+
+/// Predictions for a whole matrix.
+pub fn predict_all<C: Classifier + ?Sized>(c: &C, x: &[Vec<f64>]) -> Vec<u8> {
+    x.iter().map(|r| c.predict(r)).collect()
+}
+
+pub fn proba_all<C: Classifier + ?Sized>(c: &C, x: &[Vec<f64>]) -> Vec<f64> {
+    x.iter().map(|r| c.predict_proba(r)).collect()
+}
+
+/// Stratified train/test split preserving class balance (paper: 70:30).
+pub fn train_test_split(
+    x: &[Vec<f64>],
+    y: &[u8],
+    test_frac: f64,
+    seed: u64,
+) -> (Vec<Vec<f64>>, Vec<u8>, Vec<Vec<f64>>, Vec<u8>) {
+    assert_eq!(x.len(), y.len());
+    let mut rng = Xoshiro256pp::new(seed);
+    let mut train_idx = Vec::new();
+    let mut test_idx = Vec::new();
+    for class in [0u8, 1u8] {
+        let mut idx: Vec<usize> = (0..y.len()).filter(|&i| y[i] == class).collect();
+        rng.shuffle(&mut idx);
+        let n_test = (idx.len() as f64 * test_frac).round() as usize;
+        test_idx.extend_from_slice(&idx[..n_test]);
+        train_idx.extend_from_slice(&idx[n_test..]);
+    }
+    rng.shuffle(&mut train_idx);
+    rng.shuffle(&mut test_idx);
+    let pick = |idx: &[usize]| -> (Vec<Vec<f64>>, Vec<u8>) {
+        (idx.iter().map(|&i| x[i].clone()).collect(), idx.iter().map(|&i| y[i]).collect())
+    };
+    let (xtr, ytr) = pick(&train_idx);
+    let (xte, yte) = pick(&test_idx);
+    (xtr, ytr, xte, yte)
+}
+
+/// Build the paper's full classifier line-up with its default hyperparameters.
+pub fn all_classifiers(seed: u64) -> Vec<Box<dyn Classifier>> {
+    vec![
+        Box::new(LogReg::default()),
+        Box::new(LinearSvm::default()),
+        Box::new(RandomForest::new(120, 8, seed)),
+        Box::new(Gbdt::new(80, 3, 0.15, seed)),
+        Box::new(Knn::new(7)),
+        Box::new(GaussianNb::default()),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256pp;
+
+    /// Noisy two-cluster dataset every sane classifier should beat 85% on.
+    pub(crate) fn blobs(n: usize, seed: u64) -> (Vec<Vec<f64>>, Vec<u8>) {
+        let mut r = Xoshiro256pp::new(seed);
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for i in 0..n {
+            let c = (i % 2) as u8;
+            let center = if c == 0 { -1.0 } else { 1.0 };
+            x.push(vec![
+                center + r.normal() * 0.6,
+                -center + r.normal() * 0.6,
+                r.normal(), // pure-noise feature
+            ]);
+            y.push(c);
+        }
+        (x, y)
+    }
+
+    /// XOR-ish dataset only non-linear models solve.
+    pub(crate) fn xor(n: usize, seed: u64) -> (Vec<Vec<f64>>, Vec<u8>) {
+        let mut r = Xoshiro256pp::new(seed);
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for _ in 0..n {
+            let a = r.uniform(-1.0, 1.0);
+            let b = r.uniform(-1.0, 1.0);
+            x.push(vec![a, b]);
+            y.push(u8::from(a * b > 0.0));
+        }
+        (x, y)
+    }
+
+    #[test]
+    fn split_is_stratified_and_disjoint() {
+        let (x, y) = blobs(200, 1);
+        let (xtr, ytr, xte, yte) = train_test_split(&x, &y, 0.3, 42);
+        assert_eq!(xtr.len() + xte.len(), 200);
+        assert_eq!(xtr.len(), ytr.len());
+        assert_eq!(xte.len(), yte.len());
+        let pos_te = yte.iter().filter(|&&v| v == 1).count() as f64 / yte.len() as f64;
+        assert!((pos_te - 0.5).abs() < 0.05, "stratification broken: {pos_te}");
+    }
+
+    #[test]
+    fn every_classifier_learns_blobs() {
+        let (x, y) = blobs(300, 2);
+        let (xtr, ytr, xte, yte) = train_test_split(&x, &y, 0.3, 7);
+        for mut c in all_classifiers(5) {
+            c.fit(&xtr, &ytr);
+            let pred = predict_all(c.as_ref(), &xte);
+            let acc = pred.iter().zip(&yte).filter(|(a, b)| a == b).count() as f64
+                / yte.len() as f64;
+            assert!(acc > 0.85, "{} only reached {acc}", c.name());
+        }
+    }
+
+    #[test]
+    fn nonlinear_models_beat_linear_on_xor() {
+        let (x, y) = xor(400, 3);
+        let (xtr, ytr, xte, yte) = train_test_split(&x, &y, 0.3, 9);
+        let acc_of = |c: &mut dyn Classifier| {
+            c.fit(&xtr, &ytr);
+            predict_all(c, &xte).iter().zip(&yte).filter(|(a, b)| a == b).count() as f64
+                / yte.len() as f64
+        };
+        let mut rf = RandomForest::new(80, 8, 1);
+        let mut lr = LogReg::default();
+        let rf_acc = acc_of(&mut rf);
+        let lr_acc = acc_of(&mut lr);
+        assert!(rf_acc > 0.9, "rf {rf_acc}");
+        assert!(lr_acc < 0.7, "logreg should fail xor, got {lr_acc}");
+    }
+
+    #[test]
+    fn proba_in_unit_interval() {
+        let (x, y) = blobs(120, 4);
+        for mut c in all_classifiers(11) {
+            c.fit(&x, &y);
+            for row in &x {
+                let p = c.predict_proba(row);
+                assert!((0.0..=1.0).contains(&p), "{}: p={p}", c.name());
+            }
+        }
+    }
+}

@@ -1,0 +1,85 @@
+//! StandardScaler (paper §4.2): z = (x − μ) / σ per feature, fitted on the
+//! training split only and applied to both splits.
+
+#[derive(Clone, Debug, Default)]
+pub struct StandardScaler {
+    pub mean: Vec<f64>,
+    pub std: Vec<f64>,
+}
+
+impl StandardScaler {
+    pub fn fit(x: &[Vec<f64>]) -> Self {
+        assert!(!x.is_empty());
+        let d = x[0].len();
+        let n = x.len() as f64;
+        let mut mean = vec![0.0; d];
+        for row in x {
+            for (m, &v) in mean.iter_mut().zip(row) {
+                *m += v;
+            }
+        }
+        for m in &mut mean {
+            *m /= n;
+        }
+        let mut var = vec![0.0; d];
+        for row in x {
+            for j in 0..d {
+                let c = row[j] - mean[j];
+                var[j] += c * c;
+            }
+        }
+        let std = var.into_iter().map(|v| (v / n).sqrt().max(1e-12)).collect();
+        Self { mean, std }
+    }
+
+    pub fn transform_row(&self, row: &[f64]) -> Vec<f64> {
+        row.iter()
+            .zip(self.mean.iter().zip(&self.std))
+            .map(|(&v, (&m, &s))| (v - m) / s)
+            .collect()
+    }
+
+    pub fn transform(&self, x: &[Vec<f64>]) -> Vec<Vec<f64>> {
+        x.iter().map(|r| self.transform_row(r)).collect()
+    }
+
+    pub fn fit_transform(x: &[Vec<f64>]) -> (Self, Vec<Vec<f64>>) {
+        let s = Self::fit(x);
+        let t = s.transform(x);
+        (s, t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_mean_unit_std() {
+        let x = vec![vec![1.0, 10.0], vec![2.0, 20.0], vec![3.0, 30.0]];
+        let (_, t) = StandardScaler::fit_transform(&x);
+        for j in 0..2 {
+            let m: f64 = t.iter().map(|r| r[j]).sum::<f64>() / 3.0;
+            let v: f64 = t.iter().map(|r| (r[j] - m) * (r[j] - m)).sum::<f64>() / 3.0;
+            assert!(m.abs() < 1e-12);
+            assert!((v - 1.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn constant_feature_does_not_blow_up() {
+        let x = vec![vec![5.0], vec![5.0], vec![5.0]];
+        let (s, t) = StandardScaler::fit_transform(&x);
+        assert!(t.iter().all(|r| r[0].is_finite() && r[0].abs() < 1e-6));
+        assert!(s.std[0] > 0.0);
+    }
+
+    #[test]
+    fn transform_uses_train_statistics() {
+        let train = vec![vec![0.0], vec![2.0]];
+        let s = StandardScaler::fit(&train);
+        let out = s.transform_row(&[4.0]);
+        // mean 1, std 1 -> (4-1)/1 = 3
+        assert!((out[0] - 3.0).abs() < 1e-12);
+    }
+}

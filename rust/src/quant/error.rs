@@ -1,0 +1,83 @@
+//! Quantization error metrics (used by the ablation benches and the
+//! §2.5 "case for mixed quantization" analysis).
+
+use crate::tensor::Tensor;
+
+/// Mean squared error between two equally-shaped tensors.
+pub fn mse(a: &Tensor, b: &Tensor) -> f64 {
+    assert_eq!(a.shape, b.shape);
+    let n = a.numel() as f64;
+    a.data
+        .iter()
+        .zip(&b.data)
+        .map(|(&x, &y)| {
+            let d = (x - y) as f64;
+            d * d
+        })
+        .sum::<f64>()
+        / n
+}
+
+/// Signal-to-quantization-noise ratio in dB: 10·log10(Σx² / Σ(x−x̂)²).
+pub fn sqnr_db(orig: &Tensor, deq: &Tensor) -> f64 {
+    assert_eq!(orig.shape, deq.shape);
+    let sig: f64 = orig.data.iter().map(|&x| (x as f64) * (x as f64)).sum();
+    let noise: f64 = orig
+        .data
+        .iter()
+        .zip(&deq.data)
+        .map(|(&x, &y)| {
+            let d = (x - y) as f64;
+            d * d
+        })
+        .sum();
+    if noise == 0.0 {
+        f64::INFINITY
+    } else {
+        10.0 * (sig / noise).log10()
+    }
+}
+
+/// Max absolute error.
+pub fn max_abs_err(a: &Tensor, b: &Tensor) -> f64 {
+    assert_eq!(a.shape, b.shape);
+    a.data
+        .iter()
+        .zip(&b.data)
+        .map(|(&x, &y)| ((x - y) as f64).abs())
+        .fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{dequantize, quantize, Precision};
+    use crate::rng::Xoshiro256pp;
+
+    #[test]
+    fn identical_tensors_zero_error() {
+        let t = Tensor::new(vec![2, 2], vec![1.0, -2.0, 3.0, 0.5]);
+        assert_eq!(mse(&t, &t), 0.0);
+        assert_eq!(max_abs_err(&t, &t), 0.0);
+        assert!(sqnr_db(&t, &t).is_infinite());
+    }
+
+    #[test]
+    fn sqnr_improves_roughly_6db_per_bit() {
+        let mut r = Xoshiro256pp::new(0);
+        let w = Tensor::new(vec![128, 64], (0..128 * 64).map(|_| r.normal_f32(0.0, 1.0)).collect());
+        let s8 = sqnr_db(&w, &dequantize(&quantize(&w, Precision::Q8)));
+        let s4 = sqnr_db(&w, &dequantize(&quantize(&w, Precision::Q4)));
+        // 4 extra bits should buy >= ~12 dB even with conservative clipping
+        assert!(s8 - s4 > 12.0, "s8={s8} s4={s4}");
+        assert!(s8 > 30.0);
+    }
+
+    #[test]
+    fn mse_simple_value() {
+        let a = Tensor::new(vec![2], vec![0.0, 0.0]);
+        let b = Tensor::new(vec![2], vec![3.0, 4.0]);
+        assert!((mse(&a, &b) - 12.5).abs() < 1e-12);
+        assert_eq!(max_abs_err(&a, &b), 4.0);
+    }
+}

@@ -1,0 +1,370 @@
+//! Weight-only quantization formats.
+//!
+//! Formats and packing layouts are bit-identical with the L1 Pallas kernels
+//! (`python/compile/kernels/ref.py` / `quant.py`): the Rust side *quantizes
+//! and packs*, the AOT-compiled graph *unpacks and dequantizes in-VMEM* right
+//! before the matmul. All scales are per-output-column, symmetric.
+//!
+//! | format | bits/param | payload layout (k×n matrix)                      |
+//! |--------|-----------|---------------------------------------------------|
+//! | `Raw`  | 32        | f32 row-major                                     |
+//! | `Q8`   | 8         | i8 row-major + f32 scale[n]                       |
+//! | `Q4`   | 4         | u8[k/2,n]: rows 2i,2i+1 -> lo/hi nibble (+8 bias) |
+//! | `Q3`   | 3         | u8[3k/8,n]: 8 rows -> 3 bytes (+4 bias), edge §3.4|
+//! | `T2`   | 2 (1.58)  | u8[k/4,n]: 4 ternary codes/byte (+1 bias)         |
+
+pub mod error;
+
+use crate::tensor::Tensor;
+
+/// Precision levels of the paper's quantization ladder.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Precision {
+    /// Ternary "1.58-bit" (stored as 2 bits/param).
+    T2,
+    /// 3-bit — the §3.4 edge-deployment extension.
+    Q3,
+    /// 4-bit.
+    Q4,
+    /// 8-bit.
+    Q8,
+    /// Unquantized f32.
+    Raw,
+}
+
+impl Precision {
+    pub fn bits_per_param(self) -> f64 {
+        match self {
+            Precision::Raw => 32.0,
+            Precision::Q8 => 8.0,
+            Precision::Q4 => 4.0,
+            Precision::Q3 => 3.0,
+            Precision::T2 => 2.0,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Precision::Raw => "raw",
+            Precision::Q8 => "8bit",
+            Precision::Q4 => "4bit",
+            Precision::Q3 => "3bit",
+            Precision::T2 => "1.58bit",
+        }
+    }
+
+    /// Payload bytes for a k×n matrix in this precision (scales included).
+    pub fn matrix_bytes(self, k: usize, n: usize) -> usize {
+        let scale_bytes = if self == Precision::Raw { 0 } else { 4 * n };
+        let payload = match self {
+            Precision::Raw => 4 * k * n,
+            Precision::Q8 => k * n,
+            Precision::Q4 => k.div_ceil(2) * n,
+            Precision::Q3 => (3 * k.div_ceil(8)) * n,
+            Precision::T2 => k.div_ceil(4) * n,
+        };
+        payload + scale_bytes
+    }
+}
+
+/// A quantized (or raw) 2-D weight matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct QMat {
+    pub prec: Precision,
+    pub rows: usize,
+    pub cols: usize,
+    pub payload: Payload,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Payload {
+    Raw(Vec<f32>),
+    Q8 { q: Vec<i8>, s: Vec<f32> },
+    Q4 { p: Vec<u8>, s: Vec<f32> },
+    Q3 { p: Vec<u8>, s: Vec<f32> },
+    T2 { p: Vec<u8>, s: Vec<f32> },
+}
+
+#[inline]
+fn rte(x: f32) -> f32 {
+    // round half to even — matches jnp.round / np.round in ref.py
+    x.round_ties_even()
+}
+
+/// Quantize a 2-D tensor to `prec`. Packing layouts match ref.py exactly.
+pub fn quantize(w: &Tensor, prec: Precision) -> QMat {
+    let (k, n) = w.dims2();
+    let payload = match prec {
+        Precision::Raw => Payload::Raw(w.data.clone()),
+        Precision::Q8 => {
+            let s: Vec<f32> = w.col_abs_max().iter().map(|m| m.max(1e-12) / 127.0).collect();
+            // §Perf: reciprocal-multiply instead of per-element divide
+            let r: Vec<f32> = s.iter().map(|v| 1.0 / v).collect();
+            let mut q = vec![0i8; k * n];
+            for i in 0..k {
+                let row = &w.data[i * n..(i + 1) * n];
+                let out = &mut q[i * n..(i + 1) * n];
+                for j in 0..n {
+                    out[j] = rte(row[j] * r[j]).clamp(-127.0, 127.0) as i8;
+                }
+            }
+            Payload::Q8 { q, s }
+        }
+        Precision::Q4 => {
+            assert_eq!(k % 2, 0, "Q4 needs even k");
+            let s: Vec<f32> = w.col_abs_max().iter().map(|m| m.max(1e-12) / 7.0).collect();
+            let r: Vec<f32> = s.iter().map(|v| 1.0 / v).collect();
+            let mut p = vec![0u8; (k / 2) * n];
+            for i2 in 0..k / 2 {
+                let row_lo = &w.data[(2 * i2) * n..(2 * i2 + 1) * n];
+                let row_hi = &w.data[(2 * i2 + 1) * n..(2 * i2 + 2) * n];
+                let out = &mut p[i2 * n..(i2 + 1) * n];
+                for j in 0..n {
+                    let lo = (rte(row_lo[j] * r[j]).clamp(-7.0, 7.0) as i32 + 8) as u8;
+                    let hi = (rte(row_hi[j] * r[j]).clamp(-7.0, 7.0) as i32 + 8) as u8;
+                    out[j] = lo | (hi << 4);
+                }
+            }
+            Payload::Q4 { p, s }
+        }
+        Precision::Q3 => {
+            assert_eq!(k % 8, 0, "Q3 needs k % 8 == 0");
+            let s: Vec<f32> = w.col_abs_max().iter().map(|m| m.max(1e-12) / 3.0).collect();
+            let recip: Vec<f32> = s.iter().map(|v| 1.0 / v).collect();
+            // 8 rows -> 3 bytes per column: 24-bit little-endian bitstream of
+            // eight 3-bit codes (q+4 in [1,7]).
+            let mut p = vec![0u8; (3 * k / 8) * n];
+            for g in 0..k / 8 {
+                for j in 0..n {
+                    let mut bits: u32 = 0;
+                    for r8 in 0..8 {
+                        let q = rte(w.data[(8 * g + r8) * n + j] * recip[j]).clamp(-3.0, 3.0) as i32 + 4;
+                        bits |= (q as u32) << (3 * r8);
+                    }
+                    p[(3 * g) * n + j] = (bits & 0xFF) as u8;
+                    p[(3 * g + 1) * n + j] = ((bits >> 8) & 0xFF) as u8;
+                    p[(3 * g + 2) * n + j] = ((bits >> 16) & 0xFF) as u8;
+                }
+            }
+            Payload::Q3 { p, s }
+        }
+        Precision::T2 => {
+            assert_eq!(k % 4, 0, "T2 needs k % 4 == 0");
+            let s: Vec<f32> = w.col_abs_mean().iter().map(|m| m.max(1e-12)).collect();
+            let recip: Vec<f32> = s.iter().map(|v| 1.0 / v).collect();
+            let mut p = vec![0u8; (k / 4) * n];
+            for g in 0..k / 4 {
+                for j in 0..n {
+                    let mut byte = 0u8;
+                    for r4 in 0..4 {
+                        let q = rte(w.data[(4 * g + r4) * n + j] * recip[j]).clamp(-1.0, 1.0) as i32 + 1;
+                        byte |= (q as u8) << (2 * r4);
+                    }
+                    p[g * n + j] = byte;
+                }
+            }
+            Payload::T2 { p, s }
+        }
+    };
+    QMat { prec, rows: k, cols: n, payload }
+}
+
+/// Dequantize back to f32 (used for the Q3 edge path and error metrics;
+/// the serving hot path dequantizes in-graph instead).
+pub fn dequantize(m: &QMat) -> Tensor {
+    let (k, n) = (m.rows, m.cols);
+    let mut out = vec![0.0f32; k * n];
+    match &m.payload {
+        Payload::Raw(d) => out.copy_from_slice(d),
+        Payload::Q8 { q, s } => {
+            for i in 0..k {
+                for j in 0..n {
+                    out[i * n + j] = q[i * n + j] as f32 * s[j];
+                }
+            }
+        }
+        Payload::Q4 { p, s } => {
+            for i2 in 0..k / 2 {
+                for j in 0..n {
+                    let b = p[i2 * n + j];
+                    out[(2 * i2) * n + j] = ((b & 0xF) as i32 - 8) as f32 * s[j];
+                    out[(2 * i2 + 1) * n + j] = (((b >> 4) & 0xF) as i32 - 8) as f32 * s[j];
+                }
+            }
+        }
+        Payload::Q3 { p, s } => {
+            for g in 0..k / 8 {
+                for j in 0..n {
+                    let bits = p[(3 * g) * n + j] as u32
+                        | ((p[(3 * g + 1) * n + j] as u32) << 8)
+                        | ((p[(3 * g + 2) * n + j] as u32) << 16);
+                    for r in 0..8 {
+                        let q = ((bits >> (3 * r)) & 0x7) as i32 - 4;
+                        out[(8 * g + r) * n + j] = q as f32 * s[j];
+                    }
+                }
+            }
+        }
+        Payload::T2 { p, s } => {
+            for g in 0..k / 4 {
+                for j in 0..n {
+                    let b = p[g * n + j];
+                    for r in 0..4 {
+                        let q = ((b >> (2 * r)) & 0x3) as i32 - 1;
+                        out[(4 * g + r) * n + j] = q as f32 * s[j];
+                    }
+                }
+            }
+        }
+    }
+    Tensor::new(vec![k, n], out)
+}
+
+impl QMat {
+    /// Stored size in bytes (payload + scales).
+    pub fn size_bytes(&self) -> usize {
+        self.prec.matrix_bytes(self.rows, self.cols)
+    }
+
+    pub fn scales(&self) -> Option<&[f32]> {
+        match &self.payload {
+            Payload::Raw(_) => None,
+            Payload::Q8 { s, .. }
+            | Payload::Q4 { s, .. }
+            | Payload::Q3 { s, .. }
+            | Payload::T2 { s, .. } => Some(s),
+        }
+    }
+
+    /// Raw packed payload bytes (for feeding the PJRT executable).
+    pub fn packed_bytes(&self) -> Vec<u8> {
+        match &self.payload {
+            Payload::Raw(d) => d.iter().flat_map(|v| v.to_le_bytes()).collect(),
+            Payload::Q8 { q, .. } => q.iter().map(|&v| v as u8).collect(),
+            Payload::Q4 { p, .. } | Payload::Q3 { p, .. } | Payload::T2 { p, .. } => p.clone(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256pp;
+
+    fn rand_tensor(k: usize, n: usize, seed: u64, std: f32) -> Tensor {
+        let mut r = Xoshiro256pp::new(seed);
+        Tensor::new(vec![k, n], (0..k * n).map(|_| r.normal_f32(0.0, std)).collect())
+    }
+
+    #[test]
+    fn q8_roundtrip_error_bounded() {
+        let w = rand_tensor(64, 48, 0, 0.5);
+        let q = quantize(&w, Precision::Q8);
+        let wd = dequantize(&q);
+        let s = q.scales().unwrap();
+        for i in 0..64 {
+            for j in 0..48 {
+                assert!((wd.at2(i, j) - w.at2(i, j)).abs() <= 0.5 * s[j] + 1e-7);
+            }
+        }
+    }
+
+    #[test]
+    fn q4_roundtrip_error_bounded() {
+        let w = rand_tensor(64, 48, 1, 0.5);
+        let q = quantize(&w, Precision::Q4);
+        let wd = dequantize(&q);
+        let s = q.scales().unwrap();
+        for i in 0..64 {
+            for j in 0..48 {
+                assert!((wd.at2(i, j) - w.at2(i, j)).abs() <= 0.5 * s[j] + 1e-7);
+            }
+        }
+    }
+
+    #[test]
+    fn q3_roundtrip_error_bounded() {
+        let w = rand_tensor(64, 16, 2, 0.5);
+        let q = quantize(&w, Precision::Q3);
+        let wd = dequantize(&q);
+        let s = q.scales().unwrap();
+        for i in 0..64 {
+            for j in 0..16 {
+                assert!((wd.at2(i, j) - w.at2(i, j)).abs() <= 0.5 * s[j] + 1e-7);
+            }
+        }
+    }
+
+    #[test]
+    fn t2_values_are_ternary_multiples() {
+        let w = rand_tensor(64, 16, 3, 1.0);
+        let q = quantize(&w, Precision::T2);
+        let wd = dequantize(&q);
+        let s = q.scales().unwrap();
+        for i in 0..64 {
+            for j in 0..16 {
+                let r = wd.at2(i, j) / s[j];
+                assert!(
+                    (r - r.round()).abs() < 1e-5 && (-1.0..=1.0).contains(&r.round()),
+                    "ratio {r}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn requantize_is_fixed_point() {
+        // quantize(dequantize(q)) == q for Q4 (idempotence of the lattice)
+        let w = rand_tensor(32, 24, 4, 0.7);
+        let q1 = quantize(&w, Precision::Q4);
+        let q2 = quantize(&dequantize(&q1), Precision::Q4);
+        assert_eq!(q1, q2);
+    }
+
+    #[test]
+    fn size_model_table9() {
+        // bits/param ordering and exact byte counts
+        let (k, n) = (96, 384);
+        let raw = Precision::Raw.matrix_bytes(k, n);
+        let q8 = Precision::Q8.matrix_bytes(k, n);
+        let q4 = Precision::Q4.matrix_bytes(k, n);
+        let q3 = Precision::Q3.matrix_bytes(k, n);
+        let t2 = Precision::T2.matrix_bytes(k, n);
+        assert_eq!(raw, 4 * k * n);
+        assert_eq!(q8, k * n + 4 * n);
+        assert_eq!(q4, k * n / 2 + 4 * n);
+        assert_eq!(q3, 3 * k * n / 8 + 4 * n);
+        assert_eq!(t2, k * n / 4 + 4 * n);
+        assert!(raw > q8 && q8 > q4 && q4 > q3 && q3 > t2);
+    }
+
+    #[test]
+    fn packed_bytes_lengths() {
+        let w = rand_tensor(32, 16, 5, 0.5);
+        assert_eq!(quantize(&w, Precision::Raw).packed_bytes().len(), 32 * 16 * 4);
+        assert_eq!(quantize(&w, Precision::Q8).packed_bytes().len(), 32 * 16);
+        assert_eq!(quantize(&w, Precision::Q4).packed_bytes().len(), 16 * 16);
+        assert_eq!(quantize(&w, Precision::Q3).packed_bytes().len(), 12 * 16);
+        assert_eq!(quantize(&w, Precision::T2).packed_bytes().len(), 8 * 16);
+    }
+
+    #[test]
+    fn precision_ordering() {
+        assert!(Precision::T2 < Precision::Q3);
+        assert!(Precision::Q3 < Precision::Q4);
+        assert!(Precision::Q4 < Precision::Q8);
+        assert!(Precision::Q8 < Precision::Raw);
+    }
+
+    #[test]
+    fn error_decreases_with_precision() {
+        let w = rand_tensor(96, 96, 6, 0.8);
+        let mse = |p: Precision| error::mse(&w, &dequantize(&quantize(&w, p)));
+        let e8 = mse(Precision::Q8);
+        let e4 = mse(Precision::Q4);
+        let e3 = mse(Precision::Q3);
+        let e2 = mse(Precision::T2);
+        assert!(e8 < e4 && e4 < e3 && e3 < e2, "{e8} {e4} {e3} {e2}");
+        assert_eq!(mse(Precision::Raw), 0.0);
+    }
+}

@@ -1,0 +1,201 @@
+//! Report rendering: fixed-width tables and ASCII figures (histograms, bar
+//! charts, scatter/line plots) used by `ewq exp <id>` to regenerate every
+//! paper table and figure in the terminal, plus CSV emission for plotting.
+
+/// A simple column-aligned table.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let sep: String = widths
+            .iter()
+            .map(|w| "-".repeat(w + 2))
+            .collect::<Vec<_>>()
+            .join("+");
+        let fmt_row = |cells: &[String]| -> String {
+            (0..ncol)
+                .map(|i| format!(" {:<w$} ", cells[i], w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("|")
+        };
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("== {} ==\n", self.title));
+        }
+        out.push_str(&fmt_row(&self.headers));
+        out.push('\n');
+        out.push_str(&sep);
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&fmt_row(r));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn to_csv(&self) -> String {
+        let esc = |s: &str| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let mut out = self.headers.iter().map(|h| esc(h)).collect::<Vec<_>>().join(",");
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&r.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Horizontal ASCII bar chart (used for Fig. 2 histograms / Fig. 5 importances).
+pub fn bar_chart(title: &str, labels: &[String], values: &[f64], width: usize) -> String {
+    assert_eq!(labels.len(), values.len());
+    let maxv = values.iter().cloned().fold(f64::MIN, f64::max).max(1e-12);
+    let lw = labels.iter().map(|l| l.len()).max().unwrap_or(0);
+    let mut out = format!("-- {title} --\n");
+    for (l, &v) in labels.iter().zip(values) {
+        let n = ((v / maxv) * width as f64).round().max(0.0) as usize;
+        out.push_str(&format!("{l:>lw$} | {} {v:.4}\n", "#".repeat(n)));
+    }
+    out
+}
+
+/// Histogram of values into `bins` equal-width buckets, rendered as bars.
+pub fn histogram(title: &str, values: &[f64], bins: usize, width: usize) -> String {
+    assert!(bins > 0 && !values.is_empty());
+    let lo = values.iter().cloned().fold(f64::MAX, f64::min);
+    let hi = values.iter().cloned().fold(f64::MIN, f64::max);
+    let span = (hi - lo).max(1e-12);
+    let mut counts = vec![0usize; bins];
+    for &v in values {
+        let mut b = ((v - lo) / span * bins as f64) as usize;
+        if b >= bins {
+            b = bins - 1;
+        }
+        counts[b] += 1;
+    }
+    let labels: Vec<String> = (0..bins)
+        .map(|b| format!("[{:.3},{:.3})", lo + span * b as f64 / bins as f64, lo + span * (b + 1) as f64 / bins as f64))
+        .collect();
+    bar_chart(title, &labels, &counts.iter().map(|&c| c as f64).collect::<Vec<_>>(), width)
+}
+
+/// Simple y-vs-x ASCII line/scatter plot (Fig. 1 entropy-vs-block, Fig. 6 ROC).
+pub fn scatter(title: &str, xs: &[f64], ys: &[f64], rows: usize, cols: usize) -> String {
+    assert_eq!(xs.len(), ys.len());
+    assert!(!xs.is_empty());
+    let (x0, x1) = (
+        xs.iter().cloned().fold(f64::MAX, f64::min),
+        xs.iter().cloned().fold(f64::MIN, f64::max),
+    );
+    let (y0, y1) = (
+        ys.iter().cloned().fold(f64::MAX, f64::min),
+        ys.iter().cloned().fold(f64::MIN, f64::max),
+    );
+    let xs_span = (x1 - x0).max(1e-12);
+    let ys_span = (y1 - y0).max(1e-12);
+    let mut grid = vec![vec![b' '; cols]; rows];
+    for (&x, &y) in xs.iter().zip(ys) {
+        let c = (((x - x0) / xs_span) * (cols - 1) as f64).round() as usize;
+        let r = (((y - y0) / ys_span) * (rows - 1) as f64).round() as usize;
+        grid[rows - 1 - r][c] = b'*';
+    }
+    let mut out = format!("-- {title} --  y:[{y0:.4},{y1:.4}] x:[{x0:.2},{x1:.2}]\n");
+    for row in grid {
+        out.push('|');
+        out.push_str(std::str::from_utf8(&row).unwrap());
+        out.push('\n');
+    }
+    out.push('+');
+    out.push_str(&"-".repeat(cols));
+    out.push('\n');
+    out
+}
+
+/// Format a fraction as a percentage string with sign, e.g. -18.98%.
+pub fn pct(x: f64) -> String {
+    format!("{:+.2}%", 100.0 * x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("demo", &["model", "acc"]);
+        t.row(vec!["tl-llama".into(), "0.68".into()]);
+        t.row(vec!["x".into(), "0.5".into()]);
+        let s = t.render();
+        assert!(s.contains("== demo =="));
+        assert!(s.contains("tl-llama"));
+        let lines: Vec<&str> = s.lines().collect();
+        // header + sep + 2 rows + title
+        assert_eq!(lines.len(), 5);
+        assert_eq!(lines[2].len(), lines[3].len());
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn arity_checked() {
+        Table::new("t", &["a", "b"]).row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn csv_escapes() {
+        let mut t = Table::new("", &["a", "b"]);
+        t.row(vec!["x,y".into(), "q\"q".into()]);
+        let csv = t.to_csv();
+        assert!(csv.contains("\"x,y\""));
+        assert!(csv.contains("\"q\"\"q\""));
+    }
+
+    #[test]
+    fn histogram_counts_everything() {
+        let vals = vec![0.0, 0.1, 0.5, 0.9, 1.0];
+        let h = histogram("h", &vals, 2, 10);
+        assert!(h.contains("#"));
+    }
+
+    #[test]
+    fn scatter_contains_points() {
+        let s = scatter("s", &[0.0, 1.0, 2.0], &[0.0, 1.0, 4.0], 5, 20);
+        assert_eq!(s.matches('*').count(), 3);
+    }
+
+    #[test]
+    fn pct_formats() {
+        assert_eq!(pct(-0.1898), "-18.98%");
+        assert_eq!(pct(0.0032), "+0.32%");
+    }
+}

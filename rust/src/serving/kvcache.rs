@@ -1,0 +1,342 @@
+//! Paged KV-cache manager with entropy-style precision tiers — the paper's
+//! §7 "System Integration / KV cache compression" future-work direction,
+//! built as a real substrate: page-granular allocation (vLLM-flavored),
+//! per-sequence page tables, and quantized page storage (fp32 / int8 /
+//! int4) with the same symmetric per-column scheme as the weight formats.
+//!
+//! The demo decode path recomputes full sequences (seq_len 32), so this
+//! manager is exercised by the test/bench surface and by the cluster
+//! planner's memory accounting rather than the tiny-model hot loop.
+
+use anyhow::{bail, Result};
+
+use crate::quant::Precision;
+
+/// Fixed page geometry: `page_tokens` KV slots of `head_dim * n_heads * 2`
+/// (K and V) floats each.
+#[derive(Clone, Copy, Debug)]
+pub struct KvGeometry {
+    pub page_tokens: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+}
+
+impl KvGeometry {
+    pub fn floats_per_token(&self) -> usize {
+        2 * self.n_heads * self.head_dim
+    }
+
+    pub fn page_bytes(&self, prec: Precision) -> usize {
+        let floats = self.page_tokens * self.floats_per_token();
+        match prec {
+            Precision::Raw => 4 * floats,
+            Precision::Q8 => floats + 4 * self.floats_per_token(), // + scale/token-col
+            Precision::Q4 => floats / 2 + 4 * self.floats_per_token(),
+            Precision::Q3 | Precision::T2 => floats / 2 + 4 * self.floats_per_token(),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+struct Page {
+    data: Vec<u8>,
+    prec: Precision,
+    used_tokens: usize,
+}
+
+/// Page-granular KV cache for many concurrent sequences.
+pub struct KvCache {
+    geom: KvGeometry,
+    budget_bytes: usize,
+    allocated_bytes: usize,
+    pages: Vec<Option<Page>>,
+    free_list: Vec<usize>,
+    /// sequence id -> page ids in order
+    tables: std::collections::BTreeMap<u64, Vec<usize>>,
+    prec: Precision,
+}
+
+impl KvCache {
+    pub fn new(geom: KvGeometry, budget_bytes: usize, prec: Precision) -> Self {
+        assert!(matches!(prec, Precision::Raw | Precision::Q8 | Precision::Q4));
+        Self {
+            geom,
+            budget_bytes,
+            allocated_bytes: 0,
+            pages: Vec::new(),
+            free_list: Vec::new(),
+            tables: std::collections::BTreeMap::new(),
+            prec,
+        }
+    }
+
+    pub fn allocated_bytes(&self) -> usize {
+        self.allocated_bytes
+    }
+
+    pub fn live_sequences(&self) -> usize {
+        self.tables.len()
+    }
+
+    fn alloc_page(&mut self) -> Result<usize> {
+        let bytes = self.geom.page_bytes(self.prec);
+        if let Some(id) = self.free_list.pop() {
+            self.pages[id] =
+                Some(Page { data: vec![0; bytes], prec: self.prec, used_tokens: 0 });
+            self.allocated_bytes += bytes;
+            return Ok(id);
+        }
+        if self.allocated_bytes + bytes > self.budget_bytes {
+            bail!("kv-cache budget exhausted ({} + {bytes} > {})", self.allocated_bytes, self.budget_bytes);
+        }
+        self.pages.push(Some(Page { data: vec![0; bytes], prec: self.prec, used_tokens: 0 }));
+        self.allocated_bytes += bytes;
+        Ok(self.pages.len() - 1)
+    }
+
+    /// Append `kv` (one token's K+V floats) to a sequence, allocating pages
+    /// on demand. Quantizes into the page store per the cache precision.
+    pub fn append(&mut self, seq: u64, kv: &[f32]) -> Result<()> {
+        if kv.len() != self.geom.floats_per_token() {
+            bail!("kv length {} != geometry {}", kv.len(), self.geom.floats_per_token());
+        }
+        let need_new = match self.tables.get(&seq).and_then(|t| t.last()) {
+            None => true,
+            Some(&pid) => {
+                self.pages[pid].as_ref().map(|p| p.used_tokens >= self.geom.page_tokens).unwrap_or(true)
+            }
+        };
+        if need_new {
+            let pid = self.alloc_page()?;
+            self.tables.entry(seq).or_default().push(pid);
+        }
+        let pid = *self.tables[&seq].last().unwrap();
+        let geom = self.geom;
+        let page = self.pages[pid].as_mut().unwrap();
+        let slot = page.used_tokens;
+        encode_token(page, slot, kv, &geom);
+        page.used_tokens += 1;
+        Ok(())
+    }
+
+    /// Read a token's KV back (dequantized).
+    pub fn read(&self, seq: u64, token_idx: usize) -> Result<Vec<f32>> {
+        let table = self.tables.get(&seq).ok_or_else(|| anyhow::anyhow!("unknown seq {seq}"))?;
+        let page_no = token_idx / self.geom.page_tokens;
+        let slot = token_idx % self.geom.page_tokens;
+        let pid = *table
+            .get(page_no)
+            .ok_or_else(|| anyhow::anyhow!("token {token_idx} beyond sequence"))?;
+        let page = self.pages[pid].as_ref().unwrap();
+        if slot >= page.used_tokens {
+            bail!("token {token_idx} not written yet");
+        }
+        Ok(decode_token(page, slot, &self.geom))
+    }
+
+    /// Free all pages of a sequence.
+    pub fn release(&mut self, seq: u64) {
+        if let Some(table) = self.tables.remove(&seq) {
+            for pid in table {
+                if let Some(p) = self.pages[pid].take() {
+                    self.allocated_bytes -= self.geom.page_bytes(p.prec);
+                    self.free_list.push(pid);
+                }
+            }
+        }
+    }
+
+    /// Bytes one full sequence of `tokens` costs at this precision.
+    pub fn sequence_bytes(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.geom.page_tokens) * self.geom.page_bytes(self.prec)
+    }
+}
+
+fn encode_token(page: &mut Page, slot: usize, kv: &[f32], geom: &KvGeometry) {
+    let f = geom.floats_per_token();
+    match page.prec {
+        Precision::Raw => {
+            let base = slot * f * 4;
+            for (i, v) in kv.iter().enumerate() {
+                page.data[base + 4 * i..base + 4 * i + 4].copy_from_slice(&v.to_le_bytes());
+            }
+        }
+        Precision::Q8 => {
+            // per-token symmetric scale stored in the page tail
+            let maxabs = kv.iter().fold(0f32, |m, v| m.max(v.abs())).max(1e-12);
+            let scale = maxabs / 127.0;
+            let base = slot * f;
+            for (i, v) in kv.iter().enumerate() {
+                page.data[base + i] = ((v / scale).round().clamp(-127.0, 127.0) as i8) as u8;
+            }
+            let tail = geom.page_tokens * f + slot * 4;
+            page.data[tail..tail + 4].copy_from_slice(&scale.to_le_bytes());
+        }
+        Precision::Q4 => {
+            let maxabs = kv.iter().fold(0f32, |m, v| m.max(v.abs())).max(1e-12);
+            let scale = maxabs / 7.0;
+            let base = slot * f / 2;
+            for i in 0..f / 2 {
+                let lo = (kv[2 * i] / scale).round().clamp(-7.0, 7.0) as i32 + 8;
+                let hi = (kv[2 * i + 1] / scale).round().clamp(-7.0, 7.0) as i32 + 8;
+                page.data[base + i] = (lo | (hi << 4)) as u8;
+            }
+            let tail = geom.page_tokens * f / 2 + slot * 4;
+            page.data[tail..tail + 4].copy_from_slice(&scale.to_le_bytes());
+        }
+        _ => unreachable!(),
+    }
+}
+
+fn decode_token(page: &Page, slot: usize, geom: &KvGeometry) -> Vec<f32> {
+    let f = geom.floats_per_token();
+    match page.prec {
+        Precision::Raw => {
+            let base = slot * f * 4;
+            (0..f)
+                .map(|i| {
+                    f32::from_le_bytes(
+                        page.data[base + 4 * i..base + 4 * i + 4].try_into().unwrap(),
+                    )
+                })
+                .collect()
+        }
+        Precision::Q8 => {
+            let tail = geom.page_tokens * f + slot * 4;
+            let scale = f32::from_le_bytes(page.data[tail..tail + 4].try_into().unwrap());
+            let base = slot * f;
+            (0..f).map(|i| (page.data[base + i] as i8) as f32 * scale).collect()
+        }
+        Precision::Q4 => {
+            let tail = geom.page_tokens * f / 2 + slot * 4;
+            let scale = f32::from_le_bytes(page.data[tail..tail + 4].try_into().unwrap());
+            let base = slot * f / 2;
+            let mut out = Vec::with_capacity(f);
+            for i in 0..f / 2 {
+                let b = page.data[base + i] as i32;
+                out.push(((b & 0xF) - 8) as f32 * scale);
+                out.push((((b >> 4) & 0xF) - 8) as f32 * scale);
+            }
+            out
+        }
+        _ => unreachable!(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proptest_lite::check;
+    use crate::rng::Xoshiro256pp;
+
+    fn geom() -> KvGeometry {
+        KvGeometry { page_tokens: 4, n_heads: 2, head_dim: 8 }
+    }
+
+    #[test]
+    fn roundtrip_raw_exact() {
+        let g = geom();
+        let mut c = KvCache::new(g, 1 << 20, Precision::Raw);
+        let kv: Vec<f32> = (0..g.floats_per_token()).map(|i| i as f32 * 0.5 - 3.0).collect();
+        c.append(1, &kv).unwrap();
+        assert_eq!(c.read(1, 0).unwrap(), kv);
+    }
+
+    #[test]
+    fn roundtrip_q8_bounded_error() {
+        let g = geom();
+        let mut c = KvCache::new(g, 1 << 20, Precision::Q8);
+        let mut rng = Xoshiro256pp::new(1);
+        let kv: Vec<f32> = (0..g.floats_per_token()).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        c.append(7, &kv).unwrap();
+        let back = c.read(7, 0).unwrap();
+        let maxabs = kv.iter().fold(0f32, |m, v| m.max(v.abs()));
+        for (a, b) in kv.iter().zip(&back) {
+            assert!((a - b).abs() <= maxabs / 127.0 * 0.51 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn q4_cache_is_smaller_than_q8_than_raw() {
+        let g = geom();
+        let raw = KvCache::new(g, 1 << 30, Precision::Raw).sequence_bytes(128);
+        let q8 = KvCache::new(g, 1 << 30, Precision::Q8).sequence_bytes(128);
+        let q4 = KvCache::new(g, 1 << 30, Precision::Q4).sequence_bytes(128);
+        assert!(raw > q8 && q8 > q4, "{raw} {q8} {q4}");
+    }
+
+    #[test]
+    fn pages_allocate_on_demand_and_release() {
+        let g = geom();
+        let mut c = KvCache::new(g, 1 << 20, Precision::Q8);
+        let kv = vec![0.5f32; g.floats_per_token()];
+        for _ in 0..9 {
+            c.append(3, &kv).unwrap(); // 9 tokens -> 3 pages of 4
+        }
+        assert_eq!(c.allocated_bytes(), 3 * g.page_bytes(Precision::Q8));
+        assert_eq!(c.live_sequences(), 1);
+        c.release(3);
+        assert_eq!(c.allocated_bytes(), 0);
+        assert_eq!(c.live_sequences(), 0);
+        assert!(c.read(3, 0).is_err());
+    }
+
+    #[test]
+    fn budget_is_enforced_and_freed_pages_are_reused() {
+        let g = geom();
+        let one_page = g.page_bytes(Precision::Q8);
+        let mut c = KvCache::new(g, 2 * one_page, Precision::Q8);
+        let kv = vec![0.1f32; g.floats_per_token()];
+        for _ in 0..8 {
+            c.append(1, &kv).unwrap(); // fills 2 pages exactly
+        }
+        assert!(c.append(1, &kv).is_err(), "third page must exceed budget");
+        c.release(1);
+        for _ in 0..8 {
+            c.append(2, &kv).unwrap(); // reuses the freed pages
+        }
+        assert_eq!(c.allocated_bytes(), 2 * one_page);
+    }
+
+    #[test]
+    fn property_interleaved_sequences_are_isolated() {
+        check(
+            5,
+            25,
+            6,
+            |gen| {
+                let n_seqs = gen.usize_in(1, 4);
+                let tokens = gen.usize_in(1, 10);
+                let seed = gen.usize_in(0, 1 << 30) as u64;
+                (n_seqs, tokens, seed)
+            },
+            |&(n_seqs, tokens, seed)| {
+                let g = geom();
+                let mut c = KvCache::new(g, 1 << 22, Precision::Raw);
+                let mut rng = Xoshiro256pp::new(seed);
+                let mut expect: Vec<Vec<Vec<f32>>> = vec![Vec::new(); n_seqs];
+                for t in 0..tokens {
+                    for s in 0..n_seqs {
+                        let kv: Vec<f32> =
+                            (0..g.floats_per_token()).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+                        c.append(s as u64, &kv).map_err(|e| e.to_string())?;
+                        expect[s].push(kv);
+                        let back = c.read(s as u64, t).map_err(|e| e.to_string())?;
+                        if back != expect[s][t] {
+                            return Err(format!("seq {s} tok {t} mismatch"));
+                        }
+                    }
+                }
+                // re-verify everything at the end (no cross-sequence clobber)
+                for s in 0..n_seqs {
+                    for t in 0..tokens {
+                        if c.read(s as u64, t).map_err(|e| e.to_string())? != expect[s][t] {
+                            return Err(format!("late mismatch seq {s} tok {t}"));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,334 @@
+//! Serving coordinator — the L3 request path.
+//!
+//! A worker thread owns the PJRT runtime (the client is not `Send`, so it is
+//! created inside the worker) and a quantized model instance; the front end
+//! submits requests over a channel. A dynamic batcher groups up to
+//! `max_batch` requests or waits at most `max_wait`, then executes one
+//! full-sequence forward and answers every request in the batch.
+//!
+//! Cross-machine block placement (from `cluster::Distribution`) is simulated:
+//! each batch is charged `hops × link_latency` of virtual network time,
+//! reported separately from wall-clock latency.
+
+pub mod kvcache;
+pub mod trace;
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::config::ServeConfig;
+use crate::ewq::QuantPlan;
+use crate::model::{ModelExecutor, QuantizedModel};
+use crate::runtime::Runtime;
+use crate::zoo::ModelDir;
+
+/// One generation request: a token context, answered with the next token.
+#[derive(Debug)]
+pub struct Request {
+    pub id: u64,
+    pub context: Vec<i32>,
+    submitted: Instant,
+    resp: Sender<Response>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub next_token: i32,
+    /// wall-clock queue+compute latency
+    pub latency: Duration,
+    /// simulated cross-machine network time for the batch
+    pub network_latency_us: u64,
+    pub batch_size: usize,
+}
+
+enum Msg {
+    Req(Request),
+    Stop(Sender<ServingMetrics>),
+}
+
+/// Aggregate serving metrics.
+#[derive(Clone, Debug, Default)]
+pub struct ServingMetrics {
+    pub completed: usize,
+    pub batches: usize,
+    pub latencies_us: Vec<u64>,
+    pub wall_time: Duration,
+    pub max_batch_observed: usize,
+    pub virtual_network_us: u64,
+}
+
+impl ServingMetrics {
+    pub fn percentile_us(&self, p: f64) -> u64 {
+        if self.latencies_us.is_empty() {
+            return 0;
+        }
+        let mut v = self.latencies_us.clone();
+        v.sort_unstable();
+        v[((v.len() as f64 * p) as usize).min(v.len() - 1)]
+    }
+
+    pub fn throughput_rps(&self) -> f64 {
+        self.completed as f64 / self.wall_time.as_secs_f64().max(1e-9)
+    }
+
+    pub fn mean_batch(&self) -> f64 {
+        self.completed as f64 / self.batches.max(1) as f64
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "{} reqs in {:?} ({:.1} req/s), batches {} (mean {:.2}, max {}), \
+             p50 {}us p95 {}us p99 {}us, virtual-net {}us",
+            self.completed,
+            self.wall_time,
+            self.throughput_rps(),
+            self.batches,
+            self.mean_batch(),
+            self.max_batch_observed,
+            self.percentile_us(0.50),
+            self.percentile_us(0.95),
+            self.percentile_us(0.99),
+            self.virtual_network_us,
+        )
+    }
+}
+
+/// Handle to a running coordinator.
+pub struct Coordinator {
+    tx: Sender<Msg>,
+    handle: Option<std::thread::JoinHandle<()>>,
+    next_id: std::sync::atomic::AtomicU64,
+}
+
+impl Coordinator {
+    /// Start the worker. `network_hops` is the placement's hop count
+    /// (0 = single machine); `link_latency_us` is charged per hop per batch.
+    pub fn start(
+        model_path: std::path::PathBuf,
+        plan: QuantPlan,
+        cfg: ServeConfig,
+        network_hops: usize,
+        link_latency_us: u64,
+    ) -> Result<Self> {
+        let (tx, rx) = channel::<Msg>();
+        let (ready_tx, ready_rx) = channel::<Result<(), String>>();
+        let handle = std::thread::Builder::new()
+            .name("ewq-coordinator".into())
+            .spawn(move || {
+                if let Err(e) =
+                    worker(model_path, plan, cfg, network_hops, link_latency_us, rx, ready_tx)
+                {
+                    eprintln!("coordinator worker failed: {e:#}");
+                }
+            })
+            .context("spawn coordinator")?;
+        // block until the worker has loaded + compiled + warmed the model so
+        // request latencies never include one-off startup cost
+        match ready_rx.recv() {
+            Ok(Ok(())) => {}
+            Ok(Err(msg)) => anyhow::bail!("coordinator startup failed: {msg}"),
+            Err(_) => anyhow::bail!("coordinator died during startup"),
+        }
+        Ok(Self { tx, handle: Some(handle), next_id: 0.into() })
+    }
+
+    /// Submit a context; returns the response receiver.
+    pub fn submit(&self, context: Vec<i32>) -> Receiver<Response> {
+        let (rtx, rrx) = channel();
+        let id = self.next_id.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let _ = self.tx.send(Msg::Req(Request {
+            id,
+            context,
+            submitted: Instant::now(),
+            resp: rtx,
+        }));
+        rrx
+    }
+
+    /// Stop the worker and collect metrics.
+    pub fn shutdown(mut self) -> ServingMetrics {
+        let (mtx, mrx) = channel();
+        let _ = self.tx.send(Msg::Stop(mtx));
+        let metrics = mrx.recv().unwrap_or_default();
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+        metrics
+    }
+}
+
+fn worker(
+    model_path: std::path::PathBuf,
+    plan: QuantPlan,
+    cfg: ServeConfig,
+    network_hops: usize,
+    link_latency_us: u64,
+    rx: Receiver<Msg>,
+    ready: Sender<Result<(), String>>,
+) -> Result<()> {
+    // PJRT client lives entirely inside this thread (not Send).
+    let setup = (|| -> Result<_> {
+        let rt = Runtime::cpu()?;
+        let model = ModelDir::load(&model_path)?;
+        let qm = QuantizedModel::build(&model, &plan)?;
+        Ok((rt, model, qm))
+    })();
+    let (rt, model, qm) = match setup {
+        Ok(v) => v,
+        Err(e) => {
+            let _ = ready.send(Err(format!("{e:#}")));
+            return Err(e);
+        }
+    };
+    let ex = ModelExecutor::new(&rt, &model);
+    if let Err(e) = ex.warmup() {
+        let _ = ready.send(Err(format!("{e:#}")));
+        return Err(e);
+    }
+    let _ = ready.send(Ok(()));
+
+    let mut metrics = ServingMetrics::default();
+    let started = Instant::now();
+    let max_wait = Duration::from_micros(cfg.max_wait_us);
+    let batch_cap = cfg.max_batch.min(model.schema.eval_batch);
+
+    let mut pending: Vec<Request> = Vec::new();
+    loop {
+        // blocking wait for the first request (or stop)
+        if pending.is_empty() {
+            match rx.recv() {
+                Ok(Msg::Req(r)) => pending.push(r),
+                Ok(Msg::Stop(mtx)) => {
+                    metrics.wall_time = started.elapsed();
+                    let _ = mtx.send(metrics);
+                    return Ok(());
+                }
+                Err(_) => return Ok(()),
+            }
+        }
+        // dynamic batching window
+        let window_start = Instant::now();
+        let mut stop: Option<Sender<ServingMetrics>> = None;
+        while pending.len() < batch_cap && window_start.elapsed() < max_wait {
+            match rx.recv_timeout(max_wait.saturating_sub(window_start.elapsed())) {
+                Ok(Msg::Req(r)) => pending.push(r),
+                Ok(Msg::Stop(mtx)) => {
+                    stop = Some(mtx);
+                    break;
+                }
+                Err(_) => break,
+            }
+        }
+
+        // execute one padded batch
+        let batch: Vec<Request> = pending.drain(..).collect();
+        let (b, s) = (model.schema.eval_batch, model.schema.seq_len);
+        let mut toks = vec![0i32; b * s];
+        let mut pos = vec![0usize; batch.len()];
+        for (row, r) in batch.iter().enumerate() {
+            let ctx = &r.context[..r.context.len().min(s)];
+            toks[row * s..row * s + ctx.len()].copy_from_slice(ctx);
+            pos[row] = ctx.len().saturating_sub(1);
+        }
+        let net_us = network_hops as u64 * link_latency_us;
+        let logits = ex.forward(&qm, &toks)?;
+        let v = model.schema.vocab;
+        metrics.batches += 1;
+        metrics.max_batch_observed = metrics.max_batch_observed.max(batch.len());
+        metrics.virtual_network_us += net_us;
+        for (row, r) in batch.iter().enumerate() {
+            let base = (row * s + pos[row]) * v;
+            let next = logits[base..base + v]
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i as i32)
+                .unwrap();
+            let latency = r.submitted.elapsed();
+            metrics.completed += 1;
+            metrics.latencies_us.push(latency.as_micros() as u64);
+            let _ = r.resp.send(Response {
+                id: r.id,
+                next_token: next,
+                latency,
+                network_latency_us: net_us,
+                batch_size: batch.len(),
+            });
+        }
+        if let Some(mtx) = stop {
+            metrics.wall_time = started.elapsed();
+            let _ = mtx.send(metrics);
+            return Ok(());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::Precision;
+
+    fn model_path() -> Option<std::path::PathBuf> {
+        let p = crate::artifacts_dir().join("models/tl-phi");
+        if p.join("weights.ets").exists() {
+            Some(p)
+        } else {
+            eprintln!("skipping: artifacts not built");
+            None
+        }
+    }
+
+    #[test]
+    fn serves_batched_requests_end_to_end() {
+        let Some(path) = model_path() else { return };
+        let plan = QuantPlan::uniform("tl-phi", 8, Precision::Q8);
+        let cfg = ServeConfig { max_batch: 8, max_wait_us: 3_000, ..Default::default() };
+        let coord = Coordinator::start(path, plan, cfg, 1, 200).unwrap();
+
+        let mut rxs = Vec::new();
+        for i in 0..20 {
+            rxs.push(coord.submit(vec![1, 160 + (i % 16), 100 + (i % 57), 2]));
+        }
+        for rx in rxs {
+            let resp = rx.recv_timeout(Duration::from_secs(120)).unwrap();
+            assert!((0..512).contains(&resp.next_token));
+            assert!(resp.batch_size >= 1 && resp.batch_size <= 8);
+            assert_eq!(resp.network_latency_us, 200);
+        }
+        let m = coord.shutdown();
+        assert_eq!(m.completed, 20);
+        assert!(m.batches <= 20);
+        assert!(m.max_batch_observed <= 8);
+        assert!(m.throughput_rps() > 0.0);
+        assert!(m.percentile_us(0.5) <= m.percentile_us(0.99));
+    }
+
+    #[test]
+    fn shutdown_without_requests_is_clean() {
+        let Some(path) = model_path() else { return };
+        let plan = QuantPlan::uniform("tl-phi", 8, Precision::Raw);
+        let coord =
+            Coordinator::start(path, plan, ServeConfig::default(), 0, 0).unwrap();
+        let m = coord.shutdown();
+        assert_eq!(m.completed, 0);
+        assert_eq!(m.virtual_network_us, 0);
+    }
+
+    #[test]
+    fn metrics_percentiles_ordered() {
+        let m = ServingMetrics {
+            completed: 5,
+            batches: 2,
+            latencies_us: vec![10, 50, 20, 90, 30],
+            wall_time: Duration::from_millis(10),
+            max_batch_observed: 3,
+            virtual_network_us: 0,
+        };
+        assert_eq!(m.percentile_us(0.0), 10);
+        assert!(m.percentile_us(0.5) <= m.percentile_us(0.95));
+        assert!((m.mean_batch() - 2.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,98 @@
+//! Workload trace generation for the serving benches/examples: request
+//! arrival processes (Poisson / bursty / closed-loop) over the SynthMMLU
+//! context distribution.
+
+use crate::rng::Xoshiro256pp;
+
+#[derive(Clone, Copy, Debug)]
+pub enum Arrival {
+    /// exponential inter-arrival times at `rps` requests/second
+    Poisson { rps: f64 },
+    /// `burst` back-to-back requests, then a `gap_us` pause
+    Bursty { burst: usize, gap_us: u64 },
+    /// all requests at t=0 (offered-load ceiling)
+    Instant,
+}
+
+/// One trace entry: arrival offset from t0 + the request context.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceEntry {
+    pub at_us: u64,
+    pub context: Vec<i32>,
+}
+
+/// Deterministic trace of `n` fact-retrieval requests.
+pub fn generate(n: usize, arrival: Arrival, seed: u64) -> Vec<TraceEntry> {
+    let mut rng = Xoshiro256pp::new(seed);
+    let mut t_us = 0u64;
+    (0..n)
+        .map(|i| {
+            match arrival {
+                Arrival::Poisson { rps } => {
+                    let u = rng.next_f64().max(1e-12);
+                    t_us += (-u.ln() / rps * 1e6) as u64;
+                }
+                Arrival::Bursty { burst, gap_us } => {
+                    if i > 0 && i % burst == 0 {
+                        t_us += gap_us;
+                    }
+                }
+                Arrival::Instant => {}
+            }
+            let s = rng.below(16) as i32;
+            let r = rng.below(57) as i32;
+            TraceEntry { at_us: t_us, context: vec![1, 160 + s, 100 + r, 2] }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn instant_all_at_zero() {
+        let t = generate(10, Arrival::Instant, 1);
+        assert_eq!(t.len(), 10);
+        assert!(t.iter().all(|e| e.at_us == 0));
+    }
+
+    #[test]
+    fn bursty_inserts_gaps() {
+        let t = generate(9, Arrival::Bursty { burst: 3, gap_us: 1000 }, 2);
+        assert_eq!(t[0].at_us, 0);
+        assert_eq!(t[2].at_us, 0);
+        assert_eq!(t[3].at_us, 1000);
+        assert_eq!(t[6].at_us, 2000);
+    }
+
+    #[test]
+    fn poisson_rate_roughly_matches() {
+        let t = generate(2000, Arrival::Poisson { rps: 1000.0 }, 3);
+        let span_s = t.last().unwrap().at_us as f64 / 1e6;
+        let rate = 2000.0 / span_s;
+        assert!((rate - 1000.0).abs() < 150.0, "measured rate {rate}");
+        // monotone arrivals
+        for w in t.windows(2) {
+            assert!(w[1].at_us >= w[0].at_us);
+        }
+    }
+
+    #[test]
+    fn contexts_are_valid_fact_queries() {
+        for e in generate(100, Arrival::Instant, 4) {
+            assert_eq!(e.context[0], 1);
+            assert!((160..176).contains(&e.context[1]));
+            assert!((100..157).contains(&e.context[2]));
+            assert_eq!(e.context[3], 2);
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        assert_eq!(
+            generate(20, Arrival::Poisson { rps: 500.0 }, 7),
+            generate(20, Arrival::Poisson { rps: 500.0 }, 7)
+        );
+    }
+}

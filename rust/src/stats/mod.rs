@@ -1,0 +1,288 @@
+//! Statistical toolkit: paired t-test (exact Student-t CDF via the
+//! regularized incomplete beta function), Cohen's d, Pearson correlation,
+//! and the paper's composite score (§6.3.1).
+
+/// ln Γ(x) — Lanczos approximation (g=7, n=9), |err| < 1e-13 for x > 0.
+pub fn ln_gamma(x: f64) -> f64 {
+    const G: [f64; 9] = [
+        0.99999999999980993,
+        676.5203681218851,
+        -1259.1392167224028,
+        771.32342877765313,
+        -176.61502916214059,
+        12.507343278686905,
+        -0.13857109526572012,
+        9.9843695780195716e-6,
+        1.5056327351493116e-7,
+    ];
+    if x < 0.5 {
+        // reflection
+        return (std::f64::consts::PI / (std::f64::consts::PI * x).sin()).ln()
+            - ln_gamma(1.0 - x);
+    }
+    let x = x - 1.0;
+    let mut a = G[0];
+    let t = x + 7.5;
+    for (i, &g) in G.iter().enumerate().skip(1) {
+        a += g / (x + i as f64);
+    }
+    0.5 * (2.0 * std::f64::consts::PI).ln() + (x + 0.5) * t.ln() - t + a.ln()
+}
+
+/// Regularized incomplete beta I_x(a, b) via continued fractions (Lentz).
+pub fn betainc(a: f64, b: f64, x: f64) -> f64 {
+    assert!((0.0..=1.0).contains(&x), "x out of range: {x}");
+    if x == 0.0 {
+        return 0.0;
+    }
+    if x == 1.0 {
+        return 1.0;
+    }
+    let ln_front = ln_gamma(a + b) - ln_gamma(a) - ln_gamma(b) + a * x.ln() + b * (1.0 - x).ln();
+    // symmetry for faster convergence
+    if x > (a + 1.0) / (a + b + 2.0) {
+        return 1.0 - betainc(b, a, 1.0 - x);
+    }
+    // continued fraction
+    let tiny = 1e-300;
+    let mut c = 1.0f64;
+    let mut d = 1.0 - (a + b) * x / (a + 1.0);
+    if d.abs() < tiny {
+        d = tiny;
+    }
+    d = 1.0 / d;
+    let mut h = d;
+    for m in 1..200 {
+        let m = m as f64;
+        // even step
+        let num = m * (b - m) * x / ((a + 2.0 * m - 1.0) * (a + 2.0 * m));
+        d = 1.0 + num * d;
+        if d.abs() < tiny {
+            d = tiny;
+        }
+        c = 1.0 + num / c;
+        if c.abs() < tiny {
+            c = tiny;
+        }
+        d = 1.0 / d;
+        h *= d * c;
+        // odd step
+        let num = -(a + m) * (a + b + m) * x / ((a + 2.0 * m) * (a + 2.0 * m + 1.0));
+        d = 1.0 + num * d;
+        if d.abs() < tiny {
+            d = tiny;
+        }
+        c = 1.0 + num / c;
+        if c.abs() < tiny {
+            c = tiny;
+        }
+        d = 1.0 / d;
+        let delta = d * c;
+        h *= delta;
+        if (delta - 1.0).abs() < 1e-14 {
+            break;
+        }
+    }
+    (ln_front.exp() * h / a).clamp(0.0, 1.0)
+}
+
+/// CDF of Student's t with `df` degrees of freedom.
+pub fn student_t_cdf(t: f64, df: f64) -> f64 {
+    let x = df / (df + t * t);
+    let p = 0.5 * betainc(df / 2.0, 0.5, x);
+    if t > 0.0 {
+        1.0 - p
+    } else {
+        p
+    }
+}
+
+/// Result of a paired t-test.
+#[derive(Clone, Copy, Debug)]
+pub struct TTest {
+    pub t: f64,
+    pub df: f64,
+    /// two-sided p-value
+    pub p: f64,
+}
+
+impl TTest {
+    pub fn significance(&self) -> &'static str {
+        // paper Table 11
+        if self.p < 0.05 {
+            "significant"
+        } else if self.p < 0.10 {
+            "marginally significant"
+        } else {
+            "not significant"
+        }
+    }
+}
+
+/// Paired t-test over two equally-sized samples (paper §6.3.1).
+pub fn paired_t_test(a: &[f64], b: &[f64]) -> TTest {
+    assert_eq!(a.len(), b.len());
+    let n = a.len();
+    assert!(n >= 2, "need >= 2 pairs");
+    let diffs: Vec<f64> = a.iter().zip(b).map(|(x, y)| x - y).collect();
+    let mean = diffs.iter().sum::<f64>() / n as f64;
+    let var = diffs.iter().map(|d| (d - mean) * (d - mean)).sum::<f64>() / (n as f64 - 1.0);
+    let sd = var.sqrt();
+    let df = (n - 1) as f64;
+    if sd == 0.0 {
+        // identical samples: t = 0 by convention, p = 1
+        return TTest { t: 0.0, df, p: 1.0 };
+    }
+    let t = mean / (sd / (n as f64).sqrt());
+    let p = 2.0 * (1.0 - student_t_cdf(t.abs(), df));
+    TTest { t, df, p }
+}
+
+/// Cohen's d with pooled standard deviation (paper §6.3.1, Table 12).
+pub fn cohens_d(a: &[f64], b: &[f64]) -> f64 {
+    let (na, nb) = (a.len() as f64, b.len() as f64);
+    let ma = a.iter().sum::<f64>() / na;
+    let mb = b.iter().sum::<f64>() / nb;
+    let va = a.iter().map(|x| (x - ma) * (x - ma)).sum::<f64>() / (na - 1.0);
+    let vb = b.iter().map(|x| (x - mb) * (x - mb)).sum::<f64>() / (nb - 1.0);
+    let sp = (((na - 1.0) * va + (nb - 1.0) * vb) / (na + nb - 2.0)).sqrt();
+    if sp == 0.0 {
+        return 0.0;
+    }
+    (ma - mb) / sp
+}
+
+/// Effect-size interpretation (paper Table 12).
+pub fn effect_size_label(d: f64) -> &'static str {
+    let d = d.abs();
+    if d < 0.2 {
+        "negligible"
+    } else if d < 0.5 {
+        "small"
+    } else if d < 0.8 {
+        "medium"
+    } else {
+        "large"
+    }
+}
+
+/// Composite score (paper §6.3.1): w1·ln(perplexity) − w2·accuracy.
+pub fn composite_score(perplexity: f64, accuracy: f64, w1: f64, w2: f64) -> f64 {
+    w1 * perplexity.ln() - w2 * accuracy
+}
+
+/// Pearson correlation coefficient.
+pub fn pearson(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let n = a.len() as f64;
+    let ma = a.iter().sum::<f64>() / n;
+    let mb = b.iter().sum::<f64>() / n;
+    let mut cov = 0.0;
+    let mut va = 0.0;
+    let mut vb = 0.0;
+    for (&x, &y) in a.iter().zip(b) {
+        cov += (x - ma) * (y - mb);
+        va += (x - ma) * (x - ma);
+        vb += (y - mb) * (y - mb);
+    }
+    if va == 0.0 || vb == 0.0 {
+        return 0.0;
+    }
+    cov / (va.sqrt() * vb.sqrt())
+}
+
+/// Mean of a slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation.
+pub fn std_pop(xs: &[f64]) -> f64 {
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ln_gamma_known_values() {
+        // Γ(5) = 24
+        assert!((ln_gamma(5.0) - 24.0f64.ln()).abs() < 1e-10);
+        // Γ(0.5) = sqrt(pi)
+        assert!((ln_gamma(0.5) - 0.5 * std::f64::consts::PI.ln()).abs() < 1e-10);
+        // Γ(1) = 1
+        assert!(ln_gamma(1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn betainc_boundaries_and_symmetry() {
+        assert_eq!(betainc(2.0, 3.0, 0.0), 0.0);
+        assert_eq!(betainc(2.0, 3.0, 1.0), 1.0);
+        // I_x(1,1) = x
+        for x in [0.1, 0.35, 0.8] {
+            assert!((betainc(1.0, 1.0, x) - x).abs() < 1e-10);
+        }
+        // symmetry: I_x(a,b) = 1 - I_{1-x}(b,a)
+        let v = betainc(2.5, 4.0, 0.3);
+        assert!((v - (1.0 - betainc(4.0, 2.5, 0.7))).abs() < 1e-10);
+    }
+
+    #[test]
+    fn t_cdf_scipy_values() {
+        // scipy.stats.t.cdf(1.0, 10) = 0.82955343...
+        assert!((student_t_cdf(1.0, 10.0) - 0.8295534338489701).abs() < 1e-9);
+        // t.cdf(0, df) = 0.5
+        assert!((student_t_cdf(0.0, 5.0) - 0.5).abs() < 1e-12);
+        // t.cdf(-2.0, 3) = 0.069662...
+        assert!((student_t_cdf(-2.0, 3.0) - 0.06966298427942702).abs() < 1e-9);
+    }
+
+    #[test]
+    fn paired_t_identical_is_not_significant() {
+        let a = [1.0, 2.0, 3.0, 4.0];
+        let t = paired_t_test(&a, &a);
+        assert_eq!(t.t, 0.0);
+        assert_eq!(t.p, 1.0);
+        assert_eq!(t.significance(), "not significant");
+    }
+
+    #[test]
+    fn paired_t_matches_scipy() {
+        // scipy.stats.ttest_rel([1,2,3,4,5],[2,2,4,4,6]) -> t=-2.4494897, p=0.0705173
+        let a = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let b = [2.0, 2.0, 4.0, 4.0, 6.0];
+        let t = paired_t_test(&a, &b);
+        assert!((t.t - (-2.449489742783178)).abs() < 1e-9, "t={}", t.t);
+        assert!((t.p - 0.0705).abs() < 5e-4, "p={}", t.p);
+        assert_eq!(t.significance(), "marginally significant");
+    }
+
+    #[test]
+    fn cohens_d_known() {
+        // two groups shifted by exactly one pooled sd
+        let a = [1.0, 2.0, 3.0];
+        let b = [2.0, 3.0, 4.0];
+        let d = cohens_d(&a, &b);
+        assert!((d - (-1.0)).abs() < 1e-12, "d={d}");
+        assert_eq!(effect_size_label(d), "large");
+        assert_eq!(effect_size_label(0.1), "negligible");
+        assert_eq!(effect_size_label(0.3), "small");
+        assert_eq!(effect_size_label(0.6), "medium");
+    }
+
+    #[test]
+    fn composite_score_formula() {
+        let s = composite_score(std::f64::consts::E, 0.5, 1.0, 1.0);
+        assert!((s - 0.5).abs() < 1e-12); // ln(e) - 0.5
+    }
+
+    #[test]
+    fn pearson_perfect_and_anti() {
+        let a = [1.0, 2.0, 3.0];
+        assert!((pearson(&a, &[2.0, 4.0, 6.0]) - 1.0).abs() < 1e-12);
+        assert!((pearson(&a, &[3.0, 2.0, 1.0]) + 1.0).abs() < 1e-12);
+        assert_eq!(pearson(&a, &[5.0, 5.0, 5.0]), 0.0);
+    }
+}

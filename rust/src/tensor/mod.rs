@@ -1,0 +1,104 @@
+//! Dense tensors + the ETS on-disk tensor store.
+//!
+//! `Tensor` is deliberately minimal: the heavy math runs inside AOT-compiled
+//! XLA executables; the Rust side only needs shape-aware containers for
+//! weights, quantized payloads and activations.
+
+pub mod store;
+
+pub use store::{read_ets, write_ets, Dtype, EtsTensor};
+
+/// Dense row-major f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Self { shape, data }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        Self { shape, data: vec![0.0; n] }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Number of rows/cols for a 2-D tensor.
+    pub fn dims2(&self) -> (usize, usize) {
+        assert_eq!(self.shape.len(), 2, "expected 2-D tensor, got {:?}", self.shape);
+        (self.shape[0], self.shape[1])
+    }
+
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        let (_, c) = self.dims2();
+        self.data[i * c + j]
+    }
+
+    /// Column-wise max(|w|) for a 2-D tensor — the quantization scale base.
+    pub fn col_abs_max(&self) -> Vec<f32> {
+        let (r, c) = self.dims2();
+        let mut m = vec![0.0f32; c];
+        for i in 0..r {
+            let row = &self.data[i * c..(i + 1) * c];
+            for (mj, &x) in m.iter_mut().zip(row) {
+                let a = x.abs();
+                if a > *mj {
+                    *mj = a;
+                }
+            }
+        }
+        m
+    }
+
+    /// Column-wise mean(|w|) — the ternary scale base.
+    pub fn col_abs_mean(&self) -> Vec<f32> {
+        let (r, c) = self.dims2();
+        let mut m = vec![0.0f64; c];
+        for i in 0..r {
+            let row = &self.data[i * c..(i + 1) * c];
+            for (mj, &x) in m.iter_mut().zip(row) {
+                *mj += x.abs() as f64;
+            }
+        }
+        m.into_iter().map(|s| (s / r as f64) as f32).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_checks_shape() {
+        let t = Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.numel(), 6);
+        assert_eq!(t.at2(1, 2), 6.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        Tensor::new(vec![2, 2], vec![1.0; 5]);
+    }
+
+    #[test]
+    fn col_abs_max_and_mean() {
+        let t = Tensor::new(vec![2, 2], vec![1.0, -4.0, -3.0, 2.0]);
+        assert_eq!(t.col_abs_max(), vec![3.0, 4.0]);
+        assert_eq!(t.col_abs_mean(), vec![2.0, 3.0]);
+    }
+
+    #[test]
+    fn zeros() {
+        let t = Tensor::zeros(vec![3, 4]);
+        assert_eq!(t.numel(), 12);
+        assert!(t.data.iter().all(|&x| x == 0.0));
+    }
+}

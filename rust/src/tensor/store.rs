@@ -1,0 +1,247 @@
+//! ETS — the EWQ Tensor Store binary format (reader/writer).
+//!
+//! Mirror of `python/compile/ets.py`; keep the two in lockstep.
+//!
+//! Layout (little-endian):
+//! ```text
+//! magic  b"ETS1"
+//! u32    n_tensors
+//! per tensor:
+//!     u16  name_len, name utf-8 bytes
+//!     u8   dtype     (0=f32, 1=i8, 2=u8, 3=i32)
+//!     u8   ndim
+//!     u32  dims[ndim]
+//!     u64  data_len (bytes)
+//!     data
+//!     u32  crc32(data)
+//! ```
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+const MAGIC: &[u8; 4] = b"ETS1";
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32 = 0,
+    I8 = 1,
+    U8 = 2,
+    I32 = 3,
+}
+
+impl Dtype {
+    pub fn from_u8(v: u8) -> Result<Self> {
+        Ok(match v {
+            0 => Dtype::F32,
+            1 => Dtype::I8,
+            2 => Dtype::U8,
+            3 => Dtype::I32,
+            _ => bail!("unknown dtype tag {v}"),
+        })
+    }
+
+    pub fn elem_size(self) -> usize {
+        match self {
+            Dtype::F32 | Dtype::I32 => 4,
+            Dtype::I8 | Dtype::U8 => 1,
+        }
+    }
+}
+
+/// A raw tensor as stored: dtype tag + dims + little-endian bytes.
+#[derive(Clone, Debug, PartialEq)]
+pub struct EtsTensor {
+    pub dtype: Dtype,
+    pub dims: Vec<usize>,
+    pub data: Vec<u8>,
+}
+
+impl EtsTensor {
+    pub fn from_f32(dims: Vec<usize>, vals: &[f32]) -> Self {
+        assert_eq!(dims.iter().product::<usize>(), vals.len());
+        let mut data = Vec::with_capacity(vals.len() * 4);
+        for v in vals {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        Self { dtype: Dtype::F32, dims, data }
+    }
+
+    pub fn from_i8(dims: Vec<usize>, vals: &[i8]) -> Self {
+        assert_eq!(dims.iter().product::<usize>(), vals.len());
+        Self { dtype: Dtype::I8, dims, data: vals.iter().map(|&v| v as u8).collect() }
+    }
+
+    pub fn from_u8(dims: Vec<usize>, vals: Vec<u8>) -> Self {
+        assert_eq!(dims.iter().product::<usize>(), vals.len());
+        Self { dtype: Dtype::U8, dims, data: vals }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    pub fn to_f32(&self) -> Result<Vec<f32>> {
+        if self.dtype != Dtype::F32 {
+            bail!("tensor is {:?}, not F32", self.dtype);
+        }
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    pub fn to_i8(&self) -> Result<Vec<i8>> {
+        if self.dtype != Dtype::I8 {
+            bail!("tensor is {:?}, not I8", self.dtype);
+        }
+        Ok(self.data.iter().map(|&b| b as i8).collect())
+    }
+}
+
+/// CRC-32 (IEEE, zlib-compatible) — table-driven; matches python `zlib.crc32`.
+pub fn crc32(data: &[u8]) -> u32 {
+    static TABLE: std::sync::OnceLock<[u32; 256]> = std::sync::OnceLock::new();
+    let table = TABLE.get_or_init(|| {
+        let mut t = [0u32; 256];
+        for (i, e) in t.iter_mut().enumerate() {
+            let mut c = i as u32;
+            for _ in 0..8 {
+                c = if c & 1 != 0 { 0xEDB88320 ^ (c >> 1) } else { c >> 1 };
+            }
+            *e = c;
+        }
+        t
+    });
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in data {
+        c = table[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+pub fn write_ets<P: AsRef<Path>>(path: P, tensors: &BTreeMap<String, EtsTensor>) -> Result<()> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path.as_ref())?);
+    f.write_all(MAGIC)?;
+    f.write_all(&(tensors.len() as u32).to_le_bytes())?;
+    for (name, t) in tensors {
+        let nb = name.as_bytes();
+        f.write_all(&(nb.len() as u16).to_le_bytes())?;
+        f.write_all(nb)?;
+        f.write_all(&[t.dtype as u8, t.dims.len() as u8])?;
+        for &d in &t.dims {
+            f.write_all(&(d as u32).to_le_bytes())?;
+        }
+        f.write_all(&(t.data.len() as u64).to_le_bytes())?;
+        f.write_all(&t.data)?;
+        f.write_all(&crc32(&t.data).to_le_bytes())?;
+    }
+    Ok(())
+}
+
+pub fn read_ets<P: AsRef<Path>>(path: P) -> Result<BTreeMap<String, EtsTensor>> {
+    let path = path.as_ref();
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?,
+    );
+
+    fn take<const N: usize>(f: &mut impl Read) -> Result<[u8; N]> {
+        let mut buf = [0u8; N];
+        f.read_exact(&mut buf)?;
+        Ok(buf)
+    }
+
+    let magic = take::<4>(&mut f)?;
+    if &magic != MAGIC {
+        bail!("{}: bad magic {:?}", path.display(), magic);
+    }
+    let n = u32::from_le_bytes(take::<4>(&mut f)?) as usize;
+    let mut out = BTreeMap::new();
+    for _ in 0..n {
+        let name_len = u16::from_le_bytes(take::<2>(&mut f)?) as usize;
+        let mut nb = vec![0u8; name_len];
+        f.read_exact(&mut nb)?;
+        let name = String::from_utf8(nb).context("tensor name not utf-8")?;
+        let [dt, nd] = take::<2>(&mut f)?;
+        let dtype = Dtype::from_u8(dt)?;
+        let mut dims = Vec::with_capacity(nd as usize);
+        for _ in 0..nd {
+            dims.push(u32::from_le_bytes(take::<4>(&mut f)?) as usize);
+        }
+        let dl = u64::from_le_bytes(take::<8>(&mut f)?) as usize;
+        let expect = dims.iter().product::<usize>() * dtype.elem_size();
+        if dl != expect {
+            bail!("{name}: data_len {dl} != dims*esize {expect}");
+        }
+        let mut data = vec![0u8; dl];
+        f.read_exact(&mut data)?;
+        let crc = u32::from_le_bytes(take::<4>(&mut f)?);
+        if crc != crc32(&data) {
+            bail!("{name}: crc mismatch (stored {crc:#x})");
+        }
+        out.insert(name, EtsTensor { dtype, dims, data });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_matches_zlib_vectors() {
+        // zlib.crc32(b"123456789") == 0xCBF43926
+        assert_eq!(crc32(b"123456789"), 0xCBF43926);
+        assert_eq!(crc32(b""), 0);
+        // zlib.crc32(b"hello world") == 0x0D4A1185
+        assert_eq!(crc32(b"hello world"), 0x0D4A1185);
+    }
+
+    #[test]
+    fn roundtrip_all_dtypes() {
+        let dir = std::env::temp_dir().join("ewq_ets_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.ets");
+        let mut m = BTreeMap::new();
+        m.insert("a".into(), EtsTensor::from_f32(vec![2, 3], &[1., 2., 3., 4., 5., 6.]));
+        m.insert("b".into(), EtsTensor::from_i8(vec![4], &[-4, -1, 0, 7]));
+        m.insert("c".into(), EtsTensor::from_u8(vec![2, 2], vec![0, 128, 255, 7]));
+        write_ets(&p, &m).unwrap();
+        let back = read_ets(&p).unwrap();
+        assert_eq!(back, m);
+        assert_eq!(back["a"].to_f32().unwrap(), vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(back["b"].to_i8().unwrap(), vec![-4, -1, 0, 7]);
+    }
+
+    #[test]
+    fn corruption_detected() {
+        let dir = std::env::temp_dir().join("ewq_ets_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.ets");
+        let mut m = BTreeMap::new();
+        m.insert("w".into(), EtsTensor::from_f32(vec![4], &[1., 2., 3., 4.]));
+        write_ets(&p, &m).unwrap();
+        let mut raw = std::fs::read(&p).unwrap();
+        let n = raw.len();
+        raw[n - 8] ^= 0xFF; // flip a data byte (data precedes 4-byte crc)
+        std::fs::write(&p, raw).unwrap();
+        assert!(read_ets(&p).is_err());
+    }
+
+    #[test]
+    fn dtype_roundtrip_tags() {
+        for d in [Dtype::F32, Dtype::I8, Dtype::U8, Dtype::I32] {
+            assert_eq!(Dtype::from_u8(d as u8).unwrap(), d);
+        }
+        assert!(Dtype::from_u8(9).is_err());
+    }
+
+    #[test]
+    fn wrong_dtype_access_fails() {
+        let t = EtsTensor::from_f32(vec![1], &[1.0]);
+        assert!(t.to_i8().is_err());
+    }
+}

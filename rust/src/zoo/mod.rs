@@ -1,0 +1,239 @@
+//! Model zoo: schemas, weight loading, and the synthetic-architecture
+//! generator that stands in for the paper's HF model survey (Table 2's
+//! dataset spans Qwen/DeepSeek/Gemma/LLaMA/Phi/Mistral/StableLM — offline we
+//! generate a family of schema-only architectures whose per-block weight
+//! statistics follow depth-dependent profiles, see DESIGN.md §2).
+
+pub mod gen;
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::{read_ets, EtsTensor, Tensor};
+
+/// Names of the six quantizable matrices per block (matches L2 model.py).
+pub const BLOCK_MATS: [&str; 6] = ["wq", "wk", "wv", "wo", "w1", "w2"];
+
+/// Architecture schema — mirrors `schema.txt` written by the AOT driver.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Schema {
+    pub name: String,
+    pub n_blocks: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub vocab: usize,
+    pub seq_len: usize,
+    pub eval_batch: usize,
+}
+
+impl Schema {
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut kv = BTreeMap::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let (k, v) = line.split_once('=').with_context(|| format!("bad line {line:?}"))?;
+            kv.insert(k.trim().to_string(), v.trim().to_string());
+        }
+        let get = |k: &str| -> Result<String> {
+            kv.get(k).cloned().with_context(|| format!("schema missing key {k}"))
+        };
+        let num = |k: &str| -> Result<usize> { Ok(get(k)?.parse()?) };
+        Ok(Self {
+            name: get("name")?,
+            n_blocks: num("n_blocks")?,
+            d_model: num("d_model")?,
+            n_heads: num("n_heads")?,
+            d_ff: num("d_ff")?,
+            vocab: num("vocab")?,
+            seq_len: num("seq_len")?,
+            eval_batch: num("eval_batch")?,
+        })
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        Self::parse(&std::fs::read_to_string(path)?)
+    }
+
+    /// Shapes (k, n) of the six quantizable matrices.
+    pub fn mat_shapes(&self) -> [(usize, usize); 6] {
+        let d = self.d_model;
+        let f = self.d_ff;
+        [(d, d), (d, d), (d, d), (d, d), (d, f), (f, d)]
+    }
+
+    /// Quantizable parameters per block (the dataset's `num_parameters`).
+    pub fn block_params(&self) -> usize {
+        self.mat_shapes().iter().map(|(k, n)| k * n).sum()
+    }
+
+    /// Raw fp32 bytes of one block's quantizable matrices + the two norms.
+    pub fn block_raw_bytes(&self) -> usize {
+        4 * (self.block_params() + 2 * self.d_model)
+    }
+
+    /// Raw fp32 bytes of all transformer blocks (the paper's "Blocks" size).
+    pub fn blocks_raw_bytes(&self) -> usize {
+        self.n_blocks * self.block_raw_bytes()
+    }
+
+    /// Total model bytes incl. embedding/pos/head (the paper's "Total").
+    pub fn total_raw_bytes(&self) -> usize {
+        let outer = self.vocab * self.d_model * 2 // embed + head
+            + self.seq_len * self.d_model          // pos
+            + self.d_model; // final norm
+        self.blocks_raw_bytes() + 4 * outer
+    }
+
+    /// Paper convention: transformer blocks are numbered by `exec_index`
+    /// starting at 2 (index 1 is the token-embedding block).
+    pub fn exec_index(&self, block: usize) -> usize {
+        block + 2
+    }
+}
+
+/// One transformer block's weights.
+#[derive(Clone, Debug)]
+pub struct BlockWeights {
+    pub g1: Tensor,
+    pub g2: Tensor,
+    /// wq, wk, wv, wo, w1, w2 in BLOCK_MATS order.
+    pub mats: [Tensor; 6],
+}
+
+impl BlockWeights {
+    pub fn mat_slices(&self) -> Vec<&[f32]> {
+        self.mats.iter().map(|t| t.data.as_slice()).collect()
+    }
+}
+
+/// Whole-model weights as loaded from `weights.ets`.
+#[derive(Clone, Debug)]
+pub struct ModelWeights {
+    pub embed: Tensor,
+    pub pos: Tensor,
+    pub gf: Tensor,
+    pub head: Tensor,
+    pub blocks: Vec<BlockWeights>,
+}
+
+/// A flagship model directory: schema + weights + HLO artifacts.
+#[derive(Debug)]
+pub struct ModelDir {
+    pub dir: PathBuf,
+    pub schema: Schema,
+    pub weights: ModelWeights,
+}
+
+fn to_tensor(t: &EtsTensor) -> Result<Tensor> {
+    Ok(Tensor::new(t.dims.clone(), t.to_f32()?))
+}
+
+impl ModelDir {
+    pub fn load<P: AsRef<Path>>(dir: P) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let schema = Schema::load(&dir.join("schema.txt"))?;
+        let ets = read_ets(dir.join("weights.ets"))?;
+        let get = |name: &str| -> Result<Tensor> {
+            to_tensor(ets.get(name).with_context(|| format!("weights.ets missing {name}"))?)
+        };
+        let mut blocks = Vec::with_capacity(schema.n_blocks);
+        for i in 0..schema.n_blocks {
+            let mut mats: Vec<Tensor> = Vec::with_capacity(6);
+            for m in BLOCK_MATS {
+                mats.push(get(&format!("blocks.{i}.{m}"))?);
+            }
+            let mats: [Tensor; 6] = mats.try_into().map_err(|_| anyhow::anyhow!("mats arity"))?;
+            blocks.push(BlockWeights {
+                g1: get(&format!("blocks.{i}.g1"))?,
+                g2: get(&format!("blocks.{i}.g2"))?,
+                mats,
+            });
+        }
+        // shape sanity
+        for (i, b) in blocks.iter().enumerate() {
+            for (t, (k, n)) in b.mats.iter().zip(schema.mat_shapes()) {
+                if t.shape != vec![k, n] {
+                    bail!("block {i}: shape {:?} != [{k},{n}]", t.shape);
+                }
+            }
+        }
+        Ok(Self {
+            dir,
+            weights: ModelWeights {
+                embed: get("embed")?,
+                pos: get("pos")?,
+                gf: get("gf")?,
+                head: get("head")?,
+                blocks,
+            },
+            schema,
+        })
+    }
+
+    pub fn artifact(&self, name: &str) -> PathBuf {
+        self.dir.join(format!("{name}.hlo.txt"))
+    }
+}
+
+/// The four flagship architecture names baked by the AOT driver.
+pub const FLAGSHIPS: [&str; 4] = ["tl-llama", "tl-qwen", "tl-gemma", "tl-phi"];
+
+/// Load every flagship from the artifacts dir.
+pub fn load_flagships(artifacts: &Path) -> Result<Vec<ModelDir>> {
+    FLAGSHIPS.iter().map(|n| ModelDir::load(artifacts.join("models").join(n))).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SCHEMA: &str = "name=tl-test\nn_blocks=4\nd_model=16\nn_heads=2\nd_ff=32\nvocab=64\nseq_len=8\neval_batch=2\n";
+
+    #[test]
+    fn schema_parses() {
+        let s = Schema::parse(SCHEMA).unwrap();
+        assert_eq!(s.name, "tl-test");
+        assert_eq!(s.n_blocks, 4);
+        assert_eq!(s.mat_shapes()[4], (16, 32));
+        assert_eq!(s.block_params(), 4 * 16 * 16 + 2 * 16 * 32);
+    }
+
+    #[test]
+    fn schema_rejects_missing_keys() {
+        assert!(Schema::parse("name=x\n").is_err());
+    }
+
+    #[test]
+    fn size_model_consistency() {
+        let s = Schema::parse(SCHEMA).unwrap();
+        assert_eq!(s.block_raw_bytes(), 4 * (s.block_params() + 32));
+        assert_eq!(s.blocks_raw_bytes(), 4 * s.block_raw_bytes());
+        assert!(s.total_raw_bytes() > s.blocks_raw_bytes());
+    }
+
+    #[test]
+    fn exec_index_starts_at_two() {
+        let s = Schema::parse(SCHEMA).unwrap();
+        assert_eq!(s.exec_index(0), 2);
+        assert_eq!(s.exec_index(3), 5);
+    }
+
+    #[test]
+    fn flagship_loading_if_artifacts_present() {
+        let art = crate::artifacts_dir();
+        if !art.join("models/tl-phi/weights.ets").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = ModelDir::load(art.join("models/tl-phi")).unwrap();
+        assert_eq!(m.schema.name, "tl-phi");
+        assert_eq!(m.weights.blocks.len(), m.schema.n_blocks);
+        assert_eq!(m.weights.embed.shape, vec![m.schema.vocab, m.schema.d_model]);
+    }
+}

@@ -1,0 +1,36 @@
+//! Smoke test for every experiment driver at a tiny question budget:
+//! `ewq exp <id>` must succeed and emit non-empty, well-formed output for
+//! all 20 paper artifacts.
+
+use ewq::exp::{self, ExpContext};
+
+#[test]
+fn every_experiment_driver_runs() {
+    let art = ewq::artifacts_dir();
+    if !art.join("models/tl-phi/weights.ets").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    // per_subject=1 keeps the full sweep under a couple of minutes
+    let mut ctx = ExpContext::new(1).expect("context");
+    for id in exp::ALL_IDS {
+        let out = exp::run(id, &mut ctx).unwrap_or_else(|e| panic!("exp {id} failed: {e:#}"));
+        assert!(!out.trim().is_empty(), "exp {id} produced empty output");
+        // quick-budget reports are persisted under reports/quick/ (the
+        // canonical full-budget reports are never clobbered by tests)
+        assert!(
+            art.join("reports/quick").join(format!("{id}.txt")).exists(),
+            "exp {id} did not persist its report"
+        );
+    }
+}
+
+#[test]
+fn unknown_id_is_rejected() {
+    let art = ewq::artifacts_dir();
+    if !art.join("models/tl-phi/weights.ets").exists() {
+        return;
+    }
+    let mut ctx = ExpContext::new(1).expect("context");
+    assert!(exp::run("table99", &mut ctx).is_err());
+}

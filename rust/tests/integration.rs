@@ -1,0 +1,144 @@
+//! Cross-module integration tests over the built artifacts: the full
+//! quantize→execute→evaluate path, python↔rust format interop, and the
+//! cluster/serving composition. Skipped gracefully when `make artifacts`
+//! hasn't run.
+
+use ewq::cluster::{optimize_distribution, Cluster};
+use ewq::eval::{build_questions, evaluate, FactTable};
+use ewq::ewq::{analyze_model, decide, EwqConfig, QuantPlan};
+use ewq::model::{ModelExecutor, QuantizedModel};
+use ewq::quant::Precision;
+use ewq::runtime::Runtime;
+use ewq::zoo::{load_flagships, ModelDir};
+
+fn artifacts() -> Option<std::path::PathBuf> {
+    let a = ewq::artifacts_dir();
+    if a.join("models/tl-phi/weights.ets").exists() {
+        Some(a)
+    } else {
+        eprintln!("skipping: run `make artifacts` first");
+        None
+    }
+}
+
+#[test]
+fn ets_weights_match_python_writer() {
+    // the store was written by python/compile/ets.py; verify structure deeply
+    let Some(art) = artifacts() else { return };
+    for m in load_flagships(&art).unwrap() {
+        let s = &m.schema;
+        assert_eq!(m.weights.embed.shape, vec![s.vocab, s.d_model]);
+        assert_eq!(m.weights.pos.shape, vec![s.seq_len, s.d_model]);
+        assert_eq!(m.weights.head.shape, vec![s.d_model, s.vocab]);
+        assert_eq!(m.weights.blocks.len(), s.n_blocks);
+        // trained weights must be non-degenerate
+        let flat = &m.weights.blocks[0].mats[0].data;
+        let mean = flat.iter().sum::<f32>() / flat.len() as f32;
+        let var =
+            flat.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / flat.len() as f32;
+        assert!(var > 1e-6, "{}: block weights look untrained/zero", s.name);
+    }
+}
+
+#[test]
+fn entropy_native_vs_pallas_hlo_on_real_weights() {
+    // L3 native entropy vs the L1 Pallas kernel (through entropy.hlo) on
+    // actual trained matrices — the cross-layer correctness anchor.
+    let Some(art) = artifacts() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let m = ModelDir::load(art.join("models/tl-qwen")).unwrap();
+    for mat in &m.weights.blocks[0].mats {
+        let native = ewq::entropy::entropy(&mat.data);
+        let hlo = ewq::runtime::entropy_via_hlo(&rt, &art, &mat.data).unwrap();
+        assert!(
+            (native - hlo).abs() < 3e-3 * (1.0 + native.abs()),
+            "native {native} vs pallas-hlo {hlo}"
+        );
+    }
+}
+
+#[test]
+fn ewq_mixed_preserves_accuracy_better_than_uniform4() {
+    // The paper's headline: EWQ mixed stays within ~0.5% of raw accuracy
+    // while uniform 4-bit drops more (and mixed size < raw size).
+    let Some(art) = artifacts() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let facts = FactTable::load(&art.join("corpus/facts.txt")).unwrap();
+    let questions = build_questions(&facts, 4, 7);
+
+    let model = ModelDir::load(art.join("models/tl-gemma")).unwrap();
+    let n = model.schema.n_blocks;
+    let ex = ModelExecutor::new(&rt, &model);
+
+    let eval_plan = |plan: &QuantPlan| {
+        let qm = QuantizedModel::build(&model, plan).unwrap();
+        evaluate(&ex, &qm, &questions).unwrap()
+    };
+
+    let raw = eval_plan(&QuantPlan::uniform("m", n, Precision::Raw));
+    let mixed = eval_plan(&decide(&analyze_model(&model, &EwqConfig::default()), &EwqConfig::default()));
+    let q4 = eval_plan(&QuantPlan::uniform("m", n, Precision::Q4));
+
+    assert!(mixed.accuracy >= q4.accuracy - 1e-9, "mixed {} < q4 {}", mixed.accuracy, q4.accuracy);
+    assert!(
+        raw.accuracy - mixed.accuracy <= 0.05,
+        "mixed lost too much: raw {} mixed {}",
+        raw.accuracy,
+        mixed.accuracy
+    );
+    // and it actually saves memory
+    let mixed_plan = decide(&analyze_model(&model, &EwqConfig::default()), &EwqConfig::default());
+    assert!(mixed_plan.blocks_bytes(&model.schema) < model.schema.blocks_raw_bytes());
+}
+
+#[test]
+fn algorithm1_plan_executes_after_distribution() {
+    // distribution plans are not just accounting — they must run.
+    let Some(art) = artifacts() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let model = ModelDir::load(art.join("models/tl-phi")).unwrap();
+    let schema = &model.schema;
+    let a = analyze_model(&model, &EwqConfig::default());
+    let budget = schema.total_raw_bytes() / 2;
+    let cluster = Cluster::uniform(2, budget / 2 + 60_000, budget / 2 + 60_000);
+    let d = optimize_distribution(&a, schema, &cluster, &EwqConfig::default());
+    assert!(d.fits);
+    let qm = QuantizedModel::build(&model, &d.plan).unwrap();
+    let ex = ModelExecutor::new(&rt, &model);
+    let toks = vec![0i32; schema.eval_batch * schema.seq_len];
+    let logits = ex.forward(&qm, &toks).unwrap();
+    assert!(logits.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn perplexity_orders_with_precision_on_flagship() {
+    // ppl(q4) should exceed ppl(q8) on the same questions (noise monotonicity)
+    let Some(art) = artifacts() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let facts = FactTable::load(&art.join("corpus/facts.txt")).unwrap();
+    let questions = build_questions(&facts, 3, 21);
+    let model = ModelDir::load(art.join("models/tl-llama")).unwrap();
+    let n = model.schema.n_blocks;
+    let ex = ModelExecutor::new(&rt, &model);
+    let ppl = |p: Precision| {
+        let qm = QuantizedModel::build(&model, &QuantPlan::uniform("m", n, p)).unwrap();
+        evaluate(&ex, &qm, &questions).unwrap().perplexity
+    };
+    let p8 = ppl(Precision::Q8);
+    let p4 = ppl(Precision::Q4);
+    let pt = ppl(Precision::T2);
+    assert!(p8 < p4, "ppl q8 {p8} !< q4 {p4}");
+    assert!(p4 < pt, "ppl q4 {p4} !< t2 {pt}");
+}
+
+#[test]
+fn q3_edge_mode_runs_and_is_smallest_above_t2() {
+    let Some(art) = artifacts() else { return };
+    let model = ModelDir::load(art.join("models/tl-phi")).unwrap();
+    let a = analyze_model(&model, &EwqConfig::default());
+    let edge = ewq::cluster::edge_plan(&a, &model.schema);
+    let uni4 = QuantPlan::uniform("m", model.schema.n_blocks, Precision::Q4);
+    let saving = 1.0
+        - edge.blocks_bytes(&model.schema) as f64 / uni4.blocks_bytes(&model.schema) as f64;
+    assert!(saving > 0.05 && saving < 0.30, "edge saving {saving} (paper: 18-25%)");
+}
