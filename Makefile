@@ -1,0 +1,23 @@
+# Repo-level convenience targets. `make verify` mirrors the tier-1 gate.
+
+.PHONY: verify fmt clippy test bench artifacts
+
+verify:
+	cd rust && cargo build --release && cargo test -q
+
+fmt:
+	cd rust && cargo fmt --check
+
+clippy:
+	cd rust && cargo clippy --all-targets -- -D warnings
+
+test:
+	cd rust && cargo test -q
+
+bench:
+	cd rust && cargo bench
+
+# Build the AOT artifacts (flagship weights + HLO text). Requires the
+# python/JAX toolchain; the Rust crate runs offline without them.
+artifacts:
+	cd python && python -m compile.aot --out ../artifacts

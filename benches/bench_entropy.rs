@@ -1,11 +1,16 @@
-//! Bench: the O(n) EWQ entropy scan — scaling with tensor size and the full
+//! Bench: the O(n) EWQ entropy scan — scaling with tensor size, the full
 //! per-flagship analysis cost (the quantity FastEWQ's O(1) path eliminates;
-//! Table 14's "Complexity" column).
+//! Table 14's "Complexity" column), and the parallel-vs-serial comparison
+//! groups for the `par` layer (chunked entropy reductions + per-block
+//! analysis fan-out).
 
-use ewq::bench_util::{black_box, Bench};
-use ewq::entropy::{entropy, softmax_entropy};
-use ewq::ewq::{analyze_model, EwqConfig};
+use ewq::bench_util::{black_box, report_speedup, Bench};
+use ewq::config::ParallelConfig;
+use ewq::entropy::{entropy, entropy_fused_pooled, softmax_entropy, softmax_entropy_pooled};
+use ewq::ewq::{analyze_model, analyze_model_par, EwqConfig};
+use ewq::par::Pool;
 use ewq::rng::Xoshiro256pp;
+use ewq::zoo::gen::{synthetic_archs, synthetic_model_dir};
 use ewq::zoo::load_flagships;
 
 fn main() {
@@ -29,6 +34,50 @@ fn main() {
         });
     }
 
+    // --- parallel vs serial: chunked entropy reductions ------------------------
+    let pool = Pool::from_config(&ParallelConfig::auto());
+    println!("\nparallel vs serial reductions (workers = {}):", pool.workers());
+    for n in [1 << 18, 1 << 21] {
+        let w: Vec<f32> = (0..n).map(|_| r.normal_f32(0.0, 0.5)).collect();
+        let serial = b.run(&format!("exact serial    n={n}"), || {
+            black_box(softmax_entropy_pooled(black_box(&w), 1e-12, &Pool::serial()));
+        });
+        let par = b.run(&format!("exact parallel  n={n}"), || {
+            black_box(softmax_entropy_pooled(black_box(&w), 1e-12, &pool));
+        });
+        report_speedup(&format!("softmax_entropy n={n}"), &serial, &par);
+        let serial = b.run(&format!("fused serial    n={n}"), || {
+            black_box(entropy_fused_pooled(black_box(&w), &Pool::serial()));
+        });
+        let par = b.run(&format!("fused parallel  n={n}"), || {
+            black_box(entropy_fused_pooled(black_box(&w), &pool));
+        });
+        report_speedup(&format!("entropy_fused n={n}"), &serial, &par);
+    }
+
+    // --- parallel vs serial: whole-model block analysis ------------------------
+    // the largest synthetic zoo model stands in when artifacts are absent
+    let archs = synthetic_archs(16, 9);
+    let largest = archs
+        .iter()
+        .max_by_key(|a| a.schema.n_blocks * a.schema.block_params())
+        .expect("non-empty zoo");
+    let model = synthetic_model_dir(largest);
+    println!(
+        "\nblock analysis, largest zoo model {} ({} blocks x {} params):",
+        model.schema.name,
+        model.schema.n_blocks,
+        model.schema.block_params()
+    );
+    let cfg = EwqConfig::default();
+    let serial = b.run("analyze_model serial", || {
+        black_box(analyze_model(black_box(&model), &cfg));
+    });
+    let par = b.run(&format!("analyze_model par x{}", pool.workers()), || {
+        black_box(analyze_model_par(black_box(&model), &cfg, &pool));
+    });
+    report_speedup("analyze_model", &serial, &par);
+
     // full flagship analyses — the deployment-time cost EWQ pays
     match load_flagships(&ewq::artifacts_dir()) {
         Ok(flagships) => {
@@ -42,6 +91,10 @@ fn main() {
                     params,
                     s.throughput(params as f64) / 1e6
                 );
+                let p = b.run(&format!("analyze_model {} par x{}", m.schema.name, pool.workers()), || {
+                    black_box(analyze_model_par(black_box(m), &EwqConfig::default(), &pool));
+                });
+                report_speedup(&format!("analyze_model {}", m.schema.name), &s, &p);
             }
         }
         Err(e) => eprintln!("skipping flagship analyses (run `make artifacts`): {e}"),

@@ -36,8 +36,16 @@ fn main() {
         println!("    -> {:.0} tok/s", sres.throughput(tokens_per_pass));
     }
 
-    // model build cost (quantize + literal encode)
-    Bench::quick().run("QuantizedModel::build (Q4)", || {
+    // model build cost (quantize + literal encode), serial vs pooled
+    let s = Bench::quick().run("QuantizedModel::build (Q4)", || {
         black_box(QuantizedModel::build(&model, &QuantPlan::uniform("m", n, Precision::Q4)).unwrap());
     });
+    let pool = ewq::par::Pool::from_config(&ewq::config::ParallelConfig::auto());
+    let p = Bench::quick().run(&format!("QuantizedModel::build_pooled x{} (Q4)", pool.workers()), || {
+        black_box(
+            QuantizedModel::build_pooled(&model, &QuantPlan::uniform("m", n, Precision::Q4), &pool)
+                .unwrap(),
+        );
+    });
+    ewq::bench_util::report_speedup("QuantizedModel::build", &s, &p);
 }

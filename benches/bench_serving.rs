@@ -1,45 +1,100 @@
-//! Bench: end-to-end serving throughput/latency under the dynamic batcher —
-//! batch-size sweep and precision sweep (the coordinator-level counterpart
-//! of the paper's deployment claims).
+//! Bench: end-to-end serving throughput/latency under the sharded dynamic
+//! batcher — worker-count (shard) sweep with the serial coordinator as the
+//! baseline, plus the batch-size and precision sweeps (the coordinator-level
+//! counterpart of the paper's deployment claims).
+//!
+//! Runs offline on a synthetic model through the native reference executor;
+//! when artifacts exist (`make artifacts`) the trained tl-phi flagship is
+//! used instead (and, under `--features xla`, the PJRT executor).
 
 use ewq::config::ServeConfig;
 use ewq::ewq::QuantPlan;
 use ewq::quant::Precision;
-use ewq::serving::Coordinator;
-use ewq::zoo::ModelDir;
+use ewq::serving::{Coordinator, ServingMetrics};
+use ewq::zoo::gen::{synthetic_model_dir, Profile, SyntheticArch};
+use ewq::zoo::{ModelDir, Schema};
 
-fn run_trace(model: &ModelDir, plan: QuantPlan, max_batch: usize, requests: usize) {
-    let cfg = ServeConfig { max_batch, max_wait_us: 1_000, ..Default::default() };
-    let coord = Coordinator::start(model.dir.clone(), plan, cfg, 1, 200).expect("start");
+fn run_trace(
+    model: &ModelDir,
+    plan: QuantPlan,
+    max_batch: usize,
+    workers: usize,
+    requests: usize,
+) -> ServingMetrics {
+    let cfg = ServeConfig { max_batch, max_wait_us: 1_000, workers, ..Default::default() };
+    let coord =
+        Coordinator::start_with_model(model.clone(), plan, cfg, 1, 200).expect("start");
     let mut rxs = Vec::with_capacity(requests);
+    let vocab = model.schema.vocab as i32;
     for i in 0..requests {
-        rxs.push(coord.submit(vec![1, 160 + (i as i32 % 16), 100 + (i as i32 % 57), 2]));
+        rxs.push(coord.submit(vec![
+            1 % vocab,
+            (160 + (i as i32 % 16)) % vocab,
+            (100 + (i as i32 % 57)) % vocab,
+            2 % vocab,
+        ]));
     }
     for rx in rxs {
         let _ = rx.recv();
     }
     let m = coord.shutdown();
-    println!("  max_batch={max_batch:<2} -> {}", m.summary());
+    println!("  max_batch={max_batch:<2} workers={workers} -> {}", m.summary());
+    m
+}
+
+fn bench_model() -> ModelDir {
+    let artifacts = ewq::artifacts_dir();
+    match ModelDir::load(artifacts.join("models/tl-phi")) {
+        Ok(m) => {
+            println!("model: trained tl-phi from artifacts");
+            m
+        }
+        Err(_) => {
+            println!("model: synthetic tl-phi-like (no artifacts; native executor)");
+            synthetic_model_dir(&SyntheticArch {
+                schema: Schema {
+                    name: "syn-phi-serve".into(),
+                    n_blocks: 8,
+                    d_model: 64,
+                    n_heads: 4,
+                    d_ff: 256,
+                    vocab: 512,
+                    seq_len: 32,
+                    eval_batch: 8,
+                },
+                profile: Profile::RampUp,
+                seed: 4242,
+            })
+        }
+    }
 }
 
 fn main() {
-    println!("== bench_serving: coordinator throughput/latency ==");
-    let artifacts = ewq::artifacts_dir();
-    let Ok(model) = ModelDir::load(artifacts.join("models/tl-phi")) else {
-        eprintln!("need artifacts (make artifacts)");
-        return;
-    };
+    println!("== bench_serving: sharded coordinator throughput/latency ==");
+    let model = bench_model();
     let n = model.schema.n_blocks;
     let requests = 64;
 
-    println!("batch-size sweep (uniform 8-bit):");
-    for mb in [1, 2, 4, 8] {
-        run_trace(&model, QuantPlan::uniform("m", n, Precision::Q8), mb, requests);
+    println!("shard-worker sweep (uniform 8-bit, max_batch=8):");
+    let baseline = run_trace(&model, QuantPlan::uniform("m", n, Precision::Q8), 8, 1, requests);
+    for workers in [2usize, 4] {
+        let m = run_trace(&model, QuantPlan::uniform("m", n, Precision::Q8), 8, workers, requests);
+        println!(
+            "    => {workers} workers: {:.2}x throughput vs serial ({:.1} -> {:.1} req/s)",
+            m.throughput_rps() / baseline.throughput_rps().max(1e-9),
+            baseline.throughput_rps(),
+            m.throughput_rps()
+        );
     }
 
-    println!("precision sweep (max_batch=8):");
+    println!("batch-size sweep (uniform 8-bit, 1 worker):");
+    for mb in [1, 2, 4, 8] {
+        run_trace(&model, QuantPlan::uniform("m", n, Precision::Q8), mb, 1, requests);
+    }
+
+    println!("precision sweep (max_batch=8, 1 worker):");
     for p in [Precision::Raw, Precision::Q8, Precision::Q4] {
         println!(" {}:", p.label());
-        run_trace(&model, QuantPlan::uniform("m", n, p), 8, requests);
+        run_trace(&model, QuantPlan::uniform("m", n, p), 8, 1, requests);
     }
 }

@@ -20,6 +20,22 @@ impl Sample {
     pub fn throughput(&self, items_per_iter: f64) -> f64 {
         items_per_iter / self.mean.as_secs_f64()
     }
+
+    /// How many times faster this sample is than `baseline` (mean over mean).
+    pub fn speedup_over(&self, baseline: &Sample) -> f64 {
+        baseline.mean.as_secs_f64() / self.mean.as_secs_f64().max(1e-12)
+    }
+}
+
+/// Print one parallel-vs-serial comparison line (used by the bench targets'
+/// comparison groups).
+pub fn report_speedup(label: &str, serial: &Sample, parallel: &Sample) {
+    println!(
+        "    => {label}: {:.2}x speedup (serial {:?} -> parallel {:?})",
+        parallel.speedup_over(serial),
+        serial.mean,
+        parallel.mean
+    );
 }
 
 impl std::fmt::Display for Sample {
@@ -99,6 +115,23 @@ mod tests {
         });
         assert!(s.min <= s.median && s.median <= s.p95);
         assert!(s.iters >= 4);
+    }
+
+    #[test]
+    fn speedup_ratio() {
+        let mk = |us: u64| Sample {
+            name: "s".into(),
+            iters: 1,
+            min: Duration::from_micros(us),
+            median: Duration::from_micros(us),
+            mean: Duration::from_micros(us),
+            p95: Duration::from_micros(us),
+        };
+        let serial = mk(400);
+        let parallel = mk(100);
+        assert!((parallel.speedup_over(&serial) - 4.0).abs() < 1e-9);
+        assert!((serial.speedup_over(&serial) - 1.0).abs() < 1e-9);
+        report_speedup("ratio", &serial, &parallel); // must not panic
     }
 
     #[test]

@@ -57,6 +57,44 @@ impl Config {
     }
 }
 
+/// Worker-count configuration for the `par` execution layer (entropy
+/// reductions, block analysis, quantization, model build, dataset sweep).
+/// Analysis results are bit-identical for any worker count — see
+/// `par::Pool` — so this is purely a throughput knob.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ParallelConfig {
+    /// Number of worker threads (>= 1; 1 = serial reference path).
+    pub workers: usize,
+}
+
+impl ParallelConfig {
+    /// Serial reference configuration.
+    pub fn serial() -> Self {
+        Self { workers: 1 }
+    }
+
+    /// One worker per available hardware thread.
+    pub fn auto() -> Self {
+        let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        Self { workers }
+    }
+
+    pub fn with_workers(workers: usize) -> Self {
+        Self { workers: workers.max(1) }
+    }
+
+    /// Read `[parallel] workers = N` (defaults to `auto`).
+    pub fn from_config(c: &Config) -> Result<Self> {
+        Ok(Self::with_workers(c.get_or("parallel", "workers", Self::auto().workers)?))
+    }
+}
+
+impl Default for ParallelConfig {
+    fn default() -> Self {
+        Self::auto()
+    }
+}
+
 /// Serving coordinator configuration (examples/serve.rs, `ewq serve`).
 #[derive(Clone, Debug, PartialEq)]
 pub struct ServeConfig {
@@ -66,6 +104,10 @@ pub struct ServeConfig {
     pub memory_budget_mb: f64,
     pub n_machines: usize,
     pub requests: usize,
+    /// Shard workers: each owns a full model replica and executes batches
+    /// dispatched round-robin by the shared batcher (1 = the classic
+    /// single-worker coordinator).
+    pub workers: usize,
 }
 
 impl Default for ServeConfig {
@@ -77,6 +119,7 @@ impl Default for ServeConfig {
             memory_budget_mb: 16.0,
             n_machines: 2,
             requests: 64,
+            workers: 1,
         }
     }
 }
@@ -91,6 +134,7 @@ impl ServeConfig {
             memory_budget_mb: c.get_or("serve", "memory_budget_mb", d.memory_budget_mb)?,
             n_machines: c.get_or("serve", "n_machines", d.n_machines)?,
             requests: c.get_or("serve", "requests", d.requests)?,
+            workers: c.get_or("serve", "workers", d.workers)?,
         })
     }
 }
@@ -166,11 +210,26 @@ mod tests {
 
     #[test]
     fn serve_config_from_config() {
-        let c = Config::parse("[serve]\nmodel = tl-phi\nrequests = 16\n").unwrap();
+        let c = Config::parse("[serve]\nmodel = tl-phi\nrequests = 16\nworkers = 4\n").unwrap();
         let s = ServeConfig::from_config(&c).unwrap();
         assert_eq!(s.model, "tl-phi");
         assert_eq!(s.requests, 16);
+        assert_eq!(s.workers, 4);
         assert_eq!(s.max_batch, ServeConfig::default().max_batch);
+    }
+
+    #[test]
+    fn parallel_config_defaults_and_parse() {
+        assert_eq!(ParallelConfig::serial().workers, 1);
+        assert!(ParallelConfig::auto().workers >= 1);
+        assert_eq!(ParallelConfig::with_workers(0).workers, 1);
+        let c = Config::parse("[parallel]\nworkers = 6\n").unwrap();
+        assert_eq!(ParallelConfig::from_config(&c).unwrap().workers, 6);
+        let empty = Config::parse("").unwrap();
+        assert_eq!(
+            ParallelConfig::from_config(&empty).unwrap().workers,
+            ParallelConfig::auto().workers
+        );
     }
 
     #[test]

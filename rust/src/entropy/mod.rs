@@ -5,38 +5,82 @@
 //! chunks (the L3 mirror of the L1 Pallas kernel; the two are cross-checked
 //! through the AOT `entropy.hlo` module in the runtime integration tests).
 //!
+//! Every reduction here is **chunked and deterministic**: the input is split
+//! into fixed `CHUNK`-sized pieces (a function of length only), per-chunk
+//! partials are computed — in parallel when a multi-worker `par::Pool` is
+//! passed — and folded in chunk order. The result is bit-identical for any
+//! worker count; the plain (non-`_pooled`) entry points are the same code on
+//! a serial pool.
+//!
 //! `block_entropy` is the size-weighted mean over a block's matrices
 //! (paper eq. 3.2); `EntropyStats` carries μ_H, σ_H and the threshold
 //! T = μ_H − X·σ_H (eq. 3.3.3).
+
+use crate::par::Pool;
 
 /// Paper's stability constant ε. Defaults tiny: for n ≥ 1e4 parameters the
 /// illustrative 0.01 saturates log(p+ε) ≈ log ε and washes out inter-block
 /// differences (see DESIGN.md). Configurable on every entry point.
 pub const EPS_DEFAULT: f64 = 1e-12;
 
-/// Streaming softmax entropy of a weight slice. Two passes: global max,
-/// then fused partition/entropy accumulation in f64.
+/// Fixed reduction chunk: large enough to amortize task dispatch, small
+/// enough that multi-megabyte tensors split across every worker.
+const CHUNK: usize = 1 << 15;
+
+fn max_shift(w: &[f32], pool: &Pool) -> f64 {
+    let m = pool.par_chunk_fold(
+        w,
+        CHUNK,
+        |c| {
+            let mut m = f32::NEG_INFINITY;
+            for &x in c {
+                if x > m {
+                    m = x;
+                }
+            }
+            m
+        },
+        f32::NEG_INFINITY,
+        |a, b| if b > a { b } else { a },
+    );
+    m as f64
+}
+
+/// Streaming softmax entropy of a weight slice. Two passes after the global
+/// max: partition function, then the fused -Σ p log(p+ε) accumulation, each
+/// a chunked parallel reduction in f64.
 pub fn softmax_entropy(w: &[f32], eps: f64) -> f64 {
+    softmax_entropy_pooled(w, eps, &Pool::serial())
+}
+
+/// `softmax_entropy` with an explicit worker pool (bit-identical to the
+/// serial path for any worker count).
+pub fn softmax_entropy_pooled(w: &[f32], eps: f64, pool: &Pool) -> f64 {
     assert!(!w.is_empty(), "entropy of empty tensor");
-    let mut m = f32::NEG_INFINITY;
-    for &x in w {
-        if x > m {
-            m = x;
-        }
-    }
-    let m = m as f64;
+    let m = max_shift(w, pool);
     // pass 2a: partition function
-    let mut z = 0.0f64;
-    for &x in w {
-        z += (x as f64 - m).exp();
-    }
+    let z = pool.par_chunk_fold(
+        w,
+        CHUNK,
+        |c| c.iter().map(|&x| (x as f64 - m).exp()).sum::<f64>(),
+        0.0f64,
+        |a, b| a + b,
+    );
     // pass 2b: -Σ p log(p+ε)
-    let mut h = 0.0f64;
-    for &x in w {
-        let p = (x as f64 - m).exp() / z;
-        h -= p * (p + eps).ln();
-    }
-    h
+    pool.par_chunk_fold(
+        w,
+        CHUNK,
+        |c| {
+            let mut h = 0.0f64;
+            for &x in c {
+                let p = (x as f64 - m).exp() / z;
+                h -= p * (p + eps).ln();
+            }
+            h
+        },
+        0.0f64,
+        |a, b| a + b,
+    )
 }
 
 /// Single-matrix entropy with the default ε.
@@ -51,34 +95,60 @@ pub fn entropy(w: &[f32]) -> f64 {
 /// Σ p·[ln(p+ε) − ln p] ≤ n·ε — for ε = 1e-12 and n ≤ 1e7 that is < 1e-5,
 /// orders of magnitude below any block-selection threshold gap.
 pub fn softmax_entropy_fast(w: &[f32]) -> f64 {
+    entropy_fused_pooled(w, &Pool::serial())
+}
+
+/// `softmax_entropy_fast` under its pipeline name (the fused estimator the
+/// analyzers dispatch to).
+pub fn entropy_fused(w: &[f32]) -> f64 {
+    entropy_fused_pooled(w, &Pool::serial())
+}
+
+/// Fused closed-form entropy with an explicit worker pool: per-chunk
+/// (Σe^{x−m}, Σe^{x−m}·(x−m)) partials in f64, folded in chunk order —
+/// bit-identical for any worker count.
+///
+/// Deliberate change from the earlier fast path: exp is computed in f64,
+/// not f32. The f32 exp bought ~1.6x per element but capped fused-vs-exact
+/// agreement at ~1e-6; f64 keeps the fused estimator within 1e-9 of the
+/// exact ε→0 formula (property-tested below), which is what lets the
+/// analyzers treat the two as interchangeable. The chunked parallel fold is
+/// the intended way to recover (and exceed) the lost per-element speed.
+pub fn entropy_fused_pooled(w: &[f32], pool: &Pool) -> f64 {
     assert!(!w.is_empty(), "entropy of empty tensor");
-    let mut m = f32::NEG_INFINITY;
-    for &x in w {
-        if x > m {
-            m = x;
-        }
-    }
-    // exp in f32 (inputs are f32 weights; |error| ~1e-7 relative per term),
-    // accumulation in f64 — measured ~1.6x over f64 exp with no observable
-    // effect on selection (fast_path_matches_exact_formula holds at 1e-6).
-    let mut z = 0.0f64;
-    let mut zx = 0.0f64;
-    for &x in w {
-        let d = x - m;
-        let e = d.exp() as f64;
-        z += e;
-        zx += e * d as f64;
-    }
+    let m = max_shift(w, pool);
+    let (z, zx) = pool.par_chunk_fold(
+        w,
+        CHUNK,
+        |c| {
+            let mut z = 0.0f64;
+            let mut zx = 0.0f64;
+            for &x in c {
+                let d = x as f64 - m;
+                let e = d.exp();
+                z += e;
+                zx += e * d;
+            }
+            (z, zx)
+        },
+        (0.0f64, 0.0f64),
+        |(za, xa), (zb, xb)| (za + zb, xa + xb),
+    );
     z.ln() - zx / z
 }
 
 /// Entropy dispatch used by the EWQ analyzers: the fused fast path when ε is
 /// effectively zero, the exact three-pass formula otherwise.
 pub fn entropy_for_selection(w: &[f32], eps: f64) -> f64 {
+    entropy_for_selection_pooled(w, eps, &Pool::serial())
+}
+
+/// `entropy_for_selection` with an explicit worker pool.
+pub fn entropy_for_selection_pooled(w: &[f32], eps: f64, pool: &Pool) -> f64 {
     if eps <= 1e-9 {
-        softmax_entropy_fast(w)
+        entropy_fused_pooled(w, pool)
     } else {
-        softmax_entropy(w, eps)
+        softmax_entropy_pooled(w, eps, pool)
     }
 }
 
@@ -88,11 +158,20 @@ pub fn block_entropy<'a, I>(mats: I, eps: f64) -> f64
 where
     I: IntoIterator<Item = &'a [f32]>,
 {
+    block_entropy_pooled(mats, eps, &Pool::serial())
+}
+
+/// `block_entropy` with an explicit worker pool (parallelism inside each
+/// matrix reduction; the per-matrix weighting itself is a fixed-order fold).
+pub fn block_entropy_pooled<'a, I>(mats: I, eps: f64, pool: &Pool) -> f64
+where
+    I: IntoIterator<Item = &'a [f32]>,
+{
     let mut num = 0.0f64;
     let mut den = 0.0f64;
     for w in mats {
         let n = w.len() as f64;
-        num += n * entropy_for_selection(w, eps);
+        num += n * entropy_for_selection_pooled(w, eps, pool);
         den += n;
     }
     assert!(den > 0.0, "block with no parameters");
@@ -134,6 +213,7 @@ pub fn ascending_order(hs: &[f64]) -> Vec<usize> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::proptest_lite::check;
     use crate::rng::Xoshiro256pp;
 
     fn numpy_like_entropy(w: &[f32], eps: f64) -> f64 {
@@ -243,6 +323,77 @@ mod tests {
         // large eps -> exact path verbatim
         let b = entropy_for_selection(&w, 1e-2);
         assert_eq!(b, softmax_entropy(&w, 1e-2));
+    }
+
+    #[test]
+    fn property_fused_matches_exact_within_1e9() {
+        // satellite: entropy_fused ≡ softmax_entropy(·, ε→0) within 1e-9 on
+        // random tensors (n kept ≤ 2048 so the n·ε analytic gap stays below
+        // the tolerance).
+        check(
+            1234,
+            40,
+            2048,
+            |g| {
+                // σ ≤ 1 keeps H well above 2 nats at these sizes, so the
+                // analytic n·ε fused-vs-exact gap stays far below tolerance
+                let n = g.usize_in(2, g.size.max(3));
+                let std = g.f64_in(0.05, 1.0);
+                (0..n).map(|_| (g.rng.normal() * std) as f32).collect::<Vec<f32>>()
+            },
+            |w| {
+                let exact = softmax_entropy(w, 1e-12);
+                let fused = entropy_fused(w);
+                let tol = 1e-9 * (1.0 + exact.abs());
+                if (exact - fused).abs() <= tol {
+                    Ok(())
+                } else {
+                    Err(format!("n={}: exact {exact} vs fused {fused}", w.len()))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn property_parallel_reduction_is_bit_stable() {
+        // satellite: the chunked parallel reduction is deterministic w.r.t.
+        // worker count — identical BITS, not just close values.
+        check(
+            777,
+            12,
+            150_000,
+            |g| {
+                let n = g.usize_in(1, g.size.max(2));
+                (0..n).map(|_| (g.rng.normal() * 0.7) as f32).collect::<Vec<f32>>()
+            },
+            |w| {
+                let serial_exact = softmax_entropy_pooled(w, 1e-12, &Pool::serial());
+                let serial_fused = entropy_fused_pooled(w, &Pool::serial());
+                for workers in [2usize, 5] {
+                    let pool = Pool::new(workers);
+                    let pe = softmax_entropy_pooled(w, 1e-12, &pool);
+                    let pf = entropy_fused_pooled(w, &pool);
+                    if pe.to_bits() != serial_exact.to_bits() {
+                        return Err(format!("exact path drifted at workers={workers}"));
+                    }
+                    if pf.to_bits() != serial_fused.to_bits() {
+                        return Err(format!("fused path drifted at workers={workers}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn pooled_block_entropy_matches_serial() {
+        let mut r = Xoshiro256pp::new(33);
+        let a: Vec<f32> = (0..40_000).map(|_| r.normal_f32(0.0, 0.3)).collect();
+        let b: Vec<f32> = (0..70_000).map(|_| r.normal_f32(0.0, 1.1)).collect();
+        let serial = block_entropy([a.as_slice(), b.as_slice()], EPS_DEFAULT);
+        let pooled =
+            block_entropy_pooled([a.as_slice(), b.as_slice()], EPS_DEFAULT, &Pool::new(4));
+        assert_eq!(serial.to_bits(), pooled.to_bits());
     }
 
     #[test]

@@ -4,6 +4,7 @@
 pub mod ablation;
 
 use crate::entropy::{ascending_order, block_entropy, EntropyStats};
+use crate::par::Pool;
 use crate::quant::Precision;
 use crate::zoo::{ModelDir, Schema};
 
@@ -92,6 +93,34 @@ where
     ModelAnalysis { model: model.to_string(), blocks, stats: EntropyStats::from_values(&hs) }
 }
 
+/// `analyze_blocks` with one task per block fanned out over `pool`. Each
+/// block's entropy is a deterministic serial reduction, so the analysis —
+/// and therefore the resulting `QuantPlan` — is bit-identical to the serial
+/// scan for every worker count.
+pub fn analyze_blocks_par<'a, F>(
+    model: &str,
+    n_blocks: usize,
+    schema: &Schema,
+    eps: f64,
+    pool: &Pool,
+    mats_of: F,
+) -> ModelAnalysis
+where
+    F: Fn(usize) -> Vec<&'a [f32]> + Sync,
+{
+    let blocks: Vec<BlockAnalysis> = pool.par_map_range(n_blocks, |i| {
+        let mats = mats_of(i);
+        BlockAnalysis {
+            block: i,
+            exec_index: schema.exec_index(i),
+            entropy: block_entropy(mats.iter().copied(), eps),
+            params: schema.block_params(),
+        }
+    });
+    let hs: Vec<f64> = blocks.iter().map(|b| b.entropy).collect();
+    ModelAnalysis { model: model.to_string(), blocks, stats: EntropyStats::from_values(&hs) }
+}
+
 /// Full EWQ analysis of a loaded flagship model (O(n) in parameters — this is
 /// the scan FastEWQ's O(1) classifier replaces).
 pub fn analyze_model(model: &ModelDir, cfg: &EwqConfig) -> ModelAnalysis {
@@ -101,6 +130,19 @@ pub fn analyze_model(model: &ModelDir, cfg: &EwqConfig) -> ModelAnalysis {
         model.schema.n_blocks,
         &model.schema,
         cfg.eps,
+        |i| weights.blocks[i].mat_slices(),
+    )
+}
+
+/// `analyze_model` with block-level parallelism (identical output).
+pub fn analyze_model_par(model: &ModelDir, cfg: &EwqConfig, pool: &Pool) -> ModelAnalysis {
+    let weights = &model.weights;
+    analyze_blocks_par(
+        &model.schema.name,
+        model.schema.n_blocks,
+        &model.schema,
+        cfg.eps,
+        pool,
         |i| weights.blocks[i].mat_slices(),
     )
 }
@@ -301,6 +343,37 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    #[test]
+    fn parallel_analysis_matches_serial_bit_for_bit() {
+        use crate::zoo::gen::{gen_block_mats, synthetic_archs};
+        let arch = &synthetic_archs(1, 31)[0];
+        let mats: Vec<Vec<crate::tensor::Tensor>> =
+            (0..arch.schema.n_blocks).map(|b| gen_block_mats(arch, b)).collect();
+        let slices =
+            |i: usize| mats[i].iter().map(|t| t.data.as_slice()).collect::<Vec<&[f32]>>();
+        let serial =
+            analyze_blocks(&arch.schema.name, arch.schema.n_blocks, &arch.schema, 1e-12, slices);
+        for workers in [2usize, 4] {
+            let par = analyze_blocks_par(
+                &arch.schema.name,
+                arch.schema.n_blocks,
+                &arch.schema,
+                1e-12,
+                &Pool::new(workers),
+                slices,
+            );
+            assert_eq!(par.blocks.len(), serial.blocks.len());
+            for (a, b) in serial.blocks.iter().zip(&par.blocks) {
+                assert_eq!(a.block, b.block);
+                assert_eq!(a.entropy.to_bits(), b.entropy.to_bits(), "workers={workers}");
+            }
+            assert_eq!(par.stats, serial.stats);
+            // identical QuantPlan decisions — the acceptance invariant
+            let cfg = EwqConfig::default();
+            assert_eq!(decide(&par, &cfg), decide(&serial, &cfg));
+        }
     }
 
     #[test]

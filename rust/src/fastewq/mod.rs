@@ -8,8 +8,9 @@ use anyhow::{Context, Result};
 
 use crate::ewq::{analyze_blocks, decide, EwqConfig};
 use crate::ml::{Classifier, RandomForest, StandardScaler};
+use crate::par::Pool;
 use crate::quant::Precision;
-use crate::zoo::gen::{gen_block_mats, synthetic_archs};
+use crate::zoo::gen::{gen_block_mats, synthetic_archs, SyntheticArch};
 use crate::zoo::{ModelDir, Schema};
 
 /// Feature order used everywhere (paper Fig. 5): num_parameters, exec_index,
@@ -52,47 +53,68 @@ pub fn build_dataset(
     flagships: &[&ModelDir],
     cfg: &EwqConfig,
 ) -> Vec<DatasetRow> {
+    build_dataset_pooled(target_rows, seed, flagships, cfg, &Pool::serial())
+}
+
+fn rows_for_model(name: &str, analysis: &crate::ewq::ModelAnalysis, cfg: &EwqConfig) -> Vec<DatasetRow> {
+    let plan = decide(analysis, cfg);
+    analysis
+        .blocks
+        .iter()
+        .zip(&plan.assignments)
+        .map(|(b, &p)| DatasetRow {
+            model_name: name.to_string(),
+            num_blocks: analysis.blocks.len(),
+            exec_index: b.exec_index,
+            num_parameters: b.params,
+            quantization_type: p,
+            quantized: p != Precision::Raw,
+        })
+        .collect()
+}
+
+/// `build_dataset` with one analysis task per model fanned out over `pool`.
+/// The arch sweep is bounded up front from the schemas alone (cheap — no
+/// weights needed), so the parallel build analyzes exactly the same model
+/// set as the serial early-exit loop and returns identical rows, while
+/// keeping at most one generated model per worker in memory.
+pub fn build_dataset_pooled(
+    target_rows: usize,
+    seed: u64,
+    flagships: &[&ModelDir],
+    cfg: &EwqConfig,
+    pool: &Pool,
+) -> Vec<DatasetRow> {
     let mut rows = Vec::with_capacity(target_rows + 64);
 
-    for m in flagships {
-        let analysis = crate::ewq::analyze_model(m, cfg);
-        let plan = decide(&analysis, cfg);
-        for (b, &p) in analysis.blocks.iter().zip(&plan.assignments) {
-            rows.push(DatasetRow {
-                model_name: m.schema.name.clone(),
-                num_blocks: m.schema.n_blocks,
-                exec_index: b.exec_index,
-                num_parameters: b.params,
-                quantization_type: p,
-                quantized: p != Precision::Raw,
-            });
-        }
-    }
+    let flagship_rows = pool.par_map_indexed(flagships, |_, m| {
+        rows_for_model(&m.schema.name, &crate::ewq::analyze_model(m, cfg), cfg)
+    });
+    rows.extend(flagship_rows.into_iter().flatten());
 
-    // synthetic sweep until we reach the target
+    // synthetic sweep: the serial loop stops once cumulative rows reach the
+    // target; the prefix it would process is known from the schemas
     let archs = synthetic_archs(64, seed);
+    let mut need = target_rows.saturating_sub(rows.len());
+    let mut take = 0usize;
     for arch in &archs {
-        if rows.len() >= target_rows {
+        if need == 0 {
             break;
         }
+        take += 1;
+        need = need.saturating_sub(arch.schema.n_blocks);
+    }
+
+    let arch_rows = pool.par_map_indexed(&archs[..take], |_, arch: &SyntheticArch| {
         let mats: Vec<Vec<crate::tensor::Tensor>> =
             (0..arch.schema.n_blocks).map(|b| gen_block_mats(arch, b)).collect();
         let analysis =
             analyze_blocks(&arch.schema.name, arch.schema.n_blocks, &arch.schema, cfg.eps, |i| {
                 mats[i].iter().map(|t| t.data.as_slice()).collect()
             });
-        let plan = decide(&analysis, cfg);
-        for (b, &p) in analysis.blocks.iter().zip(&plan.assignments) {
-            rows.push(DatasetRow {
-                model_name: arch.schema.name.clone(),
-                num_blocks: arch.schema.n_blocks,
-                exec_index: b.exec_index,
-                num_parameters: b.params,
-                quantization_type: p,
-                quantized: p != Precision::Raw,
-            });
-        }
-    }
+        rows_for_model(&arch.schema.name, &analysis, cfg)
+    });
+    rows.extend(arch_rows.into_iter().flatten());
     rows.truncate(target_rows);
     rows
 }
@@ -150,6 +172,19 @@ pub fn load_or_build_dataset(
     flagships: &[&ModelDir],
     cfg: &EwqConfig,
 ) -> Result<Vec<DatasetRow>> {
+    load_or_build_dataset_pooled(artifacts, target_rows, seed, flagships, cfg, &Pool::serial())
+}
+
+/// `load_or_build_dataset` building cache misses on `pool` (identical rows
+/// and cache bytes for any worker count).
+pub fn load_or_build_dataset_pooled(
+    artifacts: &Path,
+    target_rows: usize,
+    seed: u64,
+    flagships: &[&ModelDir],
+    cfg: &EwqConfig,
+    pool: &Pool,
+) -> Result<Vec<DatasetRow>> {
     let cache = artifacts.join("fastewq_dataset.csv");
     if cache.exists() {
         let rows = rows_from_csv(&std::fs::read_to_string(&cache)?)?;
@@ -157,7 +192,7 @@ pub fn load_or_build_dataset(
             return Ok(rows);
         }
     }
-    let rows = build_dataset(target_rows, seed, flagships, cfg);
+    let rows = build_dataset_pooled(target_rows, seed, flagships, cfg, pool);
     std::fs::write(&cache, rows_to_csv(&rows))?;
     Ok(rows)
 }
@@ -255,6 +290,16 @@ mod tests {
         // exec_index starts at 2
         assert!(rows.iter().all(|r| r.exec_index >= 2));
         assert!(rows.iter().all(|r| r.exec_index <= r.num_blocks + 1));
+    }
+
+    #[test]
+    fn pooled_dataset_matches_serial_exactly() {
+        let cfg = EwqConfig::default();
+        let serial = build_dataset(300, 2025, &[], &cfg);
+        for workers in [2usize, 4] {
+            let pooled = build_dataset_pooled(300, 2025, &[], &cfg, &Pool::new(workers));
+            assert_eq!(serial, pooled, "workers={workers}");
+        }
     }
 
     #[test]

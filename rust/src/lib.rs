@@ -9,8 +9,13 @@
 //! - **L3** (this crate) is the paper's system: entropy analysis, EWQ block
 //!   selection, cluster distribution (Algorithms 1 & 2), the FastEWQ classifier
 //!   stack, the serving coordinator, and the full evaluation/benchmark harness.
-//! - `runtime` wraps the `xla` PJRT CPU client to execute the AOT artifacts on
-//!   the request path — python is never loaded at serve time.
+//! - `runtime` wraps the `xla` PJRT CPU client (behind the `xla` cargo
+//!   feature) to execute the AOT artifacts on the request path — python is
+//!   never loaded at serve time. Default builds execute through the native
+//!   reference executor (`model::refexec`) instead, fully offline.
+//! - `par` is the dependency-free scoped worker pool every block-level hot
+//!   path (analysis, quantization, model build, dataset sweep) fans out on;
+//!   `serving` shards request execution across model replicas on top of it.
 //!
 //! Quick tour:
 //! ```no_run
@@ -23,6 +28,10 @@
 //! println!("{}", plan.summary());
 //! ```
 
+// Index-coupled numeric kernels (packing layouts, attention, matmuls) read
+// clearer with explicit indices; iterator rewrites obscure the layout math.
+#![allow(clippy::needless_range_loop)]
+
 pub mod bench_util;
 pub mod cluster;
 pub mod config;
@@ -33,6 +42,7 @@ pub mod exp;
 pub mod fastewq;
 pub mod ml;
 pub mod model;
+pub mod par;
 pub mod proptest_lite;
 pub mod quant;
 pub mod report;

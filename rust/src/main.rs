@@ -2,20 +2,21 @@
 //!
 //! ```text
 //! ewq exp <id|all> [--per-subject N]     regenerate a paper table/figure
-//! ewq analyze --model <name>             entropy analysis + EWQ plan
+//! ewq analyze --model <name> [--workers N]  entropy analysis + EWQ plan
 //! ewq plan --model <name> [--budget-mb M --machines K]  Algorithm 1
-//! ewq dataset [--rows N]                 (re)build the FastEWQ dataset
-//! ewq train-classifier [--out PATH]      train + save the FastEWQ forest
-//! ewq serve --model <name> [--requests N --batch B --variant V]  demo server
+//! ewq dataset [--rows N --workers N]     (re)build the FastEWQ dataset
+//! ewq train-classifier [--out PATH --workers N]  train + save the forest
+//! ewq serve --model <name> [--requests N --batch B --variant V --workers W]
 //! ```
 
 use anyhow::{bail, Context, Result};
 
 use ewq::cluster::{optimize_distribution, Cluster};
-use ewq::config::{Args, ServeConfig};
-use ewq::ewq::{analyze_model, decide, EwqConfig};
+use ewq::config::{Args, ParallelConfig, ServeConfig};
+use ewq::ewq::{analyze_model, analyze_model_par, decide, EwqConfig};
 use ewq::exp::{self, ExpContext};
-use ewq::fastewq::{load_or_build_dataset, FastEwq};
+use ewq::fastewq::{load_or_build_dataset_pooled, FastEwq};
+use ewq::par::Pool;
 use ewq::report::Table;
 use ewq::serving::Coordinator;
 use ewq::zoo::ModelDir;
@@ -63,11 +64,18 @@ fn load_model(args: &Args) -> Result<ModelDir> {
         .with_context(|| format!("load model {name} (run `make artifacts`?)"))
 }
 
+/// `--workers N` (default: one per hardware thread; 1 = serial scan).
+fn pool_from_args(args: &Args) -> Result<Pool> {
+    let workers = args.opt("workers", ParallelConfig::auto().workers)?;
+    Ok(Pool::from_config(&ParallelConfig::with_workers(workers)))
+}
+
 fn cmd_analyze(args: &Args) -> Result<()> {
     let model = load_model(args)?;
     let x = args.opt("x", 1.0f64)?;
+    let pool = pool_from_args(args)?;
     let cfg = EwqConfig { x, ..Default::default() };
-    let a = analyze_model(&model, &cfg);
+    let a = analyze_model_par(&model, &cfg, &pool);
     let plan = decide(&a, &cfg);
     let mut t = Table::new(
         &format!("EWQ analysis — {} (X={x})", model.schema.name),
@@ -120,15 +128,17 @@ fn cmd_plan(args: &Args) -> Result<()> {
 
 fn cmd_dataset(args: &Args) -> Result<()> {
     let rows = args.opt("rows", exp::context::DATASET_ROWS)?;
+    let pool = pool_from_args(args)?;
     let artifacts = ewq::artifacts_dir();
     let flagships = ewq::zoo::load_flagships(&artifacts)?;
     let refs: Vec<&ModelDir> = flagships.iter().collect();
-    let ds = load_or_build_dataset(
+    let ds = load_or_build_dataset_pooled(
         &artifacts,
         rows,
         exp::context::DATASET_SEED,
         &refs,
         &EwqConfig::default(),
+        &pool,
     )?;
     let q = ds.iter().filter(|r| r.quantized).count();
     println!(
@@ -144,14 +154,16 @@ fn cmd_dataset(args: &Args) -> Result<()> {
 fn cmd_train_classifier(args: &Args) -> Result<()> {
     let artifacts = ewq::artifacts_dir();
     let out: String = args.opt("out", artifacts.join("fastewq.fewq").display().to_string())?;
+    let pool = pool_from_args(args)?;
     let flagships = ewq::zoo::load_flagships(&artifacts)?;
     let refs: Vec<&ModelDir> = flagships.iter().collect();
-    let rows = load_or_build_dataset(
+    let rows = load_or_build_dataset_pooled(
         &artifacts,
         exp::context::DATASET_ROWS,
         exp::context::DATASET_SEED,
         &refs,
         &EwqConfig::default(),
+        &pool,
     )?;
     let fe = FastEwq::train(&rows, 120, 8, 1);
     fe.save(std::path::Path::new(&out))?;
@@ -170,6 +182,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let variant: String = args.opt("variant", "8bit".to_string())?;
     let requests = args.opt("requests", 64usize)?;
     let batch = args.opt("batch", 8usize)?;
+    let workers = args.opt("workers", 1usize)?;
     let n = model.schema.n_blocks;
     let plan = match variant.as_str() {
         "raw" => ewq::ewq::QuantPlan::uniform(&model.schema.name, n, ewq::quant::Precision::Raw),
@@ -181,10 +194,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
         other => bail!("unknown variant {other} (raw|8bit|4bit|mixed)"),
     };
-    println!("serving {} [{}] — {}", model.schema.name, variant, plan.summary());
+    println!(
+        "serving {} [{}] with {workers} shard worker(s) — {}",
+        model.schema.name,
+        variant,
+        plan.summary()
+    );
 
-    let cfg = ServeConfig { max_batch: batch, ..Default::default() };
-    let coord = Coordinator::start(model.dir.clone(), plan, cfg, 1, 200)?;
+    let cfg = ServeConfig { max_batch: batch, workers, ..Default::default() };
+    let coord = Coordinator::start_with_model(model, plan, cfg, 1, 200)?;
     let mut rxs = Vec::new();
     for i in 0..requests {
         rxs.push(coord.submit(vec![1, 160 + (i as i32 % 16), 100 + (i as i32 % 57), 2]));

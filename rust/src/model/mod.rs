@@ -1,32 +1,60 @@
 //! Model assembly: quantize a flagship model under a `QuantPlan`, hold the
-//! packed weights in memory, and run full-sequence forward passes through
-//! the per-precision AOT block executables.
+//! packed weights in memory, and run full-sequence forward passes.
 //!
-//! One compiled executable per (arch, precision-variant) serves every block
-//! and every plan — weights are runtime arguments, so switching plans never
-//! recompiles. Q3 (edge mode) has no dedicated artifact: its blocks are
-//! dequantized to f32 at load time and dispatched through `block_raw`
-//! (quantization *noise* is preserved; only the storage path differs —
-//! documented in DESIGN.md).
+//! `QuantizedModel` is backend-agnostic: it stores the packed `QMat`s (the
+//! bytes that would ship to a device) plus the fp32 outer weights. Execution
+//! goes through `ModelExecutor`, which dispatches per build configuration:
+//!
+//! - **`--features xla`**: the PJRT path — one compiled executable per
+//!   (arch, precision-variant) serves every block and every plan; weights are
+//!   runtime arguments (pre-encoded XLA literals), so switching plans never
+//!   recompiles. Q3 (edge mode) has no dedicated artifact: its blocks are
+//!   dequantized to f32 at load time and dispatched through `block_raw`
+//!   (quantization *noise* is preserved; only the storage path differs).
+//! - **default**: the native reference executor (`refexec`) — the same
+//!   block math in pure Rust over the dequantized effective weights. No
+//!   artifacts or external crates required, so analysis/serving run offline.
+//!
+//! `QuantizedModel::build_pooled` quantizes blocks concurrently on a
+//! `par::Pool`; the packed bytes are identical for every worker count.
 
+pub mod refexec;
 pub mod sampler;
 
-use anyhow::{bail, Result};
+use anyhow::Result;
 
 use crate::ewq::QuantPlan;
-use crate::quant::{dequantize, quantize, Payload, Precision, QMat};
-use crate::runtime::{lit_f32, lit_i32, to_vec_f32, Runtime};
+use crate::par::Pool;
+use crate::quant::{dequantize, quantize, Precision, QMat};
+use crate::runtime::Runtime;
 use crate::tensor::Tensor;
 use crate::zoo::{ModelDir, Schema};
 
-/// One block's runtime payload: norm gains + the six matrices, pre-encoded
-/// as XLA literals in the artifact's argument order.
+/// One block's runtime payload: norm gains + the six packed matrices, plus
+/// (under `xla`) the pre-encoded literals in artifact argument order.
 pub struct QuantBlock {
     pub prec: Precision,
-    /// literals after the leading activation argument
-    args: Vec<xla::Literal>,
+    pub g1: Tensor,
+    pub g2: Tensor,
+    /// wq, wk, wv, wo, w1, w2 — packed under this block's precision.
+    pub qmats: Vec<QMat>,
     /// stored bytes under the plan (for memory accounting)
     pub bytes: usize,
+    /// lazily dequantized effective weights — unpacked once on first use so
+    /// the native executor's serving hot path never re-dequantizes per batch
+    deq: std::sync::OnceLock<Vec<Tensor>>,
+    /// literals after the leading activation argument
+    #[cfg(feature = "xla")]
+    args: Vec<xla::Literal>,
+}
+
+impl QuantBlock {
+    /// Effective (quantization-noise-preserving) f32 weights of this block —
+    /// what the executor actually multiplies by. Dequantized on first call,
+    /// cached for the block's lifetime.
+    pub fn effective_mats(&self) -> &[Tensor] {
+        self.deq.get_or_init(|| self.qmats.iter().map(dequantize).collect())
+    }
 }
 
 /// A fully quantized, runtime-ready model instance.
@@ -34,75 +62,125 @@ pub struct QuantizedModel {
     pub schema: Schema,
     pub plan: QuantPlan,
     pub blocks: Vec<QuantBlock>,
+    pub embed: Tensor,
+    pub pos: Tensor,
+    pub gf: Tensor,
+    pub head: Tensor,
+    #[cfg(feature = "xla")]
     embed_args: Vec<xla::Literal>, // embed, pos
-    head_args: Vec<xla::Literal>,  // gf, head
+    #[cfg(feature = "xla")]
+    head_args: Vec<xla::Literal>, // gf, head
 }
 
+#[cfg(feature = "xla")]
 fn qmat_literals(m: &QMat) -> Result<Vec<xla::Literal>> {
+    use crate::quant::Payload;
+    use crate::runtime::lit_f32;
     let (k, n) = (m.rows, m.cols);
     Ok(match &m.payload {
         Payload::Raw(d) => vec![lit_f32(&[k, n], d)?],
         Payload::Q8 { q, s } => vec![crate::runtime::lit_i8(&[k, n], q)?, lit_f32(&[n], s)?],
         Payload::Q4 { p, s } => vec![crate::runtime::lit_u8(&[k / 2, n], p)?, lit_f32(&[n], s)?],
         Payload::T2 { p, s } => vec![crate::runtime::lit_u8(&[k / 4, n], p)?, lit_f32(&[n], s)?],
-        Payload::Q3 { .. } => bail!("Q3 must be dequantized before literal encoding"),
+        Payload::Q3 { .. } => anyhow::bail!("Q3 must be dequantized before literal encoding"),
     })
 }
 
+/// Encode one block's executor arguments in artifact order (PJRT path only).
+#[cfg(feature = "xla")]
+fn encode_block_args(blk: &QuantBlock) -> Result<Vec<xla::Literal>> {
+    use crate::runtime::lit_f32;
+    let d = blk.g1.numel();
+    let mut args: Vec<xla::Literal> = Vec::with_capacity(14);
+    match blk.prec {
+        Precision::Raw | Precision::Q3 => {
+            // block_raw argument order: g1, wq, wk, wv, wo, g2, w1, w2
+            args.push(lit_f32(&[d], &blk.g1.data)?);
+            let mats = blk.effective_mats();
+            for t in &mats[..4] {
+                args.push(lit_f32(&t.shape, &t.data)?);
+            }
+            args.push(lit_f32(&[d], &blk.g2.data)?);
+            for t in &mats[4..] {
+                args.push(lit_f32(&t.shape, &t.data)?);
+            }
+        }
+        Precision::Q8 | Precision::Q4 | Precision::T2 => {
+            // block_q* argument order: g1, g2, then (q, s) x 6
+            args.push(lit_f32(&[d], &blk.g1.data)?);
+            args.push(lit_f32(&[d], &blk.g2.data)?);
+            for m in &blk.qmats {
+                args.extend(qmat_literals(m)?);
+            }
+        }
+    }
+    Ok(args)
+}
+
 impl QuantizedModel {
-    /// Quantize `model` under `plan` and pre-encode every literal.
+    /// Quantize `model` under `plan` (serial reference path).
     pub fn build(model: &ModelDir, plan: &QuantPlan) -> Result<Self> {
+        Self::build_pooled(model, plan, &Pool::serial())
+    }
+
+    /// Quantize `model` under `plan`, packing blocks concurrently on `pool`.
+    /// The packed bytes — and under `xla` the encoded literals — are
+    /// identical for every worker count (XLA literal encoding itself stays
+    /// on the calling thread: literals are not `Send`).
+    pub fn build_pooled(model: &ModelDir, plan: &QuantPlan, pool: &Pool) -> Result<Self> {
         let schema = model.schema.clone();
         assert_eq!(plan.assignments.len(), schema.n_blocks);
-        let mut blocks = Vec::with_capacity(schema.n_blocks);
-        for (b, &prec) in plan.assignments.iter().enumerate() {
-            let w = &model.weights.blocks[b];
-            let d = schema.d_model;
-            let mut bytes = 4 * 2 * d;
-            let mut args: Vec<xla::Literal> = Vec::with_capacity(14);
+        let d = schema.d_model;
 
-            let qmats: Vec<QMat> = w.mats.iter().map(|t| quantize(t, prec)).collect();
-            bytes += qmats.iter().map(|m| m.size_bytes()).sum::<usize>();
+        // phase 1 (parallel): pack every block — plain `Send` data only, so
+        // this fans out regardless of backend
+        let packed: Vec<(Precision, Vec<QMat>, usize)> =
+            pool.par_map_range(schema.n_blocks, |b| {
+                let prec = plan.assignments[b];
+                let w = &model.weights.blocks[b];
+                let qmats: Vec<QMat> = w.mats.iter().map(|t| quantize(t, prec)).collect();
+                let bytes = 4 * 2 * d + qmats.iter().map(|m| m.size_bytes()).sum::<usize>();
+                (prec, qmats, bytes)
+            });
 
-            match prec {
-                Precision::Raw | Precision::Q3 => {
-                    // block_raw argument order: g1, wq, wk, wv, wo, g2, w1, w2
-                    args.push(lit_f32(&[d], &w.g1.data)?);
-                    let mats: Vec<Tensor> = if prec == Precision::Q3 {
-                        qmats.iter().map(dequantize).collect()
-                    } else {
-                        w.mats.to_vec()
-                    };
-                    for t in &mats[..4] {
-                        args.push(lit_f32(&t.shape, &t.data)?);
-                    }
-                    args.push(lit_f32(&[d], &w.g2.data)?);
-                    for t in &mats[4..] {
-                        args.push(lit_f32(&t.shape, &t.data)?);
-                    }
-                }
-                Precision::Q8 | Precision::Q4 | Precision::T2 => {
-                    // block_q* argument order: g1, g2, then (q, s) x 6
-                    args.push(lit_f32(&[d], &w.g1.data)?);
-                    args.push(lit_f32(&[d], &w.g2.data)?);
-                    for m in &qmats {
-                        args.extend(qmat_literals(m)?);
-                    }
-                }
-            }
-            blocks.push(QuantBlock { prec, args, bytes });
+        // phase 2 (serial): assemble blocks; under `xla` also pre-encode the
+        // PJRT argument literals (literals are not `Send`)
+        #[allow(unused_mut)]
+        let mut blocks: Vec<QuantBlock> = packed
+            .into_iter()
+            .enumerate()
+            .map(|(b, (prec, qmats, bytes))| QuantBlock {
+                prec,
+                g1: model.weights.blocks[b].g1.clone(),
+                g2: model.weights.blocks[b].g2.clone(),
+                qmats,
+                bytes,
+                deq: std::sync::OnceLock::new(),
+                #[cfg(feature = "xla")]
+                args: Vec::new(),
+            })
+            .collect();
+        #[cfg(feature = "xla")]
+        for blk in &mut blocks {
+            blk.args = encode_block_args(blk)?;
         }
 
         let w = &model.weights;
         Ok(Self {
+            #[cfg(feature = "xla")]
             embed_args: vec![
-                lit_f32(&w.embed.shape, &w.embed.data)?,
-                lit_f32(&w.pos.shape, &w.pos.data)?,
+                crate::runtime::lit_f32(&w.embed.shape, &w.embed.data)?,
+                crate::runtime::lit_f32(&w.pos.shape, &w.pos.data)?,
             ],
+            #[cfg(feature = "xla")]
             head_args: vec![
-                lit_f32(&w.gf.shape, &w.gf.data)?,
-                lit_f32(&w.head.shape, &w.head.data)?,
+                crate::runtime::lit_f32(&w.gf.shape, &w.gf.data)?,
+                crate::runtime::lit_f32(&w.head.shape, &w.head.data)?,
             ],
+            embed: w.embed.clone(),
+            pos: w.pos.clone(),
+            gf: w.gf.clone(),
+            head: w.head.clone(),
             schema,
             plan: plan.clone(),
             blocks,
@@ -115,6 +193,7 @@ impl QuantizedModel {
     }
 }
 
+#[cfg(feature = "xla")]
 impl Runtime {
     /// Execute with reference arguments (no literal copies).
     pub fn run_refs(
@@ -127,22 +206,45 @@ impl Runtime {
     }
 }
 
-/// Executes a model's forward pass through the cached PJRT executables.
+/// Executes a model's forward pass: PJRT executables when built with the
+/// `xla` feature and the model directory has artifacts, the native reference
+/// path (`refexec`) otherwise.
 pub struct ModelExecutor<'rt> {
+    #[cfg_attr(not(feature = "xla"), allow(dead_code))]
     rt: &'rt Runtime,
+    #[cfg_attr(not(feature = "xla"), allow(dead_code))]
     model_dir: std::path::PathBuf,
     pub schema: Schema,
+    #[cfg(feature = "xla")]
+    use_pjrt: bool,
 }
 
 impl<'rt> ModelExecutor<'rt> {
     pub fn new(rt: &'rt Runtime, model: &ModelDir) -> Self {
-        Self { rt, model_dir: model.dir.clone(), schema: model.schema.clone() }
+        Self {
+            rt,
+            model_dir: model.dir.clone(),
+            schema: model.schema.clone(),
+            #[cfg(feature = "xla")]
+            use_pjrt: model.dir.join("block_raw.hlo.txt").exists(),
+        }
     }
 
+    /// Which execution backend forward passes use.
+    pub fn backend(&self) -> &'static str {
+        #[cfg(feature = "xla")]
+        if self.use_pjrt {
+            return "pjrt";
+        }
+        "native-ref"
+    }
+
+    #[cfg(feature = "xla")]
     fn artifact(&self, name: &str) -> std::path::PathBuf {
         self.model_dir.join(format!("{name}.hlo.txt"))
     }
 
+    #[cfg(feature = "xla")]
     fn block_artifact(&self, p: Precision) -> &'static str {
         match p {
             Precision::Raw | Precision::Q3 => "block_raw",
@@ -152,10 +254,14 @@ impl<'rt> ModelExecutor<'rt> {
         }
     }
 
-    /// Pre-compile every artifact this model's plans may touch.
+    /// Pre-compile every artifact this model's plans may touch (no-op on the
+    /// native path).
     pub fn warmup(&self) -> Result<()> {
-        for name in ["embed", "head", "block_raw", "block_q8", "block_q4", "block_t2"] {
-            self.rt.load(&self.artifact(name))?;
+        #[cfg(feature = "xla")]
+        if self.use_pjrt {
+            for name in ["embed", "head", "block_raw", "block_q8", "block_q4", "block_t2"] {
+                self.rt.load(&self.artifact(name))?;
+            }
         }
         Ok(())
     }
@@ -165,6 +271,17 @@ impl<'rt> ModelExecutor<'rt> {
     pub fn forward(&self, qm: &QuantizedModel, tokens: &[i32]) -> Result<Vec<f32>> {
         let (b, s) = (self.schema.eval_batch, self.schema.seq_len);
         assert_eq!(tokens.len(), b * s, "token batch must be ({b},{s})");
+        #[cfg(feature = "xla")]
+        if self.use_pjrt {
+            return self.forward_pjrt(qm, tokens);
+        }
+        refexec::forward(qm, tokens)
+    }
+
+    #[cfg(feature = "xla")]
+    fn forward_pjrt(&self, qm: &QuantizedModel, tokens: &[i32]) -> Result<Vec<f32>> {
+        use crate::runtime::{lit_i32, to_vec_f32};
+        let (b, s) = (self.schema.eval_batch, self.schema.seq_len);
 
         let embed = self.rt.load(&self.artifact("embed"))?;
         let tok_lit = lit_i32(&[b, s], tokens)?;
@@ -232,6 +349,49 @@ mod tests {
     }
 
     #[test]
+    fn pooled_build_matches_serial() {
+        // no artifacts needed: synthetic in-memory model
+        use crate::zoo::gen::{synthetic_archs, synthetic_model_dir};
+        let model = synthetic_model_dir(&synthetic_archs(1, 5)[0]);
+        let n = model.schema.n_blocks;
+        let mut plan = QuantPlan::uniform("syn", n, Precision::Q8);
+        plan.assignments[0] = Precision::Raw;
+        plan.assignments[n - 1] = Precision::Q4;
+        plan.assignments[n / 2] = Precision::T2;
+        let serial = QuantizedModel::build(&model, &plan).unwrap();
+        for workers in [2usize, 4] {
+            let pooled =
+                QuantizedModel::build_pooled(&model, &plan, &Pool::new(workers)).unwrap();
+            assert_eq!(pooled.blocks.len(), serial.blocks.len());
+            for (a, b) in serial.blocks.iter().zip(&pooled.blocks) {
+                assert_eq!(a.prec, b.prec);
+                assert_eq!(a.bytes, b.bytes);
+                assert_eq!(a.qmats, b.qmats, "workers={workers}");
+            }
+            assert_eq!(pooled.blocks_bytes(), serial.blocks_bytes());
+        }
+    }
+
+    #[test]
+    fn bytes_accounting_tracks_plan() {
+        use crate::zoo::gen::{synthetic_archs, synthetic_model_dir};
+        let model = synthetic_model_dir(&synthetic_archs(1, 6)[0]);
+        let n = model.schema.n_blocks;
+        let raw = QuantizedModel::build(&model, &QuantPlan::uniform("m", n, Precision::Raw))
+            .unwrap();
+        let q8 =
+            QuantizedModel::build(&model, &QuantPlan::uniform("m", n, Precision::Q8)).unwrap();
+        let q4 =
+            QuantizedModel::build(&model, &QuantPlan::uniform("m", n, Precision::Q4)).unwrap();
+        assert!(raw.blocks_bytes() > q8.blocks_bytes());
+        assert!(q8.blocks_bytes() > q4.blocks_bytes());
+        assert_eq!(
+            raw.blocks_bytes(),
+            QuantPlan::uniform("m", n, Precision::Raw).blocks_bytes(&model.schema)
+        );
+    }
+
+    #[test]
     fn raw_forward_produces_finite_logits() {
         let Some((rt, model)) = setup() else { return };
         let plan = QuantPlan::uniform("tl-phi", model.schema.n_blocks, Precision::Raw);
@@ -296,7 +456,9 @@ mod tests {
         let ex = ModelExecutor::new(&rt, &model);
         let logits = ex.forward(&qm, &tokens_for(&model.schema)).unwrap();
         assert!(logits.iter().all(|v| v.is_finite()));
-        assert!(rt.cached_modules() >= 4, "embed+head+raw+q8(+q4)");
+        if cfg!(feature = "xla") {
+            assert!(rt.cached_modules() >= 4, "embed+head+raw+q8(+q4)");
+        }
     }
 
     #[test]

@@ -1,0 +1,352 @@
+//! Native reference executor: the L2 transformer forward pass
+//! (`python/compile/model.py`) in pure Rust, running over a
+//! `QuantizedModel`'s dequantized effective weights.
+//!
+//! This is the default executor when the crate is built without the `xla`
+//! feature (and the fallback when artifacts are absent): pre-RMSNorm decoder
+//! blocks, causal multi-head attention, tanh-GELU MLP, fp32 embed/head.
+//! Quantization *noise* is preserved exactly — each block's matrices are the
+//! dequantized `QMat` payloads, the same effective weights the AOT graph
+//! reconstructs in-VMEM — so precision-ladder experiments (drift, accuracy,
+//! perplexity ordering) behave the same way as on the PJRT path.
+
+use anyhow::{ensure, Result};
+
+use crate::model::QuantizedModel;
+use crate::tensor::Tensor;
+
+/// Full-sequence forward: `tokens` is a flattened (B, S) batch; returns
+/// logits (B, S, V) flattened, matching `ModelExecutor::forward`.
+pub fn forward(qm: &QuantizedModel, tokens: &[i32]) -> Result<Vec<f32>> {
+    let s = &qm.schema;
+    let (b, sl, d, v) = (s.eval_batch, s.seq_len, s.d_model, s.vocab);
+    ensure!(tokens.len() == b * sl, "token batch must be ({b},{sl})");
+
+    // embed + positional: x[r,t] = embed[token] + pos[t]
+    let rows = b * sl;
+    let mut x = vec![0.0f32; rows * d];
+    for row in 0..b {
+        for t in 0..sl {
+            let tok = tokens[row * sl + t];
+            ensure!(tok >= 0 && (tok as usize) < v, "token {tok} outside vocab {v}");
+            let e = &qm.embed.data[tok as usize * d..(tok as usize + 1) * d];
+            let p = &qm.pos.data[t * d..(t + 1) * d];
+            let o = &mut x[(row * sl + t) * d..(row * sl + t + 1) * d];
+            for j in 0..d {
+                o[j] = e[j] + p[j];
+            }
+        }
+    }
+
+    for blk in &qm.blocks {
+        block_forward(&mut x, b, sl, s.n_heads, &blk.g1.data, &blk.g2.data, blk.effective_mats());
+    }
+
+    // head: rms(x, gf) @ head -> (B*S, V)
+    let xn = rms_rows(&x, &qm.gf.data);
+    Ok(matmul(&xn, &qm.head.data, rows, d, v))
+}
+
+/// One pre-RMSNorm decoder block, in place over the (B*S, d) activations:
+///   h = x + Attn(rms(x, g1); Wq, Wk, Wv, Wo)
+///   y = h + W2 @ gelu(W1 @ rms(h, g2))
+fn block_forward(
+    x: &mut [f32],
+    b: usize,
+    sl: usize,
+    n_heads: usize,
+    g1: &[f32],
+    g2: &[f32],
+    mats: &[Tensor],
+) {
+    let d = g1.len();
+    let rows = b * sl;
+    let ff = mats[4].dims2().1;
+
+    let xn = rms_rows(x, g1);
+    let q = matmul(&xn, &mats[0].data, rows, d, d);
+    let k = matmul(&xn, &mats[1].data, rows, d, d);
+    let v = matmul(&xn, &mats[2].data, rows, d, d);
+    let a = attention(&q, &k, &v, b, sl, d, n_heads);
+    let ao = matmul(&a, &mats[3].data, rows, d, d);
+    for (xi, oi) in x.iter_mut().zip(&ao) {
+        *xi += oi;
+    }
+
+    let hn = rms_rows(x, g2);
+    let mut h1 = matmul(&hn, &mats[4].data, rows, d, ff);
+    for h in h1.iter_mut() {
+        *h = gelu(*h);
+    }
+    let h2 = matmul(&h1, &mats[5].data, rows, ff, d);
+    for (xi, oi) in x.iter_mut().zip(&h2) {
+        *xi += oi;
+    }
+}
+
+/// Row-wise RMSNorm with gain: x * g / sqrt(mean(x^2) + 1e-6).
+fn rms_rows(x: &[f32], g: &[f32]) -> Vec<f32> {
+    let d = g.len();
+    let rows = x.len() / d;
+    let mut out = vec![0.0f32; x.len()];
+    for i in 0..rows {
+        let r = &x[i * d..(i + 1) * d];
+        let mut ss = 0.0f32;
+        for &val in r {
+            ss += val * val;
+        }
+        let inv = 1.0 / (ss / d as f32 + 1e-6).sqrt();
+        let o = &mut out[i * d..(i + 1) * d];
+        for j in 0..d {
+            o[j] = r[j] * g[j] * inv;
+        }
+    }
+    out
+}
+
+/// (m,k) @ (k,n) row-major matmul, ikj loop order for stride-1 inner loops.
+fn matmul(a: &[f32], bmat: &[f32], m: usize, kdim: usize, n: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), m * kdim);
+    debug_assert_eq!(bmat.len(), kdim * n);
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        let arow = &a[i * kdim..(i + 1) * kdim];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (kk, &av) in arow.iter().enumerate() {
+            let brow = &bmat[kk * n..(kk + 1) * n];
+            for j in 0..n {
+                orow[j] += av * brow[j];
+            }
+        }
+    }
+    out
+}
+
+/// Causal multi-head attention over per-row (B,S,d) activations: softmax of
+/// q·k / sqrt(hd) over positions <= t (rows never mix across the batch dim,
+/// which is what makes per-request responses batching-invariant).
+fn attention(q: &[f32], k: &[f32], v: &[f32], b: usize, sl: usize, d: usize, n_heads: usize) -> Vec<f32> {
+    let hd = d / n_heads;
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut out = vec![0.0f32; b * sl * d];
+    let mut scores = vec![0.0f32; sl];
+    for bi in 0..b {
+        for h in 0..n_heads {
+            let off = h * hd;
+            for t in 0..sl {
+                let qrow = &q[(bi * sl + t) * d + off..(bi * sl + t) * d + off + hd];
+                let mut m = f32::NEG_INFINITY;
+                for u in 0..=t {
+                    let krow = &k[(bi * sl + u) * d + off..(bi * sl + u) * d + off + hd];
+                    let mut dot = 0.0f32;
+                    for j in 0..hd {
+                        dot += qrow[j] * krow[j];
+                    }
+                    scores[u] = dot * scale;
+                    if scores[u] > m {
+                        m = scores[u];
+                    }
+                }
+                let mut z = 0.0f32;
+                for u in 0..=t {
+                    scores[u] = (scores[u] - m).exp();
+                    z += scores[u];
+                }
+                let orow = &mut out[(bi * sl + t) * d + off..(bi * sl + t) * d + off + hd];
+                for u in 0..=t {
+                    let w = scores[u] / z;
+                    let vrow = &v[(bi * sl + u) * d + off..(bi * sl + u) * d + off + hd];
+                    for j in 0..hd {
+                        orow[j] += w * vrow[j];
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// tanh-approximate GELU (`jax.nn.gelu` default).
+fn gelu(x: f32) -> f32 {
+    const SQRT_2_OVER_PI: f32 = 0.797_884_6;
+    0.5 * x * (1.0 + (SQRT_2_OVER_PI * (x + 0.044_715 * x * x * x)).tanh())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ewq::QuantPlan;
+    use crate::model::{ModelExecutor, QuantizedModel};
+    use crate::quant::Precision;
+    use crate::runtime::Runtime;
+    use crate::zoo::gen::{synthetic_model_dir, Profile, SyntheticArch};
+    use crate::zoo::{ModelDir, Schema};
+
+    fn tiny_model() -> ModelDir {
+        synthetic_model_dir(&SyntheticArch {
+            schema: Schema {
+                name: "tiny".into(),
+                n_blocks: 2,
+                d_model: 32,
+                n_heads: 4,
+                d_ff: 64,
+                vocab: 64,
+                seq_len: 8,
+                eval_batch: 4,
+            },
+            profile: Profile::UShape,
+            seed: 77,
+        })
+    }
+
+    fn tokens(schema: &Schema) -> Vec<i32> {
+        let (b, s) = (schema.eval_batch, schema.seq_len);
+        let mut toks = vec![0i32; b * s];
+        for row in 0..b {
+            for t in 0..4 {
+                toks[row * s + t] = ((row * 7 + t * 3) % schema.vocab) as i32;
+            }
+        }
+        toks
+    }
+
+    #[test]
+    fn raw_forward_shapes_and_finiteness() {
+        let model = tiny_model();
+        let s = &model.schema;
+        let plan = QuantPlan::uniform("tiny", s.n_blocks, Precision::Raw);
+        let qm = QuantizedModel::build(&model, &plan).unwrap();
+        let logits = forward(&qm, &tokens(s)).unwrap();
+        assert_eq!(logits.len(), s.eval_batch * s.seq_len * s.vocab);
+        assert!(logits.iter().all(|x| x.is_finite()));
+        // not degenerate: logits vary across vocab
+        let (mn, mx) = logits.iter().fold((f32::INFINITY, f32::NEG_INFINITY), |(a, b), &x| {
+            (a.min(x), b.max(x))
+        });
+        assert!(mx > mn);
+    }
+
+    #[test]
+    fn forward_is_deterministic() {
+        let model = tiny_model();
+        let plan = QuantPlan::uniform("tiny", model.schema.n_blocks, Precision::Q8);
+        let qm = QuantizedModel::build(&model, &plan).unwrap();
+        let a = forward(&qm, &tokens(&model.schema)).unwrap();
+        let b = forward(&qm, &tokens(&model.schema)).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn quantization_drift_orders_with_precision() {
+        let model = tiny_model();
+        let n = model.schema.n_blocks;
+        let toks = tokens(&model.schema);
+        let run = |p: Precision| {
+            let qm = QuantizedModel::build(&model, &QuantPlan::uniform("m", n, p)).unwrap();
+            forward(&qm, &toks).unwrap()
+        };
+        let raw = run(Precision::Raw);
+        let max_err = |l: &[f32]| {
+            l.iter().zip(&raw).map(|(a, b)| (a - b).abs() as f64).fold(0.0, f64::max)
+        };
+        let e8 = max_err(&run(Precision::Q8));
+        let e4 = max_err(&run(Precision::Q4));
+        let e2 = max_err(&run(Precision::T2));
+        assert!(e8 < e4, "q8 {e8} !< q4 {e4}");
+        assert!(e4 < e2, "q4 {e4} !< t2 {e2}");
+    }
+
+    #[test]
+    fn q3_and_mixed_plans_execute() {
+        let model = tiny_model();
+        let n = model.schema.n_blocks;
+        let q3 = QuantizedModel::build(&model, &QuantPlan::uniform("m", n, Precision::Q3))
+            .unwrap();
+        assert!(forward(&q3, &tokens(&model.schema)).unwrap().iter().all(|x| x.is_finite()));
+        let mut plan = QuantPlan::uniform("m", n, Precision::Raw);
+        plan.assignments[n - 1] = Precision::Q4;
+        let qm = QuantizedModel::build(&model, &plan).unwrap();
+        assert!(forward(&qm, &tokens(&model.schema)).unwrap().iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn out_of_vocab_token_is_rejected() {
+        let model = tiny_model();
+        let plan = QuantPlan::uniform("tiny", model.schema.n_blocks, Precision::Raw);
+        let qm = QuantizedModel::build(&model, &plan).unwrap();
+        let mut toks = tokens(&model.schema);
+        toks[0] = model.schema.vocab as i32; // one past the end
+        assert!(forward(&qm, &toks).is_err());
+        toks[0] = -1;
+        assert!(forward(&qm, &toks).is_err());
+    }
+
+    #[test]
+    fn executor_dispatches_to_native_for_synthetic_models() {
+        // a synthetic ModelDir has no artifacts, so the executor must take
+        // the native path in every build configuration
+        let model = tiny_model();
+        let rt = Runtime::cpu().unwrap();
+        let ex = ModelExecutor::new(&rt, &model);
+        assert_eq!(ex.backend(), "native-ref");
+        ex.warmup().unwrap();
+        let plan = QuantPlan::uniform("tiny", model.schema.n_blocks, Precision::Q8);
+        let qm = QuantizedModel::build(&model, &plan).unwrap();
+        let via_executor = ex.forward(&qm, &tokens(&model.schema)).unwrap();
+        let direct = forward(&qm, &tokens(&model.schema)).unwrap();
+        assert_eq!(via_executor, direct);
+        let next = ex.next_tokens(&qm, &tokens(&model.schema), 3).unwrap();
+        assert_eq!(next.len(), model.schema.eval_batch);
+        assert!(next.iter().all(|&t| (0..model.schema.vocab as i32).contains(&t)));
+    }
+
+    #[test]
+    fn rms_normalizes_magnitude() {
+        let g = vec![1.0f32; 8];
+        let x: Vec<f32> = (0..8).map(|i| (i as f32 + 1.0) * 10.0).collect();
+        let out = rms_rows(&x, &g);
+        let ms: f32 = out.iter().map(|v| v * v).sum::<f32>() / 8.0;
+        assert!((ms - 1.0).abs() < 1e-3, "mean square {ms}");
+    }
+
+    #[test]
+    fn matmul_matches_hand_computed() {
+        // (2x3) @ (3x2)
+        let a = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let b = [7.0, 8.0, 9.0, 10.0, 11.0, 12.0];
+        let c = matmul(&a, &b, 2, 3, 2);
+        assert_eq!(c, vec![58.0, 64.0, 139.0, 154.0]);
+    }
+
+    #[test]
+    fn attention_is_causal_and_row_normalized() {
+        // with q=k=0 scores are uniform over the visible prefix, so the
+        // output at position t is the mean of v[0..=t]
+        let (b, sl, d, h) = (1usize, 4usize, 8usize, 2usize);
+        let q = vec![0.0f32; b * sl * d];
+        let k = vec![0.0f32; b * sl * d];
+        let mut v = vec![0.0f32; b * sl * d];
+        for t in 0..sl {
+            for j in 0..d {
+                v[t * d + j] = t as f32;
+            }
+        }
+        let out = attention(&q, &k, &v, b, sl, d, h);
+        for t in 0..sl {
+            let expect = (0..=t).sum::<usize>() as f32 / (t + 1) as f32;
+            for j in 0..d {
+                assert!((out[t * d + j] - expect).abs() < 1e-5, "t={t} j={j}");
+            }
+        }
+    }
+
+    #[test]
+    fn gelu_reference_values() {
+        assert!(gelu(0.0).abs() < 1e-7);
+        assert!((gelu(1.0) - 0.841192).abs() < 1e-4);
+        assert!((gelu(-1.0) + 0.158808).abs() < 1e-4);
+        // large |x|: approaches identity / zero
+        assert!((gelu(6.0) - 6.0).abs() < 1e-3);
+        assert!(gelu(-6.0).abs() < 1e-3);
+    }
+}

@@ -1,0 +1,254 @@
+//! Dependency-free scoped worker pool — the parallel-execution seam every
+//! block-level hot path runs on (entropy reductions, per-block analysis,
+//! quantization row groups, `QuantizedModel::build`, the FastEWQ dataset
+//! sweep, and the sharded serving coordinator's replicas).
+//!
+//! Design rules (see DESIGN.md §"par layer"):
+//! - **Scoped**: all parallelism is `std::thread::scope`-based; no detached
+//!   threads, no global executor, nothing outlives the call.
+//! - **Deterministic**: `par_map_*` returns results in input order, and
+//!   `par_chunk_fold` fixes both the chunk layout (a function of data length
+//!   only) and the fold order (chunk index order) — so every result is
+//!   bit-identical for any worker count, including 1.
+//! - **Work-stealing by atomic counter**: tasks are claimed with a single
+//!   `fetch_add`, which balances uneven block sizes without a scheduler.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::channel;
+
+use crate::config::ParallelConfig;
+
+/// A sized handle describing how much parallelism to use. Creating a `Pool`
+/// is free — threads are spawned per call and joined before returning.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Pool {
+    workers: usize,
+}
+
+impl Pool {
+    pub fn new(workers: usize) -> Self {
+        Self { workers: workers.max(1) }
+    }
+
+    /// Single-worker pool: every `par_*` call degrades to a plain loop on the
+    /// calling thread (the serial reference path).
+    pub fn serial() -> Self {
+        Self::new(1)
+    }
+
+    pub fn from_config(cfg: &ParallelConfig) -> Self {
+        Self::new(cfg.workers)
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Run `f(worker_index)` once per worker, concurrently, and wait for all
+    /// of them. With one worker, runs inline on the calling thread.
+    pub fn scope<F>(&self, f: F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        if self.workers <= 1 {
+            f(0);
+            return;
+        }
+        std::thread::scope(|s| {
+            for w in 0..self.workers {
+                let f = &f;
+                s.spawn(move || f(w));
+            }
+        });
+    }
+
+    /// Map `f` over `0..n`, returning results in index order. Tasks are
+    /// claimed dynamically (atomic counter), so uneven task costs balance
+    /// across workers. Panics in `f` propagate to the caller.
+    pub fn par_map_range<R, F>(&self, n: usize, f: F) -> Vec<R>
+    where
+        R: Send,
+        F: Fn(usize) -> R + Sync,
+    {
+        if self.workers <= 1 || n <= 1 {
+            return (0..n).map(f).collect();
+        }
+        let next = AtomicUsize::new(0);
+        let (tx, rx) = channel::<(usize, R)>();
+        std::thread::scope(|s| {
+            let mut handles = Vec::with_capacity(self.workers.min(n));
+            for _ in 0..self.workers.min(n) {
+                let tx = tx.clone();
+                let next = &next;
+                let f = &f;
+                handles.push(s.spawn(move || loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let r = f(i);
+                    if tx.send((i, r)).is_err() {
+                        break;
+                    }
+                }));
+            }
+            drop(tx);
+            let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+            for (i, r) in rx.iter() {
+                out[i] = Some(r);
+            }
+            // join before unwrapping so a worker panic surfaces as itself,
+            // not as a missing-result panic here
+            for h in handles {
+                if let Err(p) = h.join() {
+                    std::panic::resume_unwind(p);
+                }
+            }
+            out.into_iter().map(|o| o.expect("worker produced every index")).collect()
+        })
+    }
+
+    /// Map `f(index, &item)` over a slice, results in input order.
+    pub fn par_map_indexed<T, R, F>(&self, items: &[T], f: F) -> Vec<R>
+    where
+        T: Sync,
+        R: Send,
+        F: Fn(usize, &T) -> R + Sync,
+    {
+        self.par_map_range(items.len(), |i| f(i, &items[i]))
+    }
+
+    /// Deterministic chunked map-reduce over a slice: split `data` into
+    /// fixed-size chunks (layout depends only on `data.len()` and `chunk`),
+    /// map chunks in parallel, then fold the partials IN CHUNK ORDER on the
+    /// calling thread. Identical bits for any worker count.
+    pub fn par_chunk_fold<T, A, M, F>(&self, data: &[T], chunk: usize, map: M, init: A, fold: F) -> A
+    where
+        T: Sync,
+        A: Send,
+        M: Fn(&[T]) -> A + Sync,
+        F: FnMut(A, A) -> A,
+    {
+        let chunks: Vec<&[T]> = data.chunks(chunk.max(1)).collect();
+        let partials = self.par_map_indexed(&chunks, |_, c| map(c));
+        partials.into_iter().fold(init, fold)
+    }
+}
+
+impl Default for Pool {
+    fn default() -> Self {
+        Self::from_config(&ParallelConfig::default())
+    }
+}
+
+/// Convenience free function: map over a slice with `cfg.workers` workers.
+pub fn par_map_indexed<T, R, F>(cfg: &ParallelConfig, items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    Pool::from_config(cfg).par_map_indexed(items, f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn map_range_matches_serial_in_order() {
+        let serial: Vec<usize> = (0..100).map(|i| i * i).collect();
+        for workers in [1, 2, 3, 8] {
+            let par = Pool::new(workers).par_map_range(100, |i| i * i);
+            assert_eq!(par, serial, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn map_indexed_passes_items() {
+        let items: Vec<i64> = (0..57).map(|i| i - 20).collect();
+        let out = Pool::new(4).par_map_indexed(&items, |i, &x| (i as i64) + x);
+        let expect: Vec<i64> = (0..57).map(|i| 2 * i - 20).collect();
+        assert_eq!(out, expect);
+    }
+
+    #[test]
+    fn empty_and_singleton_inputs() {
+        let out: Vec<u32> = Pool::new(4).par_map_range(0, |_| unreachable!());
+        assert!(out.is_empty());
+        assert_eq!(Pool::new(4).par_map_range(1, |i| i + 7), vec![7]);
+    }
+
+    #[test]
+    fn scope_runs_every_worker() {
+        let count = AtomicUsize::new(0);
+        Pool::new(5).scope(|_w| {
+            count.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(count.load(Ordering::SeqCst), 5);
+        let count = AtomicUsize::new(0);
+        Pool::serial().scope(|w| {
+            assert_eq!(w, 0);
+            count.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(count.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn chunk_fold_is_bit_stable_across_worker_counts() {
+        // f64 summation depends on order — the fixed chunk layout + ordered
+        // fold must give identical bits for every worker count.
+        let data: Vec<f64> = (0..100_000).map(|i| ((i * 2654435761_usize) as f64).sqrt()).collect();
+        let sum = |pool: &Pool| {
+            pool.par_chunk_fold(&data, 1 << 10, |c| c.iter().sum::<f64>(), 0.0, |a, b| a + b)
+        };
+        let s1 = sum(&Pool::serial());
+        for workers in [2, 3, 4, 7] {
+            let sp = sum(&Pool::new(workers));
+            assert_eq!(s1.to_bits(), sp.to_bits(), "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn chunk_fold_handles_tiny_inputs() {
+        let data = [1.5f64, 2.5];
+        let s = Pool::new(8).par_chunk_fold(&data, 1024, |c| c.iter().sum::<f64>(), 0.0, |a, b| {
+            a + b
+        });
+        assert_eq!(s, 4.0);
+        let empty: [f64; 0] = [];
+        let s = Pool::new(2).par_chunk_fold(&empty, 16, |c| c.iter().sum::<f64>(), 0.0, |a, b| {
+            a + b
+        });
+        assert_eq!(s, 0.0);
+    }
+
+    #[test]
+    fn uneven_task_costs_balance() {
+        // tasks with wildly different costs must still land in order
+        let out = Pool::new(4).par_map_range(40, |i| {
+            let mut acc = 0u64;
+            for k in 0..(i % 7) * 10_000 {
+                acc = acc.wrapping_add(k);
+            }
+            (i, acc)
+        });
+        for (i, item) in out.iter().enumerate() {
+            assert_eq!(item.0, i);
+        }
+    }
+
+    #[test]
+    fn free_function_uses_config_workers() {
+        let cfg = ParallelConfig::with_workers(3);
+        let out = par_map_indexed(&cfg, &[10, 20, 30], |i, &x| x + i as i32);
+        assert_eq!(out, vec![10, 21, 32]);
+    }
+
+    #[test]
+    fn zero_workers_clamps_to_one() {
+        assert_eq!(Pool::new(0).workers(), 1);
+        assert_eq!(Pool::from_config(&ParallelConfig::with_workers(0)).workers(), 1);
+    }
+}

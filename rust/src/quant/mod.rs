@@ -12,9 +12,18 @@
 //! | `Q4`   | 4         | u8[k/2,n]: rows 2i,2i+1 -> lo/hi nibble (+8 bias) |
 //! | `Q3`   | 3         | u8[3k/8,n]: 8 rows -> 3 bytes (+4 bias), edge §3.4|
 //! | `T2`   | 2 (1.58)  | u8[k/4,n]: 4 ternary codes/byte (+1 bias)         |
+//!
+//! Packing is organized in **row groups** (1 row for Q8, 2 for Q4, 8 for Q3,
+//! 4 for T2): each group maps to a disjoint payload segment, so
+//! `quantize_pooled`/`dequantize_pooled` fan contiguous group bands out over
+//! a `par::Pool` and concatenate segments in band order — the bytes are
+//! identical for every worker count.
 
 pub mod error;
 
+use std::ops::Range;
+
+use crate::par::Pool;
 use crate::tensor::Tensor;
 
 /// Precision levels of the paper's quantization ladder.
@@ -65,6 +74,16 @@ impl Precision {
         };
         payload + scale_bytes
     }
+
+    /// Rows per packing group (the parallel work unit).
+    fn group_rows(self) -> usize {
+        match self {
+            Precision::Raw | Precision::Q8 => 1,
+            Precision::Q4 => 2,
+            Precision::T2 => 4,
+            Precision::Q3 => 8,
+        }
+    }
 }
 
 /// A quantized (or raw) 2-D weight matrix.
@@ -91,8 +110,94 @@ fn rte(x: f32) -> f32 {
     x.round_ties_even()
 }
 
-/// Quantize a 2-D tensor to `prec`. Packing layouts match ref.py exactly.
+/// Split `n_groups` row groups into contiguous bands for the pool: a handful
+/// of bands per worker so the atomic task counter load-balances, collapsing
+/// to a single band on a serial pool.
+fn bands(n_groups: usize, pool: &Pool) -> Vec<Range<usize>> {
+    if pool.workers() <= 1 || n_groups <= 1 {
+        return vec![0..n_groups];
+    }
+    let target = (pool.workers() * 4).min(n_groups);
+    let size = n_groups.div_ceil(target);
+    (0..n_groups.div_ceil(size)).map(|b| (b * size)..((b + 1) * size).min(n_groups)).collect()
+}
+
+// ---- per-band packers: each group maps to a disjoint payload segment ------------
+
+fn pack_q8(w: &Tensor, r: &[f32], groups: Range<usize>) -> Vec<i8> {
+    let (_, n) = w.dims2();
+    let mut out = vec![0i8; groups.len() * n];
+    for (gi, i) in groups.enumerate() {
+        let row = &w.data[i * n..(i + 1) * n];
+        let seg = &mut out[gi * n..(gi + 1) * n];
+        for j in 0..n {
+            seg[j] = rte(row[j] * r[j]).clamp(-127.0, 127.0) as i8;
+        }
+    }
+    out
+}
+
+fn pack_q4(w: &Tensor, r: &[f32], groups: Range<usize>) -> Vec<u8> {
+    let (_, n) = w.dims2();
+    let mut out = vec![0u8; groups.len() * n];
+    for (gi, i2) in groups.enumerate() {
+        let row_lo = &w.data[(2 * i2) * n..(2 * i2 + 1) * n];
+        let row_hi = &w.data[(2 * i2 + 1) * n..(2 * i2 + 2) * n];
+        let seg = &mut out[gi * n..(gi + 1) * n];
+        for j in 0..n {
+            let lo = (rte(row_lo[j] * r[j]).clamp(-7.0, 7.0) as i32 + 8) as u8;
+            let hi = (rte(row_hi[j] * r[j]).clamp(-7.0, 7.0) as i32 + 8) as u8;
+            seg[j] = lo | (hi << 4);
+        }
+    }
+    out
+}
+
+fn pack_q3(w: &Tensor, recip: &[f32], groups: Range<usize>) -> Vec<u8> {
+    let (_, n) = w.dims2();
+    // 8 rows -> 3 bytes per column: 24-bit little-endian bitstream of
+    // eight 3-bit codes (q+4 in [1,7]).
+    let mut out = vec![0u8; groups.len() * 3 * n];
+    for (gi, g) in groups.enumerate() {
+        for j in 0..n {
+            let mut bits: u32 = 0;
+            for r8 in 0..8 {
+                let q = rte(w.data[(8 * g + r8) * n + j] * recip[j]).clamp(-3.0, 3.0) as i32 + 4;
+                bits |= (q as u32) << (3 * r8);
+            }
+            out[(3 * gi) * n + j] = (bits & 0xFF) as u8;
+            out[(3 * gi + 1) * n + j] = ((bits >> 8) & 0xFF) as u8;
+            out[(3 * gi + 2) * n + j] = ((bits >> 16) & 0xFF) as u8;
+        }
+    }
+    out
+}
+
+fn pack_t2(w: &Tensor, recip: &[f32], groups: Range<usize>) -> Vec<u8> {
+    let (_, n) = w.dims2();
+    let mut out = vec![0u8; groups.len() * n];
+    for (gi, g) in groups.enumerate() {
+        for j in 0..n {
+            let mut byte = 0u8;
+            for r4 in 0..4 {
+                let q = rte(w.data[(4 * g + r4) * n + j] * recip[j]).clamp(-1.0, 1.0) as i32 + 1;
+                byte |= (q as u8) << (2 * r4);
+            }
+            out[gi * n + j] = byte;
+        }
+    }
+    out
+}
+
+/// Quantize a 2-D tensor to `prec` (serial reference path; identical bytes
+/// to `quantize_pooled` on any pool).
 pub fn quantize(w: &Tensor, prec: Precision) -> QMat {
+    quantize_pooled(w, prec, &Pool::serial())
+}
+
+/// Quantize with row-group bands fanned out over `pool`. Packing layouts
+/// match ref.py exactly.
+pub fn quantize_pooled(w: &Tensor, prec: Precision, pool: &Pool) -> QMat {
     let (k, n) = w.dims2();
     let payload = match prec {
         Precision::Raw => Payload::Raw(w.data.clone()),
@@ -100,123 +205,118 @@ pub fn quantize(w: &Tensor, prec: Precision) -> QMat {
             let s: Vec<f32> = w.col_abs_max().iter().map(|m| m.max(1e-12) / 127.0).collect();
             // §Perf: reciprocal-multiply instead of per-element divide
             let r: Vec<f32> = s.iter().map(|v| 1.0 / v).collect();
-            let mut q = vec![0i8; k * n];
-            for i in 0..k {
-                let row = &w.data[i * n..(i + 1) * n];
-                let out = &mut q[i * n..(i + 1) * n];
-                for j in 0..n {
-                    out[j] = rte(row[j] * r[j]).clamp(-127.0, 127.0) as i8;
-                }
-            }
+            let q = concat(pool, bands(k, pool), |b| pack_q8(w, &r, b));
             Payload::Q8 { q, s }
         }
         Precision::Q4 => {
             assert_eq!(k % 2, 0, "Q4 needs even k");
             let s: Vec<f32> = w.col_abs_max().iter().map(|m| m.max(1e-12) / 7.0).collect();
             let r: Vec<f32> = s.iter().map(|v| 1.0 / v).collect();
-            let mut p = vec![0u8; (k / 2) * n];
-            for i2 in 0..k / 2 {
-                let row_lo = &w.data[(2 * i2) * n..(2 * i2 + 1) * n];
-                let row_hi = &w.data[(2 * i2 + 1) * n..(2 * i2 + 2) * n];
-                let out = &mut p[i2 * n..(i2 + 1) * n];
-                for j in 0..n {
-                    let lo = (rte(row_lo[j] * r[j]).clamp(-7.0, 7.0) as i32 + 8) as u8;
-                    let hi = (rte(row_hi[j] * r[j]).clamp(-7.0, 7.0) as i32 + 8) as u8;
-                    out[j] = lo | (hi << 4);
-                }
-            }
+            let p = concat(pool, bands(k / 2, pool), |b| pack_q4(w, &r, b));
             Payload::Q4 { p, s }
         }
         Precision::Q3 => {
             assert_eq!(k % 8, 0, "Q3 needs k % 8 == 0");
             let s: Vec<f32> = w.col_abs_max().iter().map(|m| m.max(1e-12) / 3.0).collect();
             let recip: Vec<f32> = s.iter().map(|v| 1.0 / v).collect();
-            // 8 rows -> 3 bytes per column: 24-bit little-endian bitstream of
-            // eight 3-bit codes (q+4 in [1,7]).
-            let mut p = vec![0u8; (3 * k / 8) * n];
-            for g in 0..k / 8 {
-                for j in 0..n {
-                    let mut bits: u32 = 0;
-                    for r8 in 0..8 {
-                        let q = rte(w.data[(8 * g + r8) * n + j] * recip[j]).clamp(-3.0, 3.0) as i32 + 4;
-                        bits |= (q as u32) << (3 * r8);
-                    }
-                    p[(3 * g) * n + j] = (bits & 0xFF) as u8;
-                    p[(3 * g + 1) * n + j] = ((bits >> 8) & 0xFF) as u8;
-                    p[(3 * g + 2) * n + j] = ((bits >> 16) & 0xFF) as u8;
-                }
-            }
+            let p = concat(pool, bands(k / 8, pool), |b| pack_q3(w, &recip, b));
             Payload::Q3 { p, s }
         }
         Precision::T2 => {
             assert_eq!(k % 4, 0, "T2 needs k % 4 == 0");
             let s: Vec<f32> = w.col_abs_mean().iter().map(|m| m.max(1e-12)).collect();
             let recip: Vec<f32> = s.iter().map(|v| 1.0 / v).collect();
-            let mut p = vec![0u8; (k / 4) * n];
-            for g in 0..k / 4 {
-                for j in 0..n {
-                    let mut byte = 0u8;
-                    for r4 in 0..4 {
-                        let q = rte(w.data[(4 * g + r4) * n + j] * recip[j]).clamp(-1.0, 1.0) as i32 + 1;
-                        byte |= (q as u8) << (2 * r4);
-                    }
-                    p[g * n + j] = byte;
-                }
-            }
+            let p = concat(pool, bands(k / 4, pool), |b| pack_t2(w, &recip, b));
             Payload::T2 { p, s }
         }
     };
     QMat { prec, rows: k, cols: n, payload }
 }
 
-/// Dequantize back to f32 (used for the Q3 edge path and error metrics;
-/// the serving hot path dequantizes in-graph instead).
-pub fn dequantize(m: &QMat) -> Tensor {
-    let (k, n) = (m.rows, m.cols);
-    let mut out = vec![0.0f32; k * n];
+/// Map bands in parallel and concatenate the segments in band order.
+fn concat<E: Send + Clone>(
+    pool: &Pool,
+    bands: Vec<Range<usize>>,
+    f: impl Fn(Range<usize>) -> Vec<E> + Sync,
+) -> Vec<E> {
+    if bands.len() == 1 {
+        return f(bands.into_iter().next().unwrap());
+    }
+    let segs = pool.par_map_indexed(&bands, |_, b| f(b.clone()));
+    let mut out = Vec::with_capacity(segs.iter().map(Vec::len).sum());
+    for s in segs {
+        out.extend_from_slice(&s);
+    }
+    out
+}
+
+// ---- per-band unpackers ---------------------------------------------------------
+
+fn unpack_rows(m: &QMat, groups: Range<usize>) -> Vec<f32> {
+    let n = m.cols;
+    let gr = m.prec.group_rows();
+    let mut out = vec![0.0f32; groups.len() * gr * n];
     match &m.payload {
-        Payload::Raw(d) => out.copy_from_slice(d),
+        Payload::Raw(d) => {
+            out.copy_from_slice(&d[groups.start * n..groups.end * n]);
+        }
         Payload::Q8 { q, s } => {
-            for i in 0..k {
+            for (gi, i) in groups.enumerate() {
                 for j in 0..n {
-                    out[i * n + j] = q[i * n + j] as f32 * s[j];
+                    out[gi * n + j] = q[i * n + j] as f32 * s[j];
                 }
             }
         }
         Payload::Q4 { p, s } => {
-            for i2 in 0..k / 2 {
+            for (gi, i2) in groups.enumerate() {
                 for j in 0..n {
                     let b = p[i2 * n + j];
-                    out[(2 * i2) * n + j] = ((b & 0xF) as i32 - 8) as f32 * s[j];
-                    out[(2 * i2 + 1) * n + j] = (((b >> 4) & 0xF) as i32 - 8) as f32 * s[j];
+                    out[(2 * gi) * n + j] = ((b & 0xF) as i32 - 8) as f32 * s[j];
+                    out[(2 * gi + 1) * n + j] = (((b >> 4) & 0xF) as i32 - 8) as f32 * s[j];
                 }
             }
         }
         Payload::Q3 { p, s } => {
-            for g in 0..k / 8 {
+            for (gi, g) in groups.enumerate() {
                 for j in 0..n {
                     let bits = p[(3 * g) * n + j] as u32
                         | ((p[(3 * g + 1) * n + j] as u32) << 8)
                         | ((p[(3 * g + 2) * n + j] as u32) << 16);
                     for r in 0..8 {
                         let q = ((bits >> (3 * r)) & 0x7) as i32 - 4;
-                        out[(8 * g + r) * n + j] = q as f32 * s[j];
+                        out[(8 * gi + r) * n + j] = q as f32 * s[j];
                     }
                 }
             }
         }
         Payload::T2 { p, s } => {
-            for g in 0..k / 4 {
+            for (gi, g) in groups.enumerate() {
                 for j in 0..n {
                     let b = p[g * n + j];
                     for r in 0..4 {
                         let q = ((b >> (2 * r)) & 0x3) as i32 - 1;
-                        out[(4 * g + r) * n + j] = q as f32 * s[j];
+                        out[(4 * gi + r) * n + j] = q as f32 * s[j];
                     }
                 }
             }
         }
     }
+    out
+}
+
+/// Dequantize back to f32 (used for the Q3 edge path, the native reference
+/// executor, and error metrics; the PJRT hot path dequantizes in-graph).
+pub fn dequantize(m: &QMat) -> Tensor {
+    dequantize_pooled(m, &Pool::serial())
+}
+
+/// Dequantize with row-group bands fanned out over `pool` (bit-identical to
+/// the serial path).
+pub fn dequantize_pooled(m: &QMat, pool: &Pool) -> Tensor {
+    let (k, n) = (m.rows, m.cols);
+    let n_groups = k / m.prec.group_rows();
+    let out = concat(pool, bands(n_groups, pool), |b| unpack_rows(m, b));
+    debug_assert_eq!(out.len(), k * n);
     Tensor::new(vec![k, n], out)
 }
 
@@ -319,6 +419,34 @@ mod tests {
         let q1 = quantize(&w, Precision::Q4);
         let q2 = quantize(&dequantize(&q1), Precision::Q4);
         assert_eq!(q1, q2);
+    }
+
+    #[test]
+    fn pooled_quantize_is_byte_identical() {
+        // row-group banding must not change a single byte, any worker count
+        let w = rand_tensor(96, 56, 8, 0.6);
+        for prec in [Precision::Raw, Precision::Q8, Precision::Q4, Precision::Q3, Precision::T2]
+        {
+            let serial = quantize(&w, prec);
+            for workers in [2usize, 3, 5] {
+                let pooled = quantize_pooled(&w, prec, &Pool::new(workers));
+                assert_eq!(serial, pooled, "{} workers={workers}", prec.label());
+            }
+        }
+    }
+
+    #[test]
+    fn pooled_dequantize_is_bit_identical() {
+        let w = rand_tensor(96, 56, 9, 0.6);
+        for prec in [Precision::Raw, Precision::Q8, Precision::Q4, Precision::Q3, Precision::T2]
+        {
+            let q = quantize(&w, prec);
+            let serial = dequantize(&q);
+            for workers in [2usize, 4] {
+                let pooled = dequantize_pooled(&q, &Pool::new(workers));
+                assert_eq!(serial, pooled, "{} workers={workers}", prec.label());
+            }
+        }
     }
 
     #[test]

@@ -1,156 +1,231 @@
-//! PJRT runtime: loads AOT-lowered HLO **text** artifacts and executes them
-//! on the CPU PJRT client via the `xla` crate. This is the only place the
-//! request path touches XLA; python is never loaded at serve time.
+//! Execution runtime behind the `xla` cargo feature.
 //!
-//! Pattern (see /opt/xla-example/load_hlo): `HloModuleProto::from_text_file`
-//! → `XlaComputation::from_proto` → `client.compile` → `execute`. Artifacts
-//! are compiled once and cached per path.
+//! With `--features xla` this wraps the PJRT CPU client: AOT-lowered HLO
+//! **text** artifacts are parsed, compiled once, cached per path, and
+//! executed via the `xla` crate (pattern: `HloModuleProto::from_text_file`
+//! → `XlaComputation::from_proto` → `client.compile` → `execute`). Python is
+//! never loaded at serve time.
+//!
+//! With default features (offline builds) `Runtime` is an inert handle and
+//! every forward pass dispatches through the native reference executor in
+//! `model::refexec` instead — same `Runtime::cpu()` surface, so callers
+//! (`exp`, `serving`, benches, examples) compile identically either way.
+//! See DESIGN.md §"xla feature matrix".
 
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
-use std::sync::Mutex;
+#[cfg(feature = "xla")]
+mod pjrt {
+    use std::collections::HashMap;
+    use std::path::{Path, PathBuf};
+    use std::sync::Mutex;
 
-use anyhow::{Context, Result};
+    use anyhow::{Context, Result};
 
-/// Thin wrapper around the PJRT CPU client with an executable cache.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    cache: Mutex<HashMap<PathBuf, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
-}
-
-impl Runtime {
-    pub fn cpu() -> Result<Self> {
-        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
-        Ok(Self { client, cache: Mutex::new(HashMap::new()) })
+    /// Thin wrapper around the PJRT CPU client with an executable cache.
+    pub struct Runtime {
+        client: xla::PjRtClient,
+        cache: Mutex<HashMap<PathBuf, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
     }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Load + compile an HLO text artifact (cached by path).
-    pub fn load(&self, path: &Path) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
-        if let Some(e) = self.cache.lock().unwrap().get(path) {
-            return Ok(e.clone());
+    impl Runtime {
+        pub fn cpu() -> Result<Self> {
+            let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+            Ok(Self { client, cache: Mutex::new(HashMap::new()) })
         }
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("non-utf8 artifact path")?,
-        )
-        .with_context(|| format!("parse HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = std::sync::Arc::new(
-            self.client.compile(&comp).with_context(|| format!("compile {}", path.display()))?,
-        );
-        self.cache.lock().unwrap().insert(path.to_path_buf(), exe.clone());
-        Ok(exe)
-    }
 
-    /// Execute a cached executable on literal inputs. All our artifacts are
-    /// lowered with `return_tuple=True`, so the single output is a 1-tuple.
-    pub fn run(&self, exe: &xla::PjRtLoadedExecutable, args: &[xla::Literal]) -> Result<xla::Literal> {
-        let result = exe.execute::<xla::Literal>(args)?[0][0].to_literal_sync()?;
-        Ok(result.to_tuple1()?)
-    }
-
-    pub fn cached_modules(&self) -> usize {
-        self.cache.lock().unwrap().len()
-    }
-}
-
-// ---- literal construction helpers -------------------------------------------------
-/// f32 literal of arbitrary shape.
-pub fn lit_f32(dims: &[usize], data: &[f32]) -> Result<xla::Literal> {
-    assert_eq!(dims.iter().product::<usize>(), data.len());
-    let bytes: Vec<u8> = data.iter().flat_map(|v| v.to_le_bytes()).collect();
-    Ok(xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, dims, &bytes)?)
-}
-
-/// i32 literal (token ids).
-pub fn lit_i32(dims: &[usize], data: &[i32]) -> Result<xla::Literal> {
-    assert_eq!(dims.iter().product::<usize>(), data.len());
-    let bytes: Vec<u8> = data.iter().flat_map(|v| v.to_le_bytes()).collect();
-    Ok(xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::S32, dims, &bytes)?)
-}
-
-/// i8 literal (q8 payloads).
-pub fn lit_i8(dims: &[usize], data: &[i8]) -> Result<xla::Literal> {
-    assert_eq!(dims.iter().product::<usize>(), data.len());
-    let bytes: Vec<u8> = data.iter().map(|&v| v as u8).collect();
-    Ok(xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::S8, dims, &bytes)?)
-}
-
-/// u8 literal (packed q4/t2 payloads).
-pub fn lit_u8(dims: &[usize], data: &[u8]) -> Result<xla::Literal> {
-    assert_eq!(dims.iter().product::<usize>(), data.len());
-    Ok(xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::U8, dims, data)?)
-}
-
-/// Read an f32 literal back into a Vec.
-pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
-    Ok(lit.to_vec::<f32>()?)
-}
-
-/// Execute the shared `entropy.hlo` artifact (fixed 65536-padded input) —
-/// cross-checks the L1 Pallas kernel against the L3 native implementation.
-pub const ENTROPY_PAD: usize = 65536;
-pub const ENTROPY_NEG_PAD: f32 = -1e30;
-
-pub fn entropy_via_hlo(rt: &Runtime, artifacts: &Path, w: &[f32]) -> Result<f64> {
-    assert!(w.len() <= ENTROPY_PAD, "tensor too large for entropy.hlo ({})", w.len());
-    let exe = rt.load(&artifacts.join("entropy.hlo.txt"))?;
-    let mut padded = vec![ENTROPY_NEG_PAD; ENTROPY_PAD];
-    padded[..w.len()].copy_from_slice(w);
-    let out = rt.run(&exe, &[lit_f32(&[ENTROPY_PAD], &padded)?])?;
-    Ok(to_vec_f32(&out)?[0] as f64)
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    fn runtime_and_artifacts() -> Option<(Runtime, std::path::PathBuf)> {
-        let art = crate::artifacts_dir();
-        if !art.join("entropy.hlo.txt").exists() {
-            eprintln!("skipping: artifacts not built");
-            return None;
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
         }
-        Some((Runtime::cpu().unwrap(), art))
-    }
 
-    #[test]
-    fn entropy_hlo_matches_native() {
-        let Some((rt, art)) = runtime_and_artifacts() else { return };
-        let mut r = crate::rng::Xoshiro256pp::new(1);
-        for n in [100usize, 5000, 50176] {
-            let w: Vec<f32> = (0..n).map(|_| r.normal_f32(0.0, 0.4)).collect();
-            let h_native = crate::entropy::entropy(&w);
-            let h_hlo = entropy_via_hlo(&rt, &art, &w).unwrap();
-            assert!(
-                (h_native - h_hlo).abs() < 3e-3 * (1.0 + h_native.abs()),
-                "n={n}: native {h_native} vs hlo {h_hlo}"
+        /// Load + compile an HLO text artifact (cached by path).
+        pub fn load(&self, path: &Path) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+            if let Some(e) = self.cache.lock().unwrap().get(path) {
+                return Ok(e.clone());
+            }
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 artifact path")?,
+            )
+            .with_context(|| format!("parse HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = std::sync::Arc::new(
+                self.client
+                    .compile(&comp)
+                    .with_context(|| format!("compile {}", path.display()))?,
             );
+            self.cache.lock().unwrap().insert(path.to_path_buf(), exe.clone());
+            Ok(exe)
+        }
+
+        /// Execute a cached executable on literal inputs. All our artifacts are
+        /// lowered with `return_tuple=True`, so the single output is a 1-tuple.
+        pub fn run(
+            &self,
+            exe: &xla::PjRtLoadedExecutable,
+            args: &[xla::Literal],
+        ) -> Result<xla::Literal> {
+            let result = exe.execute::<xla::Literal>(args)?[0][0].to_literal_sync()?;
+            Ok(result.to_tuple1()?)
+        }
+
+        pub fn cached_modules(&self) -> usize {
+            self.cache.lock().unwrap().len()
         }
     }
 
-    #[test]
-    fn executable_cache_reuses_modules() {
-        let Some((rt, art)) = runtime_and_artifacts() else { return };
-        let _ = rt.load(&art.join("entropy.hlo.txt")).unwrap();
-        let _ = rt.load(&art.join("entropy.hlo.txt")).unwrap();
-        assert_eq!(rt.cached_modules(), 1);
+    // ---- literal construction helpers -------------------------------------------
+    /// f32 literal of arbitrary shape.
+    pub fn lit_f32(dims: &[usize], data: &[f32]) -> Result<xla::Literal> {
+        assert_eq!(dims.iter().product::<usize>(), data.len());
+        let bytes: Vec<u8> = data.iter().flat_map(|v| v.to_le_bytes()).collect();
+        Ok(xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::F32,
+            dims,
+            &bytes,
+        )?)
     }
 
-    #[test]
-    fn literal_roundtrip_f32() {
-        let l = lit_f32(&[2, 3], &[1., 2., 3., 4., 5., 6.]).unwrap();
-        assert_eq!(to_vec_f32(&l).unwrap(), vec![1., 2., 3., 4., 5., 6.]);
+    /// i32 literal (token ids).
+    pub fn lit_i32(dims: &[usize], data: &[i32]) -> Result<xla::Literal> {
+        assert_eq!(dims.iter().product::<usize>(), data.len());
+        let bytes: Vec<u8> = data.iter().flat_map(|v| v.to_le_bytes()).collect();
+        Ok(xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::S32,
+            dims,
+            &bytes,
+        )?)
     }
 
-    #[test]
-    fn literal_i8_u8() {
-        let l = lit_i8(&[4], &[-3, -1, 0, 7]).unwrap();
-        assert_eq!(l.to_vec::<i8>().unwrap(), vec![-3, -1, 0, 7]);
-        let l = lit_u8(&[3], &[0, 128, 255]).unwrap();
-        assert_eq!(l.to_vec::<u8>().unwrap(), vec![0, 128, 255]);
+    /// i8 literal (q8 payloads).
+    pub fn lit_i8(dims: &[usize], data: &[i8]) -> Result<xla::Literal> {
+        assert_eq!(dims.iter().product::<usize>(), data.len());
+        let bytes: Vec<u8> = data.iter().map(|&v| v as u8).collect();
+        Ok(xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::S8,
+            dims,
+            &bytes,
+        )?)
+    }
+
+    /// u8 literal (packed q4/t2 payloads).
+    pub fn lit_u8(dims: &[usize], data: &[u8]) -> Result<xla::Literal> {
+        assert_eq!(dims.iter().product::<usize>(), data.len());
+        Ok(xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::U8,
+            dims,
+            data,
+        )?)
+    }
+
+    /// Read an f32 literal back into a Vec.
+    pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+        Ok(lit.to_vec::<f32>()?)
+    }
+
+    /// Execute the shared `entropy.hlo` artifact (fixed 65536-padded input) —
+    /// cross-checks the L1 Pallas kernel against the L3 native implementation.
+    pub const ENTROPY_PAD: usize = 65536;
+    pub const ENTROPY_NEG_PAD: f32 = -1e30;
+
+    pub fn entropy_via_hlo(rt: &Runtime, artifacts: &Path, w: &[f32]) -> Result<f64> {
+        assert!(w.len() <= ENTROPY_PAD, "tensor too large for entropy.hlo ({})", w.len());
+        let exe = rt.load(&artifacts.join("entropy.hlo.txt"))?;
+        let mut padded = vec![ENTROPY_NEG_PAD; ENTROPY_PAD];
+        padded[..w.len()].copy_from_slice(w);
+        let out = rt.run(&exe, &[lit_f32(&[ENTROPY_PAD], &padded)?])?;
+        Ok(to_vec_f32(&out)?[0] as f64)
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+
+        fn runtime_and_artifacts() -> Option<(Runtime, std::path::PathBuf)> {
+            let art = crate::artifacts_dir();
+            if !art.join("entropy.hlo.txt").exists() {
+                eprintln!("skipping: artifacts not built");
+                return None;
+            }
+            Some((Runtime::cpu().unwrap(), art))
+        }
+
+        #[test]
+        fn entropy_hlo_matches_native() {
+            let Some((rt, art)) = runtime_and_artifacts() else { return };
+            let mut r = crate::rng::Xoshiro256pp::new(1);
+            for n in [100usize, 5000, 50176] {
+                let w: Vec<f32> = (0..n).map(|_| r.normal_f32(0.0, 0.4)).collect();
+                let h_native = crate::entropy::entropy(&w);
+                let h_hlo = entropy_via_hlo(&rt, &art, &w).unwrap();
+                assert!(
+                    (h_native - h_hlo).abs() < 3e-3 * (1.0 + h_native.abs()),
+                    "n={n}: native {h_native} vs hlo {h_hlo}"
+                );
+            }
+        }
+
+        #[test]
+        fn executable_cache_reuses_modules() {
+            let Some((rt, art)) = runtime_and_artifacts() else { return };
+            let _ = rt.load(&art.join("entropy.hlo.txt")).unwrap();
+            let _ = rt.load(&art.join("entropy.hlo.txt")).unwrap();
+            assert_eq!(rt.cached_modules(), 1);
+        }
+
+        #[test]
+        fn literal_roundtrip_f32() {
+            let l = lit_f32(&[2, 3], &[1., 2., 3., 4., 5., 6.]).unwrap();
+            assert_eq!(to_vec_f32(&l).unwrap(), vec![1., 2., 3., 4., 5., 6.]);
+        }
+
+        #[test]
+        fn literal_i8_u8() {
+            let l = lit_i8(&[4], &[-3, -1, 0, 7]).unwrap();
+            assert_eq!(l.to_vec::<i8>().unwrap(), vec![-3, -1, 0, 7]);
+            let l = lit_u8(&[3], &[0, 128, 255]).unwrap();
+            assert_eq!(l.to_vec::<u8>().unwrap(), vec![0, 128, 255]);
+        }
     }
 }
+
+#[cfg(feature = "xla")]
+pub use pjrt::*;
+
+#[cfg(not(feature = "xla"))]
+mod native {
+    use anyhow::Result;
+
+    /// Inert runtime handle for offline builds: forward passes run through
+    /// `model::refexec` and never touch this struct beyond its existence.
+    pub struct Runtime {
+        _private: (),
+    }
+
+    impl Runtime {
+        pub fn cpu() -> Result<Self> {
+            Ok(Self { _private: () })
+        }
+
+        pub fn platform(&self) -> String {
+            "native-ref".to_string()
+        }
+
+        /// No executables are compiled on the native path.
+        pub fn cached_modules(&self) -> usize {
+            0
+        }
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+
+        #[test]
+        fn stub_runtime_constructs() {
+            let rt = Runtime::cpu().unwrap();
+            assert_eq!(rt.platform(), "native-ref");
+            assert_eq!(rt.cached_modules(), 0);
+        }
+    }
+}
+
+#[cfg(not(feature = "xla"))]
+pub use native::*;

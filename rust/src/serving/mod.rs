@@ -1,10 +1,18 @@
-//! Serving coordinator — the L3 request path.
+//! Serving coordinator — the L3 request path, sharded across N workers.
 //!
-//! A worker thread owns the PJRT runtime (the client is not `Send`, so it is
-//! created inside the worker) and a quantized model instance; the front end
-//! submits requests over a channel. A dynamic batcher groups up to
-//! `max_batch` requests or waits at most `max_wait`, then executes one
-//! full-sequence forward and answers every request in the batch.
+//! Topology: the front end submits requests over a channel to a **batcher**
+//! thread; a dynamic batching window groups up to `max_batch` requests or
+//! waits at most `max_wait`, then dispatches the whole batch **round-robin**
+//! to one of `ServeConfig::workers` **shard workers** over per-shard queues.
+//! Each shard owns a full model replica (its own `Runtime` — the PJRT client
+//! is not `Send`, so it is created inside the shard thread — plus its own
+//! `QuantizedModel`) and answers every request in the batch.
+//!
+//! Responses are batching- and shard-invariant: attention never mixes batch
+//! rows, padding rows are zeros, and every replica is built from the same
+//! plan — so a request's `next_token` is identical whether it is served by
+//! 1 worker or N. Shard-level `ShardOccupancy` is folded into the aggregate
+//! metrics via `ServingMetrics::merge` at shutdown.
 //!
 //! Cross-machine block placement (from `cluster::Distribution`) is simulated:
 //! each batch is charged `hops × link_latency` of virtual network time,
@@ -42,44 +50,100 @@ pub struct Response {
     /// simulated cross-machine network time for the batch
     pub network_latency_us: u64,
     pub batch_size: usize,
+    /// which shard worker executed the batch
+    pub shard: usize,
 }
+
+/// Sentinel `next_token` for requests whose context contains tokens outside
+/// the model vocabulary — answered immediately, never executed.
+pub const INVALID_TOKEN: i32 = -1;
 
 enum Msg {
     Req(Request),
     Stop(Sender<ServingMetrics>),
 }
 
-/// Aggregate serving metrics.
+enum ShardMsg {
+    Batch(Vec<Request>),
+    Stop(Sender<ServingMetrics>),
+}
+
+/// Per-shard execution accounting.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ShardOccupancy {
+    pub shard: usize,
+    pub completed: usize,
+    pub batches: usize,
+    /// time spent executing batches (excludes idle waiting)
+    pub busy_us: u64,
+}
+
+impl ShardOccupancy {
+    /// Fraction of the serving wall-clock this shard spent executing.
+    pub fn occupancy(&self, wall: Duration) -> f64 {
+        let wall_us = wall.as_micros() as f64;
+        if wall_us <= 0.0 {
+            return 0.0;
+        }
+        (self.busy_us as f64 / wall_us).min(1.0)
+    }
+}
+
+/// Aggregate serving metrics (single shard, or merged across shards).
 #[derive(Clone, Debug, Default)]
 pub struct ServingMetrics {
     pub completed: usize,
+    /// Requests answered with `INVALID_TOKEN` without executing (counted in
+    /// `completed`, excluded from latency/batch aggregates).
+    pub rejected: usize,
     pub batches: usize,
     pub latencies_us: Vec<u64>,
     pub wall_time: Duration,
     pub max_batch_observed: usize,
     pub virtual_network_us: u64,
+    /// One entry per shard worker (sorted by shard id after `merge`).
+    pub shards: Vec<ShardOccupancy>,
 }
 
 impl ServingMetrics {
+    /// Nearest-rank percentile: index ceil(p·n) − 1, clamped to the sample
+    /// range (so p=0 is the min and p=1 the max).
     pub fn percentile_us(&self, p: f64) -> u64 {
         if self.latencies_us.is_empty() {
             return 0;
         }
         let mut v = self.latencies_us.clone();
         v.sort_unstable();
-        v[((v.len() as f64 * p) as usize).min(v.len() - 1)]
+        let rank = (p * v.len() as f64).ceil() as usize;
+        v[rank.saturating_sub(1).min(v.len() - 1)]
     }
 
     pub fn throughput_rps(&self) -> f64 {
         self.completed as f64 / self.wall_time.as_secs_f64().max(1e-9)
     }
 
+    /// Mean EXECUTED requests per batch (rejects never enter a batch).
     pub fn mean_batch(&self) -> f64 {
-        self.completed as f64 / self.batches.max(1) as f64
+        (self.completed - self.rejected) as f64 / self.batches.max(1) as f64
+    }
+
+    /// Fold another shard's (or coordinator's) metrics into this aggregate:
+    /// counters add, latencies concatenate, wall-clock takes the max, shard
+    /// occupancy records append.
+    pub fn merge(&mut self, other: ServingMetrics) {
+        self.completed += other.completed;
+        self.rejected += other.rejected;
+        self.batches += other.batches;
+        self.latencies_us.extend(other.latencies_us);
+        self.wall_time = self.wall_time.max(other.wall_time);
+        self.max_batch_observed = self.max_batch_observed.max(other.max_batch_observed);
+        self.virtual_network_us += other.virtual_network_us;
+        self.shards.extend(other.shards);
+        self.shards.sort_by_key(|s| s.shard);
     }
 
     pub fn summary(&self) -> String {
-        format!(
+        let mut s = format!(
             "{} reqs in {:?} ({:.1} req/s), batches {} (mean {:.2}, max {}), \
              p50 {}us p95 {}us p99 {}us, virtual-net {}us",
             self.completed,
@@ -92,11 +156,30 @@ impl ServingMetrics {
             self.percentile_us(0.95),
             self.percentile_us(0.99),
             self.virtual_network_us,
-        )
+        );
+        if self.rejected > 0 {
+            s.push_str(&format!(", rejected {}", self.rejected));
+        }
+        if self.shards.len() > 1 {
+            let occ: Vec<String> = self
+                .shards
+                .iter()
+                .map(|sh| {
+                    format!(
+                        "s{}:{}r/{:.0}%",
+                        sh.shard,
+                        sh.completed,
+                        100.0 * sh.occupancy(self.wall_time)
+                    )
+                })
+                .collect();
+            s.push_str(&format!(", shards [{}]", occ.join(" ")));
+        }
+        s
     }
 }
 
-/// Handle to a running coordinator.
+/// Handle to a running sharded coordinator.
 pub struct Coordinator {
     tx: Sender<Msg>,
     handle: Option<std::thread::JoinHandle<()>>,
@@ -104,8 +187,9 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
-    /// Start the worker. `network_hops` is the placement's hop count
-    /// (0 = single machine); `link_latency_us` is charged per hop per batch.
+    /// Load the model from disk and start the shard workers + batcher.
+    /// `network_hops` is the placement's hop count (0 = single machine);
+    /// `link_latency_us` is charged per hop per batch.
     pub fn start(
         model_path: std::path::PathBuf,
         plan: QuantPlan,
@@ -113,25 +197,61 @@ impl Coordinator {
         network_hops: usize,
         link_latency_us: u64,
     ) -> Result<Self> {
-        let (tx, rx) = channel::<Msg>();
-        let (ready_tx, ready_rx) = channel::<Result<(), String>>();
-        let handle = std::thread::Builder::new()
-            .name("ewq-coordinator".into())
-            .spawn(move || {
-                if let Err(e) =
-                    worker(model_path, plan, cfg, network_hops, link_latency_us, rx, ready_tx)
-                {
-                    eprintln!("coordinator worker failed: {e:#}");
-                }
-            })
-            .context("spawn coordinator")?;
-        // block until the worker has loaded + compiled + warmed the model so
-        // request latencies never include one-off startup cost
-        match ready_rx.recv() {
-            Ok(Ok(())) => {}
-            Ok(Err(msg)) => anyhow::bail!("coordinator startup failed: {msg}"),
-            Err(_) => anyhow::bail!("coordinator died during startup"),
+        let model = ModelDir::load(&model_path)?;
+        Self::start_with_model(model, plan, cfg, network_hops, link_latency_us)
+    }
+
+    /// Start from an already-loaded (possibly synthetic, artifact-less)
+    /// model: each of `cfg.workers` shards gets its own replica clone.
+    pub fn start_with_model(
+        model: ModelDir,
+        plan: QuantPlan,
+        cfg: ServeConfig,
+        network_hops: usize,
+        link_latency_us: u64,
+    ) -> Result<Self> {
+        let n_shards = cfg.workers.max(1);
+        let net_us = network_hops as u64 * link_latency_us;
+        let batch_cap = cfg.max_batch.min(model.schema.eval_batch).max(1);
+
+        // spawn shard workers, each owning a replica
+        let (ready_tx, ready_rx) = channel::<std::result::Result<(), String>>();
+        let mut shard_txs: Vec<Sender<ShardMsg>> = Vec::with_capacity(n_shards);
+        let mut shard_handles = Vec::with_capacity(n_shards);
+        for shard in 0..n_shards {
+            let (stx, srx) = channel::<ShardMsg>();
+            let replica = model.clone();
+            let plan = plan.clone();
+            let ready = ready_tx.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("ewq-shard-{shard}"))
+                .spawn(move || {
+                    if let Err(e) = shard_worker(shard, replica, plan, net_us, srx, ready) {
+                        eprintln!("shard {shard} failed: {e:#}");
+                    }
+                })
+                .context("spawn shard worker")?;
+            shard_txs.push(stx);
+            shard_handles.push(handle);
         }
+        drop(ready_tx);
+        // block until every shard has loaded + compiled + warmed its replica
+        // so request latencies never include one-off startup cost
+        for _ in 0..n_shards {
+            match ready_rx.recv() {
+                Ok(Ok(())) => {}
+                Ok(Err(msg)) => anyhow::bail!("shard startup failed: {msg}"),
+                Err(_) => anyhow::bail!("a shard died during startup"),
+            }
+        }
+
+        // batcher thread: groups requests, dispatches round-robin
+        let (tx, rx) = channel::<Msg>();
+        let max_wait = Duration::from_micros(cfg.max_wait_us);
+        let handle = std::thread::Builder::new()
+            .name("ewq-batcher".into())
+            .spawn(move || batcher(rx, shard_txs, shard_handles, batch_cap, max_wait))
+            .context("spawn batcher")?;
         Ok(Self { tx, handle: Some(handle), next_id: 0.into() })
     }
 
@@ -148,7 +268,7 @@ impl Coordinator {
         rrx
     }
 
-    /// Stop the worker and collect metrics.
+    /// Stop batcher + shards and collect the merged metrics.
     pub fn shutdown(mut self) -> ServingMetrics {
         let (mtx, mrx) = channel();
         let _ = self.tx.send(Msg::Stop(mtx));
@@ -160,53 +280,58 @@ impl Coordinator {
     }
 }
 
-fn worker(
-    model_path: std::path::PathBuf,
-    plan: QuantPlan,
-    cfg: ServeConfig,
-    network_hops: usize,
-    link_latency_us: u64,
+/// The shared dynamic batcher: owns the request queue, closes batching
+/// windows, and dispatches full batches round-robin over per-shard queues.
+fn batcher(
     rx: Receiver<Msg>,
-    ready: Sender<Result<(), String>>,
-) -> Result<()> {
-    // PJRT client lives entirely inside this thread (not Send).
-    let setup = (|| -> Result<_> {
-        let rt = Runtime::cpu()?;
-        let model = ModelDir::load(&model_path)?;
-        let qm = QuantizedModel::build(&model, &plan)?;
-        Ok((rt, model, qm))
-    })();
-    let (rt, model, qm) = match setup {
-        Ok(v) => v,
-        Err(e) => {
-            let _ = ready.send(Err(format!("{e:#}")));
-            return Err(e);
+    shard_txs: Vec<Sender<ShardMsg>>,
+    shard_handles: Vec<std::thread::JoinHandle<()>>,
+    batch_cap: usize,
+    max_wait: Duration,
+) {
+    let started = Instant::now();
+    let mut rr = 0usize;
+    let mut pending: Vec<Request> = Vec::new();
+
+    let finalize = |mtx: Sender<ServingMetrics>,
+                    shard_txs: Vec<Sender<ShardMsg>>,
+                    shard_handles: Vec<std::thread::JoinHandle<()>>| {
+        // Stop messages queue behind in-flight batches, so every shard
+        // finishes its work before reporting
+        let mut agg = ServingMetrics::default();
+        for stx in &shard_txs {
+            let (stop_tx, stop_rx) = channel();
+            if stx.send(ShardMsg::Stop(stop_tx)).is_ok() {
+                if let Ok(m) = stop_rx.recv() {
+                    agg.merge(m);
+                }
+            }
+        }
+        agg.wall_time = started.elapsed();
+        let _ = mtx.send(agg);
+        drop(shard_txs);
+        for h in shard_handles {
+            let _ = h.join();
         }
     };
-    let ex = ModelExecutor::new(&rt, &model);
-    if let Err(e) = ex.warmup() {
-        let _ = ready.send(Err(format!("{e:#}")));
-        return Err(e);
-    }
-    let _ = ready.send(Ok(()));
 
-    let mut metrics = ServingMetrics::default();
-    let started = Instant::now();
-    let max_wait = Duration::from_micros(cfg.max_wait_us);
-    let batch_cap = cfg.max_batch.min(model.schema.eval_batch);
-
-    let mut pending: Vec<Request> = Vec::new();
     loop {
         // blocking wait for the first request (or stop)
         if pending.is_empty() {
             match rx.recv() {
                 Ok(Msg::Req(r)) => pending.push(r),
                 Ok(Msg::Stop(mtx)) => {
-                    metrics.wall_time = started.elapsed();
-                    let _ = mtx.send(metrics);
-                    return Ok(());
+                    finalize(mtx, shard_txs, shard_handles);
+                    return;
                 }
-                Err(_) => return Ok(()),
+                Err(_) => {
+                    // front end dropped without shutdown: stop shards quietly
+                    drop(shard_txs);
+                    for h in shard_handles {
+                        let _ = h.join();
+                    }
+                    return;
+                }
             }
         }
         // dynamic batching window
@@ -222,46 +347,166 @@ fn worker(
                 Err(_) => break,
             }
         }
-
-        // execute one padded batch
+        // dispatch the closed window round-robin; a dead shard (panicked
+        // thread) is skipped with a log line instead of silently eating
+        // 1/N of the traffic forever
         let batch: Vec<Request> = pending.drain(..).collect();
-        let (b, s) = (model.schema.eval_batch, model.schema.seq_len);
-        let mut toks = vec![0i32; b * s];
-        let mut pos = vec![0usize; batch.len()];
-        for (row, r) in batch.iter().enumerate() {
-            let ctx = &r.context[..r.context.len().min(s)];
-            toks[row * s..row * s + ctx.len()].copy_from_slice(ctx);
-            pos[row] = ctx.len().saturating_sub(1);
-        }
-        let net_us = network_hops as u64 * link_latency_us;
-        let logits = ex.forward(&qm, &toks)?;
-        let v = model.schema.vocab;
-        metrics.batches += 1;
-        metrics.max_batch_observed = metrics.max_batch_observed.max(batch.len());
-        metrics.virtual_network_us += net_us;
-        for (row, r) in batch.iter().enumerate() {
-            let base = (row * s + pos[row]) * v;
-            let next = logits[base..base + v]
-                .iter()
-                .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                .map(|(i, _)| i as i32)
-                .unwrap();
-            let latency = r.submitted.elapsed();
-            metrics.completed += 1;
-            metrics.latencies_us.push(latency.as_micros() as u64);
-            let _ = r.resp.send(Response {
-                id: r.id,
-                next_token: next,
-                latency,
-                network_latency_us: net_us,
-                batch_size: batch.len(),
-            });
+        if !batch.is_empty() {
+            let n_shards = shard_txs.len();
+            let mut msg = ShardMsg::Batch(batch);
+            let mut delivered = false;
+            for k in 0..n_shards {
+                let target = (rr + k) % n_shards;
+                match shard_txs[target].send(msg) {
+                    Ok(()) => {
+                        rr += k + 1;
+                        delivered = true;
+                        break;
+                    }
+                    Err(std::sync::mpsc::SendError(m)) => {
+                        eprintln!("batcher: shard {target} unreachable, rerouting batch");
+                        msg = m;
+                    }
+                }
+            }
+            if !delivered {
+                eprintln!("batcher: all shards unreachable; dropping batch");
+            }
         }
         if let Some(mtx) = stop {
-            metrics.wall_time = started.elapsed();
-            let _ = mtx.send(metrics);
-            return Ok(());
+            finalize(mtx, shard_txs, shard_handles);
+            return;
+        }
+    }
+}
+
+/// One shard worker: owns a model replica and executes dispatched batches.
+fn shard_worker(
+    shard: usize,
+    model: ModelDir,
+    plan: QuantPlan,
+    net_us: u64,
+    rx: Receiver<ShardMsg>,
+    ready: Sender<std::result::Result<(), String>>,
+) -> Result<()> {
+    // Runtime lives entirely inside this thread (PJRT client is not Send).
+    let setup = (|| -> Result<_> {
+        let rt = Runtime::cpu()?;
+        let qm = QuantizedModel::build(&model, &plan)?;
+        Ok((rt, qm))
+    })();
+    let (rt, qm) = match setup {
+        Ok(v) => v,
+        Err(e) => {
+            let _ = ready.send(Err(format!("{e:#}")));
+            return Err(e);
+        }
+    };
+    let ex = ModelExecutor::new(&rt, &model);
+    let (b, s) = (model.schema.eval_batch, model.schema.seq_len);
+    let v = model.schema.vocab;
+    // the executor keeps its own schema/dir copies and the quantized replica
+    // is self-contained — drop the fp32 weights instead of pinning a third
+    // copy of the model per shard for the thread's lifetime
+    drop(model);
+    if let Err(e) = ex.warmup() {
+        let _ = ready.send(Err(format!("{e:#}")));
+        return Err(e);
+    }
+    let _ = ready.send(Ok(()));
+
+    let mut metrics = ServingMetrics::default();
+    let mut occ = ShardOccupancy { shard, ..Default::default() };
+    let started = Instant::now();
+
+    loop {
+        match rx.recv() {
+            Ok(ShardMsg::Batch(batch)) => {
+                let exec_start = Instant::now();
+                // reject out-of-vocab contexts up front: the executor
+                // validates token range, and one malformed request must
+                // never kill the shard (and with it 1/N of all traffic).
+                // Only the seq_len prefix is validated — the tail beyond
+                // it is truncated away and never executed.
+                let (batch, rejected): (Vec<Request>, Vec<Request>) =
+                    batch.into_iter().partition(|r| {
+                        r.context[..r.context.len().min(s)]
+                            .iter()
+                            .all(|&t| t >= 0 && (t as usize) < v)
+                    });
+                for r in rejected {
+                    // answered but never executed: counted separately and
+                    // excluded from the latency/batch aggregates
+                    metrics.completed += 1;
+                    metrics.rejected += 1;
+                    occ.completed += 1;
+                    let _ = r.resp.send(Response {
+                        id: r.id,
+                        next_token: INVALID_TOKEN,
+                        latency: r.submitted.elapsed(),
+                        network_latency_us: 0,
+                        batch_size: 0,
+                        shard,
+                    });
+                }
+                if batch.is_empty() {
+                    continue;
+                }
+                // execute one padded batch
+                let mut toks = vec![0i32; b * s];
+                let mut pos = vec![0usize; batch.len()];
+                for (row, r) in batch.iter().enumerate() {
+                    let ctx = &r.context[..r.context.len().min(s)];
+                    toks[row * s..row * s + ctx.len()].copy_from_slice(ctx);
+                    pos[row] = ctx.len().saturating_sub(1);
+                }
+                let logits = match ex.forward(&qm, &toks) {
+                    Ok(l) => l,
+                    Err(e) => {
+                        // drop this batch's responses (callers see a closed
+                        // channel) but keep the shard alive for future work
+                        eprintln!(
+                            "shard {shard}: batch of {} failed: {e:#}",
+                            batch.len()
+                        );
+                        continue;
+                    }
+                };
+                metrics.batches += 1;
+                metrics.max_batch_observed = metrics.max_batch_observed.max(batch.len());
+                metrics.virtual_network_us += net_us;
+                for (row, r) in batch.iter().enumerate() {
+                    let base = (row * s + pos[row]) * v;
+                    // total_cmp: a NaN logit must not panic the shard thread
+                    let next = logits[base..base + v]
+                        .iter()
+                        .enumerate()
+                        .max_by(|a, b| a.1.total_cmp(b.1))
+                        .map(|(i, _)| i as i32)
+                        .unwrap();
+                    let latency = r.submitted.elapsed();
+                    metrics.completed += 1;
+                    metrics.latencies_us.push(latency.as_micros() as u64);
+                    let _ = r.resp.send(Response {
+                        id: r.id,
+                        next_token: next,
+                        latency,
+                        network_latency_us: net_us,
+                        batch_size: batch.len(),
+                        shard,
+                    });
+                }
+                occ.batches += 1;
+                occ.completed += batch.len();
+                occ.busy_us += exec_start.elapsed().as_micros() as u64;
+            }
+            Ok(ShardMsg::Stop(mtx)) => {
+                metrics.wall_time = started.elapsed();
+                metrics.shards = vec![occ];
+                let _ = mtx.send(metrics);
+                return Ok(());
+            }
+            Err(_) => return Ok(()),
         }
     }
 }
@@ -270,6 +515,8 @@ fn worker(
 mod tests {
     use super::*;
     use crate::quant::Precision;
+    use crate::zoo::gen::{synthetic_model_dir, Profile, SyntheticArch};
+    use crate::zoo::Schema;
 
     fn model_path() -> Option<std::path::PathBuf> {
         let p = crate::artifacts_dir().join("models/tl-phi");
@@ -281,11 +528,117 @@ mod tests {
         }
     }
 
+    /// Small synthetic model: serving runs offline through the native
+    /// reference executor, no artifacts needed.
+    fn tiny_model() -> ModelDir {
+        synthetic_model_dir(&SyntheticArch {
+            schema: Schema {
+                name: "tiny-serve".into(),
+                n_blocks: 2,
+                d_model: 32,
+                n_heads: 4,
+                d_ff: 64,
+                vocab: 64,
+                seq_len: 8,
+                eval_batch: 4,
+            },
+            profile: Profile::RampUp,
+            seed: 91,
+        })
+    }
+
+    fn collect_tokens(model: &ModelDir, workers: usize, requests: usize) -> (Vec<i32>, ServingMetrics) {
+        let plan =
+            QuantPlan::uniform(&model.schema.name, model.schema.n_blocks, Precision::Q8);
+        let cfg = ServeConfig { max_batch: 4, max_wait_us: 500, workers, ..Default::default() };
+        let coord =
+            Coordinator::start_with_model(model.clone(), plan, cfg, 1, 50).unwrap();
+        let mut rxs = Vec::with_capacity(requests);
+        for i in 0..requests {
+            rxs.push(coord.submit(vec![
+                (i % 64) as i32,
+                ((i * 7) % 64) as i32,
+                ((i * 13) % 64) as i32,
+            ]));
+        }
+        let toks: Vec<i32> = rxs
+            .into_iter()
+            .map(|rx| rx.recv_timeout(Duration::from_secs(120)).unwrap().next_token)
+            .collect();
+        (toks, coord.shutdown())
+    }
+
+    #[test]
+    fn sharded_serving_answers_everything_offline() {
+        let model = tiny_model();
+        let (toks, m) = collect_tokens(&model, 3, 20);
+        assert_eq!(toks.len(), 20);
+        assert!(toks.iter().all(|&t| (0..64).contains(&t)));
+        assert_eq!(m.completed, 20);
+        assert!(m.batches >= 1);
+        assert_eq!(m.shards.len(), 3, "one occupancy record per shard");
+        assert_eq!(m.shards.iter().map(|s| s.completed).sum::<usize>(), 20);
+        assert_eq!(m.shards.iter().map(|s| s.batches).sum::<usize>(), m.batches);
+        for (i, s) in m.shards.iter().enumerate() {
+            assert_eq!(s.shard, i);
+            let o = s.occupancy(m.wall_time);
+            assert!((0.0..=1.0).contains(&o));
+        }
+    }
+
+    #[test]
+    fn responses_are_invariant_to_worker_count() {
+        // the acceptance invariant: identical per-request responses whether
+        // one worker or many serve the trace
+        let model = tiny_model();
+        let (serial, _) = collect_tokens(&model, 1, 16);
+        let (sharded, _) = collect_tokens(&model, 4, 16);
+        assert_eq!(serial, sharded);
+    }
+
+    #[test]
+    fn invalid_tokens_get_sentinel_and_shard_survives() {
+        let model = tiny_model();
+        let plan =
+            QuantPlan::uniform(&model.schema.name, model.schema.n_blocks, Precision::Q8);
+        let cfg = ServeConfig { max_batch: 4, max_wait_us: 500, workers: 1, ..Default::default() };
+        let coord = Coordinator::start_with_model(model, plan, cfg, 0, 0).unwrap();
+        let bad_high = coord.submit(vec![1, 9999, 2]); // out of vocab
+        let bad_neg = coord.submit(vec![-7]);
+        let good = coord.submit(vec![1, 2, 3]);
+        assert_eq!(
+            bad_high.recv_timeout(Duration::from_secs(120)).unwrap().next_token,
+            INVALID_TOKEN
+        );
+        assert_eq!(
+            bad_neg.recv_timeout(Duration::from_secs(120)).unwrap().next_token,
+            INVALID_TOKEN
+        );
+        // the shard must still execute valid work afterwards
+        let resp = good.recv_timeout(Duration::from_secs(120)).unwrap();
+        assert!((0..64).contains(&resp.next_token));
+        // bad token BEYOND the seq_len truncation point: executed normally
+        let mut long_ctx = vec![3i32; 8];
+        long_ctx.extend([9999, 9999]);
+        let truncated = coord.submit(long_ctx);
+        assert!(
+            (0..64).contains(&truncated.recv_timeout(Duration::from_secs(120)).unwrap().next_token)
+        );
+        let late = coord.submit(vec![4, 5]);
+        assert!((0..64).contains(&late.recv_timeout(Duration::from_secs(120)).unwrap().next_token));
+        let m = coord.shutdown();
+        assert_eq!(m.completed, 5);
+        assert_eq!(m.rejected, 2);
+        // rejects are excluded from the latency/batch aggregates
+        assert_eq!(m.latencies_us.len(), 3);
+    }
+
     #[test]
     fn serves_batched_requests_end_to_end() {
         let Some(path) = model_path() else { return };
         let plan = QuantPlan::uniform("tl-phi", 8, Precision::Q8);
-        let cfg = ServeConfig { max_batch: 8, max_wait_us: 3_000, ..Default::default() };
+        let cfg =
+            ServeConfig { max_batch: 8, max_wait_us: 3_000, workers: 2, ..Default::default() };
         let coord = Coordinator::start(path, plan, cfg, 1, 200).unwrap();
 
         let mut rxs = Vec::new();
@@ -297,6 +650,7 @@ mod tests {
             assert!((0..512).contains(&resp.next_token));
             assert!(resp.batch_size >= 1 && resp.batch_size <= 8);
             assert_eq!(resp.network_latency_us, 200);
+            assert!(resp.shard < 2);
         }
         let m = coord.shutdown();
         assert_eq!(m.completed, 20);
@@ -308,27 +662,97 @@ mod tests {
 
     #[test]
     fn shutdown_without_requests_is_clean() {
-        let Some(path) = model_path() else { return };
-        let plan = QuantPlan::uniform("tl-phi", 8, Precision::Raw);
-        let coord =
-            Coordinator::start(path, plan, ServeConfig::default(), 0, 0).unwrap();
+        let model = tiny_model();
+        let plan = QuantPlan::uniform("tiny-serve", 2, Precision::Raw);
+        let coord = Coordinator::start_with_model(
+            model,
+            plan,
+            ServeConfig { workers: 2, ..Default::default() },
+            0,
+            0,
+        )
+        .unwrap();
         let m = coord.shutdown();
         assert_eq!(m.completed, 0);
         assert_eq!(m.virtual_network_us, 0);
+        assert_eq!(m.shards.len(), 2);
+        assert!(m.shards.iter().all(|s| s.completed == 0 && s.busy_us == 0));
     }
 
     #[test]
     fn metrics_percentiles_ordered() {
         let m = ServingMetrics {
             completed: 5,
+            rejected: 0,
             batches: 2,
             latencies_us: vec![10, 50, 20, 90, 30],
             wall_time: Duration::from_millis(10),
             max_batch_observed: 3,
             virtual_network_us: 0,
+            shards: Vec::new(),
         };
         assert_eq!(m.percentile_us(0.0), 10);
         assert!(m.percentile_us(0.5) <= m.percentile_us(0.95));
         assert!((m.mean_batch() - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_is_nearest_rank_on_small_samples() {
+        // the old (len*p) truncation read p50 of [1,2] as index 1
+        let m = |lats: Vec<u64>| ServingMetrics { latencies_us: lats, ..Default::default() };
+        let two = m(vec![2, 1]);
+        assert_eq!(two.percentile_us(0.5), 1, "p50 of [1,2] is the first sample");
+        assert_eq!(two.percentile_us(0.51), 2);
+        assert_eq!(two.percentile_us(1.0), 2);
+        let three = m(vec![3, 1, 2]);
+        assert_eq!(three.percentile_us(0.5), 2);
+        assert_eq!(three.percentile_us(0.0), 1);
+        let hundred = m((1..=100).collect());
+        assert_eq!(hundred.percentile_us(0.99), 99, "p99 of 1..=100 is 99, not 100");
+        assert_eq!(hundred.percentile_us(0.50), 50);
+        assert_eq!(hundred.percentile_us(1.0), 100);
+        let one = m(vec![42]);
+        for p in [0.0, 0.5, 0.99, 1.0] {
+            assert_eq!(one.percentile_us(p), 42);
+        }
+        assert_eq!(m(vec![]).percentile_us(0.5), 0);
+    }
+
+    #[test]
+    fn merge_aggregates_shards() {
+        let mut a = ServingMetrics {
+            completed: 3,
+            rejected: 1,
+            batches: 2,
+            latencies_us: vec![10, 20, 30],
+            wall_time: Duration::from_millis(5),
+            max_batch_observed: 2,
+            virtual_network_us: 100,
+            shards: vec![ShardOccupancy { shard: 1, completed: 3, batches: 2, busy_us: 4000 }],
+        };
+        let b = ServingMetrics {
+            completed: 2,
+            rejected: 0,
+            batches: 1,
+            latencies_us: vec![40, 50],
+            wall_time: Duration::from_millis(9),
+            max_batch_observed: 3,
+            virtual_network_us: 50,
+            shards: vec![ShardOccupancy { shard: 0, completed: 2, batches: 1, busy_us: 1000 }],
+        };
+        a.merge(b);
+        assert_eq!(a.completed, 5);
+        assert_eq!(a.rejected, 1);
+        assert_eq!(a.batches, 3);
+        assert_eq!(a.wall_time, Duration::from_millis(9));
+        assert_eq!(a.max_batch_observed, 3);
+        assert_eq!(a.virtual_network_us, 150);
+        assert_eq!(a.latencies_us.len(), 5);
+        // shards sorted by id after merge
+        assert_eq!(a.shards.iter().map(|s| s.shard).collect::<Vec<_>>(), vec![0, 1]);
+        assert_eq!(a.percentile_us(1.0), 50);
+        let occ = a.shards[1].occupancy(a.wall_time);
+        assert!((occ - 4000.0 / 9000.0).abs() < 1e-9);
+        assert!(!a.summary().is_empty());
     }
 }

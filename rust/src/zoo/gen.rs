@@ -125,6 +125,42 @@ pub fn gen_block_mats(arch: &SyntheticArch, block: usize) -> Vec<Tensor> {
         .collect()
 }
 
+/// Materialize a synthetic architecture as a full in-memory `ModelDir`
+/// (random embed/pos/head, unit norms, profile-shaped block matrices).
+/// The `dir` is empty — no HLO artifacts exist for synthetic models, so
+/// execution goes through the native reference executor. This is what lets
+/// the serving/executor paths be exercised offline, without `make artifacts`.
+pub fn synthetic_model_dir(arch: &SyntheticArch) -> crate::zoo::ModelDir {
+    use crate::zoo::{BlockWeights, ModelDir, ModelWeights};
+    let s = &arch.schema;
+    let d = s.d_model;
+    let mut rng = Xoshiro256pp::new(arch.seed ^ 0xE1AB_0001);
+    let normal = |n: usize, std: f32, rng: &mut Xoshiro256pp| -> Vec<f32> {
+        (0..n).map(|_| rng.normal_f32(0.0, std)).collect()
+    };
+    let embed = Tensor::new(vec![s.vocab, d], normal(s.vocab * d, 0.02, &mut rng));
+    let pos = Tensor::new(vec![s.seq_len, d], normal(s.seq_len * d, 0.02, &mut rng));
+    let gf = Tensor::new(vec![d], vec![1.0; d]);
+    let head =
+        Tensor::new(vec![d, s.vocab], normal(d * s.vocab, 1.0 / (d as f32).sqrt(), &mut rng));
+    let blocks = (0..s.n_blocks)
+        .map(|b| {
+            let mats: [Tensor; 6] =
+                gen_block_mats(arch, b).try_into().expect("six matrices per block");
+            BlockWeights {
+                g1: Tensor::new(vec![d], vec![1.0; d]),
+                g2: Tensor::new(vec![d], vec![1.0; d]),
+                mats,
+            }
+        })
+        .collect();
+    ModelDir {
+        dir: std::path::PathBuf::new(),
+        schema: s.clone(),
+        weights: ModelWeights { embed, pos, gf, head, blocks },
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -181,6 +217,25 @@ mod tests {
         }
         assert!(Profile::UShape.scale_at(0.0) > Profile::UShape.scale_at(0.5));
         assert!(Profile::RampUp.scale_at(1.0) > Profile::RampUp.scale_at(0.0));
+    }
+
+    #[test]
+    fn synthetic_model_dir_is_well_formed_and_deterministic() {
+        let arch = &synthetic_archs(2, 19)[1];
+        let m = synthetic_model_dir(arch);
+        let s = &m.schema;
+        assert_eq!(m.weights.embed.shape, vec![s.vocab, s.d_model]);
+        assert_eq!(m.weights.pos.shape, vec![s.seq_len, s.d_model]);
+        assert_eq!(m.weights.head.shape, vec![s.d_model, s.vocab]);
+        assert_eq!(m.weights.blocks.len(), s.n_blocks);
+        for b in &m.weights.blocks {
+            for (t, (k, n)) in b.mats.iter().zip(s.mat_shapes()) {
+                assert_eq!(t.shape, vec![k, n]);
+            }
+        }
+        let m2 = synthetic_model_dir(arch);
+        assert_eq!(m.weights.embed.data, m2.weights.embed.data);
+        assert_eq!(m.weights.blocks[0].mats[0].data, m2.weights.blocks[0].mats[0].data);
     }
 
     #[test]

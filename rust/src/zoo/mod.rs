@@ -122,8 +122,9 @@ pub struct ModelWeights {
     pub blocks: Vec<BlockWeights>,
 }
 
-/// A flagship model directory: schema + weights + HLO artifacts.
-#[derive(Debug)]
+/// A flagship model directory: schema + weights + HLO artifacts. `Clone` so
+/// the sharded serving coordinator can hand each shard its own replica.
+#[derive(Clone, Debug)]
 pub struct ModelDir {
     pub dir: PathBuf,
     pub schema: Schema,

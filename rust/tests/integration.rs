@@ -40,10 +40,12 @@ fn ets_weights_match_python_writer() {
     }
 }
 
+#[cfg(feature = "xla")]
 #[test]
 fn entropy_native_vs_pallas_hlo_on_real_weights() {
     // L3 native entropy vs the L1 Pallas kernel (through entropy.hlo) on
     // actual trained matrices — the cross-layer correctness anchor.
+    // (PJRT-only: entropy_via_hlo does not exist on the native path.)
     let Some(art) = artifacts() else { return };
     let rt = Runtime::cpu().unwrap();
     let m = ModelDir::load(art.join("models/tl-qwen")).unwrap();
@@ -55,6 +57,56 @@ fn entropy_native_vs_pallas_hlo_on_real_weights() {
             "native {native} vs pallas-hlo {hlo}"
         );
     }
+}
+
+#[test]
+fn sharded_serving_composes_with_ewq_plan_offline() {
+    // end-to-end without artifacts: synthetic model -> EWQ analysis ->
+    // mixed-precision plan -> sharded coordinator -> identical answers for
+    // 1 and 4 shard workers
+    use ewq::config::ServeConfig;
+    use ewq::par::Pool;
+    use ewq::serving::Coordinator;
+    use ewq::zoo::gen::{synthetic_model_dir, Profile, SyntheticArch};
+    use ewq::zoo::Schema;
+
+    // tiny on purpose: the native executor runs in debug mode here
+    let model = synthetic_model_dir(&SyntheticArch {
+        schema: Schema {
+            name: "tiny-e2e".into(),
+            n_blocks: 4,
+            d_model: 32,
+            n_heads: 4,
+            d_ff: 64,
+            vocab: 64,
+            seq_len: 8,
+            eval_batch: 4,
+        },
+        profile: Profile::MidBump,
+        seed: 12,
+    });
+    let cfg = EwqConfig::default();
+    let analysis = ewq::ewq::analyze_model_par(&model, &cfg, &Pool::new(4));
+    let plan = decide(&analysis, &cfg);
+    assert_eq!(plan.assignments.len(), model.schema.n_blocks);
+
+    let serve = |workers: usize| -> Vec<i32> {
+        let scfg = ServeConfig { max_batch: 4, max_wait_us: 500, workers, ..Default::default() };
+        let coord =
+            Coordinator::start_with_model(model.clone(), plan.clone(), scfg, 1, 25).unwrap();
+        let v = model.schema.vocab as i32;
+        let rxs: Vec<_> =
+            (0..12).map(|i| coord.submit(vec![i % v, (3 * i + 1) % v, (7 * i + 2) % v])).collect();
+        let toks = rxs
+            .into_iter()
+            .map(|rx| rx.recv_timeout(std::time::Duration::from_secs(120)).unwrap().next_token)
+            .collect();
+        let m = coord.shutdown();
+        assert_eq!(m.completed, 12);
+        assert_eq!(m.shards.len(), workers);
+        toks
+    };
+    assert_eq!(serve(1), serve(4));
 }
 
 #[test]
