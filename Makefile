@@ -1,6 +1,6 @@
 # Repo-level convenience targets. `make verify` mirrors the tier-1 gate.
 
-.PHONY: verify fmt clippy test bench artifacts
+.PHONY: verify fmt clippy test bench bench-smoke artifacts
 
 verify:
 	cd rust && cargo build --release && cargo test -q
@@ -16,6 +16,14 @@ test:
 
 bench:
 	cd rust && cargo bench
+
+# CI smoke lane: compile every bench target, then run the kernel bench with
+# a short sampling budget. Emits BENCH_kernels.json at the repo root
+# (fused-vs-reference latency, GFLOP/s, resident weight bytes).
+bench-smoke:
+	cd rust && cargo bench --no-run
+	cd rust && EWQ_BENCH_QUICK=1 EWQ_BENCH_OUT=../BENCH_kernels.json \
+		cargo bench --bench bench_runtime
 
 # Build the AOT artifacts (flagship weights + HLO text). Requires the
 # python/JAX toolchain; the Rust crate runs offline without them.

@@ -1,36 +1,201 @@
-//! Bench: PJRT forward-pass latency by precision variant — the inference-
-//! path cost behind Tables 6/7 (who pays what for dequant-in-graph).
+//! Bench: forward-pass latency through the fused quantized-GEMM kernels vs
+//! the dequantize-then-matmul reference path (the pre-kernel serving path),
+//! plus resident-weight accounting — the deployment cost behind the paper's
+//! memory-reduction claim. Always runs offline on a synthetic zoo model;
+//! when artifacts exist (`make artifacts`) the trained tl-phi precision
+//! sweep runs too.
+//!
+//! Emits machine-readable `BENCH_kernels.json` (override the path with
+//! `EWQ_BENCH_OUT`; `EWQ_BENCH_QUICK=1` shortens the sampling budget for
+//! the CI smoke lane — see `make bench-smoke`).
 
-use ewq::bench_util::{black_box, Bench};
+use ewq::bench_util::{black_box, report_speedup, Bench, Sample};
+use ewq::config::ParallelConfig;
 use ewq::ewq::QuantPlan;
+use ewq::model::refexec::{dequantize_blocks, forward_dequant, ForwardPass};
 use ewq::model::{ModelExecutor, QuantizedModel};
+use ewq::par::Pool;
 use ewq::quant::Precision;
 use ewq::runtime::Runtime;
-use ewq::zoo::ModelDir;
+use ewq::zoo::gen::{synthetic_model_dir, Profile, SyntheticArch};
+use ewq::zoo::{ModelDir, Schema};
+
+fn bench() -> Bench {
+    if std::env::var("EWQ_BENCH_QUICK").is_ok() {
+        Bench::quick()
+    } else {
+        Bench::default()
+    }
+}
+
+/// Block-dominant synthetic zoo model: big enough that the kernels (not the
+/// fp32 embed/head) carry the cost, small enough for a CI smoke run.
+fn zoo_model() -> ModelDir {
+    synthetic_model_dir(&SyntheticArch {
+        schema: Schema {
+            name: "syn-kernels".into(),
+            n_blocks: 6,
+            d_model: 96,
+            n_heads: 4,
+            d_ff: 384,
+            vocab: 512,
+            seq_len: 32,
+            eval_batch: 8,
+        },
+        profile: Profile::UShape,
+        seed: 909,
+    })
+}
+
+/// Alternating Q8/Q4 — the mixed-precision deployment plan shape.
+fn mixed_plan(n: usize) -> QuantPlan {
+    let mut plan = QuantPlan::uniform("syn-kernels", n, Precision::Q4);
+    for b in (0..n).step_by(2) {
+        plan.assignments[b] = Precision::Q8;
+    }
+    plan
+}
+
+/// Matmul FLOPs of one full-sequence forward (attention excluded): the
+/// work the GEMM kernels actually execute.
+fn matmul_flops(s: &Schema) -> f64 {
+    let rows = (s.eval_batch * s.seq_len) as f64;
+    let (d, ff, v) = (s.d_model as f64, s.d_ff as f64, s.vocab as f64);
+    s.n_blocks as f64 * (2.0 * rows * (4.0 * d * d + 2.0 * d * ff)) + 2.0 * rows * d * v
+}
+
+fn gflops(flops: f64, s: &Sample) -> f64 {
+    flops / s.mean.as_secs_f64() / 1e9
+}
+
+#[allow(clippy::too_many_arguments)]
+fn write_json(
+    path: &str,
+    model: &str,
+    workers: usize,
+    (s_ref, s_fused1, s_fusedn): (&Sample, &Sample, &Sample),
+    flops: f64,
+    (resident, f32_equiv, shadow): (usize, usize, usize),
+) {
+    let json = format!(
+        "{{\n  \"model\": \"{model}\",\n  \"plan\": \"mixed-q4q8\",\n  \"workers\": {workers},\n  \
+         \"serial_reference_ms\": {:.4},\n  \"fused_serial_ms\": {:.4},\n  \
+         \"fused_pooled_ms\": {:.4},\n  \"speedup_fused_serial\": {:.3},\n  \
+         \"speedup_fused_pooled\": {:.3},\n  \"gflops_serial_reference\": {:.3},\n  \
+         \"gflops_fused_serial\": {:.3},\n  \"gflops_fused_pooled\": {:.3},\n  \
+         \"resident_bytes\": {resident},\n  \"f32_equivalent_bytes\": {f32_equiv},\n  \
+         \"shadow_copy_bytes\": {shadow},\n  \"resident_ratio_vs_f32\": {:.4},\n  \
+         \"resident_ratio_vs_shadow\": {:.4}\n}}\n",
+        s_ref.mean.as_secs_f64() * 1e3,
+        s_fused1.mean.as_secs_f64() * 1e3,
+        s_fusedn.mean.as_secs_f64() * 1e3,
+        s_fused1.speedup_over(s_ref),
+        s_fusedn.speedup_over(s_ref),
+        gflops(flops, s_ref),
+        gflops(flops, s_fused1),
+        gflops(flops, s_fusedn),
+        resident as f64 / f32_equiv.max(1) as f64,
+        resident as f64 / shadow.max(1) as f64,
+    );
+    match std::fs::write(path, &json) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}
 
 fn main() {
-    println!("== bench_runtime: full-sequence forward latency by precision ==");
+    println!("== bench_runtime: fused quantized-GEMM forward vs dequantized reference ==");
+    let model = zoo_model();
+    let n = model.schema.n_blocks;
+    let plan = mixed_plan(n);
+    let qm = QuantizedModel::build(&model, &plan).unwrap();
+
+    let (bsz, sl) = (model.schema.eval_batch, model.schema.seq_len);
+    let mut toks = vec![0i32; bsz * sl];
+    for row in 0..bsz {
+        for t in 0..6 {
+            toks[row * sl + t] = ((row * 37 + t * 11) % model.schema.vocab) as i32;
+        }
+    }
+
+    let b = bench();
+    let flops = matmul_flops(&model.schema);
+
+    // baseline: the PR-1 serving path — f32 shadow copies dequantized up
+    // front (outside the timed loop, as the old executor cached them) and a
+    // serial dequantized-weights forward per call
+    let shadow_mats = dequantize_blocks(&qm);
+    let s_ref = b.run("forward syn mixed q4/q8 [serial dequantized reference]", || {
+        black_box(forward_dequant(&qm, black_box(&toks), &shadow_mats).unwrap());
+    });
+    drop(shadow_mats);
+
+    let mut fp1 = ForwardPass::new(&model.schema, Pool::serial());
+    let s_fused1 = b.run("forward syn mixed q4/q8 [fused serial]", || {
+        black_box(fp1.forward(&qm, black_box(&toks)).unwrap());
+    });
+
+    let pool = Pool::from_config(&ParallelConfig::auto());
+    let mut fpn = ForwardPass::new(&model.schema, pool);
+    let s_fusedn = b.run(
+        &format!("forward syn mixed q4/q8 [fused pooled x{}]", pool.workers()),
+        || {
+            black_box(fpn.forward(&qm, black_box(&toks)).unwrap());
+        },
+    );
+    report_speedup("fused serial vs reference", &s_ref, &s_fused1);
+    report_speedup("fused pooled vs reference", &s_ref, &s_fusedn);
+    println!(
+        "    matmul GFLOP/s: reference {:.2}, fused serial {:.2}, fused pooled {:.2}",
+        gflops(flops, &s_ref),
+        gflops(flops, &s_fused1),
+        gflops(flops, &s_fusedn)
+    );
+
+    // resident-weight accounting: packed vs a fully-f32 model (the table's
+    // baseline; the pre-kernel shadow-copy footprint — packed + f32 — goes
+    // to the JSON separately as resident_ratio_vs_shadow)
+    let mut rows = vec![(
+        "mixed q4/q8".to_string(),
+        qm.resident_bytes(),
+        qm.f32_equivalent_bytes(),
+    )];
+    for p in [Precision::Raw, Precision::Q8, Precision::Q4, Precision::Q3, Precision::T2] {
+        let q = QuantizedModel::build(&model, &QuantPlan::uniform("m", n, p)).unwrap();
+        rows.push((p.label().to_string(), q.resident_bytes(), q.f32_equivalent_bytes()));
+    }
+    println!("{}", ewq::report::resident_table(&rows).render());
+
+    let out = std::env::var("EWQ_BENCH_OUT").unwrap_or_else(|_| "BENCH_kernels.json".into());
+    write_json(
+        &out,
+        &model.schema.name,
+        pool.workers(),
+        (&s_ref, &s_fused1, &s_fusedn),
+        flops,
+        (qm.resident_bytes(), qm.f32_equivalent_bytes(), qm.shadow_copy_bytes()),
+    );
+
+    // trained-flagship sweep (kept from the PJRT era; needs `make artifacts`)
     let artifacts = ewq::artifacts_dir();
-    let Ok(model) = ModelDir::load(artifacts.join("models/tl-phi")) else {
-        eprintln!("need artifacts (make artifacts)");
+    let Ok(flagship) = ModelDir::load(artifacts.join("models/tl-phi")) else {
+        println!("(skipping trained tl-phi sweep: no artifacts)");
         return;
     };
-    let rt = Runtime::cpu().expect("pjrt cpu client");
-    let ex = ModelExecutor::new(&rt, &model);
+    let rt = Runtime::cpu().expect("runtime");
+    let ex = ModelExecutor::with_pool(&rt, &flagship, pool);
     ex.warmup().expect("warmup");
 
-    let (bsz, s) = (model.schema.eval_batch, model.schema.seq_len);
+    let (bsz, s) = (flagship.schema.eval_batch, flagship.schema.seq_len);
     let mut toks = vec![0i32; bsz * s];
     for row in 0..bsz {
         toks[row * s..row * s + 4].copy_from_slice(&[1, 160 + row as i32, 100 + row as i32, 2]);
     }
-
-    let bench = Bench::default();
-    let n = model.schema.n_blocks;
+    let nf = flagship.schema.n_blocks;
     let tokens_per_pass = (bsz * s) as f64;
     for p in [Precision::Raw, Precision::Q8, Precision::Q4, Precision::T2] {
-        let qm = QuantizedModel::build(&model, &QuantPlan::uniform("m", n, p)).unwrap();
-        let sres = bench.run(&format!("forward tl-phi uniform {}", p.label()), || {
+        let qm = QuantizedModel::build(&flagship, &QuantPlan::uniform("m", nf, p)).unwrap();
+        let sres = b.run(&format!("forward tl-phi uniform {}", p.label()), || {
             black_box(ex.forward(&qm, black_box(&toks)).unwrap());
         });
         println!("    -> {:.0} tok/s", sres.throughput(tokens_per_pass));
@@ -38,12 +203,13 @@ fn main() {
 
     // model build cost (quantize + literal encode), serial vs pooled
     let s = Bench::quick().run("QuantizedModel::build (Q4)", || {
-        black_box(QuantizedModel::build(&model, &QuantPlan::uniform("m", n, Precision::Q4)).unwrap());
+        black_box(
+            QuantizedModel::build(&flagship, &QuantPlan::uniform("m", nf, Precision::Q4)).unwrap(),
+        );
     });
-    let pool = ewq::par::Pool::from_config(&ewq::config::ParallelConfig::auto());
     let p = Bench::quick().run(&format!("QuantizedModel::build_pooled x{} (Q4)", pool.workers()), || {
         black_box(
-            QuantizedModel::build_pooled(&model, &QuantPlan::uniform("m", n, Precision::Q4), &pool)
+            QuantizedModel::build_pooled(&flagship, &QuantPlan::uniform("m", nf, Precision::Q4), &pool)
                 .unwrap(),
         );
     });

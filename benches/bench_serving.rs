@@ -7,7 +7,7 @@
 //! when artifacts exist (`make artifacts`) the trained tl-phi flagship is
 //! used instead (and, under `--features xla`, the PJRT executor).
 
-use ewq::config::ServeConfig;
+use ewq::config::{DispatchPolicy, ServeConfig};
 use ewq::ewq::QuantPlan;
 use ewq::quant::Precision;
 use ewq::serving::{Coordinator, ServingMetrics};
@@ -39,6 +39,37 @@ fn run_trace(
     }
     let m = coord.shutdown();
     println!("  max_batch={max_batch:<2} workers={workers} -> {}", m.summary());
+    m
+}
+
+/// Skewed-cost trace (alternating full-forward and all-reject windows):
+/// the workload the shortest-queue dispatcher exists for.
+fn run_skewed(model: &ModelDir, dispatch: DispatchPolicy, requests: usize) -> ServingMetrics {
+    let plan = QuantPlan::uniform(&model.schema.name, model.schema.n_blocks, Precision::Q8);
+    let cfg = ServeConfig {
+        max_batch: 1,
+        max_wait_us: 100,
+        workers: 2,
+        dispatch,
+        ..Default::default()
+    };
+    let coord = Coordinator::start_with_model(model.clone(), plan, cfg, 0, 0).expect("start");
+    let mut rxs = Vec::with_capacity(requests);
+    for i in 0..requests {
+        let ctx = if i % 2 == 0 { vec![1, 2, 3] } else { vec![-1] };
+        rxs.push(coord.submit(ctx));
+    }
+    for rx in rxs {
+        let _ = rx.recv();
+    }
+    let m = coord.shutdown();
+    let batches: Vec<usize> = m.shards.iter().map(|s| s.batches).collect();
+    println!(
+        "  {:<15} -> {} | executed batches per shard {:?}",
+        dispatch.label(),
+        m.summary(),
+        batches
+    );
     m
 }
 
@@ -97,4 +128,18 @@ fn main() {
         println!(" {}:", p.label());
         run_trace(&model, QuantPlan::uniform("m", n, p), 8, 1, requests);
     }
+
+    println!("dispatch-policy sweep (skewed batch costs, 2 workers, max_batch=1):");
+    let rr = run_skewed(&model, DispatchPolicy::RoundRobin, requests);
+    let sq = run_skewed(&model, DispatchPolicy::ShortestQueue, requests);
+    let min_max = |m: &ServingMetrics| {
+        let b: Vec<usize> = m.shards.iter().map(|s| s.batches).collect();
+        (b.iter().copied().min().unwrap_or(0), b.iter().copied().max().unwrap_or(0))
+    };
+    let (rr_min, rr_max) = min_max(&rr);
+    let (sq_min, sq_max) = min_max(&sq);
+    println!(
+        "    => executed-batch spread: round_robin {rr_min}..{rr_max}, \
+         shortest_queue {sq_min}..{sq_max}"
+    );
 }

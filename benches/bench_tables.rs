@@ -36,7 +36,9 @@ fn main() {
     );
     let model = ctx.flagship("tl-phi").unwrap();
     let rt = ctx.runtime.as_ref().unwrap();
-    let ex = ModelExecutor::new(rt, model);
+    // pooled native forward: matmul row bands fan out, results identical
+    let pool = ewq::par::Pool::from_config(&ewq::config::ParallelConfig::auto());
+    let ex = ModelExecutor::with_pool(rt, model, pool);
     for v in Variant::ALL {
         let t0 = Instant::now();
         let plan =

@@ -95,6 +95,39 @@ impl Default for ParallelConfig {
     }
 }
 
+/// How the serving batcher assigns closed batching windows to shard queues.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum DispatchPolicy {
+    /// Cycle shards in order regardless of load (the original protocol).
+    RoundRobin,
+    /// Send each window to the shard with the fewest queued + in-flight
+    /// batches — balances skewed batch costs (mixed-precision plans, cheap
+    /// all-reject windows) instead of blindly alternating.
+    #[default]
+    ShortestQueue,
+}
+
+impl DispatchPolicy {
+    pub fn label(self) -> &'static str {
+        match self {
+            DispatchPolicy::RoundRobin => "round_robin",
+            DispatchPolicy::ShortestQueue => "shortest_queue",
+        }
+    }
+}
+
+impl std::str::FromStr for DispatchPolicy {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "round_robin" | "rr" => Ok(DispatchPolicy::RoundRobin),
+            "shortest_queue" | "sq" => Ok(DispatchPolicy::ShortestQueue),
+            other => bail!("unknown dispatch policy {other:?} (round_robin|shortest_queue)"),
+        }
+    }
+}
+
 /// Serving coordinator configuration (examples/serve.rs, `ewq serve`).
 #[derive(Clone, Debug, PartialEq)]
 pub struct ServeConfig {
@@ -105,9 +138,15 @@ pub struct ServeConfig {
     pub n_machines: usize,
     pub requests: usize,
     /// Shard workers: each owns a full model replica and executes batches
-    /// dispatched round-robin by the shared batcher (1 = the classic
+    /// the shared batcher dispatches under `dispatch` (1 = the classic
     /// single-worker coordinator).
     pub workers: usize,
+    /// How closed batching windows are assigned to shard queues.
+    pub dispatch: DispatchPolicy,
+    /// Pool workers *inside* each shard's native forward pass (matmul row
+    /// bands / attention rows). 1 = serial forward; raise on hosts with
+    /// spare cores per shard. Responses are identical either way.
+    pub forward_workers: usize,
 }
 
 impl Default for ServeConfig {
@@ -120,6 +159,8 @@ impl Default for ServeConfig {
             n_machines: 2,
             requests: 64,
             workers: 1,
+            dispatch: DispatchPolicy::default(),
+            forward_workers: 1,
         }
     }
 }
@@ -135,6 +176,8 @@ impl ServeConfig {
             n_machines: c.get_or("serve", "n_machines", d.n_machines)?,
             requests: c.get_or("serve", "requests", d.requests)?,
             workers: c.get_or("serve", "workers", d.workers)?,
+            dispatch: c.get_or("serve", "dispatch", d.dispatch)?,
+            forward_workers: c.get_or("serve", "forward_workers", d.forward_workers)?,
         })
     }
 }
@@ -216,6 +259,23 @@ mod tests {
         assert_eq!(s.requests, 16);
         assert_eq!(s.workers, 4);
         assert_eq!(s.max_batch, ServeConfig::default().max_batch);
+        assert_eq!(s.dispatch, DispatchPolicy::ShortestQueue, "default policy");
+        assert_eq!(s.forward_workers, 1);
+    }
+
+    #[test]
+    fn dispatch_policy_parses_and_labels() {
+        let c = Config::parse("[serve]\ndispatch = round_robin\nforward_workers = 3\n").unwrap();
+        let s = ServeConfig::from_config(&c).unwrap();
+        assert_eq!(s.dispatch, DispatchPolicy::RoundRobin);
+        assert_eq!(s.forward_workers, 3);
+        assert_eq!("sq".parse::<DispatchPolicy>().unwrap(), DispatchPolicy::ShortestQueue);
+        assert_eq!("rr".parse::<DispatchPolicy>().unwrap(), DispatchPolicy::RoundRobin);
+        assert!("lifo".parse::<DispatchPolicy>().is_err());
+        assert_eq!(DispatchPolicy::ShortestQueue.label(), "shortest_queue");
+        assert_eq!(DispatchPolicy::RoundRobin.label(), "round_robin");
+        let bad = Config::parse("[serve]\ndispatch = nope\n").unwrap();
+        assert!(ServeConfig::from_config(&bad).is_err());
     }
 
     #[test]

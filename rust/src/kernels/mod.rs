@@ -1,0 +1,295 @@
+//! Fused quantized-GEMM kernels: cache-blocked matmuls that consume `QMat`
+//! packed payloads directly, so a served replica never materializes (or
+//! keeps resident) an f32 shadow copy of its quantized weights.
+//!
+//! Layout of one call (`matmul_qmat`, C = A·W with A `(m,k)` activations
+//! row-major and W a packed `(k,n)` matrix):
+//!
+//! - the output is split into contiguous **row bands** distributed over the
+//!   existing `par::Pool` (`Pool::par_bands_mut`) — each band is written by
+//!   exactly one worker, so results are bit-identical for any worker count;
+//! - inside a band, W is walked in `TILE_K × TILE_N` tiles. Each tile is
+//!   group-unpacked (`quant::dequantize_tile`) into a per-worker scratch
+//!   buffer (`TilePool`, 8 KiB — L1-resident) and then multiplied against
+//!   the band's activation rows with a stride-1 inner loop;
+//! - `k` is accumulated in ascending order for every output element, the
+//!   same order as the serial reference matmul, so the fused kernel is
+//!   **bit-identical** to `matmul(a, dequantize(w))` — quantization noise
+//!   is preserved exactly and precision-ladder experiments are unaffected;
+//! - `Payload::Raw` dispatches to `matmul_f32`, the k-tiled f32 kernel that
+//!   reads the payload in place (no tile copy needed).
+//!
+//! Steady-state calls do zero heap allocation: tile buffers live in a
+//! `TilePool` created once per executor (see `model::refexec::Scratch`).
+
+use std::sync::Mutex;
+
+use crate::par::Pool;
+use crate::quant::{dequantize_tile, Payload, QMat};
+
+/// Tile height along the reduction (`k`) dimension. A multiple of every
+/// packing-group size (1/2/4/8 rows for Q8/Q4/T2/Q3), so every tile starts
+/// and ends on a group boundary.
+pub const TILE_K: usize = 32;
+/// Tile width along the output (`n`) dimension; `TILE_K * TILE_N` f32 = 8 KiB.
+pub const TILE_N: usize = 64;
+
+/// Per-worker dequantization tile buffers, allocated once per executor and
+/// reused by every `matmul_qmat` call — the scratch arena half that keeps
+/// the fused kernels allocation-free in steady state. Each worker locks its
+/// own (uncontended) slot once per band.
+pub struct TilePool {
+    bufs: Vec<Mutex<Vec<f32>>>,
+}
+
+impl TilePool {
+    /// One `TILE_K * TILE_N` buffer per worker of `pool`.
+    pub fn new(pool: &Pool) -> Self {
+        Self {
+            bufs: (0..pool.workers())
+                .map(|_| Mutex::new(vec![0.0f32; TILE_K * TILE_N]))
+                .collect(),
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.bufs.len()
+    }
+}
+
+/// Rows per parallel band. Each band re-runs the tile unpack sweep, so
+/// band count trades load balance against redundant dequantization
+/// (overhead ratio ≈ tile-unpack cost / band rows): one band on a serial
+/// pool (zero redundancy), two bands per worker pooled — enough for the
+/// shared claim iterator to absorb skew while keeping the per-band unpack
+/// amortized over a deep row block. Any band size yields identical bits —
+/// every output element is produced whole inside one band.
+fn band_rows(m: usize, pool: &Pool) -> usize {
+    if pool.workers() <= 1 {
+        return m.max(1);
+    }
+    m.div_ceil(pool.workers() * 2).max(1)
+}
+
+/// `out = a @ b` for plain f32 operands (`a` is `(m,k)`, `b` is `(k,n)`,
+/// all row-major; `out` is overwritten). k-tiled for B-row reuse across the
+/// band and row-banded over `pool`; `k` accumulates in ascending order, so
+/// the result is bit-identical to the serial ikj reference for any worker
+/// count and tile size.
+pub fn matmul_f32(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, pool: &Pool, out: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    assert_eq!(out.len(), m * n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    let band = band_rows(m, pool);
+    pool.par_bands_mut(out, band * n, |_w, bi, chunk| {
+        let r0 = bi * band;
+        let rows = chunk.len() / n;
+        chunk.fill(0.0);
+        for k0 in (0..k).step_by(TILE_K) {
+            let kh = TILE_K.min(k - k0);
+            for ri in 0..rows {
+                let arow = &a[(r0 + ri) * k + k0..(r0 + ri) * k + k0 + kh];
+                let orow = &mut chunk[ri * n..(ri + 1) * n];
+                for (kk, &av) in arow.iter().enumerate() {
+                    let brow = &b[(k0 + kk) * n..(k0 + kk + 1) * n];
+                    for j in 0..n {
+                        orow[j] += av * brow[j];
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// `out = a @ w` where `w` is a packed `QMat` (`(k,n)` = `(w.rows, w.cols)`)
+/// — the fused serving kernel: group-wise dequantization into per-worker
+/// `TILE_K × TILE_N` scratch tiles, multiplied in place. Bit-identical to
+/// `matmul_f32(a, dequantize(w))` for every precision and worker count.
+/// `Payload::Raw` reads the payload directly through `matmul_f32`.
+pub fn matmul_qmat(a: &[f32], w: &QMat, m: usize, pool: &Pool, tiles: &TilePool, out: &mut [f32]) {
+    let (k, n) = (w.rows, w.cols);
+    debug_assert_eq!(a.len(), m * k);
+    assert_eq!(out.len(), m * n);
+    if let Payload::Raw(d) = &w.payload {
+        return matmul_f32(a, d, m, k, n, pool, out);
+    }
+    if m == 0 || n == 0 {
+        return;
+    }
+    assert!(
+        tiles.workers() >= pool.workers(),
+        "TilePool sized for {} workers, pool has {}",
+        tiles.workers(),
+        pool.workers()
+    );
+    let band = band_rows(m, pool);
+    pool.par_bands_mut(out, band * n, |wkr, bi, chunk| {
+        let mut tile = tiles.bufs[wkr].lock().unwrap();
+        let tile = tile.as_mut_slice();
+        let r0 = bi * band;
+        let rows = chunk.len() / n;
+        chunk.fill(0.0);
+        for k0 in (0..k).step_by(TILE_K) {
+            let kh = TILE_K.min(k - k0);
+            for n0 in (0..n).step_by(TILE_N) {
+                let nw = TILE_N.min(n - n0);
+                dequantize_tile(w, k0..k0 + kh, n0..n0 + nw, &mut tile[..kh * nw]);
+                for ri in 0..rows {
+                    let arow = &a[(r0 + ri) * k + k0..(r0 + ri) * k + k0 + kh];
+                    let orow = &mut chunk[ri * n + n0..ri * n + n0 + nw];
+                    for (kk, &av) in arow.iter().enumerate() {
+                        let trow = &tile[kk * nw..(kk + 1) * nw];
+                        for j in 0..nw {
+                            orow[j] += av * trow[j];
+                        }
+                    }
+                }
+            }
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proptest_lite::check;
+    use crate::quant::{dequantize, quantize, Precision};
+    use crate::rng::Xoshiro256pp;
+    use crate::tensor::Tensor;
+
+    /// The serial ikj reference the fused kernels must match bit-for-bit.
+    fn reference(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (kk, &av) in arow.iter().enumerate() {
+                let brow = &b[kk * n..(kk + 1) * n];
+                for j in 0..n {
+                    orow[j] += av * brow[j];
+                }
+            }
+        }
+        out
+    }
+
+    fn rand_vec(len: usize, seed: u64, std: f32) -> Vec<f32> {
+        let mut r = Xoshiro256pp::new(seed);
+        (0..len).map(|_| r.normal_f32(0.0, std)).collect()
+    }
+
+    fn assert_bits_eq(a: &[f32], b: &[f32], ctx: &str) {
+        assert_eq!(a.len(), b.len(), "{ctx}: length");
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: element {i}: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn f32_kernel_bit_identical_to_reference_any_worker_count() {
+        // odd shapes on purpose: partial k-tiles, ragged bands
+        for &(m, k, n) in &[(1usize, 1usize, 1usize), (3, 7, 5), (13, 33, 19), (17, 96, 67)] {
+            let a = rand_vec(m * k, 100 + m as u64, 0.7);
+            let b = rand_vec(k * n, 200 + n as u64, 0.7);
+            let expect = reference(&a, &b, m, k, n);
+            for workers in [1usize, 2, 7] {
+                let mut out = vec![f32::NAN; m * n];
+                matmul_f32(&a, &b, m, k, n, &Pool::new(workers), &mut out);
+                assert_bits_eq(&out, &expect, &format!("f32 {m}x{k}x{n} w={workers}"));
+            }
+        }
+    }
+
+    #[test]
+    fn fused_kernels_match_dequantized_reference_every_precision() {
+        // Property: for every format, odd (m,k,n) shapes, and 1/2/7 pool
+        // workers, the fused packed-payload kernel equals the dequantize-
+        // then-matmul reference within 1e-5 rel err (it is in fact
+        // bit-identical; the looser bound is the documented contract).
+        check(
+            0xE1A9,
+            24,
+            8,
+            |g| {
+                let m = 2 * g.usize_in(0, 9) + 1; // odd 1..17
+                let k = 8 * (2 * g.usize_in(0, 7) + 1); // 8 * odd: group-aligned for all formats
+                let n = 2 * g.usize_in(0, 40) + 1; // odd 1..81
+                let prec = [Precision::Q8, Precision::Q4, Precision::Q3, Precision::T2]
+                    [g.usize_in(0, 4)];
+                let seed = g.rng.next_u64();
+                (m, k, n, prec, seed)
+            },
+            |&(m, k, n, prec, seed)| {
+                let a = rand_vec(m * k, seed, 0.8);
+                let w = quantize(&Tensor::new(vec![k, n], rand_vec(k * n, seed ^ 1, 0.5)), prec);
+                let wd = dequantize(&w);
+                let expect = reference(&a, &wd.data, m, k, n);
+                for workers in [1usize, 2, 7] {
+                    let pool = Pool::new(workers);
+                    let tiles = TilePool::new(&pool);
+                    let mut out = vec![f32::NAN; m * n];
+                    matmul_qmat(&a, &w, m, &pool, &tiles, &mut out);
+                    for (i, (f, r)) in out.iter().zip(&expect).enumerate() {
+                        let tol = 1e-5 * r.abs().max(1.0);
+                        if (f - r).abs() > tol {
+                            return Err(format!(
+                                "{} {m}x{k}x{n} w={workers} elem {i}: fused {f} vs ref {r}",
+                                prec.label()
+                            ));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn fused_kernel_is_exactly_deterministic_across_worker_counts() {
+        let (m, k, n) = (13usize, 40usize, 37usize);
+        let a = rand_vec(m * k, 7, 0.8);
+        for prec in [Precision::Q8, Precision::Q4, Precision::Q3, Precision::T2] {
+            let w = quantize(&Tensor::new(vec![k, n], rand_vec(k * n, 8, 0.5)), prec);
+            let run = |workers: usize| {
+                let pool = Pool::new(workers);
+                let tiles = TilePool::new(&pool);
+                let mut out = vec![0.0f32; m * n];
+                matmul_qmat(&a, &w, m, &pool, &tiles, &mut out);
+                out
+            };
+            let serial = run(1);
+            // also bit-identical to the dequantized reference, not just bounded
+            let expect = reference(&a, &dequantize(&w).data, m, k, n);
+            assert_bits_eq(&serial, &expect, prec.label());
+            for workers in [2usize, 3, 7] {
+                assert_bits_eq(&run(workers), &serial, &format!("{} w={workers}", prec.label()));
+            }
+        }
+    }
+
+    #[test]
+    fn raw_payload_dispatches_through_f32_kernel() {
+        let (m, k, n) = (5usize, 24usize, 11usize);
+        let a = rand_vec(m * k, 21, 0.6);
+        let w = quantize(&Tensor::new(vec![k, n], rand_vec(k * n, 22, 0.6)), Precision::Raw);
+        let pool = Pool::new(3);
+        let tiles = TilePool::new(&pool);
+        let mut fused = vec![0.0f32; m * n];
+        matmul_qmat(&a, &w, m, &pool, &tiles, &mut fused);
+        let expect = reference(&a, &dequantize(&w).data, m, k, n);
+        assert_bits_eq(&fused, &expect, "raw");
+    }
+
+    #[test]
+    fn tile_pool_matches_pool_width() {
+        assert_eq!(TilePool::new(&Pool::serial()).workers(), 1);
+        assert_eq!(TilePool::new(&Pool::new(6)).workers(), 6);
+        // tile constants cover every packing group size
+        for gr in [1usize, 2, 4, 8] {
+            assert_eq!(TILE_K % gr, 0);
+        }
+    }
+}

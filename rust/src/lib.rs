@@ -16,6 +16,10 @@
 //! - `par` is the dependency-free scoped worker pool every block-level hot
 //!   path (analysis, quantization, model build, dataset sweep) fans out on;
 //!   `serving` shards request execution across model replicas on top of it.
+//! - `kernels` holds the fused quantized-GEMM kernels the native executor
+//!   serves from: cache-blocked matmuls over the packed `QMat` payloads
+//!   (group-wise dequant into per-worker tiles), so replicas keep only the
+//!   packed bytes resident — no f32 shadow copies of quantized weights.
 //!
 //! Quick tour:
 //! ```no_run
@@ -40,6 +44,7 @@ pub mod eval;
 pub mod ewq;
 pub mod exp;
 pub mod fastewq;
+pub mod kernels;
 pub mod ml;
 pub mod model;
 pub mod par;

@@ -1,34 +1,329 @@
-//! Native reference executor: the L2 transformer forward pass
-//! (`python/compile/model.py`) in pure Rust, running over a
-//! `QuantizedModel`'s dequantized effective weights.
+//! Native executor: the L2 transformer forward pass
+//! (`python/compile/model.py`) in pure Rust, serving **directly from the
+//! packed `QMat` payloads** through the fused quantized-GEMM kernels
+//! (`crate::kernels`).
 //!
 //! This is the default executor when the crate is built without the `xla`
 //! feature (and the fallback when artifacts are absent): pre-RMSNorm decoder
 //! blocks, causal multi-head attention, tanh-GELU MLP, fp32 embed/head.
-//! Quantization *noise* is preserved exactly — each block's matrices are the
-//! dequantized `QMat` payloads, the same effective weights the AOT graph
-//! reconstructs in-VMEM — so precision-ladder experiments (drift, accuracy,
-//! perplexity ordering) behave the same way as on the PJRT path.
+//! Quantization *noise* is preserved exactly — the kernels' group-wise tile
+//! dequantization produces the same effective weights `dequantize` would,
+//! accumulated in the same `k` order — so the fused path is bit-identical
+//! to the dequantize-then-matmul reference (`forward_reference`, kept for
+//! tests/benches) while keeping only packed bytes resident.
+//!
+//! `ForwardPass` owns the per-executor scratch arena (`Scratch`): activation
+//! buffers, per-worker attention score rows, and the kernel `TilePool` are
+//! allocated once from the schema, so `block_forward` does zero heap
+//! allocation in steady state (`Scratch::grow_events` is the test hook that
+//! proves it). Matmul row bands and per-request attention rows fan out on
+//! the `par::Pool` the pass was built with; results are bit-identical for
+//! any worker count.
+
+use std::sync::Mutex;
 
 use anyhow::{ensure, Result};
 
+use crate::kernels::{matmul_f32, matmul_qmat, TilePool};
 use crate::model::QuantizedModel;
+use crate::par::Pool;
+use crate::quant::{dequantize, QMat};
 use crate::tensor::Tensor;
+use crate::zoo::Schema;
 
-/// Full-sequence forward: `tokens` is a flattened (B, S) batch; returns
-/// logits (B, S, V) flattened, matching `ModelExecutor::forward`.
+/// Batch geometry threaded through the block kernels.
+#[derive(Clone, Copy)]
+struct Dims {
+    b: usize,
+    sl: usize,
+    n_heads: usize,
+}
+
+/// Per-executor scratch arena: every buffer the fused forward pass writes
+/// between the token batch and the logits, pre-sized from the schema so the
+/// steady-state hot path never touches the allocator. Per-worker buffers
+/// (kernel tiles, attention score rows) sit behind uncontended `Mutex`es —
+/// each pool worker locks only its own slot.
+pub struct Scratch {
+    rows: usize,
+    d: usize,
+    ff: usize,
+    sl: usize,
+    /// (B*S, d) activations
+    x: Vec<f32>,
+    /// (B*S, d) RMS-normed activations (attention and MLP inputs)
+    xn: Vec<f32>,
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    /// (B*S, d) attention output
+    attn: Vec<f32>,
+    /// (B*S, d) residual-branch projection (wo / w2 outputs)
+    proj: Vec<f32>,
+    /// (B*S, d_ff) MLP hidden
+    h1: Vec<f32>,
+    /// per-worker kernel dequant tiles
+    tiles: TilePool,
+    /// per-worker attention score rows (seq_len each)
+    scores: Vec<Mutex<Vec<f32>>>,
+    grow_events: u64,
+}
+
+impl Scratch {
+    pub fn new(schema: &Schema, pool: &Pool) -> Self {
+        let rows = schema.eval_batch * schema.seq_len;
+        let (d, ff, sl) = (schema.d_model, schema.d_ff, schema.seq_len);
+        Self {
+            rows,
+            d,
+            ff,
+            sl,
+            x: vec![0.0; rows * d],
+            xn: vec![0.0; rows * d],
+            q: vec![0.0; rows * d],
+            k: vec![0.0; rows * d],
+            v: vec![0.0; rows * d],
+            attn: vec![0.0; rows * d],
+            proj: vec![0.0; rows * d],
+            h1: vec![0.0; rows * ff],
+            tiles: TilePool::new(pool),
+            scores: (0..pool.workers()).map(|_| Mutex::new(vec![0.0; sl])).collect(),
+            grow_events: 0,
+        }
+    }
+
+    /// Allocation-counting test hook: how many times a forward pass found
+    /// the arena under-sized and had to regrow it. Zero after construction
+    /// and stable across steady-state calls — i.e. `block_forward` performs
+    /// no heap allocation once warm.
+    pub fn grow_events(&self) -> u64 {
+        self.grow_events
+    }
+
+    /// Regrow for a different geometry (counts as a grow event). The normal
+    /// path never hits this: a `ForwardPass` is built from the schema it
+    /// serves.
+    fn ensure(&mut self, schema: &Schema, pool: &Pool) {
+        let rows = schema.eval_batch * schema.seq_len;
+        let (d, ff, sl) = (schema.d_model, schema.d_ff, schema.seq_len);
+        if rows == self.rows && d == self.d && ff == self.ff && sl == self.sl {
+            return;
+        }
+        let events = self.grow_events + 1;
+        *self = Scratch::new(schema, pool);
+        self.grow_events = events;
+    }
+}
+
+/// A reusable fused forward pass: the pool it parallelizes on plus the
+/// scratch arena sized for one schema. Shard workers and the native
+/// `ModelExecutor` hold one for their replica's lifetime.
+pub struct ForwardPass {
+    pool: Pool,
+    scratch: Scratch,
+}
+
+impl ForwardPass {
+    pub fn new(schema: &Schema, pool: Pool) -> Self {
+        Self { scratch: Scratch::new(schema, &pool), pool }
+    }
+
+    /// See `Scratch::grow_events` — the zero-allocation test hook.
+    pub fn grow_events(&self) -> u64 {
+        self.scratch.grow_events()
+    }
+
+    /// Full-sequence forward over the packed weights: `tokens` is a
+    /// flattened (B, S) batch; returns logits (B, S, V) flattened. Only the
+    /// returned logits vector is allocated; every intermediate lives in the
+    /// scratch arena.
+    pub fn forward(&mut self, qm: &QuantizedModel, tokens: &[i32]) -> Result<Vec<f32>> {
+        let s = &qm.schema;
+        let (b, sl, d, vocab) = (s.eval_batch, s.seq_len, s.d_model, s.vocab);
+        ensure!(tokens.len() == b * sl, "token batch must be ({b},{sl})");
+        self.scratch.ensure(s, &self.pool);
+        let rows = b * sl;
+        let dims = Dims { b, sl, n_heads: s.n_heads };
+        let Scratch { x, xn, q, k, v, attn, proj, h1, tiles, scores, .. } = &mut self.scratch;
+
+        // embed + positional: x[r,t] = embed[token] + pos[t]
+        for row in 0..b {
+            for t in 0..sl {
+                let tok = tokens[row * sl + t];
+                ensure!(tok >= 0 && (tok as usize) < vocab, "token {tok} outside vocab {vocab}");
+                let e = &qm.embed.data[tok as usize * d..(tok as usize + 1) * d];
+                let p = &qm.pos.data[t * d..(t + 1) * d];
+                let o = &mut x[(row * sl + t) * d..(row * sl + t + 1) * d];
+                for j in 0..d {
+                    o[j] = e[j] + p[j];
+                }
+            }
+        }
+
+        for blk in &qm.blocks {
+            block_forward(
+                x,
+                dims,
+                &blk.g1.data,
+                &blk.g2.data,
+                &blk.qmats,
+                &self.pool,
+                BlockBufs { xn, q, k, v, attn, proj, h1, tiles, scores },
+            );
+        }
+
+        // head: rms(x, gf) @ head -> (B*S, V)
+        rms_into(x, &qm.gf.data, xn);
+        let mut logits = vec![0.0f32; rows * vocab];
+        matmul_f32(xn, &qm.head.data, rows, d, vocab, &self.pool, &mut logits);
+        Ok(logits)
+    }
+}
+
+/// Disjoint reborrows of the scratch arena handed to `block_forward` — the
+/// hot loop writes only these, never the allocator.
+struct BlockBufs<'a> {
+    xn: &'a mut [f32],
+    q: &'a mut [f32],
+    k: &'a mut [f32],
+    v: &'a mut [f32],
+    attn: &'a mut [f32],
+    proj: &'a mut [f32],
+    h1: &'a mut [f32],
+    tiles: &'a TilePool,
+    scores: &'a [Mutex<Vec<f32>>],
+}
+
+/// One pre-RMSNorm decoder block over the (B*S, d) activations, served from
+/// packed payloads via the fused kernels:
+///   h = x + Attn(rms(x, g1); Wq, Wk, Wv, Wo)
+///   y = h + W2 @ gelu(W1 @ rms(h, g2))
+fn block_forward(
+    x: &mut [f32],
+    dims: Dims,
+    g1: &[f32],
+    g2: &[f32],
+    mats: &[QMat],
+    pool: &Pool,
+    bufs: BlockBufs<'_>,
+) {
+    let BlockBufs { xn, q, k, v, attn, proj, h1, tiles, scores } = bufs;
+    let rows = dims.b * dims.sl;
+    let ff = mats[4].cols;
+
+    rms_into(x, g1, xn);
+    matmul_qmat(xn, &mats[0], rows, pool, tiles, q);
+    matmul_qmat(xn, &mats[1], rows, pool, tiles, k);
+    matmul_qmat(xn, &mats[2], rows, pool, tiles, v);
+    attention_into(q, k, v, dims, pool, scores, attn);
+    matmul_qmat(attn, &mats[3], rows, pool, tiles, proj);
+    for (xi, oi) in x.iter_mut().zip(proj.iter()) {
+        *xi += *oi;
+    }
+
+    rms_into(x, g2, xn);
+    let h1 = &mut h1[..rows * ff];
+    matmul_qmat(xn, &mats[4], rows, pool, tiles, h1);
+    for h in h1.iter_mut() {
+        *h = gelu(*h);
+    }
+    matmul_qmat(h1, &mats[5], rows, pool, tiles, proj);
+    for (xi, oi) in x.iter_mut().zip(proj.iter()) {
+        *xi += *oi;
+    }
+}
+
+/// Causal multi-head attention into `out`, parallelized across batch rows
+/// (one band per request — rows never mix across the batch dim, which is
+/// what makes per-request responses batching-invariant). Each worker uses
+/// its own score row from `scores`.
+fn attention_into(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    dims: Dims,
+    pool: &Pool,
+    scores: &[Mutex<Vec<f32>>],
+    out: &mut [f32],
+) {
+    let Dims { b, sl, n_heads } = dims;
+    let d = q.len() / (b * sl);
+    let hd = d / n_heads;
+    let scale = 1.0 / (hd as f32).sqrt();
+    assert!(scores.len() >= pool.workers());
+    pool.par_bands_mut(out, sl * d, |wkr, bi, chunk| {
+        let mut sc = scores[wkr].lock().unwrap();
+        let sc = &mut sc[..sl];
+        chunk.fill(0.0);
+        for h in 0..n_heads {
+            let off = h * hd;
+            for t in 0..sl {
+                let qrow = &q[(bi * sl + t) * d + off..(bi * sl + t) * d + off + hd];
+                let mut m = f32::NEG_INFINITY;
+                for u in 0..=t {
+                    let krow = &k[(bi * sl + u) * d + off..(bi * sl + u) * d + off + hd];
+                    let mut dot = 0.0f32;
+                    for j in 0..hd {
+                        dot += qrow[j] * krow[j];
+                    }
+                    sc[u] = dot * scale;
+                    if sc[u] > m {
+                        m = sc[u];
+                    }
+                }
+                let mut z = 0.0f32;
+                for u in 0..=t {
+                    sc[u] = (sc[u] - m).exp();
+                    z += sc[u];
+                }
+                let orow = &mut chunk[t * d + off..t * d + off + hd];
+                for u in 0..=t {
+                    let w = sc[u] / z;
+                    let vrow = &v[(bi * sl + u) * d + off..(bi * sl + u) * d + off + hd];
+                    for j in 0..hd {
+                        orow[j] += w * vrow[j];
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// Full-sequence forward, matching `ModelExecutor::forward`: a one-shot
+/// serial `ForwardPass`. Callers on a hot path should hold a `ForwardPass`
+/// instead so the scratch arena is reused across calls.
 pub fn forward(qm: &QuantizedModel, tokens: &[i32]) -> Result<Vec<f32>> {
-    let s = &qm.schema;
-    let (b, sl, d, v) = (s.eval_batch, s.seq_len, s.d_model, s.vocab);
-    ensure!(tokens.len() == b * sl, "token batch must be ({b},{sl})");
+    ForwardPass::new(&qm.schema, Pool::serial()).forward(qm, tokens)
+}
 
-    // embed + positional: x[r,t] = embed[token] + pos[t]
+// ---- dequantize-then-matmul reference path (tests/benches only) ---------------
+
+/// Dequantize every block's matrices to f32 — the shadow copies the fused
+/// path no longer keeps resident. Reference/bench use only.
+pub fn dequantize_blocks(qm: &QuantizedModel) -> Vec<Vec<Tensor>> {
+    qm.blocks.iter().map(|b| b.qmats.iter().map(dequantize).collect()).collect()
+}
+
+/// Serial dequantized-weights forward over pre-dequantized `mats` (one
+/// `Vec<Tensor>` of six per block, from `dequantize_blocks`) — the
+/// pre-kernel serving path, kept as the numerical baseline for kernel
+/// equivalence tests and the bench's before/after comparison.
+pub fn forward_dequant(
+    qm: &QuantizedModel,
+    tokens: &[i32],
+    mats: &[Vec<Tensor>],
+) -> Result<Vec<f32>> {
+    let s = &qm.schema;
+    let (b, sl, d, vocab) = (s.eval_batch, s.seq_len, s.d_model, s.vocab);
+    ensure!(tokens.len() == b * sl, "token batch must be ({b},{sl})");
+    assert_eq!(mats.len(), qm.blocks.len());
+
     let rows = b * sl;
     let mut x = vec![0.0f32; rows * d];
     for row in 0..b {
         for t in 0..sl {
             let tok = tokens[row * sl + t];
-            ensure!(tok >= 0 && (tok as usize) < v, "token {tok} outside vocab {v}");
+            ensure!(tok >= 0 && (tok as usize) < vocab, "token {tok} outside vocab {vocab}");
             let e = &qm.embed.data[tok as usize * d..(tok as usize + 1) * d];
             let p = &qm.pos.data[t * d..(t + 1) * d];
             let o = &mut x[(row * sl + t) * d..(row * sl + t + 1) * d];
@@ -38,19 +333,22 @@ pub fn forward(qm: &QuantizedModel, tokens: &[i32]) -> Result<Vec<f32>> {
         }
     }
 
-    for blk in &qm.blocks {
-        block_forward(&mut x, b, sl, s.n_heads, &blk.g1.data, &blk.g2.data, blk.effective_mats());
+    for (blk, m) in qm.blocks.iter().zip(mats) {
+        block_forward_ref(&mut x, b, sl, s.n_heads, &blk.g1.data, &blk.g2.data, m);
     }
 
-    // head: rms(x, gf) @ head -> (B*S, V)
     let xn = rms_rows(&x, &qm.gf.data);
-    Ok(matmul(&xn, &qm.head.data, rows, d, v))
+    Ok(matmul(&xn, &qm.head.data, rows, d, vocab))
 }
 
-/// One pre-RMSNorm decoder block, in place over the (B*S, d) activations:
-///   h = x + Attn(rms(x, g1); Wq, Wk, Wv, Wo)
-///   y = h + W2 @ gelu(W1 @ rms(h, g2))
-fn block_forward(
+/// Reference forward that dequantizes on the fly (tests only): the
+/// dequantize-then-matmul path the fused kernels are verified against.
+pub fn forward_reference(qm: &QuantizedModel, tokens: &[i32]) -> Result<Vec<f32>> {
+    forward_dequant(qm, tokens, &dequantize_blocks(qm))
+}
+
+/// One decoder block of the reference path over dequantized f32 weights.
+fn block_forward_ref(
     x: &mut [f32],
     b: usize,
     sl: usize,
@@ -59,8 +357,8 @@ fn block_forward(
     g2: &[f32],
     mats: &[Tensor],
 ) {
-    let d = g1.len();
     let rows = b * sl;
+    let d = g1.len();
     let ff = mats[4].dims2().1;
 
     let xn = rms_rows(x, g1);
@@ -84,11 +382,10 @@ fn block_forward(
     }
 }
 
-/// Row-wise RMSNorm with gain: x * g / sqrt(mean(x^2) + 1e-6).
-fn rms_rows(x: &[f32], g: &[f32]) -> Vec<f32> {
+/// Row-wise RMSNorm with gain into `out`: x * g / sqrt(mean(x^2) + 1e-6).
+fn rms_into(x: &[f32], g: &[f32], out: &mut [f32]) {
     let d = g.len();
     let rows = x.len() / d;
-    let mut out = vec![0.0f32; x.len()];
     for i in 0..rows {
         let r = &x[i * d..(i + 1) * d];
         let mut ss = 0.0f32;
@@ -101,10 +398,17 @@ fn rms_rows(x: &[f32], g: &[f32]) -> Vec<f32> {
             o[j] = r[j] * g[j] * inv;
         }
     }
+}
+
+/// Allocating RMSNorm (reference path).
+fn rms_rows(x: &[f32], g: &[f32]) -> Vec<f32> {
+    let mut out = vec![0.0f32; x.len()];
+    rms_into(x, g, &mut out);
     out
 }
 
-/// (m,k) @ (k,n) row-major matmul, ikj loop order for stride-1 inner loops.
+/// (m,k) @ (k,n) row-major serial matmul, ikj loop order for stride-1 inner
+/// loops (reference path; the fused kernels accumulate in the same order).
 fn matmul(a: &[f32], bmat: &[f32], m: usize, kdim: usize, n: usize) -> Vec<f32> {
     debug_assert_eq!(a.len(), m * kdim);
     debug_assert_eq!(bmat.len(), kdim * n);
@@ -122,9 +426,10 @@ fn matmul(a: &[f32], bmat: &[f32], m: usize, kdim: usize, n: usize) -> Vec<f32> 
     out
 }
 
-/// Causal multi-head attention over per-row (B,S,d) activations: softmax of
-/// q·k / sqrt(hd) over positions <= t (rows never mix across the batch dim,
-/// which is what makes per-request responses batching-invariant).
+/// Causal multi-head attention (allocating serial reference): softmax of
+/// q·k / sqrt(hd) over positions <= t. Deliberately does NOT share code
+/// with `attention_into` — this is the independent oracle the fused path's
+/// whole-model equivalence tests compare against.
 fn attention(q: &[f32], k: &[f32], v: &[f32], b: usize, sl: usize, d: usize, n_heads: usize) -> Vec<f32> {
     let hd = d / n_heads;
     let scale = 1.0 / (hd as f32).sqrt();
@@ -172,6 +477,56 @@ fn gelu(x: f32) -> f32 {
     0.5 * x * (1.0 + (SQRT_2_OVER_PI * (x + 0.044_715 * x * x * x)).tanh())
 }
 
+/// Test-only counting allocator: every heap allocation on the current
+/// thread bumps a thread-local counter, so tests can assert the fused
+/// forward's steady state really is allocation-free (a serial pool runs the
+/// whole pass on the calling thread). `try_with` keeps allocation during
+/// TLS teardown from aborting the process.
+#[cfg(test)]
+mod alloc_hook {
+    use std::alloc::{GlobalAlloc, Layout, System};
+    use std::cell::Cell;
+
+    thread_local! {
+        static ALLOCS: Cell<u64> = const { Cell::new(0) };
+    }
+
+    pub struct CountingAlloc;
+
+    fn bump() {
+        let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
+    }
+
+    unsafe impl GlobalAlloc for CountingAlloc {
+        unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+            bump();
+            System.alloc(layout)
+        }
+
+        unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+            bump();
+            System.alloc_zeroed(layout)
+        }
+
+        unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+            bump();
+            System.realloc(ptr, layout, new_size)
+        }
+
+        unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+            System.dealloc(ptr, layout)
+        }
+    }
+
+    #[global_allocator]
+    static COUNTING: CountingAlloc = CountingAlloc;
+
+    /// Allocations observed on the current thread so far.
+    pub fn thread_allocs() -> u64 {
+        ALLOCS.with(|c| c.get())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -210,6 +565,15 @@ mod tests {
         toks
     }
 
+    fn mixed_plan(n: usize) -> QuantPlan {
+        let mut plan = QuantPlan::uniform("tiny", n, Precision::Q8);
+        plan.assignments[0] = Precision::Q4;
+        if n > 1 {
+            plan.assignments[n - 1] = Precision::T2;
+        }
+        plan
+    }
+
     #[test]
     fn raw_forward_shapes_and_finiteness() {
         let model = tiny_model();
@@ -234,6 +598,123 @@ mod tests {
         let a = forward(&qm, &tokens(&model.schema)).unwrap();
         let b = forward(&qm, &tokens(&model.schema)).unwrap();
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn fused_matches_dequantized_reference_every_precision_and_worker_count() {
+        // the kernel-layer acceptance property at the whole-model level:
+        // fused-from-packed == dequantize-then-matmul, for every precision,
+        // 1/2/7 workers — bit-identical for f32, <= 1e-5 rel err for packed
+        // (in practice also bit-identical; the bound is the contract)
+        let model = tiny_model();
+        let n = model.schema.n_blocks;
+        let toks = tokens(&model.schema);
+        let mut plans = vec![mixed_plan(n)];
+        for p in [Precision::Raw, Precision::Q8, Precision::Q4, Precision::Q3, Precision::T2] {
+            plans.push(QuantPlan::uniform("tiny", n, p));
+        }
+        for plan in &plans {
+            let qm = QuantizedModel::build(&model, plan).unwrap();
+            let reference = forward_reference(&qm, &toks).unwrap();
+            let raw_plan = plan.assignments.iter().all(|&p| p == Precision::Raw);
+            for workers in [1usize, 2, 7] {
+                let mut fp = ForwardPass::new(&model.schema, Pool::new(workers));
+                let fused = fp.forward(&qm, &toks).unwrap();
+                assert_eq!(fused.len(), reference.len());
+                for (i, (f, r)) in fused.iter().zip(&reference).enumerate() {
+                    if raw_plan {
+                        assert_eq!(
+                            f.to_bits(),
+                            r.to_bits(),
+                            "raw plan must be bit-identical: elem {i}, workers={workers}"
+                        );
+                    } else {
+                        let tol = 1e-5 * r.abs().max(1.0);
+                        assert!(
+                            (f - r).abs() <= tol,
+                            "{} elem {i} workers={workers}: fused {f} vs ref {r}",
+                            plan.summary()
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fused_forward_is_bit_identical_across_worker_counts() {
+        let model = tiny_model();
+        let plan = mixed_plan(model.schema.n_blocks);
+        let qm = QuantizedModel::build(&model, &plan).unwrap();
+        let toks = tokens(&model.schema);
+        let serial = ForwardPass::new(&model.schema, Pool::serial()).forward(&qm, &toks).unwrap();
+        for workers in [2usize, 3, 7] {
+            let pooled =
+                ForwardPass::new(&model.schema, Pool::new(workers)).forward(&qm, &toks).unwrap();
+            assert_eq!(serial, pooled, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn forward_pass_is_allocation_free_in_steady_state() {
+        // the arena hook: steady-state forwards never regrow scratch, i.e.
+        // block_forward performs zero heap allocation once warm
+        let model = tiny_model();
+        let plan = mixed_plan(model.schema.n_blocks);
+        let qm = QuantizedModel::build(&model, &plan).unwrap();
+        let toks = tokens(&model.schema);
+        for workers in [1usize, 3] {
+            let mut fp = ForwardPass::new(&model.schema, Pool::new(workers));
+            assert_eq!(fp.grow_events(), 0, "pre-sized from schema");
+            let a = fp.forward(&qm, &toks).unwrap();
+            let warm = fp.grow_events();
+            let b = fp.forward(&qm, &toks).unwrap();
+            let c = fp.forward(&qm, &toks).unwrap();
+            assert_eq!(a, b);
+            assert_eq!(b, c);
+            assert_eq!(fp.grow_events(), warm, "steady state must not regrow scratch");
+            assert_eq!(warm, 0, "schema-sized arena never grows at all");
+        }
+    }
+
+    #[test]
+    fn block_forward_steady_state_does_zero_heap_allocation() {
+        // the real allocator-level check behind the grow_events hook: with a
+        // serial pool the whole pass runs on this thread, so the counting
+        // allocator sees every allocation the hot path would make. The only
+        // permitted one is the returned logits vector.
+        let model = tiny_model();
+        let plan = mixed_plan(model.schema.n_blocks);
+        let qm = QuantizedModel::build(&model, &plan).unwrap();
+        let toks = tokens(&model.schema);
+        let mut fp = ForwardPass::new(&model.schema, Pool::serial());
+        let warm = fp.forward(&qm, &toks).unwrap(); // warm the arena
+        let before = super::alloc_hook::thread_allocs();
+        let out = fp.forward(&qm, &toks).unwrap();
+        let delta = super::alloc_hook::thread_allocs() - before;
+        assert_eq!(out, warm);
+        assert!(
+            delta <= 2,
+            "steady-state forward allocated {delta} times (expected only the logits vec)"
+        );
+    }
+
+    #[test]
+    fn scratch_regrows_once_for_a_new_geometry() {
+        let model = tiny_model();
+        let plan = QuantPlan::uniform("tiny", model.schema.n_blocks, Precision::Q8);
+        let qm = QuantizedModel::build(&model, &plan).unwrap();
+        // a pass sized for a different schema must adapt (and count it)
+        let mut other = model.schema.clone();
+        other.d_model = 16;
+        other.d_ff = 32;
+        let mut fp = ForwardPass::new(&other, Pool::serial());
+        let l = fp.forward(&qm, &tokens(&model.schema)).unwrap();
+        assert_eq!(fp.grow_events(), 1);
+        assert_eq!(l, forward(&qm, &tokens(&model.schema)).unwrap());
+        // and is steady afterwards
+        let _ = fp.forward(&qm, &tokens(&model.schema)).unwrap();
+        assert_eq!(fp.grow_events(), 1);
     }
 
     #[test]
@@ -277,6 +758,7 @@ mod tests {
         let mut toks = tokens(&model.schema);
         toks[0] = model.schema.vocab as i32; // one past the end
         assert!(forward(&qm, &toks).is_err());
+        assert!(forward_reference(&qm, &toks).is_err());
         toks[0] = -1;
         assert!(forward(&qm, &toks).is_err());
     }
@@ -298,6 +780,21 @@ mod tests {
         let next = ex.next_tokens(&qm, &tokens(&model.schema), 3).unwrap();
         assert_eq!(next.len(), model.schema.eval_batch);
         assert!(next.iter().all(|&t| (0..model.schema.vocab as i32).contains(&t)));
+    }
+
+    #[test]
+    fn pooled_executor_matches_serial_executor() {
+        let model = tiny_model();
+        let rt = Runtime::cpu().unwrap();
+        let plan = mixed_plan(model.schema.n_blocks);
+        let qm = QuantizedModel::build(&model, &plan).unwrap();
+        let serial = ModelExecutor::new(&rt, &model);
+        let pooled = ModelExecutor::with_pool(&rt, &model, Pool::new(4));
+        let toks = tokens(&model.schema);
+        assert_eq!(
+            serial.forward(&qm, &toks).unwrap(),
+            pooled.forward(&qm, &toks).unwrap()
+        );
     }
 
     #[test]

@@ -118,6 +118,42 @@ impl Pool {
         self.par_map_range(items.len(), |i| f(i, &items[i]))
     }
 
+    /// Split `data` into contiguous bands of `band` elements (the last may
+    /// be shorter) and run `f(worker, band_index, band)` over them in
+    /// parallel. Bands are claimed dynamically off a shared iterator, each
+    /// band is visited exactly once, and writes are confined to the band —
+    /// so for any pure-per-band `f` the result is identical for every
+    /// worker count. The worker index (`< self.workers()`) lets callers
+    /// reuse per-worker scratch buffers without sharing; this is the
+    /// in-place primitive the fused GEMM kernels row-band on.
+    pub fn par_bands_mut<T, F>(&self, data: &mut [T], band: usize, f: F)
+    where
+        T: Send,
+        F: Fn(usize, usize, &mut [T]) + Sync,
+    {
+        let band = band.max(1);
+        if self.workers <= 1 || data.len() <= band {
+            for (i, c) in data.chunks_mut(band).enumerate() {
+                f(0, i, c);
+            }
+            return;
+        }
+        let bands = std::sync::Mutex::new(data.chunks_mut(band).enumerate());
+        std::thread::scope(|s| {
+            for w in 0..self.workers {
+                let bands = &bands;
+                let f = &f;
+                s.spawn(move || loop {
+                    // claim under the lock (dropped at end of statement),
+                    // run outside it
+                    let next = bands.lock().unwrap().next();
+                    let Some((i, c)) = next else { break };
+                    f(w, i, c);
+                });
+            }
+        });
+    }
+
     /// Deterministic chunked map-reduce over a slice: split `data` into
     /// fixed-size chunks (layout depends only on `data.len()` and `chunk`),
     /// map chunks in parallel, then fold the partials IN CHUNK ORDER on the
@@ -237,6 +273,46 @@ mod tests {
         for (i, item) in out.iter().enumerate() {
             assert_eq!(item.0, i);
         }
+    }
+
+    #[test]
+    fn bands_mut_visits_every_band_exactly_once() {
+        let mut data = vec![0u64; 1003];
+        for workers in [1usize, 2, 5, 8] {
+            data.iter_mut().for_each(|x| *x = 0);
+            Pool::new(workers).par_bands_mut(&mut data, 64, |_w, i, band| {
+                for x in band.iter_mut() {
+                    *x += (i + 1) as u64;
+                }
+            });
+            for (j, &x) in data.iter().enumerate() {
+                assert_eq!(x, (j / 64 + 1) as u64, "workers={workers} j={j}");
+            }
+        }
+    }
+
+    #[test]
+    fn bands_mut_worker_indices_in_range() {
+        let mut data = vec![0u8; 500];
+        let seen = AtomicUsize::new(0);
+        let pool = Pool::new(3);
+        pool.par_bands_mut(&mut data, 10, |w, _i, _band| {
+            assert!(w < 3);
+            seen.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(seen.load(Ordering::SeqCst), 50);
+    }
+
+    #[test]
+    fn bands_mut_handles_empty_and_oversized_band() {
+        let mut empty: [u32; 0] = [];
+        Pool::new(4).par_bands_mut(&mut empty, 8, |_, _, _| unreachable!());
+        let mut tiny = [1u32, 2, 3];
+        Pool::new(4).par_bands_mut(&mut tiny, 100, |w, i, band| {
+            assert_eq!((w, i), (0, 0));
+            band.iter_mut().for_each(|x| *x *= 2);
+        });
+        assert_eq!(tiny, [2, 4, 6]);
     }
 
     #[test]

@@ -320,6 +320,72 @@ pub fn dequantize_pooled(m: &QMat, pool: &Pool) -> Tensor {
     Tensor::new(vec![k, n], out)
 }
 
+/// Dequantize the `rows` × `cols` sub-tile of `m` into `out` (row-major,
+/// `rows.len() * cols.len()` elements), bit-identical to the same region of
+/// `dequantize(m)`. `rows` must begin and end on packing-group boundaries
+/// (the fused GEMM kernels tile `k` in multiples of 8, which covers every
+/// format); `cols` is unconstrained. This is the kernel-side unpack: tiles
+/// live in a per-worker scratch buffer, so serving never materializes a
+/// full f32 copy of a packed matrix.
+pub fn dequantize_tile(m: &QMat, rows: Range<usize>, cols: Range<usize>, out: &mut [f32]) {
+    let n = m.cols;
+    let (th, tw) = (rows.len(), cols.len());
+    assert!(rows.end <= m.rows && cols.end <= n, "tile out of bounds");
+    assert_eq!(out.len(), th * tw, "tile buffer size mismatch");
+    let gr = m.prec.group_rows();
+    assert_eq!(rows.start % gr, 0, "tile start must be group-aligned");
+    assert_eq!(th % gr, 0, "tile height must be whole packing groups");
+    match &m.payload {
+        Payload::Raw(d) => {
+            for (ri, i) in rows.enumerate() {
+                out[ri * tw..(ri + 1) * tw]
+                    .copy_from_slice(&d[i * n + cols.start..i * n + cols.end]);
+            }
+        }
+        Payload::Q8 { q, s } => {
+            for (ri, i) in rows.enumerate() {
+                let orow = &mut out[ri * tw..(ri + 1) * tw];
+                for (ci, j) in cols.clone().enumerate() {
+                    orow[ci] = q[i * n + j] as f32 * s[j];
+                }
+            }
+        }
+        Payload::Q4 { p, s } => {
+            for (gi, g) in (rows.start / 2..rows.end / 2).enumerate() {
+                for (ci, j) in cols.clone().enumerate() {
+                    let b = p[g * n + j];
+                    out[(2 * gi) * tw + ci] = ((b & 0xF) as i32 - 8) as f32 * s[j];
+                    out[(2 * gi + 1) * tw + ci] = (((b >> 4) & 0xF) as i32 - 8) as f32 * s[j];
+                }
+            }
+        }
+        Payload::Q3 { p, s } => {
+            for (gi, g) in (rows.start / 8..rows.end / 8).enumerate() {
+                for (ci, j) in cols.clone().enumerate() {
+                    let bits = p[(3 * g) * n + j] as u32
+                        | ((p[(3 * g + 1) * n + j] as u32) << 8)
+                        | ((p[(3 * g + 2) * n + j] as u32) << 16);
+                    for r in 0..8 {
+                        let qv = ((bits >> (3 * r)) & 0x7) as i32 - 4;
+                        out[(8 * gi + r) * tw + ci] = qv as f32 * s[j];
+                    }
+                }
+            }
+        }
+        Payload::T2 { p, s } => {
+            for (gi, g) in (rows.start / 4..rows.end / 4).enumerate() {
+                for (ci, j) in cols.clone().enumerate() {
+                    let b = p[g * n + j];
+                    for r in 0..4 {
+                        let qv = ((b >> (2 * r)) & 0x3) as i32 - 1;
+                        out[(4 * gi + r) * tw + ci] = qv as f32 * s[j];
+                    }
+                }
+            }
+        }
+    }
+}
+
 impl QMat {
     /// Stored size in bytes (payload + scales).
     pub fn size_bytes(&self) -> usize {
@@ -447,6 +513,46 @@ mod tests {
                 assert_eq!(serial, pooled, "{} workers={workers}", prec.label());
             }
         }
+    }
+
+    #[test]
+    fn dequantize_tile_matches_full_dequantize() {
+        // every format, group-aligned row tiles x arbitrary column tiles,
+        // bit-identical to the corresponding region of the full dequantize
+        let (k, n) = (40usize, 23usize); // k % 8 == 0, odd-ish n
+        let w = rand_tensor(k, n, 11, 0.6);
+        for prec in [Precision::Raw, Precision::Q8, Precision::Q4, Precision::Q3, Precision::T2]
+        {
+            let q = quantize(&w, prec);
+            let full = dequantize(&q);
+            for rows in [0..8usize, 8..24, 16..40, 0..40] {
+                for cols in [0..1usize, 3..10, 5..23, 0..23] {
+                    let (th, tw) = (rows.len(), cols.len());
+                    let mut tile = vec![f32::NAN; th * tw];
+                    dequantize_tile(&q, rows.clone(), cols.clone(), &mut tile);
+                    for ri in 0..th {
+                        for ci in 0..tw {
+                            let expect = full.at2(rows.start + ri, cols.start + ci);
+                            assert_eq!(
+                                tile[ri * tw + ci].to_bits(),
+                                expect.to_bits(),
+                                "{} rows={rows:?} cols={cols:?} ({ri},{ci})",
+                                prec.label()
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "group-aligned")]
+    fn dequantize_tile_rejects_unaligned_start() {
+        let w = rand_tensor(16, 8, 12, 0.5);
+        let q = quantize(&w, Precision::Q3);
+        let mut out = vec![0.0f32; 8 * 8];
+        dequantize_tile(&q, 4..12, 0..8, &mut out);
     }
 
     #[test]

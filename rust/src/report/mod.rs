@@ -147,6 +147,44 @@ pub fn pct(x: f64) -> String {
     format!("{:+.2}%", 100.0 * x)
 }
 
+/// Human-readable byte count (B / KiB / MiB / GiB).
+pub fn bytes_human(b: usize) -> String {
+    const K: f64 = 1024.0;
+    let x = b as f64;
+    if x < K {
+        format!("{b} B")
+    } else if x < K * K {
+        format!("{:.1} KiB", x / K)
+    } else if x < K * K * K {
+        format!("{:.1} MiB", x / (K * K))
+    } else {
+        format!("{:.1} GiB", x / (K * K * K))
+    }
+}
+
+/// Resident-weight accounting table: one row per `(label, resident_bytes,
+/// f32_baseline_bytes)` triple — what a replica actually pins when serving
+/// from packed payloads vs the same weights held fully in f32
+/// (`QuantizedModel::f32_equivalent_bytes`). The memory-reduction claim,
+/// rendered.
+pub fn resident_table(rows: &[(String, usize, usize)]) -> Table {
+    let mut t = Table::new(
+        "resident weight bytes (packed vs fully-f32 baseline)",
+        &["plan", "resident", "f32-baseline", "ratio", "reduction"],
+    );
+    for (label, resident, baseline) in rows {
+        let ratio = *resident as f64 / (*baseline).max(1) as f64;
+        t.row(vec![
+            label.clone(),
+            bytes_human(*resident),
+            bytes_human(*baseline),
+            format!("{ratio:.3}"),
+            pct(ratio - 1.0),
+        ]);
+    }
+    t
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -197,5 +235,29 @@ mod tests {
     fn pct_formats() {
         assert_eq!(pct(-0.1898), "-18.98%");
         assert_eq!(pct(0.0032), "+0.32%");
+    }
+
+    #[test]
+    fn bytes_human_units() {
+        assert_eq!(bytes_human(0), "0 B");
+        assert_eq!(bytes_human(512), "512 B");
+        assert_eq!(bytes_human(2048), "2.0 KiB");
+        assert_eq!(bytes_human(5 * 1024 * 1024 + 512 * 1024), "5.5 MiB");
+        assert_eq!(bytes_human(3 * 1024 * 1024 * 1024), "3.0 GiB");
+    }
+
+    #[test]
+    fn resident_table_rows_and_ratio() {
+        let t = resident_table(&[
+            ("mixed".into(), 250, 1000),
+            ("raw".into(), 1000, 1000),
+        ]);
+        let s = t.render();
+        assert!(s.contains("mixed"));
+        assert!(s.contains("0.250"));
+        assert!(s.contains("-75.00%"));
+        assert!(s.contains("1.000"));
+        let csv = t.to_csv();
+        assert!(csv.starts_with("plan,resident,f32-baseline,ratio,reduction"));
     }
 }

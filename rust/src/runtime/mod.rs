@@ -7,10 +7,11 @@
 //! never loaded at serve time.
 //!
 //! With default features (offline builds) `Runtime` is an inert handle and
-//! every forward pass dispatches through the native reference executor in
-//! `model::refexec` instead — same `Runtime::cpu()` surface, so callers
-//! (`exp`, `serving`, benches, examples) compile identically either way.
-//! See DESIGN.md §"xla feature matrix".
+//! every forward pass dispatches through the native fused-kernel executor
+//! (`model::refexec::ForwardPass`, serving straight from packed `QMat`
+//! payloads via `crate::kernels`) — same `Runtime::cpu()` surface, so
+//! callers (`exp`, `serving`, benches, examples) compile identically either
+//! way. See DESIGN.md §"xla feature matrix" and §"kernel layer".
 
 #[cfg(feature = "xla")]
 mod pjrt {
@@ -194,7 +195,8 @@ mod native {
     use anyhow::Result;
 
     /// Inert runtime handle for offline builds: forward passes run through
-    /// `model::refexec` and never touch this struct beyond its existence.
+    /// the fused-kernel executor (`model::refexec::ForwardPass`) and never
+    /// touch this struct beyond its existence.
     pub struct Runtime {
         _private: (),
     }
