@@ -136,7 +136,7 @@ fn main() {
     });
 
     let pool = Pool::from_config(&ParallelConfig::auto());
-    let mut fpn = ForwardPass::new(&model.schema, pool);
+    let mut fpn = ForwardPass::new(&model.schema, pool.clone());
     let s_fusedn = b.run(
         &format!("forward syn mixed q4/q8 [fused pooled x{}]", pool.workers()),
         || {
@@ -183,7 +183,7 @@ fn main() {
         return;
     };
     let rt = Runtime::cpu().expect("runtime");
-    let ex = ModelExecutor::with_pool(&rt, &flagship, pool);
+    let ex = ModelExecutor::with_pool(&rt, &flagship, pool.clone());
     ex.warmup().expect("warmup");
 
     let (bsz, s) = (flagship.schema.eval_batch, flagship.schema.seq_len);

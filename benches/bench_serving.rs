@@ -1,11 +1,18 @@
 //! Bench: end-to-end serving throughput/latency under the sharded dynamic
 //! batcher — worker-count (shard) sweep with the serial coordinator as the
-//! baseline, plus the batch-size and precision sweeps (the coordinator-level
-//! counterpart of the paper's deployment claims).
+//! baseline, the batch-size and precision sweeps (the coordinator-level
+//! counterpart of the paper's deployment claims), and the dispatch-policy
+//! sweep on a skewed-cost workload (round-robin vs shortest-queue vs the
+//! event-driven work-steal loop).
 //!
 //! Runs offline on a synthetic model through the native reference executor;
 //! when artifacts exist (`make artifacts`) the trained tl-phi flagship is
 //! used instead (and, under `--features xla`, the PJRT executor).
+//!
+//! Emits machine-readable `BENCH_serving.json` (override the path with
+//! `EWQ_BENCH_OUT`; `EWQ_BENCH_QUICK=1` shortens the trace for the CI smoke
+//! lane — see `make bench-smoke`), so CI can archive the policy sweep next
+//! to `BENCH_kernels.json`.
 
 use ewq::config::{DispatchPolicy, ServeConfig};
 use ewq::ewq::QuantPlan;
@@ -43,7 +50,7 @@ fn run_trace(
 }
 
 /// Skewed-cost trace (alternating full-forward and all-reject windows):
-/// the workload the shortest-queue dispatcher exists for.
+/// the workload the balancing dispatch policies exist for.
 fn run_skewed(model: &ModelDir, dispatch: DispatchPolicy, requests: usize) -> ServingMetrics {
     let plan = QuantPlan::uniform(&model.schema.name, model.schema.n_blocks, Precision::Q8);
     let cfg = ServeConfig {
@@ -100,11 +107,54 @@ fn bench_model() -> ModelDir {
     }
 }
 
+/// One dispatch policy's numbers in the emitted JSON.
+fn policy_json(m: &ServingMetrics) -> String {
+    let batches: Vec<usize> = m.shards.iter().map(|s| s.batches).collect();
+    let (bmin, bmax) = (
+        batches.iter().copied().min().unwrap_or(0),
+        batches.iter().copied().max().unwrap_or(0),
+    );
+    format!(
+        "{{ \"throughput_rps\": {:.3}, \"p50_us\": {}, \"p95_us\": {}, \
+         \"min_shard_batches\": {bmin}, \"max_shard_batches\": {bmax}, \
+         \"steals\": {}, \"wakes\": {} }}",
+        m.throughput_rps(),
+        m.percentile_us(0.50),
+        m.percentile_us(0.95),
+        m.steals,
+        m.wakes,
+    )
+}
+
+fn write_json(
+    path: &str,
+    model: &str,
+    requests: usize,
+    sweep: &[(DispatchPolicy, ServingMetrics)],
+) {
+    let mut body = String::new();
+    for (i, (policy, m)) in sweep.iter().enumerate() {
+        if i > 0 {
+            body.push_str(",\n");
+        }
+        body.push_str(&format!("    \"{}\": {}", policy.label(), policy_json(m)));
+    }
+    let json = format!(
+        "{{\n  \"model\": \"{model}\",\n  \"workload\": \"skewed-cost\",\n  \
+         \"requests\": {requests},\n  \"workers\": 2,\n  \"policies\": {{\n{body}\n  }}\n}}\n"
+    );
+    match std::fs::write(path, &json) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}
+
 fn main() {
     println!("== bench_serving: sharded coordinator throughput/latency ==");
+    let quick = std::env::var("EWQ_BENCH_QUICK").is_ok();
     let model = bench_model();
     let n = model.schema.n_blocks;
-    let requests = 64;
+    let requests = if quick { 24 } else { 64 };
 
     println!("shard-worker sweep (uniform 8-bit, max_batch=8):");
     let baseline = run_trace(&model, QuantPlan::uniform("m", n, Precision::Q8), 8, 1, requests);
@@ -118,28 +168,53 @@ fn main() {
         );
     }
 
-    println!("batch-size sweep (uniform 8-bit, 1 worker):");
-    for mb in [1, 2, 4, 8] {
-        run_trace(&model, QuantPlan::uniform("m", n, Precision::Q8), mb, 1, requests);
-    }
+    if !quick {
+        println!("batch-size sweep (uniform 8-bit, 1 worker):");
+        for mb in [1, 2, 4, 8] {
+            run_trace(&model, QuantPlan::uniform("m", n, Precision::Q8), mb, 1, requests);
+        }
 
-    println!("precision sweep (max_batch=8, 1 worker):");
-    for p in [Precision::Raw, Precision::Q8, Precision::Q4] {
-        println!(" {}:", p.label());
-        run_trace(&model, QuantPlan::uniform("m", n, p), 8, 1, requests);
+        println!("precision sweep (max_batch=8, 1 worker):");
+        for p in [Precision::Raw, Precision::Q8, Precision::Q4] {
+            println!(" {}:", p.label());
+            run_trace(&model, QuantPlan::uniform("m", n, p), 8, 1, requests);
+        }
     }
 
     println!("dispatch-policy sweep (skewed batch costs, 2 workers, max_batch=1):");
-    let rr = run_skewed(&model, DispatchPolicy::RoundRobin, requests);
-    let sq = run_skewed(&model, DispatchPolicy::ShortestQueue, requests);
+    let sweep: Vec<(DispatchPolicy, ServingMetrics)> = [
+        DispatchPolicy::RoundRobin,
+        DispatchPolicy::ShortestQueue,
+        DispatchPolicy::WorkSteal,
+    ]
+    .into_iter()
+    .map(|p| {
+        let m = run_skewed(&model, p, requests);
+        (p, m)
+    })
+    .collect();
     let min_max = |m: &ServingMetrics| {
         let b: Vec<usize> = m.shards.iter().map(|s| s.batches).collect();
         (b.iter().copied().min().unwrap_or(0), b.iter().copied().max().unwrap_or(0))
     };
-    let (rr_min, rr_max) = min_max(&rr);
-    let (sq_min, sq_max) = min_max(&sq);
+    for (policy, m) in &sweep {
+        let (lo, hi) = min_max(m);
+        println!(
+            "    => {:<15} executed-batch spread {lo}..{hi}, {:.1} req/s, steals {}",
+            policy.label(),
+            m.throughput_rps(),
+            m.steals
+        );
+    }
+    let sq = sweep.iter().find(|(p, _)| *p == DispatchPolicy::ShortestQueue).unwrap();
+    let ws = sweep.iter().find(|(p, _)| *p == DispatchPolicy::WorkSteal).unwrap();
     println!(
-        "    => executed-batch spread: round_robin {rr_min}..{rr_max}, \
-         shortest_queue {sq_min}..{sq_max}"
+        "    => work_steal vs shortest_queue: {:.2}x throughput ({:.1} vs {:.1} req/s)",
+        ws.1.throughput_rps() / sq.1.throughput_rps().max(1e-9),
+        ws.1.throughput_rps(),
+        sq.1.throughput_rps()
     );
+
+    let out = std::env::var("EWQ_BENCH_OUT").unwrap_or_else(|_| "BENCH_serving.json".into());
+    write_json(&out, &model.schema.name, requests, &sweep);
 }

@@ -1,0 +1,168 @@
+//! `bench_compare` — CI regression gate over the bench-smoke artifacts.
+//!
+//! Compares the fused-GEMM GFLOP/s figures in a freshly generated
+//! `BENCH_kernels.json` against a committed `BENCH_baseline.json` and fails
+//! (exit 1) when any tracked metric regresses by more than the tolerance.
+//!
+//! ```text
+//! bench_compare <current.json> <baseline.json>
+//!   EWQ_BENCH_TOLERANCE     allowed fractional drop (default 0.20 = 20%)
+//!   EWQ_BENCH_COMPARE_MODE  "enforce" (default) exits 1 on regression;
+//!                           "warn" reports but always exits 0 — the
+//!                           first-run stance until a baseline measured on
+//!                           the CI hardware itself is committed
+//! ```
+//!
+//! A missing baseline is not an error (first run: nothing to compare
+//! against yet); a missing current file is — bench-smoke should have
+//! produced it. The parser is a deliberate 20-line scanner: both files are
+//! emitted by our own benches as flat `"key": number` JSON, and the crate
+//! builds fully offline, so no JSON dependency is warranted.
+
+/// Tracked metrics: higher is better for all of them.
+const KEYS: [&str; 2] = ["gflops_fused_serial", "gflops_fused_pooled"];
+
+/// Extract the number following `"key":` in a flat JSON document.
+fn extract_number(json: &str, key: &str) -> Option<f64> {
+    let needle = format!("\"{key}\"");
+    let at = json.find(&needle)?;
+    let rest = json[at + needle.len()..].trim_start().strip_prefix(':')?.trim_start();
+    let end = rest
+        .find(|c: char| !(c.is_ascii_digit() || "+-.eE".contains(c)))
+        .unwrap_or(rest.len());
+    rest[..end].parse().ok()
+}
+
+/// A higher-is-better metric regressed if it dropped by more than `tol`
+/// (fractional) below the baseline.
+fn regressed(current: f64, baseline: f64, tol: f64) -> bool {
+    baseline > 0.0 && current < baseline * (1.0 - tol)
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let (current_path, baseline_path) = match args.as_slice() {
+        [c, b] => (c.clone(), b.clone()),
+        _ => {
+            eprintln!("usage: bench_compare <current.json> <baseline.json>");
+            std::process::exit(2);
+        }
+    };
+    let tol: f64 = std::env::var("EWQ_BENCH_TOLERANCE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0.20);
+    let enforce = !matches!(
+        std::env::var("EWQ_BENCH_COMPARE_MODE").as_deref(),
+        Ok("warn")
+    );
+
+    let current = match std::fs::read_to_string(&current_path) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("bench_compare: cannot read current results {current_path}: {e}");
+            std::process::exit(1);
+        }
+    };
+    let baseline = match std::fs::read_to_string(&baseline_path) {
+        Ok(b) => b,
+        Err(_) => {
+            println!(
+                "bench_compare: no baseline at {baseline_path} — first run, nothing to \
+                 compare (commit one to arm the gate)"
+            );
+            return;
+        }
+    };
+
+    let mut regressions = 0usize;
+    for key in KEYS {
+        let cur = match extract_number(&current, key) {
+            Some(c) => c,
+            None => {
+                // a tracked metric vanishing from the bench output is itself
+                // a gate failure — otherwise schema drift disarms the gate
+                // silently and forever
+                eprintln!("bench_compare: {key}: MISSING from current results {current_path}");
+                regressions += 1;
+                continue;
+            }
+        };
+        let Some(base) = extract_number(&baseline, key) else {
+            // baseline may predate a newly tracked key: report, don't fail
+            println!("bench_compare: {key}: not in baseline yet, skipped");
+            continue;
+        };
+        let ratio = if base > 0.0 { cur / base } else { f64::INFINITY };
+        let verdict = if regressed(cur, base, tol) {
+            regressions += 1;
+            "REGRESSED"
+        } else if ratio >= 1.0 + tol {
+            "improved (consider refreshing the baseline)"
+        } else {
+            "ok"
+        };
+        println!(
+            "bench_compare: {key}: current {cur:.3} vs baseline {base:.3} ({ratio:.2}x) — {verdict}"
+        );
+    }
+
+    if regressions > 0 {
+        let pct = tol * 100.0;
+        if enforce {
+            eprintln!(
+                "bench_compare: {regressions} metric(s) regressed more than {pct:.0}% or went \
+                 missing — failing (set EWQ_BENCH_COMPARE_MODE=warn to downgrade)"
+            );
+            std::process::exit(1);
+        }
+        println!(
+            "bench_compare: {regressions} metric(s) regressed more than {pct:.0}% or went \
+             missing — warn-only mode, not failing"
+        );
+    } else {
+        println!("bench_compare: within {:.0}% of baseline", tol * 100.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+  "model": "syn-kernels",
+  "workers": 4,
+  "fused_serial_ms": 12.3456,
+  "gflops_fused_serial": 1.234,
+  "gflops_fused_pooled": 4.5,
+  "resident_ratio_vs_f32": 0.2656
+}"#;
+
+    #[test]
+    fn extracts_numbers_from_flat_json() {
+        assert_eq!(extract_number(SAMPLE, "gflops_fused_serial"), Some(1.234));
+        assert_eq!(extract_number(SAMPLE, "gflops_fused_pooled"), Some(4.5));
+        assert_eq!(extract_number(SAMPLE, "workers"), Some(4.0));
+        assert_eq!(extract_number(SAMPLE, "resident_ratio_vs_f32"), Some(0.2656));
+        assert_eq!(extract_number(SAMPLE, "missing_key"), None);
+        assert_eq!(extract_number("", "x"), None);
+        // a string value is not a number
+        assert_eq!(extract_number(SAMPLE, "model"), None);
+    }
+
+    #[test]
+    fn scientific_notation_and_negatives_parse() {
+        let doc = r#"{ "a": -3.5, "b": 1.2e-3 }"#;
+        assert_eq!(extract_number(doc, "a"), Some(-3.5));
+        assert_eq!(extract_number(doc, "b"), Some(1.2e-3));
+    }
+
+    #[test]
+    fn regression_threshold_is_fractional_drop() {
+        assert!(!regressed(1.0, 1.0, 0.20), "equal is fine");
+        assert!(!regressed(0.81, 1.0, 0.20), "within tolerance");
+        assert!(regressed(0.79, 1.0, 0.20), "past tolerance");
+        assert!(!regressed(2.0, 1.0, 0.20), "improvement is fine");
+        assert!(!regressed(0.0, 0.0, 0.20), "degenerate baseline never fails");
+    }
+}

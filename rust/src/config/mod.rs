@@ -87,6 +87,18 @@ impl ParallelConfig {
     pub fn from_config(c: &Config) -> Result<Self> {
         Ok(Self::with_workers(c.get_or("parallel", "workers", Self::auto().workers)?))
     }
+
+    /// Worker count exercised by the cross-worker determinism tests:
+    /// `EWQ_TEST_WORKERS` when set (CI runs a {1, 2, 7} matrix of the whole
+    /// suite under it), else `fallback`. Bit-identity claims are thereby
+    /// re-proven at several pool sizes on every PR, not just locally.
+    pub fn test_workers(fallback: usize) -> usize {
+        std::env::var("EWQ_TEST_WORKERS")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .map(|w| w.max(1))
+            .unwrap_or(fallback)
+    }
 }
 
 impl Default for ParallelConfig {
@@ -103,8 +115,13 @@ pub enum DispatchPolicy {
     /// Send each window to the shard with the fewest queued + in-flight
     /// batches — balances skewed batch costs (mixed-precision plans, cheap
     /// all-reject windows) instead of blindly alternating.
-    #[default]
     ShortestQueue,
+    /// Blind-rotation placement, but an idle shard steals the deepest peer
+    /// queue's oldest window — balance is recovered by the consumers
+    /// instead of predicted by the producer (the event-driven default;
+    /// see DESIGN.md §9).
+    #[default]
+    WorkSteal,
 }
 
 impl DispatchPolicy {
@@ -112,7 +129,14 @@ impl DispatchPolicy {
         match self {
             DispatchPolicy::RoundRobin => "round_robin",
             DispatchPolicy::ShortestQueue => "shortest_queue",
+            DispatchPolicy::WorkSteal => "work_steal",
         }
+    }
+
+    /// Whether idle shard workers may steal queued windows from live peers
+    /// (every policy rescues windows from dead shards regardless).
+    pub fn steals(self) -> bool {
+        matches!(self, DispatchPolicy::WorkSteal)
     }
 }
 
@@ -123,7 +147,10 @@ impl std::str::FromStr for DispatchPolicy {
         match s {
             "round_robin" | "rr" => Ok(DispatchPolicy::RoundRobin),
             "shortest_queue" | "sq" => Ok(DispatchPolicy::ShortestQueue),
-            other => bail!("unknown dispatch policy {other:?} (round_robin|shortest_queue)"),
+            "work_steal" | "ws" => Ok(DispatchPolicy::WorkSteal),
+            other => {
+                bail!("unknown dispatch policy {other:?} (round_robin|shortest_queue|work_steal)")
+            }
         }
     }
 }
@@ -259,7 +286,7 @@ mod tests {
         assert_eq!(s.requests, 16);
         assert_eq!(s.workers, 4);
         assert_eq!(s.max_batch, ServeConfig::default().max_batch);
-        assert_eq!(s.dispatch, DispatchPolicy::ShortestQueue, "default policy");
+        assert_eq!(s.dispatch, DispatchPolicy::WorkSteal, "default policy");
         assert_eq!(s.forward_workers, 1);
     }
 
@@ -271,11 +298,33 @@ mod tests {
         assert_eq!(s.forward_workers, 3);
         assert_eq!("sq".parse::<DispatchPolicy>().unwrap(), DispatchPolicy::ShortestQueue);
         assert_eq!("rr".parse::<DispatchPolicy>().unwrap(), DispatchPolicy::RoundRobin);
+        assert_eq!("ws".parse::<DispatchPolicy>().unwrap(), DispatchPolicy::WorkSteal);
+        assert_eq!("work_steal".parse::<DispatchPolicy>().unwrap(), DispatchPolicy::WorkSteal);
         assert!("lifo".parse::<DispatchPolicy>().is_err());
         assert_eq!(DispatchPolicy::ShortestQueue.label(), "shortest_queue");
         assert_eq!(DispatchPolicy::RoundRobin.label(), "round_robin");
+        assert_eq!(DispatchPolicy::WorkSteal.label(), "work_steal");
+        assert!(DispatchPolicy::WorkSteal.steals());
+        assert!(!DispatchPolicy::ShortestQueue.steals());
+        assert!(!DispatchPolicy::RoundRobin.steals());
         let bad = Config::parse("[serve]\ndispatch = nope\n").unwrap();
         assert!(ServeConfig::from_config(&bad).is_err());
+    }
+
+    #[test]
+    fn test_workers_env_or_fallback() {
+        // the CI determinism matrix sets EWQ_TEST_WORKERS for the whole
+        // suite, so this test must accept either world
+        match std::env::var("EWQ_TEST_WORKERS") {
+            Ok(v) => {
+                let expect = v.parse::<usize>().map(|w| w.max(1)).unwrap_or(3);
+                assert_eq!(ParallelConfig::test_workers(3), expect);
+            }
+            Err(_) => {
+                assert_eq!(ParallelConfig::test_workers(3), 3);
+                assert_eq!(ParallelConfig::test_workers(0), 0, "fallback passes through");
+            }
+        }
     }
 
     #[test]

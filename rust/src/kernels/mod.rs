@@ -19,8 +19,11 @@
 //! - `Payload::Raw` dispatches to `matmul_f32`, the k-tiled f32 kernel that
 //!   reads the payload in place (no tile copy needed).
 //!
-//! Steady-state calls do zero heap allocation: tile buffers live in a
-//! `TilePool` created once per executor (see `model::refexec::Scratch`).
+//! Steady-state calls do zero heap allocation — tile buffers live in a
+//! `TilePool` created once per executor (see `model::refexec::Scratch`) —
+//! and zero thread spawns: `par::Pool` keeps its workers parked between
+//! kernel invocations, so each call costs one publish + wake, not a
+//! spawn/join barrier (see DESIGN.md §9).
 
 use std::sync::Mutex;
 
@@ -264,10 +267,27 @@ mod tests {
             // also bit-identical to the dequantized reference, not just bounded
             let expect = reference(&a, &dequantize(&w).data, m, k, n);
             assert_bits_eq(&serial, &expect, prec.label());
-            for workers in [2usize, 3, 7] {
+            for workers in [2usize, 3, 7, crate::config::ParallelConfig::test_workers(5)] {
                 assert_bits_eq(&run(workers), &serial, &format!("{} w={workers}", prec.label()));
             }
         }
+    }
+
+    #[test]
+    fn repeated_kernel_calls_reuse_parked_workers() {
+        // the serving hot path: many matmul scopes against one pool must
+        // spawn helpers exactly once (the persistent-pool invariant at the
+        // kernel seam)
+        let (m, k, n) = (9usize, 32usize, 21usize);
+        let a = rand_vec(m * k, 31, 0.8);
+        let w = quantize(&Tensor::new(vec![k, n], rand_vec(k * n, 32, 0.5)), Precision::Q4);
+        let pool = Pool::new(3);
+        let tiles = TilePool::new(&pool);
+        let mut out = vec![0.0f32; m * n];
+        for _ in 0..10 {
+            matmul_qmat(&a, &w, m, &pool, &tiles, &mut out);
+        }
+        assert_eq!(pool.spawn_events(), 2, "workers - 1 spawns across 10 kernel calls");
     }
 
     #[test]

@@ -13,9 +13,11 @@
 //!   feature) to execute the AOT artifacts on the request path — python is
 //!   never loaded at serve time. Default builds execute through the native
 //!   reference executor (`model::refexec`) instead, fully offline.
-//! - `par` is the dependency-free scoped worker pool every block-level hot
-//!   path (analysis, quantization, model build, dataset sweep) fans out on;
-//!   `serving` shards request execution across model replicas on top of it.
+//! - `par` is the dependency-free persistent worker pool every block-level
+//!   hot path (analysis, quantization, model build, dataset sweep, fused
+//!   kernels) fans out on — workers spawn once and park between scopes;
+//!   `serving` shards request execution across model replicas on top of it
+//!   with an event-driven work-stealing dispatch loop (DESIGN.md §9).
 //! - `kernels` holds the fused quantized-GEMM kernels the native executor
 //!   serves from: cache-blocked matmuls over the packed `QMat` payloads
 //!   (group-wise dequant into per-worker tiles), so replicas keep only the

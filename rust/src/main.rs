@@ -6,7 +6,8 @@
 //! ewq plan --model <name> [--budget-mb M --machines K]  Algorithm 1
 //! ewq dataset [--rows N --workers N]     (re)build the FastEWQ dataset
 //! ewq train-classifier [--out PATH --workers N]  train + save the forest
-//! ewq serve --model <name> [--requests N --batch B --variant V --workers W]
+//! ewq serve --model <name> [--requests N --batch B --variant V --workers W
+//!                            --dispatch work_steal|shortest_queue|round_robin]
 //! ```
 
 use anyhow::{bail, Context, Result};
@@ -183,6 +184,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let requests = args.opt("requests", 64usize)?;
     let batch = args.opt("batch", 8usize)?;
     let workers = args.opt("workers", 1usize)?;
+    let dispatch: ewq::config::DispatchPolicy = args.opt("dispatch", Default::default())?;
     let n = model.schema.n_blocks;
     let plan = match variant.as_str() {
         "raw" => ewq::ewq::QuantPlan::uniform(&model.schema.name, n, ewq::quant::Precision::Raw),
@@ -195,13 +197,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
         other => bail!("unknown variant {other} (raw|8bit|4bit|mixed)"),
     };
     println!(
-        "serving {} [{}] with {workers} shard worker(s) — {}",
+        "serving {} [{}] with {workers} shard worker(s), {} dispatch — {}",
         model.schema.name,
         variant,
+        dispatch.label(),
         plan.summary()
     );
 
-    let cfg = ServeConfig { max_batch: batch, workers, ..Default::default() };
+    let cfg = ServeConfig { max_batch: batch, workers, dispatch, ..Default::default() };
     let coord = Coordinator::start_with_model(model, plan, cfg, 1, 200)?;
     let mut rxs = Vec::new();
     for i in 0..requests {

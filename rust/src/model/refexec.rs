@@ -17,8 +17,10 @@
 //! allocated once from the schema, so `block_forward` does zero heap
 //! allocation in steady state (`Scratch::grow_events` is the test hook that
 //! proves it). Matmul row bands and per-request attention rows fan out on
-//! the `par::Pool` the pass was built with; results are bit-identical for
-//! any worker count.
+//! the `par::Pool` the pass was built with — whose helper threads are
+//! spawned once and parked between kernel scopes, so a steady-state pooled
+//! forward also performs zero thread spawns (`Pool::spawn_events` is the
+//! matching hook); results are bit-identical for any worker count.
 
 use std::sync::Mutex;
 
@@ -648,11 +650,37 @@ mod tests {
         let qm = QuantizedModel::build(&model, &plan).unwrap();
         let toks = tokens(&model.schema);
         let serial = ForwardPass::new(&model.schema, Pool::serial()).forward(&qm, &toks).unwrap();
-        for workers in [2usize, 3, 7] {
+        for workers in [2usize, 3, 7, crate::config::ParallelConfig::test_workers(4)] {
             let pooled =
                 ForwardPass::new(&model.schema, Pool::new(workers)).forward(&qm, &toks).unwrap();
             assert_eq!(serial, pooled, "workers={workers}");
         }
+    }
+
+    #[test]
+    fn steady_state_pooled_forward_performs_zero_thread_spawns() {
+        // the persistent-pool acceptance criterion: helpers are spawned on
+        // the first pooled forward and only parked/woken by the ~7 kernel
+        // scopes per block afterwards — never re-spawned
+        let model = tiny_model();
+        let plan = mixed_plan(model.schema.n_blocks);
+        let qm = QuantizedModel::build(&model, &plan).unwrap();
+        let toks = tokens(&model.schema);
+        let pool = Pool::new(4);
+        assert_eq!(pool.spawn_events(), 0, "no threads before the first forward");
+        let mut fp = ForwardPass::new(&model.schema, pool.clone());
+        let warm = fp.forward(&qm, &toks).unwrap();
+        let spawned = pool.spawn_events();
+        assert_eq!(spawned, 3, "workers - 1 helpers, all spawned by the first forward");
+        for _ in 0..5 {
+            assert_eq!(fp.forward(&qm, &toks).unwrap(), warm);
+        }
+        assert_eq!(
+            pool.spawn_events(),
+            spawned,
+            "steady-state pooled forwards perform zero thread spawns"
+        );
+        assert!(pool.wake_events() > 0, "parked helpers are woken per kernel scope");
     }
 
     #[test]

@@ -1,37 +1,197 @@
-//! Dependency-free scoped worker pool — the parallel-execution seam every
-//! block-level hot path runs on (entropy reductions, per-block analysis,
-//! quantization row groups, `QuantizedModel::build`, the FastEWQ dataset
-//! sweep, and the sharded serving coordinator's replicas).
+//! Dependency-free persistent worker pool — the parallel-execution seam
+//! every block-level hot path runs on (entropy reductions, per-block
+//! analysis, quantization row groups, `QuantizedModel::build`, the FastEWQ
+//! dataset sweep, the fused-GEMM kernels, and the sharded serving
+//! coordinator's replicas).
 //!
-//! Design rules (see DESIGN.md §"par layer"):
-//! - **Scoped**: all parallelism is `std::thread::scope`-based; no detached
-//!   threads, no global executor, nothing outlives the call.
+//! Design rules (see DESIGN.md §"par layer" and §9):
+//! - **Spawn once, park between scopes**: helper threads are spawned lazily
+//!   on the first multi-worker scope and then live for the pool's lifetime,
+//!   parked on a condvar between scopes. A steady-state caller (e.g. the
+//!   ~7 kernel invocations per `block_forward`) pays a publish + wake, never
+//!   a thread spawn/join — `spawn_events()` is the test hook that proves it.
+//! - **Epoch/seqlock wake protocol**: publishing a scope stores the job and
+//!   bumps an epoch under the state mutex; each parked helper compares the
+//!   epoch against the last one it ran and executes every scope exactly
+//!   once. The caller doubles as worker 0 and blocks until the helper
+//!   completion count drains, so scope bodies may freely borrow the
+//!   caller's stack.
 //! - **Deterministic**: `par_map_*` returns results in input order, and
 //!   `par_chunk_fold` fixes both the chunk layout (a function of data length
 //!   only) and the fold order (chunk index order) — so every result is
 //!   bit-identical for any worker count, including 1.
 //! - **Work-stealing by atomic counter**: tasks are claimed with a single
 //!   `fetch_add`, which balances uneven block sizes without a scheduler.
+//! - **Re-entrant by degradation**: a scope started while another scope of
+//!   the same pool is in flight (including from inside a scope body) runs
+//!   inline on the calling thread instead of deadlocking on the helpers.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc::channel;
+use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, TryLockError};
 
 use crate::config::ParallelConfig;
 
-/// A sized handle describing how much parallelism to use. Creating a `Pool`
-/// is free — threads are spawned per call and joined before returning.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub struct Pool {
+/// Lock helper: a panic inside a scope body (or a shard worker) can poison
+/// a mutex while the protected state is still consistent (panics are
+/// captured, or contained by the serving death guard) — keep serving after
+/// one. Shared with `serving::queues`, the other concurrency layer.
+pub(crate) fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// A scope body as the helpers see it (the type-alias context pins the
+/// trait object's lifetime bound to `'static`; the publish-side transmute
+/// is what erases the real borrow).
+type ScopeBody = dyn Fn(usize) + Sync;
+
+/// Type-erased pointer to a scope body. Helpers only ever dereference it
+/// between job publish and the caller's completion wait, while the original
+/// closure is still borrowed on the caller's stack.
+struct Job(*const ScopeBody);
+
+// SAFETY: the pointee is `Sync` (shared calls from many threads are fine)
+// and the pointer is only dereferenced while the caller blocks in
+// `run_scope`, so sending the pointer to helper threads is sound.
+unsafe impl Send for Job {}
+
+/// Shared pool state, guarded by one mutex.
+struct State {
+    /// Scope counter: bumped once per published job. Helpers compare it
+    /// against the last epoch they executed (the seqlock-style wake check).
+    epoch: u64,
+    /// The in-flight scope body; `Some` exactly while an epoch is
+    /// outstanding.
+    job: Option<Job>,
+    /// Helpers still running the current job.
+    running: usize,
+    /// First panic payload captured from a helper this scope.
+    panic: Option<Box<dyn std::any::Any + Send>>,
+    /// Set once when the last `Pool` handle drops; helpers exit.
+    shutdown: bool,
+}
+
+/// State shared with the helper threads (kept alive by their `Arc`s even
+/// while the owning `Pool` is mid-drop).
+struct Core {
+    state: Mutex<State>,
+    /// Helpers park here between scopes.
+    work_cv: Condvar,
+    /// The scope caller parks here until every helper has finished.
+    done_cv: Condvar,
+    /// Helper threads ever spawned by this pool (the spawn-once test hook).
+    spawns: AtomicU64,
+    /// Park → wake transitions across all helpers (telemetry; a helper that
+    /// finds the next epoch already published without waiting is not
+    /// counted — it never parked).
+    wakes: AtomicU64,
+}
+
+/// Owned by the `Pool` handles; dropping the last one shuts the helpers
+/// down and joins them.
+struct Shared {
     workers: usize,
+    core: Arc<Core>,
+    /// Helper thread handles, spawned lazily on the first parallel scope.
+    handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    /// Serializes scopes: one job in flight per pool. `run_scope` falls
+    /// back to inline execution when it cannot take this immediately.
+    scope_lock: Mutex<()>,
+}
+
+impl Drop for Shared {
+    fn drop(&mut self) {
+        {
+            let mut st = lock(&self.core.state);
+            st.shutdown = true;
+        }
+        self.core.work_cv.notify_all();
+        for h in lock(&self.handles).drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Helper thread main loop: park until a new epoch is published (or
+/// shutdown), run the job once, report completion.
+fn helper_loop(core: Arc<Core>, worker: usize, mut seen: u64) {
+    loop {
+        let ptr = {
+            let mut st = lock(&core.state);
+            let mut parked = false;
+            while !st.shutdown && st.epoch == seen {
+                parked = true;
+                st = core.work_cv.wait(st).unwrap_or_else(|e| e.into_inner());
+            }
+            if st.shutdown {
+                return;
+            }
+            if parked {
+                core.wakes.fetch_add(1, Ordering::Relaxed);
+            }
+            seen = st.epoch;
+            st.job.as_ref().expect("job published with the epoch").0
+        };
+        // SAFETY: the publisher keeps the closure alive (blocked in
+        // `run_scope`) until `running` drains back to zero below.
+        let result = std::panic::catch_unwind(AssertUnwindSafe(|| (unsafe { &*ptr })(worker)));
+        let mut st = lock(&core.state);
+        if let Err(p) = result {
+            if st.panic.is_none() {
+                st.panic = Some(p);
+            }
+        }
+        st.running -= 1;
+        if st.running == 0 {
+            core.done_cv.notify_one();
+        }
+    }
+}
+
+/// A handle on a persistent worker pool. Clones share the same helper
+/// threads; the helpers shut down when the last handle drops. Creating a
+/// pool is cheap — helper threads are spawned lazily on the first
+/// multi-worker scope and parked (never re-spawned) between scopes.
+#[derive(Clone)]
+pub struct Pool {
+    shared: Arc<Shared>,
+}
+
+impl std::fmt::Debug for Pool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Pool")
+            .field("workers", &self.workers())
+            .field("spawned", &self.spawn_events())
+            .finish()
+    }
 }
 
 impl Pool {
     pub fn new(workers: usize) -> Self {
-        Self { workers: workers.max(1) }
+        Self {
+            shared: Arc::new(Shared {
+                workers: workers.max(1),
+                core: Arc::new(Core {
+                    state: Mutex::new(State {
+                        epoch: 0,
+                        job: None,
+                        running: 0,
+                        panic: None,
+                        shutdown: false,
+                    }),
+                    work_cv: Condvar::new(),
+                    done_cv: Condvar::new(),
+                    spawns: AtomicU64::new(0),
+                    wakes: AtomicU64::new(0),
+                }),
+                handles: Mutex::new(Vec::new()),
+                scope_lock: Mutex::new(()),
+            }),
+        }
     }
 
     /// Single-worker pool: every `par_*` call degrades to a plain loop on the
-    /// calling thread (the serial reference path).
+    /// calling thread (the serial reference path). Never spawns a thread.
     pub fn serial() -> Self {
         Self::new(1)
     }
@@ -41,7 +201,99 @@ impl Pool {
     }
 
     pub fn workers(&self) -> usize {
-        self.workers
+        self.shared.workers
+    }
+
+    /// Helper threads spawned so far (test hook for the spawn-once
+    /// invariant: at most `workers() - 1`, all on the first parallel scope,
+    /// zero in steady state and zero forever on a serial pool).
+    pub fn spawn_events(&self) -> u64 {
+        self.shared.core.spawns.load(Ordering::Relaxed)
+    }
+
+    /// Park → wake transitions across all helpers so far (telemetry for the
+    /// serving layer's occupancy reports).
+    pub fn wake_events(&self) -> u64 {
+        self.shared.core.wakes.load(Ordering::Relaxed)
+    }
+
+    /// Spawn any missing helper threads. Called with `scope_lock` held and
+    /// no epoch outstanding, so the epoch read here is stable until the
+    /// caller publishes the next job.
+    fn ensure_spawned(&self) {
+        let helpers = self.shared.workers - 1;
+        let mut hs = lock(&self.shared.handles);
+        if hs.len() >= helpers {
+            return;
+        }
+        let seen = lock(&self.shared.core.state).epoch;
+        while hs.len() < helpers {
+            let worker = hs.len() + 1;
+            let core = self.shared.core.clone();
+            self.shared.core.spawns.fetch_add(1, Ordering::Relaxed);
+            hs.push(
+                std::thread::Builder::new()
+                    .name(format!("ewq-pool-{worker}"))
+                    .spawn(move || helper_loop(core, worker, seen))
+                    .expect("spawn pool worker"),
+            );
+        }
+    }
+
+    /// Publish one scope to the parked helpers, run worker 0 on the calling
+    /// thread, and block until every helper has finished — the primitive
+    /// every `par_*` entry point builds on. Falls back to running the whole
+    /// body inline as worker 0 when another scope of this pool is already
+    /// in flight (nested or concurrent use), which is always correct: every
+    /// scope body must tolerate any worker count, including 1.
+    // the transmute only erases the closure's borrow lifetime — clippy
+    // cannot see that and flags it as a no-op
+    #[allow(clippy::useless_transmute, clippy::missing_transmute_annotations)]
+    fn run_scope(&self, f: &(dyn Fn(usize) + Sync)) {
+        if self.shared.workers <= 1 {
+            f(0);
+            return;
+        }
+        let guard = match self.shared.scope_lock.try_lock() {
+            Ok(g) => g,
+            Err(TryLockError::Poisoned(p)) => p.into_inner(),
+            Err(TryLockError::WouldBlock) => {
+                f(0);
+                return;
+            }
+        };
+        self.ensure_spawned();
+        let core = &self.shared.core;
+        {
+            let mut st = lock(&core.state);
+            // SAFETY: the borrow is erased to 'static only for the window
+            // where this thread blocks below until `running == 0`; no
+            // helper touches the pointer after that.
+            st.job = Some(Job(unsafe {
+                std::mem::transmute::<&(dyn Fn(usize) + Sync), *const ScopeBody>(f)
+            }));
+            st.running = self.shared.workers - 1;
+            st.panic = None;
+            st.epoch += 1;
+        }
+        core.work_cv.notify_all();
+        // the caller doubles as worker 0; its own panic is deferred until
+        // the helpers are done so they never outlive the borrows they run on
+        let caller = std::panic::catch_unwind(AssertUnwindSafe(|| f(0)));
+        let mut st = lock(&core.state);
+        while st.running > 0 {
+            st = core.done_cv.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+        st.job = None;
+        let helper_panic = st.panic.take();
+        drop(st);
+        drop(guard);
+        if let Err(p) = caller {
+            std::panic::resume_unwind(p);
+        }
+        if let Some(p) = helper_panic {
+            std::panic::resume_unwind(p);
+        }
     }
 
     /// Run `f(worker_index)` once per worker, concurrently, and wait for all
@@ -50,16 +302,7 @@ impl Pool {
     where
         F: Fn(usize) + Sync,
     {
-        if self.workers <= 1 {
-            f(0);
-            return;
-        }
-        std::thread::scope(|s| {
-            for w in 0..self.workers {
-                let f = &f;
-                s.spawn(move || f(w));
-            }
-        });
+        self.run_scope(&f);
     }
 
     /// Map `f` over `0..n`, returning results in index order. Tasks are
@@ -70,42 +313,26 @@ impl Pool {
         R: Send,
         F: Fn(usize) -> R + Sync,
     {
-        if self.workers <= 1 || n <= 1 {
+        if self.workers() <= 1 || n <= 1 {
             return (0..n).map(f).collect();
         }
+        let mut out: Vec<Option<R>> = Vec::with_capacity(n);
+        out.resize_with(n, || None);
+        let slots = SendSlots(out.as_mut_ptr());
         let next = AtomicUsize::new(0);
-        let (tx, rx) = channel::<(usize, R)>();
-        std::thread::scope(|s| {
-            let mut handles = Vec::with_capacity(self.workers.min(n));
-            for _ in 0..self.workers.min(n) {
-                let tx = tx.clone();
-                let next = &next;
-                let f = &f;
-                handles.push(s.spawn(move || loop {
-                    let i = next.fetch_add(1, Ordering::Relaxed);
-                    if i >= n {
-                        break;
-                    }
-                    let r = f(i);
-                    if tx.send((i, r)).is_err() {
-                        break;
-                    }
-                }));
+        self.run_scope(&|_w| loop {
+            let i = next.fetch_add(1, Ordering::Relaxed);
+            if i >= n {
+                break;
             }
-            drop(tx);
-            let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
-            for (i, r) in rx.iter() {
-                out[i] = Some(r);
-            }
-            // join before unwrapping so a worker panic surfaces as itself,
-            // not as a missing-result panic here
-            for h in handles {
-                if let Err(p) = h.join() {
-                    std::panic::resume_unwind(p);
-                }
-            }
-            out.into_iter().map(|o| o.expect("worker produced every index")).collect()
-        })
+            let r = f(i);
+            // SAFETY: `i` was claimed by exactly one worker via the atomic
+            // counter, so this slot is written at most once, and the owning
+            // Vec outlives the scope (run_scope blocks until all workers
+            // are done).
+            unsafe { slots.write(i, r) };
+        });
+        out.into_iter().map(|o| o.expect("worker produced every index")).collect()
     }
 
     /// Map `f(index, &item)` over a slice, results in input order.
@@ -132,25 +359,19 @@ impl Pool {
         F: Fn(usize, usize, &mut [T]) + Sync,
     {
         let band = band.max(1);
-        if self.workers <= 1 || data.len() <= band {
+        if self.workers() <= 1 || data.len() <= band {
             for (i, c) in data.chunks_mut(band).enumerate() {
                 f(0, i, c);
             }
             return;
         }
-        let bands = std::sync::Mutex::new(data.chunks_mut(band).enumerate());
-        std::thread::scope(|s| {
-            for w in 0..self.workers {
-                let bands = &bands;
-                let f = &f;
-                s.spawn(move || loop {
-                    // claim under the lock (dropped at end of statement),
-                    // run outside it
-                    let next = bands.lock().unwrap().next();
-                    let Some((i, c)) = next else { break };
-                    f(w, i, c);
-                });
-            }
+        let bands = Mutex::new(data.chunks_mut(band).enumerate());
+        self.run_scope(&|w| loop {
+            // claim under the lock (dropped at end of statement), run
+            // outside it
+            let next = lock(&bands).next();
+            let Some((i, c)) = next else { break };
+            f(w, i, c);
         });
     }
 
@@ -177,7 +398,26 @@ impl Default for Pool {
     }
 }
 
+/// Shared raw view of the `par_map_range` output slots. Disjoint writes
+/// only: every index is claimed by exactly one worker.
+struct SendSlots<R>(*mut Option<R>);
+
+// SAFETY: workers move `R` values into distinct slots through a shared
+// reference; `R: Send` makes the cross-thread move sound.
+unsafe impl<R: Send> Sync for SendSlots<R> {}
+
+impl<R> SendSlots<R> {
+    /// SAFETY: caller guarantees `i` is in bounds, written by one worker
+    /// only, and that the backing Vec outlives every write.
+    unsafe fn write(&self, i: usize, val: R) {
+        *self.0.add(i) = Some(val);
+    }
+}
+
 /// Convenience free function: map over a slice with `cfg.workers` workers.
+/// The transient pool spawns (and joins) its helpers within the call —
+/// hold a `Pool` instead on hot paths so the workers stay parked between
+/// calls.
 pub fn par_map_indexed<T, R, F>(cfg: &ParallelConfig, items: &[T], f: F) -> Vec<R>
 where
     T: Sync,
@@ -195,7 +435,7 @@ mod tests {
     #[test]
     fn map_range_matches_serial_in_order() {
         let serial: Vec<usize> = (0..100).map(|i| i * i).collect();
-        for workers in [1, 2, 3, 8] {
+        for workers in [1, 2, 3, 8, ParallelConfig::test_workers(5)] {
             let par = Pool::new(workers).par_map_range(100, |i| i * i);
             assert_eq!(par, serial, "workers={workers}");
         }
@@ -232,6 +472,69 @@ mod tests {
     }
 
     #[test]
+    fn workers_spawn_once_and_park_between_scopes() {
+        // the persistent-pool invariant: helpers appear on the first
+        // parallel scope and are only parked/woken — never re-spawned —
+        // by the scopes after it
+        let pool = Pool::new(3);
+        assert_eq!(pool.spawn_events(), 0, "lazy: no threads before first scope");
+        let first = pool.par_map_range(10, |i| i * 3);
+        assert_eq!(first, (0..10).map(|i| i * 3).collect::<Vec<_>>());
+        assert_eq!(pool.spawn_events(), 2, "workers - 1 helpers on first use");
+        let mut data = vec![0u64; 256];
+        for _ in 0..20 {
+            let _ = pool.par_map_range(10, |i| i);
+            pool.scope(|_w| {});
+            pool.par_bands_mut(&mut data, 16, |_w, i, band| {
+                band.iter_mut().for_each(|x| *x = i as u64);
+            });
+        }
+        assert_eq!(pool.spawn_events(), 2, "steady state performs zero thread spawns");
+        assert!(pool.wake_events() >= 2, "parked helpers are woken per scope");
+        // clones share the same helpers
+        let clone = pool.clone();
+        let _ = clone.par_map_range(10, |i| i);
+        assert_eq!(pool.spawn_events(), 2);
+    }
+
+    #[test]
+    fn serial_pool_never_spawns() {
+        let pool = Pool::serial();
+        let _ = pool.par_map_range(100, |i| i);
+        pool.scope(|_| {});
+        assert_eq!(pool.spawn_events(), 0);
+        assert_eq!(pool.wake_events(), 0);
+    }
+
+    #[test]
+    fn panic_in_scope_propagates_and_pool_survives() {
+        let pool = Pool::new(4);
+        let r = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.par_map_range(16, |i| {
+                if i == 11 {
+                    panic!("boom");
+                }
+                i
+            })
+        }));
+        assert!(r.is_err(), "worker panic must reach the caller");
+        // helpers survive a panicked scope and keep serving
+        assert_eq!(pool.par_map_range(4, |i| i * 2), vec![0, 2, 4, 6]);
+        assert_eq!(pool.spawn_events(), 3, "no respawn after a panic");
+    }
+
+    #[test]
+    fn nested_scopes_degrade_to_inline() {
+        // a scope started from inside another scope of the same pool runs
+        // inline instead of deadlocking on the busy helpers
+        let pool = Pool::new(2);
+        let out = pool.par_map_range(4, |i| {
+            pool.par_map_range(3, |j| j).iter().sum::<usize>() + i
+        });
+        assert_eq!(out, vec![3, 4, 5, 6]);
+    }
+
+    #[test]
     fn chunk_fold_is_bit_stable_across_worker_counts() {
         // f64 summation depends on order — the fixed chunk layout + ordered
         // fold must give identical bits for every worker count.
@@ -240,7 +543,7 @@ mod tests {
             pool.par_chunk_fold(&data, 1 << 10, |c| c.iter().sum::<f64>(), 0.0, |a, b| a + b)
         };
         let s1 = sum(&Pool::serial());
-        for workers in [2, 3, 4, 7] {
+        for workers in [2, 3, 4, 7, ParallelConfig::test_workers(2)] {
             let sp = sum(&Pool::new(workers));
             assert_eq!(s1.to_bits(), sp.to_bits(), "workers={workers}");
         }

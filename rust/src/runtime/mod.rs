@@ -9,9 +9,14 @@
 //! With default features (offline builds) `Runtime` is an inert handle and
 //! every forward pass dispatches through the native fused-kernel executor
 //! (`model::refexec::ForwardPass`, serving straight from packed `QMat`
-//! payloads via `crate::kernels`) — same `Runtime::cpu()` surface, so
-//! callers (`exp`, `serving`, benches, examples) compile identically either
-//! way. See DESIGN.md §"xla feature matrix" and §"kernel layer".
+//! payloads via `crate::kernels`, parallelized on a persistent `par::Pool`
+//! whose workers stay parked between kernel scopes) — same `Runtime::cpu()`
+//! surface, so callers (`exp`, `serving`, benches, examples) compile
+//! identically either way. Each serving shard constructs its own `Runtime`
+//! inside its worker thread (the PJRT client is not `Send`), which is what
+//! lets the event-driven shard loop steal whole windows without ever
+//! migrating a runtime across threads. See DESIGN.md §"xla feature matrix",
+//! §"kernel layer", and §9.
 
 #[cfg(feature = "xla")]
 mod pjrt {

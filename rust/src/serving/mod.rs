@@ -2,31 +2,39 @@
 //!
 //! Topology: the front end submits requests over a channel to a **batcher**
 //! thread; a dynamic batching window groups up to `max_batch` requests or
-//! waits at most `max_wait`, then dispatches the whole batch to one of
-//! `ServeConfig::workers` **shard workers** over per-shard queues — by
-//! default to the **shortest queue** (fewest queued + in-flight batches,
-//! tracked by per-shard depth counters), which balances skewed batch costs;
-//! `DispatchPolicy::RoundRobin` keeps the original blind rotation. Each
+//! waits at most `max_wait`, then places the whole batch on one of
+//! `ServeConfig::workers` per-shard **queues** (`serving::queues`). Shard
+//! workers drain their own queue front-first and run event-driven: an idle
+//! shard parks on the queue condvar, is woken by pushes, and — under
+//! `DispatchPolicy::WorkSteal`, the default — steals the deepest peer
+//! queue's oldest window instead of idling while a neighbour is backed up.
+//! `ShortestQueue` (producer-side balancing by queued + in-flight depth)
+//! and `RoundRobin` (blind rotation) are kept as comparison policies. Each
 //! shard owns a full model replica (its own `Runtime` — the PJRT client is
 //! not `Send`, so it is created inside the shard thread — plus its own
 //! `QuantizedModel`, resident at **packed** size: the native executor
 //! serves straight from the `QMat` payloads through the fused kernels) and
 //! answers every request in the batch.
 //!
-//! Responses are batching- and shard-invariant: attention never mixes batch
-//! rows, padding rows are zeros, and every replica is built from the same
-//! plan — so a request's `next_token` is identical whether it is served by
-//! 1 worker or N. Shard-level `ShardOccupancy` is folded into the aggregate
-//! metrics via `ServingMetrics::merge` at shutdown.
+//! Responses are batching-, shard-, and policy-invariant: attention never
+//! mixes batch rows, padding rows are zeros, and every replica is built
+//! from the same plan — so a request's `next_token` is identical whether it
+//! is served by 1 worker or N, under any dispatch policy. Shard-level
+//! `ShardOccupancy` (including steal and park/wake counts) is folded into
+//! the aggregate metrics via `ServingMetrics::merge` at shutdown.
+//!
+//! Fault containment: a shard that unwinds marks itself dead on the shared
+//! queues and its stranded windows are **rescued** — popped exactly once —
+//! by live peers under every policy (see `queues::ShardQueues::pop`).
 //!
 //! Cross-machine block placement (from `cluster::Distribution`) is simulated:
 //! each batch is charged `hops × link_latency` of virtual network time,
 //! reported separately from wall-clock latency.
 
 pub mod kvcache;
+mod queues;
 pub mod trace;
 
-use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -38,6 +46,7 @@ use crate::ewq::QuantPlan;
 use crate::model::{ModelExecutor, QuantizedModel};
 use crate::par::Pool;
 use crate::runtime::Runtime;
+use crate::serving::queues::{Popped, ShardQueues};
 use crate::zoo::ModelDir;
 
 /// One generation request: a token context, answered with the next token.
@@ -66,15 +75,19 @@ pub struct Response {
 /// the model vocabulary — answered immediately, never executed.
 pub const INVALID_TOKEN: i32 = -1;
 
+/// Test-only: a context whose first token is this sentinel panics the shard
+/// that picks its window up — the deterministic "shard dies mid-flight"
+/// trigger for the dead-shard rescue tests.
+#[cfg(test)]
+pub(crate) const POISON_CONTEXT: i32 = i32::MIN;
+
 enum Msg {
     Req(Request),
     Stop(Sender<ServingMetrics>),
 }
 
-enum ShardMsg {
-    Batch(Vec<Request>),
-    Stop(Sender<ServingMetrics>),
-}
+/// A closed batching window en route to (or parked on) a shard queue.
+type Window = Vec<Request>;
 
 /// Per-shard execution accounting.
 #[derive(Clone, Debug, Default, PartialEq, Eq)]
@@ -84,6 +97,12 @@ pub struct ShardOccupancy {
     pub batches: usize,
     /// time spent executing batches (excludes idle waiting)
     pub busy_us: u64,
+    /// windows this shard took from peers' queues (work stealing under
+    /// `DispatchPolicy::WorkSteal`, dead-shard rescues under every policy)
+    pub steals: usize,
+    /// park → wake transitions on the shared queue condvar (how often the
+    /// worker went idle and was handed new work)
+    pub wakes: usize,
 }
 
 impl ShardOccupancy {
@@ -113,6 +132,10 @@ pub struct ServingMetrics {
     /// `QuantizedModel::resident_bytes`; `merge` sums them) — the packed
     /// footprint the memory-reduction claim is measured by.
     pub resident_weight_bytes: usize,
+    /// Windows taken from peer queues across all shards (steals + rescues).
+    pub steals: usize,
+    /// Shard-worker park → wake transitions across all shards.
+    pub wakes: usize,
     /// One entry per shard worker (sorted by shard id after `merge`).
     pub shards: Vec<ShardOccupancy>,
 }
@@ -151,6 +174,8 @@ impl ServingMetrics {
         self.max_batch_observed = self.max_batch_observed.max(other.max_batch_observed);
         self.virtual_network_us += other.virtual_network_us;
         self.resident_weight_bytes += other.resident_weight_bytes;
+        self.steals += other.steals;
+        self.wakes += other.wakes;
         self.shards.extend(other.shards);
         self.shards.sort_by_key(|s| s.shard);
     }
@@ -172,6 +197,9 @@ impl ServingMetrics {
         );
         if self.rejected > 0 {
             s.push_str(&format!(", rejected {}", self.rejected));
+        }
+        if self.steals > 0 {
+            s.push_str(&format!(", steals {}", self.steals));
         }
         if self.resident_weight_bytes > 0 {
             s.push_str(&format!(
@@ -235,50 +263,56 @@ impl Coordinator {
         let policy = cfg.dispatch;
         let fwd_workers = cfg.forward_workers.max(1);
 
-        // per-shard queue depth (queued + in-flight batches): the batcher
-        // increments on dispatch, the shard decrements when a batch is done
-        let depths: Vec<Arc<AtomicUsize>> =
-            (0..n_shards).map(|_| Arc::new(AtomicUsize::new(0))).collect();
+        // the shared per-shard window queues the whole fleet drains
+        let queues: Arc<ShardQueues<Window>> = Arc::new(ShardQueues::new(n_shards));
 
         // spawn shard workers, each owning a replica
         let (ready_tx, ready_rx) = channel::<std::result::Result<(), String>>();
-        let mut shard_txs: Vec<Sender<ShardMsg>> = Vec::with_capacity(n_shards);
+        let (res_tx, res_rx) = channel::<ServingMetrics>();
         let mut shard_handles = Vec::with_capacity(n_shards);
         for shard in 0..n_shards {
-            let (stx, srx) = channel::<ShardMsg>();
             let replica = model.clone();
             let plan = plan.clone();
             let ready = ready_tx.clone();
-            let ctx = ShardCtx { shard, net_us, fwd_workers, depth: depths[shard].clone() };
+            let results = res_tx.clone();
+            let q = queues.clone();
+            let ctx = ShardCtx { shard, net_us, fwd_workers, steal: policy.steals() };
             let handle = std::thread::Builder::new()
                 .name(format!("ewq-shard-{shard}"))
                 .spawn(move || {
-                    if let Err(e) = shard_worker(ctx, replica, plan, srx, ready) {
+                    if let Err(e) = shard_worker(ctx, replica, plan, q, ready, results) {
                         eprintln!("shard {shard} failed: {e:#}");
                     }
                 })
                 .context("spawn shard worker")?;
-            shard_txs.push(stx);
             shard_handles.push(handle);
         }
         drop(ready_tx);
+        drop(res_tx);
         // block until every shard has loaded + compiled + warmed its replica
         // so request latencies never include one-off startup cost
         for _ in 0..n_shards {
             match ready_rx.recv() {
                 Ok(Ok(())) => {}
-                Ok(Err(msg)) => anyhow::bail!("shard startup failed: {msg}"),
-                Err(_) => anyhow::bail!("a shard died during startup"),
+                Ok(Err(msg)) => {
+                    queues.stop(); // release the shards that did come up
+                    anyhow::bail!("shard startup failed: {msg}");
+                }
+                Err(_) => {
+                    queues.stop();
+                    anyhow::bail!("a shard died during startup");
+                }
             }
         }
 
-        // batcher thread: groups requests, dispatches under `cfg.dispatch`
+        // batcher thread: groups requests into windows, places them under
+        // `cfg.dispatch`; idle shards drain/steal without its involvement
         let (tx, rx) = channel::<Msg>();
         let max_wait = Duration::from_micros(cfg.max_wait_us);
-        let shards = Shards { txs: shard_txs, handles: shard_handles, depths, policy };
+        let fleet = Fleet { queues, handles: shard_handles, results: res_rx, policy };
         let handle = std::thread::Builder::new()
             .name("ewq-batcher".into())
-            .spawn(move || batcher(rx, shards, batch_cap, max_wait))
+            .spawn(move || batcher(rx, fleet, batch_cap, max_wait))
             .context("spawn batcher")?;
         Ok(Self { tx, handle: Some(handle), next_id: 0.into() })
     }
@@ -308,53 +342,78 @@ impl Coordinator {
     }
 }
 
-/// The batcher's handle on the shard fleet: queues, join handles, depth
-/// counters, and the dispatch policy.
-struct Shards {
-    txs: Vec<Sender<ShardMsg>>,
+/// The batcher's handle on the shard fleet: the shared queues, the worker
+/// join handles, the metrics return channel, and the dispatch policy.
+struct Fleet {
+    queues: Arc<ShardQueues<Window>>,
     handles: Vec<std::thread::JoinHandle<()>>,
-    depths: Vec<Arc<AtomicUsize>>,
+    results: Receiver<ServingMetrics>,
     policy: DispatchPolicy,
 }
 
 /// Candidate order for shortest-queue dispatch: shard indices sorted by
 /// (queue depth, shard id). The head is the dispatch target; the tail is
-/// the dead-shard reroute order, so a failed send falls through to the
-/// next-least-loaded shard.
+/// the fallback order when the head shard is dead.
 fn shortest_queue_order(depths: &[usize]) -> Vec<usize> {
     let mut idx: Vec<usize> = (0..depths.len()).collect();
     idx.sort_by_key(|&i| (depths[i], i));
     idx
 }
 
+/// Place one closed window on a shard queue under `policy`, skipping dead
+/// shards. Windows that land on a shard that dies before draining them are
+/// rescued by live peers inside `ShardQueues::pop`, so placement is only a
+/// heuristic — never a correctness concern.
+fn place_window(queues: &ShardQueues<Window>, policy: DispatchPolicy, rr: &mut usize, w: Window) {
+    let dead = queues.dead_snapshot();
+    let alive: Vec<usize> = (0..dead.len()).filter(|&i| !dead[i]).collect();
+    if alive.is_empty() {
+        // responders drop with the window; callers observe closed channels
+        eprintln!("batcher: all shards dead; dropping batch of {}", w.len());
+        return;
+    }
+    let target = match policy {
+        // WorkSteal places blindly — consumers repair imbalance themselves
+        DispatchPolicy::RoundRobin | DispatchPolicy::WorkSteal => {
+            let t = alive[*rr % alive.len()];
+            *rr += 1;
+            t
+        }
+        DispatchPolicy::ShortestQueue => {
+            let depths = queues.depth_snapshot();
+            *shortest_queue_order(&depths)
+                .iter()
+                .find(|&&i| !dead[i])
+                .expect("alive is non-empty")
+        }
+    };
+    queues.push(target, w);
+}
+
 /// The shared dynamic batcher: owns the request queue, closes batching
-/// windows, and dispatches full batches over per-shard queues — to the
-/// shortest queue by default, round-robin under the legacy policy.
-fn batcher(rx: Receiver<Msg>, shards: Shards, batch_cap: usize, max_wait: Duration) {
+/// windows, and places them on the per-shard queues.
+fn batcher(rx: Receiver<Msg>, fleet: Fleet, batch_cap: usize, max_wait: Duration) {
     let started = Instant::now();
     let mut rr = 0usize;
     let mut pending: Vec<Request> = Vec::new();
-    let Shards { txs: shard_txs, handles: shard_handles, depths, policy } = shards;
+    let Fleet { queues, handles, results, policy } = fleet;
 
-    let finalize = |mtx: Sender<ServingMetrics>,
-                    shard_txs: Vec<Sender<ShardMsg>>,
-                    shard_handles: Vec<std::thread::JoinHandle<()>>| {
-        // Stop messages queue behind in-flight batches, so every shard
-        // finishes its work before reporting
-        let mut agg = ServingMetrics::default();
-        for stx in &shard_txs {
-            let (stop_tx, stop_rx) = channel();
-            if stx.send(ShardMsg::Stop(stop_tx)).is_ok() {
-                if let Ok(m) = stop_rx.recv() {
-                    agg.merge(m);
-                }
-            }
-        }
-        agg.wall_time = started.elapsed();
-        let _ = mtx.send(agg);
-        drop(shard_txs);
-        for h in shard_handles {
+    // Stop the fleet: after `queues.stop()` the shard workers drain every
+    // remaining window (their own, stolen, or rescued) and report metrics
+    // before exiting, so joining the handles drains all work.
+    let finalize = |mtx: Option<Sender<ServingMetrics>>,
+                    handles: Vec<std::thread::JoinHandle<()>>| {
+        queues.stop();
+        for h in handles {
             let _ = h.join();
+        }
+        if let Some(mtx) = mtx {
+            let mut agg = ServingMetrics::default();
+            while let Ok(m) = results.try_recv() {
+                agg.merge(m);
+            }
+            agg.wall_time = started.elapsed();
+            let _ = mtx.send(agg);
         }
     };
 
@@ -364,15 +423,12 @@ fn batcher(rx: Receiver<Msg>, shards: Shards, batch_cap: usize, max_wait: Durati
             match rx.recv() {
                 Ok(Msg::Req(r)) => pending.push(r),
                 Ok(Msg::Stop(mtx)) => {
-                    finalize(mtx, shard_txs, shard_handles);
+                    finalize(Some(mtx), handles);
                     return;
                 }
                 Err(_) => {
                     // front end dropped without shutdown: stop shards quietly
-                    drop(shard_txs);
-                    for h in shard_handles {
-                        let _ = h.join();
-                    }
+                    finalize(None, handles);
                     return;
                 }
             }
@@ -390,43 +446,12 @@ fn batcher(rx: Receiver<Msg>, shards: Shards, batch_cap: usize, max_wait: Durati
                 Err(_) => break,
             }
         }
-        // dispatch the closed window in policy order; a dead shard
-        // (panicked thread) is skipped with a log line instead of silently
-        // eating 1/N of the traffic forever
         let batch: Vec<Request> = pending.drain(..).collect();
         if !batch.is_empty() {
-            let n_shards = shard_txs.len();
-            let order: Vec<usize> = match policy {
-                DispatchPolicy::RoundRobin => (0..n_shards).map(|k| (rr + k) % n_shards).collect(),
-                DispatchPolicy::ShortestQueue => shortest_queue_order(
-                    &depths.iter().map(|d| d.load(Ordering::SeqCst)).collect::<Vec<_>>(),
-                ),
-            };
-            let mut msg = ShardMsg::Batch(batch);
-            let mut delivered = false;
-            for target in order {
-                // count the batch before sending: the shard decrements when
-                // done, and could otherwise race ahead of the increment
-                depths[target].fetch_add(1, Ordering::SeqCst);
-                match shard_txs[target].send(msg) {
-                    Ok(()) => {
-                        rr = target + 1;
-                        delivered = true;
-                        break;
-                    }
-                    Err(std::sync::mpsc::SendError(m)) => {
-                        depths[target].fetch_sub(1, Ordering::SeqCst);
-                        eprintln!("batcher: shard {target} unreachable, rerouting batch");
-                        msg = m;
-                    }
-                }
-            }
-            if !delivered {
-                eprintln!("batcher: all shards unreachable; dropping batch");
-            }
+            place_window(&queues, policy, &mut rr, batch);
         }
         if let Some(mtx) = stop {
-            finalize(mtx, shard_txs, shard_handles);
+            finalize(Some(mtx), handles);
             return;
         }
     }
@@ -438,19 +463,38 @@ struct ShardCtx {
     net_us: u64,
     /// pool workers inside the replica's native forward pass
     fwd_workers: usize,
-    /// queue depth shared with the batcher (queued + in-flight batches)
-    depth: Arc<AtomicUsize>,
+    /// whether this worker may steal queued windows from live peers
+    steal: bool,
 }
 
-/// One shard worker: owns a model replica and executes dispatched batches.
+/// Marks the shard dead on every non-clean exit (panic mid-batch, setup
+/// failure) so peers rescue its queued windows and parked workers re-check
+/// the stop condition.
+struct DeathGuard {
+    shard: usize,
+    queues: Arc<ShardQueues<Window>>,
+    armed: bool,
+}
+
+impl Drop for DeathGuard {
+    fn drop(&mut self) {
+        if self.armed {
+            self.queues.mark_dead(self.shard);
+        }
+    }
+}
+
+/// One shard worker: owns a model replica and drains the shared queues.
 fn shard_worker(
     ctx: ShardCtx,
     model: ModelDir,
     plan: QuantPlan,
-    rx: Receiver<ShardMsg>,
+    queues: Arc<ShardQueues<Window>>,
     ready: Sender<std::result::Result<(), String>>,
+    results: Sender<ServingMetrics>,
 ) -> Result<()> {
-    let ShardCtx { shard, net_us, fwd_workers, depth } = ctx;
+    let ShardCtx { shard, net_us, fwd_workers, steal } = ctx;
+    let mut guard = DeathGuard { shard, queues: queues.clone(), armed: true };
     // Runtime lives entirely inside this thread (PJRT client is not Send).
     let setup = (|| -> Result<_> {
         let rt = Runtime::cpu()?;
@@ -487,27 +531,36 @@ fn shard_worker(
     let started = Instant::now();
 
     loop {
-        match rx.recv() {
-            Ok(ShardMsg::Batch(batch)) => {
-                execute_batch(batch, &ex, &qm, (b, s, v), (shard, net_us), &mut metrics, &mut occ);
-                // done (or rejected/failed): this batch no longer occupies
-                // the queue — let the batcher route new windows here
-                depth.fetch_sub(1, Ordering::SeqCst);
-            }
-            Ok(ShardMsg::Stop(mtx)) => {
-                metrics.wall_time = started.elapsed();
-                metrics.shards = vec![occ];
-                let _ = mtx.send(metrics);
-                return Ok(());
-            }
-            Err(_) => return Ok(()),
+        let (batch, stolen) = match queues.pop(shard, steal) {
+            Popped::Own(w) => (w, false),
+            Popped::Stolen(w, _from) => (w, true),
+            Popped::Stop => break,
+        };
+        #[cfg(test)]
+        if batch.iter().any(|r| r.context.first() == Some(&POISON_CONTEXT)) {
+            panic!("shard {shard}: poison request — simulated mid-flight crash");
         }
+        if stolen {
+            occ.steals += 1;
+        }
+        execute_batch(batch, &ex, &qm, (b, s, v), (shard, net_us), &mut metrics, &mut occ);
+        // done (or rejected/failed): release the window's depth slot so the
+        // shortest-queue heuristic sees this shard as free again
+        queues.complete(shard);
     }
+    guard.armed = false;
+    occ.wakes = queues.wake_count(shard);
+    metrics.steals = occ.steals;
+    metrics.wakes = occ.wakes;
+    metrics.wall_time = started.elapsed();
+    metrics.shards = vec![occ];
+    let _ = results.send(metrics);
+    Ok(())
 }
 
 /// Execute one dispatched batch on a shard's replica: reject out-of-vocab
 /// contexts, pad, forward, answer. Split out of `shard_worker` so every
-/// early exit still falls through to the queue-depth decrement.
+/// early exit still falls through to the queue-depth release.
 fn execute_batch(
     batch: Vec<Request>,
     ex: &ModelExecutor<'_>,
@@ -592,9 +645,16 @@ fn execute_batch(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::ParallelConfig;
     use crate::quant::Precision;
     use crate::zoo::gen::{synthetic_model_dir, Profile, SyntheticArch};
     use crate::zoo::Schema;
+
+    const ALL_POLICIES: [DispatchPolicy; 3] = [
+        DispatchPolicy::RoundRobin,
+        DispatchPolicy::ShortestQueue,
+        DispatchPolicy::WorkSteal,
+    ];
 
     fn model_path() -> Option<std::path::PathBuf> {
         let p = crate::artifacts_dir().join("models/tl-phi");
@@ -625,10 +685,16 @@ mod tests {
         })
     }
 
-    fn collect_tokens(model: &ModelDir, workers: usize, requests: usize) -> (Vec<i32>, ServingMetrics) {
+    fn collect_tokens_with(
+        model: &ModelDir,
+        workers: usize,
+        requests: usize,
+        dispatch: DispatchPolicy,
+    ) -> (Vec<i32>, ServingMetrics) {
         let plan =
             QuantPlan::uniform(&model.schema.name, model.schema.n_blocks, Precision::Q8);
-        let cfg = ServeConfig { max_batch: 4, max_wait_us: 500, workers, ..Default::default() };
+        let cfg =
+            ServeConfig { max_batch: 4, max_wait_us: 500, workers, dispatch, ..Default::default() };
         let coord =
             Coordinator::start_with_model(model.clone(), plan, cfg, 1, 50).unwrap();
         let mut rxs = Vec::with_capacity(requests);
@@ -646,6 +712,10 @@ mod tests {
         (toks, coord.shutdown())
     }
 
+    fn collect_tokens(model: &ModelDir, workers: usize, requests: usize) -> (Vec<i32>, ServingMetrics) {
+        collect_tokens_with(model, workers, requests, DispatchPolicy::default())
+    }
+
     #[test]
     fn sharded_serving_answers_everything_offline() {
         let model = tiny_model();
@@ -657,6 +727,7 @@ mod tests {
         assert_eq!(m.shards.len(), 3, "one occupancy record per shard");
         assert_eq!(m.shards.iter().map(|s| s.completed).sum::<usize>(), 20);
         assert_eq!(m.shards.iter().map(|s| s.batches).sum::<usize>(), m.batches);
+        assert_eq!(m.steals, m.shards.iter().map(|s| s.steals).sum::<usize>());
         for (i, s) in m.shards.iter().enumerate() {
             assert_eq!(s.shard, i);
             let o = s.occupancy(m.wall_time);
@@ -697,9 +768,9 @@ mod tests {
     }
 
     /// Big enough that one forward takes real time (~100ms-class on a CI
-    /// host): the balance test needs execution to outlast dispatch by a
-    /// wide margin, so depth counters are non-zero whenever the batcher
-    /// routes the next expensive window.
+    /// host): the balance tests need execution to outlast dispatch by a
+    /// wide margin, so queues are non-empty whenever the batcher (or an
+    /// idle thief) routes the next expensive window.
     fn balance_model() -> ModelDir {
         synthetic_model_dir(&SyntheticArch {
             schema: Schema {
@@ -757,6 +828,7 @@ mod tests {
             1,
             "round-robin starves one shard of executed work: {rr_batches:?}"
         );
+        assert_eq!(rr.steals, 0, "round-robin never steals");
         // Shortest-queue routes around the busy shard: both shards execute
         // expensive windows. (All 24 requests are queued before the first
         // ~100ms forward finishes, so the starved-shard outcome would need
@@ -774,6 +846,25 @@ mod tests {
         let rr_min = *rr_batches.iter().min().unwrap();
         let sq_min = *sq_batches.iter().min().unwrap();
         assert!(sq_min > rr_min, "balance must improve: rr {rr_batches:?} vs sq {sq_batches:?}");
+    }
+
+    #[test]
+    fn work_steal_balances_skewed_batch_costs() {
+        use crate::config::DispatchPolicy;
+        // WorkSteal places like round-robin (all expensive windows on shard
+        // 0), but the idle shard pulls from the backed-up queue: both shards
+        // end up executing, and steals are observed and accounted.
+        let ws = run_skewed(DispatchPolicy::WorkSteal);
+        assert_eq!(ws.completed, 24);
+        let ws_batches: Vec<usize> = ws.shards.iter().map(|s| s.batches).collect();
+        assert_eq!(ws_batches.iter().sum::<usize>(), 12);
+        assert!(
+            ws_batches.iter().all(|&b| b >= 1),
+            "work stealing must spread executed batches: {ws_batches:?}"
+        );
+        assert!(ws.steals >= 1, "the idle shard must have stolen queued work");
+        assert_eq!(ws.steals, ws.shards.iter().map(|s| s.steals).sum::<usize>());
+        assert!(ws.wakes >= 1, "idle shards park and are woken");
     }
 
     #[test]
@@ -819,54 +910,127 @@ mod tests {
             coord.shutdown();
             toks
         };
-        assert_eq!(run(1), run(4), "intra-forward parallelism is response-invariant");
+        let serial = run(1);
+        assert_eq!(serial, run(4), "intra-forward parallelism is response-invariant");
+        assert_eq!(
+            serial,
+            run(ParallelConfig::test_workers(3)),
+            "invariant at the CI matrix worker count too"
+        );
     }
 
     #[test]
-    fn responses_are_invariant_to_worker_count() {
+    fn responses_are_invariant_to_worker_count_and_policy() {
         // the acceptance invariant: identical per-request responses whether
-        // one worker or many serve the trace
+        // one worker or many serve the trace, under every dispatch policy
         let model = tiny_model();
         let (serial, _) = collect_tokens(&model, 1, 16);
-        let (sharded, _) = collect_tokens(&model, 4, 16);
-        assert_eq!(serial, sharded);
+        for policy in ALL_POLICIES {
+            for workers in [1usize, 2, 7, ParallelConfig::test_workers(4)] {
+                let (toks, m) = collect_tokens_with(&model, workers, 16, policy);
+                assert_eq!(
+                    serial,
+                    toks,
+                    "workers={workers} policy={}",
+                    policy.label()
+                );
+                assert_eq!(m.completed, 16);
+            }
+        }
     }
 
     #[test]
     fn invalid_tokens_get_sentinel_and_shard_survives() {
+        // exercised under every policy so the event-driven loop (parking,
+        // stealing) sees rejects too — the work-steal coverage the rescue
+        // protocol requires
+        for policy in ALL_POLICIES {
+            let model = tiny_model();
+            let plan =
+                QuantPlan::uniform(&model.schema.name, model.schema.n_blocks, Precision::Q8);
+            let cfg = ServeConfig {
+                max_batch: 4,
+                max_wait_us: 500,
+                workers: 2,
+                dispatch: policy,
+                ..Default::default()
+            };
+            let coord = Coordinator::start_with_model(model, plan, cfg, 0, 0).unwrap();
+            let bad_high = coord.submit(vec![1, 9999, 2]); // out of vocab
+            let bad_neg = coord.submit(vec![-7]);
+            let good = coord.submit(vec![1, 2, 3]);
+            assert_eq!(
+                bad_high.recv_timeout(Duration::from_secs(120)).unwrap().next_token,
+                INVALID_TOKEN,
+                "policy={}",
+                policy.label()
+            );
+            assert_eq!(
+                bad_neg.recv_timeout(Duration::from_secs(120)).unwrap().next_token,
+                INVALID_TOKEN
+            );
+            // the shards must still execute valid work afterwards
+            let resp = good.recv_timeout(Duration::from_secs(120)).unwrap();
+            assert!((0..64).contains(&resp.next_token));
+            // bad token BEYOND the seq_len truncation point: executed normally
+            let mut long_ctx = vec![3i32; 8];
+            long_ctx.extend([9999, 9999]);
+            let truncated = coord.submit(long_ctx);
+            assert!((0..64).contains(
+                &truncated.recv_timeout(Duration::from_secs(120)).unwrap().next_token
+            ));
+            let late = coord.submit(vec![4, 5]);
+            assert!(
+                (0..64).contains(&late.recv_timeout(Duration::from_secs(120)).unwrap().next_token)
+            );
+            let m = coord.shutdown();
+            assert_eq!(m.completed, 5, "policy={}", policy.label());
+            assert_eq!(m.rejected, 2);
+            // rejects are excluded from the latency/batch aggregates
+            assert_eq!(m.latencies_us.len(), 3);
+        }
+    }
+
+    #[test]
+    fn poisoned_shard_dies_and_peers_answer_every_other_request_once() {
+        // "a stolen window from a shard that dies mid-flight must be
+        // re-dispatched exactly once": the poisoned window kills whichever
+        // shard picks it up; every window stranded on the dead shard's
+        // queue is rescued by the survivor, and no request is ever answered
+        // twice. (The queue-level exactly-once property is unit-tested in
+        // `queues::tests`; this exercises it end-to-end.)
         let model = tiny_model();
         let plan =
             QuantPlan::uniform(&model.schema.name, model.schema.n_blocks, Precision::Q8);
-        let cfg = ServeConfig { max_batch: 4, max_wait_us: 500, workers: 1, ..Default::default() };
+        let cfg = ServeConfig {
+            max_batch: 1,
+            max_wait_us: 200,
+            workers: 2,
+            dispatch: DispatchPolicy::WorkSteal,
+            ..Default::default()
+        };
         let coord = Coordinator::start_with_model(model, plan, cfg, 0, 0).unwrap();
-        let bad_high = coord.submit(vec![1, 9999, 2]); // out of vocab
-        let bad_neg = coord.submit(vec![-7]);
-        let good = coord.submit(vec![1, 2, 3]);
-        assert_eq!(
-            bad_high.recv_timeout(Duration::from_secs(120)).unwrap().next_token,
-            INVALID_TOKEN
-        );
-        assert_eq!(
-            bad_neg.recv_timeout(Duration::from_secs(120)).unwrap().next_token,
-            INVALID_TOKEN
-        );
-        // the shard must still execute valid work afterwards
-        let resp = good.recv_timeout(Duration::from_secs(120)).unwrap();
-        assert!((0..64).contains(&resp.next_token));
-        // bad token BEYOND the seq_len truncation point: executed normally
-        let mut long_ctx = vec![3i32; 8];
-        long_ctx.extend([9999, 9999]);
-        let truncated = coord.submit(long_ctx);
+        let poisoned = coord.submit(vec![POISON_CONTEXT]);
+        let mut rxs = Vec::new();
+        for i in 0..10 {
+            rxs.push(coord.submit(vec![(i % 64) as i32, 1, 2]));
+        }
+        // the poisoned window dies with its shard: closed channel, no answer
         assert!(
-            (0..64).contains(&truncated.recv_timeout(Duration::from_secs(120)).unwrap().next_token)
+            poisoned.recv_timeout(Duration::from_secs(120)).is_err(),
+            "poisoned request must never be answered"
         );
-        let late = coord.submit(vec![4, 5]);
-        assert!((0..64).contains(&late.recv_timeout(Duration::from_secs(120)).unwrap().next_token));
+        // every other request is answered exactly once — dispatched to the
+        // live shard directly or rescued off the dead one's queue
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let responses: Vec<Response> = rx.iter().collect();
+            assert_eq!(responses.len(), 1, "request {i} answered exactly once");
+            assert!((0..64).contains(&responses[0].next_token), "request {i}");
+        }
         let m = coord.shutdown();
-        assert_eq!(m.completed, 5);
-        assert_eq!(m.rejected, 2);
-        // rejects are excluded from the latency/batch aggregates
-        assert_eq!(m.latencies_us.len(), 3);
+        // only the survivor reports; the dead shard's metrics die with it
+        assert!(m.shards.len() < 2, "dead shard must not report occupancy");
+        assert!(m.completed <= 10);
     }
 
     #[test]
@@ -913,6 +1077,7 @@ mod tests {
         assert_eq!(m.virtual_network_us, 0);
         assert_eq!(m.shards.len(), 2);
         assert!(m.shards.iter().all(|s| s.completed == 0 && s.busy_us == 0));
+        assert_eq!(m.steals, 0);
     }
 
     #[test]
@@ -926,6 +1091,8 @@ mod tests {
             max_batch_observed: 3,
             virtual_network_us: 0,
             resident_weight_bytes: 0,
+            steals: 0,
+            wakes: 0,
             shards: Vec::new(),
         };
         assert_eq!(m.percentile_us(0.0), 10);
@@ -966,7 +1133,16 @@ mod tests {
             max_batch_observed: 2,
             virtual_network_us: 100,
             resident_weight_bytes: 1000,
-            shards: vec![ShardOccupancy { shard: 1, completed: 3, batches: 2, busy_us: 4000 }],
+            steals: 2,
+            wakes: 5,
+            shards: vec![ShardOccupancy {
+                shard: 1,
+                completed: 3,
+                batches: 2,
+                busy_us: 4000,
+                steals: 2,
+                wakes: 5,
+            }],
         };
         let b = ServingMetrics {
             completed: 2,
@@ -977,7 +1153,16 @@ mod tests {
             max_batch_observed: 3,
             virtual_network_us: 50,
             resident_weight_bytes: 1000,
-            shards: vec![ShardOccupancy { shard: 0, completed: 2, batches: 1, busy_us: 1000 }],
+            steals: 1,
+            wakes: 3,
+            shards: vec![ShardOccupancy {
+                shard: 0,
+                completed: 2,
+                batches: 1,
+                busy_us: 1000,
+                steals: 1,
+                wakes: 3,
+            }],
         };
         a.merge(b);
         assert_eq!(a.completed, 5);
@@ -987,12 +1172,14 @@ mod tests {
         assert_eq!(a.max_batch_observed, 3);
         assert_eq!(a.virtual_network_us, 150);
         assert_eq!(a.resident_weight_bytes, 2000, "replica footprints sum across shards");
+        assert_eq!(a.steals, 3, "steal counts sum across shards");
+        assert_eq!(a.wakes, 8, "park/wake transitions sum across shards");
         assert_eq!(a.latencies_us.len(), 5);
         // shards sorted by id after merge
         assert_eq!(a.shards.iter().map(|s| s.shard).collect::<Vec<_>>(), vec![0, 1]);
         assert_eq!(a.percentile_us(1.0), 50);
         let occ = a.shards[1].occupancy(a.wall_time);
         assert!((occ - 4000.0 / 9000.0).abs() < 1e-9);
-        assert!(!a.summary().is_empty());
+        assert!(a.summary().contains("steals 3"));
     }
 }

@@ -1,0 +1,247 @@
+//! Shared per-shard window queues — the event-driven transport between the
+//! batcher and the shard workers (DESIGN.md §9).
+//!
+//! The batcher **pushes** each closed batching window onto one shard's
+//! deque; shard workers **pop** their own deque front-first and, when idle,
+//! either *steal* the deepest live peer queue's oldest window (WorkSteal
+//! policy) or *rescue* windows stranded on a dead shard's queue (every
+//! policy — the queue-level form of the old dead-shard reroute). All pops
+//! happen under one mutex, so a window leaves its queue exactly once no
+//! matter how many idle workers race for it; an idle worker parks on the
+//! condvar and is woken by pushes, deaths, and the stop signal.
+//!
+//! The structure is generic over the window type so the steal/rescue/stop
+//! protocol is unit-testable without spinning up model replicas.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex};
+
+use crate::par::lock;
+
+struct QueueState<W> {
+    queues: Vec<VecDeque<W>>,
+    /// Shards that died (worker unwound); peers drain their queues.
+    dead: Vec<bool>,
+    /// Set once the batcher will push no more windows.
+    stopping: bool,
+}
+
+/// What a shard worker's blocking pop resolved to.
+#[derive(Debug, PartialEq, Eq)]
+pub(crate) enum Popped<W> {
+    /// The front window of the worker's own queue.
+    Own(W),
+    /// A window taken from shard `.1`'s queue (steal or dead-shard rescue).
+    Stolen(W, usize),
+    /// Stop signal observed with nothing left to drain: exit the loop.
+    Stop,
+}
+
+pub(crate) struct ShardQueues<W> {
+    state: Mutex<QueueState<W>>,
+    /// Idle shard workers park here; pushes, deaths, and stop wake them.
+    cv: Condvar,
+    /// Queued + in-flight windows per shard (the shortest-queue dispatch
+    /// signal; a steal transfers one count from victim to thief).
+    depths: Vec<AtomicUsize>,
+    /// Park → wake transitions per shard (occupancy telemetry).
+    wakes: Vec<AtomicUsize>,
+}
+
+impl<W> ShardQueues<W> {
+    pub(crate) fn new(n_shards: usize) -> Self {
+        Self {
+            state: Mutex::new(QueueState {
+                queues: (0..n_shards).map(|_| VecDeque::new()).collect(),
+                dead: vec![false; n_shards],
+                stopping: false,
+            }),
+            cv: Condvar::new(),
+            depths: (0..n_shards).map(|_| AtomicUsize::new(0)).collect(),
+            wakes: (0..n_shards).map(|_| AtomicUsize::new(0)).collect(),
+        }
+    }
+
+    /// Enqueue a window on `shard` and wake any parked workers. The depth
+    /// counter is bumped under the same lock as the insert, so a worker can
+    /// never observe the window without its depth.
+    pub(crate) fn push(&self, shard: usize, window: W) {
+        let mut st = lock(&self.state);
+        self.depths[shard].fetch_add(1, Ordering::SeqCst);
+        st.queues[shard].push_back(window);
+        drop(st);
+        self.cv.notify_all();
+    }
+
+    /// Queued + in-flight windows per shard.
+    pub(crate) fn depth_snapshot(&self) -> Vec<usize> {
+        self.depths.iter().map(|d| d.load(Ordering::SeqCst)).collect()
+    }
+
+    /// Which shards have died so far.
+    pub(crate) fn dead_snapshot(&self) -> Vec<bool> {
+        lock(&self.state).dead.clone()
+    }
+
+    /// A shard finished (or abandoned) one window: release its depth slot.
+    pub(crate) fn complete(&self, shard: usize) {
+        self.depths[shard].fetch_sub(1, Ordering::SeqCst);
+    }
+
+    /// Mark `shard` dead and wake everyone so its queued windows get
+    /// rescued (and parked peers can re-check the stop condition).
+    pub(crate) fn mark_dead(&self, shard: usize) {
+        let mut st = lock(&self.state);
+        st.dead[shard] = true;
+        drop(st);
+        self.cv.notify_all();
+    }
+
+    /// Signal that no more windows will be pushed; parked workers drain
+    /// what is left and then observe `Popped::Stop`.
+    pub(crate) fn stop(&self) {
+        let mut st = lock(&self.state);
+        st.stopping = true;
+        drop(st);
+        self.cv.notify_all();
+    }
+
+    /// Park → wake transitions shard `shard` has been through.
+    pub(crate) fn wake_count(&self, shard: usize) -> usize {
+        self.wakes[shard].load(Ordering::Relaxed)
+    }
+
+    /// Blocking pop for shard `me`. Resolution order: own queue front →
+    /// steal/rescue (deepest eligible peer queue's oldest window; dead
+    /// peers are always eligible, live peers only when `steal`) → stop →
+    /// park. A returned `Own`/`Stolen` window occupies one depth slot on
+    /// `me` until `complete(me)`. Pushes broadcast on one shared condvar —
+    /// at fleet scale (a handful of shards) the futile wakes are cheaper
+    /// than per-shard condvars, and they are NOT counted: a wake is
+    /// recorded only when a worker that actually parked comes back with
+    /// work, so the occupancy telemetry stays honest.
+    pub(crate) fn pop(&self, me: usize, steal: bool) -> Popped<W> {
+        let mut st = lock(&self.state);
+        let mut parked = false;
+        loop {
+            if let Some(w) = st.queues[me].pop_front() {
+                if parked {
+                    self.wakes[me].fetch_add(1, Ordering::Relaxed);
+                }
+                return Popped::Own(w);
+            }
+            let victim = st
+                .queues
+                .iter()
+                .enumerate()
+                .filter(|&(j, q)| j != me && !q.is_empty() && (steal || st.dead[j]))
+                .max_by_key(|&(j, q)| (q.len(), std::cmp::Reverse(j)))
+                .map(|(j, _)| j);
+            if let Some(j) = victim {
+                let w = st.queues[j].pop_front().expect("victim queue non-empty under lock");
+                // the window's depth slot moves with it
+                self.depths[j].fetch_sub(1, Ordering::SeqCst);
+                self.depths[me].fetch_add(1, Ordering::SeqCst);
+                if parked {
+                    self.wakes[me].fetch_add(1, Ordering::Relaxed);
+                }
+                return Popped::Stolen(w, j);
+            }
+            if st.stopping {
+                // the final stop wake hands no work: not counted
+                return Popped::Stop;
+            }
+            parked = true;
+            st = self.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn own_queue_drains_fifo() {
+        let q: ShardQueues<u32> = ShardQueues::new(2);
+        q.push(0, 10);
+        q.push(0, 11);
+        assert_eq!(q.depth_snapshot(), vec![2, 0]);
+        assert_eq!(q.pop(0, false), Popped::Own(10));
+        assert_eq!(q.pop(0, false), Popped::Own(11));
+        q.complete(0);
+        q.complete(0);
+        assert_eq!(q.depth_snapshot(), vec![0, 0]);
+        q.stop();
+        assert_eq!(q.pop(0, false), Popped::Stop);
+        assert_eq!(q.pop(1, true), Popped::Stop);
+    }
+
+    #[test]
+    fn steal_takes_deepest_peers_oldest_window() {
+        let q: ShardQueues<u32> = ShardQueues::new(3);
+        q.push(1, 100);
+        q.push(2, 200);
+        q.push(2, 201);
+        // shard 0 idles: steals from shard 2 (deepest), oldest first
+        assert_eq!(q.pop(0, true), Popped::Stolen(200, 2));
+        assert_eq!(q.depth_snapshot(), vec![1, 1, 1], "depth slot moved with the steal");
+        // depth tie now: lowest shard id wins
+        assert_eq!(q.pop(0, true), Popped::Stolen(100, 1));
+        assert_eq!(q.pop(0, true), Popped::Stolen(201, 2));
+        q.stop();
+        assert_eq!(q.pop(0, true), Popped::Stop);
+    }
+
+    #[test]
+    fn non_steal_policies_do_not_touch_live_peers() {
+        let q: ShardQueues<u32> = ShardQueues::new(2);
+        q.push(0, 1);
+        q.stop();
+        // shard 1 may not steal shard 0's live window: it sees Stop
+        assert_eq!(q.pop(1, false), Popped::Stop);
+        // shard 0 still drains it
+        assert_eq!(q.pop(0, false), Popped::Own(1));
+    }
+
+    #[test]
+    fn dead_shard_windows_are_rescued_exactly_once_under_any_policy() {
+        let q: ShardQueues<u32> = ShardQueues::new(3);
+        q.push(0, 7);
+        q.push(0, 8);
+        q.mark_dead(0);
+        // even a non-stealing policy rescues orphaned windows, oldest first
+        assert_eq!(q.pop(1, false), Popped::Stolen(7, 0));
+        assert_eq!(q.pop(2, false), Popped::Stolen(8, 0));
+        q.stop();
+        // exactly once: nothing left to rescue afterwards
+        assert_eq!(q.pop(1, false), Popped::Stop);
+        assert_eq!(q.pop(2, true), Popped::Stop);
+        assert!(q.dead_snapshot()[0]);
+    }
+
+    #[test]
+    fn parked_worker_wakes_on_push_and_counts_the_transition() {
+        let q: Arc<ShardQueues<u32>> = Arc::new(ShardQueues::new(2));
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || q2.pop(1, false));
+        // generous margin so the worker has parked even on a loaded CI host
+        std::thread::sleep(std::time::Duration::from_millis(200));
+        q.push(1, 42);
+        assert_eq!(h.join().unwrap(), Popped::Own(42));
+        assert!(q.wake_count(1) >= 1, "the park -> wake transition is counted");
+        assert_eq!(q.wake_count(0), 0);
+    }
+
+    #[test]
+    fn stop_wakes_parked_workers() {
+        let q: Arc<ShardQueues<u32>> = Arc::new(ShardQueues::new(1));
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || q2.pop(0, true));
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        q.stop();
+        assert_eq!(h.join().unwrap(), Popped::Stop);
+    }
+}
