@@ -17,25 +17,29 @@ test:
 bench:
 	cd rust && cargo bench
 
-# CI smoke lane: compile every bench target, then run the kernel and serving
-# benches with a short sampling budget. Emits BENCH_kernels.json
-# (fused-vs-reference latency, GFLOP/s, resident weight bytes) and
-# BENCH_serving.json (dispatch-policy sweep incl. work-steal counters) at
-# the repo root; CI uploads both as workflow artifacts.
+# CI smoke lane: compile every bench target, then run the kernel, serving
+# and decode benches with a short sampling budget. Emits BENCH_kernels.json
+# (fused-vs-reference latency, GFLOP/s, resident weight bytes),
+# BENCH_serving.json (dispatch-policy sweep incl. work-steal counters) and
+# BENCH_decode.json (KV-cache decode tokens/s + residency) at the repo
+# root; CI uploads all three as workflow artifacts.
 bench-smoke:
 	cd rust && cargo bench --no-run
 	cd rust && EWQ_BENCH_QUICK=1 EWQ_BENCH_OUT=../BENCH_kernels.json \
 		cargo bench --bench bench_runtime
 	cd rust && EWQ_BENCH_QUICK=1 EWQ_BENCH_OUT=../BENCH_serving.json \
 		cargo bench --bench bench_serving
+	cd rust && EWQ_BENCH_QUICK=1 EWQ_BENCH_OUT=../BENCH_decode.json \
+		cargo bench --bench bench_decode
 
-# Fail if bench-smoke's fused-GEMM GFLOP/s regressed >20% vs the committed
-# baseline (EWQ_BENCH_TOLERANCE to tune, EWQ_BENCH_COMPARE_MODE=warn to
-# downgrade — CI runs warn-only until a baseline measured on the CI runners
-# themselves is committed). Run `make bench-smoke` first.
+# Fail if bench-smoke's fused-GEMM GFLOP/s or decode tokens/s regressed
+# >20% vs the committed baseline (EWQ_BENCH_TOLERANCE to tune,
+# EWQ_BENCH_COMPARE_MODE=warn to downgrade — CI runs warn-only until a
+# baseline measured on the CI runners themselves is committed). Run
+# `make bench-smoke` first.
 bench-compare:
 	cd rust && cargo run --release --bin bench_compare -- \
-		../BENCH_kernels.json ../BENCH_baseline.json
+		../BENCH_kernels.json ../BENCH_decode.json ../BENCH_baseline.json
 
 # Build the AOT artifacts (flagship weights + HLO text). Requires the
 # python/JAX toolchain; the Rust crate runs offline without them.

@@ -1,0 +1,138 @@
+//! Bench: incremental decoding on the KV cache vs full-sequence recompute.
+//!
+//! The decode path's claim is architectural: generating token `t+1` should
+//! cost one token's worth of GEMVs plus an O(t) cache read, not a full
+//! (B, S) forward pass. This bench measures single-sequence decode
+//! throughput (tokens/s) through `ForwardPass::decode_step` for each KV
+//! precision (Raw / Q8 / Q4), the recompute baseline (a full fused forward
+//! per generated token, generously credited with all `eval_batch` rows),
+//! and the per-sequence KV residency of each codec.
+//!
+//! Runs fully offline on a synthetic model. Emits machine-readable
+//! `BENCH_decode.json` (override with `EWQ_BENCH_OUT`; `EWQ_BENCH_QUICK=1`
+//! shortens the sampling budget for the CI smoke lane). `bench_compare`
+//! tracks the `decode_tok_s_raw_kv` key against `BENCH_baseline.json`.
+
+use ewq::bench_util::{black_box, Bench};
+use ewq::ewq::QuantPlan;
+use ewq::model::{DecodeState, ForwardPass, QuantizedModel};
+use ewq::par::Pool;
+use ewq::quant::Precision;
+use ewq::serving::kvcache::{KvCache, KvGeometry};
+use ewq::zoo::gen::{synthetic_model_dir, Profile, SyntheticArch};
+use ewq::zoo::Schema;
+
+fn bench() -> Bench {
+    if std::env::var("EWQ_BENCH_QUICK").is_ok() {
+        Bench::quick()
+    } else {
+        Bench::default()
+    }
+}
+
+fn main() {
+    println!("== bench_decode: KV-cache incremental decoding vs recompute ==");
+    let model = synthetic_model_dir(&SyntheticArch {
+        schema: Schema {
+            name: "syn-decode".into(),
+            n_blocks: 6,
+            d_model: 96,
+            n_heads: 4,
+            d_ff: 384,
+            vocab: 512,
+            seq_len: 32,
+            eval_batch: 8,
+        },
+        profile: Profile::UShape,
+        seed: 7878,
+    });
+    let s = model.schema.clone();
+    let mut plan = QuantPlan::uniform(&s.name, s.n_blocks, Precision::Q8);
+    for b in (0..s.n_blocks).step_by(2) {
+        plan.assignments[b] = Precision::Q4;
+    }
+    let qm = QuantizedModel::build(&model, &plan).unwrap();
+    let geom = KvGeometry {
+        page_tokens: 16,
+        n_heads: s.n_heads,
+        head_dim: s.d_model / s.n_heads,
+    };
+    println!(
+        "model: {} ({} blocks, d={}, window {}) — plan {}",
+        s.name, s.n_blocks, s.d_model, s.seq_len, plan.summary()
+    );
+
+    // one iteration = generate a full window of seq_len tokens for one
+    // fresh sequence (context ingest is the same decode_step path)
+    let decode_window = |kv_prec: Precision| {
+        let mut fp = ForwardPass::new(&s, Pool::serial());
+        let mut cache = KvCache::new(geom, 1 << 28, kv_prec);
+        let mut logits = vec![0.0f32; s.vocab];
+        let mut seq = 0u64;
+        let name = format!("decode {} kv, {} tokens", kv_prec.label(), s.seq_len);
+        let sample = bench().run(&name, || {
+            let mut st = DecodeState::new(seq, s.n_blocks);
+            st.reserve(&mut cache, s.seq_len).unwrap();
+            let mut tok = 1i32;
+            for _ in 0..s.seq_len {
+                fp.decode_step_into(&qm, tok, &mut st, &mut cache, &mut logits).unwrap();
+                tok = black_box(ewq::model::sampler::argmax(&logits) as i32);
+            }
+            st.release(&mut cache);
+            seq += 1;
+        });
+        sample.throughput(s.seq_len as f64)
+    };
+    let tok_s_raw = decode_window(Precision::Raw);
+    let tok_s_q8 = decode_window(Precision::Q8);
+    let tok_s_q4 = decode_window(Precision::Q4);
+
+    // recompute baseline: one full fused forward per generated token; the
+    // batch dimension is credited in full (eval_batch sequences per pass),
+    // which is generous to the baseline — decode above is single-sequence
+    let mut fp = ForwardPass::new(&s, Pool::serial());
+    let toks: Vec<i32> = (0..s.eval_batch * s.seq_len)
+        .map(|i| (i % s.vocab) as i32)
+        .collect();
+    let recompute = bench().run("recompute: full forward per token", || {
+        black_box(fp.forward(&qm, &toks).unwrap());
+    });
+    let recompute_tok_s = recompute.throughput(s.eval_batch as f64);
+    let speedup = tok_s_raw / recompute_tok_s.max(1e-9);
+    println!(
+        "    => raw-kv decode {tok_s_raw:.1} tok/s vs recompute {recompute_tok_s:.1} tok/s \
+         ({speedup:.2}x per token)"
+    );
+
+    // KV residency per sequence (all blocks, full window)
+    let seq_bytes = |p: Precision| {
+        s.n_blocks * KvCache::new(geom, 1 << 28, p).sequence_bytes(s.seq_len)
+    };
+    let (kv_raw, kv_q8, kv_q4) = (
+        seq_bytes(Precision::Raw),
+        seq_bytes(Precision::Q8),
+        seq_bytes(Precision::Q4),
+    );
+    println!(
+        "    => kv bytes/sequence: raw {kv_raw}, q8 {kv_q8} ({:.2}x), q4 {kv_q4} ({:.2}x)",
+        kv_raw as f64 / kv_q8 as f64,
+        kv_raw as f64 / kv_q4 as f64
+    );
+
+    let out = std::env::var("EWQ_BENCH_OUT").unwrap_or_else(|_| "BENCH_decode.json".into());
+    let json = format!(
+        "{{\n  \"model\": \"{}\",\n  \"plan\": \"mixed-q4q8\",\n  \"decode_window\": {},\n  \
+         \"decode_tok_s_raw_kv\": {tok_s_raw:.3},\n  \"decode_tok_s_q8_kv\": {tok_s_q8:.3},\n  \
+         \"decode_tok_s_q4_kv\": {tok_s_q4:.3},\n  \"recompute_tok_s\": {recompute_tok_s:.3},\n  \
+         \"decode_speedup_vs_recompute\": {speedup:.3},\n  \"kv_bytes_per_seq_raw\": {kv_raw},\n  \
+         \"kv_bytes_per_seq_q8\": {kv_q8},\n  \"kv_bytes_per_seq_q4\": {kv_q4},\n  \
+         \"kv_q4_residency_vs_raw\": {:.4}\n}}\n",
+        s.name,
+        s.seq_len,
+        kv_q4 as f64 / kv_raw as f64,
+    );
+    match std::fs::write(&out, &json) {
+        Ok(()) => println!("wrote {out}"),
+        Err(e) => eprintln!("could not write {out}: {e}"),
+    }
+}

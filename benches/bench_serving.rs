@@ -131,6 +131,7 @@ fn write_json(
     model: &str,
     requests: usize,
     sweep: &[(DispatchPolicy, ServingMetrics)],
+    skipped_sweeps: &[&str],
 ) {
     let mut body = String::new();
     for (i, (policy, m)) in sweep.iter().enumerate() {
@@ -139,9 +140,12 @@ fn write_json(
         }
         body.push_str(&format!("    \"{}\": {}", policy.label(), policy_json(m)));
     }
+    let skipped: Vec<String> = skipped_sweeps.iter().map(|s| format!("\"{s}\"")).collect();
     let json = format!(
         "{{\n  \"model\": \"{model}\",\n  \"workload\": \"skewed-cost\",\n  \
-         \"requests\": {requests},\n  \"workers\": 2,\n  \"policies\": {{\n{body}\n  }}\n}}\n"
+         \"requests\": {requests},\n  \"workers\": 2,\n  \
+         \"skipped_sweeps\": [{}],\n  \"policies\": {{\n{body}\n  }}\n}}\n",
+        skipped.join(", ")
     );
     match std::fs::write(path, &json) {
         Ok(()) => println!("wrote {path}"),
@@ -168,6 +172,7 @@ fn main() {
         );
     }
 
+    let mut skipped_sweeps: Vec<&str> = Vec::new();
     if !quick {
         println!("batch-size sweep (uniform 8-bit, 1 worker):");
         for mb in [1, 2, 4, 8] {
@@ -179,6 +184,11 @@ fn main() {
             println!(" {}:", p.label());
             run_trace(&model, QuantPlan::uniform("m", n, p), 8, 1, requests);
         }
+    } else {
+        // quick mode trims coverage — say so explicitly (and record it in
+        // the JSON) so a truncated run can't masquerade as a full one
+        skipped_sweeps.extend(["batch-size", "precision"]);
+        println!("EWQ_BENCH_QUICK: SKIPPED sweeps: {}", skipped_sweeps.join(", "));
     }
 
     println!("dispatch-policy sweep (skewed batch costs, 2 workers, max_batch=1):");
@@ -216,5 +226,5 @@ fn main() {
     );
 
     let out = std::env::var("EWQ_BENCH_OUT").unwrap_or_else(|_| "BENCH_serving.json".into());
-    write_json(&out, &model.schema.name, requests, &sweep);
+    write_json(&out, &model.schema.name, requests, &sweep, &skipped_sweeps);
 }

@@ -1,11 +1,12 @@
 //! `bench_compare` — CI regression gate over the bench-smoke artifacts.
 //!
-//! Compares the fused-GEMM GFLOP/s figures in a freshly generated
-//! `BENCH_kernels.json` against a committed `BENCH_baseline.json` and fails
-//! (exit 1) when any tracked metric regresses by more than the tolerance.
+//! Compares the fused-GEMM GFLOP/s and KV-decode tokens/s figures in the
+//! freshly generated bench JSONs against a committed `BENCH_baseline.json`
+//! and fails (exit 1) when any tracked metric regresses by more than the
+//! tolerance.
 //!
 //! ```text
-//! bench_compare <current.json> <baseline.json>
+//! bench_compare <current.json>... <baseline.json>
 //!   EWQ_BENCH_TOLERANCE     allowed fractional drop (default 0.20 = 20%)
 //!   EWQ_BENCH_COMPARE_MODE  "enforce" (default) exits 1 on regression;
 //!                           "warn" reports but always exits 0 — the
@@ -13,14 +14,19 @@
 //!                           the CI hardware itself is committed
 //! ```
 //!
-//! A missing baseline is not an error (first run: nothing to compare
-//! against yet); a missing current file is — bench-smoke should have
-//! produced it. The parser is a deliberate 20-line scanner: both files are
-//! emitted by our own benches as flat `"key": number` JSON, and the crate
-//! builds fully offline, so no JSON dependency is warranted.
+//! Several current files may be given (bench-smoke emits one JSON per
+//! bench target); tracked keys are looked up across all of them. A missing
+//! baseline is not an error (first run: nothing to compare against yet); a
+//! missing current file is — bench-smoke should have produced it. Keys
+//! skipped because the baseline predates them are **listed explicitly in
+//! the final verdict line**, so a truncated bench run can never masquerade
+//! as a clean comparison. The parser is a deliberate 20-line scanner: the
+//! files are emitted by our own benches as flat `"key": number` JSON, and
+//! the crate builds fully offline, so no JSON dependency is warranted.
 
 /// Tracked metrics: higher is better for all of them.
-const KEYS: [&str; 2] = ["gflops_fused_serial", "gflops_fused_pooled"];
+const KEYS: [&str; 3] =
+    ["gflops_fused_serial", "gflops_fused_pooled", "decode_tok_s_raw_kv"];
 
 /// Extract the number following `"key":` in a flat JSON document.
 fn extract_number(json: &str, key: &str) -> Option<f64> {
@@ -41,10 +47,10 @@ fn regressed(current: f64, baseline: f64, tol: f64) -> bool {
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
-    let (current_path, baseline_path) = match args.as_slice() {
-        [c, b] => (c.clone(), b.clone()),
+    let (current_paths, baseline_path) = match args.as_slice() {
+        [currents @ .., b] if !currents.is_empty() => (currents.to_vec(), b.clone()),
         _ => {
-            eprintln!("usage: bench_compare <current.json> <baseline.json>");
+            eprintln!("usage: bench_compare <current.json>... <baseline.json>");
             std::process::exit(2);
         }
     };
@@ -57,13 +63,18 @@ fn main() {
         Ok("warn")
     );
 
-    let current = match std::fs::read_to_string(&current_path) {
-        Ok(c) => c,
-        Err(e) => {
-            eprintln!("bench_compare: cannot read current results {current_path}: {e}");
-            std::process::exit(1);
+    // tracked keys are looked up across the concatenation of every current
+    // file (one JSON per bench target, all flat and disjoint)
+    let mut current = String::new();
+    for p in &current_paths {
+        match std::fs::read_to_string(p) {
+            Ok(c) => current.push_str(&c),
+            Err(e) => {
+                eprintln!("bench_compare: cannot read current results {p}: {e}");
+                std::process::exit(1);
+            }
         }
-    };
+    }
     let baseline = match std::fs::read_to_string(&baseline_path) {
         Ok(b) => b,
         Err(_) => {
@@ -76,6 +87,7 @@ fn main() {
     };
 
     let mut regressions = 0usize;
+    let mut skipped: Vec<&str> = Vec::new();
     for key in KEYS {
         let cur = match extract_number(&current, key) {
             Some(c) => c,
@@ -83,14 +95,20 @@ fn main() {
                 // a tracked metric vanishing from the bench output is itself
                 // a gate failure — otherwise schema drift disarms the gate
                 // silently and forever
-                eprintln!("bench_compare: {key}: MISSING from current results {current_path}");
+                eprintln!(
+                    "bench_compare: {key}: MISSING from current results ({})",
+                    current_paths.join(", ")
+                );
                 regressions += 1;
                 continue;
             }
         };
         let Some(base) = extract_number(&baseline, key) else {
-            // baseline may predate a newly tracked key: report, don't fail
-            println!("bench_compare: {key}: not in baseline yet, skipped");
+            // baseline may predate a newly tracked key: skip the
+            // comparison, but carry the skip into the final verdict line —
+            // a truncated or partial run must stay visible
+            println!("bench_compare: {key}: SKIPPED (not in baseline yet)");
+            skipped.push(key);
             continue;
         };
         let ratio = if base > 0.0 { cur / base } else { f64::INFINITY };
@@ -107,21 +125,26 @@ fn main() {
         );
     }
 
+    let skip_note = if skipped.is_empty() {
+        String::new()
+    } else {
+        format!(" — {} key(s) skipped, NOT compared: [{}]", skipped.len(), skipped.join(", "))
+    };
     if regressions > 0 {
         let pct = tol * 100.0;
         if enforce {
             eprintln!(
                 "bench_compare: {regressions} metric(s) regressed more than {pct:.0}% or went \
-                 missing — failing (set EWQ_BENCH_COMPARE_MODE=warn to downgrade)"
+                 missing{skip_note} — failing (set EWQ_BENCH_COMPARE_MODE=warn to downgrade)"
             );
             std::process::exit(1);
         }
         println!(
             "bench_compare: {regressions} metric(s) regressed more than {pct:.0}% or went \
-             missing — warn-only mode, not failing"
+             missing{skip_note} — warn-only mode, not failing"
         );
     } else {
-        println!("bench_compare: within {:.0}% of baseline", tol * 100.0);
+        println!("bench_compare: within {:.0}% of baseline{skip_note}", tol * 100.0);
     }
 }
 

@@ -174,6 +174,19 @@ pub struct ServeConfig {
     /// bands / attention rows). 1 = serial forward; raise on hosts with
     /// spare cores per shard. Responses are identical either way.
     pub forward_workers: usize,
+    /// Tokens to generate per request in the demo drivers (`ewq serve
+    /// --decode-tokens`, examples): 0/1 = classic single next-token
+    /// requests, N > 1 = streaming generation through the per-shard KV
+    /// cache (`Coordinator::submit_gen`).
+    pub decode_tokens: usize,
+    /// Precision of the per-shard KV cache pages (`Raw`, `Q8` or `Q4` —
+    /// the codecs `serving::kvcache` implements). Raw decode is
+    /// bit-identical to full-sequence recompute; Q8/Q4 trade bounded
+    /// attention noise for cache bytes.
+    pub kv_precision: crate::quant::Precision,
+    /// Per-shard KV cache budget in MB; a generation that would exceed it
+    /// is failed cleanly with `INVALID_TOKEN` semantics.
+    pub kv_budget_mb: f64,
 }
 
 impl Default for ServeConfig {
@@ -188,6 +201,9 @@ impl Default for ServeConfig {
             workers: 1,
             dispatch: DispatchPolicy::default(),
             forward_workers: 1,
+            decode_tokens: 0,
+            kv_precision: crate::quant::Precision::Raw,
+            kv_budget_mb: 64.0,
         }
     }
 }
@@ -205,6 +221,9 @@ impl ServeConfig {
             workers: c.get_or("serve", "workers", d.workers)?,
             dispatch: c.get_or("serve", "dispatch", d.dispatch)?,
             forward_workers: c.get_or("serve", "forward_workers", d.forward_workers)?,
+            decode_tokens: c.get_or("serve", "decode_tokens", d.decode_tokens)?,
+            kv_precision: c.get_or("serve", "kv_precision", d.kv_precision)?,
+            kv_budget_mb: c.get_or("serve", "kv_budget_mb", d.kv_budget_mb)?,
         })
     }
 }
@@ -308,6 +327,29 @@ mod tests {
         assert!(!DispatchPolicy::ShortestQueue.steals());
         assert!(!DispatchPolicy::RoundRobin.steals());
         let bad = Config::parse("[serve]\ndispatch = nope\n").unwrap();
+        assert!(ServeConfig::from_config(&bad).is_err());
+    }
+
+    #[test]
+    fn kv_and_decode_serve_options_parse() {
+        use crate::quant::Precision;
+        let c = Config::parse(
+            "[serve]\ndecode_tokens = 6\nkv_precision = 4bit\nkv_budget_mb = 8.5\n",
+        )
+        .unwrap();
+        let s = ServeConfig::from_config(&c).unwrap();
+        assert_eq!(s.decode_tokens, 6);
+        assert_eq!(s.kv_precision, Precision::Q4);
+        assert!((s.kv_budget_mb - 8.5).abs() < 1e-12);
+        let d = ServeConfig::default();
+        assert_eq!(d.decode_tokens, 0, "classic next-token serving by default");
+        assert_eq!(d.kv_precision, Precision::Raw);
+        assert!(d.kv_budget_mb > 0.0);
+        assert_eq!("q8".parse::<Precision>().unwrap(), Precision::Q8);
+        assert_eq!("raw".parse::<Precision>().unwrap(), Precision::Raw);
+        assert_eq!("1.58bit".parse::<Precision>().unwrap(), Precision::T2);
+        assert!("5bit".parse::<Precision>().is_err());
+        let bad = Config::parse("[serve]\nkv_precision = 5bit\n").unwrap();
         assert!(ServeConfig::from_config(&bad).is_err());
     }
 

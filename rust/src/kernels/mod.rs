@@ -155,6 +155,93 @@ pub fn matmul_qmat(a: &[f32], w: &QMat, m: usize, pool: &Pool, tiles: &TilePool,
     });
 }
 
+/// Column band width for the GEMV kernels: the whole row serial, about two
+/// bands per worker pooled, rounded up to whole `TILE_N` tiles so no dequant
+/// tile is ever split across bands. Any band size yields identical bits —
+/// every output element is produced whole inside one band, accumulating `k`
+/// in ascending order.
+fn band_cols(n: usize, pool: &Pool) -> usize {
+    if pool.workers() <= 1 {
+        return n.max(1);
+    }
+    n.div_ceil(pool.workers() * 2).div_ceil(TILE_N).max(1) * TILE_N
+}
+
+/// `out = a @ b` for a single activation row (`a` is length `k`, `b` is
+/// `(k,n)` row-major, `out` length `n`) — the f32 decode GEMV. Column-banded
+/// over `pool`; every output element accumulates `k` in ascending order, so
+/// the result is **bit-identical** to `matmul_f32` on a 1-row input for any
+/// worker count. Steady-state calls do zero heap allocation.
+pub fn matvec_f32(a: &[f32], b: &[f32], k: usize, n: usize, pool: &Pool, out: &mut [f32]) {
+    debug_assert_eq!(a.len(), k);
+    debug_assert_eq!(b.len(), k * n);
+    assert_eq!(out.len(), n);
+    if n == 0 {
+        return;
+    }
+    let band = band_cols(n, pool);
+    pool.par_bands_mut(out, band, |_w, bi, chunk| {
+        let c0 = bi * band;
+        let cw = chunk.len();
+        chunk.fill(0.0);
+        for (kk, &av) in a.iter().enumerate() {
+            let brow = &b[kk * n + c0..kk * n + c0 + cw];
+            for j in 0..cw {
+                chunk[j] += av * brow[j];
+            }
+        }
+    });
+}
+
+/// `out = a @ w` for a single activation row against a packed `QMat`
+/// (`(k,n)` = `(w.rows, w.cols)`) — the fused decode GEMV: group-wise
+/// dequantization into the same per-worker `TILE_K × TILE_N` scratch tiles
+/// as `matmul_qmat`, multiplied in place. Column bands fan out on `pool`;
+/// `k` accumulates in ascending order per output element, so the result is
+/// **bit-identical** to `matmul_qmat` on a 1-row input (and hence to the
+/// dequantize-then-matmul reference) for every precision and worker count.
+/// `Payload::Raw` dispatches to `matvec_f32`.
+pub fn matvec_qmat(a: &[f32], w: &QMat, pool: &Pool, tiles: &TilePool, out: &mut [f32]) {
+    let (k, n) = (w.rows, w.cols);
+    debug_assert_eq!(a.len(), k);
+    assert_eq!(out.len(), n);
+    if let Payload::Raw(d) = &w.payload {
+        return matvec_f32(a, d, k, n, pool, out);
+    }
+    if n == 0 {
+        return;
+    }
+    assert!(
+        tiles.workers() >= pool.workers(),
+        "TilePool sized for {} workers, pool has {}",
+        tiles.workers(),
+        pool.workers()
+    );
+    let band = band_cols(n, pool);
+    pool.par_bands_mut(out, band, |wkr, bi, chunk| {
+        let mut tile = tiles.bufs[wkr].lock().unwrap();
+        let tile = tile.as_mut_slice();
+        let c0 = bi * band;
+        let cw = chunk.len();
+        chunk.fill(0.0);
+        for k0 in (0..k).step_by(TILE_K) {
+            let kh = TILE_K.min(k - k0);
+            for n0 in (0..cw).step_by(TILE_N) {
+                let nw = TILE_N.min(cw - n0);
+                dequantize_tile(w, k0..k0 + kh, c0 + n0..c0 + n0 + nw, &mut tile[..kh * nw]);
+                let ochunk = &mut chunk[n0..n0 + nw];
+                for kk in 0..kh {
+                    let av = a[k0 + kk];
+                    let trow = &tile[kk * nw..(kk + 1) * nw];
+                    for j in 0..nw {
+                        ochunk[j] += av * trow[j];
+                    }
+                }
+            }
+        }
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -301,6 +388,98 @@ mod tests {
         matmul_qmat(&a, &w, m, &pool, &tiles, &mut fused);
         let expect = reference(&a, &dequantize(&w).data, m, k, n);
         assert_bits_eq(&fused, &expect, "raw");
+    }
+
+    #[test]
+    fn matvec_f32_bit_identical_to_matmul_on_one_row() {
+        // odd widths on purpose: partial column bands and tiles
+        for &(k, n) in &[(1usize, 1usize), (7, 5), (33, 19), (96, 131), (40, 257)] {
+            let a = rand_vec(k, 300 + k as u64, 0.7);
+            let b = rand_vec(k * n, 400 + n as u64, 0.7);
+            let mut expect = vec![f32::NAN; n];
+            matmul_f32(&a, &b, 1, k, n, &Pool::serial(), &mut expect);
+            for workers in [1usize, 2, 7, crate::config::ParallelConfig::test_workers(3)] {
+                let mut out = vec![f32::NAN; n];
+                matvec_f32(&a, &b, k, n, &Pool::new(workers), &mut out);
+                assert_bits_eq(&out, &expect, &format!("matvec f32 {k}x{n} w={workers}"));
+            }
+        }
+    }
+
+    #[test]
+    fn matvec_qmat_bit_identical_to_matmul_on_one_row_every_precision() {
+        // Property: for every format (incl. Raw dispatch), group-aligned k,
+        // odd n, and 1/2/7 pool workers, the fused GEMV equals matmul_qmat
+        // on a 1-row input bit-for-bit — the decode path's kernel contract.
+        check(
+            0xDEC0,
+            24,
+            8,
+            |g| {
+                let k = 8 * (2 * g.usize_in(0, 7) + 1); // 8 * odd: group-aligned
+                let n = 2 * g.usize_in(0, 80) + 1; // odd 1..161
+                let prec = [
+                    Precision::Raw,
+                    Precision::Q8,
+                    Precision::Q4,
+                    Precision::Q3,
+                    Precision::T2,
+                ][g.usize_in(0, 5)];
+                let seed = g.rng.next_u64();
+                (k, n, prec, seed)
+            },
+            |&(k, n, prec, seed)| {
+                let a = rand_vec(k, seed, 0.8);
+                let w = quantize(&Tensor::new(vec![k, n], rand_vec(k * n, seed ^ 1, 0.5)), prec);
+                let serial_pool = Pool::serial();
+                let serial_tiles = TilePool::new(&serial_pool);
+                let mut expect = vec![f32::NAN; n];
+                matmul_qmat(&a, &w, 1, &serial_pool, &serial_tiles, &mut expect);
+                for workers in [1usize, 2, 7] {
+                    let pool = Pool::new(workers);
+                    let tiles = TilePool::new(&pool);
+                    let mut out = vec![f32::NAN; n];
+                    matvec_qmat(&a, &w, &pool, &tiles, &mut out);
+                    for (i, (f, r)) in out.iter().zip(&expect).enumerate() {
+                        if f.to_bits() != r.to_bits() {
+                            return Err(format!(
+                                "{} {k}x{n} w={workers} elem {i}: gemv {f} vs gemm {r}",
+                                prec.label()
+                            ));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn matvec_reuses_parked_workers_and_tiles() {
+        // the decode hot path: many GEMV scopes against one pool must spawn
+        // helpers exactly once and never allocate tile buffers
+        let (k, n) = (32usize, 97usize);
+        let a = rand_vec(k, 51, 0.8);
+        let w = quantize(&Tensor::new(vec![k, n], rand_vec(k * n, 52, 0.5)), Precision::Q4);
+        let pool = Pool::new(3);
+        let tiles = TilePool::new(&pool);
+        let mut out = vec![0.0f32; n];
+        for _ in 0..10 {
+            matvec_qmat(&a, &w, &pool, &tiles, &mut out);
+        }
+        assert_eq!(pool.spawn_events(), 2, "workers - 1 spawns across 10 GEMV calls");
+    }
+
+    #[test]
+    fn band_cols_covers_all_columns_in_whole_tiles() {
+        assert_eq!(band_cols(100, &Pool::serial()), 100);
+        for n in [1usize, 63, 64, 65, 257] {
+            for workers in [2usize, 3, 7] {
+                let b = band_cols(n, &Pool::new(workers));
+                assert!(b >= 1);
+                assert_eq!(b % TILE_N, 0, "pooled bands align to whole tiles");
+            }
+        }
     }
 
     #[test]

@@ -7,7 +7,8 @@
 //! ewq dataset [--rows N --workers N]     (re)build the FastEWQ dataset
 //! ewq train-classifier [--out PATH --workers N]  train + save the forest
 //! ewq serve --model <name> [--requests N --batch B --variant V --workers W
-//!                            --dispatch work_steal|shortest_queue|round_robin]
+//!                            --dispatch work_steal|shortest_queue|round_robin
+//!                            --decode-tokens N --kv-precision raw|8bit|4bit]
 //! ```
 
 use anyhow::{bail, Context, Result};
@@ -185,6 +186,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let batch = args.opt("batch", 8usize)?;
     let workers = args.opt("workers", 1usize)?;
     let dispatch: ewq::config::DispatchPolicy = args.opt("dispatch", Default::default())?;
+    let decode_tokens = args.opt("decode-tokens", 0usize)?;
+    let kv_precision: ewq::quant::Precision =
+        args.opt("kv-precision", ewq::quant::Precision::Raw)?;
     let n = model.schema.n_blocks;
     let plan = match variant.as_str() {
         "raw" => ewq::ewq::QuantPlan::uniform(&model.schema.name, n, ewq::quant::Precision::Raw),
@@ -203,17 +207,45 @@ fn cmd_serve(args: &Args) -> Result<()> {
         dispatch.label(),
         plan.summary()
     );
+    if decode_tokens > 1 {
+        println!(
+            "generation mode: {decode_tokens} tokens/request, {} kv cache",
+            kv_precision.label()
+        );
+    }
 
-    let cfg = ServeConfig { max_batch: batch, workers, dispatch, ..Default::default() };
+    let vocab = model.schema.vocab as i32;
+    let cfg = ServeConfig {
+        max_batch: batch,
+        workers,
+        dispatch,
+        decode_tokens,
+        kv_precision,
+        ..Default::default()
+    };
     let coord = Coordinator::start_with_model(model, plan, cfg, 1, 200)?;
     let mut rxs = Vec::new();
     for i in 0..requests {
-        rxs.push(coord.submit(vec![1, 160 + (i as i32 % 16), 100 + (i as i32 % 57), 2]));
+        let ctx = vec![
+            1 % vocab,
+            (160 + (i as i32 % 16)) % vocab,
+            (100 + (i as i32 % 57)) % vocab,
+            2 % vocab,
+        ];
+        rxs.push(if decode_tokens > 1 {
+            coord.submit_gen(ctx, decode_tokens)
+        } else {
+            coord.submit(ctx)
+        });
     }
+    let mut tokens_streamed = 0usize;
     for rx in rxs {
-        let _ = rx.recv();
+        tokens_streamed += rx.iter().count();
     }
     let m = coord.shutdown();
+    if decode_tokens > 1 {
+        println!("streamed {tokens_streamed} tokens across {requests} generation requests");
+    }
     println!("{}", m.summary());
     Ok(())
 }

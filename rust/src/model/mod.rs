@@ -25,7 +25,7 @@
 pub mod refexec;
 pub mod sampler;
 
-pub use refexec::ForwardPass;
+pub use refexec::{DecodeState, ForwardPass};
 
 use anyhow::Result;
 
@@ -349,6 +349,22 @@ impl<'rt> ModelExecutor<'rt> {
         let head = self.rt.load(&self.artifact("head"))?;
         let out = self.rt.run_refs(&head, &[&h, &qm.head_args[0], &qm.head_args[1]])?;
         to_vec_f32(&out)
+    }
+
+    /// One incremental decode step against the sequence's cached K/V — see
+    /// `refexec::ForwardPass::decode_step_into`. Decode always runs on the
+    /// native fused path: there are no PJRT decode artifacts, and the
+    /// native pass is bit-identical to the full-sequence forward at Raw KV
+    /// precision, so generation semantics are backend-independent.
+    pub fn decode_step_into(
+        &self,
+        qm: &QuantizedModel,
+        token: i32,
+        st: &mut refexec::DecodeState,
+        cache: &mut crate::serving::kvcache::KvCache,
+        logits: &mut [f32],
+    ) -> Result<()> {
+        self.native.borrow_mut().decode_step_into(qm, token, st, cache, logits)
     }
 
     /// Greedy next-token prediction at `pos` for each row of the batch.

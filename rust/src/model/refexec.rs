@@ -26,10 +26,11 @@ use std::sync::Mutex;
 
 use anyhow::{ensure, Result};
 
-use crate::kernels::{matmul_f32, matmul_qmat, TilePool};
+use crate::kernels::{matmul_f32, matmul_qmat, matvec_f32, matvec_qmat, TilePool};
 use crate::model::QuantizedModel;
 use crate::par::Pool;
 use crate::quant::{dequantize, QMat};
+use crate::serving::kvcache::KvCache;
 use crate::tensor::Tensor;
 use crate::zoo::Schema;
 
@@ -64,6 +65,10 @@ pub struct Scratch {
     proj: Vec<f32>,
     /// (B*S, d_ff) MLP hidden
     h1: Vec<f32>,
+    /// one decode token's K and V (2*d floats: K then V) en route to the cache
+    kv_tok: Vec<f32>,
+    /// decode attention history readback: seq_len tokens of 2*d floats
+    kv_hist: Vec<f32>,
     /// per-worker kernel dequant tiles
     tiles: TilePool,
     /// per-worker attention score rows (seq_len each)
@@ -88,6 +93,8 @@ impl Scratch {
             attn: vec![0.0; rows * d],
             proj: vec![0.0; rows * d],
             h1: vec![0.0; rows * ff],
+            kv_tok: vec![0.0; 2 * d],
+            kv_hist: vec![0.0; sl * 2 * d],
             tiles: TilePool::new(pool),
             scores: (0..pool.workers()).map(|_| Mutex::new(vec![0.0; sl])).collect(),
             grow_events: 0,
@@ -179,6 +186,187 @@ impl ForwardPass {
         let mut logits = vec![0.0f32; rows * vocab];
         matmul_f32(xn, &qm.head.data, rows, d, vocab, &self.pool, &mut logits);
         Ok(logits)
+    }
+
+    /// One incremental decode step: run `token` (at position `st.pos()`)
+    /// through every block against the K/V history cached for `st`'s
+    /// sequence, append the new K/V (through the cache's precision codec),
+    /// and write the next-token logits into `logits` (`vocab` floats).
+    ///
+    /// With a `Raw`-precision cache this is **bit-identical** to the
+    /// full-sequence `forward` at the same position: the GEMV kernels
+    /// accumulate `k` in ascending order like the GEMM row they replace,
+    /// `decode_attention` is the arithmetic-order twin of `attention_into`'s
+    /// last row, and the Raw codec round-trips f32 bits exactly. Quantized
+    /// KV (Q8/Q4) trades bounded attention noise for cache bytes — the
+    /// decode equivalence suite states and asserts the tolerance.
+    ///
+    /// Steady state does **zero** heap allocation: every intermediate lives
+    /// in the scratch arena, the cache history is read back via
+    /// `KvCache::read_into`, and appends fill pages `DecodeState::reserve`d
+    /// up front. Zero thread spawns, too — the GEMVs reuse the parked pool.
+    pub fn decode_step_into(
+        &mut self,
+        qm: &QuantizedModel,
+        token: i32,
+        st: &mut DecodeState,
+        cache: &mut KvCache,
+        logits: &mut [f32],
+    ) -> Result<()> {
+        let s = &qm.schema;
+        let (d, sl, vocab) = (s.d_model, s.seq_len, s.vocab);
+        ensure!(logits.len() == vocab, "logits buffer must hold {vocab} floats");
+        ensure!(token >= 0 && (token as usize) < vocab, "token {token} outside vocab {vocab}");
+        ensure!(
+            st.n_blocks == qm.blocks.len(),
+            "decode state built for {} blocks, model has {}",
+            st.n_blocks,
+            qm.blocks.len()
+        );
+        ensure!(st.pos < sl, "decode position {} beyond the {sl}-token context window", st.pos);
+        let g = cache.geometry();
+        ensure!(
+            g.n_heads == s.n_heads && g.n_heads * g.head_dim == d,
+            "kv geometry ({} heads x {}) does not match schema ({} heads, d_model {d})",
+            g.n_heads,
+            g.head_dim,
+            s.n_heads,
+        );
+        self.scratch.ensure(s, &self.pool);
+        let t = st.pos;
+        let Scratch { x, xn, q, attn, proj, h1, kv_tok, kv_hist, tiles, scores, .. } =
+            &mut self.scratch;
+        let x = &mut x[..d];
+        let xn = &mut xn[..d];
+        let q = &mut q[..d];
+        let attn = &mut attn[..d];
+        let proj = &mut proj[..d];
+
+        // embed + positional for the one new token
+        let e = &qm.embed.data[token as usize * d..(token as usize + 1) * d];
+        let p = &qm.pos.data[t * d..(t + 1) * d];
+        for j in 0..d {
+            x[j] = e[j] + p[j];
+        }
+
+        for (bi, blk) in qm.blocks.iter().enumerate() {
+            let key = st.key(bi);
+            let ff = blk.qmats[4].cols;
+            rms_into(x, &blk.g1.data, xn);
+            matvec_qmat(xn, &blk.qmats[0], &self.pool, tiles, q);
+            {
+                let (ktok, vtok) = kv_tok.split_at_mut(d);
+                matvec_qmat(xn, &blk.qmats[1], &self.pool, tiles, ktok);
+                matvec_qmat(xn, &blk.qmats[2], &self.pool, tiles, vtok);
+            }
+            // the new token's K/V go through the cache codec like the rest
+            // of the history: quantized-KV noise applies uniformly
+            cache.append(key, kv_tok)?;
+            let hist = &mut kv_hist[..(t + 1) * 2 * d];
+            for (u, slot) in hist.chunks_mut(2 * d).enumerate() {
+                cache.read_into(key, u, slot)?;
+            }
+            {
+                let mut sc = scores[0].lock().unwrap();
+                decode_attention(q, hist, t + 1, s.n_heads, &mut sc[..t + 1], attn);
+            }
+            matvec_qmat(attn, &blk.qmats[3], &self.pool, tiles, proj);
+            for j in 0..d {
+                x[j] += proj[j];
+            }
+            rms_into(x, &blk.g2.data, xn);
+            let h1 = &mut h1[..ff];
+            matvec_qmat(xn, &blk.qmats[4], &self.pool, tiles, h1);
+            for h in h1.iter_mut() {
+                *h = gelu(*h);
+            }
+            matvec_qmat(h1, &blk.qmats[5], &self.pool, tiles, proj);
+            for j in 0..d {
+                x[j] += proj[j];
+            }
+        }
+
+        rms_into(x, &qm.gf.data, xn);
+        matvec_f32(xn, &qm.head.data, d, vocab, &self.pool, logits);
+        st.pos += 1;
+        Ok(())
+    }
+
+    /// Allocating convenience wrapper over `decode_step_into` (tests,
+    /// benches, CLI). The serving hot loop holds a logits buffer and calls
+    /// `decode_step_into` directly.
+    pub fn decode_step(
+        &mut self,
+        qm: &QuantizedModel,
+        token: i32,
+        st: &mut DecodeState,
+        cache: &mut KvCache,
+    ) -> Result<Vec<f32>> {
+        let mut logits = vec![0.0f32; qm.schema.vocab];
+        self.decode_step_into(qm, token, st, cache, &mut logits)?;
+        Ok(logits)
+    }
+}
+
+/// Per-sequence incremental decode cursor: which KV-cache sequence this
+/// generation appends to and how many positions have been decoded so far.
+/// The KV pages themselves live in the owning shard's `serving::KvCache`
+/// (each block gets its own K/V stream under a derived key; sequences are
+/// pinned to their shard's cache), and the arithmetic scratch is the
+/// `ForwardPass`'s arena — shared across all of a shard's sequences.
+#[derive(Clone, Debug)]
+pub struct DecodeState {
+    seq: u64,
+    n_blocks: usize,
+    pos: usize,
+}
+
+impl DecodeState {
+    /// Start a fresh sequence `seq` for a model with `n_blocks` blocks.
+    /// `seq` ids above `u64::MAX / n_blocks` are rejected by key derivation
+    /// in debug builds; serving request ids are nowhere near that.
+    pub fn new(seq: u64, n_blocks: usize) -> Self {
+        Self { seq, n_blocks, pos: 0 }
+    }
+
+    pub fn seq(&self) -> u64 {
+        self.seq
+    }
+
+    /// Positions decoded so far (== the next position to fill).
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+
+    /// Cache key of this sequence's K/V stream for block `blk`.
+    fn key(&self, blk: usize) -> u64 {
+        debug_assert!(blk < self.n_blocks);
+        self.seq * self.n_blocks as u64 + blk as u64
+    }
+
+    /// Pre-allocate this sequence's KV pages for `tokens` positions across
+    /// every block, so steady-state `decode_step` appends never touch the
+    /// allocator. On failure some blocks may have been reserved — call
+    /// `release` before abandoning the sequence.
+    pub fn reserve(&self, cache: &mut KvCache, tokens: usize) -> Result<()> {
+        for blk in 0..self.n_blocks {
+            cache.reserve(self.key(blk), tokens)?;
+        }
+        Ok(())
+    }
+
+    /// Free every block's KV pages for this sequence.
+    pub fn release(&self, cache: &mut KvCache) {
+        for blk in 0..self.n_blocks {
+            cache.release(self.key(blk));
+        }
+    }
+
+    /// KV bytes this sequence currently pins in `cache` (all blocks).
+    pub fn kv_bytes(&self, cache: &KvCache) -> usize {
+        (0..self.n_blocks)
+            .map(|blk| cache.sequence_bytes(cache.sequence_tokens(self.key(blk))))
+            .sum()
     }
 }
 
@@ -289,6 +477,58 @@ fn attention_into(
             }
         }
     });
+}
+
+/// Causal attention for one decode position over the cached K/V history.
+/// `hist` holds `len` tokens of `2*d` floats each (K then V, as stored by
+/// `decode_step_into`); `q` is the new position's query row. This is the
+/// arithmetic-order twin of `attention_into` restricted to its last row —
+/// same dot order, same max-subtracted softmax, same ascending-`u` output
+/// accumulation — which is what makes Raw-KV decode bit-identical to the
+/// full-sequence pass.
+fn decode_attention(
+    q: &[f32],
+    hist: &[f32],
+    len: usize,
+    n_heads: usize,
+    sc: &mut [f32],
+    out: &mut [f32],
+) {
+    let d = q.len();
+    let hd = d / n_heads;
+    let scale = 1.0 / (hd as f32).sqrt();
+    debug_assert_eq!(hist.len(), len * 2 * d);
+    debug_assert!(sc.len() >= len);
+    out.fill(0.0);
+    for h in 0..n_heads {
+        let off = h * hd;
+        let qrow = &q[off..off + hd];
+        let mut m = f32::NEG_INFINITY;
+        for u in 0..len {
+            let krow = &hist[u * 2 * d + off..u * 2 * d + off + hd];
+            let mut dot = 0.0f32;
+            for j in 0..hd {
+                dot += qrow[j] * krow[j];
+            }
+            sc[u] = dot * scale;
+            if sc[u] > m {
+                m = sc[u];
+            }
+        }
+        let mut z = 0.0f32;
+        for u in 0..len {
+            sc[u] = (sc[u] - m).exp();
+            z += sc[u];
+        }
+        let orow = &mut out[off..off + hd];
+        for u in 0..len {
+            let w = sc[u] / z;
+            let vrow = &hist[u * 2 * d + d + off..u * 2 * d + d + off + hd];
+            for j in 0..hd {
+                orow[j] += w * vrow[j];
+            }
+        }
+    }
 }
 
 /// Full-sequence forward, matching `ModelExecutor::forward`: a one-shot
@@ -536,8 +776,13 @@ mod tests {
     use crate::model::{ModelExecutor, QuantizedModel};
     use crate::quant::Precision;
     use crate::runtime::Runtime;
+    use crate::serving::kvcache::KvGeometry;
     use crate::zoo::gen::{synthetic_model_dir, Profile, SyntheticArch};
     use crate::zoo::{ModelDir, Schema};
+
+    fn kv_geom(s: &Schema) -> KvGeometry {
+        KvGeometry { page_tokens: 4, n_heads: s.n_heads, head_dim: s.d_model / s.n_heads }
+    }
 
     fn tiny_model() -> ModelDir {
         synthetic_model_dir(&SyntheticArch {
@@ -725,6 +970,201 @@ mod tests {
             delta <= 2,
             "steady-state forward allocated {delta} times (expected only the logits vec)"
         );
+    }
+
+    #[test]
+    fn raw_kv_decode_is_bit_identical_to_full_forward() {
+        // the decode acceptance property at the module level: with a Raw
+        // KV cache, token-by-token decode_step reproduces the full-sequence
+        // ForwardPass logits bit-for-bit at every position, for mixed and
+        // uniform plans and for any worker count (the integration suite
+        // re-proves this over random models/precisions)
+        let model = tiny_model();
+        let s = model.schema.clone();
+        let toks = tokens(&s);
+        let row0 = &toks[..s.seq_len];
+        let plans = [
+            mixed_plan(s.n_blocks),
+            QuantPlan::uniform("tiny", s.n_blocks, Precision::Raw),
+            QuantPlan::uniform("tiny", s.n_blocks, Precision::Q3),
+        ];
+        for plan in &plans {
+            let qm = QuantizedModel::build(&model, plan).unwrap();
+            for workers in [1usize, 3, crate::config::ParallelConfig::test_workers(2)] {
+                let mut fp = ForwardPass::new(&s, Pool::new(workers));
+                let full = fp.forward(&qm, &toks).unwrap();
+                let mut cache = KvCache::new(kv_geom(&s), 1 << 24, Precision::Raw);
+                let mut st = DecodeState::new(7, s.n_blocks);
+                for (t, &tok) in row0.iter().enumerate() {
+                    let logits = fp.decode_step(&qm, tok, &mut st, &mut cache).unwrap();
+                    let expect = &full[t * s.vocab..(t + 1) * s.vocab];
+                    for (i, (a, b)) in logits.iter().zip(expect).enumerate() {
+                        assert_eq!(
+                            a.to_bits(),
+                            b.to_bits(),
+                            "{} t={t} elem {i} workers={workers}: decode {a} vs full {b}",
+                            plan.summary()
+                        );
+                    }
+                }
+                assert_eq!(st.pos(), s.seq_len);
+            }
+        }
+    }
+
+    #[test]
+    fn quantized_kv_decode_within_stated_tolerance() {
+        // Quantized KV tolerance, stated rather than hand-waved: the codec
+        // rounds each element to within step/2 where step = maxabs/127 (Q8)
+        // or maxabs/7 (Q4), i.e. a relative K/V error of at most 0.5/127 ~
+        // 3.9e-3 resp. 0.5/7 ~ 7.2e-2 per token. Allowing a growth factor
+        // of C = 64 through the 2-block network (attention softmax + two
+        // residual MLPs + norms), the logit drift must stay within
+        //   C * rel_step * (1 + max|logit_raw_kv|).
+        let model = tiny_model();
+        let s = model.schema.clone();
+        let toks = tokens(&s);
+        let row0 = &toks[..s.seq_len];
+        let plan = mixed_plan(s.n_blocks);
+        let qm = QuantizedModel::build(&model, &plan).unwrap();
+        let decode_all = |kv: Precision| -> Vec<Vec<f32>> {
+            let mut fp = ForwardPass::new(&s, Pool::serial());
+            let mut cache = KvCache::new(kv_geom(&s), 1 << 24, kv);
+            let mut st = DecodeState::new(1, s.n_blocks);
+            row0.iter()
+                .map(|&tok| fp.decode_step(&qm, tok, &mut st, &mut cache).unwrap())
+                .collect()
+        };
+        let raw = decode_all(Precision::Raw);
+        let logit_scale =
+            1.0 + raw.iter().flatten().fold(0.0f32, |m, &v| m.max(v.abs()));
+        let max_err = |steps: &[Vec<f32>]| -> f32 {
+            steps
+                .iter()
+                .zip(&raw)
+                .flat_map(|(a, b)| a.iter().zip(b).map(|(x, y)| (x - y).abs()))
+                .fold(0.0f32, f32::max)
+        };
+        let q8 = decode_all(Precision::Q8);
+        let q4 = decode_all(Precision::Q4);
+        assert!(q8.iter().flatten().all(|v| v.is_finite()));
+        assert!(q4.iter().flatten().all(|v| v.is_finite()));
+        let (e8, e4) = (max_err(&q8), max_err(&q4));
+        let (tol8, tol4) = (64.0 * 0.5 / 127.0 * logit_scale, 64.0 * 0.5 / 7.0 * logit_scale);
+        assert!(e8 <= tol8, "q8 kv drift {e8} > stated tolerance {tol8}");
+        assert!(e4 <= tol4, "q4 kv drift {e4} > stated tolerance {tol4}");
+        assert!(e8 < e4, "kv precision must order the drift: q8 {e8} !< q4 {e4}");
+        assert!(e8 > 0.0, "q8 kv must actually quantize (else the test is vacuous)");
+    }
+
+    #[test]
+    fn steady_state_decode_step_does_zero_heap_allocation() {
+        // the decode-side zero-alloc criterion: with the sequence's pages
+        // reserved up front and a caller-held logits buffer, a steady-state
+        // decode_step_into performs literally zero allocations (the serial
+        // pool runs everything on this thread, so the counting allocator
+        // sees every allocation the hot path would make)
+        let model = tiny_model();
+        let s = model.schema.clone();
+        let plan = mixed_plan(s.n_blocks);
+        let qm = QuantizedModel::build(&model, &plan).unwrap();
+        let mut fp = ForwardPass::new(&s, Pool::serial());
+        let mut cache = KvCache::new(kv_geom(&s), 1 << 24, Precision::Q8);
+        let mut st = DecodeState::new(3, s.n_blocks);
+        st.reserve(&mut cache, s.seq_len).unwrap();
+        let reserved = cache.allocated_bytes();
+        let mut logits = vec![0.0f32; s.vocab];
+        fp.decode_step_into(&qm, 1, &mut st, &mut cache, &mut logits).unwrap(); // warm
+        let grow = fp.grow_events();
+        let before = super::alloc_hook::thread_allocs();
+        for tok in [2i32, 3, 4] {
+            fp.decode_step_into(&qm, tok, &mut st, &mut cache, &mut logits).unwrap();
+        }
+        let delta = super::alloc_hook::thread_allocs() - before;
+        assert_eq!(delta, 0, "steady-state decode_step allocated {delta} times");
+        assert_eq!(fp.grow_events(), grow, "decode must not regrow scratch");
+        assert_eq!(grow, 0, "schema-sized arena never grows");
+        assert_eq!(cache.allocated_bytes(), reserved, "appends fill reserved pages only");
+        assert!(logits.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn steady_state_decode_performs_zero_thread_spawns() {
+        let model = tiny_model();
+        let s = model.schema.clone();
+        let plan = mixed_plan(s.n_blocks);
+        let qm = QuantizedModel::build(&model, &plan).unwrap();
+        let pool = Pool::new(4);
+        let mut fp = ForwardPass::new(&s, pool.clone());
+        // warm: the full forward spawns the helpers (workers - 1, once)
+        let _ = fp.forward(&qm, &tokens(&s)).unwrap();
+        let spawned = pool.spawn_events();
+        let mut cache = KvCache::new(kv_geom(&s), 1 << 24, Precision::Raw);
+        let mut st = DecodeState::new(9, s.n_blocks);
+        for t in 0..s.seq_len {
+            let _ = fp.decode_step(&qm, (t % s.vocab) as i32, &mut st, &mut cache).unwrap();
+        }
+        assert_eq!(
+            pool.spawn_events(),
+            spawned,
+            "decode steps must never spawn threads — they reuse the parked pool"
+        );
+    }
+
+    #[test]
+    fn decode_step_guards_reject_bad_inputs() {
+        let model = tiny_model();
+        let s = model.schema.clone();
+        let plan = QuantPlan::uniform("tiny", s.n_blocks, Precision::Q8);
+        let qm = QuantizedModel::build(&model, &plan).unwrap();
+        let mut fp = ForwardPass::new(&s, Pool::serial());
+        let mut cache = KvCache::new(kv_geom(&s), 1 << 24, Precision::Raw);
+        // out-of-vocab tokens
+        let mut st = DecodeState::new(1, s.n_blocks);
+        assert!(fp.decode_step(&qm, -1, &mut st, &mut cache).is_err());
+        assert!(fp.decode_step(&qm, s.vocab as i32, &mut st, &mut cache).is_err());
+        assert_eq!(st.pos(), 0, "failed steps must not advance the cursor");
+        // a wrong-shaped cache is rejected before any mutation
+        let mut bad = KvCache::new(
+            KvGeometry { page_tokens: 4, n_heads: s.n_heads, head_dim: 1 },
+            1 << 20,
+            Precision::Raw,
+        );
+        assert!(fp.decode_step(&qm, 1, &mut st, &mut bad).is_err());
+        // a state built for a different depth is rejected
+        let mut wrong = DecodeState::new(2, s.n_blocks + 1);
+        assert!(fp.decode_step(&qm, 1, &mut wrong, &mut cache).is_err());
+        // the context window is finite: position seq_len must fail cleanly
+        for t in 0..s.seq_len {
+            fp.decode_step(&qm, (t % 4) as i32, &mut st, &mut cache).unwrap();
+        }
+        assert!(fp.decode_step(&qm, 1, &mut st, &mut cache).is_err());
+        assert_eq!(st.pos(), s.seq_len);
+    }
+
+    #[test]
+    fn decode_state_tracks_and_releases_kv_bytes() {
+        let model = tiny_model();
+        let s = model.schema.clone();
+        let plan = QuantPlan::uniform("tiny", s.n_blocks, Precision::Q4);
+        let qm = QuantizedModel::build(&model, &plan).unwrap();
+        let mut fp = ForwardPass::new(&s, Pool::serial());
+        let mut cache = KvCache::new(kv_geom(&s), 1 << 24, Precision::Q4);
+        let mut st = DecodeState::new(5, s.n_blocks);
+        assert_eq!(st.kv_bytes(&cache), 0);
+        for t in 0..6 {
+            fp.decode_step(&qm, (t % s.vocab) as i32, &mut st, &mut cache).unwrap();
+            assert_eq!(
+                st.kv_bytes(&cache),
+                s.n_blocks * cache.sequence_bytes(t + 1),
+                "per-block pages sum at t={t}"
+            );
+        }
+        assert_eq!(cache.allocated_bytes(), st.kv_bytes(&cache));
+        st.release(&mut cache);
+        assert_eq!(cache.allocated_bytes(), 0);
+        assert_eq!(st.kv_bytes(&cache), 0);
+        assert!(cache.peak_bytes() > 0);
     }
 
     #[test]

@@ -29,11 +29,14 @@ pub fn sample(logits: &[f32], mode: SamplingMode, rng: &mut Xoshiro256pp) -> usi
     }
 }
 
+/// NaN-safe greedy argmax (`total_cmp`): the serving and decode hot paths
+/// call this on model output, where a NaN logit must select deterministically
+/// rather than panic the shard thread.
 pub fn argmax(logits: &[f32]) -> usize {
     logits
         .iter()
         .enumerate()
-        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .max_by(|a, b| a.1.total_cmp(b.1))
         .map(|(i, _)| i)
         .unwrap()
 }

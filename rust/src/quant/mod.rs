@@ -86,6 +86,25 @@ impl Precision {
     }
 }
 
+/// Parse a precision from its `label()` (plus short aliases) — CLI/config
+/// surface for e.g. `ewq serve --kv-precision 8bit`.
+impl std::str::FromStr for Precision {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> std::result::Result<Self, Self::Err> {
+        match s {
+            "raw" | "f32" => Ok(Precision::Raw),
+            "8bit" | "q8" => Ok(Precision::Q8),
+            "4bit" | "q4" => Ok(Precision::Q4),
+            "3bit" | "q3" => Ok(Precision::Q3),
+            "1.58bit" | "2bit" | "t2" => Ok(Precision::T2),
+            other => anyhow::bail!(
+                "unknown precision {other:?} (raw|8bit|4bit|3bit|1.58bit)"
+            ),
+        }
+    }
+}
+
 /// A quantized (or raw) 2-D weight matrix.
 #[derive(Clone, Debug, PartialEq)]
 pub struct QMat {

@@ -4,9 +4,13 @@
 //! per-sequence page tables, and quantized page storage (fp32 / int8 /
 //! int4) with the same symmetric per-column scheme as the weight formats.
 //!
-//! The demo decode path recomputes full sequences (seq_len 32), so this
-//! manager is exercised by the test/bench surface and by the cluster
-//! planner's memory accounting rather than the tiny-model hot loop.
+//! This is the storage half of the incremental decode path (DESIGN.md §10):
+//! `refexec::decode_step` appends one token's K/V per block via `append`
+//! and reads the attention history back through `read_into`, so generated
+//! tokens never recompute the full sequence. The hot-path contract is
+//! **allocation-free steady state**: `read_into` writes into a caller
+//! buffer, and a sequence whose pages were `reserve`d up front never
+//! allocates inside `append`.
 
 use anyhow::{bail, Result};
 
@@ -44,25 +48,44 @@ struct Page {
     used_tokens: usize,
 }
 
+/// One sequence's page table: the pages in token order (possibly reserved
+/// ahead of the write cursor) plus the number of tokens appended so far.
+#[derive(Clone, Debug, Default)]
+struct SeqTable {
+    pages: Vec<usize>,
+    tokens: usize,
+}
+
 /// Page-granular KV cache for many concurrent sequences.
 pub struct KvCache {
     geom: KvGeometry,
     budget_bytes: usize,
     allocated_bytes: usize,
+    /// High-water mark of `allocated_bytes` (serving telemetry:
+    /// `ServingMetrics::kv_bytes`).
+    peak_bytes: usize,
     pages: Vec<Option<Page>>,
     free_list: Vec<usize>,
-    /// sequence id -> page ids in order
-    tables: std::collections::BTreeMap<u64, Vec<usize>>,
+    /// sequence id -> page table
+    tables: std::collections::BTreeMap<u64, SeqTable>,
     prec: Precision,
 }
 
 impl KvCache {
     pub fn new(geom: KvGeometry, budget_bytes: usize, prec: Precision) -> Self {
-        assert!(matches!(prec, Precision::Raw | Precision::Q8 | Precision::Q4));
+        // construction-time guard: the page codec implements exactly these
+        // three tiers (serving validates its config against the same set
+        // before any shard spawns)
+        assert!(
+            matches!(prec, Precision::Raw | Precision::Q8 | Precision::Q4),
+            "KvCache supports raw/8bit/4bit pages, not {}",
+            prec.label()
+        );
         Self {
             geom,
             budget_bytes,
             allocated_bytes: 0,
+            peak_bytes: 0,
             pages: Vec::new(),
             free_list: Vec::new(),
             tables: std::collections::BTreeMap::new(),
@@ -74,70 +97,128 @@ impl KvCache {
         self.allocated_bytes
     }
 
+    /// High-water mark of `allocated_bytes` over the cache's lifetime.
+    pub fn peak_bytes(&self) -> usize {
+        self.peak_bytes
+    }
+
     pub fn live_sequences(&self) -> usize {
         self.tables.len()
     }
 
+    pub fn geometry(&self) -> KvGeometry {
+        self.geom
+    }
+
+    pub fn precision(&self) -> Precision {
+        self.prec
+    }
+
+    /// Tokens appended to `seq` so far (0 for unknown sequences).
+    pub fn sequence_tokens(&self, seq: u64) -> usize {
+        self.tables.get(&seq).map(|t| t.tokens).unwrap_or(0)
+    }
+
     fn alloc_page(&mut self) -> Result<usize> {
         let bytes = self.geom.page_bytes(self.prec);
+        if self.allocated_bytes + bytes > self.budget_bytes {
+            bail!("kv-cache budget exhausted ({} + {bytes} > {})", self.allocated_bytes, self.budget_bytes);
+        }
         if let Some(id) = self.free_list.pop() {
             self.pages[id] =
                 Some(Page { data: vec![0; bytes], prec: self.prec, used_tokens: 0 });
             self.allocated_bytes += bytes;
+            self.peak_bytes = self.peak_bytes.max(self.allocated_bytes);
             return Ok(id);
-        }
-        if self.allocated_bytes + bytes > self.budget_bytes {
-            bail!("kv-cache budget exhausted ({} + {bytes} > {})", self.allocated_bytes, self.budget_bytes);
         }
         self.pages.push(Some(Page { data: vec![0; bytes], prec: self.prec, used_tokens: 0 }));
         self.allocated_bytes += bytes;
+        self.peak_bytes = self.peak_bytes.max(self.allocated_bytes);
         Ok(self.pages.len() - 1)
     }
 
+    /// Pre-allocate enough pages for `seq` to hold `tokens` tokens, so the
+    /// subsequent `append`s are allocation-free (the decode hot path
+    /// reserves a sequence's window up front and then never touches the
+    /// allocator mid-generation). Fails — without allocating anything —
+    /// when the reservation would exceed the budget.
+    pub fn reserve(&mut self, seq: u64, tokens: usize) -> Result<()> {
+        let have = self.tables.get(&seq).map(|t| t.pages.len()).unwrap_or(0);
+        let need = tokens.div_ceil(self.geom.page_tokens);
+        if need > have {
+            let extra = need - have;
+            let bytes = self.geom.page_bytes(self.prec);
+            if self.allocated_bytes + extra * bytes > self.budget_bytes {
+                bail!(
+                    "kv-cache budget exhausted reserving {tokens} tokens ({} + {} > {})",
+                    self.allocated_bytes,
+                    extra * bytes,
+                    self.budget_bytes
+                );
+            }
+            for _ in 0..extra {
+                let pid = self.alloc_page()?;
+                self.tables.entry(seq).or_default().pages.push(pid);
+            }
+        }
+        Ok(())
+    }
+
     /// Append `kv` (one token's K+V floats) to a sequence, allocating pages
-    /// on demand. Quantizes into the page store per the cache precision.
+    /// on demand (or filling `reserve`d ones). Quantizes into the page
+    /// store per the cache precision.
     pub fn append(&mut self, seq: u64, kv: &[f32]) -> Result<()> {
         if kv.len() != self.geom.floats_per_token() {
             bail!("kv length {} != geometry {}", kv.len(), self.geom.floats_per_token());
         }
-        let need_new = match self.tables.get(&seq).and_then(|t| t.last()) {
-            None => true,
-            Some(&pid) => {
-                self.pages[pid].as_ref().map(|p| p.used_tokens >= self.geom.page_tokens).unwrap_or(true)
-            }
-        };
-        if need_new {
+        let tokens = self.sequence_tokens(seq);
+        let page_no = tokens / self.geom.page_tokens;
+        let slot = tokens % self.geom.page_tokens;
+        if page_no >= self.tables.get(&seq).map(|t| t.pages.len()).unwrap_or(0) {
             let pid = self.alloc_page()?;
-            self.tables.entry(seq).or_default().push(pid);
+            self.tables.entry(seq).or_default().pages.push(pid);
         }
-        let pid = *self.tables[&seq].last().unwrap();
+        let table = self.tables.get_mut(&seq).unwrap();
+        let pid = table.pages[page_no];
+        table.tokens += 1;
         let geom = self.geom;
         let page = self.pages[pid].as_mut().unwrap();
-        let slot = page.used_tokens;
         encode_token(page, slot, kv, &geom);
-        page.used_tokens += 1;
+        page.used_tokens = page.used_tokens.max(slot + 1);
         Ok(())
     }
 
-    /// Read a token's KV back (dequantized).
-    pub fn read(&self, seq: u64, token_idx: usize) -> Result<Vec<f32>> {
+    /// Read a token's KV back (dequantized) into `out`
+    /// (`geometry().floats_per_token()` floats) without allocating — the
+    /// decode hot path's history read.
+    pub fn read_into(&self, seq: u64, token_idx: usize, out: &mut [f32]) -> Result<()> {
+        if out.len() != self.geom.floats_per_token() {
+            bail!("kv out length {} != geometry {}", out.len(), self.geom.floats_per_token());
+        }
         let table = self.tables.get(&seq).ok_or_else(|| anyhow::anyhow!("unknown seq {seq}"))?;
+        if token_idx >= table.tokens {
+            bail!("token {token_idx} not written yet ({} in sequence)", table.tokens);
+        }
         let page_no = token_idx / self.geom.page_tokens;
         let slot = token_idx % self.geom.page_tokens;
-        let pid = *table
-            .get(page_no)
-            .ok_or_else(|| anyhow::anyhow!("token {token_idx} beyond sequence"))?;
+        let pid = table.pages[page_no];
         let page = self.pages[pid].as_ref().unwrap();
-        if slot >= page.used_tokens {
-            bail!("token {token_idx} not written yet");
-        }
-        Ok(decode_token(page, slot, &self.geom))
+        decode_token_into(page, slot, &self.geom, out);
+        Ok(())
+    }
+
+    /// Read a token's KV back (dequantized). Allocating convenience wrapper
+    /// over `read_into` (tests/inspection; the hot path uses `read_into`).
+    pub fn read(&self, seq: u64, token_idx: usize) -> Result<Vec<f32>> {
+        let mut out = vec![0.0f32; self.geom.floats_per_token()];
+        self.read_into(seq, token_idx, &mut out)?;
+        Ok(out)
     }
 
     /// Free all pages of a sequence.
     pub fn release(&mut self, seq: u64) {
         if let Some(table) = self.tables.remove(&seq) {
-            for pid in table {
+            for pid in table.pages {
                 if let Some(p) = self.pages[pid].take() {
                     self.allocated_bytes -= self.geom.page_bytes(p.prec);
                     self.free_list.push(pid);
@@ -188,36 +269,35 @@ fn encode_token(page: &mut Page, slot: usize, kv: &[f32], geom: &KvGeometry) {
     }
 }
 
-fn decode_token(page: &Page, slot: usize, geom: &KvGeometry) -> Vec<f32> {
+fn decode_token_into(page: &Page, slot: usize, geom: &KvGeometry, out: &mut [f32]) {
     let f = geom.floats_per_token();
+    debug_assert_eq!(out.len(), f);
     match page.prec {
         Precision::Raw => {
             let base = slot * f * 4;
-            (0..f)
-                .map(|i| {
-                    f32::from_le_bytes(
-                        page.data[base + 4 * i..base + 4 * i + 4].try_into().unwrap(),
-                    )
-                })
-                .collect()
+            for (i, o) in out.iter_mut().enumerate() {
+                *o = f32::from_le_bytes(
+                    page.data[base + 4 * i..base + 4 * i + 4].try_into().unwrap(),
+                );
+            }
         }
         Precision::Q8 => {
             let tail = geom.page_tokens * f + slot * 4;
             let scale = f32::from_le_bytes(page.data[tail..tail + 4].try_into().unwrap());
             let base = slot * f;
-            (0..f).map(|i| (page.data[base + i] as i8) as f32 * scale).collect()
+            for (i, o) in out.iter_mut().enumerate() {
+                *o = (page.data[base + i] as i8) as f32 * scale;
+            }
         }
         Precision::Q4 => {
             let tail = geom.page_tokens * f / 2 + slot * 4;
             let scale = f32::from_le_bytes(page.data[tail..tail + 4].try_into().unwrap());
             let base = slot * f / 2;
-            let mut out = Vec::with_capacity(f);
             for i in 0..f / 2 {
                 let b = page.data[base + i] as i32;
-                out.push(((b & 0xF) - 8) as f32 * scale);
-                out.push((((b >> 4) & 0xF) - 8) as f32 * scale);
+                out[2 * i] = ((b & 0xF) - 8) as f32 * scale;
+                out[2 * i + 1] = (((b >> 4) & 0xF) - 8) as f32 * scale;
             }
-            out
         }
         _ => unreachable!(),
     }
@@ -240,6 +320,8 @@ mod tests {
         let kv: Vec<f32> = (0..g.floats_per_token()).map(|i| i as f32 * 0.5 - 3.0).collect();
         c.append(1, &kv).unwrap();
         assert_eq!(c.read(1, 0).unwrap(), kv);
+        assert_eq!(c.sequence_tokens(1), 1);
+        assert_eq!(c.sequence_tokens(99), 0);
     }
 
     #[test]
@@ -277,6 +359,7 @@ mod tests {
         assert_eq!(c.live_sequences(), 1);
         c.release(3);
         assert_eq!(c.allocated_bytes(), 0);
+        assert_eq!(c.peak_bytes(), 3 * g.page_bytes(Precision::Q8), "peak survives release");
         assert_eq!(c.live_sequences(), 0);
         assert!(c.read(3, 0).is_err());
     }
@@ -296,6 +379,148 @@ mod tests {
             c.append(2, &kv).unwrap(); // reuses the freed pages
         }
         assert_eq!(c.allocated_bytes(), 2 * one_page);
+        assert_eq!(c.peak_bytes(), 2 * one_page, "reuse never exceeded the budget");
+    }
+
+    #[test]
+    fn reserve_preallocates_and_appends_fill_reserved_pages() {
+        let g = geom();
+        let mut c = KvCache::new(g, 1 << 20, Precision::Raw);
+        c.reserve(5, 10).unwrap(); // 3 pages of 4
+        let reserved = c.allocated_bytes();
+        assert_eq!(reserved, 3 * g.page_bytes(Precision::Raw));
+        let kv: Vec<f32> = (0..g.floats_per_token()).map(|i| i as f32).collect();
+        for t in 0..10 {
+            c.append(5, &kv).unwrap();
+            assert_eq!(c.sequence_tokens(5), t + 1);
+            // reserved pages are filled, never re-allocated
+            assert_eq!(c.allocated_bytes(), reserved);
+        }
+        assert_eq!(c.read(5, 9).unwrap(), kv);
+        // reserving less than what exists is a no-op
+        c.reserve(5, 4).unwrap();
+        assert_eq!(c.allocated_bytes(), reserved);
+        // tokens 11..12 still fit the 3 reserved pages (12 slots); the 13th
+        // goes past the reservation and allocates a fourth page on demand
+        c.append(5, &kv).unwrap();
+        c.append(5, &kv).unwrap();
+        assert_eq!(c.allocated_bytes(), reserved, "12 tokens fill 3 pages exactly");
+        c.append(5, &kv).unwrap();
+        assert_eq!(c.allocated_bytes(), 4 * g.page_bytes(Precision::Raw));
+    }
+
+    #[test]
+    fn reserve_past_budget_fails_without_allocating() {
+        let g = geom();
+        let one_page = g.page_bytes(Precision::Q8);
+        let mut c = KvCache::new(g, 2 * one_page, Precision::Q8);
+        assert!(c.reserve(1, 12).is_err(), "3 pages exceed a 2-page budget");
+        assert_eq!(c.allocated_bytes(), 0, "failed reservation must not leak pages");
+        assert_eq!(c.live_sequences(), 0);
+        // a fitting reservation still works afterwards
+        c.reserve(1, 8).unwrap();
+        assert_eq!(c.allocated_bytes(), 2 * one_page);
+    }
+
+    #[test]
+    fn read_into_matches_read_and_rejects_bad_lengths() {
+        let g = geom();
+        let mut c = KvCache::new(g, 1 << 20, Precision::Q4);
+        let mut rng = Xoshiro256pp::new(9);
+        let kv: Vec<f32> = (0..g.floats_per_token()).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        c.append(2, &kv).unwrap();
+        let mut buf = vec![0.0f32; g.floats_per_token()];
+        c.read_into(2, 0, &mut buf).unwrap();
+        assert_eq!(buf, c.read(2, 0).unwrap());
+        let mut short = vec![0.0f32; 3];
+        assert!(c.read_into(2, 0, &mut short).is_err());
+        assert!(c.read_into(2, 1, &mut buf).is_err(), "token 1 not written yet");
+        assert!(c.read_into(3, 0, &mut buf).is_err(), "unknown sequence");
+    }
+
+    #[test]
+    fn release_mid_stream_keeps_other_sequences_intact() {
+        // the "page eviction mid-sequence" edge: one sequence is evicted
+        // while its neighbours keep appending; the freed pages are recycled
+        // into the survivors without clobbering their history
+        let g = geom();
+        let mut c = KvCache::new(g, 1 << 20, Precision::Raw);
+        let tok = |s: u64, t: usize| -> Vec<f32> {
+            (0..g.floats_per_token())
+                .map(|i| (s as f32) * 100.0 + t as f32 + i as f32 * 0.01)
+                .collect()
+        };
+        for t in 0..6 {
+            for s in [1u64, 2, 3] {
+                c.append(s, &tok(s, t)).unwrap();
+            }
+        }
+        let before = c.allocated_bytes();
+        c.release(2); // evict the middle sequence mid-stream
+        assert_eq!(c.live_sequences(), 2);
+        assert!(c.allocated_bytes() < before);
+        assert!(c.read(2, 0).is_err(), "evicted sequence is gone");
+        // survivors keep their full history and can keep appending into
+        // the recycled pages
+        for t in 6..12 {
+            c.append(1, &tok(1, t)).unwrap();
+            c.append(3, &tok(3, t)).unwrap();
+        }
+        for t in 0..12 {
+            assert_eq!(c.read(1, t).unwrap(), tok(1, t), "seq 1 tok {t}");
+            assert_eq!(c.read(3, t).unwrap(), tok(3, t), "seq 3 tok {t}");
+        }
+        assert!(c.allocated_bytes() <= before + 2 * g.page_bytes(Precision::Raw));
+    }
+
+    #[test]
+    fn capacity_exhaustion_mid_sequence_leaves_history_readable() {
+        let g = geom();
+        let one_page = g.page_bytes(Precision::Q8);
+        let mut c = KvCache::new(g, one_page, Precision::Q8);
+        let kv = vec![0.25f32; g.floats_per_token()];
+        for _ in 0..4 {
+            c.append(1, &kv).unwrap();
+        }
+        // the 5th token needs a second page: clean error, nothing corrupted
+        assert!(c.append(1, &kv).is_err());
+        assert_eq!(c.sequence_tokens(1), 4, "failed append must not advance the cursor");
+        for t in 0..4 {
+            let back = c.read(1, t).unwrap();
+            assert!(back.iter().all(|v| (v - 0.25).abs() < 0.01), "tok {t} readable after error");
+        }
+        // releasing recovers capacity for the next sequence
+        c.release(1);
+        for _ in 0..4 {
+            c.append(2, &kv).unwrap();
+        }
+    }
+
+    #[test]
+    fn sequence_bytes_is_monotone_in_tokens_and_precision() {
+        let g = geom();
+        let caches = [
+            KvCache::new(g, 1 << 30, Precision::Raw),
+            KvCache::new(g, 1 << 30, Precision::Q8),
+            KvCache::new(g, 1 << 30, Precision::Q4),
+        ];
+        for tokens in 0..64usize {
+            // monotone (non-decreasing) in sequence length, page-quantized
+            for c in &caches {
+                assert!(c.sequence_bytes(tokens + 1) >= c.sequence_bytes(tokens));
+            }
+            // the precision ladder orders byte costs at every length
+            if tokens > 0 {
+                let raw = caches[0].sequence_bytes(tokens);
+                let q8 = caches[1].sequence_bytes(tokens);
+                let q4 = caches[2].sequence_bytes(tokens);
+                assert!(raw > q8 && q8 > q4, "tokens={tokens}: {raw} {q8} {q4}");
+            }
+        }
+        // page quantization: a page boundary is where the cost steps
+        let c = &caches[0];
+        assert_eq!(c.sequence_bytes(1), c.sequence_bytes(g.page_tokens));
+        assert!(c.sequence_bytes(g.page_tokens + 1) > c.sequence_bytes(g.page_tokens));
     }
 
     #[test]

@@ -23,6 +23,19 @@
 //! `ShardOccupancy` (including steal and park/wake counts) is folded into
 //! the aggregate metrics via `ServingMetrics::merge` at shutdown.
 //!
+//! **Incremental decoding** (DESIGN.md §10): a request submitted with
+//! `max_new_tokens > 1` (`Coordinator::submit_gen`, `ewq serve
+//! --decode-tokens N`) becomes a **decode job** on the shard that picks up
+//! its window. The job ingests the context through
+//! `ForwardPass::decode_step` once — populating per-sequence K/V pages in
+//! the shard's `KvCache` at the configured precision (`--kv-precision`
+//! raw/8bit/4bit) — and then generates one token per queue turn, re-queued
+//! behind whatever prefill windows arrived in between, streaming one
+//! `Response` per token. Sequences are **pinned** to their shard's cache:
+//! live peers never steal decode jobs (`queues::Pinnable`), while
+//! dead-shard rescue fails them with a single terminal `INVALID_TOKEN`
+//! response instead of leaving callers hanging.
+//!
 //! Fault containment: a shard that unwinds marks itself dead on the shared
 //! queues and its stranded windows are **rescued** — popped exactly once —
 //! by live peers under every policy (see `queues::ShardQueues::pop`).
@@ -43,17 +56,30 @@ use anyhow::{Context, Result};
 
 use crate::config::{DispatchPolicy, ServeConfig};
 use crate::ewq::QuantPlan;
-use crate::model::{ModelExecutor, QuantizedModel};
+use crate::model::{DecodeState, ModelExecutor, QuantizedModel};
 use crate::par::Pool;
+use crate::quant::Precision;
 use crate::runtime::Runtime;
-use crate::serving::queues::{Popped, ShardQueues};
+use crate::serving::kvcache::{KvCache, KvGeometry};
+use crate::serving::queues::{Pinnable, Popped, ShardQueues};
 use crate::zoo::ModelDir;
 
-/// One generation request: a token context, answered with the next token.
+/// KV-cache page granularity for serving shards (tokens per page).
+const KV_PAGE_TOKENS: usize = 16;
+
+/// One request: a token context, answered with the next token (classic) or
+/// with a stream of `max_new_tokens` generated tokens (decode path).
 #[derive(Debug)]
 pub struct Request {
     pub id: u64,
     pub context: Vec<i32>,
+    /// `<= 1`: classic single next-token prediction through the batched
+    /// prefill path. `N > 1`: streaming generation — the caller receives up
+    /// to `N` `Response`s on the same channel (fewer when the context
+    /// window fills first; a failed/rescued sequence ends with a single
+    /// terminal `INVALID_TOKEN` response). The channel closes after the
+    /// last token.
+    pub max_new_tokens: usize,
     submitted: Instant,
     resp: Sender<Response>,
 }
@@ -88,6 +114,35 @@ enum Msg {
 
 /// A closed batching window en route to (or parked on) a shard queue.
 type Window = Vec<Request>;
+
+/// One decoding sequence between queue turns: the request being answered,
+/// its KV-cache cursor, and the generation progress. Lives on its owning
+/// shard's queue (pinned — the KV pages are in that shard's cache).
+struct DecodeJob {
+    req: Request,
+    state: DecodeState,
+    /// Tokens streamed back so far (each one was a `Response`).
+    produced: usize,
+    /// The next token to feed through `decode_step` (the previously
+    /// generated one; meaningless until `produced > 0`).
+    next_input: i32,
+}
+
+/// One unit of shard work: a closed prefill window, or one decoding
+/// sequence's next turn (re-queued between turns so generation interleaves
+/// with prefill through the same work-steal deques).
+enum Work {
+    Prefill(Window),
+    Decode(DecodeJob),
+}
+
+impl Pinnable for Work {
+    /// Decode jobs reference their shard's KV cache and must not migrate
+    /// to live peers; prefill windows are freely stealable.
+    fn pinned(&self) -> bool {
+        matches!(self, Work::Decode(_))
+    }
+}
 
 /// Per-shard execution accounting.
 #[derive(Clone, Debug, Default, PartialEq, Eq)]
@@ -136,6 +191,11 @@ pub struct ServingMetrics {
     pub steals: usize,
     /// Shard-worker park → wake transitions across all shards.
     pub wakes: usize,
+    /// Incremental decode steps executed across all shards (context ingest
+    /// plus generated tokens — the generation workload's volume metric).
+    pub decode_steps: usize,
+    /// Peak KV-cache residency per shard, summed across shards.
+    pub kv_bytes: usize,
     /// One entry per shard worker (sorted by shard id after `merge`).
     pub shards: Vec<ShardOccupancy>,
 }
@@ -176,6 +236,8 @@ impl ServingMetrics {
         self.resident_weight_bytes += other.resident_weight_bytes;
         self.steals += other.steals;
         self.wakes += other.wakes;
+        self.decode_steps += other.decode_steps;
+        self.kv_bytes += other.kv_bytes;
         self.shards.extend(other.shards);
         self.shards.sort_by_key(|s| s.shard);
     }
@@ -200,6 +262,13 @@ impl ServingMetrics {
         }
         if self.steals > 0 {
             s.push_str(&format!(", steals {}", self.steals));
+        }
+        if self.decode_steps > 0 {
+            s.push_str(&format!(
+                ", decode {} steps, kv peak {}",
+                self.decode_steps,
+                crate::report::bytes_human(self.kv_bytes)
+            ));
         }
         if self.resident_weight_bytes > 0 {
             s.push_str(&format!(
@@ -262,9 +331,16 @@ impl Coordinator {
         let batch_cap = cfg.max_batch.min(model.schema.eval_batch).max(1);
         let policy = cfg.dispatch;
         let fwd_workers = cfg.forward_workers.max(1);
+        anyhow::ensure!(
+            matches!(cfg.kv_precision, Precision::Raw | Precision::Q8 | Precision::Q4),
+            "kv_precision must be raw, 8bit or 4bit (got {})",
+            cfg.kv_precision.label()
+        );
+        let kv_prec = cfg.kv_precision;
+        let kv_budget = (cfg.kv_budget_mb.max(0.0) * 1e6) as usize;
 
-        // the shared per-shard window queues the whole fleet drains
-        let queues: Arc<ShardQueues<Window>> = Arc::new(ShardQueues::new(n_shards));
+        // the shared per-shard work queues the whole fleet drains
+        let queues: Arc<ShardQueues<Work>> = Arc::new(ShardQueues::new(n_shards));
 
         // spawn shard workers, each owning a replica
         let (ready_tx, ready_rx) = channel::<std::result::Result<(), String>>();
@@ -276,7 +352,14 @@ impl Coordinator {
             let ready = ready_tx.clone();
             let results = res_tx.clone();
             let q = queues.clone();
-            let ctx = ShardCtx { shard, net_us, fwd_workers, steal: policy.steals() };
+            let ctx = ShardCtx {
+                shard,
+                net_us,
+                fwd_workers,
+                steal: policy.steals(),
+                kv_prec,
+                kv_budget,
+            };
             let handle = std::thread::Builder::new()
                 .name(format!("ewq-shard-{shard}"))
                 .spawn(move || {
@@ -317,13 +400,22 @@ impl Coordinator {
         Ok(Self { tx, handle: Some(handle), next_id: 0.into() })
     }
 
-    /// Submit a context; returns the response receiver.
+    /// Submit a classic context; returns the single-response receiver.
     pub fn submit(&self, context: Vec<i32>) -> Receiver<Response> {
+        self.submit_gen(context, 1)
+    }
+
+    /// Submit a generation request: up to `max_new_tokens` tokens stream
+    /// back as individual `Response`s on the returned receiver (the channel
+    /// closes after the last one). `max_new_tokens <= 1` degrades to the
+    /// classic batched next-token path.
+    pub fn submit_gen(&self, context: Vec<i32>, max_new_tokens: usize) -> Receiver<Response> {
         let (rtx, rrx) = channel();
         let id = self.next_id.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         let _ = self.tx.send(Msg::Req(Request {
             id,
             context,
+            max_new_tokens: max_new_tokens.max(1),
             submitted: Instant::now(),
             resp: rtx,
         }));
@@ -345,7 +437,7 @@ impl Coordinator {
 /// The batcher's handle on the shard fleet: the shared queues, the worker
 /// join handles, the metrics return channel, and the dispatch policy.
 struct Fleet {
-    queues: Arc<ShardQueues<Window>>,
+    queues: Arc<ShardQueues<Work>>,
     handles: Vec<std::thread::JoinHandle<()>>,
     results: Receiver<ServingMetrics>,
     policy: DispatchPolicy,
@@ -364,7 +456,7 @@ fn shortest_queue_order(depths: &[usize]) -> Vec<usize> {
 /// shards. Windows that land on a shard that dies before draining them are
 /// rescued by live peers inside `ShardQueues::pop`, so placement is only a
 /// heuristic — never a correctness concern.
-fn place_window(queues: &ShardQueues<Window>, policy: DispatchPolicy, rr: &mut usize, w: Window) {
+fn place_window(queues: &ShardQueues<Work>, policy: DispatchPolicy, rr: &mut usize, w: Window) {
     let dead = queues.dead_snapshot();
     let alive: Vec<usize> = (0..dead.len()).filter(|&i| !dead[i]).collect();
     if alive.is_empty() {
@@ -387,7 +479,7 @@ fn place_window(queues: &ShardQueues<Window>, policy: DispatchPolicy, rr: &mut u
                 .expect("alive is non-empty")
         }
     };
-    queues.push(target, w);
+    queues.push(target, Work::Prefill(w));
 }
 
 /// The shared dynamic batcher: owns the request queue, closes batching
@@ -465,6 +557,10 @@ struct ShardCtx {
     fwd_workers: usize,
     /// whether this worker may steal queued windows from live peers
     steal: bool,
+    /// precision of this shard's KV-cache pages
+    kv_prec: Precision,
+    /// KV-cache budget in bytes (per shard)
+    kv_budget: usize,
 }
 
 /// Marks the shard dead on every non-clean exit (panic mid-batch, setup
@@ -472,7 +568,7 @@ struct ShardCtx {
 /// the stop condition.
 struct DeathGuard {
     shard: usize,
-    queues: Arc<ShardQueues<Window>>,
+    queues: Arc<ShardQueues<Work>>,
     armed: bool,
 }
 
@@ -484,16 +580,18 @@ impl Drop for DeathGuard {
     }
 }
 
-/// One shard worker: owns a model replica and drains the shared queues.
+/// One shard worker: owns a model replica plus the shard's KV cache, and
+/// drains the shared queues — prefill windows and (pinned) decode turns
+/// interleave through the same deque.
 fn shard_worker(
     ctx: ShardCtx,
     model: ModelDir,
     plan: QuantPlan,
-    queues: Arc<ShardQueues<Window>>,
+    queues: Arc<ShardQueues<Work>>,
     ready: Sender<std::result::Result<(), String>>,
     results: Sender<ServingMetrics>,
 ) -> Result<()> {
-    let ShardCtx { shard, net_us, fwd_workers, steal } = ctx;
+    let ShardCtx { shard, net_us, fwd_workers, steal, kv_prec, kv_budget } = ctx;
     let mut guard = DeathGuard { shard, queues: queues.clone(), armed: true };
     // Runtime lives entirely inside this thread (PJRT client is not Send).
     let setup = (|| -> Result<_> {
@@ -511,6 +609,12 @@ fn shard_worker(
     let ex = ModelExecutor::with_pool(&rt, &model, Pool::new(fwd_workers));
     let (b, s) = (model.schema.eval_batch, model.schema.seq_len);
     let v = model.schema.vocab;
+    let n_blocks = model.schema.n_blocks;
+    let geom = KvGeometry {
+        page_tokens: KV_PAGE_TOKENS,
+        n_heads: model.schema.n_heads,
+        head_dim: model.schema.d_model / model.schema.n_heads,
+    };
     // the executor keeps its own schema/dir copies and the quantized replica
     // is self-contained — drop the fp32 weights instead of pinning a second
     // full-precision copy of the model per shard for the thread's lifetime.
@@ -529,33 +633,204 @@ fn shard_worker(
     };
     let mut occ = ShardOccupancy { shard, ..Default::default() };
     let started = Instant::now();
+    // this shard's KV cache (decoding sequences are pinned to it) and the
+    // reused decode logits buffer — allocated once, never on the hot path
+    let mut kv = KvCache::new(geom, kv_budget, kv_prec);
+    let mut logits = vec![0.0f32; v];
 
     loop {
-        let (batch, stolen) = match queues.pop(shard, steal) {
+        let (work, stolen) = match queues.pop(shard, steal) {
             Popped::Own(w) => (w, false),
             Popped::Stolen(w, _from) => (w, true),
             Popped::Stop => break,
         };
-        #[cfg(test)]
-        if batch.iter().any(|r| r.context.first() == Some(&POISON_CONTEXT)) {
-            panic!("shard {shard}: poison request — simulated mid-flight crash");
-        }
         if stolen {
             occ.steals += 1;
         }
-        execute_batch(batch, &ex, &qm, (b, s, v), (shard, net_us), &mut metrics, &mut occ);
-        // done (or rejected/failed): release the window's depth slot so the
-        // shortest-queue heuristic sees this shard as free again
+        match work {
+            Work::Prefill(batch) => {
+                #[cfg(test)]
+                if batch.iter().any(|r| r.context.first() == Some(&POISON_CONTEXT)) {
+                    panic!("shard {shard}: poison request — simulated mid-flight crash");
+                }
+                // generation requests leave the window here: each becomes a
+                // pinned decode job on this shard's queue
+                let (gen, classic): (Vec<Request>, Vec<Request>) =
+                    batch.into_iter().partition(|r| r.max_new_tokens > 1);
+                for r in gen {
+                    start_decode(
+                        r, n_blocks, (s, v), &mut kv, shard, &queues, &mut metrics, &mut occ,
+                    );
+                }
+                if !classic.is_empty() {
+                    execute_batch(
+                        classic, &ex, &qm, (b, s, v), (shard, net_us), &mut metrics, &mut occ,
+                    );
+                }
+            }
+            Work::Decode(job) => {
+                if stolen {
+                    // rescued off a dead peer's queue: its KV pages died
+                    // with that shard — fail the stream cleanly, exactly
+                    // once (the queue popped it exactly once)
+                    fail_decode(job, shard, &mut metrics, &mut occ);
+                } else if let Some(job) = decode_turn(
+                    job, &ex, &qm, &mut kv, &mut logits, (shard, s, v), &mut metrics, &mut occ,
+                ) {
+                    // more tokens to generate: go to the back of the queue
+                    // so prefill windows that arrived meanwhile interleave
+                    queues.push(shard, Work::Decode(job));
+                }
+            }
+        }
+        // done (or rejected/failed/requeued): release the window's depth
+        // slot so the shortest-queue heuristic sees this shard as free again
         queues.complete(shard);
     }
     guard.armed = false;
     occ.wakes = queues.wake_count(shard);
     metrics.steals = occ.steals;
     metrics.wakes = occ.wakes;
+    metrics.kv_bytes = kv.peak_bytes();
     metrics.wall_time = started.elapsed();
     metrics.shards = vec![occ];
     let _ = results.send(metrics);
     Ok(())
+}
+
+/// Answer a decode request with a single terminal `INVALID_TOKEN` response
+/// (validation failure, KV budget exhaustion, or dead-shard rescue). The
+/// caller's stream ends here — channel closed after exactly one failure
+/// marker, never a dangling wait.
+fn fail_decode(
+    job: DecodeJob,
+    shard: usize,
+    metrics: &mut ServingMetrics,
+    occ: &mut ShardOccupancy,
+) {
+    metrics.completed += 1;
+    metrics.rejected += 1;
+    occ.completed += 1;
+    let _ = job.req.resp.send(Response {
+        id: job.req.id,
+        next_token: INVALID_TOKEN,
+        latency: job.req.submitted.elapsed(),
+        network_latency_us: 0,
+        batch_size: 0,
+        shard,
+    });
+}
+
+/// Validate a generation request and seat its decoding sequence on this
+/// shard: reserve the sequence's KV window up front (so steady-state decode
+/// turns never allocate) and queue the pinned decode job behind the current
+/// work. Invalid contexts and budget overruns are failed immediately with
+/// `INVALID_TOKEN` semantics.
+#[allow(clippy::too_many_arguments)]
+fn start_decode(
+    req: Request,
+    n_blocks: usize,
+    (s, v): (usize, usize),
+    kv: &mut KvCache,
+    shard: usize,
+    queues: &ShardQueues<Work>,
+    metrics: &mut ServingMetrics,
+    occ: &mut ShardOccupancy,
+) {
+    // same validation rule as the prefill path: only the seq_len prefix is
+    // ever executed, and it must be entirely in-vocab; generation also
+    // needs at least one context token to ingest
+    let ctx_len = req.context.len().min(s);
+    let valid =
+        ctx_len > 0 && req.context[..ctx_len].iter().all(|&t| t >= 0 && (t as usize) < v);
+    let state = DecodeState::new(req.id, n_blocks);
+    if !valid {
+        fail_decode(DecodeJob { req, state, produced: 0, next_input: 0 }, shard, metrics, occ);
+        return;
+    }
+    // the context plus every generated token except the last must fit the
+    // window; reserve that many KV slots per block now (saturating: a
+    // caller-controlled max_new_tokens near usize::MAX must not overflow —
+    // ctx_len >= 1 here, so this equals ctx_len + max_new_tokens - 1)
+    let window = (ctx_len - 1).saturating_add(req.max_new_tokens).min(s);
+    if let Err(e) = state.reserve(kv, window) {
+        eprintln!("shard {shard}: request {}: {e:#}", req.id);
+        state.release(kv);
+        fail_decode(DecodeJob { req, state, produced: 0, next_input: 0 }, shard, metrics, occ);
+        return;
+    }
+    queues.push(shard, Work::Decode(DecodeJob { req, state, produced: 0, next_input: 0 }));
+}
+
+/// Run one queue turn of a decoding sequence. The first turn ingests the
+/// whole (seq_len-truncated) context through `decode_step` — populating the
+/// sequence's KV pages and producing the first generated token, which at
+/// Raw KV precision is bit-identical to what the batched prefill would have
+/// answered — and every later turn advances exactly one token. Each
+/// generated token streams back as its own `Response`. Returns the job when
+/// more tokens remain, `None` when the stream is finished (or failed).
+#[allow(clippy::too_many_arguments)]
+fn decode_turn(
+    mut job: DecodeJob,
+    ex: &ModelExecutor<'_>,
+    qm: &QuantizedModel,
+    kv: &mut KvCache,
+    logits: &mut [f32],
+    (shard, s, v): (usize, usize, usize),
+    metrics: &mut ServingMetrics,
+    occ: &mut ShardOccupancy,
+) -> Option<DecodeJob> {
+    let exec_start = Instant::now();
+    let stepped: Result<()> = if job.produced == 0 {
+        let ctx_len = job.req.context.len().min(s);
+        let mut r = Ok(());
+        for i in 0..ctx_len {
+            r = ex.decode_step_into(qm, job.req.context[i], &mut job.state, kv, logits);
+            metrics.decode_steps += 1;
+            if r.is_err() {
+                break;
+            }
+        }
+        r
+    } else {
+        metrics.decode_steps += 1;
+        ex.decode_step_into(qm, job.next_input, &mut job.state, kv, logits)
+    };
+    occ.busy_us += exec_start.elapsed().as_micros() as u64;
+    if let Err(e) = stepped {
+        // defensive: reservation makes this unreachable in practice, but a
+        // decode failure must end the stream cleanly, not kill the shard
+        eprintln!("shard {shard}: decode of request {} failed: {e:#}", job.req.id);
+        job.state.release(kv);
+        fail_decode(job, shard, metrics, occ);
+        return None;
+    }
+    let next = crate::model::sampler::argmax(&logits[..v]) as i32;
+    job.produced += 1;
+    job.next_input = next;
+    let delivered = job
+        .req
+        .resp
+        .send(Response {
+            id: job.req.id,
+            next_token: next,
+            latency: job.req.submitted.elapsed(),
+            network_latency_us: 0,
+            batch_size: 1,
+            shard,
+        })
+        .is_ok();
+    // the stream ends when the token budget is spent, the context window is
+    // full (no room to feed the new token back), or the caller went away
+    let done = job.produced >= job.req.max_new_tokens || job.state.pos() >= s || !delivered;
+    if done {
+        job.state.release(kv);
+        metrics.completed += 1;
+        metrics.latencies_us.push(job.req.submitted.elapsed().as_micros() as u64);
+        occ.completed += 1;
+        return None;
+    }
+    Some(job)
 }
 
 /// Execute one dispatched batch on a shard's replica: reject out-of-vocab
@@ -618,13 +893,7 @@ fn execute_batch(
     metrics.virtual_network_us += net_us;
     for (row, r) in batch.iter().enumerate() {
         let base = (row * s + pos[row]) * v;
-        // total_cmp: a NaN logit must not panic the shard thread
-        let next = logits[base..base + v]
-            .iter()
-            .enumerate()
-            .max_by(|a, b| a.1.total_cmp(b.1))
-            .map(|(i, _)| i as i32)
-            .unwrap();
+        let next = crate::model::sampler::argmax(&logits[base..base + v]) as i32;
         let latency = r.submitted.elapsed();
         metrics.completed += 1;
         metrics.latencies_us.push(latency.as_micros() as u64);
@@ -1033,6 +1302,250 @@ mod tests {
         assert!(m.completed <= 10);
     }
 
+    /// Submit `n_req` generation requests of `n_tok` tokens each and
+    /// collect the full response streams (the channel closes after the
+    /// terminal token, so `iter()` drains exactly one stream).
+    fn collect_streams(
+        model: &ModelDir,
+        workers: usize,
+        dispatch: DispatchPolicy,
+        kv: crate::quant::Precision,
+        n_req: usize,
+        n_tok: usize,
+    ) -> (Vec<Vec<i32>>, ServingMetrics) {
+        let plan =
+            QuantPlan::uniform(&model.schema.name, model.schema.n_blocks, Precision::Q8);
+        let cfg = ServeConfig {
+            max_batch: 4,
+            max_wait_us: 500,
+            workers,
+            dispatch,
+            kv_precision: kv,
+            ..Default::default()
+        };
+        let coord =
+            Coordinator::start_with_model(model.clone(), plan, cfg, 0, 0).unwrap();
+        let rxs: Vec<_> = (0..n_req)
+            .map(|i| {
+                coord.submit_gen(
+                    vec![(i % 64) as i32, ((i * 11 + 3) % 64) as i32],
+                    n_tok,
+                )
+            })
+            .collect();
+        let streams: Vec<Vec<i32>> = rxs
+            .into_iter()
+            .map(|rx| rx.iter().map(|r| r.next_token).collect())
+            .collect();
+        (streams, coord.shutdown())
+    }
+
+    #[test]
+    fn generated_streams_are_invariant_across_workers_and_policies() {
+        // the generation acceptance invariant: a served generation request
+        // returns the identical token stream whether 1, 2 or 7 shard
+        // workers serve it, under every dispatch policy — sequences are
+        // pinned, decode is deterministic, and Raw KV is bit-identical to
+        // recompute, so scheduling must be unobservable in the stream
+        let model = tiny_model();
+        let (baseline, m) =
+            collect_streams(&model, 1, DispatchPolicy::WorkSteal, Precision::Raw, 6, 4);
+        assert_eq!(baseline.len(), 6);
+        for st in &baseline {
+            assert_eq!(st.len(), 4, "2-token context + 4 generated fits the window");
+            assert!(st.iter().all(|&t| (0..64).contains(&t)), "{st:?}");
+        }
+        assert!(m.decode_steps > 0, "generation must run through decode_step");
+        assert!(m.kv_bytes > 0, "kv pages must have been resident");
+        assert_eq!(m.completed, 6);
+        for policy in ALL_POLICIES {
+            for workers in [1usize, 2, 7, ParallelConfig::test_workers(3)] {
+                let (streams, m) =
+                    collect_streams(&model, workers, policy, Precision::Raw, 6, 4);
+                assert_eq!(
+                    baseline,
+                    streams,
+                    "workers={workers} policy={}",
+                    policy.label()
+                );
+                assert_eq!(m.completed, 6);
+                assert_eq!(m.rejected, 0);
+            }
+        }
+    }
+
+    #[test]
+    fn quantized_kv_streams_are_deterministic_and_valid() {
+        let model = tiny_model();
+        for kv in [Precision::Q8, Precision::Q4] {
+            let (a, m) = collect_streams(&model, 1, DispatchPolicy::WorkSteal, kv, 4, 3);
+            let (b, _) = collect_streams(&model, 2, DispatchPolicy::ShortestQueue, kv, 4, 3);
+            assert_eq!(a, b, "quantized-kv decode is still deterministic ({})", kv.label());
+            for st in &a {
+                assert_eq!(st.len(), 3);
+                assert!(st.iter().all(|&t| (0..64).contains(&t)));
+            }
+            assert!(m.kv_bytes > 0);
+        }
+        // unsupported kv codecs are rejected at startup, not mid-flight
+        let plan = QuantPlan::uniform("tiny-serve", 2, Precision::Q8);
+        let cfg = ServeConfig { kv_precision: Precision::T2, ..Default::default() };
+        assert!(Coordinator::start_with_model(tiny_model(), plan, cfg, 0, 0).is_err());
+    }
+
+    #[test]
+    fn generation_and_classic_requests_interleave_on_the_same_shards() {
+        let model = tiny_model();
+        let plan =
+            QuantPlan::uniform(&model.schema.name, model.schema.n_blocks, Precision::Q8);
+        let cfg = ServeConfig { max_batch: 4, max_wait_us: 300, workers: 2, ..Default::default() };
+        let coord = Coordinator::start_with_model(model, plan, cfg, 0, 0).unwrap();
+        let gen_rxs: Vec<_> = (0..4).map(|i| coord.submit_gen(vec![i % 64, 5], 5)).collect();
+        let classic_rxs: Vec<_> = (0..8).map(|i| coord.submit(vec![i % 64, 2, 3])).collect();
+        for (i, rx) in classic_rxs.into_iter().enumerate() {
+            let resps: Vec<Response> = rx.iter().collect();
+            assert_eq!(resps.len(), 1, "classic request {i} answers exactly once");
+            assert!((0..64).contains(&resps[0].next_token));
+        }
+        for (i, rx) in gen_rxs.into_iter().enumerate() {
+            let toks: Vec<i32> = rx.iter().map(|r| r.next_token).collect();
+            assert_eq!(toks.len(), 5, "gen request {i} streams 5 tokens: {toks:?}");
+            assert!(toks.iter().all(|&t| (0..64).contains(&t)));
+        }
+        let m = coord.shutdown();
+        assert_eq!(m.completed, 12);
+        assert!(m.batches >= 1, "classic windows executed as batched prefill");
+        // 4 sequences x (2 ingest + 4 extra) decode steps
+        assert_eq!(m.decode_steps, 4 * 6);
+    }
+
+    #[test]
+    fn generation_respects_the_context_window() {
+        let model = tiny_model(); // seq_len 8
+        let plan =
+            QuantPlan::uniform(&model.schema.name, model.schema.n_blocks, Precision::Q8);
+        let cfg = ServeConfig { max_batch: 2, max_wait_us: 300, workers: 1, ..Default::default() };
+        let coord = Coordinator::start_with_model(model, plan, cfg, 0, 0).unwrap();
+        // a full-window context leaves room for exactly one generated token
+        let full = coord.submit_gen((0..8).collect(), 5);
+        // an over-long context is truncated to the window first
+        let long = coord.submit_gen((0..12).collect(), 5);
+        // 6 context tokens leave room for 3 of the 5 requested tokens
+        let partial = coord.submit_gen((0..6).collect(), 5);
+        // an absurd token budget must not overflow the reservation math:
+        // the stream is simply capped by the window (7 tokens after a
+        // 2-token context), never failed or panicked
+        let huge = coord.submit_gen(vec![1, 2], usize::MAX);
+        assert_eq!(full.iter().count(), 1);
+        assert_eq!(long.iter().count(), 1);
+        assert_eq!(partial.iter().count(), 3);
+        let huge_toks: Vec<i32> = huge.iter().map(|r| r.next_token).collect();
+        assert_eq!(huge_toks.len(), 7, "window-capped: {huge_toks:?}");
+        assert!(huge_toks.iter().all(|&t| t != INVALID_TOKEN));
+        let m = coord.shutdown();
+        assert_eq!(m.completed, 4);
+        assert_eq!(m.rejected, 0, "window-limited streams are completions, not failures");
+    }
+
+    #[test]
+    fn invalid_generation_requests_fail_with_one_terminal_sentinel() {
+        let model = tiny_model();
+        let plan =
+            QuantPlan::uniform(&model.schema.name, model.schema.n_blocks, Precision::Q8);
+        let cfg = ServeConfig { max_batch: 2, max_wait_us: 300, workers: 2, ..Default::default() };
+        let coord = Coordinator::start_with_model(model.clone(), plan.clone(), cfg, 0, 0).unwrap();
+        let empty = coord.submit_gen(vec![], 4);
+        let bad = coord.submit_gen(vec![1, 9999], 4);
+        let good = coord.submit_gen(vec![1, 2], 4);
+        for (name, rx) in [("empty", empty), ("out-of-vocab", bad)] {
+            let resps: Vec<Response> = rx.iter().collect();
+            assert_eq!(resps.len(), 1, "{name}: exactly one terminal response");
+            assert_eq!(resps[0].next_token, INVALID_TOKEN, "{name}");
+        }
+        assert_eq!(good.iter().count(), 4, "valid generation unaffected");
+        let m = coord.shutdown();
+        assert_eq!(m.completed, 3);
+        assert_eq!(m.rejected, 2);
+        // a kv budget too small for even one page fails generations cleanly
+        // (and classic requests, which never touch the cache, still work)
+        let cfg = ServeConfig { kv_budget_mb: 0.0, max_wait_us: 300, ..Default::default() };
+        let coord = Coordinator::start_with_model(model, plan, cfg, 0, 0).unwrap();
+        let starved = coord.submit_gen(vec![1, 2], 4);
+        let resps: Vec<Response> = starved.iter().collect();
+        assert_eq!(resps.len(), 1);
+        assert_eq!(resps[0].next_token, INVALID_TOKEN);
+        let classic = coord.submit(vec![1, 2, 3]);
+        let answered = classic.recv_timeout(Duration::from_secs(120)).unwrap().next_token;
+        assert!((0..64).contains(&answered));
+        let m = coord.shutdown();
+        assert_eq!(m.kv_bytes, 0, "nothing was ever resident in the starved cache");
+    }
+
+    #[test]
+    fn poisoned_shard_mid_generation_fails_stranded_streams_exactly_once() {
+        // the decode extension of the poison-pill test, under EVERY policy:
+        // generation sequences in flight on the dying shard are either
+        // completed by it before death, or rescued off its queue and failed
+        // with exactly one terminal INVALID_TOKEN — never answered twice,
+        // never left hanging on an open channel
+        for policy in ALL_POLICIES {
+            let model = tiny_model();
+            let plan =
+                QuantPlan::uniform(&model.schema.name, model.schema.n_blocks, Precision::Q8);
+            let cfg = ServeConfig {
+                max_batch: 1,
+                max_wait_us: 200,
+                workers: 2,
+                dispatch: policy,
+                ..Default::default()
+            };
+            let coord = Coordinator::start_with_model(model, plan, cfg, 0, 0).unwrap();
+            // generations first so decode jobs are live when the poison lands
+            let gen_rxs: Vec<_> =
+                (0..8).map(|i| coord.submit_gen(vec![(i % 64) as i32, 3], 4)).collect();
+            let poisoned = coord.submit(vec![POISON_CONTEXT]);
+            let late: Vec<_> = (0..4).map(|i| coord.submit(vec![(i % 64) as i32, 1])).collect();
+            assert!(
+                poisoned.recv_timeout(Duration::from_secs(120)).is_err(),
+                "poisoned request must never be answered (policy={})",
+                policy.label()
+            );
+            for (i, rx) in gen_rxs.into_iter().enumerate() {
+                let toks: Vec<i32> = rx.iter().map(|r| r.next_token).collect();
+                assert!(
+                    !toks.is_empty() && toks.len() <= 4,
+                    "gen {i} stream bounds (policy={}): {toks:?}",
+                    policy.label()
+                );
+                let invalids = toks.iter().filter(|&&t| t == INVALID_TOKEN).count();
+                assert!(invalids <= 1, "gen {i}: at most one failure marker: {toks:?}");
+                if invalids == 1 {
+                    assert_eq!(
+                        *toks.last().unwrap(),
+                        INVALID_TOKEN,
+                        "gen {i}: the failure marker is terminal: {toks:?}"
+                    );
+                }
+                for &t in &toks[..toks.len() - invalids] {
+                    assert!((0..64).contains(&t), "gen {i}: valid tokens before the end");
+                }
+                // a stream the shard finished before dying is complete
+                if invalids == 0 {
+                    assert_eq!(toks.len(), 4, "gen {i}: completed streams are full: {toks:?}");
+                }
+            }
+            // classic requests submitted after the poison still get answered
+            // exactly once (directly or via rescue)
+            for (i, rx) in late.into_iter().enumerate() {
+                let resps: Vec<Response> = rx.iter().collect();
+                assert_eq!(resps.len(), 1, "late {i} answered exactly once");
+                assert!((0..64).contains(&resps[0].next_token));
+            }
+            let m = coord.shutdown();
+            assert!(m.shards.len() < 2, "dead shard must not report occupancy");
+        }
+    }
+
     #[test]
     fn serves_batched_requests_end_to_end() {
         let Some(path) = model_path() else { return };
@@ -1093,6 +1606,8 @@ mod tests {
             resident_weight_bytes: 0,
             steals: 0,
             wakes: 0,
+            decode_steps: 0,
+            kv_bytes: 0,
             shards: Vec::new(),
         };
         assert_eq!(m.percentile_us(0.0), 10);
@@ -1135,6 +1650,8 @@ mod tests {
             resident_weight_bytes: 1000,
             steals: 2,
             wakes: 5,
+            decode_steps: 3,
+            kv_bytes: 100,
             shards: vec![ShardOccupancy {
                 shard: 1,
                 completed: 3,
@@ -1155,6 +1672,8 @@ mod tests {
             resident_weight_bytes: 1000,
             steals: 1,
             wakes: 3,
+            decode_steps: 2,
+            kv_bytes: 50,
             shards: vec![ShardOccupancy {
                 shard: 0,
                 completed: 2,
@@ -1174,6 +1693,9 @@ mod tests {
         assert_eq!(a.resident_weight_bytes, 2000, "replica footprints sum across shards");
         assert_eq!(a.steals, 3, "steal counts sum across shards");
         assert_eq!(a.wakes, 8, "park/wake transitions sum across shards");
+        assert_eq!(a.decode_steps, 5, "decode step counts sum across shards");
+        assert_eq!(a.kv_bytes, 150, "kv peaks sum across shards");
+        assert!(a.summary().contains("decode 5 steps"));
         assert_eq!(a.latencies_us.len(), 5);
         // shards sorted by id after merge
         assert_eq!(a.shards.iter().map(|s| s.shard).collect::<Vec<_>>(), vec![0, 1]);

@@ -19,6 +19,19 @@ use std::sync::{Condvar, Mutex};
 
 use crate::par::lock;
 
+/// Steal eligibility of a queued window. **Pinned** windows reference
+/// shard-local state (a decoding sequence's KV pages live in its shard's
+/// cache), so live peers must not steal them — the work would execute
+/// against the wrong cache. Dead-shard rescue still removes pinned
+/// windows: the rescuer cannot continue them, but it can fail them cleanly
+/// (INVALID_TOKEN semantics), exactly once, instead of leaving callers
+/// waiting forever on a channel nobody will ever close.
+pub(crate) trait Pinnable {
+    fn pinned(&self) -> bool {
+        false
+    }
+}
+
 struct QueueState<W> {
     queues: Vec<VecDeque<W>>,
     /// Shards that died (worker unwound); peers drain their queues.
@@ -49,7 +62,7 @@ pub(crate) struct ShardQueues<W> {
     wakes: Vec<AtomicUsize>,
 }
 
-impl<W> ShardQueues<W> {
+impl<W: Pinnable> ShardQueues<W> {
     pub(crate) fn new(n_shards: usize) -> Self {
         Self {
             state: Mutex::new(QueueState {
@@ -114,11 +127,13 @@ impl<W> ShardQueues<W> {
 
     /// Blocking pop for shard `me`. Resolution order: own queue front →
     /// steal/rescue (deepest eligible peer queue's oldest window; dead
-    /// peers are always eligible, live peers only when `steal`) → stop →
-    /// park. A returned `Own`/`Stolen` window occupies one depth slot on
-    /// `me` until `complete(me)`. Pushes broadcast on one shared condvar —
-    /// at fleet scale (a handful of shards) the futile wakes are cheaper
-    /// than per-shard condvars, and they are NOT counted: a wake is
+    /// peers are always eligible — any window — while live peers are
+    /// eligible only when `steal` and only for their oldest **non-pinned**
+    /// window: pinned windows are welded to their shard's local state) →
+    /// stop → park. A returned `Own`/`Stolen` window occupies one depth
+    /// slot on `me` until `complete(me)`. Pushes broadcast on one shared
+    /// condvar — at fleet scale (a handful of shards) the futile wakes are
+    /// cheaper than per-shard condvars, and they are NOT counted: a wake is
     /// recorded only when a worker that actually parked comes back with
     /// work, so the occupancy telemetry stays honest.
     pub(crate) fn pop(&self, me: usize, steal: bool) -> Popped<W> {
@@ -135,11 +150,26 @@ impl<W> ShardQueues<W> {
                 .queues
                 .iter()
                 .enumerate()
-                .filter(|&(j, q)| j != me && !q.is_empty() && (steal || st.dead[j]))
+                .filter(|&(j, q)| {
+                    j != me
+                        && if st.dead[j] {
+                            !q.is_empty()
+                        } else {
+                            steal && q.iter().any(|w| !w.pinned())
+                        }
+                })
                 .max_by_key(|&(j, q)| (q.len(), std::cmp::Reverse(j)))
                 .map(|(j, _)| j);
             if let Some(j) = victim {
-                let w = st.queues[j].pop_front().expect("victim queue non-empty under lock");
+                let w = if st.dead[j] {
+                    st.queues[j].pop_front().expect("victim queue non-empty under lock")
+                } else {
+                    let idx = st.queues[j]
+                        .iter()
+                        .position(|w| !w.pinned())
+                        .expect("live victim has a stealable window under lock");
+                    st.queues[j].remove(idx).expect("index in bounds under lock")
+                };
                 // the window's depth slot moves with it
                 self.depths[j].fetch_sub(1, Ordering::SeqCst);
                 self.depths[me].fetch_add(1, Ordering::SeqCst);
@@ -162,6 +192,54 @@ impl<W> ShardQueues<W> {
 mod tests {
     use super::*;
     use std::sync::Arc;
+
+    impl Pinnable for u32 {}
+
+    /// Test window with an explicit pin bit.
+    #[derive(Debug, PartialEq, Eq)]
+    enum TW {
+        Free(u32),
+        Pinned(u32),
+    }
+
+    impl Pinnable for TW {
+        fn pinned(&self) -> bool {
+            matches!(self, TW::Pinned(_))
+        }
+    }
+
+    #[test]
+    fn pinned_windows_resist_live_steal_but_drain_at_home() {
+        let q: ShardQueues<TW> = ShardQueues::new(2);
+        q.push(0, TW::Pinned(1));
+        q.push(0, TW::Free(2));
+        q.push(0, TW::Pinned(3));
+        // a live steal skips the pinned front and takes the oldest free window
+        assert_eq!(q.pop(1, true), Popped::Stolen(TW::Free(2), 0));
+        assert_eq!(q.depth_snapshot(), vec![2, 1], "depth slot moved with the steal");
+        q.stop();
+        // only pinned windows remain on the live peer: nothing to steal
+        assert_eq!(q.pop(1, true), Popped::Stop);
+        // the owner drains its pinned windows normally, in order
+        assert_eq!(q.pop(0, true), Popped::Own(TW::Pinned(1)));
+        assert_eq!(q.pop(0, true), Popped::Own(TW::Pinned(3)));
+        assert_eq!(q.pop(0, true), Popped::Stop);
+    }
+
+    #[test]
+    fn pinned_windows_are_rescued_from_dead_shards_exactly_once() {
+        let q: ShardQueues<TW> = ShardQueues::new(3);
+        q.push(0, TW::Pinned(7));
+        q.push(0, TW::Free(8));
+        q.mark_dead(0);
+        // dead-shard rescue takes everything, oldest first, pinned included
+        // (the serving layer fails rescued pinned windows cleanly)
+        assert_eq!(q.pop(1, false), Popped::Stolen(TW::Pinned(7), 0));
+        assert_eq!(q.pop(2, false), Popped::Stolen(TW::Free(8), 0));
+        q.stop();
+        assert_eq!(q.pop(1, false), Popped::Stop);
+        assert_eq!(q.pop(2, true), Popped::Stop);
+    }
 
     #[test]
     fn own_queue_drains_fifo() {
