@@ -1,6 +1,6 @@
 # Repo-level convenience targets. `make verify` mirrors the tier-1 gate.
 
-.PHONY: verify fmt clippy test bench bench-smoke bench-compare artifacts
+.PHONY: verify fmt clippy test test-scalar bench bench-smoke bench-compare artifacts
 
 verify:
 	cd rust && cargo build --release && cargo test -q
@@ -13,6 +13,11 @@ clippy:
 
 test:
 	cd rust && cargo test -q
+
+# The full suite on the portable scalar kernels (the SIMD dispatch pinned
+# off) — what the CI force_scalar matrix cell runs.
+test-scalar:
+	cd rust && EWQ_FORCE_SCALAR=1 cargo test -q
 
 bench:
 	cd rust && cargo bench
@@ -32,10 +37,11 @@ bench-smoke:
 	cd rust && EWQ_BENCH_QUICK=1 EWQ_BENCH_OUT=../BENCH_decode.json \
 		cargo bench --bench bench_decode
 
-# Fail if bench-smoke's fused-GEMM GFLOP/s or decode tokens/s regressed
-# >20% vs the committed baseline (EWQ_BENCH_TOLERANCE to tune,
-# EWQ_BENCH_COMPARE_MODE=warn to downgrade — CI runs warn-only until a
-# baseline measured on the CI runners themselves is committed). Run
+# Fail if bench-smoke's fused-GEMM / fused-GEMV GFLOP/s or decode tokens/s
+# regressed >20% vs the committed baseline, or if the SIMD fused GEMM fell
+# under 2x the scalar GFLOP/s on Q8/Q4 while a vector path was dispatched
+# (EWQ_BENCH_TOLERANCE / EWQ_BENCH_SIMD_MIN to tune,
+# EWQ_BENCH_COMPARE_MODE=warn to downgrade — CI enforces). Run
 # `make bench-smoke` first.
 bench-compare:
 	cd rust && cargo run --release --bin bench_compare -- \

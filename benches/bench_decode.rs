@@ -121,13 +121,15 @@ fn main() {
 
     let out = std::env::var("EWQ_BENCH_OUT").unwrap_or_else(|_| "BENCH_decode.json".into());
     let json = format!(
-        "{{\n  \"model\": \"{}\",\n  \"plan\": \"mixed-q4q8\",\n  \"decode_window\": {},\n  \
+        "{{\n  \"model\": \"{}\",\n  \"plan\": \"mixed-q4q8\",\n  \"kernel_path\": \"{}\",\n  \
+         \"decode_window\": {},\n  \
          \"decode_tok_s_raw_kv\": {tok_s_raw:.3},\n  \"decode_tok_s_q8_kv\": {tok_s_q8:.3},\n  \
          \"decode_tok_s_q4_kv\": {tok_s_q4:.3},\n  \"recompute_tok_s\": {recompute_tok_s:.3},\n  \
          \"decode_speedup_vs_recompute\": {speedup:.3},\n  \"kv_bytes_per_seq_raw\": {kv_raw},\n  \
          \"kv_bytes_per_seq_q8\": {kv_q8},\n  \"kv_bytes_per_seq_q4\": {kv_q4},\n  \
          \"kv_q4_residency_vs_raw\": {:.4}\n}}\n",
         s.name,
+        ewq::kernels::kernel_path().label(),
         s.seq_len,
         kv_q4 as f64 / kv_raw as f64,
     );

@@ -5,6 +5,14 @@
 //! when artifacts exist (`make artifacts`) the trained tl-phi precision
 //! sweep runs too.
 //!
+//! Also measures the kernels in isolation: a scalar-vs-SIMD fused-GEMM
+//! comparison on Q8/Q4 (the `gemm_gflops_*_{scalar,simd}` keys the CI
+//! SIMD gate in `bench_compare` enforces a ≥2x ratio on when the runner
+//! has AVX2) and per-precision fused-GEMV GFLOP/s (the decode inner loop —
+//! `bench_decode` only surfaces tokens/s). The emitted JSON records the
+//! selected kernel path (`scalar`/`avx2`) and the banding the forward's
+//! widest GEMM shape chose (`rows`/`cols`).
+//!
 //! Emits machine-readable `BENCH_kernels.json` (override the path with
 //! `EWQ_BENCH_OUT`; `EWQ_BENCH_QUICK=1` shortens the sampling budget for
 //! the CI smoke lane — see `make bench-smoke`).
@@ -12,11 +20,16 @@
 use ewq::bench_util::{black_box, report_speedup, Bench, Sample};
 use ewq::config::ParallelConfig;
 use ewq::ewq::QuantPlan;
+use ewq::kernels::{
+    gemm_banding, kernel_path, matmul_qmat_with, matvec_qmat_path, Banding, KernelPath, TilePool,
+};
 use ewq::model::refexec::{dequantize_blocks, forward_dequant, ForwardPass};
 use ewq::model::{ModelExecutor, QuantizedModel};
 use ewq::par::Pool;
-use ewq::quant::Precision;
+use ewq::quant::{quantize, Precision};
+use ewq::rng::Xoshiro256pp;
 use ewq::runtime::Runtime;
+use ewq::tensor::Tensor;
 use ewq::zoo::gen::{synthetic_model_dir, Profile, SyntheticArch};
 use ewq::zoo::{ModelDir, Schema};
 
@@ -68,39 +81,52 @@ fn gflops(flops: f64, s: &Sample) -> f64 {
     flops / s.mean.as_secs_f64() / 1e9
 }
 
-#[allow(clippy::too_many_arguments)]
-fn write_json(
-    path: &str,
-    model: &str,
-    workers: usize,
-    (s_ref, s_fused1, s_fusedn): (&Sample, &Sample, &Sample),
-    flops: f64,
-    (resident, f32_equiv, shadow): (usize, usize, usize),
-) {
-    let json = format!(
-        "{{\n  \"model\": \"{model}\",\n  \"plan\": \"mixed-q4q8\",\n  \"workers\": {workers},\n  \
-         \"serial_reference_ms\": {:.4},\n  \"fused_serial_ms\": {:.4},\n  \
-         \"fused_pooled_ms\": {:.4},\n  \"speedup_fused_serial\": {:.3},\n  \
-         \"speedup_fused_pooled\": {:.3},\n  \"gflops_serial_reference\": {:.3},\n  \
-         \"gflops_fused_serial\": {:.3},\n  \"gflops_fused_pooled\": {:.3},\n  \
-         \"resident_bytes\": {resident},\n  \"f32_equivalent_bytes\": {f32_equiv},\n  \
-         \"shadow_copy_bytes\": {shadow},\n  \"resident_ratio_vs_f32\": {:.4},\n  \
-         \"resident_ratio_vs_shadow\": {:.4}\n}}\n",
-        s_ref.mean.as_secs_f64() * 1e3,
-        s_fused1.mean.as_secs_f64() * 1e3,
-        s_fusedn.mean.as_secs_f64() * 1e3,
-        s_fused1.speedup_over(s_ref),
-        s_fusedn.speedup_over(s_ref),
-        gflops(flops, s_ref),
-        gflops(flops, s_fused1),
-        gflops(flops, s_fusedn),
-        resident as f64 / f32_equiv.max(1) as f64,
-        resident as f64 / shadow.max(1) as f64,
-    );
-    match std::fs::write(path, &json) {
-        Ok(()) => println!("wrote {path}"),
-        Err(e) => eprintln!("could not write {path}: {e}"),
-    }
+fn rand_vec(len: usize, seed: u64) -> Vec<f32> {
+    let mut r = Xoshiro256pp::new(seed);
+    (0..len).map(|_| r.normal_f32(0.0, 0.7)).collect()
+}
+
+/// Fused-GEMM GFLOP/s of one precision on one forced inner-loop path
+/// (serial pool and fixed row banding, so the path is the only variable —
+/// the SIMD gate's numerator and denominator). The 8-row shape is the
+/// batched decode-sized GEMM: shallow enough that the dequant unpack —
+/// where explicit SIMD beats the autovectorizer hardest — carries a
+/// realistic share of the cost next to the axpy accumulation.
+fn gemm_kernel_gflops(b: &Bench, prec: Precision, path: KernelPath) -> f64 {
+    let (m, k, n) = (8usize, 512usize, 512usize);
+    let a = rand_vec(m * k, 11);
+    let w = quantize(&Tensor::new(vec![k, n], rand_vec(k * n, 12)), prec);
+    let pool = Pool::serial();
+    let tiles = TilePool::new(&pool);
+    let mut out = vec![0.0f32; m * n];
+    let s = b.run(&format!("gemm {}x{k}x{n} {} [{}]", m, prec.label(), path.label()), || {
+        matmul_qmat_with(
+            black_box(&a),
+            &w,
+            m,
+            &pool,
+            &tiles,
+            path,
+            Banding::Rows,
+            black_box(&mut out),
+        );
+    });
+    gflops(2.0 * (m * k * n) as f64, &s)
+}
+
+/// Fused-GEMV GFLOP/s of one precision on the selected path (the decode
+/// inner loop, serial pool — what a single decode step's matvecs achieve).
+fn gemv_kernel_gflops(b: &Bench, prec: Precision, path: KernelPath) -> f64 {
+    let (k, n) = (512usize, 512usize);
+    let a = rand_vec(k, 21);
+    let w = quantize(&Tensor::new(vec![k, n], rand_vec(k * n, 22)), prec);
+    let pool = Pool::serial();
+    let tiles = TilePool::new(&pool);
+    let mut out = vec![0.0f32; n];
+    let s = b.run(&format!("gemv {k}x{n} {} [{}]", prec.label(), path.label()), || {
+        matvec_qmat_path(black_box(&a), &w, &pool, &tiles, path, black_box(&mut out));
+    });
+    gflops(2.0 * (k * n) as f64, &s)
 }
 
 fn main() {
@@ -152,6 +178,44 @@ fn main() {
         gflops(flops, &s_fusedn)
     );
 
+    // kernel-layer microbenches: the dispatcher's selections...
+    let path = kernel_path();
+    let fwd_banding = gemm_banding(bsz * sl, model.schema.d_ff, &pool);
+    println!(
+        "    kernel path: {} | forward GEMM banding ({}x{}, x{} workers): {}",
+        path.label(),
+        bsz * sl,
+        model.schema.d_ff,
+        pool.workers(),
+        fwd_banding.label()
+    );
+
+    // ...the scalar-vs-SIMD fused-GEMM comparison the CI gate enforces...
+    let gemm_q8_scalar = gemm_kernel_gflops(&b, Precision::Q8, KernelPath::Scalar);
+    let gemm_q8_simd = gemm_kernel_gflops(&b, Precision::Q8, path);
+    let gemm_q4_scalar = gemm_kernel_gflops(&b, Precision::Q4, KernelPath::Scalar);
+    let gemm_q4_simd = gemm_kernel_gflops(&b, Precision::Q4, path);
+    println!(
+        "    => fused GEMM GFLOP/s scalar -> {}: q8 {gemm_q8_scalar:.2} -> {gemm_q8_simd:.2} \
+         ({:.2}x), q4 {gemm_q4_scalar:.2} -> {gemm_q4_simd:.2} ({:.2}x)",
+        path.label(),
+        gemm_q8_simd / gemm_q8_scalar.max(1e-9),
+        gemm_q4_simd / gemm_q4_scalar.max(1e-9)
+    );
+
+    // ...and per-precision fused-GEMV GFLOP/s (the decode inner loop)
+    let gemv: Vec<(Precision, f64)> =
+        [Precision::Raw, Precision::Q8, Precision::Q4, Precision::Q3, Precision::T2]
+            .into_iter()
+            .map(|p| (p, gemv_kernel_gflops(&b, p, path)))
+            .collect();
+    let gemv_line = gemv
+        .iter()
+        .map(|(p, g)| format!("{} {g:.2}", p.label()))
+        .collect::<Vec<_>>()
+        .join(", ");
+    println!("    => fused GEMV GFLOP/s [{}]: {gemv_line}", path.label());
+
     // resident-weight accounting: packed vs a fully-f32 model (the table's
     // baseline; the pre-kernel shadow-copy footprint — packed + f32 — goes
     // to the JSON separately as resident_ratio_vs_shadow)
@@ -166,15 +230,46 @@ fn main() {
     }
     println!("{}", ewq::report::resident_table(&rows).render());
 
-    let out = std::env::var("EWQ_BENCH_OUT").unwrap_or_else(|_| "BENCH_kernels.json".into());
-    write_json(
-        &out,
-        &model.schema.name,
+    let (resident, f32_equiv, shadow) =
+        (qm.resident_bytes(), qm.f32_equivalent_bytes(), qm.shadow_copy_bytes());
+    let gemv_json = gemv
+        .iter()
+        .map(|(p, g)| format!("  \"gemv_gflops_{}\": {g:.3},\n", p.label()))
+        .collect::<String>();
+    let json = format!(
+        "{{\n  \"model\": \"{}\",\n  \"plan\": \"mixed-q4q8\",\n  \"workers\": {},\n  \
+         \"kernel_path\": \"{}\",\n  \"gemm_banding\": \"{}\",\n  \
+         \"serial_reference_ms\": {:.4},\n  \"fused_serial_ms\": {:.4},\n  \
+         \"fused_pooled_ms\": {:.4},\n  \"speedup_fused_serial\": {:.3},\n  \
+         \"speedup_fused_pooled\": {:.3},\n  \"gflops_serial_reference\": {:.3},\n  \
+         \"gflops_fused_serial\": {:.3},\n  \"gflops_fused_pooled\": {:.3},\n  \
+         \"gemm_gflops_q8_scalar\": {gemm_q8_scalar:.3},\n  \
+         \"gemm_gflops_q8_simd\": {gemm_q8_simd:.3},\n  \
+         \"gemm_gflops_q4_scalar\": {gemm_q4_scalar:.3},\n  \
+         \"gemm_gflops_q4_simd\": {gemm_q4_simd:.3},\n{gemv_json}  \
+         \"resident_bytes\": {resident},\n  \"f32_equivalent_bytes\": {f32_equiv},\n  \
+         \"shadow_copy_bytes\": {shadow},\n  \"resident_ratio_vs_f32\": {:.4},\n  \
+         \"resident_ratio_vs_shadow\": {:.4}\n}}\n",
+        model.schema.name,
         pool.workers(),
-        (&s_ref, &s_fused1, &s_fusedn),
-        flops,
-        (qm.resident_bytes(), qm.f32_equivalent_bytes(), qm.shadow_copy_bytes()),
+        path.label(),
+        fwd_banding.label(),
+        s_ref.mean.as_secs_f64() * 1e3,
+        s_fused1.mean.as_secs_f64() * 1e3,
+        s_fusedn.mean.as_secs_f64() * 1e3,
+        s_fused1.speedup_over(&s_ref),
+        s_fusedn.speedup_over(&s_ref),
+        gflops(flops, &s_ref),
+        gflops(flops, &s_fused1),
+        gflops(flops, &s_fusedn),
+        resident as f64 / f32_equiv.max(1) as f64,
+        resident as f64 / shadow.max(1) as f64,
     );
+    let out = std::env::var("EWQ_BENCH_OUT").unwrap_or_else(|_| "BENCH_kernels.json".into());
+    match std::fs::write(&out, &json) {
+        Ok(()) => println!("wrote {out}"),
+        Err(e) => eprintln!("could not write {out}: {e}"),
+    }
 
     // trained-flagship sweep (kept from the PJRT era; needs `make artifacts`)
     let artifacts = ewq::artifacts_dir();

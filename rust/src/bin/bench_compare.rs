@@ -8,6 +8,10 @@
 //! ```text
 //! bench_compare <current.json>... <baseline.json>
 //!   EWQ_BENCH_TOLERANCE     allowed fractional drop (default 0.20 = 20%)
+//!   EWQ_BENCH_SIMD_MIN      required SIMD/scalar fused-GEMM GFLOP/s ratio
+//!                           on Q8 and Q4 when the runner dispatched a
+//!                           vector path (default 2.0; skipped when
+//!                           kernel_path is "scalar")
 //!   EWQ_BENCH_COMPARE_MODE  "enforce" (default) exits 1 on regression;
 //!                           "warn" reports but always exits 0 — the
 //!                           first-run stance until a baseline measured on
@@ -25,8 +29,15 @@
 //! the crate builds fully offline, so no JSON dependency is warranted.
 
 /// Tracked metrics: higher is better for all of them.
-const KEYS: [&str; 3] =
-    ["gflops_fused_serial", "gflops_fused_pooled", "decode_tok_s_raw_kv"];
+const KEYS: [&str; 7] = [
+    "gflops_fused_serial",
+    "gflops_fused_pooled",
+    "gemm_gflops_q8_simd",
+    "gemm_gflops_q4_simd",
+    "gemv_gflops_8bit",
+    "gemv_gflops_4bit",
+    "decode_tok_s_raw_kv",
+];
 
 /// Extract the number following `"key":` in a flat JSON document.
 fn extract_number(json: &str, key: &str) -> Option<f64> {
@@ -37,6 +48,64 @@ fn extract_number(json: &str, key: &str) -> Option<f64> {
         .find(|c: char| !(c.is_ascii_digit() || "+-.eE".contains(c)))
         .unwrap_or(rest.len());
     rest[..end].parse().ok()
+}
+
+/// Extract the string following `"key":` in a flat JSON document.
+fn extract_string<'a>(json: &'a str, key: &str) -> Option<&'a str> {
+    let needle = format!("\"{key}\"");
+    let at = json.find(&needle)?;
+    let rest = json[at + needle.len()..].trim_start().strip_prefix(':')?.trim_start();
+    let rest = rest.strip_prefix('"')?;
+    rest.split('"').next()
+}
+
+/// The SIMD hard gate: on a runner whose kernels dispatched to a vector
+/// path (`kernel_path != "scalar"`), the fused GEMM must be at least `min`
+/// times the scalar GFLOP/s on Q8 and Q4 — vectorization that stops paying
+/// is a regression even when the absolute numbers drift within tolerance.
+/// Returns the number of violated ratios; reports each.
+fn simd_gate(current: &str, min: f64) -> usize {
+    let Some(path) = extract_string(current, "kernel_path") else {
+        eprintln!("bench_compare: simd gate: kernel_path MISSING from current results");
+        return 1;
+    };
+    if path == "scalar" {
+        println!(
+            "bench_compare: simd gate: SKIPPED (kernel_path = scalar: no vector unit \
+             or EWQ_FORCE_SCALAR)"
+        );
+        return 0;
+    }
+    let mut violations = 0usize;
+    for prec in ["q8", "q4"] {
+        let scalar = extract_number(current, &format!("gemm_gflops_{prec}_scalar"));
+        let simd = extract_number(current, &format!("gemm_gflops_{prec}_simd"));
+        match (scalar, simd) {
+            (Some(sc), Some(si)) if sc > 0.0 => {
+                let ratio = si / sc;
+                if ratio < min {
+                    violations += 1;
+                    eprintln!(
+                        "bench_compare: simd gate: {prec} fused GEMM {path} is only \
+                         {ratio:.2}x scalar ({si:.3} vs {sc:.3} GFLOP/s; need >= {min:.1}x)"
+                    );
+                } else {
+                    println!(
+                        "bench_compare: simd gate: {prec} fused GEMM {path} {ratio:.2}x \
+                         scalar ({si:.3} vs {sc:.3} GFLOP/s) — ok"
+                    );
+                }
+            }
+            _ => {
+                violations += 1;
+                eprintln!(
+                    "bench_compare: simd gate: gemm_gflops_{prec}_scalar/_simd MISSING \
+                     from current results"
+                );
+            }
+        }
+    }
+    violations
 }
 
 /// A higher-is-better metric regressed if it dropped by more than `tol`
@@ -86,7 +155,11 @@ fn main() {
         }
     };
 
-    let mut regressions = 0usize;
+    let simd_min: f64 = std::env::var("EWQ_BENCH_SIMD_MIN")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(2.0);
+    let mut regressions = simd_gate(&current, simd_min);
     let mut skipped: Vec<&str> = Vec::new();
     for key in KEYS {
         let cur = match extract_number(&current, key) {
@@ -134,14 +207,15 @@ fn main() {
         let pct = tol * 100.0;
         if enforce {
             eprintln!(
-                "bench_compare: {regressions} metric(s) regressed more than {pct:.0}% or went \
-                 missing{skip_note} — failing (set EWQ_BENCH_COMPARE_MODE=warn to downgrade)"
+                "bench_compare: {regressions} metric(s) regressed more than {pct:.0}%, went \
+                 missing, or violated the simd gate{skip_note} — failing (set \
+                 EWQ_BENCH_COMPARE_MODE=warn to downgrade)"
             );
             std::process::exit(1);
         }
         println!(
-            "bench_compare: {regressions} metric(s) regressed more than {pct:.0}% or went \
-             missing{skip_note} — warn-only mode, not failing"
+            "bench_compare: {regressions} metric(s) regressed more than {pct:.0}%, went \
+             missing, or violated the simd gate{skip_note} — warn-only mode, not failing"
         );
     } else {
         println!("bench_compare: within {:.0}% of baseline{skip_note}", tol * 100.0);
@@ -178,6 +252,34 @@ mod tests {
         let doc = r#"{ "a": -3.5, "b": 1.2e-3 }"#;
         assert_eq!(extract_number(doc, "a"), Some(-3.5));
         assert_eq!(extract_number(doc, "b"), Some(1.2e-3));
+    }
+
+    #[test]
+    fn extracts_strings_from_flat_json() {
+        assert_eq!(extract_string(SAMPLE, "model"), Some("syn-kernels"));
+        assert_eq!(extract_string(SAMPLE, "missing"), None);
+        // a number value is not a string
+        assert_eq!(extract_string(SAMPLE, "workers"), None);
+        let doc = r#"{ "kernel_path": "avx2", "gemm_banding": "rows" }"#;
+        assert_eq!(extract_string(doc, "kernel_path"), Some("avx2"));
+        assert_eq!(extract_string(doc, "gemm_banding"), Some("rows"));
+    }
+
+    #[test]
+    fn simd_gate_passes_skips_and_fails() {
+        let pass = r#"{ "kernel_path": "avx2",
+            "gemm_gflops_q8_scalar": 1.0, "gemm_gflops_q8_simd": 2.5,
+            "gemm_gflops_q4_scalar": 1.0, "gemm_gflops_q4_simd": 2.0 }"#;
+        assert_eq!(simd_gate(pass, 2.0), 0, "at or above the ratio passes");
+        let fail = r#"{ "kernel_path": "avx2",
+            "gemm_gflops_q8_scalar": 1.0, "gemm_gflops_q8_simd": 1.5,
+            "gemm_gflops_q4_scalar": 1.0, "gemm_gflops_q4_simd": 2.5 }"#;
+        assert_eq!(simd_gate(fail, 2.0), 1, "one ratio below the bar");
+        let scalar = r#"{ "kernel_path": "scalar" }"#;
+        assert_eq!(simd_gate(scalar, 2.0), 0, "scalar runners skip the gate");
+        assert_eq!(simd_gate("{}", 2.0), 1, "missing kernel_path is a failure");
+        let partial = r#"{ "kernel_path": "avx2", "gemm_gflops_q8_scalar": 1.0 }"#;
+        assert_eq!(simd_gate(partial, 2.0), 2, "missing ratio inputs fail both");
     }
 
     #[test]

@@ -5,17 +5,26 @@
 //! Layout of one call (`matmul_qmat`, C = A·W with A `(m,k)` activations
 //! row-major and W a packed `(k,n)` matrix):
 //!
-//! - the output is split into contiguous **row bands** distributed over the
-//!   existing `par::Pool` (`Pool::par_bands_mut`) — each band is written by
-//!   exactly one worker, so results are bit-identical for any worker count;
-//! - inside a band, W is walked in `TILE_K × TILE_N` tiles. Each tile is
-//!   group-unpacked (`quant::dequantize_tile`) into a per-worker scratch
-//!   buffer (`TilePool`, 8 KiB — L1-resident) and then multiplied against
-//!   the band's activation rows with a stride-1 inner loop;
-//! - `k` is accumulated in ascending order for every output element, the
-//!   same order as the serial reference matmul, so the fused kernel is
-//!   **bit-identical** to `matmul(a, dequantize(w))` — quantization noise
-//!   is preserved exactly and precision-ladder experiments are unaffected;
+//! - the output is partitioned over the existing `par::Pool` by one of two
+//!   **banding strategies**, chosen by shape (`gemm_banding`):
+//!   - **row bands** (`Pool::par_bands_mut`): each worker owns contiguous
+//!     output rows and walks every `TILE_K × TILE_N` tile of W — the deep-m
+//!     strategy, where each band's tile unpack amortizes over many rows;
+//!   - **column bands** (`Pool::par_col_bands_mut`): each worker owns an
+//!     n-range and sweeps all m rows through its tiles, so every packed
+//!     tile is unpacked **exactly once per call** instead of once per row
+//!     band — the shallow-m strategy (small batches, decode-adjacent
+//!     shapes), at the cost of each worker re-reading the (m,k) activations;
+//! - inside a band, W tiles are group-unpacked (`quant::dequantize_tile_path`)
+//!   into a per-worker scratch buffer (`TilePool`, 8 KiB — L1-resident) and
+//!   multiplied against the activation rows with a stride-1 inner loop;
+//! - the inner loops are **SIMD** (`crate::simd`, AVX2 behind runtime
+//!   detection; `EWQ_FORCE_SCALAR` pins the portable scalar fallback),
+//!   vectorized across the **n** dimension only — one lane per output
+//!   column — so `k` still accumulates in ascending order for every output
+//!   element, the same order as the serial reference matmul. The fused
+//!   kernel is therefore **bit-identical** to `matmul(a, dequantize(w))`
+//!   for every precision, path, banding, and worker count (DESIGN.md §11);
 //! - `Payload::Raw` dispatches to `matmul_f32`, the k-tiled f32 kernel that
 //!   reads the payload in place (no tile copy needed).
 //!
@@ -28,7 +37,9 @@
 use std::sync::Mutex;
 
 use crate::par::Pool;
-use crate::quant::{dequantize_tile, Payload, QMat};
+use crate::quant::{dequantize_tile_path, Payload, QMat};
+use crate::simd::axpy;
+pub use crate::simd::{kernel_path, KernelPath};
 
 /// Tile height along the reduction (`k`) dimension. A multiple of every
 /// packing-group size (1/2/4/8 rows for Q8/Q4/T2/Q3), so every tile starts
@@ -60,6 +71,50 @@ impl TilePool {
     }
 }
 
+/// How `matmul_qmat` partitions its output over the pool. Either choice
+/// yields identical bits — every output element is produced whole inside
+/// one band, accumulating `k` in ascending order — so this is purely a
+/// throughput knob (`gemm_banding` picks by shape).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Banding {
+    /// Contiguous output-row bands (`par_bands_mut`); each band re-runs the
+    /// tile unpack sweep.
+    Rows,
+    /// Contiguous output-column bands (`par_col_bands_mut`); every packed
+    /// tile is unpacked exactly once per call.
+    Cols,
+}
+
+impl Banding {
+    /// Label for bench JSON / logs: `"rows"` or `"cols"`.
+    pub fn label(self) -> &'static str {
+        match self {
+            Banding::Rows => "rows",
+            Banding::Cols => "cols",
+        }
+    }
+}
+
+/// The shape rule `matmul_qmat` applies: row banding splits `m` into about
+/// `2 * workers` bands, each of which re-unpacks every tile of W — cheap
+/// when the bands are deep (the unpack amortizes over many rows), wasteful
+/// when they are shallow. Column banding unpacks each tile exactly once but
+/// re-reads the `(m,k)` activations once per band, so it pays exactly when
+/// the row blocks are shallow and the output is wide enough to hand every
+/// worker whole `TILE_N` columns. Serial pools always row-band (one band,
+/// zero redundancy either way).
+pub fn gemm_banding(m: usize, n: usize, pool: &Pool) -> Banding {
+    let w = pool.workers();
+    if w <= 1 || n < 2 * TILE_N {
+        return Banding::Rows;
+    }
+    if m <= 8 * w {
+        Banding::Cols
+    } else {
+        Banding::Rows
+    }
+}
+
 /// Rows per parallel band. Each band re-runs the tile unpack sweep, so
 /// band count trades load balance against redundant dequantization
 /// (overhead ratio ≈ tile-unpack cost / band rows): one band on a serial
@@ -78,8 +133,24 @@ fn band_rows(m: usize, pool: &Pool) -> usize {
 /// all row-major; `out` is overwritten). k-tiled for B-row reuse across the
 /// band and row-banded over `pool`; `k` accumulates in ascending order, so
 /// the result is bit-identical to the serial ikj reference for any worker
-/// count and tile size.
+/// count, tile size, and inner-loop path.
 pub fn matmul_f32(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, pool: &Pool, out: &mut [f32]) {
+    matmul_f32_path(a, b, m, k, n, pool, kernel_path(), out)
+}
+
+/// `matmul_f32` with the inner-loop path chosen by the caller (benches and
+/// the scalar↔SIMD property tests; the wrapper resolves it per call).
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_f32_path(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    pool: &Pool,
+    path: KernelPath,
+    out: &mut [f32],
+) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
     assert_eq!(out.len(), m * n);
@@ -97,10 +168,7 @@ pub fn matmul_f32(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, pool: &Poo
                 let arow = &a[(r0 + ri) * k + k0..(r0 + ri) * k + k0 + kh];
                 let orow = &mut chunk[ri * n..(ri + 1) * n];
                 for (kk, &av) in arow.iter().enumerate() {
-                    let brow = &b[(k0 + kk) * n..(k0 + kk + 1) * n];
-                    for j in 0..n {
-                        orow[j] += av * brow[j];
-                    }
+                    axpy(orow, av, &b[(k0 + kk) * n..(k0 + kk + 1) * n], path);
                 }
             }
         }
@@ -109,15 +177,35 @@ pub fn matmul_f32(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, pool: &Poo
 
 /// `out = a @ w` where `w` is a packed `QMat` (`(k,n)` = `(w.rows, w.cols)`)
 /// — the fused serving kernel: group-wise dequantization into per-worker
-/// `TILE_K × TILE_N` scratch tiles, multiplied in place. Bit-identical to
-/// `matmul_f32(a, dequantize(w))` for every precision and worker count.
-/// `Payload::Raw` reads the payload directly through `matmul_f32`.
+/// `TILE_K × TILE_N` scratch tiles, multiplied in place with the SIMD inner
+/// loops. Banding is chosen by shape (`gemm_banding`) and the path by
+/// `kernel_path()`; bit-identical to `matmul_f32(a, dequantize(w))` for
+/// every precision, worker count, banding, and path. `Payload::Raw` reads
+/// the payload directly through `matmul_f32`.
 pub fn matmul_qmat(a: &[f32], w: &QMat, m: usize, pool: &Pool, tiles: &TilePool, out: &mut [f32]) {
+    let banding = gemm_banding(m, w.cols, pool);
+    matmul_qmat_with(a, w, m, pool, tiles, kernel_path(), banding, out)
+}
+
+/// `matmul_qmat` with the inner-loop path and banding strategy chosen by
+/// the caller (benches and the equivalence property tests force each
+/// combination; the wrapper resolves both per call).
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_qmat_with(
+    a: &[f32],
+    w: &QMat,
+    m: usize,
+    pool: &Pool,
+    tiles: &TilePool,
+    path: KernelPath,
+    banding: Banding,
+    out: &mut [f32],
+) {
     let (k, n) = (w.rows, w.cols);
     debug_assert_eq!(a.len(), m * k);
     assert_eq!(out.len(), m * n);
     if let Payload::Raw(d) = &w.payload {
-        return matmul_f32(a, d, m, k, n, pool, out);
+        return matmul_f32_path(a, d, m, k, n, pool, path, out);
     }
     if m == 0 || n == 0 {
         return;
@@ -128,6 +216,25 @@ pub fn matmul_qmat(a: &[f32], w: &QMat, m: usize, pool: &Pool, tiles: &TilePool,
         tiles.workers(),
         pool.workers()
     );
+    match banding {
+        Banding::Rows => matmul_qmat_rows(a, w, m, k, n, pool, tiles, path, out),
+        Banding::Cols => matmul_qmat_cols(a, w, m, k, n, pool, tiles, path, out),
+    }
+}
+
+/// Row-banded fused GEMM body: each band walks every tile of W.
+#[allow(clippy::too_many_arguments)]
+fn matmul_qmat_rows(
+    a: &[f32],
+    w: &QMat,
+    m: usize,
+    k: usize,
+    n: usize,
+    pool: &Pool,
+    tiles: &TilePool,
+    path: KernelPath,
+    out: &mut [f32],
+) {
     let band = band_rows(m, pool);
     pool.par_bands_mut(out, band * n, |wkr, bi, chunk| {
         let mut tile = tiles.bufs[wkr].lock().unwrap();
@@ -139,15 +246,12 @@ pub fn matmul_qmat(a: &[f32], w: &QMat, m: usize, pool: &Pool, tiles: &TilePool,
             let kh = TILE_K.min(k - k0);
             for n0 in (0..n).step_by(TILE_N) {
                 let nw = TILE_N.min(n - n0);
-                dequantize_tile(w, k0..k0 + kh, n0..n0 + nw, &mut tile[..kh * nw]);
+                dequantize_tile_path(w, k0..k0 + kh, n0..n0 + nw, path, &mut tile[..kh * nw]);
                 for ri in 0..rows {
                     let arow = &a[(r0 + ri) * k + k0..(r0 + ri) * k + k0 + kh];
                     let orow = &mut chunk[ri * n + n0..ri * n + n0 + nw];
                     for (kk, &av) in arow.iter().enumerate() {
-                        let trow = &tile[kk * nw..(kk + 1) * nw];
-                        for j in 0..nw {
-                            orow[j] += av * trow[j];
-                        }
+                        axpy(orow, av, &tile[kk * nw..(kk + 1) * nw], path);
                     }
                 }
             }
@@ -155,11 +259,60 @@ pub fn matmul_qmat(a: &[f32], w: &QMat, m: usize, pool: &Pool, tiles: &TilePool,
     });
 }
 
-/// Column band width for the GEMV kernels: the whole row serial, about two
-/// bands per worker pooled, rounded up to whole `TILE_N` tiles so no dequant
-/// tile is ever split across bands. Any band size yields identical bits —
-/// every output element is produced whole inside one band, accumulating `k`
-/// in ascending order.
+/// Column-banded fused GEMM body: each worker owns an n-range (whole
+/// `TILE_N` tiles, via `band_cols`), sweeps all `m` activation rows through
+/// its tiles, and therefore unpacks every packed tile exactly once per
+/// call. Per output element the `k` order is unchanged (`k0` ascending,
+/// `kk` ascending within a tile) — identical bits to the row-banded body.
+#[allow(clippy::too_many_arguments)]
+fn matmul_qmat_cols(
+    a: &[f32],
+    w: &QMat,
+    m: usize,
+    k: usize,
+    n: usize,
+    pool: &Pool,
+    tiles: &TilePool,
+    path: KernelPath,
+    out: &mut [f32],
+) {
+    let band = band_cols(n, pool);
+    pool.par_col_bands_mut(out, n, band, |wkr, _bi, view| {
+        let mut tile = tiles.bufs[wkr].lock().unwrap();
+        let tile = tile.as_mut_slice();
+        let c0 = view.cols().start;
+        let cw = view.width();
+        for r in 0..m {
+            view.row_mut(r).fill(0.0);
+        }
+        for k0 in (0..k).step_by(TILE_K) {
+            let kh = TILE_K.min(k - k0);
+            for n0 in (0..cw).step_by(TILE_N) {
+                let nw = TILE_N.min(cw - n0);
+                dequantize_tile_path(
+                    w,
+                    k0..k0 + kh,
+                    c0 + n0..c0 + n0 + nw,
+                    path,
+                    &mut tile[..kh * nw],
+                );
+                for ri in 0..m {
+                    let arow = &a[ri * k + k0..ri * k + k0 + kh];
+                    let orow = &mut view.row_mut(ri)[n0..n0 + nw];
+                    for (kk, &av) in arow.iter().enumerate() {
+                        axpy(orow, av, &tile[kk * nw..(kk + 1) * nw], path);
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// Column band width for the GEMV kernels and the column-banded GEMM: the
+/// whole row serial, about two bands per worker pooled, rounded up to whole
+/// `TILE_N` tiles so no dequant tile is ever split across bands. Any band
+/// size yields identical bits — every output element is produced whole
+/// inside one band, accumulating `k` in ascending order.
 fn band_cols(n: usize, pool: &Pool) -> usize {
     if pool.workers() <= 1 {
         return n.max(1);
@@ -171,8 +324,21 @@ fn band_cols(n: usize, pool: &Pool) -> usize {
 /// `(k,n)` row-major, `out` length `n`) — the f32 decode GEMV. Column-banded
 /// over `pool`; every output element accumulates `k` in ascending order, so
 /// the result is **bit-identical** to `matmul_f32` on a 1-row input for any
-/// worker count. Steady-state calls do zero heap allocation.
+/// worker count and path. Steady-state calls do zero heap allocation.
 pub fn matvec_f32(a: &[f32], b: &[f32], k: usize, n: usize, pool: &Pool, out: &mut [f32]) {
+    matvec_f32_path(a, b, k, n, pool, kernel_path(), out)
+}
+
+/// `matvec_f32` with the inner-loop path chosen by the caller.
+pub fn matvec_f32_path(
+    a: &[f32],
+    b: &[f32],
+    k: usize,
+    n: usize,
+    pool: &Pool,
+    path: KernelPath,
+    out: &mut [f32],
+) {
     debug_assert_eq!(a.len(), k);
     debug_assert_eq!(b.len(), k * n);
     assert_eq!(out.len(), n);
@@ -185,10 +351,7 @@ pub fn matvec_f32(a: &[f32], b: &[f32], k: usize, n: usize, pool: &Pool, out: &m
         let cw = chunk.len();
         chunk.fill(0.0);
         for (kk, &av) in a.iter().enumerate() {
-            let brow = &b[kk * n + c0..kk * n + c0 + cw];
-            for j in 0..cw {
-                chunk[j] += av * brow[j];
-            }
+            axpy(chunk, av, &b[kk * n + c0..kk * n + c0 + cw], path);
         }
     });
 }
@@ -196,17 +359,31 @@ pub fn matvec_f32(a: &[f32], b: &[f32], k: usize, n: usize, pool: &Pool, out: &m
 /// `out = a @ w` for a single activation row against a packed `QMat`
 /// (`(k,n)` = `(w.rows, w.cols)`) — the fused decode GEMV: group-wise
 /// dequantization into the same per-worker `TILE_K × TILE_N` scratch tiles
-/// as `matmul_qmat`, multiplied in place. Column bands fan out on `pool`;
-/// `k` accumulates in ascending order per output element, so the result is
-/// **bit-identical** to `matmul_qmat` on a 1-row input (and hence to the
-/// dequantize-then-matmul reference) for every precision and worker count.
+/// as `matmul_qmat`, multiplied in place with the SIMD inner loops. Column
+/// bands fan out on `pool` (a GEMV is the m = 1 case, where column banding
+/// is the only partition that parallelizes at all); `k` accumulates in
+/// ascending order per output element, so the result is **bit-identical**
+/// to `matmul_qmat` on a 1-row input (and hence to the dequantize-then-
+/// matmul reference) for every precision, worker count, and path.
 /// `Payload::Raw` dispatches to `matvec_f32`.
 pub fn matvec_qmat(a: &[f32], w: &QMat, pool: &Pool, tiles: &TilePool, out: &mut [f32]) {
+    matvec_qmat_path(a, w, pool, tiles, kernel_path(), out)
+}
+
+/// `matvec_qmat` with the inner-loop path chosen by the caller.
+pub fn matvec_qmat_path(
+    a: &[f32],
+    w: &QMat,
+    pool: &Pool,
+    tiles: &TilePool,
+    path: KernelPath,
+    out: &mut [f32],
+) {
     let (k, n) = (w.rows, w.cols);
     debug_assert_eq!(a.len(), k);
     assert_eq!(out.len(), n);
     if let Payload::Raw(d) = &w.payload {
-        return matvec_f32(a, d, k, n, pool, out);
+        return matvec_f32_path(a, d, k, n, pool, path, out);
     }
     if n == 0 {
         return;
@@ -228,14 +405,10 @@ pub fn matvec_qmat(a: &[f32], w: &QMat, pool: &Pool, tiles: &TilePool, out: &mut
             let kh = TILE_K.min(k - k0);
             for n0 in (0..cw).step_by(TILE_N) {
                 let nw = TILE_N.min(cw - n0);
-                dequantize_tile(w, k0..k0 + kh, c0 + n0..c0 + n0 + nw, &mut tile[..kh * nw]);
+                dequantize_tile_path(w, k0..k0 + kh, c0 + n0..c0 + n0 + nw, path, &mut tile[..kh * nw]);
                 let ochunk = &mut chunk[n0..n0 + nw];
                 for kk in 0..kh {
-                    let av = a[k0 + kk];
-                    let trow = &tile[kk * nw..(kk + 1) * nw];
-                    for j in 0..nw {
-                        ochunk[j] += av * trow[j];
-                    }
+                    axpy(ochunk, a[k0 + kk], &tile[kk * nw..(kk + 1) * nw], path);
                 }
             }
         }
@@ -249,6 +422,12 @@ mod tests {
     use crate::quant::{dequantize, quantize, Precision};
     use crate::rng::Xoshiro256pp;
     use crate::tensor::Tensor;
+
+    /// Both inner-loop paths (Avx2 degrades to scalar off-x86, making the
+    /// comparisons trivially true there and real on any x86-64 runner) and
+    /// both banding strategies.
+    const PATHS: [KernelPath; 2] = [KernelPath::Scalar, KernelPath::Avx2];
+    const BANDINGS: [Banding; 2] = [Banding::Rows, Banding::Cols];
 
     /// The serial ikj reference the fused kernels must match bit-for-bit.
     fn reference(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
@@ -286,9 +465,15 @@ mod tests {
             let b = rand_vec(k * n, 200 + n as u64, 0.7);
             let expect = reference(&a, &b, m, k, n);
             for workers in [1usize, 2, 7] {
-                let mut out = vec![f32::NAN; m * n];
-                matmul_f32(&a, &b, m, k, n, &Pool::new(workers), &mut out);
-                assert_bits_eq(&out, &expect, &format!("f32 {m}x{k}x{n} w={workers}"));
+                for path in PATHS {
+                    let mut out = vec![f32::NAN; m * n];
+                    matmul_f32_path(&a, &b, m, k, n, &Pool::new(workers), path, &mut out);
+                    assert_bits_eq(
+                        &out,
+                        &expect,
+                        &format!("f32 {m}x{k}x{n} w={workers} {}", path.label()),
+                    );
+                }
             }
         }
     }
@@ -296,9 +481,10 @@ mod tests {
     #[test]
     fn fused_kernels_match_dequantized_reference_every_precision() {
         // Property: for every format, odd (m,k,n) shapes, and 1/2/7 pool
-        // workers, the fused packed-payload kernel equals the dequantize-
-        // then-matmul reference within 1e-5 rel err (it is in fact
-        // bit-identical; the looser bound is the documented contract).
+        // workers, the fused packed-payload kernel (auto path + banding)
+        // equals the dequantize-then-matmul reference within 1e-5 rel err
+        // (it is in fact bit-identical; the looser bound is the documented
+        // contract).
         check(
             0xE1A9,
             24,
@@ -338,6 +524,69 @@ mod tests {
     }
 
     #[test]
+    fn every_path_banding_worker_combination_bit_identical() {
+        // The tentpole equivalence property: {Scalar, Avx2} x {Rows, Cols}
+        // x every packed precision x 1/2/7 workers — all 12+ combinations
+        // must reproduce the scalar serial row-banded kernel bit-for-bit
+        // (and that one the dequantized ikj reference).
+        check(
+            0x51AD,
+            18,
+            8,
+            |g| {
+                let m = 2 * g.usize_in(0, 8) + 1; // odd 1..17
+                let k = 8 * (2 * g.usize_in(0, 5) + 1); // group-aligned
+                let n = 2 * g.usize_in(0, 80) + 1; // odd 1..161: multiple col bands
+                let prec = [Precision::Q8, Precision::Q4, Precision::Q3, Precision::T2]
+                    [g.usize_in(0, 4)];
+                let seed = g.rng.next_u64();
+                (m, k, n, prec, seed)
+            },
+            |&(m, k, n, prec, seed)| {
+                let a = rand_vec(m * k, seed, 0.8);
+                let w = quantize(&Tensor::new(vec![k, n], rand_vec(k * n, seed ^ 1, 0.5)), prec);
+                let serial_pool = Pool::serial();
+                let serial_tiles = TilePool::new(&serial_pool);
+                let mut baseline = vec![f32::NAN; m * n];
+                matmul_qmat_with(
+                    &a, &w, m, &serial_pool, &serial_tiles,
+                    KernelPath::Scalar, Banding::Rows, &mut baseline,
+                );
+                let expect = reference(&a, &dequantize(&w).data, m, k, n);
+                for (i, (f, r)) in baseline.iter().zip(&expect).enumerate() {
+                    if f.to_bits() != r.to_bits() {
+                        return Err(format!(
+                            "{} {m}x{k}x{n} scalar/rows/serial elem {i}: {f} vs ikj ref {r}",
+                            prec.label()
+                        ));
+                    }
+                }
+                for workers in [1usize, 2, 7] {
+                    let pool = Pool::new(workers);
+                    let tiles = TilePool::new(&pool);
+                    for path in PATHS {
+                        for banding in BANDINGS {
+                            let mut out = vec![f32::NAN; m * n];
+                            matmul_qmat_with(&a, &w, m, &pool, &tiles, path, banding, &mut out);
+                            for (i, (f, r)) in out.iter().zip(&baseline).enumerate() {
+                                if f.to_bits() != r.to_bits() {
+                                    return Err(format!(
+                                        "{} {m}x{k}x{n} w={workers} {}/{} elem {i}: {f} vs {r}",
+                                        prec.label(),
+                                        path.label(),
+                                        banding.label()
+                                    ));
+                                }
+                            }
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
     fn fused_kernel_is_exactly_deterministic_across_worker_counts() {
         let (m, k, n) = (13usize, 40usize, 37usize);
         let a = rand_vec(m * k, 7, 0.8);
@@ -361,18 +610,53 @@ mod tests {
     }
 
     #[test]
+    fn auto_dispatch_matches_forced_scalar_rows() {
+        // whatever kernel_path()/gemm_banding select, the public wrappers
+        // must reproduce the portable scalar row-banded kernel bit-for-bit
+        let (m, k, n) = (5usize, 48usize, 150usize);
+        let a = rand_vec(m * k, 91, 0.8);
+        for prec in [Precision::Q8, Precision::Q4, Precision::Q3, Precision::T2] {
+            let w = quantize(&Tensor::new(vec![k, n], rand_vec(k * n, 92, 0.5)), prec);
+            let pool = Pool::new(3);
+            let tiles = TilePool::new(&pool);
+            let mut auto = vec![f32::NAN; m * n];
+            matmul_qmat(&a, &w, m, &pool, &tiles, &mut auto);
+            let mut forced = vec![f32::NAN; m * n];
+            matmul_qmat_with(
+                &a, &w, m, &pool, &tiles, KernelPath::Scalar, Banding::Rows, &mut forced,
+            );
+            assert_bits_eq(&auto, &forced, prec.label());
+        }
+    }
+
+    #[test]
+    fn gemm_banding_shape_rule() {
+        // serial pools always row-band
+        assert_eq!(gemm_banding(4, 1024, &Pool::serial()), Banding::Rows);
+        // narrow outputs cannot feed whole-tile column bands
+        assert_eq!(gemm_banding(4, TILE_N, &Pool::new(4)), Banding::Rows);
+        // shallow + wide: column bands (unpack once per call)
+        assert_eq!(gemm_banding(4, 4 * TILE_N, &Pool::new(4)), Banding::Cols);
+        assert_eq!(gemm_banding(32, 4 * TILE_N, &Pool::new(4)), Banding::Cols);
+        // deep row blocks amortize the unpack: row bands
+        assert_eq!(gemm_banding(1000, 4 * TILE_N, &Pool::new(4)), Banding::Rows);
+    }
+
+    #[test]
     fn repeated_kernel_calls_reuse_parked_workers() {
         // the serving hot path: many matmul scopes against one pool must
         // spawn helpers exactly once (the persistent-pool invariant at the
-        // kernel seam)
-        let (m, k, n) = (9usize, 32usize, 21usize);
+        // kernel seam) — under both bandings
+        let (m, k, n) = (9usize, 32usize, 160usize);
         let a = rand_vec(m * k, 31, 0.8);
         let w = quantize(&Tensor::new(vec![k, n], rand_vec(k * n, 32, 0.5)), Precision::Q4);
         let pool = Pool::new(3);
         let tiles = TilePool::new(&pool);
         let mut out = vec![0.0f32; m * n];
-        for _ in 0..10 {
-            matmul_qmat(&a, &w, m, &pool, &tiles, &mut out);
+        for banding in BANDINGS {
+            for _ in 0..5 {
+                matmul_qmat_with(&a, &w, m, &pool, &tiles, kernel_path(), banding, &mut out);
+            }
         }
         assert_eq!(pool.spawn_events(), 2, "workers - 1 spawns across 10 kernel calls");
     }
@@ -384,10 +668,17 @@ mod tests {
         let w = quantize(&Tensor::new(vec![k, n], rand_vec(k * n, 22, 0.6)), Precision::Raw);
         let pool = Pool::new(3);
         let tiles = TilePool::new(&pool);
+        let expect = reference(&a, &dequantize(&w).data, m, k, n);
         let mut fused = vec![0.0f32; m * n];
         matmul_qmat(&a, &w, m, &pool, &tiles, &mut fused);
-        let expect = reference(&a, &dequantize(&w).data, m, k, n);
-        assert_bits_eq(&fused, &expect, "raw");
+        assert_bits_eq(&fused, &expect, "raw auto");
+        // forced column banding on a Raw payload still routes through the
+        // row-banded f32 kernel — same bits
+        let mut forced = vec![0.0f32; m * n];
+        matmul_qmat_with(
+            &a, &w, m, &pool, &tiles, KernelPath::Scalar, Banding::Cols, &mut forced,
+        );
+        assert_bits_eq(&forced, &expect, "raw forced cols");
     }
 
     #[test]
@@ -397,11 +688,17 @@ mod tests {
             let a = rand_vec(k, 300 + k as u64, 0.7);
             let b = rand_vec(k * n, 400 + n as u64, 0.7);
             let mut expect = vec![f32::NAN; n];
-            matmul_f32(&a, &b, 1, k, n, &Pool::serial(), &mut expect);
+            matmul_f32_path(&a, &b, 1, k, n, &Pool::serial(), KernelPath::Scalar, &mut expect);
             for workers in [1usize, 2, 7, crate::config::ParallelConfig::test_workers(3)] {
-                let mut out = vec![f32::NAN; n];
-                matvec_f32(&a, &b, k, n, &Pool::new(workers), &mut out);
-                assert_bits_eq(&out, &expect, &format!("matvec f32 {k}x{n} w={workers}"));
+                for path in PATHS {
+                    let mut out = vec![f32::NAN; n];
+                    matvec_f32_path(&a, &b, k, n, &Pool::new(workers), path, &mut out);
+                    assert_bits_eq(
+                        &out,
+                        &expect,
+                        &format!("matvec f32 {k}x{n} w={workers} {}", path.label()),
+                    );
+                }
             }
         }
     }
@@ -409,8 +706,9 @@ mod tests {
     #[test]
     fn matvec_qmat_bit_identical_to_matmul_on_one_row_every_precision() {
         // Property: for every format (incl. Raw dispatch), group-aligned k,
-        // odd n, and 1/2/7 pool workers, the fused GEMV equals matmul_qmat
-        // on a 1-row input bit-for-bit — the decode path's kernel contract.
+        // odd n, 1/2/7 pool workers, and both inner-loop paths, the fused
+        // GEMV equals matmul_qmat on a 1-row input bit-for-bit — the decode
+        // path's kernel contract.
         check(
             0xDEC0,
             24,
@@ -438,14 +736,17 @@ mod tests {
                 for workers in [1usize, 2, 7] {
                     let pool = Pool::new(workers);
                     let tiles = TilePool::new(&pool);
-                    let mut out = vec![f32::NAN; n];
-                    matvec_qmat(&a, &w, &pool, &tiles, &mut out);
-                    for (i, (f, r)) in out.iter().zip(&expect).enumerate() {
-                        if f.to_bits() != r.to_bits() {
-                            return Err(format!(
-                                "{} {k}x{n} w={workers} elem {i}: gemv {f} vs gemm {r}",
-                                prec.label()
-                            ));
+                    for path in PATHS {
+                        let mut out = vec![f32::NAN; n];
+                        matvec_qmat_path(&a, &w, &pool, &tiles, path, &mut out);
+                        for (i, (f, r)) in out.iter().zip(&expect).enumerate() {
+                            if f.to_bits() != r.to_bits() {
+                                return Err(format!(
+                                    "{} {k}x{n} w={workers} {} elem {i}: gemv {f} vs gemm {r}",
+                                    prec.label(),
+                                    path.label()
+                                ));
+                            }
                         }
                     }
                 }
@@ -490,5 +791,12 @@ mod tests {
         for gr in [1usize, 2, 4, 8] {
             assert_eq!(TILE_K % gr, 0);
         }
+    }
+
+    #[test]
+    fn banding_labels() {
+        assert_eq!(Banding::Rows.label(), "rows");
+        assert_eq!(Banding::Cols.label(), "cols");
+        assert_eq!(KernelPath::Scalar.label(), "scalar");
     }
 }

@@ -22,6 +22,10 @@
 //!   serves from: cache-blocked matmuls over the packed `QMat` payloads
 //!   (group-wise dequant into per-worker tiles), so replicas keep only the
 //!   packed bytes resident — no f32 shadow copies of quantized weights.
+//!   `simd` supplies their vectorized inner loops (AVX2 across the
+//!   output-column dimension, runtime-detected, `EWQ_FORCE_SCALAR` pins the
+//!   portable fallback) — bit-identical to scalar by construction
+//!   (DESIGN.md §11).
 //!
 //! Quick tour:
 //! ```no_run
@@ -56,6 +60,7 @@ pub mod report;
 pub mod rng;
 pub mod runtime;
 pub mod serving;
+pub mod simd;
 pub mod stats;
 pub mod tensor;
 pub mod zoo;

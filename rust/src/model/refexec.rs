@@ -21,6 +21,13 @@
 //! spawned once and parked between kernel scopes, so a steady-state pooled
 //! forward also performs zero thread spawns (`Pool::spawn_events` is the
 //! matching hook); results are bit-identical for any worker count.
+//!
+//! Both prefill (`forward`, GEMMs) and decode (`decode_step_into`, GEMVs)
+//! run on the kernels' SIMD inner loops when the CPU supports them
+//! (`simd::kernel_path()`; `EWQ_FORCE_SCALAR` pins the portable fallback)
+//! and on the shape-chosen row/column banding (`kernels::gemm_banding`) —
+//! all of which are bit-identical by construction (DESIGN.md §11), so
+//! logits are invariant to path, banding, and worker count alike.
 
 use std::sync::Mutex;
 
@@ -899,6 +906,32 @@ mod tests {
             let pooled =
                 ForwardPass::new(&model.schema, Pool::new(workers)).forward(&qm, &toks).unwrap();
             assert_eq!(serial, pooled, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn forward_bit_identical_under_forced_scalar_kernels() {
+        // the EWQ_FORCE_SCALAR toggle end-to-end: a whole-model forward on
+        // the pinned scalar kernels reproduces the auto-dispatched one
+        // bit-for-bit (the env read is per kernel call, like
+        // EWQ_TEST_WORKERS). The env lock serializes the var mutators; a
+        // transiently-set var only ever forces other concurrent tests onto
+        // the scalar path, which is bit-identical, so nothing else flakes.
+        let _guard = crate::simd::env_lock();
+        let model = tiny_model();
+        let plan = mixed_plan(model.schema.n_blocks);
+        let qm = QuantizedModel::build(&model, &plan).unwrap();
+        let toks = tokens(&model.schema);
+        let auto = ForwardPass::new(&model.schema, Pool::new(3)).forward(&qm, &toks).unwrap();
+        let old = std::env::var("EWQ_FORCE_SCALAR").ok();
+        std::env::set_var("EWQ_FORCE_SCALAR", "1");
+        let scalar = ForwardPass::new(&model.schema, Pool::new(3)).forward(&qm, &toks).unwrap();
+        match old {
+            Some(v) => std::env::set_var("EWQ_FORCE_SCALAR", v),
+            None => std::env::remove_var("EWQ_FORCE_SCALAR"),
+        }
+        for (i, (a, b)) in auto.iter().zip(&scalar).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "elem {i}: auto {a} vs forced-scalar {b}");
         }
     }
 

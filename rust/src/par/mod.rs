@@ -375,6 +375,57 @@ impl Pool {
         });
     }
 
+    /// Column-banded in-place partition of a row-major `(rows, row_len)`
+    /// matrix stored flat in `data`: the columns are split into contiguous
+    /// bands of `band` columns (the last may be narrower) and
+    /// `f(worker, band_index, view)` runs over the bands in parallel. Each
+    /// band is claimed by exactly one worker off an atomic counter and the
+    /// `ColBandMut` view confines its writes to that band's column range of
+    /// every row — the **strided-write** sibling of `par_bands_mut`, for
+    /// outputs partitioned along the row (n) dimension instead of across
+    /// whole rows. For any pure-per-band `f` the result is identical for
+    /// every worker count; the worker index lets callers reuse per-worker
+    /// scratch (this is what the column-banded fused GEMM tiles on, so each
+    /// packed tile is unpacked exactly once per call).
+    pub fn par_col_bands_mut<T, F>(&self, data: &mut [T], row_len: usize, band: usize, f: F)
+    where
+        T: Send,
+        F: Fn(usize, usize, &mut ColBandMut<T>) + Sync,
+    {
+        if data.is_empty() || row_len == 0 {
+            return;
+        }
+        assert_eq!(data.len() % row_len, 0, "data must be whole rows of row_len");
+        let band = band.max(1);
+        let rows = data.len() / row_len;
+        let n_bands = row_len.div_ceil(band);
+        let base = ColPtr(data.as_mut_ptr());
+        let run_band = |w: usize, bi: usize| {
+            let c0 = bi * band;
+            let cw = band.min(row_len - c0);
+            // SAFETY: bands partition the columns disjointly, each band
+            // index is claimed exactly once, and the backing slice outlives
+            // the scope (run_scope blocks until every worker drains) — so
+            // views never alias and never dangle.
+            let mut view = ColBandMut { base: base.0, rows, row_len, c0, cw };
+            f(w, bi, &mut view);
+        };
+        if self.workers() <= 1 || n_bands <= 1 {
+            for bi in 0..n_bands {
+                run_band(0, bi);
+            }
+            return;
+        }
+        let next = AtomicUsize::new(0);
+        self.run_scope(&|w| loop {
+            let bi = next.fetch_add(1, Ordering::Relaxed);
+            if bi >= n_bands {
+                break;
+            }
+            run_band(w, bi);
+        });
+    }
+
     /// Deterministic chunked map-reduce over a slice: split `data` into
     /// fixed-size chunks (layout depends only on `data.len()` and `chunk`),
     /// map chunks in parallel, then fold the partials IN CHUNK ORDER on the
@@ -397,6 +448,56 @@ impl Default for Pool {
         Self::from_config(&ParallelConfig::default())
     }
 }
+
+/// One worker's exclusive window onto the columns `c0..c0+cw` of every row
+/// of a flat row-major matrix — the view `par_col_bands_mut` hands its
+/// band closures. Only constructed inside `par_col_bands_mut`, which
+/// guarantees bands never overlap; `row_mut` borrows `&mut self`, so a
+/// closure can hold at most one row segment at a time.
+pub struct ColBandMut<T> {
+    base: *mut T,
+    rows: usize,
+    row_len: usize,
+    c0: usize,
+    cw: usize,
+}
+
+impl<T> ColBandMut<T> {
+    /// Number of matrix rows (every band sees all of them).
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// The absolute column range this band owns.
+    pub fn cols(&self) -> std::ops::Range<usize> {
+        self.c0..self.c0 + self.cw
+    }
+
+    /// Band width in columns.
+    pub fn width(&self) -> usize {
+        self.cw
+    }
+
+    /// Mutable view of this band's segment of row `r` (`width()` elements,
+    /// starting at absolute column `cols().start`).
+    pub fn row_mut(&mut self, r: usize) -> &mut [T] {
+        assert!(r < self.rows, "row {r} out of {} rows", self.rows);
+        // SAFETY: the band exclusively owns columns c0..c0+cw of every row
+        // (disjoint from every other band), r*row_len + c0 + cw <= the
+        // backing slice length, and the returned borrow is tied to
+        // &mut self so segments cannot alias each other through this view.
+        unsafe { std::slice::from_raw_parts_mut(self.base.add(r * self.row_len + self.c0), self.cw) }
+    }
+}
+
+/// Shared base pointer for the column-band views. Workers carve disjoint
+/// per-band windows out of it; `T: Send` makes handing those windows to
+/// other threads sound.
+struct ColPtr<T>(*mut T);
+
+// SAFETY: only ever dereferenced through disjoint ColBandMut windows while
+// the owning scope blocks in run_scope.
+unsafe impl<T: Send> Sync for ColPtr<T> {}
 
 /// Shared raw view of the `par_map_range` output slots. Disjoint writes
 /// only: every index is claimed by exactly one worker.
@@ -616,6 +717,77 @@ mod tests {
             band.iter_mut().for_each(|x| *x *= 2);
         });
         assert_eq!(tiny, [2, 4, 6]);
+    }
+
+    #[test]
+    fn col_bands_mut_visits_every_column_of_every_row_exactly_once() {
+        // 7 rows x 53 cols (ragged last band): element (r, c) must be
+        // written exactly once, by the band owning column c
+        let (rows, row_len, band) = (7usize, 53usize, 8usize);
+        for workers in [1usize, 2, 5, ParallelConfig::test_workers(3)] {
+            let mut data = vec![0u64; rows * row_len];
+            Pool::new(workers).par_col_bands_mut(&mut data, row_len, band, |_w, bi, view| {
+                assert_eq!(view.rows(), rows);
+                assert_eq!(view.cols().start, bi * band);
+                assert_eq!(view.width(), view.cols().len());
+                for r in 0..view.rows() {
+                    for (ci, x) in view.row_mut(r).iter_mut().enumerate() {
+                        *x += (r * row_len + bi * band + ci + 1) as u64;
+                    }
+                }
+            });
+            for (i, &x) in data.iter().enumerate() {
+                assert_eq!(x, (i + 1) as u64, "workers={workers} flat index {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn col_bands_mut_serial_matches_pooled_bitwise() {
+        // f32 writes that depend on band index and column — any worker
+        // count must produce identical bytes
+        let (rows, row_len, band) = (5usize, 37usize, 10usize);
+        let run = |workers: usize| {
+            let mut data = vec![0.0f32; rows * row_len];
+            Pool::new(workers).par_col_bands_mut(&mut data, row_len, band, |_w, bi, view| {
+                for r in 0..view.rows() {
+                    let c0 = view.cols().start;
+                    for (ci, x) in view.row_mut(r).iter_mut().enumerate() {
+                        *x = ((bi * 31 + r * 7 + c0 + ci) as f32).sqrt();
+                    }
+                }
+            });
+            data
+        };
+        let serial = run(1);
+        for workers in [2usize, 3, 8] {
+            let pooled = run(workers);
+            for (i, (a, b)) in serial.iter().zip(&pooled).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "workers={workers} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn col_bands_mut_handles_empty_oversized_and_single_band() {
+        let mut empty: [u32; 0] = [];
+        Pool::new(4).par_col_bands_mut(&mut empty, 8, 4, |_, _, _| unreachable!());
+        let mut data = vec![1u32; 12]; // 3 rows x 4 cols, band wider than row
+        Pool::new(4).par_col_bands_mut(&mut data, 4, 100, |w, bi, view| {
+            assert_eq!((w, bi), (0, 0), "single band runs inline");
+            assert_eq!(view.width(), 4);
+            for r in 0..view.rows() {
+                view.row_mut(r).iter_mut().for_each(|x| *x *= 2);
+            }
+        });
+        assert!(data.iter().all(|&x| x == 2));
+    }
+
+    #[test]
+    #[should_panic(expected = "whole rows")]
+    fn col_bands_mut_rejects_ragged_data() {
+        let mut data = vec![0u8; 10];
+        Pool::new(2).par_col_bands_mut(&mut data, 3, 2, |_, _, _| {});
     }
 
     #[test]

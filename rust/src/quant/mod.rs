@@ -345,8 +345,23 @@ pub fn dequantize_pooled(m: &QMat, pool: &Pool) -> Tensor {
 /// (the fused GEMM kernels tile `k` in multiples of 8, which covers every
 /// format); `cols` is unconstrained. This is the kernel-side unpack: tiles
 /// live in a per-worker scratch buffer, so serving never materializes a
-/// full f32 copy of a packed matrix.
+/// full f32 copy of a packed matrix. Resolves the SIMD/scalar path itself;
+/// the fused kernels hoist that choice and call `dequantize_tile_path`.
 pub fn dequantize_tile(m: &QMat, rows: Range<usize>, cols: Range<usize>, out: &mut [f32]) {
+    dequantize_tile_path(m, rows, cols, crate::simd::kernel_path(), out)
+}
+
+/// `dequantize_tile` with the inner-loop path chosen by the caller. The
+/// unpack loops live in `crate::simd` (one row-group per call, vectorized
+/// across the column dimension with the scalar code as fallback); both
+/// paths produce identical bits, so callers may mix them freely.
+pub fn dequantize_tile_path(
+    m: &QMat,
+    rows: Range<usize>,
+    cols: Range<usize>,
+    path: crate::simd::KernelPath,
+    out: &mut [f32],
+) {
     let n = m.cols;
     let (th, tw) = (rows.len(), cols.len());
     assert!(rows.end <= m.rows && cols.end <= n, "tile out of bounds");
@@ -354,6 +369,9 @@ pub fn dequantize_tile(m: &QMat, rows: Range<usize>, cols: Range<usize>, out: &m
     let gr = m.prec.group_rows();
     assert_eq!(rows.start % gr, 0, "tile start must be group-aligned");
     assert_eq!(th % gr, 0, "tile height must be whole packing groups");
+    if tw == 0 {
+        return;
+    }
     match &m.payload {
         Payload::Raw(d) => {
             for (ri, i) in rows.enumerate() {
@@ -362,44 +380,52 @@ pub fn dequantize_tile(m: &QMat, rows: Range<usize>, cols: Range<usize>, out: &m
             }
         }
         Payload::Q8 { q, s } => {
+            let sv = &s[cols.start..cols.end];
             for (ri, i) in rows.enumerate() {
-                let orow = &mut out[ri * tw..(ri + 1) * tw];
-                for (ci, j) in cols.clone().enumerate() {
-                    orow[ci] = q[i * n + j] as f32 * s[j];
-                }
+                crate::simd::dequant_q8_row(
+                    &q[i * n + cols.start..i * n + cols.end],
+                    sv,
+                    &mut out[ri * tw..(ri + 1) * tw],
+                    path,
+                );
             }
         }
         Payload::Q4 { p, s } => {
+            let sv = &s[cols.start..cols.end];
             for (gi, g) in (rows.start / 2..rows.end / 2).enumerate() {
-                for (ci, j) in cols.clone().enumerate() {
-                    let b = p[g * n + j];
-                    out[(2 * gi) * tw + ci] = ((b & 0xF) as i32 - 8) as f32 * s[j];
-                    out[(2 * gi + 1) * tw + ci] = (((b >> 4) & 0xF) as i32 - 8) as f32 * s[j];
-                }
+                crate::simd::dequant_q4_rows(
+                    &p[g * n + cols.start..g * n + cols.end],
+                    sv,
+                    &mut out[(2 * gi) * tw..(2 * gi + 2) * tw],
+                    path,
+                );
             }
         }
         Payload::Q3 { p, s } => {
+            let sv = &s[cols.start..cols.end];
             for (gi, g) in (rows.start / 8..rows.end / 8).enumerate() {
-                for (ci, j) in cols.clone().enumerate() {
-                    let bits = p[(3 * g) * n + j] as u32
-                        | ((p[(3 * g + 1) * n + j] as u32) << 8)
-                        | ((p[(3 * g + 2) * n + j] as u32) << 16);
-                    for r in 0..8 {
-                        let qv = ((bits >> (3 * r)) & 0x7) as i32 - 4;
-                        out[(8 * gi + r) * tw + ci] = qv as f32 * s[j];
-                    }
-                }
+                let b0 = &p[(3 * g) * n + cols.start..(3 * g) * n + cols.end];
+                let b1 = &p[(3 * g + 1) * n + cols.start..(3 * g + 1) * n + cols.end];
+                let b2 = &p[(3 * g + 2) * n + cols.start..(3 * g + 2) * n + cols.end];
+                crate::simd::dequant_q3_rows(
+                    b0,
+                    b1,
+                    b2,
+                    sv,
+                    &mut out[(8 * gi) * tw..(8 * gi + 8) * tw],
+                    path,
+                );
             }
         }
         Payload::T2 { p, s } => {
+            let sv = &s[cols.start..cols.end];
             for (gi, g) in (rows.start / 4..rows.end / 4).enumerate() {
-                for (ci, j) in cols.clone().enumerate() {
-                    let b = p[g * n + j];
-                    for r in 0..4 {
-                        let qv = ((b >> (2 * r)) & 0x3) as i32 - 1;
-                        out[(4 * gi + r) * tw + ci] = qv as f32 * s[j];
-                    }
-                }
+                crate::simd::dequant_t2_rows(
+                    &p[g * n + cols.start..g * n + cols.end],
+                    sv,
+                    &mut out[(4 * gi) * tw..(4 * gi + 4) * tw],
+                    path,
+                );
             }
         }
     }
@@ -559,6 +585,36 @@ mod tests {
                                 prec.label()
                             );
                         }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dequantize_tile_paths_bit_identical() {
+        // scalar vs SIMD unpack over every format and ragged column ranges
+        // (partial 8-lane chunks + scalar tails) — same bits, always
+        use crate::simd::KernelPath;
+        let (k, n) = (32usize, 29usize);
+        let w = rand_tensor(k, n, 13, 0.6);
+        for prec in [Precision::Raw, Precision::Q8, Precision::Q4, Precision::Q3, Precision::T2]
+        {
+            let q = quantize(&w, prec);
+            for rows in [0..8usize, 8..32, 0..32] {
+                for cols in [0..29usize, 1..9, 3..20, 28..29] {
+                    let (th, tw) = (rows.len(), cols.len());
+                    let mut scalar = vec![f32::NAN; th * tw];
+                    dequantize_tile_path(&q, rows.clone(), cols.clone(), KernelPath::Scalar, &mut scalar);
+                    let mut simd = vec![f32::NAN; th * tw];
+                    dequantize_tile_path(&q, rows.clone(), cols.clone(), KernelPath::Avx2, &mut simd);
+                    for (i, (a, b)) in simd.iter().zip(&scalar).enumerate() {
+                        assert_eq!(
+                            a.to_bits(),
+                            b.to_bits(),
+                            "{} rows={rows:?} cols={cols:?} elem {i}: simd {a} vs scalar {b}",
+                            prec.label()
+                        );
                     }
                 }
             }

@@ -175,6 +175,46 @@ fn property_decode_streams_are_bit_deterministic_across_worker_counts() {
 }
 
 #[test]
+fn decode_streams_bit_identical_under_forced_scalar_kernels() {
+    // The EWQ_FORCE_SCALAR toggle at the decode seam: pinning the portable
+    // scalar inner loops must not move a single logit bit relative to the
+    // auto-dispatched (SIMD where available) kernels, for random models and
+    // every KV codec. In the CI cell that exports EWQ_FORCE_SCALAR=1 both
+    // sides run scalar and the test degenerates to determinism; in the
+    // default cell it is a real scalar↔SIMD comparison. (Integration tests
+    // are their own process, so the env save/restore below cannot leak into
+    // the lib test binary; concurrent tests in this binary at worst run
+    // scalar transiently — bit-identical by this very property.)
+    check(0x5CA1A, 5, 8, gen_case, |case| {
+        let qm = build(case)?;
+        for kv in [Precision::Raw, Precision::Q8, Precision::Q4] {
+            let auto = decode_stream(&qm, case, kv, 2)?;
+            let old = std::env::var("EWQ_FORCE_SCALAR").ok();
+            std::env::set_var("EWQ_FORCE_SCALAR", "1");
+            let scalar = decode_stream(&qm, case, kv, 2);
+            match old {
+                Some(v) => std::env::set_var("EWQ_FORCE_SCALAR", v),
+                None => std::env::remove_var("EWQ_FORCE_SCALAR"),
+            }
+            let scalar = scalar?;
+            for (t, (a, b)) in scalar.iter().zip(&auto).enumerate() {
+                for (i, (x, y)) in a.iter().zip(b).enumerate() {
+                    if x.to_bits() != y.to_bits() {
+                        return Err(format!(
+                            "{} kv decode differs under forced scalar kernels: t={t} \
+                             elem {i}: scalar {x} vs auto {y} (precs={:?})",
+                            kv.label(),
+                            case.precs
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn property_quantized_kv_decode_within_stated_tolerance() {
     // Stated tolerance, derived not hand-waved: the KV codec rounds each
     // cached element to within step/2, where step = maxabs/127 (Q8) or
