@@ -38,10 +38,11 @@ bench-smoke:
 		cargo bench --bench bench_decode
 
 # Fail if bench-smoke's fused-GEMM / fused-GEMV GFLOP/s or decode tokens/s
-# regressed >20% vs the committed baseline, or if the SIMD fused GEMM fell
-# under 2x the scalar GFLOP/s on Q8/Q4 while a vector path was dispatched
-# (EWQ_BENCH_TOLERANCE / EWQ_BENCH_SIMD_MIN to tune,
-# EWQ_BENCH_COMPARE_MODE=warn to downgrade — CI enforces). Run
+# regressed >20% vs the committed baseline, if the SIMD fused GEMM fell
+# under 2x the scalar GFLOP/s on Q8/Q4 while a vector path was dispatched,
+# or if batch-16 continuous-batching decode fell under 3x the per-sequence
+# path (EWQ_BENCH_TOLERANCE / EWQ_BENCH_SIMD_MIN / EWQ_BENCH_BATCHED_MIN to
+# tune, EWQ_BENCH_COMPARE_MODE=warn to downgrade — CI enforces). Run
 # `make bench-smoke` first.
 bench-compare:
 	cd rust && cargo run --release --bin bench_compare -- \

@@ -8,12 +8,22 @@
 //! per generated token, generously credited with all `eval_batch` rows),
 //! and the per-sequence KV residency of each codec.
 //!
+//! The continuous-batching sweep measures the same window generated for a
+//! cohort of 1 / 4 / 16 sequences through `decode_step_batched` (one fused
+//! GEMM per weight matrix per step, quantized tiles unpacked once and
+//! amortized over every row) on the auto-sized pool — the configuration a
+//! serving shard actually runs. The per-sequence numbers above stay serial
+//! so the pair brackets the batching win.
+//!
 //! Runs fully offline on a synthetic model. Emits machine-readable
 //! `BENCH_decode.json` (override with `EWQ_BENCH_OUT`; `EWQ_BENCH_QUICK=1`
 //! shortens the sampling budget for the CI smoke lane). `bench_compare`
-//! tracks the `decode_tok_s_raw_kv` key against `BENCH_baseline.json`.
+//! tracks the `decode_tok_s_raw_kv` and `decode_tok_s_batched` keys against
+//! `BENCH_baseline.json` and gates `decode_tok_s_batched /
+//! decode_tok_s_raw_kv >= EWQ_BENCH_BATCHED_MIN`.
 
 use ewq::bench_util::{black_box, Bench};
+use ewq::config::ParallelConfig;
 use ewq::ewq::QuantPlan;
 use ewq::model::{DecodeState, ForwardPass, QuantizedModel};
 use ewq::par::Pool;
@@ -87,6 +97,51 @@ fn main() {
     let tok_s_q8 = decode_window(Precision::Q8);
     let tok_s_q4 = decode_window(Precision::Q4);
 
+    // continuous batching: the same full-window generation for a cohort of
+    // `batch` sequences advanced in lockstep through decode_step_batched —
+    // one fused GEMM per weight matrix per step instead of `batch` GEMVs.
+    // Runs on the auto-sized pool (a serving shard's configuration; the
+    // per-sequence numbers above are serial, so the raw_kv/batched pair
+    // brackets amortization + parallelism together).
+    let pool_workers = ParallelConfig::auto().workers;
+    let decode_window_batched = |batch: usize| {
+        let mut fp = ForwardPass::new(&s, Pool::from_config(&ParallelConfig::auto()));
+        let mut cache = KvCache::new(geom, 1 << 28, Precision::Raw);
+        let mut logits = vec![0.0f32; batch * s.vocab];
+        let mut seq = 0u64;
+        let name = format!("batched decode, {batch} seqs x {} tokens", s.seq_len);
+        let sample = bench().run(&name, || {
+            let mut states: Vec<DecodeState> = (0..batch)
+                .map(|i| DecodeState::new(seq + i as u64, s.n_blocks))
+                .collect();
+            for st in &mut states {
+                st.reserve(&mut cache, s.seq_len).unwrap();
+            }
+            let mut toks: Vec<i32> = (0..batch).map(|i| 1 + i as i32).collect();
+            for _ in 0..s.seq_len {
+                fp.decode_step_batched(&qm, &toks, &mut states, &mut cache, &mut logits)
+                    .unwrap();
+                for (row, tok) in toks.iter_mut().enumerate() {
+                    let row_logits = &logits[row * s.vocab..(row + 1) * s.vocab];
+                    *tok = black_box(ewq::model::sampler::argmax(row_logits) as i32);
+                }
+            }
+            for st in &mut states {
+                st.release(&mut cache);
+            }
+            seq += batch as u64;
+        });
+        sample.throughput((batch * s.seq_len) as f64)
+    };
+    let tok_s_b1 = decode_window_batched(1);
+    let tok_s_b4 = decode_window_batched(4);
+    let tok_s_b16 = decode_window_batched(16);
+    println!(
+        "    => batched decode ({pool_workers} workers): b1 {tok_s_b1:.1}, b4 {tok_s_b4:.1}, \
+         b16 {tok_s_b16:.1} tok/s ({:.2}x serial per-seq raw kv)",
+        tok_s_b16 / tok_s_raw.max(1e-9)
+    );
+
     // recompute baseline: one full fused forward per generated token; the
     // batch dimension is credited in full (eval_batch sequences per pass),
     // which is generous to the baseline — decode above is single-sequence
@@ -124,7 +179,12 @@ fn main() {
         "{{\n  \"model\": \"{}\",\n  \"plan\": \"mixed-q4q8\",\n  \"kernel_path\": \"{}\",\n  \
          \"decode_window\": {},\n  \
          \"decode_tok_s_raw_kv\": {tok_s_raw:.3},\n  \"decode_tok_s_q8_kv\": {tok_s_q8:.3},\n  \
-         \"decode_tok_s_q4_kv\": {tok_s_q4:.3},\n  \"recompute_tok_s\": {recompute_tok_s:.3},\n  \
+         \"decode_tok_s_q4_kv\": {tok_s_q4:.3},\n  \
+         \"decode_tok_s_batched\": {tok_s_b16:.3},\n  \
+         \"decode_tok_s_batched_b1\": {tok_s_b1:.3},\n  \
+         \"decode_tok_s_batched_b4\": {tok_s_b4:.3},\n  \
+         \"batched_pool_workers\": {pool_workers},\n  \
+         \"recompute_tok_s\": {recompute_tok_s:.3},\n  \
          \"decode_speedup_vs_recompute\": {speedup:.3},\n  \"kv_bytes_per_seq_raw\": {kv_raw},\n  \
          \"kv_bytes_per_seq_q8\": {kv_q8},\n  \"kv_bytes_per_seq_q4\": {kv_q4},\n  \
          \"kv_q4_residency_vs_raw\": {:.4}\n}}\n",

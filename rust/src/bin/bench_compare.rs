@@ -12,6 +12,12 @@
 //!                           on Q8 and Q4 when the runner dispatched a
 //!                           vector path (default 2.0; skipped when
 //!                           kernel_path is "scalar")
+//!   EWQ_BENCH_BATCHED_MIN   required continuous-batching throughput ratio
+//!                           decode_tok_s_batched / decode_tok_s_raw_kv
+//!                           (default 3.0; both keys come from the same
+//!                           bench_decode run, so this is a hardware-
+//!                           independent amortization gate, not an
+//!                           absolute-throughput floor)
 //!   EWQ_BENCH_COMPARE_MODE  "enforce" (default) exits 1 on regression;
 //!                           "warn" reports but always exits 0 — the
 //!                           first-run stance until a baseline measured on
@@ -29,7 +35,7 @@
 //! the crate builds fully offline, so no JSON dependency is warranted.
 
 /// Tracked metrics: higher is better for all of them.
-const KEYS: [&str; 7] = [
+const KEYS: [&str; 8] = [
     "gflops_fused_serial",
     "gflops_fused_pooled",
     "gemm_gflops_q8_simd",
@@ -37,6 +43,7 @@ const KEYS: [&str; 7] = [
     "gemv_gflops_8bit",
     "gemv_gflops_4bit",
     "decode_tok_s_raw_kv",
+    "decode_tok_s_batched",
 ];
 
 /// Extract the number following `"key":` in a flat JSON document.
@@ -108,6 +115,43 @@ fn simd_gate(current: &str, min: f64) -> usize {
     violations
 }
 
+/// The continuous-batching hard gate: a fused `decode_step_batched` cohort
+/// of 16 sequences must deliver at least `min` times the serial
+/// per-sequence decode throughput. Both numbers come from the same
+/// bench_decode run on the same machine, so the ratio gates the
+/// amortization + shard-pool win itself, independent of runner speed —
+/// batching that stops paying is a regression even when the absolute
+/// numbers drift within tolerance. Returns the number of violations (0/1).
+fn batched_gate(current: &str, min: f64) -> usize {
+    let batched = extract_number(current, "decode_tok_s_batched");
+    let per_seq = extract_number(current, "decode_tok_s_raw_kv");
+    match (batched, per_seq) {
+        (Some(b), Some(p)) if p > 0.0 => {
+            let ratio = b / p;
+            if ratio < min {
+                eprintln!(
+                    "bench_compare: batched gate: batch-16 decode is only {ratio:.2}x the \
+                     per-sequence path ({b:.1} vs {p:.1} tok/s; need >= {min:.1}x)"
+                );
+                1
+            } else {
+                println!(
+                    "bench_compare: batched gate: batch-16 decode {ratio:.2}x per-sequence \
+                     ({b:.1} vs {p:.1} tok/s) — ok"
+                );
+                0
+            }
+        }
+        _ => {
+            eprintln!(
+                "bench_compare: batched gate: decode_tok_s_batched/decode_tok_s_raw_kv \
+                 MISSING from current results"
+            );
+            1
+        }
+    }
+}
+
 /// A higher-is-better metric regressed if it dropped by more than `tol`
 /// (fractional) below the baseline.
 fn regressed(current: f64, baseline: f64, tol: f64) -> bool {
@@ -159,7 +203,11 @@ fn main() {
         .ok()
         .and_then(|v| v.parse().ok())
         .unwrap_or(2.0);
-    let mut regressions = simd_gate(&current, simd_min);
+    let batched_min: f64 = std::env::var("EWQ_BENCH_BATCHED_MIN")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(3.0);
+    let mut regressions = simd_gate(&current, simd_min) + batched_gate(&current, batched_min);
     let mut skipped: Vec<&str> = Vec::new();
     for key in KEYS {
         let cur = match extract_number(&current, key) {
@@ -208,14 +256,14 @@ fn main() {
         if enforce {
             eprintln!(
                 "bench_compare: {regressions} metric(s) regressed more than {pct:.0}%, went \
-                 missing, or violated the simd gate{skip_note} — failing (set \
+                 missing, or violated the simd/batched gates{skip_note} — failing (set \
                  EWQ_BENCH_COMPARE_MODE=warn to downgrade)"
             );
             std::process::exit(1);
         }
         println!(
             "bench_compare: {regressions} metric(s) regressed more than {pct:.0}%, went \
-             missing, or violated the simd gate{skip_note} — warn-only mode, not failing"
+             missing, or violated the simd/batched gates{skip_note} — warn-only mode, not failing"
         );
     } else {
         println!("bench_compare: within {:.0}% of baseline{skip_note}", tol * 100.0);
@@ -280,6 +328,21 @@ mod tests {
         assert_eq!(simd_gate("{}", 2.0), 1, "missing kernel_path is a failure");
         let partial = r#"{ "kernel_path": "avx2", "gemm_gflops_q8_scalar": 1.0 }"#;
         assert_eq!(simd_gate(partial, 2.0), 2, "missing ratio inputs fail both");
+    }
+
+    #[test]
+    fn batched_gate_ratio_and_missing_keys() {
+        let pass = r#"{ "decode_tok_s_raw_kv": 100.0, "decode_tok_s_batched": 350.0 }"#;
+        assert_eq!(batched_gate(pass, 3.0), 0, "at or above the ratio passes");
+        let fail = r#"{ "decode_tok_s_raw_kv": 100.0, "decode_tok_s_batched": 250.0 }"#;
+        assert_eq!(batched_gate(fail, 3.0), 1, "below the ratio fails");
+        assert_eq!(batched_gate(fail, 2.0), 0, "EWQ_BENCH_BATCHED_MIN lowers the bar");
+        assert_eq!(
+            batched_gate(r#"{ "decode_tok_s_batched": 250.0 }"#, 3.0),
+            1,
+            "a vanished per-sequence key must not disarm the gate"
+        );
+        assert_eq!(batched_gate("{}", 3.0), 1, "missing keys are a failure");
     }
 
     #[test]

@@ -187,6 +187,12 @@ pub struct ServeConfig {
     /// Per-shard KV cache budget in MB; a generation that would exceed it
     /// is failed cleanly with `INVALID_TOKEN` semantics.
     pub kv_budget_mb: f64,
+    /// Upper bound on the per-shard continuous-batching decode batch: up to
+    /// this many live generations advance per step through one fused
+    /// `decode_step_batched` GEMM per weight matrix per block. 1 keeps the
+    /// per-sequence GEMV path (the batched path's equivalence oracle —
+    /// response streams are bit-identical either way).
+    pub max_decode_batch: usize,
 }
 
 impl Default for ServeConfig {
@@ -204,6 +210,7 @@ impl Default for ServeConfig {
             decode_tokens: 0,
             kv_precision: crate::quant::Precision::Raw,
             kv_budget_mb: 64.0,
+            max_decode_batch: 8,
         }
     }
 }
@@ -224,6 +231,7 @@ impl ServeConfig {
             decode_tokens: c.get_or("serve", "decode_tokens", d.decode_tokens)?,
             kv_precision: c.get_or("serve", "kv_precision", d.kv_precision)?,
             kv_budget_mb: c.get_or("serve", "kv_budget_mb", d.kv_budget_mb)?,
+            max_decode_batch: c.get_or("serve", "max_decode_batch", d.max_decode_batch)?,
         })
     }
 }
@@ -334,17 +342,20 @@ mod tests {
     fn kv_and_decode_serve_options_parse() {
         use crate::quant::Precision;
         let c = Config::parse(
-            "[serve]\ndecode_tokens = 6\nkv_precision = 4bit\nkv_budget_mb = 8.5\n",
+            "[serve]\ndecode_tokens = 6\nkv_precision = 4bit\nkv_budget_mb = 8.5\n\
+             max_decode_batch = 16\n",
         )
         .unwrap();
         let s = ServeConfig::from_config(&c).unwrap();
         assert_eq!(s.decode_tokens, 6);
         assert_eq!(s.kv_precision, Precision::Q4);
         assert!((s.kv_budget_mb - 8.5).abs() < 1e-12);
+        assert_eq!(s.max_decode_batch, 16);
         let d = ServeConfig::default();
         assert_eq!(d.decode_tokens, 0, "classic next-token serving by default");
         assert_eq!(d.kv_precision, Precision::Raw);
         assert!(d.kv_budget_mb > 0.0);
+        assert!(d.max_decode_batch > 1, "continuous batching is on by default");
         assert_eq!("q8".parse::<Precision>().unwrap(), Precision::Q8);
         assert_eq!("raw".parse::<Precision>().unwrap(), Precision::Raw);
         assert_eq!("1.58bit".parse::<Precision>().unwrap(), Precision::T2);

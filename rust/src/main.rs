@@ -8,7 +8,8 @@
 //! ewq train-classifier [--out PATH --workers N]  train + save the forest
 //! ewq serve --model <name> [--requests N --batch B --variant V --workers W
 //!                            --dispatch work_steal|shortest_queue|round_robin
-//!                            --decode-tokens N --kv-precision raw|8bit|4bit]
+//!                            --decode-tokens N --kv-precision raw|8bit|4bit
+//!                            --max-decode-batch M]
 //! ```
 
 use anyhow::{bail, Context, Result};
@@ -189,6 +190,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let decode_tokens = args.opt("decode-tokens", 0usize)?;
     let kv_precision: ewq::quant::Precision =
         args.opt("kv-precision", ewq::quant::Precision::Raw)?;
+    let max_decode_batch =
+        args.opt("max-decode-batch", ewq::config::ServeConfig::default().max_decode_batch)?;
     let n = model.schema.n_blocks;
     let plan = match variant.as_str() {
         "raw" => ewq::ewq::QuantPlan::uniform(&model.schema.name, n, ewq::quant::Precision::Raw),
@@ -209,7 +212,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     );
     if decode_tokens > 1 {
         println!(
-            "generation mode: {decode_tokens} tokens/request, {} kv cache",
+            "generation mode: {decode_tokens} tokens/request, {} kv cache, \
+             decode batch <= {max_decode_batch}",
             kv_precision.label()
         );
     }
@@ -221,6 +225,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         dispatch,
         decode_tokens,
         kv_precision,
+        max_decode_batch,
         ..Default::default()
     };
     let coord = Coordinator::start_with_model(model, plan, cfg, 1, 200)?;

@@ -367,6 +367,22 @@ impl<'rt> ModelExecutor<'rt> {
         self.native.borrow_mut().decode_step_into(qm, token, st, cache, logits)
     }
 
+    /// One **batched** decode step over every live sequence — see
+    /// `refexec::ForwardPass::decode_step_batched`. Row `i` of `logits`
+    /// (`states.len() * vocab` floats) is sequence `i`'s next-token logits;
+    /// bit-identical to `states.len()` separate `decode_step_into` calls,
+    /// which the serving layer keeps alive as the equivalence oracle.
+    pub fn decode_step_batched(
+        &self,
+        qm: &QuantizedModel,
+        tokens: &[i32],
+        states: &mut [refexec::DecodeState],
+        cache: &mut crate::serving::kvcache::KvCache,
+        logits: &mut [f32],
+    ) -> Result<()> {
+        self.native.borrow_mut().decode_step_batched(qm, tokens, states, cache, logits)
+    }
+
     /// Greedy next-token prediction at `pos` for each row of the batch.
     pub fn next_tokens(&self, qm: &QuantizedModel, tokens: &[i32], pos: usize) -> Result<Vec<i32>> {
         let logits = self.forward(qm, tokens)?;

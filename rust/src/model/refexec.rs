@@ -299,6 +299,174 @@ impl ForwardPass {
         Ok(())
     }
 
+    /// One **batched** decode step: advance `states.len()` live sequences
+    /// by one token each through every block, gathering their activations
+    /// into one (M, d) matrix so each weight matrix costs a single
+    /// `kernels::matmul_qmat` call per block per step — every packed tile
+    /// is unpacked once per *step* instead of once per *sequence* (the
+    /// continuous-batching throughput lever; shallow×wide shapes ride the
+    /// column-banded GEMM partition from `kernels::gemm_banding`).
+    ///
+    /// `tokens[i]` is sequence `i`'s next input token, `logits` holds
+    /// `states.len() * vocab` floats (row `i` = sequence `i`'s next-token
+    /// logits). Sequences may sit at different positions: attention stays
+    /// per-sequence, read from each sequence's own KV pages via
+    /// `KvCache::read_into`, exactly as `decode_step_into` does.
+    ///
+    /// **Bit-identity:** every GEMM row is produced independently with the
+    /// `k` reduction in ascending order — identical to the GEMV it replaces
+    /// (`matvec_qmat` is the one-row `matmul_qmat`, property-tested per
+    /// precision) — `rms_into` is row-wise, and `decode_attention` runs on
+    /// one sequence's rows only. Gathering M sequences into one step
+    /// therefore cannot move a single logit bit relative to M separate
+    /// `decode_step_into` calls; the serving layer exploits this as its
+    /// batched-vs-per-sequence equivalence oracle.
+    ///
+    /// Steady state performs **zero** heap allocations and zero thread
+    /// spawns: the batched rows live in the same scratch arena the prefill
+    /// GEMMs use (`x/xn/q/k/v/attn/proj/h1` hold up to
+    /// `eval_batch * seq_len` rows, which bounds the admissible batch), the
+    /// new K/V rows are staged through the arena's `kv_tok` buffer into
+    /// pages `DecodeState::reserve`d up front, and the history readback
+    /// reuses `kv_hist`.
+    pub fn decode_step_batched(
+        &mut self,
+        qm: &QuantizedModel,
+        tokens: &[i32],
+        states: &mut [DecodeState],
+        cache: &mut KvCache,
+        logits: &mut [f32],
+    ) -> Result<()> {
+        let s = &qm.schema;
+        let (d, sl, vocab) = (s.d_model, s.seq_len, s.vocab);
+        let m = states.len();
+        ensure!(m > 0, "batched decode needs at least one sequence");
+        ensure!(tokens.len() == m, "got {} tokens for {m} sequences", tokens.len());
+        ensure!(
+            logits.len() == m * vocab,
+            "logits buffer must hold {m} x {vocab} floats, got {}",
+            logits.len()
+        );
+        ensure!(
+            m <= s.eval_batch * sl,
+            "decode batch {m} exceeds the scratch arena's {} rows",
+            s.eval_batch * sl
+        );
+        let g = cache.geometry();
+        ensure!(
+            g.n_heads == s.n_heads && g.n_heads * g.head_dim == d,
+            "kv geometry ({} heads x {}) does not match schema ({} heads, d_model {d})",
+            g.n_heads,
+            g.head_dim,
+            s.n_heads,
+        );
+        for (i, st) in states.iter().enumerate() {
+            let token = tokens[i];
+            ensure!(
+                token >= 0 && (token as usize) < vocab,
+                "token {token} (row {i}) outside vocab {vocab}"
+            );
+            ensure!(
+                st.n_blocks == qm.blocks.len(),
+                "decode state {i} built for {} blocks, model has {}",
+                st.n_blocks,
+                qm.blocks.len()
+            );
+            ensure!(
+                st.pos < sl,
+                "decode position {} (row {i}) beyond the {sl}-token context window",
+                st.pos
+            );
+            // duplicate sequences would interleave appends on the same KV
+            // stream and corrupt both cursors — reject up front (M is a
+            // handful; the scan is trivial next to one GEMM)
+            ensure!(
+                states[..i].iter().all(|prev| prev.seq != st.seq),
+                "sequence {} appears twice in the decode batch",
+                st.seq
+            );
+        }
+        self.scratch.ensure(s, &self.pool);
+        let Scratch { x, xn, q, k, v, attn, proj, h1, kv_tok, kv_hist, tiles, scores, .. } =
+            &mut self.scratch;
+        let x = &mut x[..m * d];
+        let xn = &mut xn[..m * d];
+        let q = &mut q[..m * d];
+        let k = &mut k[..m * d];
+        let v = &mut v[..m * d];
+        let attn = &mut attn[..m * d];
+        let proj = &mut proj[..m * d];
+
+        // embed + positional, one row per sequence at its own position
+        for (i, st) in states.iter().enumerate() {
+            let tok = tokens[i] as usize;
+            let e = &qm.embed.data[tok * d..(tok + 1) * d];
+            let p = &qm.pos.data[st.pos * d..(st.pos + 1) * d];
+            let o = &mut x[i * d..(i + 1) * d];
+            for j in 0..d {
+                o[j] = e[j] + p[j];
+            }
+        }
+
+        for (bi, blk) in qm.blocks.iter().enumerate() {
+            let ff = blk.qmats[4].cols;
+            rms_into(x, &blk.g1.data, xn);
+            // one fused GEMM per weight matrix for ALL live sequences —
+            // each packed tile unpacked once per step
+            matmul_qmat(xn, &blk.qmats[0], m, &self.pool, tiles, q);
+            matmul_qmat(xn, &blk.qmats[1], m, &self.pool, tiles, k);
+            matmul_qmat(xn, &blk.qmats[2], m, &self.pool, tiles, v);
+            {
+                let mut sc = scores[0].lock().unwrap();
+                for (i, st) in states.iter().enumerate() {
+                    let key = st.key(bi);
+                    let t = st.pos;
+                    // stage row i's K/V contiguously (K then V) and push it
+                    // through the cache codec like the rest of the history
+                    {
+                        let (ktok, vtok) = kv_tok.split_at_mut(d);
+                        ktok.copy_from_slice(&k[i * d..(i + 1) * d]);
+                        vtok.copy_from_slice(&v[i * d..(i + 1) * d]);
+                    }
+                    cache.append(key, kv_tok)?;
+                    let hist = &mut kv_hist[..(t + 1) * 2 * d];
+                    for (u, slot) in hist.chunks_mut(2 * d).enumerate() {
+                        cache.read_into(key, u, slot)?;
+                    }
+                    decode_attention(
+                        &q[i * d..(i + 1) * d],
+                        hist,
+                        t + 1,
+                        s.n_heads,
+                        &mut sc[..t + 1],
+                        &mut attn[i * d..(i + 1) * d],
+                    );
+                }
+            }
+            matmul_qmat(attn, &blk.qmats[3], m, &self.pool, tiles, proj);
+            for (xi, oi) in x.iter_mut().zip(proj.iter()) {
+                *xi += *oi;
+            }
+            rms_into(x, &blk.g2.data, xn);
+            let h1 = &mut h1[..m * ff];
+            matmul_qmat(xn, &blk.qmats[4], m, &self.pool, tiles, h1);
+            for h in h1.iter_mut() {
+                *h = gelu(*h);
+            }
+            matmul_qmat(h1, &blk.qmats[5], m, &self.pool, tiles, proj);
+            for (xi, oi) in x.iter_mut().zip(proj.iter()) {
+                *xi += *oi;
+            }
+        }
+
+        rms_into(x, &qm.gf.data, xn);
+        matmul_f32(xn, &qm.head.data, m, d, vocab, &self.pool, logits);
+        for st in states.iter_mut() {
+            st.pos += 1;
+        }
+        Ok(())
+    }
+
     /// Allocating convenience wrapper over `decode_step_into` (tests,
     /// benches, CLI). The serving hot loop holds a logits buffer and calls
     /// `decode_step_into` directly.
@@ -732,7 +900,7 @@ fn gelu(x: f32) -> f32 {
 /// whole pass on the calling thread). `try_with` keeps allocation during
 /// TLS teardown from aborting the process.
 #[cfg(test)]
-mod alloc_hook {
+pub(crate) mod alloc_hook {
     use std::alloc::{GlobalAlloc, Layout, System};
     use std::cell::Cell;
 
@@ -1173,6 +1341,174 @@ mod tests {
         }
         assert!(fp.decode_step(&qm, 1, &mut st, &mut cache).is_err());
         assert_eq!(st.pos(), s.seq_len);
+    }
+
+    #[test]
+    fn batched_decode_is_bit_identical_to_per_sequence_decode() {
+        // the continuous-batching acceptance property at the module level:
+        // one fused GEMM over the gathered rows == M separate
+        // decode_step_into calls, bit-for-bit, while the batch composition
+        // changes under foot — sequence 3 is admitted two steps late and
+        // the short streams retire early, so the batch is ragged the whole
+        // way down (GEMM rows are independent with k ascending, rms_into is
+        // row-wise, and attention reads only the owning sequence's KV
+        // pages, so gather + compaction cannot move a bit)
+        let model = tiny_model();
+        let s = model.schema.clone();
+        let plan = mixed_plan(s.n_blocks);
+        let qm = QuantizedModel::build(&model, &plan).unwrap();
+        let starts = [0usize, 0, 0, 2];
+        let lens = [8usize, 5, 3, 5];
+        let streams: Vec<Vec<i32>> = lens
+            .iter()
+            .enumerate()
+            .map(|(i, &len)| (0..len).map(|t| ((i * 11 + t * 5 + 1) % s.vocab) as i32).collect())
+            .collect();
+        for workers in [1usize, 3] {
+            let mut fp = ForwardPass::new(&s, Pool::new(workers));
+            // oracle: each sequence alone through the per-sequence GEMV path
+            let mut expect: Vec<Vec<Vec<f32>>> = Vec::new();
+            {
+                let mut cache = KvCache::new(kv_geom(&s), 1 << 24, Precision::Raw);
+                for (i, toks) in streams.iter().enumerate() {
+                    let mut st = DecodeState::new(i as u64, s.n_blocks);
+                    let mut logits = vec![0.0f32; s.vocab];
+                    let mut per_step = Vec::new();
+                    for &tok in toks {
+                        fp.decode_step_into(&qm, tok, &mut st, &mut cache, &mut logits).unwrap();
+                        per_step.push(logits.clone());
+                    }
+                    st.release(&mut cache);
+                    expect.push(per_step);
+                }
+            }
+            // batched: admission/retirement at step boundaries, one fused
+            // step per round over whoever is live
+            let mut cache = KvCache::new(kv_geom(&s), 1 << 24, Precision::Raw);
+            let mut states: Vec<DecodeState> =
+                (0..streams.len()).map(|i| DecodeState::new(i as u64, s.n_blocks)).collect();
+            let mut logits = vec![0.0f32; streams.len() * s.vocab];
+            let rounds = starts.iter().zip(&lens).map(|(a, b)| a + b).max().unwrap();
+            let mut occupancies = Vec::new();
+            for round in 0..rounds {
+                let live: Vec<usize> = (0..streams.len())
+                    .filter(|&i| round >= starts[i] && round < starts[i] + lens[i])
+                    .collect();
+                let m = live.len();
+                assert!(m > 0);
+                occupancies.push(m);
+                let toks: Vec<i32> = live.iter().map(|&i| streams[i][round - starts[i]]).collect();
+                let mut batch: Vec<DecodeState> =
+                    live.iter().map(|&i| states[i].clone()).collect();
+                fp.decode_step_batched(
+                    &qm,
+                    &toks,
+                    &mut batch,
+                    &mut cache,
+                    &mut logits[..m * s.vocab],
+                )
+                .unwrap();
+                for (row, &i) in live.iter().enumerate() {
+                    let t = round - starts[i];
+                    let got = &logits[row * s.vocab..(row + 1) * s.vocab];
+                    for (j, (a, b)) in got.iter().zip(&expect[i][t]).enumerate() {
+                        assert_eq!(
+                            a.to_bits(),
+                            b.to_bits(),
+                            "seq {i} step {t} elem {j} workers={workers}: \
+                             batched {a} vs per-seq {b}"
+                        );
+                    }
+                    states[i] = batch[row].clone();
+                }
+            }
+            for (i, &len) in lens.iter().enumerate() {
+                assert_eq!(states[i].pos(), len, "seq {i} must land at its stream length");
+            }
+            // the schedule must actually exercise gather, growth and the
+            // ragged tail — otherwise the property above proved nothing
+            assert_eq!(occupancies.iter().max(), Some(&4));
+            assert_eq!(occupancies.last(), Some(&1));
+        }
+    }
+
+    #[test]
+    fn steady_state_batched_decode_does_zero_heap_allocation() {
+        // the batched twin of the decode zero-alloc criterion: with every
+        // sequence's pages reserved and a caller-held (M, vocab) logits
+        // buffer, a steady-state decode_step_batched allocates nothing —
+        // the gathered rows live in the same schema-sized arena prefill
+        // uses, staged K/V go through kv_tok, history through kv_hist
+        let model = tiny_model();
+        let s = model.schema.clone();
+        let plan = mixed_plan(s.n_blocks);
+        let qm = QuantizedModel::build(&model, &plan).unwrap();
+        let mut fp = ForwardPass::new(&s, Pool::serial());
+        let mut cache = KvCache::new(kv_geom(&s), 1 << 24, Precision::Q8);
+        let mut states: Vec<DecodeState> =
+            (0..3).map(|i| DecodeState::new(i as u64, s.n_blocks)).collect();
+        for st in &states {
+            st.reserve(&mut cache, s.seq_len).unwrap();
+        }
+        let reserved = cache.allocated_bytes();
+        let mut logits = vec![0.0f32; states.len() * s.vocab];
+        fp.decode_step_batched(&qm, &[1, 2, 3], &mut states, &mut cache, &mut logits).unwrap();
+        let grow = fp.grow_events();
+        let before = super::alloc_hook::thread_allocs();
+        for round in 0..3i32 {
+            let toks = [round + 2, round + 3, round + 4];
+            fp.decode_step_batched(&qm, &toks, &mut states, &mut cache, &mut logits).unwrap();
+        }
+        let delta = super::alloc_hook::thread_allocs() - before;
+        assert_eq!(delta, 0, "steady-state batched decode allocated {delta} times");
+        assert_eq!(fp.grow_events(), grow, "batched decode must not regrow scratch");
+        assert_eq!(grow, 0, "schema-sized arena never grows");
+        assert_eq!(cache.allocated_bytes(), reserved, "appends fill reserved pages only");
+        assert!(logits.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn batched_decode_guards_reject_bad_inputs() {
+        let model = tiny_model();
+        let s = model.schema.clone();
+        let plan = QuantPlan::uniform("tiny", s.n_blocks, Precision::Q8);
+        let qm = QuantizedModel::build(&model, &plan).unwrap();
+        let mut fp = ForwardPass::new(&s, Pool::serial());
+        let mut cache = KvCache::new(kv_geom(&s), 1 << 24, Precision::Raw);
+        let mut states: Vec<DecodeState> =
+            (0..2).map(|i| DecodeState::new(i as u64, s.n_blocks)).collect();
+        let mut logits = vec![0.0f32; 2 * s.vocab];
+        // an empty batch is a caller bug, not a no-op
+        assert!(fp.decode_step_batched(&qm, &[], &mut [], &mut cache, &mut []).is_err());
+        // token count != batch size
+        assert!(fp.decode_step_batched(&qm, &[1], &mut states, &mut cache, &mut logits).is_err());
+        // logits sized for one row, batch of two
+        assert!(fp
+            .decode_step_batched(&qm, &[1, 2], &mut states, &mut cache, &mut logits[..s.vocab])
+            .is_err());
+        // out-of-vocab token in the second row
+        assert!(fp
+            .decode_step_batched(&qm, &[1, s.vocab as i32], &mut states, &mut cache, &mut logits)
+            .is_err());
+        // the same sequence twice would interleave appends on one KV stream
+        let mut dup = vec![DecodeState::new(9, s.n_blocks), DecodeState::new(9, s.n_blocks)];
+        assert!(fp.decode_step_batched(&qm, &[1, 2], &mut dup, &mut cache, &mut logits).is_err());
+        assert!(states.iter().all(|st| st.pos() == 0), "failed steps must not advance cursors");
+        // a batch wider than the scratch arena's row capacity is rejected
+        let cap = s.eval_batch * s.seq_len;
+        let mut wide: Vec<DecodeState> =
+            (0..cap + 1).map(|i| DecodeState::new(100 + i as u64, s.n_blocks)).collect();
+        let wtoks = vec![1i32; cap + 1];
+        let mut wlogits = vec![0.0f32; (cap + 1) * s.vocab];
+        assert!(fp.decode_step_batched(&qm, &wtoks, &mut wide, &mut cache, &mut wlogits).is_err());
+        // the context window is finite: a row at pos == seq_len fails cleanly
+        let mut one = vec![DecodeState::new(50, s.n_blocks)];
+        let mut l1 = vec![0.0f32; s.vocab];
+        for t in 0..s.seq_len {
+            fp.decode_step_batched(&qm, &[(t % 4) as i32], &mut one, &mut cache, &mut l1).unwrap();
+        }
+        assert!(fp.decode_step_batched(&qm, &[1], &mut one, &mut cache, &mut l1).is_err());
+        assert_eq!(one[0].pos(), s.seq_len);
     }
 
     #[test]

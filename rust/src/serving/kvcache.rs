@@ -524,6 +524,90 @@ mod tests {
     }
 
     #[test]
+    fn batched_retirement_churn_keeps_page_accounting_consistent() {
+        // the continuous-batching lifecycle (DESIGN.md §12): sequences join
+        // and leave the decode cohort at step boundaries while the
+        // survivors keep appending. After every admission/retirement the
+        // page accounting must stay exact: allocated_bytes is the live page
+        // count times the page size, every non-live page sits on the free
+        // list, and steady-state churn recycles pages instead of growing
+        // the backing store.
+        let g = geom();
+        let window = 12usize; // 3 pages of 4 tokens
+        let pages_per_seq = window.div_ceil(g.page_tokens);
+        let mut c = KvCache::new(g, 1 << 20, Precision::Q8);
+        let kv = vec![0.5f32; g.floats_per_token()];
+        let check_books = |c: &KvCache| {
+            let live_pages = c.pages.iter().filter(|p| p.is_some()).count();
+            assert_eq!(c.allocated_bytes(), live_pages * g.page_bytes(Precision::Q8));
+            assert_eq!(c.pages.len(), live_pages + c.free_list.len(), "page is live xor free");
+        };
+        let cohort = 4u64;
+        for s in 0..12u64 {
+            // admit sequence s with a full reserved window, retire the
+            // oldest cohort member (admission before retirement, like a
+            // shard gathering the next step's batch)
+            c.reserve(s, window).unwrap();
+            check_books(&c);
+            if s >= cohort {
+                c.release(s - cohort);
+                check_books(&c);
+            }
+            // every live sequence appends one token — allocation-free into
+            // its reserved pages
+            let before = c.allocated_bytes();
+            for live in s.saturating_sub(cohort - 1)..=s {
+                c.append(live, &kv).unwrap();
+            }
+            assert_eq!(c.allocated_bytes(), before, "round {s}: appends fill reserved pages");
+            // the backing store is bounded by the peak cohort (one extra
+            // sequence lives briefly between admission and retirement)
+            assert!(
+                c.pages.len() <= (cohort as usize + 1) * pages_per_seq,
+                "round {s}: churn must recycle pages, got {}",
+                c.pages.len()
+            );
+        }
+        assert_eq!(c.live_sequences(), cohort as usize);
+        assert_eq!(c.sequence_bytes(window), pages_per_seq * g.page_bytes(Precision::Q8));
+        for s in 8..12u64 {
+            c.release(s);
+            check_books(&c);
+        }
+        assert_eq!(c.allocated_bytes(), 0, "full retirement returns every byte");
+        assert_eq!(c.pages.len(), c.free_list.len(), "and parks every page on the free list");
+    }
+
+    #[test]
+    fn batched_history_reads_do_zero_heap_allocation() {
+        // the fused decode step re-reads every live sequence's full
+        // attention history through read_into each step; the whole sweep
+        // must stay off the allocator (same counting-allocator hook as the
+        // refexec steady-state tests)
+        use crate::model::refexec::alloc_hook;
+        let g = geom();
+        let mut c = KvCache::new(g, 1 << 20, Precision::Q8);
+        let kv: Vec<f32> = (0..g.floats_per_token()).map(|i| i as f32 * 0.1 - 0.8).collect();
+        for s in 0..3u64 {
+            c.reserve(s, 8).unwrap();
+            for _ in 0..8 {
+                c.append(s, &kv).unwrap();
+            }
+        }
+        let mut buf = vec![0.0f32; g.floats_per_token()];
+        c.read_into(0, 0, &mut buf).unwrap(); // warm any lazy TLS
+        let before = alloc_hook::thread_allocs();
+        for s in 0..3u64 {
+            for t in 0..8 {
+                c.read_into(s, t, &mut buf).unwrap();
+            }
+        }
+        let after = alloc_hook::thread_allocs();
+        assert_eq!(after - before, 0, "batched read_into must not allocate");
+        assert!(buf.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
     fn property_interleaved_sequences_are_isolated() {
         check(
             5,

@@ -36,6 +36,20 @@
 //! dead-shard rescue fails them with a single terminal `INVALID_TOKEN`
 //! response instead of leaving callers hanging.
 //!
+//! **Continuous batching** (DESIGN.md §12): with `max_decode_batch > 1`
+//! (the default), a shard that pops one decode turn *gathers* the rest of
+//! its queued decode work (`queues::drain_pinned`) and advances the whole
+//! cohort through one fused `decode_step_batched` — one `matmul_qmat` per
+//! weight matrix per block per step, every packed tile unpacked once per
+//! *step* instead of once per sequence. Newly prefilled sequences join the
+//! batch at the next step boundary (their context ingest runs per-sequence
+//! first, at ragged lengths); finished, failed, or abandoned sequences
+//! retire mid-batch without stalling the rest — the survivors are simply
+//! re-queued and re-gathered next turn. `max_decode_batch = 1` keeps the
+//! per-sequence GEMV path, which the batched path is bit-identical to
+//! (`decode_equivalence` proves response streams match across both paths,
+//! 1/2/7 workers, all three policies, scalar and SIMD kernels).
+//!
 //! Fault containment: a shard that unwinds marks itself dead on the shared
 //! queues and its stranded windows are **rescued** — popped exactly once —
 //! by live peers under every policy (see `queues::ShardQueues::pop`).
@@ -192,8 +206,16 @@ pub struct ServingMetrics {
     /// Shard-worker park → wake transitions across all shards.
     pub wakes: usize,
     /// Incremental decode steps executed across all shards (context ingest
-    /// plus generated tokens — the generation workload's volume metric).
+    /// plus generated tokens — the generation workload's volume metric; a
+    /// fused batched step advancing M sequences counts M).
     pub decode_steps: usize,
+    /// Fused `decode_step_batched` calls across all shards (continuous
+    /// batching; stays 0 when `max_decode_batch <= 1` keeps the
+    /// per-sequence GEMV path).
+    pub batched_steps: usize,
+    /// Sequence-rows advanced by those fused steps; the mean decode-batch
+    /// occupancy is `decode_batch_rows / batched_steps`.
+    pub decode_batch_rows: usize,
     /// Peak KV-cache residency per shard, summed across shards.
     pub kv_bytes: usize,
     /// One entry per shard worker (sorted by shard id after `merge`).
@@ -222,6 +244,12 @@ impl ServingMetrics {
         (self.completed - self.rejected) as f64 / self.batches.max(1) as f64
     }
 
+    /// Mean live sequences per fused decode step (0.0 when the
+    /// per-sequence path served all decode traffic).
+    pub fn decode_batch_occupancy(&self) -> f64 {
+        self.decode_batch_rows as f64 / self.batched_steps.max(1) as f64
+    }
+
     /// Fold another shard's (or coordinator's) metrics into this aggregate:
     /// counters add, latencies concatenate, wall-clock takes the max, shard
     /// occupancy records append.
@@ -237,6 +265,8 @@ impl ServingMetrics {
         self.steals += other.steals;
         self.wakes += other.wakes;
         self.decode_steps += other.decode_steps;
+        self.batched_steps += other.batched_steps;
+        self.decode_batch_rows += other.decode_batch_rows;
         self.kv_bytes += other.kv_bytes;
         self.shards.extend(other.shards);
         self.shards.sort_by_key(|s| s.shard);
@@ -268,6 +298,13 @@ impl ServingMetrics {
                 ", decode {} steps, kv peak {}",
                 self.decode_steps,
                 crate::report::bytes_human(self.kv_bytes)
+            ));
+        }
+        if self.batched_steps > 0 {
+            s.push_str(&format!(
+                ", batched {} steps (mean occupancy {:.2})",
+                self.batched_steps,
+                self.decode_batch_occupancy()
             ));
         }
         if self.resident_weight_bytes > 0 {
@@ -338,6 +375,11 @@ impl Coordinator {
         );
         let kv_prec = cfg.kv_precision;
         let kv_budget = (cfg.kv_budget_mb.max(0.0) * 1e6) as usize;
+        // the fused batched step gathers rows into the forward scratch
+        // arena, which holds eval_batch * seq_len of them
+        let max_decode_batch = cfg
+            .max_decode_batch
+            .clamp(1, model.schema.eval_batch * model.schema.seq_len);
 
         // the shared per-shard work queues the whole fleet drains
         let queues: Arc<ShardQueues<Work>> = Arc::new(ShardQueues::new(n_shards));
@@ -359,6 +401,7 @@ impl Coordinator {
                 steal: policy.steals(),
                 kv_prec,
                 kv_budget,
+                max_decode_batch,
             };
             let handle = std::thread::Builder::new()
                 .name(format!("ewq-shard-{shard}"))
@@ -561,6 +604,8 @@ struct ShardCtx {
     kv_prec: Precision,
     /// KV-cache budget in bytes (per shard)
     kv_budget: usize,
+    /// live-sequence cap per fused decode step (1 = per-sequence GEMV path)
+    max_decode_batch: usize,
 }
 
 /// Marks the shard dead on every non-clean exit (panic mid-batch, setup
@@ -591,7 +636,7 @@ fn shard_worker(
     ready: Sender<std::result::Result<(), String>>,
     results: Sender<ServingMetrics>,
 ) -> Result<()> {
-    let ShardCtx { shard, net_us, fwd_workers, steal, kv_prec, kv_budget } = ctx;
+    let ShardCtx { shard, net_us, fwd_workers, steal, kv_prec, kv_budget, max_decode_batch } = ctx;
     let mut guard = DeathGuard { shard, queues: queues.clone(), armed: true };
     // Runtime lives entirely inside this thread (PJRT client is not Send).
     let setup = (|| -> Result<_> {
@@ -634,9 +679,12 @@ fn shard_worker(
     let mut occ = ShardOccupancy { shard, ..Default::default() };
     let started = Instant::now();
     // this shard's KV cache (decoding sequences are pinned to it) and the
-    // reused decode logits buffer — allocated once, never on the hot path
+    // reused decode logits buffers (single-row for per-sequence turns and
+    // context ingest, (max_decode_batch, vocab) for fused batched steps) —
+    // allocated once, never on the hot path
     let mut kv = KvCache::new(geom, kv_budget, kv_prec);
     let mut logits = vec![0.0f32; v];
+    let mut batch_logits = vec![0.0f32; max_decode_batch * v];
 
     loop {
         let (work, stolen) = match queues.pop(shard, steal) {
@@ -674,12 +722,47 @@ fn shard_worker(
                     // with that shard — fail the stream cleanly, exactly
                     // once (the queue popped it exactly once)
                     fail_decode(job, shard, &mut metrics, &mut occ);
-                } else if let Some(job) = decode_turn(
-                    job, &ex, &qm, &mut kv, &mut logits, (shard, s, v), &mut metrics, &mut occ,
-                ) {
-                    // more tokens to generate: go to the back of the queue
-                    // so prefill windows that arrived meanwhile interleave
-                    queues.push(shard, Work::Decode(job));
+                } else if max_decode_batch <= 1 {
+                    // per-sequence GEMV path: the batched path's
+                    // equivalence oracle, kept behind the config switch
+                    if let Some(job) = decode_turn(
+                        job, &ex, &qm, &mut kv, &mut logits, (shard, s, v), &mut metrics,
+                        &mut occ,
+                    ) {
+                        // more tokens to generate: go to the back of the
+                        // queue so prefill windows that arrived meanwhile
+                        // interleave
+                        queues.push(shard, Work::Decode(job));
+                    }
+                } else {
+                    // continuous batching: gather every other decode turn
+                    // queued on this shard (admission at the step boundary)
+                    // and advance the whole cohort through one fused step
+                    let mut jobs = vec![job];
+                    let drained = queues.drain_pinned(shard, max_decode_batch - 1);
+                    let n_drained = drained.len();
+                    jobs.extend(drained.into_iter().map(|w| match w {
+                        Work::Decode(j) => j,
+                        Work::Prefill(_) => unreachable!("only decode work is pinned"),
+                    }));
+                    for job in decode_batch_turn(
+                        jobs,
+                        &ex,
+                        &qm,
+                        &mut kv,
+                        &mut logits,
+                        &mut batch_logits,
+                        (shard, s, v),
+                        &mut metrics,
+                        &mut occ,
+                    ) {
+                        queues.push(shard, Work::Decode(job));
+                    }
+                    // each drained window carried its own depth slot (the
+                    // popped one is completed at the bottom of the loop)
+                    for _ in 0..n_drained {
+                        queues.complete(shard);
+                    }
                 }
             }
         }
@@ -831,6 +914,90 @@ fn decode_turn(
         return None;
     }
     Some(job)
+}
+
+/// Advance a gathered cohort of decode jobs by one turn (continuous
+/// batching). Jobs still on their first turn ingest their (ragged-length)
+/// context per-sequence via `decode_turn` — they join the fused batch at
+/// the next step boundary. Everyone else advances together through ONE
+/// `decode_step_batched`: one fused GEMM per weight matrix per block, with
+/// each sequence's attention read from its own KV pages — bit-identical to
+/// the per-sequence turns it replaces, so response streams are invariant
+/// under `max_decode_batch`. Finished/failed/abandoned sequences retire
+/// here, mid-batch; the returned survivors go back on the queue and are
+/// re-gathered (possibly alongside newly admitted sequences) next turn.
+#[allow(clippy::too_many_arguments)]
+fn decode_batch_turn(
+    jobs: Vec<DecodeJob>,
+    ex: &ModelExecutor<'_>,
+    qm: &QuantizedModel,
+    kv: &mut KvCache,
+    logits: &mut [f32],
+    batch_logits: &mut [f32],
+    (shard, s, v): (usize, usize, usize),
+    metrics: &mut ServingMetrics,
+    occ: &mut ShardOccupancy,
+) -> Vec<DecodeJob> {
+    let (first, steady): (Vec<DecodeJob>, Vec<DecodeJob>) =
+        jobs.into_iter().partition(|j| j.produced == 0);
+    let mut survivors = Vec::new();
+    for job in first {
+        if let Some(j) = decode_turn(job, ex, qm, kv, logits, (shard, s, v), metrics, occ) {
+            survivors.push(j);
+        }
+    }
+    if steady.is_empty() {
+        return survivors;
+    }
+    let m = steady.len();
+    let exec_start = Instant::now();
+    let tokens: Vec<i32> = steady.iter().map(|j| j.next_input).collect();
+    let mut states: Vec<DecodeState> = steady.iter().map(|j| j.state.clone()).collect();
+    let stepped =
+        ex.decode_step_batched(qm, &tokens, &mut states, kv, &mut batch_logits[..m * v]);
+    metrics.decode_steps += m;
+    metrics.batched_steps += 1;
+    metrics.decode_batch_rows += m;
+    occ.busy_us += exec_start.elapsed().as_micros() as u64;
+    if let Err(e) = stepped {
+        // defensive: reservation + admission guards make this unreachable
+        // in practice, but a failed fused step must end every in-flight
+        // stream cleanly (one terminal sentinel each), not kill the shard
+        eprintln!("shard {shard}: fused decode step of {m} sequences failed: {e:#}");
+        for job in steady {
+            job.state.release(kv);
+            fail_decode(job, shard, metrics, occ);
+        }
+        return survivors;
+    }
+    for (row, mut job) in steady.into_iter().enumerate() {
+        job.state = states[row].clone();
+        let next = crate::model::sampler::argmax(&batch_logits[row * v..(row + 1) * v]) as i32;
+        job.produced += 1;
+        job.next_input = next;
+        let delivered = job
+            .req
+            .resp
+            .send(Response {
+                id: job.req.id,
+                next_token: next,
+                latency: job.req.submitted.elapsed(),
+                network_latency_us: 0,
+                batch_size: m,
+                shard,
+            })
+            .is_ok();
+        let done = job.produced >= job.req.max_new_tokens || job.state.pos() >= s || !delivered;
+        if done {
+            job.state.release(kv);
+            metrics.completed += 1;
+            metrics.latencies_us.push(job.req.submitted.elapsed().as_micros() as u64);
+            occ.completed += 1;
+        } else {
+            survivors.push(job);
+        }
+    }
+    survivors
 }
 
 /// Execute one dispatched batch on a shard's replica: reject out-of-vocab
@@ -1375,6 +1542,50 @@ mod tests {
     }
 
     #[test]
+    fn batched_decode_matches_the_per_sequence_oracle_and_reports_occupancy() {
+        // the serving-level continuous-batching acceptance: token streams
+        // are identical with max_decode_batch 1 (the per-sequence GEMV
+        // oracle) and 16 (the fused batched path), and the metrics surface
+        // the fused steps and their mean occupancy
+        let model = tiny_model();
+        let streams_with = |max_db: usize| {
+            let plan =
+                QuantPlan::uniform(&model.schema.name, model.schema.n_blocks, Precision::Q8);
+            let cfg = ServeConfig {
+                max_batch: 8,
+                max_wait_us: 50_000,
+                workers: 1,
+                max_decode_batch: max_db,
+                ..Default::default()
+            };
+            let coord = Coordinator::start_with_model(model.clone(), plan, cfg, 0, 0).unwrap();
+            let rxs: Vec<_> = (0..6)
+                .map(|i| coord.submit_gen(vec![(i % 64) as i32, ((i * 7 + 2) % 64) as i32], 5))
+                .collect();
+            let streams: Vec<Vec<i32>> =
+                rxs.into_iter().map(|rx| rx.iter().map(|r| r.next_token).collect()).collect();
+            (streams, coord.shutdown())
+        };
+        let (oracle, m1) = streams_with(1);
+        assert_eq!(m1.batched_steps, 0, "max_decode_batch 1 keeps the per-sequence path");
+        assert_eq!(m1.decode_batch_rows, 0);
+        assert_eq!(m1.decode_batch_occupancy(), 0.0);
+        for st in &oracle {
+            assert_eq!(st.len(), 5);
+            assert!(st.iter().all(|&t| (0..64).contains(&t)));
+        }
+        let (batched, mb) = streams_with(16);
+        assert_eq!(oracle, batched, "fused batched decode must not move a single token");
+        assert!(mb.batched_steps > 0, "the fused path must actually have run");
+        assert_eq!(mb.decode_steps, m1.decode_steps, "same decode volume, different gather");
+        assert!(mb.decode_batch_rows >= mb.batched_steps);
+        assert!(mb.decode_batch_occupancy() >= 1.0);
+        assert!(mb.summary().contains("batched"), "occupancy shows up in the summary line");
+        assert_eq!(mb.completed, 6);
+        assert_eq!(mb.rejected, 0);
+    }
+
+    #[test]
     fn quantized_kv_streams_are_deterministic_and_valid() {
         let model = tiny_model();
         for kv in [Precision::Q8, Precision::Q4] {
@@ -1607,6 +1818,8 @@ mod tests {
             steals: 0,
             wakes: 0,
             decode_steps: 0,
+            batched_steps: 0,
+            decode_batch_rows: 0,
             kv_bytes: 0,
             shards: Vec::new(),
         };
@@ -1651,6 +1864,8 @@ mod tests {
             steals: 2,
             wakes: 5,
             decode_steps: 3,
+            batched_steps: 2,
+            decode_batch_rows: 5,
             kv_bytes: 100,
             shards: vec![ShardOccupancy {
                 shard: 1,
@@ -1673,6 +1888,8 @@ mod tests {
             steals: 1,
             wakes: 3,
             decode_steps: 2,
+            batched_steps: 1,
+            decode_batch_rows: 2,
             kv_bytes: 50,
             shards: vec![ShardOccupancy {
                 shard: 0,
@@ -1694,8 +1911,12 @@ mod tests {
         assert_eq!(a.steals, 3, "steal counts sum across shards");
         assert_eq!(a.wakes, 8, "park/wake transitions sum across shards");
         assert_eq!(a.decode_steps, 5, "decode step counts sum across shards");
+        assert_eq!(a.batched_steps, 3, "fused step counts sum across shards");
+        assert_eq!(a.decode_batch_rows, 7, "batched row counts sum across shards");
+        assert!((a.decode_batch_occupancy() - 7.0 / 3.0).abs() < 1e-12);
         assert_eq!(a.kv_bytes, 150, "kv peaks sum across shards");
         assert!(a.summary().contains("decode 5 steps"));
+        assert!(a.summary().contains("batched 3 steps"));
         assert_eq!(a.latencies_us.len(), 5);
         // shards sorted by id after merge
         assert_eq!(a.shards.iter().map(|s| s.shard).collect::<Vec<_>>(), vec![0, 1]);

@@ -186,6 +186,30 @@ impl<W: Pinnable> ShardQueues<W> {
             st = self.cv.wait(st).unwrap_or_else(|e| e.into_inner());
         }
     }
+
+    /// Non-blocking drain of up to `max` **pinned** windows from shard
+    /// `me`'s own queue, oldest first — the continuous-batching gather: a
+    /// shard that just popped one decode job collects the rest of its
+    /// queued decode work so the whole cohort advances through one fused
+    /// batched step. Non-pinned windows (prefills) are left in place and
+    /// keep their relative order, so classic windows are not starved or
+    /// reordered. Each drained window still occupies one depth slot on
+    /// `me`; the caller owes one `complete(me)` per window, exactly as if
+    /// it had been popped — the shortest-queue signal keeps counting
+    /// in-flight batch members until their step retires them.
+    pub(crate) fn drain_pinned(&self, me: usize, max: usize) -> Vec<W> {
+        let mut st = lock(&self.state);
+        let mut out = Vec::new();
+        let mut i = 0;
+        while out.len() < max && i < st.queues[me].len() {
+            if st.queues[me][i].pinned() {
+                out.push(st.queues[me].remove(i).expect("index in bounds under lock"));
+            } else {
+                i += 1;
+            }
+        }
+        out
+    }
 }
 
 #[cfg(test)]
@@ -239,6 +263,36 @@ mod tests {
         q.stop();
         assert_eq!(q.pop(1, false), Popped::Stop);
         assert_eq!(q.pop(2, true), Popped::Stop);
+    }
+
+    #[test]
+    fn drain_pinned_gathers_fifo_and_leaves_free_windows_in_place() {
+        let q: ShardQueues<TW> = ShardQueues::new(2);
+        q.push(0, TW::Free(1));
+        q.push(0, TW::Pinned(2));
+        q.push(0, TW::Free(3));
+        q.push(0, TW::Pinned(4));
+        q.push(0, TW::Pinned(5));
+        // capped drain takes the oldest pinned windows only
+        assert_eq!(q.drain_pinned(0, 2), vec![TW::Pinned(2), TW::Pinned(4)]);
+        // depth slots stay with the drained windows until completed
+        assert_eq!(q.depth_snapshot(), vec![5, 0]);
+        q.complete(0);
+        q.complete(0);
+        assert_eq!(q.depth_snapshot(), vec![3, 0]);
+        // free windows kept their order; the remaining pinned one drains next
+        assert_eq!(q.drain_pinned(0, 8), vec![TW::Pinned(5)]);
+        q.complete(0);
+        q.stop();
+        assert_eq!(q.pop(0, false), Popped::Own(TW::Free(1)));
+        assert_eq!(q.pop(0, false), Popped::Own(TW::Free(3)));
+        q.complete(0);
+        q.complete(0);
+        assert_eq!(q.pop(0, false), Popped::Stop);
+        assert_eq!(q.depth_snapshot(), vec![0, 0]);
+        // an empty or foreign drain takes nothing
+        assert_eq!(q.drain_pinned(0, 4), vec![]);
+        assert_eq!(q.drain_pinned(1, 4), vec![]);
     }
 
     #[test]

@@ -12,6 +12,11 @@
 //!   stream, derived from the codec step size (see
 //!   `property_quantized_kv_decode_within_stated_tolerance`), and is
 //!   itself bit-deterministic across worker counts.
+//! - **Continuous batching** (DESIGN.md §12): a ragged
+//!   `decode_step_batched` cohort — staggered admission, early retirement —
+//!   reproduces the per-sequence streams bit-for-bit, and served response
+//!   streams are invariant under `max_decode_batch` ∈ {1, 4, 16} across
+//!   1/2/7 workers × all three dispatch policies × scalar/auto kernels.
 //!
 //! Everything runs offline — synthetic in-memory models, native executor.
 
@@ -215,6 +220,94 @@ fn decode_streams_bit_identical_under_forced_scalar_kernels() {
 }
 
 #[test]
+fn property_batched_decode_bit_identical_to_per_sequence_for_random_models() {
+    // the continuous-batching property over random models, precision mixes
+    // and KV geometries: a ragged decode_step_batched cohort — sequence i
+    // admitted at round i, stream lengths shrinking so retirement is
+    // staggered too — reproduces each sequence's per-sequence decode_step
+    // stream bit-for-bit, at every worker count
+    check(0xBA7C4, 6, 8, gen_case, |case| {
+        let qm = build(case)?;
+        let s = &qm.schema;
+        let sl = s.seq_len; // >= 4 by construction
+        let lens = [sl, sl - 2, (sl - 3).max(1)];
+        let streams: Vec<Vec<i32>> = lens
+            .iter()
+            .enumerate()
+            .map(|(i, &len)| (0..len).map(|t| case.tokens[(t + 2 * i) % sl]).collect())
+            .collect();
+        let n_seq = streams.len();
+        let geom = KvGeometry {
+            page_tokens: case.kv_page,
+            n_heads: s.n_heads,
+            head_dim: s.d_model / s.n_heads,
+        };
+        for workers in worker_matrix() {
+            let mut fp = ForwardPass::new(s, Pool::new(workers));
+            // per-sequence oracle, one sequence at a time
+            let mut expect: Vec<Vec<Vec<f32>>> = Vec::new();
+            {
+                let mut cache = KvCache::new(geom, 1 << 26, Precision::Raw);
+                for (i, toks) in streams.iter().enumerate() {
+                    let mut st = DecodeState::new(i as u64, s.n_blocks);
+                    let mut per_step = Vec::new();
+                    for &tok in toks {
+                        per_step.push(
+                            fp.decode_step(&qm, tok, &mut st, &mut cache)
+                                .map_err(|e| format!("oracle: {e:#}"))?,
+                        );
+                    }
+                    st.release(&mut cache);
+                    expect.push(per_step);
+                }
+            }
+            // batched: one fused step per round over whoever is live
+            let mut cache = KvCache::new(geom, 1 << 26, Precision::Raw);
+            let mut states: Vec<DecodeState> =
+                (0..n_seq).map(|i| DecodeState::new(i as u64, s.n_blocks)).collect();
+            let mut logits = vec![0.0f32; n_seq * s.vocab];
+            let rounds = (0..n_seq).map(|i| i + streams[i].len()).max().unwrap();
+            for round in 0..rounds {
+                let live: Vec<usize> = (0..n_seq)
+                    .filter(|&i| round >= i && round < i + streams[i].len())
+                    .collect();
+                if live.is_empty() {
+                    continue;
+                }
+                let m = live.len();
+                let toks: Vec<i32> = live.iter().map(|&i| streams[i][round - i]).collect();
+                let mut batch: Vec<DecodeState> =
+                    live.iter().map(|&i| states[i].clone()).collect();
+                fp.decode_step_batched(
+                    &qm,
+                    &toks,
+                    &mut batch,
+                    &mut cache,
+                    &mut logits[..m * s.vocab],
+                )
+                .map_err(|e| format!("batched: {e:#}"))?;
+                for (row, &i) in live.iter().enumerate() {
+                    let t = round - i;
+                    let got = &logits[row * s.vocab..(row + 1) * s.vocab];
+                    for (j, (a, b)) in got.iter().zip(&expect[i][t]).enumerate() {
+                        if a.to_bits() != b.to_bits() {
+                            return Err(format!(
+                                "batched decode differs from per-sequence: workers={workers} \
+                                 seq {i} step {t} elem {j}: batched {a} vs per-seq {b} \
+                                 (precs={:?})",
+                                case.precs
+                            ));
+                        }
+                    }
+                    states[i] = batch[row].clone();
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn property_quantized_kv_decode_within_stated_tolerance() {
     // Stated tolerance, derived not hand-waved: the KV codec rounds each
     // cached element to within step/2, where step = maxabs/127 (Q8) or
@@ -252,6 +345,134 @@ fn property_quantized_kv_decode_within_stated_tolerance() {
         }
         Ok(())
     });
+}
+
+/// Fixed synthetic model for the serving-level batched-equivalence matrix
+/// (random models are covered by the refexec-level property above; the
+/// serving sweep spins up whole coordinators, so it uses one arch).
+fn serve_model() -> ewq::zoo::ModelDir {
+    synthetic_model_dir(&SyntheticArch {
+        schema: Schema {
+            name: "eq-serve".into(),
+            n_blocks: 2,
+            d_model: 32,
+            n_heads: 4,
+            d_ff: 64,
+            vocab: 64,
+            seq_len: 8,
+            eval_batch: 4,
+        },
+        profile: Profile::UShape,
+        seed: 4242,
+    })
+}
+
+/// Serve `n_req` generation requests of `n_tok` tokens under the given
+/// worker count / dispatch policy / decode-batch cap; returns the token
+/// streams plus the merged metrics.
+fn serve_streams(
+    model: &ewq::zoo::ModelDir,
+    workers: usize,
+    dispatch: ewq::config::DispatchPolicy,
+    max_decode_batch: usize,
+    n_req: usize,
+    n_tok: usize,
+) -> (Vec<Vec<i32>>, ewq::serving::ServingMetrics) {
+    use ewq::config::ServeConfig;
+    use ewq::serving::Coordinator;
+    let s = &model.schema;
+    let plan = QuantPlan::uniform(&s.name, s.n_blocks, Precision::Q8);
+    let cfg = ServeConfig {
+        max_batch: 4,
+        max_wait_us: 500,
+        workers,
+        dispatch,
+        max_decode_batch,
+        ..Default::default()
+    };
+    let coord = Coordinator::start_with_model(model.clone(), plan, cfg, 0, 0).unwrap();
+    let v = s.vocab as i32;
+    let rxs: Vec<_> = (0..n_req)
+        .map(|i| coord.submit_gen(vec![(i as i32 * 5 + 1) % v, (i as i32 * 11 + 3) % v], n_tok))
+        .collect();
+    let streams: Vec<Vec<i32>> =
+        rxs.into_iter().map(|rx| rx.iter().map(|r| r.next_token).collect()).collect();
+    (streams, coord.shutdown())
+}
+
+const ALL_POLICIES: [ewq::config::DispatchPolicy; 3] = [
+    ewq::config::DispatchPolicy::RoundRobin,
+    ewq::config::DispatchPolicy::ShortestQueue,
+    ewq::config::DispatchPolicy::WorkSteal,
+];
+
+#[test]
+fn batched_serving_streams_bit_identical_across_workers_policies_and_batch_caps() {
+    // the serving-level acceptance matrix: every response stream is
+    // bit-identical whether decode runs per-sequence (max_decode_batch 1,
+    // the GEMV oracle) or continuously batched (4 / 16), under 1/2/7(/CI)
+    // workers and all three dispatch policies
+    let model = serve_model();
+    let (baseline, m0) =
+        serve_streams(&model, 1, ewq::config::DispatchPolicy::WorkSteal, 1, 5, 4);
+    assert_eq!(m0.batched_steps, 0, "the oracle path must stay per-sequence");
+    assert_eq!(baseline.len(), 5);
+    for st in &baseline {
+        assert_eq!(st.len(), 4);
+        assert!(st.iter().all(|&t| (0..64).contains(&t)), "{st:?}");
+    }
+    for policy in ALL_POLICIES {
+        for workers in worker_matrix() {
+            for max_db in [1usize, 4, 16] {
+                let (streams, m) = serve_streams(&model, workers, policy, max_db, 5, 4);
+                assert_eq!(
+                    baseline,
+                    streams,
+                    "workers={workers} policy={} max_decode_batch={max_db}",
+                    policy.label()
+                );
+                if max_db > 1 {
+                    assert!(
+                        m.batched_steps > 0,
+                        "fused path must run: workers={workers} policy={} max_db={max_db}",
+                        policy.label()
+                    );
+                }
+                assert_eq!(m.decode_steps, m0.decode_steps, "same decode volume either way");
+            }
+        }
+    }
+}
+
+#[test]
+fn batched_serving_streams_bit_identical_under_forced_scalar_kernels() {
+    // the scalar/AVX2 axis of the serving matrix. Same env save/restore
+    // caveat as decode_streams_bit_identical_under_forced_scalar_kernels:
+    // integration tests are their own process, and a concurrent test in
+    // this binary at worst runs scalar transiently — bit-identical by the
+    // very property being proven. Asserts are deferred until after the
+    // restore so a failure cannot leak the pinned env either.
+    let model = serve_model();
+    let (auto, _) = serve_streams(&model, 2, ewq::config::DispatchPolicy::WorkSteal, 16, 5, 4);
+    let old = std::env::var("EWQ_FORCE_SCALAR").ok();
+    std::env::set_var("EWQ_FORCE_SCALAR", "1");
+    let mut scalar = Vec::new();
+    for policy in ALL_POLICIES {
+        for max_db in [1usize, 16] {
+            let (streams, _) = serve_streams(&model, 2, policy, max_db, 5, 4);
+            scalar.push((policy.label(), max_db, streams));
+        }
+    }
+    match old {
+        Some(v) => std::env::set_var("EWQ_FORCE_SCALAR", v),
+        None => std::env::remove_var("EWQ_FORCE_SCALAR"),
+    }
+    for (label, max_db, streams) in scalar {
+        assert_eq!(
+            auto, streams,
+            "policy={label} max_decode_batch={max_db} under EWQ_FORCE_SCALAR=1"
+        );
+    }
 }
 
 #[test]
