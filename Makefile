@@ -1,6 +1,6 @@
 # Repo-level convenience targets. `make verify` mirrors the tier-1 gate.
 
-.PHONY: verify fmt clippy test test-scalar bench bench-smoke bench-compare artifacts
+.PHONY: verify fmt clippy test test-scalar test-chaos bench bench-smoke bench-compare artifacts
 
 verify:
 	cd rust && cargo build --release && cargo test -q
@@ -19,13 +19,22 @@ test:
 test-scalar:
 	cd rust && EWQ_FORCE_SCALAR=1 cargo test -q
 
+# The deterministic chaos lane (DESIGN.md §13): the full suite plus
+# tests/chaos.rs under the `chaos` feature — seeded shard deaths, stalls and
+# forced KV-admission failures crossed with every dispatch policy and both
+# decode paths; every request must still get exactly one terminal status.
+test-chaos:
+	cd rust && cargo test -q --features chaos
+
 bench:
 	cd rust && cargo bench
 
 # CI smoke lane: compile every bench target, then run the kernel, serving
 # and decode benches with a short sampling budget. Emits BENCH_kernels.json
 # (fused-vs-reference latency, GFLOP/s, resident weight bytes),
-# BENCH_serving.json (dispatch-policy sweep incl. work-steal counters) and
+# BENCH_serving.json (dispatch-policy sweep incl. work-steal counters plus
+# the bounded-admission overload sweep: goodput/shed/p99 at 0.5x/1x/2x
+# measured capacity) and
 # BENCH_decode.json (KV-cache decode tokens/s + residency) at the repo
 # root; CI uploads all three as workflow artifacts.
 bench-smoke:
@@ -46,7 +55,8 @@ bench-smoke:
 # `make bench-smoke` first.
 bench-compare:
 	cd rust && cargo run --release --bin bench_compare -- \
-		../BENCH_kernels.json ../BENCH_decode.json ../BENCH_baseline.json
+		../BENCH_kernels.json ../BENCH_serving.json ../BENCH_decode.json \
+		../BENCH_baseline.json
 
 # Build the AOT artifacts (flagship weights + HLO text). Requires the
 # python/JAX toolchain; the Rust crate runs offline without them.

@@ -14,10 +14,13 @@
 //! lane — see `make bench-smoke`), so CI can archive the policy sweep next
 //! to `BENCH_kernels.json`.
 
+use std::time::{Duration, Instant};
+
 use ewq::config::{DispatchPolicy, ServeConfig};
 use ewq::ewq::QuantPlan;
 use ewq::quant::Precision;
-use ewq::serving::{Coordinator, ServingMetrics};
+use ewq::serving::trace::{generate, Arrival};
+use ewq::serving::{Coordinator, ServingMetrics, Status};
 use ewq::zoo::gen::{synthetic_model_dir, Profile, SyntheticArch};
 use ewq::zoo::{ModelDir, Schema};
 
@@ -80,6 +83,59 @@ fn run_skewed(model: &ModelDir, dispatch: DispatchPolicy, requests: usize) -> Se
     m
 }
 
+/// Queue cap for the overload sweep (DESIGN.md §13).
+const OVERLOAD_QCAP: usize = 4;
+
+/// One overload-sweep cell: a Poisson arrival trace offered at `rps`
+/// against a bounded-admission fleet (2 workers, max_batch=1, queue cap
+/// `OVERLOAD_QCAP`). Returns the merged metrics plus the measured goodput
+/// (completed-Ok per wall second, shed/expired excluded).
+fn run_overload(model: &ModelDir, rps: f64, n: usize) -> (ServingMetrics, f64) {
+    let plan = QuantPlan::uniform(&model.schema.name, model.schema.n_blocks, Precision::Q8);
+    let cfg = ServeConfig {
+        max_batch: 1,
+        max_wait_us: 100,
+        workers: 2,
+        max_queued_windows: OVERLOAD_QCAP,
+        ..Default::default()
+    };
+    let coord = Coordinator::start_with_model(model.clone(), plan, cfg, 0, 0).expect("start");
+    let trace = generate(n, Arrival::Poisson { rps }, 90125);
+    let t0 = Instant::now();
+    let mut rxs = Vec::with_capacity(n);
+    for e in trace {
+        if let Some(wait) = Duration::from_micros(e.at_us).checked_sub(t0.elapsed()) {
+            std::thread::sleep(wait);
+        }
+        rxs.push(coord.submit(e.context));
+    }
+    let mut ok = 0usize;
+    for rx in rxs {
+        if let Ok(r) = rx.recv() {
+            if r.status == Status::Ok {
+                ok += 1;
+            }
+        }
+    }
+    let wall_s = t0.elapsed().as_secs_f64().max(1e-9);
+    let m = coord.shutdown();
+    (m, ok as f64 / wall_s)
+}
+
+/// Closed-loop capacity of the same fleet shape (unbounded queue, all
+/// requests offered at t=0): the rps the overload factors scale from.
+fn measure_capacity(model: &ModelDir, n: usize) -> f64 {
+    let plan = QuantPlan::uniform(&model.schema.name, model.schema.n_blocks, Precision::Q8);
+    let cfg = ServeConfig { max_batch: 1, max_wait_us: 100, workers: 2, ..Default::default() };
+    let coord = Coordinator::start_with_model(model.clone(), plan, cfg, 0, 0).expect("start");
+    let rxs: Vec<_> =
+        generate(n, Arrival::Instant, 90125).into_iter().map(|e| coord.submit(e.context)).collect();
+    for rx in rxs {
+        let _ = rx.recv();
+    }
+    coord.shutdown().throughput_rps()
+}
+
 fn bench_model() -> ModelDir {
     let artifacts = ewq::artifacts_dir();
     match ModelDir::load(artifacts.join("models/tl-phi")) {
@@ -131,6 +187,7 @@ fn write_json(
     model: &str,
     requests: usize,
     sweep: &[(DispatchPolicy, ServingMetrics)],
+    overload: &str,
     skipped_sweeps: &[&str],
 ) {
     let mut body = String::new();
@@ -144,7 +201,8 @@ fn write_json(
     let json = format!(
         "{{\n  \"model\": \"{model}\",\n  \"workload\": \"skewed-cost\",\n  \
          \"requests\": {requests},\n  \"workers\": 2,\n  \
-         \"skipped_sweeps\": [{}],\n  \"policies\": {{\n{body}\n  }}\n}}\n",
+         \"skipped_sweeps\": [{}],\n  \"overload\": {overload},\n  \
+         \"policies\": {{\n{body}\n  }}\n}}\n",
         skipped.join(", ")
     );
     match std::fs::write(path, &json) {
@@ -225,6 +283,56 @@ fn main() {
         sq.1.throughput_rps()
     );
 
+    println!(
+        "overload sweep (Poisson arrivals, bounded queue cap {OVERLOAD_QCAP}, 2 workers, \
+         max_batch=1):"
+    );
+    // even quick mode needs enough arrivals that the 2x backlog (~n/2)
+    // decisively exceeds the fleet's total depth capacity (2 shards x cap),
+    // or the shed>0 hard assert below would sit on a knife edge
+    let overload_n = if quick { 32 } else { 48 };
+    let capacity_rps = measure_capacity(&model, overload_n);
+    println!("  closed-loop capacity: {capacity_rps:.1} req/s");
+    let mut goodputs = Vec::new();
+    let mut two_x: Option<ServingMetrics> = None;
+    for factor in [0.5f64, 1.0, 2.0] {
+        let (m, goodput) = run_overload(&model, capacity_rps * factor, overload_n);
+        let shed_rate = m.shed() as f64 / m.completed.max(1) as f64;
+        println!(
+            "  {factor:.1}x capacity ({:.1} rps offered) -> goodput {goodput:.1} req/s, \
+             shed {:.0}%, p99 {} us, q-hwm {}",
+            capacity_rps * factor,
+            shed_rate * 100.0,
+            m.percentile_us(0.99),
+            m.queue_depth_hwm
+        );
+        goodputs.push(goodput);
+        if factor == 2.0 {
+            two_x = Some(m);
+        }
+    }
+    // the overload-safety claim itself, gated hard: depth bounded by the
+    // admission cap, the excess answered with typed Busy instead of queued
+    let two_x = two_x.expect("2x row ran");
+    assert!(
+        two_x.queue_depth_hwm <= OVERLOAD_QCAP,
+        "queue hwm {} exceeded the admission cap {OVERLOAD_QCAP} under 2x overload",
+        two_x.queue_depth_hwm
+    );
+    assert!(two_x.shed() > 0, "2x overload must shed (got 0 Busy responses)");
+    let overload = format!(
+        "{{ \"overload_capacity_rps\": {capacity_rps:.3}, \
+         \"overload_goodput_rps_0_5x\": {:.3}, \"overload_goodput_rps_1x\": {:.3}, \
+         \"overload_goodput_rps_2x\": {:.3}, \"overload_shed_rate_2x\": {:.4}, \
+         \"overload_p99_us_2x\": {}, \"overload_queue_hwm_2x\": {} }}",
+        goodputs[0],
+        goodputs[1],
+        goodputs[2],
+        two_x.shed() as f64 / two_x.completed.max(1) as f64,
+        two_x.percentile_us(0.99),
+        two_x.queue_depth_hwm
+    );
+
     let out = std::env::var("EWQ_BENCH_OUT").unwrap_or_else(|_| "BENCH_serving.json".into());
-    write_json(&out, &model.schema.name, requests, &sweep, &skipped_sweeps);
+    write_json(&out, &model.schema.name, requests, &sweep, &overload, &skipped_sweeps);
 }

@@ -30,7 +30,9 @@
 //! missing current file is — bench-smoke should have produced it. Keys
 //! skipped because the baseline predates them are **listed explicitly in
 //! the final verdict line**, so a truncated bench run can never masquerade
-//! as a clean comparison. The parser is a deliberate 20-line scanner: the
+//! as a clean comparison. `OPTIONAL_KEYS` (the serving overload sweep) are
+//! softer: compared when both sides carry them, listed as skipped when
+//! either side doesn't. The parser is a deliberate 20-line scanner: the
 //! files are emitted by our own benches as flat `"key": number` JSON, and
 //! the crate builds fully offline, so no JSON dependency is warranted.
 
@@ -45,6 +47,13 @@ const KEYS: [&str; 8] = [
     "decode_tok_s_raw_kv",
     "decode_tok_s_batched",
 ];
+
+/// Optional tracked metrics (higher is better): compared only when present
+/// in BOTH the current results and the baseline, listed as skipped in the
+/// verdict line otherwise. The overload-sweep goodput lands here because a
+/// missing row (quick mode, older bench binary) is a coverage gap to
+/// surface, not a hard gate failure like a vanished kernel metric.
+const OPTIONAL_KEYS: [&str; 2] = ["overload_goodput_rps_1x", "overload_goodput_rps_2x"];
 
 /// Extract the number following `"key":` in a flat JSON document.
 fn extract_number(json: &str, key: &str) -> Option<f64> {
@@ -158,6 +167,22 @@ fn regressed(current: f64, baseline: f64, tol: f64) -> bool {
     baseline > 0.0 && current < baseline * (1.0 - tol)
 }
 
+/// Print one metric's verdict line; returns whether it regressed.
+fn report(key: &str, cur: f64, base: f64, tol: f64) -> bool {
+    let ratio = if base > 0.0 { cur / base } else { f64::INFINITY };
+    let verdict = if regressed(cur, base, tol) {
+        "REGRESSED"
+    } else if ratio >= 1.0 + tol {
+        "improved (consider refreshing the baseline)"
+    } else {
+        "ok"
+    };
+    println!(
+        "bench_compare: {key}: current {cur:.3} vs baseline {base:.3} ({ratio:.2}x) — {verdict}"
+    );
+    regressed(cur, base, tol)
+}
+
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let (current_paths, baseline_path) = match args.as_slice() {
@@ -232,18 +257,26 @@ fn main() {
             skipped.push(key);
             continue;
         };
-        let ratio = if base > 0.0 { cur / base } else { f64::INFINITY };
-        let verdict = if regressed(cur, base, tol) {
+        if report(key, cur, base, tol) {
             regressions += 1;
-            "REGRESSED"
-        } else if ratio >= 1.0 + tol {
-            "improved (consider refreshing the baseline)"
-        } else {
-            "ok"
-        };
-        println!(
-            "bench_compare: {key}: current {cur:.3} vs baseline {base:.3} ({ratio:.2}x) — {verdict}"
-        );
+        }
+    }
+    for key in OPTIONAL_KEYS {
+        match (extract_number(&current, key), extract_number(&baseline, key)) {
+            (Some(cur), Some(base)) => {
+                if report(key, cur, base, tol) {
+                    regressions += 1;
+                }
+            }
+            (cur, base) => {
+                println!(
+                    "bench_compare: {key}: SKIPPED (optional; in current: {}, in baseline: {})",
+                    cur.is_some(),
+                    base.is_some()
+                );
+                skipped.push(key);
+            }
+        }
     }
 
     let skip_note = if skipped.is_empty() {
@@ -352,5 +385,22 @@ mod tests {
         assert!(regressed(0.79, 1.0, 0.20), "past tolerance");
         assert!(!regressed(2.0, 1.0, 0.20), "improvement is fine");
         assert!(!regressed(0.0, 0.0, 0.20), "degenerate baseline never fails");
+    }
+
+    #[test]
+    fn optional_keys_are_disjoint_from_required() {
+        // an optional key shadowing a required one would silently soften
+        // the hard gate for it
+        for k in OPTIONAL_KEYS {
+            assert!(!KEYS.contains(&k), "{k} is both required and optional");
+        }
+    }
+
+    #[test]
+    fn report_flags_only_regressions() {
+        assert!(report("k", 0.5, 1.0, 0.20));
+        assert!(!report("k", 0.9, 1.0, 0.20), "within tolerance");
+        assert!(!report("k", 5.0, 1.0, 0.20), "improvement never fails");
+        assert!(!report("k", 1.0, 0.0, 0.20), "degenerate baseline never fails");
     }
 }

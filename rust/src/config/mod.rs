@@ -185,7 +185,7 @@ pub struct ServeConfig {
     /// attention noise for cache bytes.
     pub kv_precision: crate::quant::Precision,
     /// Per-shard KV cache budget in MB; a generation that would exceed it
-    /// is failed cleanly with `INVALID_TOKEN` semantics.
+    /// is shed cleanly with a terminal `Status::KvExhausted` response.
     pub kv_budget_mb: f64,
     /// Upper bound on the per-shard continuous-batching decode batch: up to
     /// this many live generations advance per step through one fused
@@ -193,6 +193,25 @@ pub struct ServeConfig {
     /// per-sequence GEMV path (the batched path's equivalence oracle —
     /// response streams are bit-identical either way).
     pub max_decode_batch: usize,
+    /// Bounded admission (DESIGN.md §13): when every live shard's queue
+    /// depth (queued + in-flight windows) has reached this cap, new windows
+    /// are shed at enqueue with a terminal `Status::Busy` per request
+    /// instead of growing the queues without bound. 0 = unbounded.
+    pub max_queued_windows: usize,
+    /// Cap on concurrently decoding sequences per shard: admission past the
+    /// cap is shed with `Status::Busy` before any KV pages are reserved.
+    /// 0 = unbounded (the KV byte budget is then the only limit).
+    pub max_live_sequences: usize,
+    /// Deadline stamped on every submitted request, in milliseconds from
+    /// submission (`Coordinator::submit_with_deadline` overrides per
+    /// request). Expired windows are dropped at dequeue and expired decode
+    /// jobs retire at the next step boundary, each answered with one
+    /// terminal `Status::Expired`. 0 = no deadline.
+    pub default_deadline_ms: u64,
+    /// Deterministic fault-injection schedule for the chaos harness
+    /// (`serving::faultfx`); never read outside tests / `--features chaos`.
+    #[cfg(any(test, feature = "chaos"))]
+    pub chaos: Option<crate::serving::faultfx::ChaosSchedule>,
 }
 
 impl Default for ServeConfig {
@@ -211,6 +230,11 @@ impl Default for ServeConfig {
             kv_precision: crate::quant::Precision::Raw,
             kv_budget_mb: 64.0,
             max_decode_batch: 8,
+            max_queued_windows: 0,
+            max_live_sequences: 0,
+            default_deadline_ms: 0,
+            #[cfg(any(test, feature = "chaos"))]
+            chaos: None,
         }
     }
 }
@@ -232,6 +256,11 @@ impl ServeConfig {
             kv_precision: c.get_or("serve", "kv_precision", d.kv_precision)?,
             kv_budget_mb: c.get_or("serve", "kv_budget_mb", d.kv_budget_mb)?,
             max_decode_batch: c.get_or("serve", "max_decode_batch", d.max_decode_batch)?,
+            max_queued_windows: c.get_or("serve", "max_queued_windows", d.max_queued_windows)?,
+            max_live_sequences: c.get_or("serve", "max_live_sequences", d.max_live_sequences)?,
+            default_deadline_ms: c.get_or("serve", "default_deadline_ms", d.default_deadline_ms)?,
+            #[cfg(any(test, feature = "chaos"))]
+            chaos: None,
         })
     }
 }
@@ -315,6 +344,9 @@ mod tests {
         assert_eq!(s.max_batch, ServeConfig::default().max_batch);
         assert_eq!(s.dispatch, DispatchPolicy::WorkSteal, "default policy");
         assert_eq!(s.forward_workers, 1);
+        assert_eq!(s.max_queued_windows, 0, "unbounded admission by default");
+        assert_eq!(s.max_live_sequences, 0);
+        assert_eq!(s.default_deadline_ms, 0, "no deadline by default");
     }
 
     #[test]
@@ -343,7 +375,8 @@ mod tests {
         use crate::quant::Precision;
         let c = Config::parse(
             "[serve]\ndecode_tokens = 6\nkv_precision = 4bit\nkv_budget_mb = 8.5\n\
-             max_decode_batch = 16\n",
+             max_decode_batch = 16\nmax_queued_windows = 4\nmax_live_sequences = 2\n\
+             default_deadline_ms = 250\n",
         )
         .unwrap();
         let s = ServeConfig::from_config(&c).unwrap();
@@ -351,6 +384,9 @@ mod tests {
         assert_eq!(s.kv_precision, Precision::Q4);
         assert!((s.kv_budget_mb - 8.5).abs() < 1e-12);
         assert_eq!(s.max_decode_batch, 16);
+        assert_eq!(s.max_queued_windows, 4);
+        assert_eq!(s.max_live_sequences, 2);
+        assert_eq!(s.default_deadline_ms, 250);
         let d = ServeConfig::default();
         assert_eq!(d.decode_tokens, 0, "classic next-token serving by default");
         assert_eq!(d.kv_precision, Precision::Raw);

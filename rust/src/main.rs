@@ -9,8 +9,15 @@
 //! ewq serve --model <name> [--requests N --batch B --variant V --workers W
 //!                            --dispatch work_steal|shortest_queue|round_robin
 //!                            --decode-tokens N --kv-precision raw|8bit|4bit
-//!                            --max-decode-batch M]
+//!                            --max-decode-batch M --max-queued-windows Q
+//!                            --max-live-seqs L --deadline-ms D]
 //! ```
+//!
+//! Overload safety (DESIGN.md §13): `--max-queued-windows` bounds the
+//! per-shard queue (excess sheds with a terminal `busy` status),
+//! `--max-live-seqs` caps concurrent decode streams per shard, and
+//! `--deadline-ms` applies a default per-request deadline (`expired` past
+//! it). All three default to 0 = off.
 
 use anyhow::{bail, Context, Result};
 
@@ -192,6 +199,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         args.opt("kv-precision", ewq::quant::Precision::Raw)?;
     let max_decode_batch =
         args.opt("max-decode-batch", ewq::config::ServeConfig::default().max_decode_batch)?;
+    let max_queued_windows = args.opt("max-queued-windows", 0usize)?;
+    let max_live_sequences = args.opt("max-live-seqs", 0usize)?;
+    let default_deadline_ms = args.opt("deadline-ms", 0u64)?;
     let n = model.schema.n_blocks;
     let plan = match variant.as_str() {
         "raw" => ewq::ewq::QuantPlan::uniform(&model.schema.name, n, ewq::quant::Precision::Raw),
@@ -226,6 +236,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         decode_tokens,
         kv_precision,
         max_decode_batch,
+        max_queued_windows,
+        max_live_sequences,
+        default_deadline_ms,
         ..Default::default()
     };
     let coord = Coordinator::start_with_model(model, plan, cfg, 1, 200)?;

@@ -84,6 +84,29 @@ impl Precision {
             Precision::Q3 => 8,
         }
     }
+
+    /// Stable wire tag — decoupled from the enum's declaration order so the
+    /// frame format survives refactors of the precision ladder.
+    pub fn tag(self) -> u8 {
+        match self {
+            Precision::Raw => 0,
+            Precision::Q8 => 1,
+            Precision::Q4 => 2,
+            Precision::Q3 => 3,
+            Precision::T2 => 4,
+        }
+    }
+
+    pub fn from_tag(t: u8) -> Option<Precision> {
+        match t {
+            0 => Some(Precision::Raw),
+            1 => Some(Precision::Q8),
+            2 => Some(Precision::Q4),
+            3 => Some(Precision::Q3),
+            4 => Some(Precision::T2),
+            _ => None,
+        }
+    }
 }
 
 /// Parse a precision from its `label()` (plus short aliases) — CLI/config
@@ -455,7 +478,156 @@ impl QMat {
             Payload::Q4 { p, .. } | Payload::Q3 { p, .. } | Payload::T2 { p, .. } => p.clone(),
         }
     }
+
+    /// Serialize to the self-describing wire frame `from_packed_bytes`
+    /// parses: header (magic, version, precision tag, shape, scale count),
+    /// then the f32-LE scales, then the `packed_bytes` payload.
+    pub fn wire_bytes(&self) -> Vec<u8> {
+        let scales = self.scales().unwrap_or(&[]);
+        let payload = self.packed_bytes();
+        let mut out = Vec::with_capacity(WIRE_HEADER + 4 * scales.len() + payload.len());
+        out.extend_from_slice(&WIRE_MAGIC);
+        out.push(WIRE_VERSION);
+        out.push(self.prec.tag());
+        out.extend_from_slice(&(self.rows as u32).to_le_bytes());
+        out.extend_from_slice(&(self.cols as u32).to_le_bytes());
+        out.extend_from_slice(&(scales.len() as u32).to_le_bytes());
+        for v in scales {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out.extend_from_slice(&payload);
+        out
+    }
+
+    /// Validate an UNTRUSTED wire frame (a shard handoff, a cached plan
+    /// artifact, a network peer) into a `QMat`. Every malformation —
+    /// truncation, bad magic/version/tag, shape overflow, group-contract
+    /// violation, scale-count lies, non-finite scales, trailing bytes —
+    /// comes back as a typed `QuantError`; this function never panics on
+    /// any input. Accepted frames re-encode byte-identically via
+    /// `wire_bytes` (codes outside the quantizer's clamp range, e.g. a
+    /// `-8` Q4 nibble, are representable and kept as-is).
+    pub fn from_packed_bytes(data: &[u8]) -> std::result::Result<QMat, QuantError> {
+        if data.len() < WIRE_HEADER {
+            return Err(QuantError::Truncated { needed: WIRE_HEADER, got: data.len() });
+        }
+        let magic: [u8; 4] = data[0..4].try_into().unwrap();
+        if magic != WIRE_MAGIC {
+            return Err(QuantError::BadMagic(magic));
+        }
+        if data[4] != WIRE_VERSION {
+            return Err(QuantError::BadVersion(data[4]));
+        }
+        let prec = Precision::from_tag(data[5]).ok_or(QuantError::BadPrecision(data[5]))?;
+        let le32 = |o: usize| u32::from_le_bytes(data[o..o + 4].try_into().unwrap()) as usize;
+        let (rows, cols, nscales) = (le32(6), le32(10), le32(14));
+        let want_scales = if prec == Precision::Raw { 0 } else { cols };
+        if nscales != want_scales {
+            return Err(QuantError::ScaleCountMismatch { want: want_scales, got: nscales });
+        }
+        let bad_shape = QuantError::BadShape { rows, cols };
+        let gr = prec.group_rows();
+        if rows % gr != 0 {
+            return Err(bad_shape);
+        }
+        // bytes per packing group of `gr` rows (see the module's layout table)
+        let per_group = match prec {
+            Precision::Raw => 4,
+            Precision::Q3 => 3,
+            Precision::Q8 | Precision::Q4 | Precision::T2 => 1,
+        };
+        let payload_len = cols
+            .checked_mul(per_group)
+            .and_then(|g| g.checked_mul(rows / gr))
+            .ok_or(bad_shape.clone())?;
+        let total = WIRE_HEADER
+            .checked_add(4 * nscales)
+            .and_then(|t| t.checked_add(payload_len))
+            .ok_or(bad_shape)?;
+        if data.len() < total {
+            return Err(QuantError::Truncated { needed: total, got: data.len() });
+        }
+        if data.len() > total {
+            return Err(QuantError::TrailingBytes { extra: data.len() - total });
+        }
+        let mut s = Vec::with_capacity(nscales);
+        for i in 0..nscales {
+            let v = f32::from_le_bytes(
+                data[WIRE_HEADER + 4 * i..WIRE_HEADER + 4 * (i + 1)].try_into().unwrap(),
+            );
+            if !v.is_finite() {
+                return Err(QuantError::BadScale { index: i });
+            }
+            s.push(v);
+        }
+        let pb = &data[WIRE_HEADER + 4 * nscales..];
+        let payload = match prec {
+            Precision::Raw => Payload::Raw(
+                pb.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect(),
+            ),
+            Precision::Q8 => Payload::Q8 { q: pb.iter().map(|&b| b as i8).collect(), s },
+            Precision::Q4 => Payload::Q4 { p: pb.to_vec(), s },
+            Precision::Q3 => Payload::Q3 { p: pb.to_vec(), s },
+            Precision::T2 => Payload::T2 { p: pb.to_vec(), s },
+        };
+        Ok(QMat { prec, rows, cols, payload })
+    }
 }
+
+// ---- self-describing wire frame -------------------------------------------------
+
+/// Wire-frame magic (`b"EWQM"`).
+pub const WIRE_MAGIC: [u8; 4] = *b"EWQM";
+/// Wire-format version `from_packed_bytes` accepts.
+pub const WIRE_VERSION: u8 = 1;
+/// Header: magic 4 + version 1 + tag 1 + rows 4 + cols 4 + nscales 4.
+const WIRE_HEADER: usize = 18;
+
+/// Typed validation failures from `QMat::from_packed_bytes` — untrusted
+/// bytes fail as data, never as a panic.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum QuantError {
+    /// Fewer bytes than the header (or its declared frame length) needs.
+    Truncated { needed: usize, got: usize },
+    BadMagic([u8; 4]),
+    BadVersion(u8),
+    BadPrecision(u8),
+    /// Shape that overflows addressing or breaks the packing-group contract.
+    BadShape { rows: usize, cols: usize },
+    /// Scale count inconsistent with the declared precision and shape.
+    ScaleCountMismatch { want: usize, got: usize },
+    /// Non-finite scale — would silently poison every dequantized value.
+    BadScale { index: usize },
+    /// Bytes left over past the declared payload.
+    TrailingBytes { extra: usize },
+}
+
+impl std::fmt::Display for QuantError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            QuantError::Truncated { needed, got } => {
+                write!(f, "truncated frame: need {needed} bytes, got {got}")
+            }
+            QuantError::BadMagic(m) => write!(f, "bad magic {m:?} (want {WIRE_MAGIC:?})"),
+            QuantError::BadVersion(v) => {
+                write!(f, "unsupported wire version {v} (want {WIRE_VERSION})")
+            }
+            QuantError::BadPrecision(t) => write!(f, "unknown precision tag {t}"),
+            QuantError::BadShape { rows, cols } => {
+                write!(f, "invalid shape {rows}x{cols} for the declared precision")
+            }
+            QuantError::ScaleCountMismatch { want, got } => {
+                write!(f, "scale count {got} != expected {want}")
+            }
+            QuantError::BadScale { index } => write!(f, "non-finite scale at column {index}"),
+            QuantError::TrailingBytes { extra } => {
+                write!(f, "{extra} trailing bytes after the payload")
+            }
+        }
+    }
+}
+
+impl std::error::Error for QuantError {}
 
 #[cfg(test)]
 mod tests {
@@ -655,6 +827,128 @@ mod tests {
         assert_eq!(quantize(&w, Precision::Q4).packed_bytes().len(), 16 * 16);
         assert_eq!(quantize(&w, Precision::Q3).packed_bytes().len(), 12 * 16);
         assert_eq!(quantize(&w, Precision::T2).packed_bytes().len(), 8 * 16);
+    }
+
+    #[test]
+    fn wire_roundtrip_every_precision() {
+        let w = rand_tensor(32, 24, 21, 0.6);
+        for prec in [Precision::Raw, Precision::Q8, Precision::Q4, Precision::Q3, Precision::T2]
+        {
+            let q = quantize(&w, prec);
+            let frame = q.wire_bytes();
+            let parsed = QMat::from_packed_bytes(&frame).unwrap();
+            assert_eq!(parsed, q, "{}", prec.label());
+            assert_eq!(parsed.wire_bytes(), frame, "{}: re-encode byte-identical", prec.label());
+            assert_eq!(Precision::from_tag(prec.tag()), Some(prec));
+        }
+    }
+
+    #[test]
+    fn wire_rejects_malformed_frames_with_typed_errors() {
+        let q = quantize(&rand_tensor(16, 8, 22, 0.5), Precision::Q8);
+        let frame = q.wire_bytes();
+        assert_eq!(
+            QMat::from_packed_bytes(&[]),
+            Err(QuantError::Truncated { needed: 18, got: 0 })
+        );
+        let mut f = frame.clone();
+        f[0] = b'X';
+        assert_eq!(QMat::from_packed_bytes(&f), Err(QuantError::BadMagic(*b"XWQM")));
+        let mut f = frame.clone();
+        f[4] = 9;
+        assert_eq!(QMat::from_packed_bytes(&f), Err(QuantError::BadVersion(9)));
+        let mut f = frame.clone();
+        f[5] = 250;
+        assert_eq!(QMat::from_packed_bytes(&f), Err(QuantError::BadPrecision(250)));
+        // scale count inconsistent with the declared shape
+        let mut f = frame.clone();
+        f[14..18].copy_from_slice(&7u32.to_le_bytes());
+        assert_eq!(
+            QMat::from_packed_bytes(&f),
+            Err(QuantError::ScaleCountMismatch { want: 8, got: 7 })
+        );
+        // payload shortfall and trailing junk
+        let mut f = frame.clone();
+        f.truncate(frame.len() - 1);
+        assert_eq!(
+            QMat::from_packed_bytes(&f),
+            Err(QuantError::Truncated { needed: frame.len(), got: frame.len() - 1 })
+        );
+        let mut f = frame.clone();
+        f.extend_from_slice(&[0, 0, 0]);
+        assert_eq!(QMat::from_packed_bytes(&f), Err(QuantError::TrailingBytes { extra: 3 }));
+        // non-finite scale (column 2 starts at header + 2*4)
+        let mut f = frame.clone();
+        f[18 + 8..18 + 12].copy_from_slice(&f32::NAN.to_le_bytes());
+        assert_eq!(QMat::from_packed_bytes(&f), Err(QuantError::BadScale { index: 2 }));
+        // odd row count under Q4's 2-row packing group
+        let mut f = frame.clone();
+        f[5] = Precision::Q4.tag();
+        f[6..10].copy_from_slice(&15u32.to_le_bytes());
+        assert_eq!(
+            QMat::from_packed_bytes(&f),
+            Err(QuantError::BadShape { rows: 15, cols: 8 })
+        );
+        // shape whose Raw payload size overflows usize
+        let mut f = frame.clone();
+        f[5] = Precision::Raw.tag();
+        f[6..10].copy_from_slice(&u32::MAX.to_le_bytes());
+        f[10..14].copy_from_slice(&u32::MAX.to_le_bytes());
+        f[14..18].copy_from_slice(&0u32.to_le_bytes());
+        assert_eq!(
+            QMat::from_packed_bytes(&f),
+            Err(QuantError::BadShape { rows: u32::MAX as usize, cols: u32::MAX as usize })
+        );
+    }
+
+    #[test]
+    fn adversarial_wire_bytes_never_panic_and_only_exact_frames_parse() {
+        // property: any truncation / extension / bit-flip of a valid frame
+        // either fails with a typed error or parses into a QMat that
+        // re-encodes to the EXACT mutated bytes — never a panic, never a
+        // lossy accept
+        let w = rand_tensor(16, 12, 23, 0.5);
+        let frames: Vec<Vec<u8>> =
+            [Precision::Raw, Precision::Q8, Precision::Q4, Precision::Q3, Precision::T2]
+                .iter()
+                .map(|&p| quantize(&w, p).wire_bytes())
+                .collect();
+        crate::proptest_lite::check(
+            0xEB17,
+            400,
+            64,
+            |g| {
+                let mut f = frames[g.usize_in(0, frames.len())].clone();
+                match g.usize_in(0, 3) {
+                    0 => {
+                        let keep = g.usize_in(0, f.len() + 1);
+                        f.truncate(keep);
+                    }
+                    1 => {
+                        for _ in 0..g.usize_in(1, 16) {
+                            f.push(g.usize_in(0, 256) as u8);
+                        }
+                    }
+                    _ => {
+                        for _ in 0..g.usize_in(1, 6) {
+                            let i = g.usize_in(0, f.len());
+                            f[i] ^= 1 << g.usize_in(0, 8);
+                        }
+                    }
+                }
+                f
+            },
+            |bytes| match QMat::from_packed_bytes(bytes) {
+                Err(_) => Ok(()), // typed rejection; the property is no-panic
+                Ok(m) if m.wire_bytes() == *bytes => Ok(()),
+                Ok(m) => Err(format!(
+                    "accepted a {}x{} {} frame it cannot re-encode byte-identically",
+                    m.rows,
+                    m.cols,
+                    m.prec.label()
+                )),
+            },
+        );
     }
 
     #[test]

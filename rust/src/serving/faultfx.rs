@@ -1,0 +1,170 @@
+//! Deterministic fault injection for the serving fleet (DESIGN.md §13).
+//!
+//! Generalizes the old cfg(test) poison pill into a first-class chaos
+//! harness: a `ChaosSchedule` describes, per shard, *when* that shard
+//! crashes (panic before popping its Nth work item — the shard completed
+//! its previous item fully, so queued work is rescued and every request
+//! still resolves to exactly one terminal `Status`), *how slow* it runs
+//! (a fixed stall before each work item), and *when* its KV-cache
+//! admission is forced to fail (typed `KvExhausted`, never a mid-stream
+//! corruption). Schedules are plain data derived from a seed, so a chaos
+//! run is reproducible bit-for-bit: the injection points are logical work
+//! -item ordinals, not wall-clock timers.
+//!
+//! Compiled under `cfg(test)` for the in-crate suites and under the
+//! `chaos` cargo feature for the integration harness
+//! (`rust/tests/chaos.rs`, `make test-chaos`). Production builds carry
+//! none of this code.
+
+use crate::rng::Xoshiro256pp;
+
+/// Fault plan for one shard worker.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ShardFaults {
+    /// Panic (simulated crash) immediately before taking the Nth work item
+    /// (0-based): the previous item was fully answered, nothing is in
+    /// flight, and the shard's queued windows are rescued by live peers.
+    pub die_before_item: Option<usize>,
+    /// Stall this long before handling every work item — the slow-shard /
+    /// overload injection (drives load shedding and deadline expiry).
+    pub stall_us: u64,
+    /// Force every KV-cache admission from this ordinal on (0-based count
+    /// of decode admissions on this shard) to fail as budget-exhausted.
+    pub deny_kv_from: Option<usize>,
+}
+
+impl ShardFaults {
+    pub fn is_noop(&self) -> bool {
+        *self == ShardFaults::default()
+    }
+}
+
+/// A whole fleet's injection schedule: one `ShardFaults` per shard.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ChaosSchedule {
+    pub shards: Vec<ShardFaults>,
+}
+
+impl ChaosSchedule {
+    /// Deterministic schedule for `n_shards` shards from one seed. One
+    /// shard is always kept crash-free: an all-dead fleet cannot answer
+    /// anything, and the harness property under test is that every
+    /// submitted request still gets exactly one terminal response.
+    pub fn seeded(seed: u64, n_shards: usize) -> Self {
+        let mut rng = Xoshiro256pp::new(seed ^ 0x4348414f53); // "CHAOS"
+        let survivor = rng.below(n_shards.max(1));
+        let shards = (0..n_shards)
+            .map(|i| {
+                let mut f = ShardFaults::default();
+                if i != survivor && rng.below(2) == 0 {
+                    f.die_before_item = Some(rng.below(6));
+                }
+                if rng.below(3) == 0 {
+                    f.stall_us = 200 + rng.below(2_000) as u64;
+                }
+                if rng.below(4) == 0 {
+                    f.deny_kv_from = Some(rng.below(4));
+                }
+                f
+            })
+            .collect();
+        Self { shards }
+    }
+
+    /// The fault plan for `shard` (no-fault default past the vector's end,
+    /// so a schedule built for fewer shards degrades gracefully).
+    pub fn for_shard(&self, shard: usize) -> ShardFaults {
+        self.shards.get(shard).cloned().unwrap_or_default()
+    }
+
+    /// Does any shard carry any fault at all?
+    pub fn is_noop(&self) -> bool {
+        self.shards.iter().all(|f| f.is_noop())
+    }
+}
+
+/// Per-worker runtime state driving a `ShardFaults` plan: counts work
+/// items and KV admissions, firing each injection at its scheduled
+/// ordinal.
+pub(crate) struct FaultState {
+    faults: ShardFaults,
+    item: usize,
+    kv_admissions: usize,
+}
+
+impl FaultState {
+    pub(crate) fn new(faults: ShardFaults) -> Self {
+        Self { faults, item: 0, kv_admissions: 0 }
+    }
+
+    /// Called at the top of every worker loop iteration, BEFORE popping:
+    /// fires the scheduled crash (nothing is in flight, so rescue
+    /// semantics answer everything exactly once) and the slow-shard stall.
+    pub(crate) fn before_item(&mut self, shard: usize) {
+        if self.faults.die_before_item == Some(self.item) {
+            panic!("shard {shard}: chaos — scheduled crash before work item {}", self.item);
+        }
+        if self.faults.stall_us > 0 {
+            std::thread::sleep(std::time::Duration::from_micros(self.faults.stall_us));
+        }
+        self.item += 1;
+    }
+
+    /// One KV admission decision: `true` forces this reservation to fail
+    /// (the serving layer answers the request with `Status::KvExhausted`).
+    pub(crate) fn deny_kv(&mut self) -> bool {
+        let ordinal = self.kv_admissions;
+        self.kv_admissions += 1;
+        self.faults.deny_kv_from.is_some_and(|n| ordinal >= n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seeded_schedules_are_deterministic_and_keep_a_survivor() {
+        for seed in 0..64u64 {
+            let a = ChaosSchedule::seeded(seed, 3);
+            let b = ChaosSchedule::seeded(seed, 3);
+            assert_eq!(a, b, "seed {seed}: schedule must be a pure function of the seed");
+            assert_eq!(a.shards.len(), 3);
+            let deaths = a.shards.iter().filter(|f| f.die_before_item.is_some()).count();
+            assert!(deaths < 3, "seed {seed}: at least one shard must survive");
+        }
+        assert_ne!(
+            ChaosSchedule::seeded(1, 3),
+            ChaosSchedule::seeded(2, 3),
+            "different seeds should explore different schedules"
+        );
+    }
+
+    #[test]
+    fn fault_state_fires_at_the_scheduled_ordinals() {
+        let mut fs = FaultState::new(ShardFaults {
+            die_before_item: None,
+            stall_us: 0,
+            deny_kv_from: Some(2),
+        });
+        assert!(!fs.deny_kv(), "admission 0 allowed");
+        assert!(!fs.deny_kv(), "admission 1 allowed");
+        assert!(fs.deny_kv(), "admission 2 denied");
+        assert!(fs.deny_kv(), "everything after the threshold is denied");
+        // item counting advances without firing when no death is scheduled
+        fs.before_item(0);
+        fs.before_item(0);
+    }
+
+    #[test]
+    #[should_panic(expected = "chaos — scheduled crash")]
+    fn scheduled_death_panics_at_its_item() {
+        let mut fs = FaultState::new(ShardFaults {
+            die_before_item: Some(1),
+            stall_us: 0,
+            deny_kv_from: None,
+        });
+        fs.before_item(7); // item 0: survives
+        fs.before_item(7); // item 1: dies
+    }
+}

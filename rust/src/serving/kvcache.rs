@@ -12,9 +12,43 @@
 //! buffer, and a sequence whose pages were `reserve`d up front never
 //! allocates inside `append`.
 
-use anyhow::{bail, Result};
-
 use crate::quant::Precision;
+
+/// Typed KV-cache failures. Budget exhaustion is an *admission* signal the
+/// serving layer turns into a terminal `Status::KvExhausted` — never a
+/// stringly-typed surprise mid-stream. Implements `std::error::Error`, so
+/// `?` still lifts it into the executor's `anyhow::Result` plumbing.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum KvError {
+    /// The allocation/reservation would exceed the configured byte budget.
+    BudgetExhausted { needed: usize, allocated: usize, budget: usize },
+    /// A KV slice had the wrong number of floats for the cache geometry.
+    BadKvLength { got: usize, want: usize },
+    /// No page table exists for this sequence id.
+    UnknownSequence(u64),
+    /// The requested token index has not been appended yet.
+    TokenNotWritten { token: usize, have: usize },
+}
+
+impl std::fmt::Display for KvError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            KvError::BudgetExhausted { needed, allocated, budget } => write!(
+                f,
+                "kv-cache budget exhausted ({allocated} + {needed} > {budget})"
+            ),
+            KvError::BadKvLength { got, want } => {
+                write!(f, "kv length {got} != geometry {want}")
+            }
+            KvError::UnknownSequence(seq) => write!(f, "unknown seq {seq}"),
+            KvError::TokenNotWritten { token, have } => {
+                write!(f, "token {token} not written yet ({have} in sequence)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for KvError {}
 
 /// Fixed page geometry: `page_tokens` KV slots of `head_dim * n_heads * 2`
 /// (K and V) floats each.
@@ -119,10 +153,14 @@ impl KvCache {
         self.tables.get(&seq).map(|t| t.tokens).unwrap_or(0)
     }
 
-    fn alloc_page(&mut self) -> Result<usize> {
+    fn alloc_page(&mut self) -> Result<usize, KvError> {
         let bytes = self.geom.page_bytes(self.prec);
         if self.allocated_bytes + bytes > self.budget_bytes {
-            bail!("kv-cache budget exhausted ({} + {bytes} > {})", self.allocated_bytes, self.budget_bytes);
+            return Err(KvError::BudgetExhausted {
+                needed: bytes,
+                allocated: self.allocated_bytes,
+                budget: self.budget_bytes,
+            });
         }
         if let Some(id) = self.free_list.pop() {
             self.pages[id] =
@@ -142,19 +180,18 @@ impl KvCache {
     /// reserves a sequence's window up front and then never touches the
     /// allocator mid-generation). Fails — without allocating anything —
     /// when the reservation would exceed the budget.
-    pub fn reserve(&mut self, seq: u64, tokens: usize) -> Result<()> {
+    pub fn reserve(&mut self, seq: u64, tokens: usize) -> Result<(), KvError> {
         let have = self.tables.get(&seq).map(|t| t.pages.len()).unwrap_or(0);
         let need = tokens.div_ceil(self.geom.page_tokens);
         if need > have {
             let extra = need - have;
             let bytes = self.geom.page_bytes(self.prec);
             if self.allocated_bytes + extra * bytes > self.budget_bytes {
-                bail!(
-                    "kv-cache budget exhausted reserving {tokens} tokens ({} + {} > {})",
-                    self.allocated_bytes,
-                    extra * bytes,
-                    self.budget_bytes
-                );
+                return Err(KvError::BudgetExhausted {
+                    needed: extra * bytes,
+                    allocated: self.allocated_bytes,
+                    budget: self.budget_bytes,
+                });
             }
             for _ in 0..extra {
                 let pid = self.alloc_page()?;
@@ -167,9 +204,12 @@ impl KvCache {
     /// Append `kv` (one token's K+V floats) to a sequence, allocating pages
     /// on demand (or filling `reserve`d ones). Quantizes into the page
     /// store per the cache precision.
-    pub fn append(&mut self, seq: u64, kv: &[f32]) -> Result<()> {
+    pub fn append(&mut self, seq: u64, kv: &[f32]) -> Result<(), KvError> {
         if kv.len() != self.geom.floats_per_token() {
-            bail!("kv length {} != geometry {}", kv.len(), self.geom.floats_per_token());
+            return Err(KvError::BadKvLength {
+                got: kv.len(),
+                want: self.geom.floats_per_token(),
+            });
         }
         let tokens = self.sequence_tokens(seq);
         let page_no = tokens / self.geom.page_tokens;
@@ -191,13 +231,16 @@ impl KvCache {
     /// Read a token's KV back (dequantized) into `out`
     /// (`geometry().floats_per_token()` floats) without allocating — the
     /// decode hot path's history read.
-    pub fn read_into(&self, seq: u64, token_idx: usize, out: &mut [f32]) -> Result<()> {
+    pub fn read_into(&self, seq: u64, token_idx: usize, out: &mut [f32]) -> Result<(), KvError> {
         if out.len() != self.geom.floats_per_token() {
-            bail!("kv out length {} != geometry {}", out.len(), self.geom.floats_per_token());
+            return Err(KvError::BadKvLength {
+                got: out.len(),
+                want: self.geom.floats_per_token(),
+            });
         }
-        let table = self.tables.get(&seq).ok_or_else(|| anyhow::anyhow!("unknown seq {seq}"))?;
+        let table = self.tables.get(&seq).ok_or(KvError::UnknownSequence(seq))?;
         if token_idx >= table.tokens {
-            bail!("token {token_idx} not written yet ({} in sequence)", table.tokens);
+            return Err(KvError::TokenNotWritten { token: token_idx, have: table.tokens });
         }
         let page_no = token_idx / self.geom.page_tokens;
         let slot = token_idx % self.geom.page_tokens;
@@ -209,7 +252,7 @@ impl KvCache {
 
     /// Read a token's KV back (dequantized). Allocating convenience wrapper
     /// over `read_into` (tests/inspection; the hot path uses `read_into`).
-    pub fn read(&self, seq: u64, token_idx: usize) -> Result<Vec<f32>> {
+    pub fn read(&self, seq: u64, token_idx: usize) -> Result<Vec<f32>, KvError> {
         let mut out = vec![0.0f32; self.geom.floats_per_token()];
         self.read_into(seq, token_idx, &mut out)?;
         Ok(out)
@@ -576,6 +619,58 @@ mod tests {
         }
         assert_eq!(c.allocated_bytes(), 0, "full retirement returns every byte");
         assert_eq!(c.pages.len(), c.free_list.len(), "and parks every page on the free list");
+    }
+
+    #[test]
+    fn failed_mid_cohort_reserve_leaks_no_pages_and_is_typed() {
+        // batched admission: a cohort of sequences reserves one after
+        // another until the budget runs out mid-cohort. The failing reserve
+        // must (a) surface a typed BudgetExhausted — the signal the serving
+        // layer maps to Status::KvExhausted — and (b) leak nothing: the
+        // already-admitted members keep their exact reservations, the page
+        // books stay balanced, and releasing the cohort returns every byte.
+        let g = geom();
+        let one_page = g.page_bytes(Precision::Q8);
+        let window = 8usize; // 2 pages of 4 tokens per sequence
+        let pages_per_seq = window.div_ceil(g.page_tokens);
+        // room for exactly 2 full windows plus one stray page: the 3rd
+        // cohort member fails part-way through the budget, not at zero
+        let mut c = KvCache::new(g, (2 * pages_per_seq + 1) * one_page, Precision::Q8);
+        let check_books = |c: &KvCache| {
+            let live_pages = c.pages.iter().filter(|p| p.is_some()).count();
+            assert_eq!(c.allocated_bytes(), live_pages * one_page);
+            assert_eq!(c.pages.len(), live_pages + c.free_list.len(), "page is live xor free");
+        };
+        c.reserve(0, window).unwrap();
+        c.reserve(1, window).unwrap();
+        let before = c.allocated_bytes();
+        check_books(&c);
+        let err = c.reserve(2, window).unwrap_err();
+        assert_eq!(
+            err,
+            KvError::BudgetExhausted {
+                needed: pages_per_seq * one_page,
+                allocated: before,
+                budget: (2 * pages_per_seq + 1) * one_page,
+            },
+            "mid-cohort exhaustion is a typed admission error"
+        );
+        assert_eq!(c.allocated_bytes(), before, "failed reserve must not allocate");
+        assert_eq!(c.live_sequences(), 2, "the failed sequence seats no page table");
+        check_books(&c);
+        // the admitted members still own their full allocation-free windows
+        let kv = vec![0.5f32; g.floats_per_token()];
+        for s in [0u64, 1] {
+            for _ in 0..window {
+                c.append(s, &kv).unwrap();
+            }
+        }
+        assert_eq!(c.allocated_bytes(), before, "appends fill the reserved pages");
+        check_books(&c);
+        c.release(0);
+        c.release(1);
+        check_books(&c);
+        assert_eq!(c.allocated_bytes(), 0, "full retirement returns every byte");
     }
 
     #[test]

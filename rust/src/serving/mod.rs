@@ -33,8 +33,8 @@
 //! behind whatever prefill windows arrived in between, streaming one
 //! `Response` per token. Sequences are **pinned** to their shard's cache:
 //! live peers never steal decode jobs (`queues::Pinnable`), while
-//! dead-shard rescue fails them with a single terminal `INVALID_TOKEN`
-//! response instead of leaving callers hanging.
+//! dead-shard rescue fails them with a single terminal
+//! `Status::ShardLost` response instead of leaving callers hanging.
 //!
 //! **Continuous batching** (DESIGN.md §12): with `max_decode_batch > 1`
 //! (the default), a shard that pops one decode turn *gathers* the rest of
@@ -54,10 +54,28 @@
 //! queues and its stranded windows are **rescued** — popped exactly once —
 //! by live peers under every policy (see `queues::ShardQueues::pop`).
 //!
+//! **Overload safety** (DESIGN.md §13): every submitted request resolves to
+//! exactly one terminal `Status` — `Ok` for a served request (or fully
+//! streamed generation), else one typed failure (`Busy`, `InvalidContext`,
+//! `Expired`, `ShardLost`, `KvExhausted`); `INVALID_TOKEN` survives only as
+//! the placeholder `next_token` on failure responses, never as the carrier
+//! of meaning. Admission is bounded: `ServeConfig::max_queued_windows` caps
+//! every shard queue and the batcher **sheds** whole windows with `Busy`
+//! when all live shards are at the cap; `max_live_sequences` bounds decode
+//! admission per shard; and per-request deadlines
+//! (`Coordinator::submit_with_deadline`, `ServeConfig::default_deadline_ms`)
+//! expire waiting work at dequeue and in-flight generations at the next
+//! step boundary, each with one terminal `Expired`. The `chaos` feature
+//! (`serving::faultfx`) injects shard death, stalls, and KV exhaustion from
+//! seeded schedules to prove the exactly-one-terminal-status property under
+//! fire (`tests/chaos.rs`, `make test-chaos`).
+//!
 //! Cross-machine block placement (from `cluster::Distribution`) is simulated:
 //! each batch is charged `hops × link_latency` of virtual network time,
 //! reported separately from wall-clock latency.
 
+#[cfg(any(test, feature = "chaos"))]
+pub mod faultfx;
 pub mod kvcache;
 mod queues;
 pub mod trace;
@@ -91,29 +109,106 @@ pub struct Request {
     /// prefill path. `N > 1`: streaming generation — the caller receives up
     /// to `N` `Response`s on the same channel (fewer when the context
     /// window fills first; a failed/rescued sequence ends with a single
-    /// terminal `INVALID_TOKEN` response). The channel closes after the
-    /// last token.
+    /// terminal non-`Ok` `Status`). The channel closes after the last
+    /// token.
     pub max_new_tokens: usize,
     submitted: Instant,
+    /// Absolute deadline; a request past it is answered `Status::Expired`
+    /// at the next dequeue or decode-step boundary instead of executing.
+    deadline: Option<Instant>,
     resp: Sender<Response>,
+}
+
+/// Has this request's deadline passed? Checked at the scheduling
+/// boundaries (window dequeue, decode-step gather) — never mid-forward.
+fn expired(req: &Request) -> bool {
+    req.deadline.is_some_and(|d| Instant::now() >= d)
 }
 
 #[derive(Clone, Debug)]
 pub struct Response {
     pub id: u64,
     pub next_token: i32,
+    /// Why (or that) this response exists: `Ok` for a served token, a typed
+    /// failure otherwise. A request receives exactly one terminal status —
+    /// its last response (streamed generations emit `Ok` per token and end
+    /// with either the final `Ok` token or one failure marker).
+    pub status: Status,
     /// wall-clock queue+compute latency
     pub latency: Duration,
     /// simulated cross-machine network time for the batch
     pub network_latency_us: u64,
     pub batch_size: usize,
-    /// which shard worker executed the batch
+    /// which shard worker executed the batch (`NO_SHARD` for responses the
+    /// coordinator answered itself: shed or pre-dispatch expiry)
     pub shard: usize,
 }
 
-/// Sentinel `next_token` for requests whose context contains tokens outside
-/// the model vocabulary — answered immediately, never executed.
+/// Terminal disposition of a request — the typed failure taxonomy
+/// (DESIGN.md §13). Every submitted request resolves to exactly one of
+/// these; `INVALID_TOKEN` is only the placeholder `next_token` on non-`Ok`
+/// responses, not a status in itself.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Status {
+    /// Served: a real token (or, for generations, the whole stream).
+    Ok = 0,
+    /// Shed under overload: every live shard queue was at
+    /// `max_queued_windows`, or the shard's decode admission was at
+    /// `max_live_sequences`. Back off and retry.
+    Busy = 1,
+    /// The context failed validation (empty for generation, or tokens
+    /// outside the model vocabulary). Retrying is pointless.
+    InvalidContext = 2,
+    /// The request's deadline passed before it finished; dropped at a
+    /// dequeue or step boundary.
+    Expired = 3,
+    /// The executing shard died (or its replica failed mid-batch); the
+    /// request was rescued and failed cleanly. Safe to retry.
+    ShardLost = 4,
+    /// KV-cache admission failed: the sequence's reserved window would
+    /// exceed the shard's `kv_budget_mb`. Retry later or elsewhere.
+    KvExhausted = 5,
+}
+
+impl Status {
+    /// Number of variants (the per-status counter array width).
+    pub const COUNT: usize = 6;
+
+    /// Every variant, in counter-index order.
+    pub const ALL: [Status; Status::COUNT] = [
+        Status::Ok,
+        Status::Busy,
+        Status::InvalidContext,
+        Status::Expired,
+        Status::ShardLost,
+        Status::KvExhausted,
+    ];
+
+    /// Index into per-status counter arrays (`ServingMetrics::statuses`).
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Status::Ok => "ok",
+            Status::Busy => "busy",
+            Status::InvalidContext => "invalid_context",
+            Status::Expired => "expired",
+            Status::ShardLost => "shard_lost",
+            Status::KvExhausted => "kv_exhausted",
+        }
+    }
+}
+
+/// Placeholder `next_token` on non-`Ok` responses (kept so callers indexing
+/// logits by token can never mistake a failure for a vocabulary entry; the
+/// *meaning* of a failure lives in `Response::status`).
 pub const INVALID_TOKEN: i32 = -1;
+
+/// `Response::shard` for responses answered by the coordinator itself
+/// (load shedding, pre-dispatch expiry) — no shard ever saw the request.
+pub const NO_SHARD: usize = usize::MAX;
 
 /// Test-only: a context whose first token is this sentinel panics the shard
 /// that picks its window up — the deterministic "shard dies mid-flight"
@@ -218,6 +313,14 @@ pub struct ServingMetrics {
     pub decode_batch_rows: usize,
     /// Peak KV-cache residency per shard, summed across shards.
     pub kv_bytes: usize,
+    /// Terminal statuses per request, indexed by `Status::index()` (sums to
+    /// `completed`; `merge` adds element-wise). `rejected` stays the total
+    /// of the non-`Ok` entries.
+    pub statuses: [usize; Status::COUNT],
+    /// High-water mark of queued + in-flight windows on any single shard
+    /// queue (`merge` takes the max) — with `max_queued_windows` set, this
+    /// stays bounded by the cap no matter the offered load.
+    pub queue_depth_hwm: usize,
     /// One entry per shard worker (sorted by shard id after `merge`).
     pub shards: Vec<ShardOccupancy>,
 }
@@ -250,6 +353,16 @@ impl ServingMetrics {
         self.decode_batch_rows as f64 / self.batched_steps.max(1) as f64
     }
 
+    /// Requests shed with `Status::Busy` (queue cap or live-sequence cap).
+    pub fn shed(&self) -> usize {
+        self.statuses[Status::Busy.index()]
+    }
+
+    /// Requests that ran out their deadline (`Status::Expired`).
+    pub fn expired(&self) -> usize {
+        self.statuses[Status::Expired.index()]
+    }
+
     /// Fold another shard's (or coordinator's) metrics into this aggregate:
     /// counters add, latencies concatenate, wall-clock takes the max, shard
     /// occupancy records append.
@@ -268,6 +381,10 @@ impl ServingMetrics {
         self.batched_steps += other.batched_steps;
         self.decode_batch_rows += other.decode_batch_rows;
         self.kv_bytes += other.kv_bytes;
+        for (mine, theirs) in self.statuses.iter_mut().zip(other.statuses) {
+            *mine += theirs;
+        }
+        self.queue_depth_hwm = self.queue_depth_hwm.max(other.queue_depth_hwm);
         self.shards.extend(other.shards);
         self.shards.sort_by_key(|s| s.shard);
     }
@@ -289,6 +406,15 @@ impl ServingMetrics {
         );
         if self.rejected > 0 {
             s.push_str(&format!(", rejected {}", self.rejected));
+        }
+        if self.shed() > 0 {
+            s.push_str(&format!(", shed {}", self.shed()));
+        }
+        if self.expired() > 0 {
+            s.push_str(&format!(", expired {}", self.expired()));
+        }
+        if self.queue_depth_hwm > 0 {
+            s.push_str(&format!(", q-hwm {}", self.queue_depth_hwm));
         }
         if self.steals > 0 {
             s.push_str(&format!(", steals {}", self.steals));
@@ -332,11 +458,90 @@ impl ServingMetrics {
     }
 }
 
+/// Fleet-shared live per-status counters (every terminal resolution notes
+/// its status here, from any thread). Powers `Coordinator::debug_state` —
+/// a hang diagnosis needs the counts *now*, not at shutdown-merge time.
+struct StatusBoard {
+    counts: [std::sync::atomic::AtomicUsize; Status::COUNT],
+}
+
+impl StatusBoard {
+    fn new() -> Self {
+        Self { counts: std::array::from_fn(|_| std::sync::atomic::AtomicUsize::new(0)) }
+    }
+
+    fn note(&self, st: Status) {
+        self.counts[st.index()].fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    }
+
+    fn snapshot(&self) -> [usize; Status::COUNT] {
+        std::array::from_fn(|i| self.counts[i].load(std::sync::atomic::Ordering::Relaxed))
+    }
+}
+
+/// One responder's accounting bundle: its shard id (`NO_SHARD` for the
+/// batcher), its metrics + occupancy accumulators, and the fleet-shared
+/// status board. Threaded through every response path so a terminal
+/// resolution is bookkept in exactly one place (`resolve`).
+struct Acct {
+    shard: usize,
+    metrics: ServingMetrics,
+    occ: ShardOccupancy,
+    board: Arc<StatusBoard>,
+}
+
+impl Acct {
+    fn new(shard: usize, board: Arc<StatusBoard>) -> Self {
+        Self {
+            shard,
+            metrics: ServingMetrics::default(),
+            occ: ShardOccupancy { shard, ..Default::default() },
+            board,
+        }
+    }
+
+    /// Record one request's terminal status. `Ok` contributes its latency
+    /// to the percentile aggregates; every failure counts as a reject and
+    /// stays out of them.
+    fn resolve(&mut self, st: Status, latency_us: u64) {
+        self.metrics.completed += 1;
+        self.metrics.statuses[st.index()] += 1;
+        self.board.note(st);
+        self.occ.completed += 1;
+        if st == Status::Ok {
+            self.metrics.latencies_us.push(latency_us);
+        } else {
+            self.metrics.rejected += 1;
+        }
+    }
+}
+
+/// Fail a request with one terminal typed status: bookkeep the resolution
+/// and send the (single) failure response. The caller's channel closes
+/// when the `Request` drops — never a dangling wait.
+fn reject(req: &Request, st: Status, acct: &mut Acct) {
+    acct.resolve(st, 0);
+    let _ = req.resp.send(Response {
+        id: req.id,
+        next_token: INVALID_TOKEN,
+        status: st,
+        latency: req.submitted.elapsed(),
+        network_latency_us: 0,
+        batch_size: 0,
+        shard: acct.shard,
+    });
+}
+
 /// Handle to a running sharded coordinator.
 pub struct Coordinator {
     tx: Sender<Msg>,
     handle: Option<std::thread::JoinHandle<()>>,
     next_id: std::sync::atomic::AtomicU64,
+    /// Shared with the fleet for live state dumps (`debug_state`).
+    queues: Arc<ShardQueues<Work>>,
+    board: Arc<StatusBoard>,
+    /// Applied to `submit`/`submit_gen` when `default_deadline_ms > 0`.
+    default_deadline: Option<Duration>,
 }
 
 impl Coordinator {
@@ -380,9 +585,16 @@ impl Coordinator {
         let max_decode_batch = cfg
             .max_decode_batch
             .clamp(1, model.schema.eval_batch * model.schema.seq_len);
+        let max_queued = cfg.max_queued_windows;
+        let max_live_seqs = cfg.max_live_sequences;
+        let default_deadline =
+            (cfg.default_deadline_ms > 0).then(|| Duration::from_millis(cfg.default_deadline_ms));
+        #[cfg(any(test, feature = "chaos"))]
+        let chaos_sched = cfg.chaos.clone().unwrap_or_default();
 
         // the shared per-shard work queues the whole fleet drains
         let queues: Arc<ShardQueues<Work>> = Arc::new(ShardQueues::new(n_shards));
+        let board = Arc::new(StatusBoard::new());
 
         // spawn shard workers, each owning a replica
         let (ready_tx, ready_rx) = channel::<std::result::Result<(), String>>();
@@ -402,6 +614,10 @@ impl Coordinator {
                 kv_prec,
                 kv_budget,
                 max_decode_batch,
+                max_live_seqs,
+                board: board.clone(),
+                #[cfg(any(test, feature = "chaos"))]
+                faults: chaos_sched.for_shard(shard),
             };
             let handle = std::thread::Builder::new()
                 .name(format!("ewq-shard-{shard}"))
@@ -435,12 +651,19 @@ impl Coordinator {
         // `cfg.dispatch`; idle shards drain/steal without its involvement
         let (tx, rx) = channel::<Msg>();
         let max_wait = Duration::from_micros(cfg.max_wait_us);
-        let fleet = Fleet { queues, handles: shard_handles, results: res_rx, policy };
+        let fleet = Fleet {
+            queues: queues.clone(),
+            handles: shard_handles,
+            results: res_rx,
+            policy,
+            board: board.clone(),
+            max_queued,
+        };
         let handle = std::thread::Builder::new()
             .name("ewq-batcher".into())
             .spawn(move || batcher(rx, fleet, batch_cap, max_wait))
             .context("spawn batcher")?;
-        Ok(Self { tx, handle: Some(handle), next_id: 0.into() })
+        Ok(Self { tx, handle: Some(handle), next_id: 0.into(), queues, board, default_deadline })
     }
 
     /// Submit a classic context; returns the single-response receiver.
@@ -451,8 +674,33 @@ impl Coordinator {
     /// Submit a generation request: up to `max_new_tokens` tokens stream
     /// back as individual `Response`s on the returned receiver (the channel
     /// closes after the last one). `max_new_tokens <= 1` degrades to the
-    /// classic batched next-token path.
+    /// classic batched next-token path. `ServeConfig::default_deadline_ms`
+    /// applies when set.
     pub fn submit_gen(&self, context: Vec<i32>, max_new_tokens: usize) -> Receiver<Response> {
+        let deadline = self.default_deadline.map(|d| Instant::now() + d);
+        self.submit_inner(context, max_new_tokens, deadline)
+    }
+
+    /// Submit with an explicit per-request deadline (overrides the
+    /// configured default). Past the deadline the request is answered with
+    /// one terminal `Status::Expired` at the next scheduling boundary —
+    /// waiting windows at dequeue, in-flight generations at the next
+    /// decode-step boundary.
+    pub fn submit_with_deadline(
+        &self,
+        context: Vec<i32>,
+        max_new_tokens: usize,
+        deadline: Duration,
+    ) -> Receiver<Response> {
+        self.submit_inner(context, max_new_tokens, Some(Instant::now() + deadline))
+    }
+
+    fn submit_inner(
+        &self,
+        context: Vec<i32>,
+        max_new_tokens: usize,
+        deadline: Option<Instant>,
+    ) -> Receiver<Response> {
         let (rtx, rrx) = channel();
         let id = self.next_id.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         let _ = self.tx.send(Msg::Req(Request {
@@ -460,9 +708,39 @@ impl Coordinator {
             context,
             max_new_tokens: max_new_tokens.max(1),
             submitted: Instant::now(),
+            deadline,
             resp: rtx,
         }));
         rrx
+    }
+
+    /// One-line live-state dump: queue depths (+ high-water marks), live
+    /// shards, and per-status terminal counts so far. The payload of
+    /// `recv_or_dump`'s hang diagnosis.
+    pub fn debug_state(&self) -> String {
+        let depths = self.queues.depth_snapshot();
+        let hwm = self.queues.hwm_snapshot();
+        let dead = self.queues.dead_snapshot();
+        let live: Vec<usize> = (0..dead.len()).filter(|&i| !dead[i]).collect();
+        let counts = self.board.snapshot();
+        let statuses: Vec<String> = Status::ALL
+            .iter()
+            .map(|s| format!("{}={}", s.label(), counts[s.index()]))
+            .collect();
+        format!(
+            "queue depths {depths:?} (hwm {hwm:?}), live shards {live:?}, statuses [{}]",
+            statuses.join(" ")
+        )
+    }
+
+    /// Receive with a timeout; on timeout (or a dropped channel) panic with
+    /// the coordinator's live state so a hung test points at the stuck
+    /// queue/shard instead of an opaque `RecvTimeoutError`.
+    pub fn recv_or_dump(&self, rx: &Receiver<Response>, timeout: Duration) -> Response {
+        match rx.recv_timeout(timeout) {
+            Ok(r) => r,
+            Err(e) => panic!("response wait failed ({e}); {}", self.debug_state()),
+        }
     }
 
     /// Stop batcher + shards and collect the merged metrics.
@@ -484,6 +762,9 @@ struct Fleet {
     handles: Vec<std::thread::JoinHandle<()>>,
     results: Receiver<ServingMetrics>,
     policy: DispatchPolicy,
+    board: Arc<StatusBoard>,
+    /// `ServeConfig::max_queued_windows` (0 = unbounded).
+    max_queued: usize,
 }
 
 /// Candidate order for shortest-queue dispatch: shard indices sorted by
@@ -498,29 +779,46 @@ fn shortest_queue_order(depths: &[usize]) -> Vec<usize> {
 /// Place one closed window on a shard queue under `policy`, skipping dead
 /// shards. Windows that land on a shard that dies before draining them are
 /// rescued by live peers inside `ShardQueues::pop`, so placement is only a
-/// heuristic — never a correctness concern.
-fn place_window(queues: &ShardQueues<Work>, policy: DispatchPolicy, rr: &mut usize, w: Window) {
+/// heuristic — never a correctness concern. **Bounded admission**: with
+/// `max_queued > 0`, a shard whose queued + in-flight depth is at the cap
+/// is closed to new windows; when every live shard is closed the whole
+/// window is shed with one terminal `Status::Busy` per request — queue
+/// depth stays bounded instead of growing with the overload.
+fn place_window(
+    queues: &ShardQueues<Work>,
+    policy: DispatchPolicy,
+    rr: &mut usize,
+    max_queued: usize,
+    w: Window,
+    acct: &mut Acct,
+) {
     let dead = queues.dead_snapshot();
-    let alive: Vec<usize> = (0..dead.len()).filter(|&i| !dead[i]).collect();
-    if alive.is_empty() {
+    let depths = queues.depth_snapshot();
+    if !dead.iter().any(|&d| !d) {
         // responders drop with the window; callers observe closed channels
         eprintln!("batcher: all shards dead; dropping batch of {}", w.len());
+        return;
+    }
+    let open: Vec<usize> = (0..dead.len())
+        .filter(|&i| !dead[i] && (max_queued == 0 || depths[i] < max_queued))
+        .collect();
+    if open.is_empty() {
+        for r in w {
+            reject(&r, Status::Busy, acct);
+        }
         return;
     }
     let target = match policy {
         // WorkSteal places blindly — consumers repair imbalance themselves
         DispatchPolicy::RoundRobin | DispatchPolicy::WorkSteal => {
-            let t = alive[*rr % alive.len()];
+            let t = open[*rr % open.len()];
             *rr += 1;
             t
         }
-        DispatchPolicy::ShortestQueue => {
-            let depths = queues.depth_snapshot();
-            *shortest_queue_order(&depths)
-                .iter()
-                .find(|&&i| !dead[i])
-                .expect("alive is non-empty")
-        }
+        DispatchPolicy::ShortestQueue => *shortest_queue_order(&depths)
+            .iter()
+            .find(|i| open.contains(i))
+            .expect("open is non-empty"),
     };
     queues.push(target, Work::Prefill(w));
 }
@@ -531,13 +829,17 @@ fn batcher(rx: Receiver<Msg>, fleet: Fleet, batch_cap: usize, max_wait: Duration
     let started = Instant::now();
     let mut rr = 0usize;
     let mut pending: Vec<Request> = Vec::new();
-    let Fleet { queues, handles, results, policy } = fleet;
+    let Fleet { queues, handles, results, policy, board, max_queued } = fleet;
+    // the batcher's own accounting: requests it sheds before any shard ever
+    // sees them (its occupancy record is never published — only metrics)
+    let mut acct = Acct::new(NO_SHARD, board);
 
     // Stop the fleet: after `queues.stop()` the shard workers drain every
     // remaining window (their own, stolen, or rescued) and report metrics
     // before exiting, so joining the handles drains all work.
     let finalize = |mtx: Option<Sender<ServingMetrics>>,
-                    handles: Vec<std::thread::JoinHandle<()>>| {
+                    handles: Vec<std::thread::JoinHandle<()>>,
+                    shed: ServingMetrics| {
         queues.stop();
         for h in handles {
             let _ = h.join();
@@ -547,6 +849,7 @@ fn batcher(rx: Receiver<Msg>, fleet: Fleet, batch_cap: usize, max_wait: Duration
             while let Ok(m) = results.try_recv() {
                 agg.merge(m);
             }
+            agg.merge(shed);
             agg.wall_time = started.elapsed();
             let _ = mtx.send(agg);
         }
@@ -558,12 +861,12 @@ fn batcher(rx: Receiver<Msg>, fleet: Fleet, batch_cap: usize, max_wait: Duration
             match rx.recv() {
                 Ok(Msg::Req(r)) => pending.push(r),
                 Ok(Msg::Stop(mtx)) => {
-                    finalize(Some(mtx), handles);
+                    finalize(Some(mtx), handles, acct.metrics);
                     return;
                 }
                 Err(_) => {
                     // front end dropped without shutdown: stop shards quietly
-                    finalize(None, handles);
+                    finalize(None, handles, acct.metrics);
                     return;
                 }
             }
@@ -583,10 +886,10 @@ fn batcher(rx: Receiver<Msg>, fleet: Fleet, batch_cap: usize, max_wait: Duration
         }
         let batch: Vec<Request> = pending.drain(..).collect();
         if !batch.is_empty() {
-            place_window(&queues, policy, &mut rr, batch);
+            place_window(&queues, policy, &mut rr, max_queued, batch, &mut acct);
         }
         if let Some(mtx) = stop {
-            finalize(Some(mtx), handles);
+            finalize(Some(mtx), handles, acct.metrics);
             return;
         }
     }
@@ -606,6 +909,14 @@ struct ShardCtx {
     kv_budget: usize,
     /// live-sequence cap per fused decode step (1 = per-sequence GEMV path)
     max_decode_batch: usize,
+    /// decode-admission cap: live sequences per shard (0 = unbounded);
+    /// admission past it sheds with `Status::Busy` at the step boundary
+    max_live_seqs: usize,
+    /// fleet-shared live per-status counters
+    board: Arc<StatusBoard>,
+    /// this shard's deterministic fault-injection plan (chaos harness)
+    #[cfg(any(test, feature = "chaos"))]
+    faults: faultfx::ShardFaults,
 }
 
 /// Marks the shard dead on every non-clean exit (panic mid-batch, setup
@@ -636,7 +947,20 @@ fn shard_worker(
     ready: Sender<std::result::Result<(), String>>,
     results: Sender<ServingMetrics>,
 ) -> Result<()> {
-    let ShardCtx { shard, net_us, fwd_workers, steal, kv_prec, kv_budget, max_decode_batch } = ctx;
+    #[cfg(any(test, feature = "chaos"))]
+    let mut chaos = faultfx::FaultState::new(ctx.faults.clone());
+    let ShardCtx {
+        shard,
+        net_us,
+        fwd_workers,
+        steal,
+        kv_prec,
+        kv_budget,
+        max_decode_batch,
+        max_live_seqs,
+        board,
+        ..
+    } = ctx;
     let mut guard = DeathGuard { shard, queues: queues.clone(), armed: true };
     // Runtime lives entirely inside this thread (PJRT client is not Send).
     let setup = (|| -> Result<_> {
@@ -672,11 +996,8 @@ fn shard_worker(
     }
     let _ = ready.send(Ok(()));
 
-    let mut metrics = ServingMetrics {
-        resident_weight_bytes: qm.resident_bytes(),
-        ..Default::default()
-    };
-    let mut occ = ShardOccupancy { shard, ..Default::default() };
+    let mut acct = Acct::new(shard, board);
+    acct.metrics.resident_weight_bytes = qm.resident_bytes();
     let started = Instant::now();
     // this shard's KV cache (decoding sequences are pinned to it) and the
     // reused decode logits buffers (single-row for per-sequence turns and
@@ -687,13 +1008,18 @@ fn shard_worker(
     let mut batch_logits = vec![0.0f32; max_decode_batch * v];
 
     loop {
+        // chaos: scheduled shard death fires here, BEFORE popping — nothing
+        // is in flight, so every queued window is rescued and answered
+        // exactly once by the survivors; slow-shard stalls land here too
+        #[cfg(any(test, feature = "chaos"))]
+        chaos.before_item(shard);
         let (work, stolen) = match queues.pop(shard, steal) {
             Popped::Own(w) => (w, false),
             Popped::Stolen(w, _from) => (w, true),
             Popped::Stop => break,
         };
         if stolen {
-            occ.steals += 1;
+            acct.occ.steals += 1;
         }
         match work {
             Work::Prefill(batch) => {
@@ -701,19 +1027,31 @@ fn shard_worker(
                 if batch.iter().any(|r| r.context.first() == Some(&POISON_CONTEXT)) {
                     panic!("shard {shard}: poison request — simulated mid-flight crash");
                 }
+                // deadline check at dequeue: an expired request is answered
+                // with one terminal Expired and never executed
+                let (batch, lapsed): (Vec<Request>, Vec<Request>) =
+                    batch.into_iter().partition(|r| !expired(r));
+                for r in lapsed {
+                    reject(&r, Status::Expired, &mut acct);
+                }
                 // generation requests leave the window here: each becomes a
                 // pinned decode job on this shard's queue
                 let (gen, classic): (Vec<Request>, Vec<Request>) =
                     batch.into_iter().partition(|r| r.max_new_tokens > 1);
                 for r in gen {
-                    start_decode(
-                        r, n_blocks, (s, v), &mut kv, shard, &queues, &mut metrics, &mut occ,
-                    );
+                    #[cfg(any(test, feature = "chaos"))]
+                    {
+                        if chaos.deny_kv() {
+                            // injected budget exhaustion: degrade exactly
+                            // like a real failed reservation
+                            reject(&r, Status::KvExhausted, &mut acct);
+                            continue;
+                        }
+                    }
+                    start_decode(r, n_blocks, (s, v), &mut kv, &queues, max_live_seqs, &mut acct);
                 }
                 if !classic.is_empty() {
-                    execute_batch(
-                        classic, &ex, &qm, (b, s, v), (shard, net_us), &mut metrics, &mut occ,
-                    );
+                    execute_batch(classic, &ex, &qm, (b, s, v), net_us, &mut acct);
                 }
             }
             Work::Decode(job) => {
@@ -721,14 +1059,18 @@ fn shard_worker(
                     // rescued off a dead peer's queue: its KV pages died
                     // with that shard — fail the stream cleanly, exactly
                     // once (the queue popped it exactly once)
-                    fail_decode(job, shard, &mut metrics, &mut occ);
+                    fail_decode(job, Status::ShardLost, &mut acct);
+                } else if expired(&job.req) {
+                    // deadline passed between turns: retire at the step
+                    // boundary with one terminal Expired
+                    job.state.release(&mut kv);
+                    fail_decode(job, Status::Expired, &mut acct);
                 } else if max_decode_batch <= 1 {
                     // per-sequence GEMV path: the batched path's
                     // equivalence oracle, kept behind the config switch
-                    if let Some(job) = decode_turn(
-                        job, &ex, &qm, &mut kv, &mut logits, (shard, s, v), &mut metrics,
-                        &mut occ,
-                    ) {
+                    if let Some(job) =
+                        decode_turn(job, &ex, &qm, &mut kv, &mut logits, (s, v), &mut acct)
+                    {
                         // more tokens to generate: go to the back of the
                         // queue so prefill windows that arrived meanwhile
                         // interleave
@@ -745,6 +1087,13 @@ fn shard_worker(
                         Work::Decode(j) => j,
                         Work::Prefill(_) => unreachable!("only decode work is pinned"),
                     }));
+                    // expired cohort members retire here, at the boundary
+                    let (jobs, lapsed): (Vec<DecodeJob>, Vec<DecodeJob>) =
+                        jobs.into_iter().partition(|j| !expired(&j.req));
+                    for j in lapsed {
+                        j.state.release(&mut kv);
+                        fail_decode(j, Status::Expired, &mut acct);
+                    }
                     for job in decode_batch_turn(
                         jobs,
                         &ex,
@@ -752,9 +1101,8 @@ fn shard_worker(
                         &mut kv,
                         &mut logits,
                         &mut batch_logits,
-                        (shard, s, v),
-                        &mut metrics,
-                        &mut occ,
+                        (s, v),
+                        &mut acct,
                     ) {
                         queues.push(shard, Work::Decode(job));
                     }
@@ -771,54 +1119,40 @@ fn shard_worker(
         queues.complete(shard);
     }
     guard.armed = false;
-    occ.wakes = queues.wake_count(shard);
-    metrics.steals = occ.steals;
-    metrics.wakes = occ.wakes;
-    metrics.kv_bytes = kv.peak_bytes();
-    metrics.wall_time = started.elapsed();
-    metrics.shards = vec![occ];
-    let _ = results.send(metrics);
+    acct.occ.wakes = queues.wake_count(shard);
+    acct.metrics.steals = acct.occ.steals;
+    acct.metrics.wakes = acct.occ.wakes;
+    acct.metrics.kv_bytes = kv.peak_bytes();
+    acct.metrics.queue_depth_hwm = queues.depth_hwm(shard);
+    acct.metrics.wall_time = started.elapsed();
+    let Acct { metrics: mut m, occ, .. } = acct;
+    m.shards = vec![occ];
+    let _ = results.send(m);
     Ok(())
 }
 
-/// Answer a decode request with a single terminal `INVALID_TOKEN` response
-/// (validation failure, KV budget exhaustion, or dead-shard rescue). The
-/// caller's stream ends here — channel closed after exactly one failure
-/// marker, never a dangling wait.
-fn fail_decode(
-    job: DecodeJob,
-    shard: usize,
-    metrics: &mut ServingMetrics,
-    occ: &mut ShardOccupancy,
-) {
-    metrics.completed += 1;
-    metrics.rejected += 1;
-    occ.completed += 1;
-    let _ = job.req.resp.send(Response {
-        id: job.req.id,
-        next_token: INVALID_TOKEN,
-        latency: job.req.submitted.elapsed(),
-        network_latency_us: 0,
-        batch_size: 0,
-        shard,
-    });
+/// End a decode stream with a single terminal non-`Ok` response (validation
+/// failure, KV budget exhaustion, deadline expiry, or dead-shard rescue).
+/// The caller's stream ends here — channel closed after exactly one typed
+/// failure marker, never a dangling wait.
+fn fail_decode(job: DecodeJob, st: Status, acct: &mut Acct) {
+    reject(&job.req, st, acct);
 }
 
 /// Validate a generation request and seat its decoding sequence on this
 /// shard: reserve the sequence's KV window up front (so steady-state decode
 /// turns never allocate) and queue the pinned decode job behind the current
-/// work. Invalid contexts and budget overruns are failed immediately with
-/// `INVALID_TOKEN` semantics.
-#[allow(clippy::too_many_arguments)]
+/// work. Invalid contexts fail with `InvalidContext`, the live-sequence cap
+/// sheds with `Busy`, and budget overruns degrade to `KvExhausted` — each a
+/// single terminal response, never a mid-stream failure.
 fn start_decode(
     req: Request,
     n_blocks: usize,
     (s, v): (usize, usize),
     kv: &mut KvCache,
-    shard: usize,
     queues: &ShardQueues<Work>,
-    metrics: &mut ServingMetrics,
-    occ: &mut ShardOccupancy,
+    max_live_seqs: usize,
+    acct: &mut Acct,
 ) {
     // same validation rule as the prefill path: only the seq_len prefix is
     // ever executed, and it must be entirely in-vocab; generation also
@@ -826,23 +1160,30 @@ fn start_decode(
     let ctx_len = req.context.len().min(s);
     let valid =
         ctx_len > 0 && req.context[..ctx_len].iter().all(|&t| t >= 0 && (t as usize) < v);
-    let state = DecodeState::new(req.id, n_blocks);
     if !valid {
-        fail_decode(DecodeJob { req, state, produced: 0, next_input: 0 }, shard, metrics, occ);
+        reject(&req, Status::InvalidContext, acct);
         return;
     }
+    // bounded admission: refuse to seat more concurrent decode sequences
+    // than configured — shed with Busy at the admission boundary instead of
+    // letting reservations fight over the KV budget mid-stream
+    if max_live_seqs > 0 && kv.live_sequences() >= max_live_seqs {
+        reject(&req, Status::Busy, acct);
+        return;
+    }
+    let state = DecodeState::new(req.id, n_blocks);
     // the context plus every generated token except the last must fit the
     // window; reserve that many KV slots per block now (saturating: a
     // caller-controlled max_new_tokens near usize::MAX must not overflow —
     // ctx_len >= 1 here, so this equals ctx_len + max_new_tokens - 1)
     let window = (ctx_len - 1).saturating_add(req.max_new_tokens).min(s);
     if let Err(e) = state.reserve(kv, window) {
-        eprintln!("shard {shard}: request {}: {e:#}", req.id);
+        eprintln!("shard {}: request {}: {e:#}", acct.shard, req.id);
         state.release(kv);
-        fail_decode(DecodeJob { req, state, produced: 0, next_input: 0 }, shard, metrics, occ);
+        reject(&req, Status::KvExhausted, acct);
         return;
     }
-    queues.push(shard, Work::Decode(DecodeJob { req, state, produced: 0, next_input: 0 }));
+    queues.push(acct.shard, Work::Decode(DecodeJob { req, state, produced: 0, next_input: 0 }));
 }
 
 /// Run one queue turn of a decoding sequence. The first turn ingests the
@@ -852,16 +1193,14 @@ fn start_decode(
 /// answered — and every later turn advances exactly one token. Each
 /// generated token streams back as its own `Response`. Returns the job when
 /// more tokens remain, `None` when the stream is finished (or failed).
-#[allow(clippy::too_many_arguments)]
 fn decode_turn(
     mut job: DecodeJob,
     ex: &ModelExecutor<'_>,
     qm: &QuantizedModel,
     kv: &mut KvCache,
     logits: &mut [f32],
-    (shard, s, v): (usize, usize, usize),
-    metrics: &mut ServingMetrics,
-    occ: &mut ShardOccupancy,
+    (s, v): (usize, usize),
+    acct: &mut Acct,
 ) -> Option<DecodeJob> {
     let exec_start = Instant::now();
     let stepped: Result<()> = if job.produced == 0 {
@@ -869,23 +1208,23 @@ fn decode_turn(
         let mut r = Ok(());
         for i in 0..ctx_len {
             r = ex.decode_step_into(qm, job.req.context[i], &mut job.state, kv, logits);
-            metrics.decode_steps += 1;
+            acct.metrics.decode_steps += 1;
             if r.is_err() {
                 break;
             }
         }
         r
     } else {
-        metrics.decode_steps += 1;
+        acct.metrics.decode_steps += 1;
         ex.decode_step_into(qm, job.next_input, &mut job.state, kv, logits)
     };
-    occ.busy_us += exec_start.elapsed().as_micros() as u64;
+    acct.occ.busy_us += exec_start.elapsed().as_micros() as u64;
     if let Err(e) = stepped {
         // defensive: reservation makes this unreachable in practice, but a
         // decode failure must end the stream cleanly, not kill the shard
-        eprintln!("shard {shard}: decode of request {} failed: {e:#}", job.req.id);
+        eprintln!("shard {}: decode of request {} failed: {e:#}", acct.shard, job.req.id);
         job.state.release(kv);
-        fail_decode(job, shard, metrics, occ);
+        fail_decode(job, Status::ShardLost, acct);
         return None;
     }
     let next = crate::model::sampler::argmax(&logits[..v]) as i32;
@@ -897,10 +1236,11 @@ fn decode_turn(
         .send(Response {
             id: job.req.id,
             next_token: next,
+            status: Status::Ok,
             latency: job.req.submitted.elapsed(),
             network_latency_us: 0,
             batch_size: 1,
-            shard,
+            shard: acct.shard,
         })
         .is_ok();
     // the stream ends when the token budget is spent, the context window is
@@ -908,9 +1248,7 @@ fn decode_turn(
     let done = job.produced >= job.req.max_new_tokens || job.state.pos() >= s || !delivered;
     if done {
         job.state.release(kv);
-        metrics.completed += 1;
-        metrics.latencies_us.push(job.req.submitted.elapsed().as_micros() as u64);
-        occ.completed += 1;
+        acct.resolve(Status::Ok, job.req.submitted.elapsed().as_micros() as u64);
         return None;
     }
     Some(job)
@@ -934,15 +1272,14 @@ fn decode_batch_turn(
     kv: &mut KvCache,
     logits: &mut [f32],
     batch_logits: &mut [f32],
-    (shard, s, v): (usize, usize, usize),
-    metrics: &mut ServingMetrics,
-    occ: &mut ShardOccupancy,
+    (s, v): (usize, usize),
+    acct: &mut Acct,
 ) -> Vec<DecodeJob> {
     let (first, steady): (Vec<DecodeJob>, Vec<DecodeJob>) =
         jobs.into_iter().partition(|j| j.produced == 0);
     let mut survivors = Vec::new();
     for job in first {
-        if let Some(j) = decode_turn(job, ex, qm, kv, logits, (shard, s, v), metrics, occ) {
+        if let Some(j) = decode_turn(job, ex, qm, kv, logits, (s, v), acct) {
             survivors.push(j);
         }
     }
@@ -955,18 +1292,18 @@ fn decode_batch_turn(
     let mut states: Vec<DecodeState> = steady.iter().map(|j| j.state.clone()).collect();
     let stepped =
         ex.decode_step_batched(qm, &tokens, &mut states, kv, &mut batch_logits[..m * v]);
-    metrics.decode_steps += m;
-    metrics.batched_steps += 1;
-    metrics.decode_batch_rows += m;
-    occ.busy_us += exec_start.elapsed().as_micros() as u64;
+    acct.metrics.decode_steps += m;
+    acct.metrics.batched_steps += 1;
+    acct.metrics.decode_batch_rows += m;
+    acct.occ.busy_us += exec_start.elapsed().as_micros() as u64;
     if let Err(e) = stepped {
         // defensive: reservation + admission guards make this unreachable
         // in practice, but a failed fused step must end every in-flight
-        // stream cleanly (one terminal sentinel each), not kill the shard
-        eprintln!("shard {shard}: fused decode step of {m} sequences failed: {e:#}");
+        // stream cleanly (one terminal status each), not kill the shard
+        eprintln!("shard {}: fused decode step of {m} sequences failed: {e:#}", acct.shard);
         for job in steady {
             job.state.release(kv);
-            fail_decode(job, shard, metrics, occ);
+            fail_decode(job, Status::ShardLost, acct);
         }
         return survivors;
     }
@@ -981,18 +1318,17 @@ fn decode_batch_turn(
             .send(Response {
                 id: job.req.id,
                 next_token: next,
+                status: Status::Ok,
                 latency: job.req.submitted.elapsed(),
                 network_latency_us: 0,
                 batch_size: m,
-                shard,
+                shard: acct.shard,
             })
             .is_ok();
         let done = job.produced >= job.req.max_new_tokens || job.state.pos() >= s || !delivered;
         if done {
             job.state.release(kv);
-            metrics.completed += 1;
-            metrics.latencies_us.push(job.req.submitted.elapsed().as_micros() as u64);
-            occ.completed += 1;
+            acct.resolve(Status::Ok, job.req.submitted.elapsed().as_micros() as u64);
         } else {
             survivors.push(job);
         }
@@ -1008,32 +1344,21 @@ fn execute_batch(
     ex: &ModelExecutor<'_>,
     qm: &QuantizedModel,
     (b, s, v): (usize, usize, usize),
-    (shard, net_us): (usize, u64),
-    metrics: &mut ServingMetrics,
-    occ: &mut ShardOccupancy,
+    net_us: u64,
+    acct: &mut Acct,
 ) {
     let exec_start = Instant::now();
     // reject out-of-vocab contexts up front: the executor validates token
     // range, and one malformed request must never kill the shard (and with
     // it 1/N of all traffic). Only the seq_len prefix is validated — the
     // tail beyond it is truncated away and never executed.
-    let (batch, rejected): (Vec<Request>, Vec<Request>) = batch.into_iter().partition(|r| {
+    let (batch, invalid): (Vec<Request>, Vec<Request>) = batch.into_iter().partition(|r| {
         r.context[..r.context.len().min(s)].iter().all(|&t| t >= 0 && (t as usize) < v)
     });
-    for r in rejected {
+    for r in invalid {
         // answered but never executed: counted separately and excluded
         // from the latency/batch aggregates
-        metrics.completed += 1;
-        metrics.rejected += 1;
-        occ.completed += 1;
-        let _ = r.resp.send(Response {
-            id: r.id,
-            next_token: INVALID_TOKEN,
-            latency: r.submitted.elapsed(),
-            network_latency_us: 0,
-            batch_size: 0,
-            shard,
-        });
+        reject(&r, Status::InvalidContext, acct);
     }
     if batch.is_empty() {
         return;
@@ -1049,33 +1374,36 @@ fn execute_batch(
     let logits = match ex.forward(qm, &toks) {
         Ok(l) => l,
         Err(e) => {
-            // drop this batch's responses (callers see a closed channel)
-            // but keep the shard alive for future work
-            eprintln!("shard {shard}: batch of {} failed: {e:#}", batch.len());
+            // a failed forward still answers every caller — one terminal
+            // ShardLost each, never a silently closed channel — and keeps
+            // the shard alive for future work
+            eprintln!("shard {}: batch of {} failed: {e:#}", acct.shard, batch.len());
+            for r in &batch {
+                reject(r, Status::ShardLost, acct);
+            }
             return;
         }
     };
-    metrics.batches += 1;
-    metrics.max_batch_observed = metrics.max_batch_observed.max(batch.len());
-    metrics.virtual_network_us += net_us;
+    acct.metrics.batches += 1;
+    acct.metrics.max_batch_observed = acct.metrics.max_batch_observed.max(batch.len());
+    acct.metrics.virtual_network_us += net_us;
     for (row, r) in batch.iter().enumerate() {
         let base = (row * s + pos[row]) * v;
         let next = crate::model::sampler::argmax(&logits[base..base + v]) as i32;
         let latency = r.submitted.elapsed();
-        metrics.completed += 1;
-        metrics.latencies_us.push(latency.as_micros() as u64);
+        acct.resolve(Status::Ok, latency.as_micros() as u64);
         let _ = r.resp.send(Response {
             id: r.id,
             next_token: next,
+            status: Status::Ok,
             latency,
             network_latency_us: net_us,
             batch_size: batch.len(),
-            shard,
+            shard: acct.shard,
         });
     }
-    occ.batches += 1;
-    occ.completed += batch.len();
-    occ.busy_us += exec_start.elapsed().as_micros() as u64;
+    acct.occ.batches += 1;
+    acct.occ.busy_us += exec_start.elapsed().as_micros() as u64;
 }
 
 #[cfg(test)]
@@ -1121,6 +1449,10 @@ mod tests {
         })
     }
 
+    /// Test-wide response wait: long enough for the slowest CI host; a
+    /// timeout panics with the coordinator's live state via `recv_or_dump`.
+    const RECV_T: Duration = Duration::from_secs(120);
+
     fn collect_tokens_with(
         model: &ModelDir,
         workers: usize,
@@ -1141,10 +1473,8 @@ mod tests {
                 ((i * 13) % 64) as i32,
             ]));
         }
-        let toks: Vec<i32> = rxs
-            .into_iter()
-            .map(|rx| rx.recv_timeout(Duration::from_secs(120)).unwrap().next_token)
-            .collect();
+        let toks: Vec<i32> =
+            rxs.into_iter().map(|rx| coord.recv_or_dump(&rx, RECV_T).next_token).collect();
         (toks, coord.shutdown())
     }
 
@@ -1244,7 +1574,7 @@ mod tests {
             rxs.push(coord.submit(ctx));
         }
         for rx in rxs {
-            let _ = rx.recv_timeout(Duration::from_secs(120)).unwrap();
+            let _ = coord.recv_or_dump(&rx, RECV_T);
         }
         coord.shutdown()
     }
@@ -1311,7 +1641,8 @@ mod tests {
         let expected = QuantizedModel::build(&model, &plan).unwrap().resident_bytes();
         let cfg = ServeConfig { max_batch: 4, max_wait_us: 500, workers: 3, ..Default::default() };
         let coord = Coordinator::start_with_model(model, plan, cfg, 0, 0).unwrap();
-        let _ = coord.submit(vec![1, 2, 3]).recv_timeout(Duration::from_secs(120)).unwrap();
+        let rx = coord.submit(vec![1, 2, 3]);
+        let _ = coord.recv_or_dump(&rx, RECV_T);
         let m = coord.shutdown();
         assert_eq!(
             m.resident_weight_bytes,
@@ -1339,10 +1670,8 @@ mod tests {
             let rxs: Vec<_> = (0..10)
                 .map(|i| coord.submit(vec![i % 64, (i * 5 + 1) % 64]))
                 .collect();
-            let toks = rxs
-                .into_iter()
-                .map(|rx| rx.recv_timeout(Duration::from_secs(120)).unwrap().next_token)
-                .collect();
+            let toks =
+                rxs.into_iter().map(|rx| coord.recv_or_dump(&rx, RECV_T).next_token).collect();
             coord.shutdown();
             toks
         };
@@ -1395,35 +1724,32 @@ mod tests {
             let bad_high = coord.submit(vec![1, 9999, 2]); // out of vocab
             let bad_neg = coord.submit(vec![-7]);
             let good = coord.submit(vec![1, 2, 3]);
-            assert_eq!(
-                bad_high.recv_timeout(Duration::from_secs(120)).unwrap().next_token,
-                INVALID_TOKEN,
-                "policy={}",
-                policy.label()
-            );
-            assert_eq!(
-                bad_neg.recv_timeout(Duration::from_secs(120)).unwrap().next_token,
-                INVALID_TOKEN
-            );
+            let r = coord.recv_or_dump(&bad_high, RECV_T);
+            assert_eq!(r.next_token, INVALID_TOKEN, "policy={}", policy.label());
+            assert_eq!(r.status, Status::InvalidContext, "typed, not just the sentinel");
+            let r = coord.recv_or_dump(&bad_neg, RECV_T);
+            assert_eq!(r.next_token, INVALID_TOKEN);
+            assert_eq!(r.status, Status::InvalidContext);
             // the shards must still execute valid work afterwards
-            let resp = good.recv_timeout(Duration::from_secs(120)).unwrap();
+            let resp = coord.recv_or_dump(&good, RECV_T);
             assert!((0..64).contains(&resp.next_token));
+            assert_eq!(resp.status, Status::Ok);
             // bad token BEYOND the seq_len truncation point: executed normally
             let mut long_ctx = vec![3i32; 8];
             long_ctx.extend([9999, 9999]);
             let truncated = coord.submit(long_ctx);
-            assert!((0..64).contains(
-                &truncated.recv_timeout(Duration::from_secs(120)).unwrap().next_token
-            ));
+            assert!((0..64).contains(&coord.recv_or_dump(&truncated, RECV_T).next_token));
             let late = coord.submit(vec![4, 5]);
-            assert!(
-                (0..64).contains(&late.recv_timeout(Duration::from_secs(120)).unwrap().next_token)
-            );
+            assert!((0..64).contains(&coord.recv_or_dump(&late, RECV_T).next_token));
             let m = coord.shutdown();
             assert_eq!(m.completed, 5, "policy={}", policy.label());
             assert_eq!(m.rejected, 2);
             // rejects are excluded from the latency/batch aggregates
             assert_eq!(m.latencies_us.len(), 3);
+            // per-status bookkeeping: every request got exactly one status
+            assert_eq!(m.statuses[Status::Ok.index()], 3, "policy={}", policy.label());
+            assert_eq!(m.statuses[Status::InvalidContext.index()], 2);
+            assert_eq!(m.statuses.iter().sum::<usize>(), m.completed);
         }
     }
 
@@ -1672,11 +1998,13 @@ mod tests {
             let resps: Vec<Response> = rx.iter().collect();
             assert_eq!(resps.len(), 1, "{name}: exactly one terminal response");
             assert_eq!(resps[0].next_token, INVALID_TOKEN, "{name}");
+            assert_eq!(resps[0].status, Status::InvalidContext, "{name}");
         }
         assert_eq!(good.iter().count(), 4, "valid generation unaffected");
         let m = coord.shutdown();
         assert_eq!(m.completed, 3);
         assert_eq!(m.rejected, 2);
+        assert_eq!(m.statuses[Status::InvalidContext.index()], 2);
         // a kv budget too small for even one page fails generations cleanly
         // (and classic requests, which never touch the cache, still work)
         let cfg = ServeConfig { kv_budget_mb: 0.0, max_wait_us: 300, ..Default::default() };
@@ -1685,11 +2013,189 @@ mod tests {
         let resps: Vec<Response> = starved.iter().collect();
         assert_eq!(resps.len(), 1);
         assert_eq!(resps[0].next_token, INVALID_TOKEN);
+        assert_eq!(resps[0].status, Status::KvExhausted, "budget refusal is typed");
         let classic = coord.submit(vec![1, 2, 3]);
-        let answered = classic.recv_timeout(Duration::from_secs(120)).unwrap().next_token;
+        let answered = coord.recv_or_dump(&classic, RECV_T).next_token;
         assert!((0..64).contains(&answered));
         let m = coord.shutdown();
         assert_eq!(m.kv_bytes, 0, "nothing was ever resident in the starved cache");
+        assert_eq!(m.statuses[Status::KvExhausted.index()], 1);
+    }
+
+    /// A single-shard fleet stalled by chaos injection, flooded past its
+    /// `max_queued_windows` cap: excess windows are shed at enqueue with one
+    /// terminal `Status::Busy` each, and the queue high-water mark proves
+    /// depth never exceeded the cap.
+    #[test]
+    fn admission_cap_sheds_with_typed_busy() {
+        let model = tiny_model();
+        let plan = QuantPlan::uniform(&model.schema.name, model.schema.n_blocks, Precision::Q8);
+        let cfg = ServeConfig {
+            max_batch: 1, // every request is its own window
+            max_wait_us: 100,
+            workers: 1,
+            max_queued_windows: 2,
+            chaos: Some(faultfx::ChaosSchedule {
+                shards: vec![faultfx::ShardFaults {
+                    die_before_item: None,
+                    stall_us: 400_000, // 400ms per work item: the flood outruns the drain
+                    deny_kv_from: None,
+                }],
+            }),
+            ..Default::default()
+        };
+        let coord = Coordinator::start_with_model(model, plan, cfg, 0, 0).unwrap();
+        let rxs: Vec<_> = (0..10).map(|i| coord.submit(vec![(i % 64) as i32, 2])).collect();
+        let mut ok = 0usize;
+        let mut busy = 0usize;
+        for rx in rxs {
+            let r = coord.recv_or_dump(&rx, RECV_T);
+            match r.status {
+                Status::Ok => {
+                    assert!((0..64).contains(&r.next_token));
+                    ok += 1;
+                }
+                Status::Busy => {
+                    assert_eq!(r.next_token, INVALID_TOKEN, "shed answers carry the sentinel");
+                    busy += 1;
+                }
+                other => panic!("unexpected terminal status {other:?}"),
+            }
+        }
+        let m = coord.shutdown();
+        assert_eq!(m.completed, 10, "every request resolved exactly once");
+        assert_eq!(ok + busy, 10);
+        assert!(busy >= 6, "flood past a stalled cap-2 queue must shed most windows (shed {busy})");
+        assert_eq!(m.shed(), busy);
+        assert!(
+            m.queue_depth_hwm <= 2,
+            "bounded admission: high-water mark {} exceeds the cap",
+            m.queue_depth_hwm
+        );
+        assert_eq!(m.statuses.iter().sum::<usize>(), m.completed);
+        assert_eq!(m.latencies_us.len(), ok, "shed requests stay out of the percentiles");
+        assert!(m.summary().contains("shed "));
+    }
+
+    /// Requests whose deadline lapses while queued behind a chaos-stalled
+    /// shard are dropped at dequeue with one terminal `Status::Expired` —
+    /// both with an explicit `submit_with_deadline` and with the
+    /// `default_deadline_ms` config path.
+    #[test]
+    fn deadline_expires_queued_request_with_typed_expired() {
+        let model = tiny_model();
+        let plan = QuantPlan::uniform(&model.schema.name, model.schema.n_blocks, Precision::Q8);
+        let stalled = |default_deadline_ms| ServeConfig {
+            max_batch: 1,
+            max_wait_us: 100,
+            workers: 1,
+            default_deadline_ms,
+            chaos: Some(faultfx::ChaosSchedule {
+                shards: vec![faultfx::ShardFaults {
+                    die_before_item: None,
+                    stall_us: 300_000,
+                    deny_kv_from: None,
+                }],
+            }),
+            ..Default::default()
+        };
+        // explicit per-request deadline
+        let coord =
+            Coordinator::start_with_model(model.clone(), plan.clone(), stalled(0), 0, 0).unwrap();
+        let doomed = coord.submit_with_deadline(vec![1, 2, 3], 1, Duration::from_millis(1));
+        let patient = coord.submit(vec![4, 5]); // no deadline: rides out the stall
+        let resps: Vec<Response> = doomed.iter().collect();
+        assert_eq!(resps.len(), 1, "exactly one terminal response");
+        assert_eq!(resps[0].status, Status::Expired);
+        assert_eq!(resps[0].next_token, INVALID_TOKEN);
+        assert_eq!(coord.recv_or_dump(&patient, RECV_T).status, Status::Ok);
+        let m = coord.shutdown();
+        assert_eq!(m.expired(), 1);
+        assert_eq!(m.statuses.iter().sum::<usize>(), m.completed);
+        assert!(m.summary().contains("expired 1"));
+        // the configured default applies to plain submits
+        let coord = Coordinator::start_with_model(model, plan, stalled(1), 0, 0).unwrap();
+        let resps: Vec<Response> = coord.submit(vec![1, 2]).iter().collect();
+        assert_eq!(resps.len(), 1);
+        assert_eq!(resps[0].status, Status::Expired);
+        let m = coord.shutdown();
+        assert_eq!(m.expired(), 1);
+    }
+
+    /// A generation whose deadline lapses mid-stream retires at the next
+    /// decode-step boundary: tokens already streamed stay valid, the stream
+    /// ends with exactly one `Status::Expired`, and the sequence's KV pages
+    /// are released.
+    #[test]
+    fn deadline_expires_mid_generation_at_a_step_boundary() {
+        let model = tiny_model();
+        let plan = QuantPlan::uniform(&model.schema.name, model.schema.n_blocks, Precision::Q8);
+        let cfg = ServeConfig {
+            max_batch: 1,
+            max_wait_us: 100,
+            workers: 1,
+            chaos: Some(faultfx::ChaosSchedule {
+                shards: vec![faultfx::ShardFaults {
+                    die_before_item: None,
+                    // one stall fits inside the deadline, two do not: the
+                    // prefill admits the sequence, the decode step expires it
+                    stall_us: 300_000,
+                    deny_kv_from: None,
+                }],
+            }),
+            ..Default::default()
+        };
+        let coord = Coordinator::start_with_model(model, plan, cfg, 0, 0).unwrap();
+        let rx = coord.submit_with_deadline(vec![1, 2], 8, Duration::from_millis(450));
+        let resps: Vec<Response> = rx.iter().collect();
+        assert!(!resps.is_empty(), "the stream must still terminate");
+        let (last, streamed) = resps.split_last().unwrap();
+        assert_eq!(last.status, Status::Expired, "stream ends with one terminal Expired");
+        assert_eq!(last.next_token, INVALID_TOKEN);
+        for r in streamed {
+            assert_eq!(r.status, Status::Ok, "already-streamed tokens stay valid");
+            assert!((0..64).contains(&r.next_token));
+        }
+        let m = coord.shutdown();
+        assert_eq!(m.expired(), 1);
+        assert_eq!(m.statuses.iter().sum::<usize>(), m.completed);
+    }
+
+    /// `max_live_sequences` caps concurrent decode streams per shard:
+    /// admission beyond the cap degrades to a terminal `Status::Busy` at
+    /// prefill time instead of failing mid-stream.
+    #[test]
+    fn live_sequence_cap_degrades_admission_to_busy() {
+        let model = tiny_model();
+        let plan = QuantPlan::uniform(&model.schema.name, model.schema.n_blocks, Precision::Q8);
+        let cfg = ServeConfig {
+            max_batch: 4,
+            max_wait_us: 50_000, // all three generations land in ONE window
+            workers: 1,
+            max_live_sequences: 1,
+            ..Default::default()
+        };
+        let coord = Coordinator::start_with_model(model, plan, cfg, 0, 0).unwrap();
+        let rxs: Vec<_> = (0..3).map(|i| coord.submit_gen(vec![1 + i, 2], 4)).collect();
+        let mut ok_streams = 0usize;
+        let mut busy = 0usize;
+        for rx in rxs {
+            let resps: Vec<Response> = rx.iter().collect();
+            if resps[0].status == Status::Busy {
+                assert_eq!(resps.len(), 1, "shed streams get exactly one terminal response");
+                assert_eq!(resps[0].next_token, INVALID_TOKEN);
+                busy += 1;
+            } else {
+                assert_eq!(resps.len(), 4, "the admitted stream generates to completion");
+                assert!(resps.iter().all(|r| r.status == Status::Ok));
+                ok_streams += 1;
+            }
+        }
+        assert_eq!(ok_streams, 1, "exactly one sequence fits under the cap");
+        assert_eq!(busy, 2);
+        let m = coord.shutdown();
+        assert_eq!(m.shed(), 2);
+        assert_eq!(m.statuses.iter().sum::<usize>(), m.completed);
     }
 
     #[test]
@@ -1770,7 +2276,7 @@ mod tests {
             rxs.push(coord.submit(vec![1, 160 + (i % 16), 100 + (i % 57), 2]));
         }
         for rx in rxs {
-            let resp = rx.recv_timeout(Duration::from_secs(120)).unwrap();
+            let resp = coord.recv_or_dump(&rx, RECV_T);
             assert!((0..512).contains(&resp.next_token));
             assert!(resp.batch_size >= 1 && resp.batch_size <= 8);
             assert_eq!(resp.network_latency_us, 200);
@@ -1821,6 +2327,8 @@ mod tests {
             batched_steps: 0,
             decode_batch_rows: 0,
             kv_bytes: 0,
+            statuses: [5, 0, 0, 0, 0, 0],
+            queue_depth_hwm: 0,
             shards: Vec::new(),
         };
         assert_eq!(m.percentile_us(0.0), 10);
@@ -1867,6 +2375,8 @@ mod tests {
             batched_steps: 2,
             decode_batch_rows: 5,
             kv_bytes: 100,
+            statuses: [2, 1, 0, 0, 0, 0],
+            queue_depth_hwm: 3,
             shards: vec![ShardOccupancy {
                 shard: 1,
                 completed: 3,
@@ -1891,6 +2401,8 @@ mod tests {
             batched_steps: 1,
             decode_batch_rows: 2,
             kv_bytes: 50,
+            statuses: [2, 0, 0, 0, 0, 0],
+            queue_depth_hwm: 5,
             shards: vec![ShardOccupancy {
                 shard: 0,
                 completed: 2,
@@ -1915,6 +2427,13 @@ mod tests {
         assert_eq!(a.decode_batch_rows, 7, "batched row counts sum across shards");
         assert!((a.decode_batch_occupancy() - 7.0 / 3.0).abs() < 1e-12);
         assert_eq!(a.kv_bytes, 150, "kv peaks sum across shards");
+        assert_eq!(a.statuses, [4, 1, 0, 0, 0, 0], "per-status counters sum element-wise");
+        assert_eq!(a.shed(), 1);
+        assert_eq!(a.expired(), 0);
+        assert_eq!(a.queue_depth_hwm, 5, "queue high-water mark merges as max");
+        assert!(a.summary().contains("shed 1"));
+        assert!(a.summary().contains("q-hwm 5"));
+        assert!(!a.summary().contains("expired"), "zero counters stay out of the summary");
         assert!(a.summary().contains("decode 5 steps"));
         assert!(a.summary().contains("batched 3 steps"));
         assert_eq!(a.latencies_us.len(), 5);

@@ -60,6 +60,10 @@ pub(crate) struct ShardQueues<W> {
     depths: Vec<AtomicUsize>,
     /// Park → wake transitions per shard (occupancy telemetry).
     wakes: Vec<AtomicUsize>,
+    /// High-water mark of each shard's depth counter — the deepest a queue
+    /// ever got. Bounded-admission proof: under a `max_queued_windows` cap
+    /// of C, every shard's HWM stays ≤ C no matter the offered load.
+    hwm: Vec<AtomicUsize>,
 }
 
 impl<W: Pinnable> ShardQueues<W> {
@@ -73,6 +77,7 @@ impl<W: Pinnable> ShardQueues<W> {
             cv: Condvar::new(),
             depths: (0..n_shards).map(|_| AtomicUsize::new(0)).collect(),
             wakes: (0..n_shards).map(|_| AtomicUsize::new(0)).collect(),
+            hwm: (0..n_shards).map(|_| AtomicUsize::new(0)).collect(),
         }
     }
 
@@ -81,7 +86,8 @@ impl<W: Pinnable> ShardQueues<W> {
     /// never observe the window without its depth.
     pub(crate) fn push(&self, shard: usize, window: W) {
         let mut st = lock(&self.state);
-        self.depths[shard].fetch_add(1, Ordering::SeqCst);
+        let d = self.depths[shard].fetch_add(1, Ordering::SeqCst) + 1;
+        self.hwm[shard].fetch_max(d, Ordering::SeqCst);
         st.queues[shard].push_back(window);
         drop(st);
         self.cv.notify_all();
@@ -123,6 +129,16 @@ impl<W: Pinnable> ShardQueues<W> {
     /// Park → wake transitions shard `shard` has been through.
     pub(crate) fn wake_count(&self, shard: usize) -> usize {
         self.wakes[shard].load(Ordering::Relaxed)
+    }
+
+    /// Deepest shard `shard`'s queue (queued + in-flight) has ever been.
+    pub(crate) fn depth_hwm(&self, shard: usize) -> usize {
+        self.hwm[shard].load(Ordering::SeqCst)
+    }
+
+    /// Per-shard depth high-water marks (diagnostics / timeout dumps).
+    pub(crate) fn hwm_snapshot(&self) -> Vec<usize> {
+        self.hwm.iter().map(|h| h.load(Ordering::SeqCst)).collect()
     }
 
     /// Blocking pop for shard `me`. Resolution order: own queue front →
@@ -172,7 +188,8 @@ impl<W: Pinnable> ShardQueues<W> {
                 };
                 // the window's depth slot moves with it
                 self.depths[j].fetch_sub(1, Ordering::SeqCst);
-                self.depths[me].fetch_add(1, Ordering::SeqCst);
+                let d = self.depths[me].fetch_add(1, Ordering::SeqCst) + 1;
+                self.hwm[me].fetch_max(d, Ordering::SeqCst);
                 if parked {
                     self.wakes[me].fetch_add(1, Ordering::Relaxed);
                 }
@@ -293,6 +310,24 @@ mod tests {
         // an empty or foreign drain takes nothing
         assert_eq!(q.drain_pinned(0, 4), vec![]);
         assert_eq!(q.drain_pinned(1, 4), vec![]);
+    }
+
+    #[test]
+    fn depth_hwm_records_the_deepest_queue_including_steal_transfers() {
+        let q: ShardQueues<u32> = ShardQueues::new(2);
+        q.push(0, 1);
+        q.push(0, 2);
+        q.push(0, 3);
+        assert_eq!(q.depth_hwm(0), 3);
+        assert_eq!(q.hwm_snapshot(), vec![3, 0]);
+        assert_eq!(q.pop(0, false), Popped::Own(1));
+        q.complete(0);
+        // the HWM is sticky: draining does not lower it
+        assert_eq!(q.depth_hwm(0), 3);
+        // a steal transfers the depth slot and can raise the thief's HWM
+        assert_eq!(q.pop(1, true), Popped::Stolen(2, 0));
+        assert_eq!(q.depth_hwm(1), 1);
+        assert_eq!(q.hwm_snapshot(), vec![3, 1]);
     }
 
     #[test]

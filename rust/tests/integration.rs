@@ -99,7 +99,7 @@ fn sharded_serving_composes_with_ewq_plan_offline() {
             (0..12).map(|i| coord.submit(vec![i % v, (3 * i + 1) % v, (7 * i + 2) % v])).collect();
         let toks = rxs
             .into_iter()
-            .map(|rx| rx.recv_timeout(std::time::Duration::from_secs(120)).unwrap().next_token)
+            .map(|rx| coord.recv_or_dump(&rx, std::time::Duration::from_secs(120)).next_token)
             .collect();
         let m = coord.shutdown();
         assert_eq!(m.completed, 12);
