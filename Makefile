@@ -1,6 +1,6 @@
 # Repo-level convenience targets. `make verify` mirrors the tier-1 gate.
 
-.PHONY: verify fmt clippy test test-scalar test-chaos bench bench-smoke bench-compare artifacts
+.PHONY: verify fmt clippy doc test test-scalar test-chaos bench bench-smoke bench-compare artifacts
 
 verify:
 	cd rust && cargo build --release && cargo test -q
@@ -10,6 +10,11 @@ fmt:
 
 clippy:
 	cd rust && cargo clippy --all-targets -- -D warnings
+
+# Rustdoc with lints enforced — broken intra-doc links and malformed doc
+# markup fail the build, same as the CI doc gate.
+doc:
+	cd rust && RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 
 test:
 	cd rust && cargo test -q

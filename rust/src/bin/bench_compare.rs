@@ -50,10 +50,17 @@ const KEYS: [&str; 8] = [
 
 /// Optional tracked metrics (higher is better): compared only when present
 /// in BOTH the current results and the baseline, listed as skipped in the
-/// verdict line otherwise. The overload-sweep goodput lands here because a
-/// missing row (quick mode, older bench binary) is a coverage gap to
-/// surface, not a hard gate failure like a vanished kernel metric.
-const OPTIONAL_KEYS: [&str; 2] = ["overload_goodput_rps_1x", "overload_goodput_rps_2x"];
+/// verdict line otherwise. The overload-sweep goodput and the prefix-share
+/// decode sweep land here because a missing row (quick mode, older bench
+/// binary, a BENCH_decode.json that predates the sweep) is a coverage gap
+/// to surface, not a hard gate failure like a vanished kernel metric.
+const OPTIONAL_KEYS: [&str; 5] = [
+    "overload_goodput_rps_1x",
+    "overload_goodput_rps_2x",
+    "decode_tok_s_prefix_0",
+    "decode_tok_s_prefix_0.5",
+    "decode_tok_s_prefix_0.9",
+];
 
 /// Extract the number following `"key":` in a flat JSON document.
 fn extract_number(json: &str, key: &str) -> Option<f64> {
@@ -385,6 +392,18 @@ mod tests {
         assert!(regressed(0.79, 1.0, 0.20), "past tolerance");
         assert!(!regressed(2.0, 1.0, 0.20), "improvement is fine");
         assert!(!regressed(0.0, 0.0, 0.20), "degenerate baseline never fails");
+    }
+
+    #[test]
+    fn prefix_sweep_keys_do_not_alias() {
+        // "decode_tok_s_prefix_0" must never read "decode_tok_s_prefix_0.5"'s
+        // value: the needle includes both quotes, so the shorter key only
+        // matches its own entry regardless of emission order
+        let doc = r#"{ "decode_tok_s_prefix_0.5": 150.0, "decode_tok_s_prefix_0.9": 200.0,
+            "decode_tok_s_prefix_0": 100.0 }"#;
+        assert_eq!(extract_number(doc, "decode_tok_s_prefix_0"), Some(100.0));
+        assert_eq!(extract_number(doc, "decode_tok_s_prefix_0.5"), Some(150.0));
+        assert_eq!(extract_number(doc, "decode_tok_s_prefix_0.9"), Some(200.0));
     }
 
     #[test]

@@ -208,6 +208,12 @@ pub struct ServeConfig {
     /// jobs retire at the next step boundary, each answered with one
     /// terminal `Status::Expired`. 0 = no deadline.
     pub default_deadline_ms: u64,
+    /// Whether generation admission consults the shard KV cache's
+    /// prefix-hash index (DESIGN.md §14): a hit attaches the sequence to
+    /// already-resident shared-prefix pages copy-free and the first decode
+    /// turn ingests only the unshared suffix. `false` is the equivalence
+    /// oracle that always ingests the full context fresh.
+    pub prefix_cache: bool,
     /// Deterministic fault-injection schedule for the chaos harness
     /// (`serving::faultfx`); never read outside tests / `--features chaos`.
     #[cfg(any(test, feature = "chaos"))]
@@ -233,6 +239,7 @@ impl Default for ServeConfig {
             max_queued_windows: 0,
             max_live_sequences: 0,
             default_deadline_ms: 0,
+            prefix_cache: true,
             #[cfg(any(test, feature = "chaos"))]
             chaos: None,
         }
@@ -259,6 +266,7 @@ impl ServeConfig {
             max_queued_windows: c.get_or("serve", "max_queued_windows", d.max_queued_windows)?,
             max_live_sequences: c.get_or("serve", "max_live_sequences", d.max_live_sequences)?,
             default_deadline_ms: c.get_or("serve", "default_deadline_ms", d.default_deadline_ms)?,
+            prefix_cache: c.get_or("serve", "prefix_cache", d.prefix_cache)?,
             #[cfg(any(test, feature = "chaos"))]
             chaos: None,
         })
@@ -347,6 +355,7 @@ mod tests {
         assert_eq!(s.max_queued_windows, 0, "unbounded admission by default");
         assert_eq!(s.max_live_sequences, 0);
         assert_eq!(s.default_deadline_ms, 0, "no deadline by default");
+        assert!(s.prefix_cache, "prefix caching is on by default");
     }
 
     #[test]
@@ -376,7 +385,7 @@ mod tests {
         let c = Config::parse(
             "[serve]\ndecode_tokens = 6\nkv_precision = 4bit\nkv_budget_mb = 8.5\n\
              max_decode_batch = 16\nmax_queued_windows = 4\nmax_live_sequences = 2\n\
-             default_deadline_ms = 250\n",
+             default_deadline_ms = 250\nprefix_cache = false\n",
         )
         .unwrap();
         let s = ServeConfig::from_config(&c).unwrap();
@@ -387,6 +396,7 @@ mod tests {
         assert_eq!(s.max_queued_windows, 4);
         assert_eq!(s.max_live_sequences, 2);
         assert_eq!(s.default_deadline_ms, 250);
+        assert!(!s.prefix_cache);
         let d = ServeConfig::default();
         assert_eq!(d.decode_tokens, 0, "classic next-token serving by default");
         assert_eq!(d.kv_precision, Precision::Raw);

@@ -9,15 +9,18 @@
 //! ewq serve --model <name> [--requests N --batch B --variant V --workers W
 //!                            --dispatch work_steal|shortest_queue|round_robin
 //!                            --decode-tokens N --kv-precision raw|8bit|4bit
-//!                            --max-decode-batch M --max-queued-windows Q
-//!                            --max-live-seqs L --deadline-ms D]
+//!                            --max-decode-batch M --kv-budget-mb MB
+//!                            --max-queued-windows Q
+//!                            --max-live-seqs L --deadline-ms D
+//!                            --prefix-cache on|off]
 //! ```
 //!
 //! Overload safety (DESIGN.md §13): `--max-queued-windows` bounds the
 //! per-shard queue (excess sheds with a terminal `busy` status),
 //! `--max-live-seqs` caps concurrent decode streams per shard, and
 //! `--deadline-ms` applies a default per-request deadline (`expired` past
-//! it). All three default to 0 = off.
+//! it). All three default to 0 = off. Prefix caching (DESIGN.md §14) is on
+//! by default; `--prefix-cache off` is the always-ingest-fresh oracle.
 
 use anyhow::{bail, Context, Result};
 
@@ -199,9 +202,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
         args.opt("kv-precision", ewq::quant::Precision::Raw)?;
     let max_decode_batch =
         args.opt("max-decode-batch", ewq::config::ServeConfig::default().max_decode_batch)?;
+    let kv_budget_mb = args.opt("kv-budget-mb", ewq::config::ServeConfig::default().kv_budget_mb)?;
     let max_queued_windows = args.opt("max-queued-windows", 0usize)?;
     let max_live_sequences = args.opt("max-live-seqs", 0usize)?;
     let default_deadline_ms = args.opt("deadline-ms", 0u64)?;
+    let prefix_cache = match args.opt("prefix-cache", "on".to_string())?.as_str() {
+        "on" | "true" | "1" => true,
+        "off" | "false" | "0" => false,
+        other => bail!("unknown --prefix-cache value {other} (on|off)"),
+    };
     let n = model.schema.n_blocks;
     let plan = match variant.as_str() {
         "raw" => ewq::ewq::QuantPlan::uniform(&model.schema.name, n, ewq::quant::Precision::Raw),
@@ -223,8 +232,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if decode_tokens > 1 {
         println!(
             "generation mode: {decode_tokens} tokens/request, {} kv cache, \
-             decode batch <= {max_decode_batch}",
-            kv_precision.label()
+             decode batch <= {max_decode_batch}, prefix cache {}",
+            kv_precision.label(),
+            if prefix_cache { "on" } else { "off" },
         );
     }
 
@@ -236,9 +246,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
         decode_tokens,
         kv_precision,
         max_decode_batch,
+        kv_budget_mb,
         max_queued_windows,
         max_live_sequences,
         default_deadline_ms,
+        prefix_cache,
         ..Default::default()
     };
     let coord = Coordinator::start_with_model(model, plan, cfg, 1, 200)?;

@@ -28,6 +28,16 @@
 //! and on the shape-chosen row/column banding (`kernels::gemm_banding`) —
 //! all of which are bit-identical by construction (DESIGN.md §11), so
 //! logits are invariant to path, banding, and worker count alike.
+//!
+//! `DecodeState` carries the sequence's KV cursor across steps, including
+//! the prefix-caching seam (DESIGN.md §14): `DecodeState::attach_prefix`
+//! seats a fresh sequence on already-resident shared-prefix pages (the
+//! cursor starts past them, so the first turns ingest only the unshared
+//! suffix) and `DecodeState::register_prefix` publishes a fully ingested
+//! context for later attaches. Because cached page bytes are a
+//! deterministic function of the token prefix, an attached sequence's
+//! logits are bit-identical to a fresh full ingest — the invariant the
+//! `decode_equivalence` prefix properties pin.
 
 use std::sync::Mutex;
 
@@ -37,7 +47,7 @@ use crate::kernels::{matmul_f32, matmul_qmat, matvec_f32, matvec_qmat, TilePool}
 use crate::model::QuantizedModel;
 use crate::par::Pool;
 use crate::quant::{dequantize, QMat};
-use crate::serving::kvcache::KvCache;
+use crate::serving::kvcache::{KvCache, PrefixAttach};
 use crate::tensor::Tensor;
 use crate::zoo::Schema;
 
@@ -530,11 +540,40 @@ impl DecodeState {
         Ok(())
     }
 
-    /// Free every block's KV pages for this sequence.
+    /// Drop every block's hold on this sequence's KV pages. Pages shared
+    /// with other sequences or pinned by the prefix index stay resident;
+    /// blocks that never got a table (e.g. after a mid-`reserve` failure)
+    /// are skipped, so this is safe on partially-seated sequences.
     pub fn release(&self, cache: &mut KvCache) {
         for blk in 0..self.n_blocks {
-            cache.release(self.key(blk));
+            let _ = cache.release(self.key(blk));
         }
+    }
+
+    /// Seat this *fresh* sequence on the longest cached prefix of `ctx`
+    /// (DESIGN.md §14): every block attaches the same number of context
+    /// tokens from the shard cache's prefix index — full shared pages by
+    /// refcount, the partially-shared page by copy-on-write — and the
+    /// cursor advances past them, so the caller ingests only the unshared
+    /// suffix `ctx[state.pos()..]`. At least the last context token is
+    /// always left to ingest (it produces the first logits). Returns what
+    /// was reused (zero on a cold index); the subsequent `reserve` then
+    /// charges the budget only for the remaining window.
+    pub fn attach_prefix(&mut self, cache: &mut KvCache, ctx: &[i32]) -> PrefixAttach {
+        debug_assert_eq!(self.pos, 0, "attach_prefix requires a fresh sequence");
+        let streams: Vec<u64> = (0..self.n_blocks).map(|b| self.key(b)).collect();
+        let at = cache.attach_prefix(ctx, &streams, ctx.len().saturating_sub(1));
+        self.pos = at.tokens;
+        at
+    }
+
+    /// Publish this sequence's ingested context into the cache's prefix
+    /// index so later same-prefix sequences can `attach_prefix` to it. Call
+    /// after `ctx` has been fully ingested (the index holds its own
+    /// references, so the published pages outlive this sequence).
+    pub fn register_prefix(&self, cache: &mut KvCache, ctx: &[i32]) {
+        let streams: Vec<u64> = (0..self.n_blocks).map(|b| self.key(b)).collect();
+        cache.register_prefix(&ctx[..ctx.len().min(self.pos)], &streams);
     }
 
     /// KV bytes this sequence currently pins in `cache` (all blocks).

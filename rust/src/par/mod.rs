@@ -298,6 +298,21 @@ impl Pool {
 
     /// Run `f(worker_index)` once per worker, concurrently, and wait for all
     /// of them. With one worker, runs inline on the calling thread.
+    ///
+    /// ```
+    /// use std::sync::atomic::{AtomicUsize, Ordering};
+    /// use ewq::par::Pool;
+    ///
+    /// let pool = Pool::new(4);
+    /// let hits = AtomicUsize::new(0);
+    /// // the body may borrow the caller's stack; scope blocks until every
+    /// // worker (including the caller, as worker 0) has finished
+    /// pool.scope(|worker| {
+    ///     assert!(worker < 4);
+    ///     hits.fetch_add(1, Ordering::Relaxed);
+    /// });
+    /// assert_eq!(hits.into_inner(), 4);
+    /// ```
     pub fn scope<F>(&self, f: F)
     where
         F: Fn(usize) + Sync,

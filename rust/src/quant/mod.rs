@@ -507,6 +507,21 @@ impl QMat {
     /// any input. Accepted frames re-encode byte-identically via
     /// `wire_bytes` (codes outside the quantizer's clamp range, e.g. a
     /// `-8` Q4 nibble, are representable and kept as-is).
+    ///
+    /// ```
+    /// use ewq::quant::{quantize, Precision, QMat, QuantError};
+    /// use ewq::tensor::Tensor;
+    ///
+    /// let w = Tensor::new(vec![4, 2], (0..8).map(|i| i as f32 - 3.5).collect());
+    /// let frame = quantize(&w, Precision::Q8).wire_bytes();
+    /// // accepted frames re-encode byte-identically
+    /// assert_eq!(QMat::from_packed_bytes(&frame).unwrap().wire_bytes(), frame);
+    /// // a truncated frame fails as typed data, never as a panic
+    /// assert_eq!(
+    ///     QMat::from_packed_bytes(&frame[..frame.len() - 1]),
+    ///     Err(QuantError::Truncated { needed: frame.len(), got: frame.len() - 1 }),
+    /// );
+    /// ```
     pub fn from_packed_bytes(data: &[u8]) -> std::result::Result<QMat, QuantError> {
         if data.len() < WIRE_HEADER {
             return Err(QuantError::Truncated { needed: WIRE_HEADER, got: data.len() });

@@ -11,6 +11,31 @@
 //! **allocation-free steady state**: `read_into` writes into a caller
 //! buffer, and a sequence whose pages were `reserve`d up front never
 //! allocates inside `append`.
+//!
+//! **Prefix caching** (DESIGN.md §14): every page carries a refcount, and a
+//! prefix-hash index maps the token prefix covered by each full page chain
+//! (hashed together with the cache's `KvGeometry` × `Precision`, so a key
+//! can never cross cache configurations) to the resident pages holding its
+//! K/V. [`KvCache::register_prefix`] publishes an ingested context's chains
+//! into the index — the index itself holds a reference on each page, so a
+//! prefix outlives its donor sequence; [`KvCache::attach_prefix`] seats a
+//! *fresh* sequence on the longest indexed prefix of its context copy-free
+//! (refcount bumps on the shared full pages, copy-on-write only at the
+//! first partially-shared page), leaving just the unshared suffix to
+//! ingest. Invariants the property suite holds:
+//!
+//! - a page frees (returns to the free list, refunds `allocated_bytes`)
+//!   exactly when its refcount hits zero — never before, never twice;
+//! - `release` of an unknown (or already-released) sequence is rejected
+//!   with a typed [`KvError::UnknownSequence`], so double-release is a
+//!   caller bug surfaced as data, not silent books corruption;
+//! - shared full pages are immutable to attachers: an attached sequence's
+//!   write cursor starts past them, and the partially-shared page is
+//!   copied before the first divergent append — so a cache hit can never
+//!   move a bit of any other sequence's history;
+//! - budget pressure evicts index-held prefixes oldest-first before a
+//!   `reserve`/`append` is refused, so a cached prefix can never starve
+//!   live admission.
 
 use crate::quant::Precision;
 
@@ -80,6 +105,10 @@ struct Page {
     data: Vec<u8>,
     prec: Precision,
     used_tokens: usize,
+    /// Holders of this page: one per sequence page-table entry plus one per
+    /// prefix-index entry referencing it. The page frees exactly when this
+    /// hits zero.
+    refs: usize,
 }
 
 /// One sequence's page table: the pages in token order (possibly reserved
@@ -88,6 +117,39 @@ struct Page {
 struct SeqTable {
     pages: Vec<usize>,
     tokens: usize,
+}
+
+/// One published prefix: the exact token prefix it covers (kept in full so
+/// a hash collision can never attach the wrong pages), the per-stream
+/// full-page chains holding its K/V, and the donor's *next* page past the
+/// aligned prefix — the partially-shared page attachers copy-on-write
+/// instead of sharing, so a hit can extend past the last full page
+/// boundary (up to the attach limit) without aliasing writable slots.
+#[derive(Clone, Debug)]
+struct PrefixEntry {
+    tokens: Vec<i32>,
+    /// `chains[stream][page]` — one refcounted chain per stream (serving
+    /// registers one stream per transformer block), all the same length.
+    chains: Vec<Vec<usize>>,
+    /// Copy-on-write source: per-stream page ids of the donor's page right
+    /// after the aligned prefix, plus the tokens it held at registration
+    /// (`1..=page_tokens` of them). The entry holds a reference on these
+    /// pages too.
+    ext: Option<(Vec<usize>, Vec<i32>)>,
+}
+
+/// What [`KvCache::attach_prefix`] reused for a fresh sequence: how many
+/// context tokens were seated from the index, how many resident bytes were
+/// shared copy-free (refcount bumps only), and how many were copied for
+/// the partially-shared tail page(s).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PrefixAttach {
+    /// Context tokens the fresh sequence starts with (0 = miss).
+    pub tokens: usize,
+    /// Bytes of already-resident pages shared without copying.
+    pub shared_bytes: usize,
+    /// Bytes newly allocated and copied for the partially-shared page.
+    pub copied_bytes: usize,
 }
 
 /// Page-granular KV cache for many concurrent sequences.
@@ -103,6 +165,12 @@ pub struct KvCache {
     /// sequence id -> page table
     tables: std::collections::BTreeMap<u64, SeqTable>,
     prec: Precision,
+    /// prefix hash (geometry × precision × stream count × token prefix)
+    /// -> resident page chains covering that prefix
+    index: std::collections::HashMap<u64, PrefixEntry>,
+    /// Registration order of `index` keys — budget pressure evicts
+    /// oldest-first.
+    index_order: std::collections::VecDeque<u64>,
 }
 
 impl KvCache {
@@ -124,6 +192,8 @@ impl KvCache {
             free_list: Vec::new(),
             tables: std::collections::BTreeMap::new(),
             prec,
+            index: std::collections::HashMap::new(),
+            index_order: std::collections::VecDeque::new(),
         }
     }
 
@@ -153,23 +223,69 @@ impl KvCache {
         self.tables.get(&seq).map(|t| t.tokens).unwrap_or(0)
     }
 
+    /// Make room for `extra` more bytes, evicting index-held prefixes
+    /// (oldest first) under pressure. Fails — without allocating — when the
+    /// budget cannot fit `extra` even with an empty prefix index.
+    fn ensure_budget(&mut self, extra: usize) -> Result<(), KvError> {
+        while self.allocated_bytes + extra > self.budget_bytes {
+            if !self.evict_oldest_prefix() {
+                return Err(KvError::BudgetExhausted {
+                    needed: extra,
+                    allocated: self.allocated_bytes,
+                    budget: self.budget_bytes,
+                });
+            }
+        }
+        Ok(())
+    }
+
+    /// Drop the oldest prefix-index entry, freeing any of its pages whose
+    /// last holder it was. Returns false when the index is empty.
+    fn evict_oldest_prefix(&mut self) -> bool {
+        while let Some(h) = self.index_order.pop_front() {
+            if let Some(e) = self.index.remove(&h) {
+                for chain in &e.chains {
+                    for &pid in chain {
+                        self.unref_page(pid);
+                    }
+                }
+                if let Some((pids, _)) = &e.ext {
+                    for &pid in pids {
+                        self.unref_page(pid);
+                    }
+                }
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Drop one holder of `pid`; free the page (refund the budget, park it
+    /// on the free list) when that was the last one.
+    fn unref_page(&mut self, pid: usize) {
+        let page = self.pages[pid].as_mut().expect("unref of a freed page");
+        debug_assert!(page.refs > 0, "page {pid} refcount underflow");
+        page.refs -= 1;
+        if page.refs == 0 {
+            let prec = page.prec;
+            self.pages[pid] = None;
+            self.allocated_bytes -= self.geom.page_bytes(prec);
+            self.free_list.push(pid);
+        }
+    }
+
     fn alloc_page(&mut self) -> Result<usize, KvError> {
         let bytes = self.geom.page_bytes(self.prec);
-        if self.allocated_bytes + bytes > self.budget_bytes {
-            return Err(KvError::BudgetExhausted {
-                needed: bytes,
-                allocated: self.allocated_bytes,
-                budget: self.budget_bytes,
-            });
-        }
+        self.ensure_budget(bytes)?;
         if let Some(id) = self.free_list.pop() {
             self.pages[id] =
-                Some(Page { data: vec![0; bytes], prec: self.prec, used_tokens: 0 });
+                Some(Page { data: vec![0; bytes], prec: self.prec, used_tokens: 0, refs: 1 });
             self.allocated_bytes += bytes;
             self.peak_bytes = self.peak_bytes.max(self.allocated_bytes);
             return Ok(id);
         }
-        self.pages.push(Some(Page { data: vec![0; bytes], prec: self.prec, used_tokens: 0 }));
+        self.pages
+            .push(Some(Page { data: vec![0; bytes], prec: self.prec, used_tokens: 0, refs: 1 }));
         self.allocated_bytes += bytes;
         self.peak_bytes = self.peak_bytes.max(self.allocated_bytes);
         Ok(self.pages.len() - 1)
@@ -179,20 +295,40 @@ impl KvCache {
     /// subsequent `append`s are allocation-free (the decode hot path
     /// reserves a sequence's window up front and then never touches the
     /// allocator mid-generation). Fails — without allocating anything —
-    /// when the reservation would exceed the budget.
+    /// when the reservation would exceed the budget even after evicting
+    /// cached prefixes.
+    ///
+    /// ```
+    /// use ewq::quant::Precision;
+    /// use ewq::serving::kvcache::{KvCache, KvGeometry};
+    ///
+    /// let geom = KvGeometry { page_tokens: 4, n_heads: 2, head_dim: 8 };
+    /// let mut cache = KvCache::new(geom, 1 << 20, Precision::Raw);
+    ///
+    /// // reserve a 6-token window for sequence 7 (2 pages of 4 slots) ...
+    /// cache.reserve(7, 6).unwrap();
+    /// let reserved = cache.allocated_bytes();
+    ///
+    /// // ... so appends fill the reserved pages without allocating,
+    /// let kv: Vec<f32> = (0..geom.floats_per_token()).map(|i| i as f32).collect();
+    /// cache.append(7, &kv).unwrap();
+    /// assert_eq!(cache.allocated_bytes(), reserved);
+    ///
+    /// // and the history reads back exactly (raw pages are lossless).
+    /// let mut out = vec![0.0f32; geom.floats_per_token()];
+    /// cache.read_into(7, 0, &mut out).unwrap();
+    /// assert_eq!(out, kv);
+    ///
+    /// cache.release(7).unwrap();
+    /// assert_eq!(cache.allocated_bytes(), 0);
+    /// ```
     pub fn reserve(&mut self, seq: u64, tokens: usize) -> Result<(), KvError> {
         let have = self.tables.get(&seq).map(|t| t.pages.len()).unwrap_or(0);
         let need = tokens.div_ceil(self.geom.page_tokens);
         if need > have {
             let extra = need - have;
             let bytes = self.geom.page_bytes(self.prec);
-            if self.allocated_bytes + extra * bytes > self.budget_bytes {
-                return Err(KvError::BudgetExhausted {
-                    needed: extra * bytes,
-                    allocated: self.allocated_bytes,
-                    budget: self.budget_bytes,
-                });
-            }
+            self.ensure_budget(extra * bytes)?;
             for _ in 0..extra {
                 let pid = self.alloc_page()?;
                 self.tables.entry(seq).or_default().pages.push(pid);
@@ -258,21 +394,281 @@ impl KvCache {
         Ok(out)
     }
 
-    /// Free all pages of a sequence.
-    pub fn release(&mut self, seq: u64) {
-        if let Some(table) = self.tables.remove(&seq) {
-            for pid in table.pages {
-                if let Some(p) = self.pages[pid].take() {
-                    self.allocated_bytes -= self.geom.page_bytes(p.prec);
-                    self.free_list.push(pid);
-                }
-            }
+    /// Retire a sequence: drop its hold on every page of its table. Pages
+    /// free only when this was their last holder — pages shared with other
+    /// sequences or pinned by the prefix index stay resident. Releasing an
+    /// unknown (or already-released) sequence is rejected as
+    /// [`KvError::UnknownSequence`]: double-release is a caller bug and
+    /// must never unbalance the page books.
+    pub fn release(&mut self, seq: u64) -> Result<(), KvError> {
+        let table = self.tables.remove(&seq).ok_or(KvError::UnknownSequence(seq))?;
+        for pid in table.pages {
+            self.unref_page(pid);
         }
+        Ok(())
     }
 
     /// Bytes one full sequence of `tokens` costs at this precision.
     pub fn sequence_bytes(&self, tokens: usize) -> usize {
         tokens.div_ceil(self.geom.page_tokens) * self.geom.page_bytes(self.prec)
+    }
+
+    /// Prefix-index key for `ctx` under this cache's configuration: FNV-1a
+    /// over the geometry, the page precision, the stream count, and the
+    /// tokens themselves — so a key can never match across caches with a
+    /// different `KvGeometry` × `Precision`, and single-stream callers can
+    /// never collide with multi-stream (per-block) registrations.
+    fn prefix_hash(&self, ctx: &[i32], n_streams: usize) -> u64 {
+        fn eat(h: &mut u64, bytes: &[u8]) {
+            for &b in bytes {
+                *h ^= b as u64;
+                *h = h.wrapping_mul(0x100_0000_01b3);
+            }
+        }
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        eat(&mut h, &(self.geom.page_tokens as u64).to_le_bytes());
+        eat(&mut h, &(self.geom.n_heads as u64).to_le_bytes());
+        eat(&mut h, &(self.geom.head_dim as u64).to_le_bytes());
+        eat(&mut h, self.prec.label().as_bytes());
+        eat(&mut h, &(n_streams as u64).to_le_bytes());
+        for &t in ctx {
+            eat(&mut h, &t.to_le_bytes());
+        }
+        h
+    }
+
+    /// Publish the ingested context `ctx` of a donor into the prefix index:
+    /// one entry per full-page-aligned prefix length, each holding its own
+    /// reference on the per-stream page chains (so the prefix outlives the
+    /// donor), plus a copy-on-write pointer to the first partial page on
+    /// the longest entry. `streams` are the donor's cache streams (serving
+    /// passes one per transformer block); all must have ingested at least
+    /// `ctx.len()` tokens. Idempotent: already-indexed prefixes are left
+    /// untouched.
+    pub fn register_prefix(&mut self, ctx: &[i32], streams: &[u64]) {
+        let pt = self.geom.page_tokens;
+        let k_max = ctx.len() / pt;
+        if k_max == 0 || streams.is_empty() {
+            return;
+        }
+        for s in streams {
+            match self.tables.get(s) {
+                Some(t) if t.tokens >= ctx.len() => {}
+                _ => return, // donor hasn't ingested this context: nothing to publish
+            }
+        }
+        for k in 1..=k_max {
+            let h = self.prefix_hash(&ctx[..k * pt], streams.len());
+            if self.index.contains_key(&h) {
+                continue; // first registration wins
+            }
+            let chains: Vec<Vec<usize>> =
+                streams.iter().map(|s| self.tables[s].pages[..k].to_vec()).collect();
+            for chain in &chains {
+                for &pid in chain {
+                    self.pages[pid].as_mut().unwrap().refs += 1;
+                }
+            }
+            let ext = if ctx.len() > k * pt {
+                let pids: Vec<usize> = streams.iter().map(|s| self.tables[s].pages[k]).collect();
+                for &pid in &pids {
+                    self.pages[pid].as_mut().unwrap().refs += 1;
+                }
+                Some((pids, ctx[k * pt..ctx.len().min((k + 1) * pt)].to_vec()))
+            } else {
+                None
+            };
+            self.index.insert(h, PrefixEntry { tokens: ctx[..k * pt].to_vec(), chains, ext });
+            self.index_order.push_back(h);
+        }
+    }
+
+    /// Context tokens [`KvCache::attach_prefix`] would reuse for `ctx`
+    /// (capped at `limit`), without mutating anything.
+    pub fn lookup_prefix(&self, ctx: &[i32], n_streams: usize, limit: usize) -> usize {
+        match self.find_prefix(ctx, n_streams, limit) {
+            Some((_, k, r)) => k * self.geom.page_tokens + r,
+            None => 0,
+        }
+    }
+
+    /// Longest indexed match for `ctx`: `(hash, full pages, CoW tail
+    /// tokens)` with `k*page_tokens + r <= limit`.
+    fn find_prefix(
+        &self,
+        ctx: &[i32],
+        n_streams: usize,
+        limit: usize,
+    ) -> Option<(u64, usize, usize)> {
+        let pt = self.geom.page_tokens;
+        let limit = limit.min(ctx.len());
+        for k in (1..=limit / pt).rev() {
+            let h = self.prefix_hash(&ctx[..k * pt], n_streams);
+            if let Some(e) = self.index.get(&h) {
+                if e.chains.len() == n_streams && e.tokens == ctx[..k * pt] {
+                    let mut r = 0;
+                    if let Some((_, ext_toks)) = &e.ext {
+                        let avail = &ctx[k * pt..limit];
+                        r = ext_toks.iter().zip(avail).take_while(|(a, b)| a == b).count();
+                    }
+                    return Some((h, k, r));
+                }
+            }
+        }
+        None
+    }
+
+    /// Seat the *fresh* sequences `streams` on the longest indexed prefix
+    /// of `ctx` (at most `limit` tokens — callers pass `ctx.len()-1` so at
+    /// least one context token is always left to ingest, which is what
+    /// produces the first logits). Shared full pages are attached by
+    /// refcount bump only; the first partially-shared page is copied
+    /// (copy-on-write) so the new sequence's appends can never touch
+    /// another holder's bytes. Degrades instead of failing: a budget miss
+    /// on the CoW copy falls back to the aligned prefix, and a cold index
+    /// returns a zero [`PrefixAttach`].
+    pub fn attach_prefix(&mut self, ctx: &[i32], streams: &[u64], limit: usize) -> PrefixAttach {
+        let out = PrefixAttach::default();
+        if streams.is_empty() || streams.iter().any(|s| self.tables.contains_key(s)) {
+            return out;
+        }
+        let Some((h, k, mut r)) = self.find_prefix(ctx, streams.len(), limit) else {
+            return out;
+        };
+        let pt = self.geom.page_tokens;
+        let page_bytes = self.geom.page_bytes(self.prec);
+        let e = &self.index[&h];
+        let chains = e.chains.clone();
+        let ext_pids = e.ext.as_ref().map(|(pids, _)| pids.clone());
+        // the new holders' references on the shared full-page chains
+        for chain in &chains {
+            for &pid in chain {
+                self.pages[pid].as_mut().unwrap().refs += 1;
+            }
+        }
+        // copy-on-write tail: guard the source pages (CoW allocation may
+        // evict the very entry that owns them), allocate one private page
+        // per stream, copy, and fall back to the aligned prefix if the
+        // budget refuses
+        let mut cow_pages: Vec<usize> = Vec::new();
+        if r > 0 {
+            let srcs = ext_pids.as_ref().expect("find_prefix returned a tail without ext pages");
+            for &pid in srcs {
+                self.pages[pid].as_mut().unwrap().refs += 1;
+            }
+            for _ in 0..streams.len() {
+                match self.alloc_page() {
+                    Ok(pid) => cow_pages.push(pid),
+                    Err(_) => break,
+                }
+            }
+            if cow_pages.len() == streams.len() {
+                for (i, &src) in srcs.iter().enumerate() {
+                    let data = self.pages[src].as_ref().unwrap().data.clone();
+                    let dst = self.pages[cow_pages[i]].as_mut().unwrap();
+                    dst.data.copy_from_slice(&data);
+                    dst.used_tokens = r;
+                }
+            } else {
+                for &pid in &cow_pages {
+                    self.unref_page(pid);
+                }
+                cow_pages.clear();
+                r = 0;
+            }
+            for &pid in srcs {
+                self.unref_page(pid); // drop the guards
+            }
+        }
+        let tokens = k * pt + r;
+        for (i, &s) in streams.iter().enumerate() {
+            let mut pages = chains[i].clone();
+            if r > 0 {
+                pages.push(cow_pages[i]);
+            }
+            self.tables.insert(s, SeqTable { pages, tokens });
+        }
+        PrefixAttach {
+            tokens,
+            shared_bytes: streams.len() * k * page_bytes,
+            copied_bytes: if r > 0 { streams.len() * page_bytes } else { 0 },
+        }
+    }
+
+    /// Number of live prefix-index entries (one per registered aligned
+    /// prefix length).
+    pub fn prefix_entries(&self) -> usize {
+        self.index.len()
+    }
+
+    /// Drop every prefix-index entry, freeing pages whose last holder was
+    /// the index. Live sequences are unaffected.
+    pub fn clear_prefix_index(&mut self) {
+        while self.evict_oldest_prefix() {}
+    }
+
+    /// Verify the page books: every live page's refcount equals its holder
+    /// count (sequence tables + index entries), `allocated_bytes` is
+    /// exactly the live pages' bytes, and every page is live xor free.
+    /// Cheap enough to run at shard exit; the property suites call it
+    /// after every interleaving step.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let mut holds = vec![0usize; self.pages.len()];
+        for t in self.tables.values() {
+            for &pid in &t.pages {
+                holds[pid] += 1;
+            }
+        }
+        for e in self.index.values() {
+            for chain in &e.chains {
+                for &pid in chain {
+                    holds[pid] += 1;
+                }
+            }
+            if let Some((pids, _)) = &e.ext {
+                for &pid in pids {
+                    holds[pid] += 1;
+                }
+            }
+        }
+        let mut live_bytes = 0usize;
+        let mut live = 0usize;
+        for (pid, p) in self.pages.iter().enumerate() {
+            match p {
+                Some(p) => {
+                    live += 1;
+                    live_bytes += self.geom.page_bytes(p.prec);
+                    if p.refs == 0 {
+                        return Err(format!("page {pid}: live with zero refs"));
+                    }
+                    if p.refs != holds[pid] {
+                        return Err(format!(
+                            "page {pid}: refs {} != holders {}",
+                            p.refs, holds[pid]
+                        ));
+                    }
+                }
+                None => {
+                    if holds[pid] != 0 {
+                        return Err(format!("page {pid}: freed but {} holders", holds[pid]));
+                    }
+                }
+            }
+        }
+        if live_bytes != self.allocated_bytes {
+            return Err(format!(
+                "allocated_bytes {} != live page bytes {live_bytes}",
+                self.allocated_bytes
+            ));
+        }
+        if self.pages.len() != live + self.free_list.len() {
+            return Err(format!(
+                "page live-xor-free violated: {} pages, {live} live, {} free",
+                self.pages.len(),
+                self.free_list.len()
+            ));
+        }
+        Ok(())
     }
 }
 
@@ -400,7 +796,7 @@ mod tests {
         }
         assert_eq!(c.allocated_bytes(), 3 * g.page_bytes(Precision::Q8));
         assert_eq!(c.live_sequences(), 1);
-        c.release(3);
+        c.release(3).unwrap();
         assert_eq!(c.allocated_bytes(), 0);
         assert_eq!(c.peak_bytes(), 3 * g.page_bytes(Precision::Q8), "peak survives release");
         assert_eq!(c.live_sequences(), 0);
@@ -417,7 +813,7 @@ mod tests {
             c.append(1, &kv).unwrap(); // fills 2 pages exactly
         }
         assert!(c.append(1, &kv).is_err(), "third page must exceed budget");
-        c.release(1);
+        c.release(1).unwrap();
         for _ in 0..8 {
             c.append(2, &kv).unwrap(); // reuses the freed pages
         }
@@ -499,7 +895,7 @@ mod tests {
             }
         }
         let before = c.allocated_bytes();
-        c.release(2); // evict the middle sequence mid-stream
+        c.release(2).unwrap(); // evict the middle sequence mid-stream
         assert_eq!(c.live_sequences(), 2);
         assert!(c.allocated_bytes() < before);
         assert!(c.read(2, 0).is_err(), "evicted sequence is gone");
@@ -533,7 +929,7 @@ mod tests {
             assert!(back.iter().all(|v| (v - 0.25).abs() < 0.01), "tok {t} readable after error");
         }
         // releasing recovers capacity for the next sequence
-        c.release(1);
+        c.release(1).unwrap();
         for _ in 0..4 {
             c.append(2, &kv).unwrap();
         }
@@ -593,7 +989,7 @@ mod tests {
             c.reserve(s, window).unwrap();
             check_books(&c);
             if s >= cohort {
-                c.release(s - cohort);
+                c.release(s - cohort).unwrap();
                 check_books(&c);
             }
             // every live sequence appends one token — allocation-free into
@@ -614,7 +1010,7 @@ mod tests {
         assert_eq!(c.live_sequences(), cohort as usize);
         assert_eq!(c.sequence_bytes(window), pages_per_seq * g.page_bytes(Precision::Q8));
         for s in 8..12u64 {
-            c.release(s);
+            c.release(s).unwrap();
             check_books(&c);
         }
         assert_eq!(c.allocated_bytes(), 0, "full retirement returns every byte");
@@ -667,8 +1063,8 @@ mod tests {
         }
         assert_eq!(c.allocated_bytes(), before, "appends fill the reserved pages");
         check_books(&c);
-        c.release(0);
-        c.release(1);
+        c.release(0).unwrap();
+        c.release(1).unwrap();
         check_books(&c);
         assert_eq!(c.allocated_bytes(), 0, "full retirement returns every byte");
     }
@@ -738,6 +1134,231 @@ mod tests {
                             return Err(format!("late mismatch seq {s} tok {t}"));
                         }
                     }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    // ---- prefix caching: refcounted pages + prefix-hash index ----
+
+    fn tok(g: &KvGeometry, s: u64, t: usize) -> Vec<f32> {
+        (0..g.floats_per_token())
+            .map(|i| (s as f32) * 100.0 + t as f32 + i as f32 * 0.01)
+            .collect()
+    }
+
+    /// Ingest `ctx` as donor sequence `seq` and publish it into the index.
+    fn ingest_and_register(c: &mut KvCache, seq: u64, ctx: &[i32]) {
+        let g = c.geometry();
+        for (t, _) in ctx.iter().enumerate() {
+            c.append(seq, &tok(&g, seq, t)).unwrap();
+        }
+        c.register_prefix(ctx, &[seq]);
+    }
+
+    #[test]
+    fn double_release_is_rejected() {
+        let g = geom();
+        let mut c = KvCache::new(g, 1 << 20, Precision::Raw);
+        c.reserve(1, 4).unwrap();
+        c.release(1).unwrap();
+        assert_eq!(c.release(1), Err(KvError::UnknownSequence(1)), "double release is typed");
+        assert_eq!(c.release(99), Err(KvError::UnknownSequence(99)), "unknown seq is typed");
+        assert_eq!(c.allocated_bytes(), 0);
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn attach_shares_pages_copy_free_and_frees_only_at_last_holder() {
+        let g = geom(); // 4-token pages
+        let mut c = KvCache::new(g, 1 << 20, Precision::Raw);
+        let ctx: Vec<i32> = (0..8).collect(); // exactly 2 full pages
+        ingest_and_register(&mut c, 1, &ctx);
+        let donor_bytes = c.allocated_bytes();
+        c.check_invariants().unwrap();
+        assert_eq!(c.prefix_entries(), 2, "one entry per aligned prefix length");
+
+        // a fresh sequence with the same context attaches 7 of 8 tokens
+        // (the last context token is always left to ingest) without
+        // allocating a single new full page — only the CoW copy of the
+        // partially-shared page
+        let at = c.attach_prefix(&ctx, &[2], ctx.len() - 1);
+        assert_eq!(at.tokens, 7, "1 full shared page + 3 CoW tokens");
+        assert_eq!(at.shared_bytes, g.page_bytes(Precision::Raw));
+        assert_eq!(at.copied_bytes, g.page_bytes(Precision::Raw));
+        assert_eq!(
+            c.allocated_bytes(),
+            donor_bytes + g.page_bytes(Precision::Raw),
+            "attach allocates only the copy-on-write page"
+        );
+        c.check_invariants().unwrap();
+
+        // the attached history reads back bit-identically to the donor's
+        for t in 0..7 {
+            assert_eq!(c.read(2, t).unwrap(), c.read(1, t).unwrap(), "tok {t}");
+        }
+
+        // the attacher's appends diverge without touching the donor
+        c.append(2, &tok(&g, 2, 7)).unwrap();
+        assert_eq!(c.read(1, 7).unwrap(), tok(&g, 1, 7), "donor tok 7 untouched");
+        assert_eq!(c.read(2, 7).unwrap(), tok(&g, 2, 7));
+        c.check_invariants().unwrap();
+
+        // donor retires: every donor page stays resident (attacher + index
+        // still hold them) — nothing frees before its last holder retires
+        let before = c.allocated_bytes();
+        c.release(1).unwrap();
+        c.check_invariants().unwrap();
+        assert!(c.read(2, 0).is_ok(), "attacher survives donor retirement");
+        assert_eq!(c.allocated_bytes(), before, "index + attacher pin the donor's pages");
+
+        // attacher retires: the index still pins the prefix
+        c.release(2).unwrap();
+        c.check_invariants().unwrap();
+        assert!(c.allocated_bytes() > 0, "index keeps the prefix resident");
+
+        // dropping the index returns every byte and parks every page
+        c.clear_prefix_index();
+        c.check_invariants().unwrap();
+        assert_eq!(c.allocated_bytes(), 0, "last holder frees the pages");
+        assert_eq!(c.pages.len(), c.free_list.len());
+
+        // and the freed pages recycle into the next sequence
+        c.reserve(3, 8).unwrap();
+        assert_eq!(c.pages.len(), c.free_list.len() + 2, "recycled, not grown");
+        c.release(3).unwrap();
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn attach_hits_longest_indexed_prefix_and_verifies_tokens() {
+        let g = geom();
+        let mut c = KvCache::new(g, 1 << 20, Precision::Q8);
+        let ctx: Vec<i32> = (0..12).collect(); // 3 full pages
+        ingest_and_register(&mut c, 1, &ctx);
+
+        // same first page, diverging mid-second-page: share page 1, CoW the
+        // still-matching first token of page 2
+        let mut fork = ctx.clone();
+        fork[5] = 99;
+        let at = c.attach_prefix(&fork, &[2], fork.len() - 1);
+        assert_eq!(at.tokens, g.page_tokens + 1, "divergence caps the match mid-page");
+        c.release(2).unwrap();
+
+        // full match attaches 2 pages + CoW tail capped at len-1
+        let at = c.attach_prefix(&ctx, &[3], ctx.len() - 1);
+        assert_eq!(at.tokens, 11);
+        c.release(3).unwrap();
+
+        // a shorter context reuses the longest prefix that fits its limit
+        let short = &ctx[..6];
+        let at = c.attach_prefix(short, &[4], short.len() - 1);
+        assert_eq!(at.tokens, 5, "1 full page + 1 CoW token under the 5-token limit");
+        c.release(4).unwrap();
+
+        // completely different tokens: miss
+        let other: Vec<i32> = (100..112).collect();
+        assert_eq!(c.attach_prefix(&other, &[5], other.len() - 1), PrefixAttach::default());
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn budget_pressure_evicts_cached_prefixes_before_refusing_admission() {
+        let g = geom();
+        let one_page = g.page_bytes(Precision::Raw);
+        let mut c = KvCache::new(g, 4 * one_page, Precision::Raw);
+        let ctx: Vec<i32> = (0..8).collect();
+        ingest_and_register(&mut c, 1, &ctx); // 2 pages, index-pinned
+        c.release(1).unwrap();
+        assert_eq!(c.allocated_bytes(), 2 * one_page, "index keeps the prefix warm");
+
+        // a 4-page reservation only fits if the cached prefix is evicted
+        c.reserve(2, 16).unwrap();
+        assert_eq!(c.allocated_bytes(), 4 * one_page);
+        assert_eq!(c.prefix_entries(), 0, "eviction emptied the index");
+        c.check_invariants().unwrap();
+
+        // with the budget truly full, admission fails typed — and without
+        // having allocated anything
+        let err = c.reserve(3, 4).unwrap_err();
+        assert!(matches!(err, KvError::BudgetExhausted { .. }));
+        assert_eq!(c.live_sequences(), 1);
+        c.release(2).unwrap();
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn property_interleaved_attach_retire_keeps_books_exact() {
+        // interleaved donors/attachers over shared chains: after every
+        // operation the refcount books must balance exactly, attached
+        // histories must read back bit-identical to a donor's, and full
+        // retirement plus index clearing must return every byte
+        check(
+            11,
+            20,
+            6,
+            |gen| {
+                let n_ctx = gen.usize_in(1, 3); // distinct shared prefixes
+                let ops = gen.usize_in(4, 24);
+                let seed = gen.usize_in(0, 1 << 30) as u64;
+                (n_ctx, ops, seed)
+            },
+            |&(n_ctx, ops, seed)| {
+                let g = geom();
+                let mut c = KvCache::new(g, 1 << 22, Precision::Raw);
+                let mut rng = Xoshiro256pp::new(seed);
+                let mut next_seq = 0u64;
+                // live: (seq, ctx_id, tokens_valid)
+                let mut live: Vec<(u64, usize, usize)> = Vec::new();
+                let ctxs: Vec<Vec<i32>> = (0..n_ctx)
+                    .map(|i| (0..10).map(|t| (i * 50 + t) as i32).collect())
+                    .collect();
+                let expect = |ctx_id: usize, t: usize| tok(&g, ctx_id as u64 * 1000, t);
+                for _ in 0..ops {
+                    let op = rng.next_u64() % 3;
+                    if op < 2 || live.is_empty() {
+                        // admit: attach what the index has, ingest the rest
+                        let ctx_id = (rng.next_u64() % n_ctx as u64) as usize;
+                        let ctx = &ctxs[ctx_id];
+                        let seq = next_seq;
+                        next_seq += 1;
+                        let at = c.attach_prefix(ctx, &[seq], ctx.len() - 1);
+                        c.check_invariants()?;
+                        for t in at.tokens..ctx.len() {
+                            c.append(seq, &expect(ctx_id, t)).map_err(|e| e.to_string())?;
+                        }
+                        c.register_prefix(ctx, &[seq]);
+                        c.check_invariants()?;
+                        live.push((seq, ctx_id, ctx.len()));
+                    } else {
+                        // retire a random live sequence; double release must
+                        // stay rejected and books must stay balanced
+                        let i = (rng.next_u64() % live.len() as u64) as usize;
+                        let (seq, _, _) = live.swap_remove(i);
+                        c.release(seq).map_err(|e| e.to_string())?;
+                        if c.release(seq) != Err(KvError::UnknownSequence(seq)) {
+                            return Err("double release not rejected".into());
+                        }
+                        c.check_invariants()?;
+                    }
+                    // every live history stays bit-identical to fresh writes
+                    for &(seq, ctx_id, tokens) in &live {
+                        for t in 0..tokens {
+                            if c.read(seq, t).map_err(|e| e.to_string())? != expect(ctx_id, t) {
+                                return Err(format!("seq {seq} tok {t} corrupted"));
+                            }
+                        }
+                    }
+                }
+                for (seq, _, _) in live {
+                    c.release(seq).map_err(|e| e.to_string())?;
+                }
+                c.check_invariants()?;
+                c.clear_prefix_index();
+                c.check_invariants()?;
+                if c.allocated_bytes() != 0 {
+                    return Err(format!("{} bytes leaked", c.allocated_bytes()));
                 }
                 Ok(())
             },

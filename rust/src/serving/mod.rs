@@ -70,6 +70,22 @@
 //! seeded schedules to prove the exactly-one-terminal-status property under
 //! fire (`tests/chaos.rs`, `make test-chaos`).
 //!
+//! **Prefix caching** (DESIGN.md §14): with `--prefix-cache on` (the
+//! default), generation admission consults the shard cache's prefix-hash
+//! index before charging the KV budget. A hit attaches the new sequence to
+//! already-resident shared-prefix pages copy-free — pages are refcounted
+//! and free only when the last holder retires — with copy-on-write at the
+//! first partially-shared page; the first decode turn then ingests only the
+//! unshared suffix, and publishes the full context back into the index.
+//! Because encoded page bytes are a deterministic function of the token
+//! prefix, a hit never moves a logit bit versus fresh ingest
+//! (`decode_equivalence` proves on == off across precisions, worker counts,
+//! dispatch policies, and `max_decode_batch`); `--prefix-cache off` is the
+//! always-ingest oracle. Hits surface as `ServingMetrics::prefix_hits` /
+//! `prefix_tokens_reused` / `kv_shared_bytes`, and every shard audits its
+//! refcount books at exit (`KvCache::check_invariants`), reporting
+//! violations via `kv_leaked_seqs`.
+//!
 //! Cross-machine block placement (from `cluster::Distribution`) is simulated:
 //! each batch is charged `hops × link_latency` of virtual network time,
 //! reported separately from wall-clock latency.
@@ -313,6 +329,20 @@ pub struct ServingMetrics {
     pub decode_batch_rows: usize,
     /// Peak KV-cache residency per shard, summed across shards.
     pub kv_bytes: usize,
+    /// Generation admissions that attached to already-resident
+    /// shared-prefix KV pages via the prefix index (DESIGN.md §14).
+    pub prefix_hits: usize,
+    /// Context tokens those hits seated without re-ingesting (each one is
+    /// a decode step the shard never executed).
+    pub prefix_tokens_reused: usize,
+    /// Already-resident KV page bytes attached copy-free (refcount bumps
+    /// only — excludes the copied partially-shared pages).
+    pub kv_shared_bytes: usize,
+    /// Sequences still holding KV pages when a shard worker exited, plus
+    /// page-accounting violations caught by `KvCache::check_invariants` at
+    /// exit. Always 0 on a healthy fleet; the chaos and equivalence suites
+    /// assert it.
+    pub kv_leaked_seqs: usize,
     /// Terminal statuses per request, indexed by `Status::index()` (sums to
     /// `completed`; `merge` adds element-wise). `rejected` stays the total
     /// of the non-`Ok` entries.
@@ -381,6 +411,10 @@ impl ServingMetrics {
         self.batched_steps += other.batched_steps;
         self.decode_batch_rows += other.decode_batch_rows;
         self.kv_bytes += other.kv_bytes;
+        self.prefix_hits += other.prefix_hits;
+        self.prefix_tokens_reused += other.prefix_tokens_reused;
+        self.kv_shared_bytes += other.kv_shared_bytes;
+        self.kv_leaked_seqs += other.kv_leaked_seqs;
         for (mine, theirs) in self.statuses.iter_mut().zip(other.statuses) {
             *mine += theirs;
         }
@@ -432,6 +466,17 @@ impl ServingMetrics {
                 self.batched_steps,
                 self.decode_batch_occupancy()
             ));
+        }
+        if self.prefix_hits > 0 {
+            s.push_str(&format!(
+                ", prefix hits {} ({} toks reused, {} shared)",
+                self.prefix_hits,
+                self.prefix_tokens_reused,
+                crate::report::bytes_human(self.kv_shared_bytes)
+            ));
+        }
+        if self.kv_leaked_seqs > 0 {
+            s.push_str(&format!(", KV LEAKS {}", self.kv_leaked_seqs));
         }
         if self.resident_weight_bytes > 0 {
             s.push_str(&format!(
@@ -615,6 +660,7 @@ impl Coordinator {
                 kv_budget,
                 max_decode_batch,
                 max_live_seqs,
+                prefix_cache: cfg.prefix_cache,
                 board: board.clone(),
                 #[cfg(any(test, feature = "chaos"))]
                 faults: chaos_sched.for_shard(shard),
@@ -912,6 +958,10 @@ struct ShardCtx {
     /// decode-admission cap: live sequences per shard (0 = unbounded);
     /// admission past it sheds with `Status::Busy` at the step boundary
     max_live_seqs: usize,
+    /// whether generation admissions consult the shard cache's prefix index
+    /// before charging the KV budget (DESIGN.md §14; off = the equivalence
+    /// oracle that always ingests fresh)
+    prefix_cache: bool,
     /// fleet-shared live per-status counters
     board: Arc<StatusBoard>,
     /// this shard's deterministic fault-injection plan (chaos harness)
@@ -958,6 +1008,7 @@ fn shard_worker(
         kv_budget,
         max_decode_batch,
         max_live_seqs,
+        prefix_cache,
         board,
         ..
     } = ctx;
@@ -1048,7 +1099,16 @@ fn shard_worker(
                             continue;
                         }
                     }
-                    start_decode(r, n_blocks, (s, v), &mut kv, &queues, max_live_seqs, &mut acct);
+                    start_decode(
+                        r,
+                        n_blocks,
+                        (s, v),
+                        &mut kv,
+                        &queues,
+                        max_live_seqs,
+                        prefix_cache,
+                        &mut acct,
+                    );
                 }
                 if !classic.is_empty() {
                     execute_batch(classic, &ex, &qm, (b, s, v), net_us, &mut acct);
@@ -1068,9 +1128,16 @@ fn shard_worker(
                 } else if max_decode_batch <= 1 {
                     // per-sequence GEMV path: the batched path's
                     // equivalence oracle, kept behind the config switch
-                    if let Some(job) =
-                        decode_turn(job, &ex, &qm, &mut kv, &mut logits, (s, v), &mut acct)
-                    {
+                    if let Some(job) = decode_turn(
+                        job,
+                        &ex,
+                        &qm,
+                        &mut kv,
+                        &mut logits,
+                        (s, v),
+                        prefix_cache,
+                        &mut acct,
+                    ) {
                         // more tokens to generate: go to the back of the
                         // queue so prefill windows that arrived meanwhile
                         // interleave
@@ -1102,6 +1169,7 @@ fn shard_worker(
                         &mut logits,
                         &mut batch_logits,
                         (s, v),
+                        prefix_cache,
                         &mut acct,
                     ) {
                         queues.push(shard, Work::Decode(job));
@@ -1123,6 +1191,15 @@ fn shard_worker(
     acct.metrics.steals = acct.occ.steals;
     acct.metrics.wakes = acct.occ.wakes;
     acct.metrics.kv_bytes = kv.peak_bytes();
+    // every decode stream must have retired its KV hold by clean exit (the
+    // prefix index legitimately keeps pages resident, but never sequence
+    // tables), and the refcount books must balance exactly — both surface
+    // as a nonzero metric the chaos/equivalence suites assert against
+    acct.metrics.kv_leaked_seqs = kv.live_sequences();
+    if let Err(e) = kv.check_invariants() {
+        eprintln!("shard {shard}: kv page accounting violated at exit: {e}");
+        acct.metrics.kv_leaked_seqs += 1;
+    }
     acct.metrics.queue_depth_hwm = queues.depth_hwm(shard);
     acct.metrics.wall_time = started.elapsed();
     let Acct { metrics: mut m, occ, .. } = acct;
@@ -1140,11 +1217,15 @@ fn fail_decode(job: DecodeJob, st: Status, acct: &mut Acct) {
 }
 
 /// Validate a generation request and seat its decoding sequence on this
-/// shard: reserve the sequence's KV window up front (so steady-state decode
-/// turns never allocate) and queue the pinned decode job behind the current
-/// work. Invalid contexts fail with `InvalidContext`, the live-sequence cap
-/// sheds with `Busy`, and budget overruns degrade to `KvExhausted` — each a
-/// single terminal response, never a mid-stream failure.
+/// shard: consult the prefix index first (a hit attaches already-resident
+/// shared-prefix pages copy-free, so the budget is charged only for the
+/// unshared remainder), then reserve the sequence's KV window up front (so
+/// steady-state decode turns never allocate) and queue the pinned decode
+/// job behind the current work. Invalid contexts fail with
+/// `InvalidContext`, the live-sequence cap sheds with `Busy`, and budget
+/// overruns degrade to `KvExhausted` — each a single terminal response,
+/// never a mid-stream failure.
+#[allow(clippy::too_many_arguments)]
 fn start_decode(
     req: Request,
     n_blocks: usize,
@@ -1152,6 +1233,7 @@ fn start_decode(
     kv: &mut KvCache,
     queues: &ShardQueues<Work>,
     max_live_seqs: usize,
+    prefix_cache: bool,
     acct: &mut Acct,
 ) {
     // same validation rule as the prefill path: only the seq_len prefix is
@@ -1171,7 +1253,19 @@ fn start_decode(
         reject(&req, Status::Busy, acct);
         return;
     }
-    let state = DecodeState::new(req.id, n_blocks);
+    let mut state = DecodeState::new(req.id, n_blocks);
+    // prefix caching (DESIGN.md §14): a hit seats the sequence on the
+    // shared pages before the reservation below, which then only charges
+    // the budget for the pages past the attach point — the first decode
+    // turn ingests just the unshared suffix. A miss costs one index lookup.
+    if prefix_cache {
+        let at = state.attach_prefix(kv, &req.context[..ctx_len]);
+        if at.tokens > 0 {
+            acct.metrics.prefix_hits += 1;
+            acct.metrics.prefix_tokens_reused += at.tokens;
+            acct.metrics.kv_shared_bytes += at.shared_bytes;
+        }
+    }
     // the context plus every generated token except the last must fit the
     // window; reserve that many KV slots per block now (saturating: a
     // caller-controlled max_new_tokens near usize::MAX must not overflow —
@@ -1187,12 +1281,16 @@ fn start_decode(
 }
 
 /// Run one queue turn of a decoding sequence. The first turn ingests the
-/// whole (seq_len-truncated) context through `decode_step` — populating the
-/// sequence's KV pages and producing the first generated token, which at
-/// Raw KV precision is bit-identical to what the batched prefill would have
-/// answered — and every later turn advances exactly one token. Each
-/// generated token streams back as its own `Response`. Returns the job when
-/// more tokens remain, `None` when the stream is finished (or failed).
+/// (seq_len-truncated) context through `decode_step` — starting past any
+/// prefix-attached positions, so a cache hit ingests only the unshared
+/// suffix — populating the sequence's KV pages and producing the first
+/// generated token, which at Raw KV precision is bit-identical to what the
+/// batched prefill would have answered; the freshly ingested context is
+/// then published into the prefix index for later same-prefix admissions.
+/// Every later turn advances exactly one token. Each generated token
+/// streams back as its own `Response`. Returns the job when more tokens
+/// remain, `None` when the stream is finished (or failed).
+#[allow(clippy::too_many_arguments)]
 fn decode_turn(
     mut job: DecodeJob,
     ex: &ModelExecutor<'_>,
@@ -1200,18 +1298,28 @@ fn decode_turn(
     kv: &mut KvCache,
     logits: &mut [f32],
     (s, v): (usize, usize),
+    prefix_cache: bool,
     acct: &mut Acct,
 ) -> Option<DecodeJob> {
     let exec_start = Instant::now();
-    let stepped: Result<()> = if job.produced == 0 {
+    let first_turn = job.produced == 0;
+    let stepped: Result<()> = if first_turn {
         let ctx_len = job.req.context.len().min(s);
         let mut r = Ok(());
-        for i in 0..ctx_len {
+        // a prefix-cache hit advanced the cursor at admission: those
+        // positions are already resident, only the suffix is ingested
+        for i in job.state.pos().min(ctx_len)..ctx_len {
             r = ex.decode_step_into(qm, job.req.context[i], &mut job.state, kv, logits);
             acct.metrics.decode_steps += 1;
             if r.is_err() {
                 break;
             }
+        }
+        if r.is_ok() && prefix_cache {
+            // publish the now-fully-ingested context so later same-prefix
+            // admissions attach instead of re-ingesting (idempotent when
+            // this sequence itself attached to an existing entry)
+            job.state.register_prefix(kv, &job.req.context[..ctx_len]);
         }
         r
     } else {
@@ -1273,13 +1381,14 @@ fn decode_batch_turn(
     logits: &mut [f32],
     batch_logits: &mut [f32],
     (s, v): (usize, usize),
+    prefix_cache: bool,
     acct: &mut Acct,
 ) -> Vec<DecodeJob> {
     let (first, steady): (Vec<DecodeJob>, Vec<DecodeJob>) =
         jobs.into_iter().partition(|j| j.produced == 0);
     let mut survivors = Vec::new();
     for job in first {
-        if let Some(j) = decode_turn(job, ex, qm, kv, logits, (s, v), acct) {
+        if let Some(j) = decode_turn(job, ex, qm, kv, logits, (s, v), prefix_cache, acct) {
             survivors.push(j);
         }
     }
@@ -2330,6 +2439,7 @@ mod tests {
             statuses: [5, 0, 0, 0, 0, 0],
             queue_depth_hwm: 0,
             shards: Vec::new(),
+            ..Default::default()
         };
         assert_eq!(m.percentile_us(0.0), 10);
         assert!(m.percentile_us(0.5) <= m.percentile_us(0.95));
@@ -2385,6 +2495,10 @@ mod tests {
                 steals: 2,
                 wakes: 5,
             }],
+            prefix_hits: 1,
+            prefix_tokens_reused: 16,
+            kv_shared_bytes: 256,
+            kv_leaked_seqs: 0,
         };
         let b = ServingMetrics {
             completed: 2,
@@ -2411,6 +2525,10 @@ mod tests {
                 steals: 1,
                 wakes: 3,
             }],
+            prefix_hits: 2,
+            prefix_tokens_reused: 32,
+            kv_shared_bytes: 512,
+            kv_leaked_seqs: 0,
         };
         a.merge(b);
         assert_eq!(a.completed, 5);
@@ -2431,6 +2549,11 @@ mod tests {
         assert_eq!(a.shed(), 1);
         assert_eq!(a.expired(), 0);
         assert_eq!(a.queue_depth_hwm, 5, "queue high-water mark merges as max");
+        assert_eq!(a.prefix_hits, 3, "prefix hit counts sum across shards");
+        assert_eq!(a.prefix_tokens_reused, 48, "reused-token counts sum across shards");
+        assert_eq!(a.kv_shared_bytes, 768, "shared-page byte counts sum across shards");
+        assert_eq!(a.kv_leaked_seqs, 0);
+        assert!(a.summary().contains("prefix hits 3"));
         assert!(a.summary().contains("shed 1"));
         assert!(a.summary().contains("q-hwm 5"));
         assert!(!a.summary().contains("expired"), "zero counters stay out of the summary");

@@ -2,10 +2,15 @@
 //!
 //! Property: under every seeded fault-injection schedule (shard deaths,
 //! slow shards, forced KV-admission failures) crossed with every dispatch
-//! policy and both decode paths (per-sequence and fused batched), every
+//! policy, both decode paths (per-sequence and fused batched), and the
+//! prefix cache on AND off (DESIGN.md §14 — the generation contexts share
+//! an 18-token prefix so attaches actually happen under fire), every
 //! submitted request receives EXACTLY ONE terminal status — no hangs, no
-//! duplicates, no stream left open — and the tokens of unaffected (and
-//! partially-affected) streams are bit-identical to a fault-free run.
+//! duplicates, no stream left open — the tokens of unaffected (and
+//! partially-affected) streams are bit-identical to a fault-free run, and
+//! no surviving shard ever strands a KV sequence or unbalances its page
+//! refcounts (`kv_leaked_seqs == 0`; a dying shard's cache dies with its
+//! thread, so nothing it held can strand either).
 //!
 //! Gated behind the `chaos` cargo feature (`make test-chaos`): the
 //! injection hooks compile into the library only under
@@ -19,7 +24,7 @@ use ewq::config::{DispatchPolicy, ServeConfig};
 use ewq::ewq::QuantPlan;
 use ewq::quant::Precision;
 use ewq::serving::faultfx::ChaosSchedule;
-use ewq::serving::{Coordinator, Response, Status};
+use ewq::serving::{Coordinator, Response, ServingMetrics, Status};
 use ewq::zoo::gen::{synthetic_model_dir, Profile, SyntheticArch};
 use ewq::zoo::{ModelDir, Schema};
 
@@ -37,7 +42,10 @@ fn chaos_model() -> ModelDir {
             n_heads: 4,
             d_ff: 64,
             vocab: 64,
-            seq_len: 8,
+            // window > serving::KV_PAGE_TOKENS (16) so the shared-prefix
+            // generation contexts below can cover a full page and the
+            // prefix-cache machinery is actually exercised under fire
+            seq_len: 24,
             eval_batch: 4,
         },
         profile: Profile::RampUp,
@@ -45,8 +53,13 @@ fn chaos_model() -> ModelDir {
     })
 }
 
+/// Generation contexts share an 18-token prefix (so prefix-cache runs
+/// attach/register/evict under faults) with a unique 2-token tail each.
 fn gen_context(i: usize) -> Vec<i32> {
-    vec![(1 + i % 63) as i32, ((i * 7) % 64) as i32]
+    let mut ctx: Vec<i32> = (0..18).map(|t| (t * 5 + 2) % 64).collect();
+    ctx.push((1 + i % 63) as i32);
+    ctx.push(((i * 7) % 64) as i32);
+    ctx
 }
 
 fn classic_context(i: usize) -> Vec<i32> {
@@ -69,8 +82,11 @@ fn drain(coord: &Coordinator, rx: &Receiver<Response>, what: &str) -> Vec<Respon
 }
 
 /// One fleet run: submit the fixed request mix, return the per-request
-/// response streams (generations first, then classics).
-fn run_fleet(model: &ModelDir, cfg: ServeConfig) -> Vec<Vec<Response>> {
+/// response streams (generations first, then classics) plus the merged
+/// metrics — which carry every SURVIVING shard's exit-time KV refcount
+/// audit (a shard that died mid-run takes its cache down with its thread,
+/// so it cannot strand pages either).
+fn run_fleet(model: &ModelDir, cfg: ServeConfig) -> (Vec<Vec<Response>>, ServingMetrics) {
     let plan = QuantPlan::uniform(&model.schema.name, model.schema.n_blocks, Precision::Q8);
     let coord = Coordinator::start_with_model(model.clone(), plan, cfg, 0, 0).unwrap();
     let mut rxs = Vec::new();
@@ -82,8 +98,7 @@ fn run_fleet(model: &ModelDir, cfg: ServeConfig) -> Vec<Vec<Response>> {
     }
     let streams: Vec<Vec<Response>> =
         rxs.iter().enumerate().map(|(i, rx)| drain(&coord, rx, &format!("request {i}"))).collect();
-    drop(coord.shutdown());
-    streams
+    (streams, coord.shutdown())
 }
 
 fn base_cfg(policy: DispatchPolicy, max_decode_batch: usize) -> ServeConfig {
@@ -101,7 +116,12 @@ fn base_cfg(policy: DispatchPolicy, max_decode_batch: usize) -> ServeConfig {
 fn every_request_gets_exactly_one_terminal_status_under_chaos() {
     let model = chaos_model();
     // fault-free baseline: the bit-exact token streams every run is held to
-    let baseline = run_fleet(&model, base_cfg(DispatchPolicy::RoundRobin, 1));
+    // (prefix cache off — the §14 equivalence suite proves on == off, and
+    // every prefix-on chaos cell below is held to this same baseline)
+    let mut base = base_cfg(DispatchPolicy::RoundRobin, 1);
+    base.prefix_cache = false;
+    let (baseline, base_m) = run_fleet(&model, base);
+    assert_eq!(base_m.kv_leaked_seqs, 0, "fault-free fleet must balance its KV books");
     assert!(
         baseline.iter().all(|s| s.iter().all(|r| r.status == Status::Ok)),
         "baseline must be fault-free"
@@ -124,13 +144,21 @@ fn every_request_gets_exactly_one_terminal_status_under_chaos() {
         for policy in
             [DispatchPolicy::RoundRobin, DispatchPolicy::ShortestQueue, DispatchPolicy::WorkSteal]
         {
-            for max_decode_batch in [1usize, 16] {
+            for (max_decode_batch, prefix_cache) in
+                [(1usize, false), (1, true), (16, false), (16, true)]
+            {
                 let tag = format!(
-                    "sched={sched:?} policy={policy:?} max_decode_batch={max_decode_batch}"
+                    "sched={sched:?} policy={policy:?} max_decode_batch={max_decode_batch} \
+                     prefix_cache={prefix_cache}"
                 );
                 let mut cfg = base_cfg(policy, max_decode_batch);
                 cfg.chaos = Some(sched.clone());
-                let streams = run_fleet(&model, cfg);
+                cfg.prefix_cache = prefix_cache;
+                let (streams, metrics) = run_fleet(&model, cfg);
+                // a dying shard must never strand a refcount: every
+                // surviving shard's exit-time page audit balanced exactly
+                // (dead shards' caches died with their threads)
+                assert_eq!(metrics.kv_leaked_seqs, 0, "{tag}: KV books unbalanced at exit");
                 assert_eq!(streams.len(), N_GEN + N_CLASSIC);
                 for (i, resps) in streams.iter().enumerate() {
                     assert!(!resps.is_empty(), "{tag}: request {i} got no terminal response");

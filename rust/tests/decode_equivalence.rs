@@ -17,6 +17,14 @@
 //!   reproduces the per-sequence streams bit-for-bit, and served response
 //!   streams are invariant under `max_decode_batch` ∈ {1, 4, 16} across
 //!   1/2/7 workers × all three dispatch policies × scalar/auto kernels.
+//! - **Prefix caching** (DESIGN.md §14): attaching a sequence to
+//!   already-resident shared-prefix pages never moves a logit bit versus
+//!   ingesting the same context fresh — proven at the refexec level for
+//!   random models/geometries/codecs, and at the serving level by the
+//!   `--prefix-cache on` == `off`-oracle stream comparison across Raw/Q8/Q4
+//!   KV × 1/2/7 workers × all dispatch policies × `max_decode_batch`
+//!   {1, 16}, with the shard-exit refcount audit (`kv_leaked_seqs == 0`)
+//!   asserted throughout.
 //!
 //! Everything runs offline — synthetic in-memory models, native executor.
 
@@ -472,6 +480,235 @@ fn batched_serving_streams_bit_identical_under_forced_scalar_kernels() {
             auto, streams,
             "policy={label} max_decode_batch={max_db} under EWQ_FORCE_SCALAR=1"
         );
+    }
+}
+
+#[test]
+fn property_prefix_attach_bit_identical_to_fresh_ingest() {
+    // the refexec-level hit-never-moves-a-bit claim, over random models,
+    // precision mixes, page geometries, and KV codecs: a fork context that
+    // shares all but its last token with a registered donor attaches to the
+    // donor's resident pages (full pages copy-free, the partial tail via
+    // copy-on-write) and its suffix-only ingest produces logits
+    // bit-identical to ingesting the whole fork fresh in an empty cache —
+    // while the donor stays live and the refcount books stay exact.
+    check(0x9F1C5, 6, 8, gen_case, |case| {
+        let qm = build(case)?;
+        let s = &qm.schema;
+        let geom = KvGeometry {
+            page_tokens: case.kv_page,
+            n_heads: s.n_heads,
+            head_dim: s.d_model / s.n_heads,
+        };
+        for kv in [Precision::Raw, Precision::Q8, Precision::Q4] {
+            let mut fp = ForwardPass::new(s, Pool::new(2));
+            // donor: full ingest + publish into the prefix index
+            let mut cache = KvCache::new(geom, 1 << 26, kv);
+            let mut donor = DecodeState::new(100, s.n_blocks);
+            for &t in &case.tokens {
+                fp.decode_step(&qm, t, &mut donor, &mut cache)
+                    .map_err(|e| format!("donor: {e:#}"))?;
+            }
+            donor.register_prefix(&mut cache, &case.tokens);
+            // fork: same context except the final token
+            let mut fork = case.tokens.clone();
+            let last = fork.len() - 1;
+            fork[last] = (fork[last] + 1) % s.vocab as i32;
+            // oracle: the fork ingested fresh into its own empty cache
+            let mut oracle_cache = KvCache::new(geom, 1 << 26, kv);
+            let mut of = DecodeState::new(7, s.n_blocks);
+            let mut oracle = Vec::new();
+            for &t in &fork {
+                oracle.push(
+                    fp.decode_step(&qm, t, &mut of, &mut oracle_cache)
+                        .map_err(|e| format!("oracle: {e:#}"))?,
+                );
+            }
+            // attached: suffix-only ingest on the shared cache
+            let mut st = DecodeState::new(200, s.n_blocks);
+            let at = st.attach_prefix(&mut cache, &fork);
+            // any full page inside the shared region must actually hit
+            if last >= case.kv_page && at.tokens == 0 {
+                return Err(format!(
+                    "{} kv: no prefix hit despite {last} shared tokens over \
+                     {}-token pages",
+                    kv.label(),
+                    case.kv_page
+                ));
+            }
+            if at.tokens > last {
+                return Err(format!(
+                    "attach claimed {} tokens but only {last} are shared",
+                    at.tokens
+                ));
+            }
+            for i in st.pos()..fork.len() {
+                let logits = fp
+                    .decode_step(&qm, fork[i], &mut st, &mut cache)
+                    .map_err(|e| format!("attached: {e:#}"))?;
+                for (j, (a, b)) in logits.iter().zip(&oracle[i]).enumerate() {
+                    if a.to_bits() != b.to_bits() {
+                        return Err(format!(
+                            "{} kv: attached decode differs from fresh ingest at t={i} \
+                             elem {j}: {a} vs {b} (attach {} of {} ctx tokens, page {},\
+                             precs={:?})",
+                            kv.label(),
+                            at.tokens,
+                            fork.len(),
+                            case.kv_page,
+                            case.precs
+                        ));
+                    }
+                }
+            }
+            donor.release(&mut cache);
+            st.release(&mut cache);
+            if cache.live_sequences() != 0 {
+                return Err("sequences leaked after release".into());
+            }
+            cache.check_invariants().map_err(|e| format!("{} kv: {e}", kv.label()))?;
+        }
+        Ok(())
+    });
+}
+
+/// Fixed synthetic model for the serving-level prefix-cache matrix: the
+/// window must exceed `serving::KV_PAGE_TOKENS` (16) or no context could
+/// ever cover a full page and the index would never hit.
+fn prefix_serve_model() -> ewq::zoo::ModelDir {
+    synthetic_model_dir(&SyntheticArch {
+        schema: Schema {
+            name: "eq-prefix".into(),
+            n_blocks: 2,
+            d_model: 32,
+            n_heads: 4,
+            d_ff: 64,
+            vocab: 64,
+            seq_len: 24,
+            eval_batch: 4,
+        },
+        profile: Profile::UShape,
+        seed: 2424,
+    })
+}
+
+/// Serve `n_req` generation requests whose 20-token contexts share an
+/// 18-token prefix (a system prompt) with unique 2-token tails, under the
+/// given matrix cell; returns the token streams plus merged metrics.
+fn serve_prefix_streams(
+    model: &ewq::zoo::ModelDir,
+    kv_precision: Precision,
+    workers: usize,
+    dispatch: ewq::config::DispatchPolicy,
+    max_decode_batch: usize,
+    prefix_cache: bool,
+    n_req: usize,
+    n_tok: usize,
+) -> (Vec<Vec<i32>>, ewq::serving::ServingMetrics) {
+    use ewq::config::ServeConfig;
+    use ewq::serving::Coordinator;
+    let s = &model.schema;
+    let plan = QuantPlan::uniform(&s.name, s.n_blocks, Precision::Q8);
+    let cfg = ServeConfig {
+        max_batch: 4,
+        max_wait_us: 500,
+        workers,
+        dispatch,
+        kv_precision,
+        max_decode_batch,
+        prefix_cache,
+        ..Default::default()
+    };
+    let coord = Coordinator::start_with_model(model.clone(), plan, cfg, 0, 0).unwrap();
+    let v = s.vocab as i32;
+    let shared: Vec<i32> = (0..18).map(|i| (i as i32 * 7 + 3) % v).collect();
+    let ctx_for = |i: usize| {
+        let mut ctx = shared.clone();
+        ctx.push(i as i32 % v);
+        ctx.push((i as i32 * 13 + 1) % v);
+        ctx
+    };
+    // the donor request runs to completion first: its first decode turn
+    // ingests the shared prefix and publishes it into its shard's index, so
+    // every later admission on that shard sees a resident prefix (index
+    // entries outlive the donor sequence by design). The followers are then
+    // submitted concurrently and hit at admission.
+    let donor: Vec<i32> =
+        coord.submit_gen(ctx_for(0), n_tok).iter().map(|r| r.next_token).collect();
+    let rxs: Vec<_> = (1..n_req).map(|i| coord.submit_gen(ctx_for(i), n_tok)).collect();
+    let mut streams = vec![donor];
+    streams.extend(
+        rxs.into_iter().map(|rx| rx.iter().map(|r| r.next_token).collect::<Vec<i32>>()),
+    );
+    (streams, coord.shutdown())
+}
+
+#[test]
+fn prefix_cache_streams_bit_identical_to_off_oracle_across_serving_matrix() {
+    // the serving-level acceptance matrix for DESIGN.md §14: with
+    // --prefix-cache on, every streamed token is bit-identical to the
+    // --prefix-cache off oracle, across Raw/Q8/Q4 KV codecs × 1/2/7(/CI)
+    // workers × all three dispatch policies × max_decode_batch {1, 16} —
+    // and no cell ever strands a KV sequence or unbalances the page books
+    // (kv_leaked_seqs aggregates each shard's exit-time refcount audit).
+    let model = prefix_serve_model();
+    for kv in [Precision::Raw, Precision::Q8, Precision::Q4] {
+        let (oracle, m_off) = serve_prefix_streams(
+            &model,
+            kv,
+            1,
+            ewq::config::DispatchPolicy::WorkSteal,
+            1,
+            false,
+            6,
+            3,
+        );
+        assert_eq!(m_off.prefix_hits, 0, "the off oracle must never consult the index");
+        assert_eq!(m_off.kv_leaked_seqs, 0);
+        assert_eq!(oracle.len(), 6);
+        for st in &oracle {
+            assert_eq!(st.len(), 3);
+        }
+        for policy in ALL_POLICIES {
+            for workers in worker_matrix() {
+                for max_db in [1usize, 16] {
+                    let (streams, m) = serve_prefix_streams(
+                        &model, kv, workers, policy, max_db, true, 6, 3,
+                    );
+                    assert_eq!(
+                        oracle,
+                        streams,
+                        "prefix-cache on diverged from the off oracle: kv={} \
+                         workers={workers} policy={} max_decode_batch={max_db}",
+                        kv.label(),
+                        policy.label()
+                    );
+                    assert_eq!(
+                        m.kv_leaked_seqs,
+                        0,
+                        "kv={} workers={workers} policy={} max_db={max_db}",
+                        kv.label(),
+                        policy.label()
+                    );
+                    if workers == 1 {
+                        // single shard: every request after the first hits
+                        // the 18-token shared prefix, so the cache must
+                        // both fire and remove real ingest work
+                        assert_eq!(m.prefix_hits, 5, "kv={}", kv.label());
+                        assert_eq!(m.prefix_tokens_reused, 5 * 18, "kv={}", kv.label());
+                        assert!(m.kv_shared_bytes > 0);
+                        assert!(
+                            m.decode_steps < m_off.decode_steps,
+                            "kv={}: prefix hits must reduce ingest steps \
+                             ({} on vs {} off)",
+                            kv.label(),
+                            m.decode_steps,
+                            m_off.decode_steps
+                        );
+                    }
+                }
+            }
+        }
     }
 }
 
