@@ -136,6 +136,53 @@ fn measure_capacity(model: &ModelDir, n: usize) -> f64 {
     coord.shutdown().throughput_rps()
 }
 
+/// Requant pressure sweep (DESIGN.md §15): one replica, watermarks set far
+/// below the resident footprint so the controller is permanently over
+/// pressure, and a generation workload so live KV bytes contribute. Every
+/// step boundary demotes one rung down the Q8 -> Q4 -> Q3 ladder until the
+/// ladder bottoms out; the assert gates the tentpole bench claim that
+/// pressure actually frees bytes on a live replica.
+fn run_requant_pressure(model: &ModelDir, requests: usize) -> ServingMetrics {
+    let n = model.schema.n_blocks;
+    let plan = QuantPlan::uniform(&model.schema.name, n, Precision::Q8);
+    let cfg = ServeConfig {
+        max_batch: 8,
+        max_wait_us: 1_000,
+        workers: 1,
+        max_decode_batch: 8,
+        requant: true,
+        requant_low_mb: 0.0005,
+        requant_high_mb: 0.001,
+        ..Default::default()
+    };
+    let coord = Coordinator::start_with_model(model.clone(), plan, cfg, 1, 200).expect("start");
+    let vocab = model.schema.vocab as i32;
+    let n_tok = (model.schema.seq_len - 2).min(6);
+    let mut rxs = Vec::with_capacity(requests);
+    for i in 0..requests {
+        rxs.push(coord.submit_gen(vec![1 % vocab, (37 + i as i32) % vocab], n_tok));
+    }
+    for rx in rxs {
+        while rx.recv().is_ok() {}
+    }
+    let m = coord.shutdown();
+    println!("  pressure cell -> {}", m.summary());
+    println!(
+        "    => {} swaps, freed {}, regrown {}, residency [{}]",
+        m.requant_swaps,
+        m.requant_bytes_freed,
+        m.requant_bytes_regrown,
+        ewq::report::residency_compact(&m.block_residency)
+    );
+    assert!(m.requant_swaps > 0, "permanent pressure must demote at least one rung");
+    assert!(
+        m.requant_bytes_freed > 0,
+        "demotions under pressure must free bytes (got 0 across {} swaps)",
+        m.requant_swaps
+    );
+    m
+}
+
 fn bench_model() -> ModelDir {
     let artifacts = ewq::artifacts_dir();
     match ModelDir::load(artifacts.join("models/tl-phi")) {
@@ -188,6 +235,7 @@ fn write_json(
     requests: usize,
     sweep: &[(DispatchPolicy, ServingMetrics)],
     overload: &str,
+    requant: &str,
     skipped_sweeps: &[&str],
 ) {
     let mut body = String::new();
@@ -202,6 +250,7 @@ fn write_json(
         "{{\n  \"model\": \"{model}\",\n  \"workload\": \"skewed-cost\",\n  \
          \"requests\": {requests},\n  \"workers\": 2,\n  \
          \"skipped_sweeps\": [{}],\n  \"overload\": {overload},\n  \
+         \"requant\": {requant},\n  \
          \"policies\": {{\n{body}\n  }}\n}}\n",
         skipped.join(", ")
     );
@@ -333,6 +382,30 @@ fn main() {
         two_x.queue_depth_hwm
     );
 
+    // requant pressure sweep — only on models whose dims admit the full
+    // Q8 -> Q4 -> Q3 ladder (`RequantPlan::build` gates eligibility on the
+    // same predicate, so a dims-incompatible model would book zero swaps
+    // and trip the freed>0 assert for a structural, not behavioral, reason)
+    let requant = if model.schema.d_model % 8 == 0 && model.schema.d_ff % 8 == 0 {
+        println!("requant pressure sweep (1 worker, watermarks below resident footprint):");
+        let m = run_requant_pressure(&model, requests.min(16));
+        format!(
+            "{{ \"requant_swaps\": {}, \"requant_bytes_freed\": {}, \
+             \"requant_bytes_regrown\": {}, \"block_residency\": [{}] }}",
+            m.requant_swaps,
+            m.requant_bytes_freed,
+            m.requant_bytes_regrown,
+            m.block_residency.iter().map(|c| c.to_string()).collect::<Vec<_>>().join(", ")
+        )
+    } else {
+        skipped_sweeps.push("requant-pressure");
+        println!(
+            "requant pressure sweep SKIPPED: dims {}x{} break the Q3 rung (k % 8 != 0)",
+            model.schema.d_model, model.schema.d_ff
+        );
+        "null".to_string()
+    };
+
     let out = std::env::var("EWQ_BENCH_OUT").unwrap_or_else(|_| "BENCH_serving.json".into());
-    write_json(&out, &model.schema.name, requests, &sweep, &overload, &skipped_sweeps);
+    write_json(&out, &model.schema.name, requests, &sweep, &overload, &requant, &skipped_sweeps);
 }

@@ -50,16 +50,19 @@ const KEYS: [&str; 8] = [
 
 /// Optional tracked metrics (higher is better): compared only when present
 /// in BOTH the current results and the baseline, listed as skipped in the
-/// verdict line otherwise. The overload-sweep goodput and the prefix-share
-/// decode sweep land here because a missing row (quick mode, older bench
-/// binary, a BENCH_decode.json that predates the sweep) is a coverage gap
-/// to surface, not a hard gate failure like a vanished kernel metric.
-const OPTIONAL_KEYS: [&str; 5] = [
+/// verdict line otherwise. The overload-sweep goodput, the prefix-share
+/// decode sweep, and the requant pressure sweep land here because a
+/// missing row (quick mode, older bench binary, a dims-incompatible bench
+/// model skipping the requant sweep) is a coverage gap to surface, not a
+/// hard gate failure like a vanished kernel metric.
+const OPTIONAL_KEYS: [&str; 7] = [
     "overload_goodput_rps_1x",
     "overload_goodput_rps_2x",
     "decode_tok_s_prefix_0",
     "decode_tok_s_prefix_0.5",
     "decode_tok_s_prefix_0.9",
+    "requant_swaps",
+    "requant_bytes_freed",
 ];
 
 /// Extract the number following `"key":` in a flat JSON document.

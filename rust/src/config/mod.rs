@@ -155,6 +155,64 @@ impl std::str::FromStr for DispatchPolicy {
     }
 }
 
+/// One scripted requant swap for the determinism/chaos harnesses: after the
+/// owning shard has dequeued `after_item` work items, re-pack block `block`
+/// at `prec` before the next item executes. The schedule is global — every
+/// shard applies it at its own item ordinals — which is what makes
+/// single-shard (or deterministically-dispatched) runs exactly repeatable:
+/// the swap lands at the same step boundary every run. Always compiled (no
+/// chaos feature gate): the forced-swap equivalence property runs in the
+/// default test build.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ForcedSwap {
+    /// Work items the shard must have dequeued before this swap fires.
+    pub after_item: usize,
+    /// Block index to re-pack.
+    pub block: usize,
+    /// Target precision rung.
+    pub prec: crate::quant::Precision,
+}
+
+/// A degenerate `ServeConfig` value caught at coordinator startup — each of
+/// these previously failed far from the cause (a clamp hiding the typo, a
+/// downstream panic, or a silent hang).
+#[derive(Clone, Debug, PartialEq)]
+pub enum ServeConfigError {
+    /// `max_decode_batch == 0`: would silently clamp to 1, masking a typo
+    /// for a knob whose whole point is > 1.
+    ZeroMaxDecodeBatch,
+    /// `kv_budget_mb <= 0` (or NaN): every generation would shed with
+    /// `KvExhausted` — an all-reject server nobody asked for.
+    ZeroKvBudget,
+    /// `forward_workers == 0`: would silently clamp to 1.
+    ZeroForwardWorkers,
+    /// Requant enabled with watermarks that can never act: requires
+    /// `0 < low < high`.
+    RequantWatermarks { low_mb: f64, high_mb: f64 },
+}
+
+impl std::fmt::Display for ServeConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeConfigError::ZeroMaxDecodeBatch => {
+                write!(f, "max_decode_batch must be >= 1 (0 would clamp silently)")
+            }
+            ServeConfigError::ZeroKvBudget => {
+                write!(f, "kv_budget_mb must be > 0 (0 sheds every generation)")
+            }
+            ServeConfigError::ZeroForwardWorkers => {
+                write!(f, "forward_workers must be >= 1 (0 would clamp silently)")
+            }
+            ServeConfigError::RequantWatermarks { low_mb, high_mb } => write!(
+                f,
+                "requant watermarks must satisfy 0 < low < high, got low {low_mb} MB, high {high_mb} MB"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ServeConfigError {}
+
 /// Serving coordinator configuration (examples/serve.rs, `ewq serve`).
 #[derive(Clone, Debug, PartialEq)]
 pub struct ServeConfig {
@@ -214,6 +272,26 @@ pub struct ServeConfig {
     /// turn ingests only the unshared suffix. `false` is the equivalence
     /// oracle that always ingests the full context fresh.
     pub prefix_cache: bool,
+    /// Online precision controller (`serving::requant`, DESIGN.md §15):
+    /// between decode windows each shard compares its resident weight bytes
+    /// + live KV bytes against the watermarks below and moves blocks
+    /// Q8↔Q4↔Q3 — demoting under pressure, promoting back when idle below
+    /// the low watermark. Off by default: precision then stays exactly what
+    /// the plan assigned.
+    pub requant: bool,
+    /// Requant low watermark, MB: below this (and with an idle queue) the
+    /// controller promotes demoted blocks back toward their plan precision.
+    pub requant_low_mb: f64,
+    /// Requant high watermark, MB: above this the controller demotes the
+    /// lowest-entropy eligible block one rung per step boundary.
+    pub requant_high_mb: f64,
+    /// Optional trained FastEWQ classifier (`.fewq`) restricting which
+    /// blocks the controller may touch; `None` = entropy rank order alone.
+    pub requant_classifier: Option<std::path::PathBuf>,
+    /// Scripted swap schedule for tests/benches (see `ForcedSwap`); applied
+    /// even when `requant` is off, so equivalence tests can pin swap timing
+    /// without enabling pressure-driven behavior.
+    pub requant_forced: Vec<ForcedSwap>,
     /// Deterministic fault-injection schedule for the chaos harness
     /// (`serving::faultfx`); never read outside tests / `--features chaos`.
     #[cfg(any(test, feature = "chaos"))]
@@ -240,6 +318,11 @@ impl Default for ServeConfig {
             max_live_sequences: 0,
             default_deadline_ms: 0,
             prefix_cache: true,
+            requant: false,
+            requant_low_mb: 48.0,
+            requant_high_mb: 64.0,
+            requant_classifier: None,
+            requant_forced: Vec::new(),
             #[cfg(any(test, feature = "chaos"))]
             chaos: None,
         }
@@ -267,9 +350,41 @@ impl ServeConfig {
             max_live_sequences: c.get_or("serve", "max_live_sequences", d.max_live_sequences)?,
             default_deadline_ms: c.get_or("serve", "default_deadline_ms", d.default_deadline_ms)?,
             prefix_cache: c.get_or("serve", "prefix_cache", d.prefix_cache)?,
+            requant: c.get_or("serve", "requant", d.requant)?,
+            requant_low_mb: c.get_or("serve", "requant_low_mb", d.requant_low_mb)?,
+            requant_high_mb: c.get_or("serve", "requant_high_mb", d.requant_high_mb)?,
+            requant_classifier: c
+                .get("serve", "requant_classifier")
+                .map(std::path::PathBuf::from),
+            requant_forced: Vec::new(),
             #[cfg(any(test, feature = "chaos"))]
             chaos: None,
         })
+    }
+
+    /// Reject degenerate values at startup with a typed error instead of a
+    /// downstream clamp, panic, or hang. `Coordinator::start_with_model`
+    /// calls this first; `ewq serve` calls it before loading the model so
+    /// the CLI fails fast too.
+    pub fn validate(&self) -> std::result::Result<(), ServeConfigError> {
+        if self.max_decode_batch == 0 {
+            return Err(ServeConfigError::ZeroMaxDecodeBatch);
+        }
+        // `!(x > 0.0)` also catches NaN, which `x <= 0.0` would let through
+        if !(self.kv_budget_mb > 0.0) {
+            return Err(ServeConfigError::ZeroKvBudget);
+        }
+        if self.forward_workers == 0 {
+            return Err(ServeConfigError::ZeroForwardWorkers);
+        }
+        if self.requant && !(self.requant_low_mb > 0.0 && self.requant_high_mb > self.requant_low_mb)
+        {
+            return Err(ServeConfigError::RequantWatermarks {
+                low_mb: self.requant_low_mb,
+                high_mb: self.requant_high_mb,
+            });
+        }
+        Ok(())
     }
 }
 
@@ -408,6 +523,76 @@ mod tests {
         assert!("5bit".parse::<Precision>().is_err());
         let bad = Config::parse("[serve]\nkv_precision = 5bit\n").unwrap();
         assert!(ServeConfig::from_config(&bad).is_err());
+    }
+
+    #[test]
+    fn requant_serve_options_parse() {
+        let c = Config::parse(
+            "[serve]\nrequant = true\nrequant_low_mb = 12.5\nrequant_high_mb = 20.0\n\
+             requant_classifier = \"artifacts/fastewq.fewq\"\n",
+        )
+        .unwrap();
+        let s = ServeConfig::from_config(&c).unwrap();
+        assert!(s.requant);
+        assert!((s.requant_low_mb - 12.5).abs() < 1e-12);
+        assert!((s.requant_high_mb - 20.0).abs() < 1e-12);
+        assert_eq!(
+            s.requant_classifier.as_deref(),
+            Some(std::path::Path::new("artifacts/fastewq.fewq"))
+        );
+        let d = ServeConfig::default();
+        assert!(!d.requant, "requant is off by default");
+        assert!(d.requant_low_mb > 0.0 && d.requant_high_mb > d.requant_low_mb);
+        assert!(d.requant_classifier.is_none());
+        assert!(d.requant_forced.is_empty());
+    }
+
+    #[test]
+    fn validate_rejects_each_degenerate_value_with_a_typed_error() {
+        assert_eq!(ServeConfig::default().validate(), Ok(()));
+
+        let cfg = ServeConfig { max_decode_batch: 0, ..Default::default() };
+        assert_eq!(cfg.validate(), Err(ServeConfigError::ZeroMaxDecodeBatch));
+
+        let cfg = ServeConfig { kv_budget_mb: 0.0, ..Default::default() };
+        assert_eq!(cfg.validate(), Err(ServeConfigError::ZeroKvBudget));
+        let cfg = ServeConfig { kv_budget_mb: -1.0, ..Default::default() };
+        assert_eq!(cfg.validate(), Err(ServeConfigError::ZeroKvBudget));
+        let cfg = ServeConfig { kv_budget_mb: f64::NAN, ..Default::default() };
+        assert_eq!(cfg.validate(), Err(ServeConfigError::ZeroKvBudget));
+
+        let cfg = ServeConfig { forward_workers: 0, ..Default::default() };
+        assert_eq!(cfg.validate(), Err(ServeConfigError::ZeroForwardWorkers));
+
+        // requant watermarks only checked when requant is on
+        let cfg = ServeConfig {
+            requant: true,
+            requant_low_mb: 8.0,
+            requant_high_mb: 8.0,
+            ..Default::default()
+        };
+        assert_eq!(
+            cfg.validate(),
+            Err(ServeConfigError::RequantWatermarks { low_mb: 8.0, high_mb: 8.0 })
+        );
+        let cfg = ServeConfig {
+            requant: false,
+            requant_low_mb: 8.0,
+            requant_high_mb: 8.0,
+            ..Default::default()
+        };
+        assert_eq!(cfg.validate(), Ok(()), "watermarks ignored when requant is off");
+        let cfg = ServeConfig {
+            requant: true,
+            requant_low_mb: 0.0,
+            requant_high_mb: 9.0,
+            ..Default::default()
+        };
+        assert!(matches!(cfg.validate(), Err(ServeConfigError::RequantWatermarks { .. })));
+
+        // errors render the cause, not a downstream symptom
+        let msg = ServeConfigError::ZeroKvBudget.to_string();
+        assert!(msg.contains("kv_budget_mb"), "{msg}");
     }
 
     #[test]

@@ -264,6 +264,25 @@ impl FastEwq {
         let forest = RandomForest::deserialize(lines.next().context("missing forest")?)?;
         Ok(Self { scaler: StandardScaler { mean, std }, forest })
     }
+
+    /// Best-effort load for optional classifier artifacts (the serving
+    /// requant controller): a missing file is a normal deployment state and
+    /// returns `None` silently; an unreadable or corrupt file is warned
+    /// about (it names a real artifact that failed) and also returns `None`
+    /// so serving starts with the conservative all-blocks-eligible policy
+    /// instead of refusing to boot.
+    pub fn load_optional(path: &Path) -> Option<Self> {
+        if !path.exists() {
+            return None;
+        }
+        match Self::load(path) {
+            Ok(c) => Some(c),
+            Err(e) => {
+                eprintln!("fastewq: ignoring classifier at {}: {e:#}", path.display());
+                None
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -334,6 +353,26 @@ mod tests {
         let p = dir.join("clf.fewq");
         fe.save(&p).unwrap();
         let fe2 = FastEwq::load(&p).unwrap();
+        let schema = crate::zoo::gen::synthetic_archs(1, 77)[0].schema.clone();
+        assert_eq!(fe.classify_model(&schema), fe2.classify_model(&schema));
+    }
+
+    #[test]
+    fn load_optional_tolerates_missing_and_corrupt_artifacts() {
+        let dir = std::env::temp_dir().join("ewq_fastewq_optional_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        // missing: a normal deployment state, silently None
+        assert!(FastEwq::load_optional(&dir.join("nope.fewq")).is_none());
+        // corrupt: warned about, still None — serving must not refuse to boot
+        let bad = dir.join("bad.fewq");
+        std::fs::write(&bad, "NOT_A_CLASSIFIER\n").unwrap();
+        assert!(FastEwq::load_optional(&bad).is_none());
+        // intact: decisions identical to a plain load
+        let rows = build_dataset(200, 9, &[], &EwqConfig::default());
+        let fe = FastEwq::train(&rows, 30, 6, 3);
+        let good = dir.join("good.fewq");
+        fe.save(&good).unwrap();
+        let fe2 = FastEwq::load_optional(&good).expect("intact artifact loads");
         let schema = crate::zoo::gen::synthetic_archs(1, 77)[0].schema.clone();
         assert_eq!(fe.classify_model(&schema), fe2.classify_model(&schema));
     }

@@ -12,7 +12,8 @@
 //!                            --max-decode-batch M --kv-budget-mb MB
 //!                            --max-queued-windows Q
 //!                            --max-live-seqs L --deadline-ms D
-//!                            --prefix-cache on|off]
+//!                            --prefix-cache on|off --requant on|off
+//!                            --requant-low-mb MB --requant-high-mb MB]
 //! ```
 //!
 //! Overload safety (DESIGN.md §13): `--max-queued-windows` bounds the
@@ -21,6 +22,12 @@
 //! `--deadline-ms` applies a default per-request deadline (`expired` past
 //! it). All three default to 0 = off. Prefix caching (DESIGN.md §14) is on
 //! by default; `--prefix-cache off` is the always-ingest-fresh oracle.
+//! Online requantization (DESIGN.md §15) is off by default; `--requant on`
+//! starts a per-shard precision controller that demotes blocks Q8→Q4→Q3
+//! above `--requant-high-mb` of resident-weight + KV pressure and promotes
+//! them back below `--requant-low-mb` when the shard queue is idle, using
+//! the trained FastEWQ classifier (when present in the artifacts dir) to
+//! pick eligible blocks.
 
 use anyhow::{bail, Context, Result};
 
@@ -191,7 +198,6 @@ fn cmd_train_classifier(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    let model = load_model(args)?;
     let variant: String = args.opt("variant", "8bit".to_string())?;
     let requests = args.opt("requests", 64usize)?;
     let batch = args.opt("batch", 8usize)?;
@@ -211,6 +217,40 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "off" | "false" | "0" => false,
         other => bail!("unknown --prefix-cache value {other} (on|off)"),
     };
+    let requant = match args.opt("requant", "off".to_string())?.as_str() {
+        "on" | "true" | "1" => true,
+        "off" | "false" | "0" => false,
+        other => bail!("unknown --requant value {other} (on|off)"),
+    };
+    let requant_low_mb =
+        args.opt("requant-low-mb", ewq::config::ServeConfig::default().requant_low_mb)?;
+    let requant_high_mb =
+        args.opt("requant-high-mb", ewq::config::ServeConfig::default().requant_high_mb)?;
+    // the trained forest gates eligibility when present; serving still
+    // starts without it (all on-ladder blocks eligible)
+    let requant_classifier =
+        if requant { Some(ewq::artifacts_dir().join("fastewq.fewq")) } else { None };
+    let cfg = ServeConfig {
+        max_batch: batch,
+        workers,
+        dispatch,
+        decode_tokens,
+        kv_precision,
+        max_decode_batch,
+        kv_budget_mb,
+        max_queued_windows,
+        max_live_sequences,
+        default_deadline_ms,
+        prefix_cache,
+        requant,
+        requant_low_mb,
+        requant_high_mb,
+        requant_classifier,
+        ..Default::default()
+    };
+    // fail fast on degenerate knobs, before any model or artifact work
+    cfg.validate()?;
+    let model = load_model(args)?;
     let n = model.schema.n_blocks;
     let plan = match variant.as_str() {
         "raw" => ewq::ewq::QuantPlan::uniform(&model.schema.name, n, ewq::quant::Precision::Raw),
@@ -239,20 +279,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
 
     let vocab = model.schema.vocab as i32;
-    let cfg = ServeConfig {
-        max_batch: batch,
-        workers,
-        dispatch,
-        decode_tokens,
-        kv_precision,
-        max_decode_batch,
-        kv_budget_mb,
-        max_queued_windows,
-        max_live_sequences,
-        default_deadline_ms,
-        prefix_cache,
-        ..Default::default()
-    };
+    if requant {
+        println!(
+            "requant: on (low {requant_low_mb} MB, high {requant_high_mb} MB, classifier {})",
+            cfg.requant_classifier
+                .as_ref()
+                .map(|p| p.display().to_string())
+                .unwrap_or_else(|| "none".into())
+        );
+    }
     let coord = Coordinator::start_with_model(model, plan, cfg, 1, 200)?;
     let mut rxs = Vec::new();
     for i in 0..requests {

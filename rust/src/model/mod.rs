@@ -27,6 +27,8 @@ pub mod sampler;
 
 pub use refexec::{DecodeState, ForwardPass};
 
+use std::sync::{Arc, Mutex};
+
 use anyhow::Result;
 
 use crate::ewq::QuantPlan;
@@ -36,21 +38,74 @@ use crate::runtime::Runtime;
 use crate::tensor::Tensor;
 use crate::zoo::{ModelDir, Schema};
 
-/// One block's runtime payload: norm gains + the six packed matrices, plus
-/// (under `xla`) the pre-encoded literals in artifact argument order. The
-/// packed `qmats` are the only weight representation kept resident; the
-/// native executor's kernels dequantize group tiles on the fly.
-pub struct QuantBlock {
+/// One block's swappable payload generation: the six packed matrices at a
+/// single precision, plus the byte accounting for that packing. Published
+/// behind an `Arc` so online requantization (`serving::requant`) can swap a
+/// block's payloads without tearing readers: a forward/decode step
+/// snapshots the `Arc` once per block (`QuantBlock::mats`) and keeps that
+/// generation alive for the whole step, while the swap only replaces which
+/// generation the *next* snapshot sees.
+pub struct BlockMats {
     pub prec: Precision,
+    /// wq, wk, wv, wo, w1, w2 — packed under `prec`.
+    pub qmats: Vec<QMat>,
+    /// stored bytes under `prec`: fp32 norm gains + packed payloads (for
+    /// memory accounting)
+    pub bytes: usize,
+}
+
+/// One block's runtime payload: norm gains + the current packed-matrix
+/// generation, plus (under `xla`) the pre-encoded literals in artifact
+/// argument order. The packed `qmats` are the only weight representation
+/// kept resident; the native executor's kernels dequantize group tiles on
+/// the fly. The matrices live behind `Mutex<Arc<..>>` (a std-only atomic
+/// slot): readers clone the `Arc` out (`mats`, no allocation), writers
+/// `publish` a freshly packed generation — the lock is held only for the
+/// pointer copy, never across a repack or a kernel call.
+pub struct QuantBlock {
     pub g1: Tensor,
     pub g2: Tensor,
-    /// wq, wk, wv, wo, w1, w2 — packed under this block's precision.
-    pub qmats: Vec<QMat>,
-    /// stored bytes under the plan (for memory accounting)
-    pub bytes: usize,
+    /// current payload generation (see `BlockMats`)
+    mats: Mutex<Arc<BlockMats>>,
     /// literals after the leading activation argument
     #[cfg(feature = "xla")]
     args: Vec<xla::Literal>,
+}
+
+impl QuantBlock {
+    pub fn new(prec: Precision, g1: Tensor, g2: Tensor, qmats: Vec<QMat>, bytes: usize) -> Self {
+        Self {
+            g1,
+            g2,
+            mats: Mutex::new(Arc::new(BlockMats { prec, qmats, bytes })),
+            #[cfg(feature = "xla")]
+            args: Vec::new(),
+        }
+    }
+
+    /// Snapshot the current payload generation. Callers hold the returned
+    /// `Arc` for at most one step, so a concurrent `publish` never tears a
+    /// step and old generations free as soon as the last in-flight step
+    /// drops its snapshot. Lock + refcount bump only — no allocation, so
+    /// the zero-allocation guarantee of the steady-state decode path holds.
+    pub fn mats(&self) -> Arc<BlockMats> {
+        self.mats.lock().expect("block payload lock poisoned").clone()
+    }
+
+    /// Atomically replace the payload generation (requant swap commit).
+    pub fn publish(&self, mats: Arc<BlockMats>) {
+        *self.mats.lock().expect("block payload lock poisoned") = mats;
+    }
+
+    /// Current precision rung (snapshot; may change at the next step).
+    pub fn prec(&self) -> Precision {
+        self.mats().prec
+    }
+
+    /// Current stored bytes (snapshot).
+    pub fn bytes(&self) -> usize {
+        self.mats().bytes
+    }
 }
 
 /// A fully quantized, runtime-ready model instance.
@@ -87,19 +142,23 @@ fn qmat_literals(m: &QMat) -> Result<Vec<xla::Literal>> {
 fn encode_block_args(blk: &QuantBlock) -> Result<Vec<xla::Literal>> {
     use crate::runtime::lit_f32;
     let d = blk.g1.numel();
+    // Encode-time snapshot: the PJRT literals are baked from the build-time
+    // payload generation and are NOT refreshed by requant swaps — online
+    // requantization drives the native path only (see `serving::requant`).
+    let mats = blk.mats();
     let mut args: Vec<xla::Literal> = Vec::with_capacity(14);
-    match blk.prec {
+    match mats.prec {
         Precision::Raw | Precision::Q3 => {
             // block_raw argument order: g1, wq, wk, wv, wo, g2, w1, w2.
             // Dequantized once here at encode time (literals are the
             // resident representation on this path), not cached on the block.
             args.push(lit_f32(&[d], &blk.g1.data)?);
-            let mats: Vec<Tensor> = blk.qmats.iter().map(crate::quant::dequantize).collect();
-            for t in &mats[..4] {
+            let t_mats: Vec<Tensor> = mats.qmats.iter().map(crate::quant::dequantize).collect();
+            for t in &t_mats[..4] {
                 args.push(lit_f32(&t.shape, &t.data)?);
             }
             args.push(lit_f32(&[d], &blk.g2.data)?);
-            for t in &mats[4..] {
+            for t in &t_mats[4..] {
                 args.push(lit_f32(&t.shape, &t.data)?);
             }
         }
@@ -107,7 +166,7 @@ fn encode_block_args(blk: &QuantBlock) -> Result<Vec<xla::Literal>> {
             // block_q* argument order: g1, g2, then (q, s) x 6
             args.push(lit_f32(&[d], &blk.g1.data)?);
             args.push(lit_f32(&[d], &blk.g2.data)?);
-            for m in &blk.qmats {
+            for m in &mats.qmats {
                 args.extend(qmat_literals(m)?);
             }
         }
@@ -147,14 +206,14 @@ impl QuantizedModel {
         let mut blocks: Vec<QuantBlock> = packed
             .into_iter()
             .enumerate()
-            .map(|(b, (prec, qmats, bytes))| QuantBlock {
-                prec,
-                g1: model.weights.blocks[b].g1.clone(),
-                g2: model.weights.blocks[b].g2.clone(),
-                qmats,
-                bytes,
-                #[cfg(feature = "xla")]
-                args: Vec::new(),
+            .map(|(b, (prec, qmats, bytes))| {
+                QuantBlock::new(
+                    prec,
+                    model.weights.blocks[b].g1.clone(),
+                    model.weights.blocks[b].g2.clone(),
+                    qmats,
+                    bytes,
+                )
             })
             .collect();
         #[cfg(feature = "xla")]
@@ -184,9 +243,9 @@ impl QuantizedModel {
         })
     }
 
-    /// Stored bytes of all blocks under this plan.
+    /// Stored bytes of all blocks as currently packed (tracks requant swaps).
     pub fn blocks_bytes(&self) -> usize {
-        self.blocks.iter().map(|b| b.bytes).sum()
+        self.blocks.iter().map(|b| b.bytes()).sum()
     }
 
     /// fp32 bytes of the non-block weights (embed + pos + final norm + head).
@@ -198,7 +257,10 @@ impl QuantizedModel {
     fn blocks_f32_bytes(&self) -> usize {
         self.blocks
             .iter()
-            .map(|b| b.qmats.iter().map(|m| 4 * m.rows * m.cols).sum::<usize>())
+            .map(|b| {
+                let mats = b.mats();
+                mats.qmats.iter().map(|m| 4 * m.rows * m.cols).sum::<usize>()
+            })
             .sum()
     }
 
@@ -225,6 +287,42 @@ impl QuantizedModel {
     /// memory-reduction claim is measured against.
     pub fn shadow_copy_bytes(&self) -> usize {
         self.resident_bytes() + self.blocks_f32_bytes()
+    }
+
+    /// Re-pack block `b`'s payloads at `target` precision and publish the
+    /// new generation atomically (Arc swap; see `QuantBlock::publish`). The
+    /// repack runs on the caller's thread against a snapshot, so it is safe
+    /// to call while other threads hold older snapshots mid-step — they
+    /// finish on their generation and pick up the new one at their next
+    /// `mats()` call. Same-precision calls are no-ops. Returns
+    /// `(old_bytes, new_bytes)` for residency accounting.
+    ///
+    /// Note the information floor: promoting a block (e.g. Q4 → Q8) re-packs
+    /// from the current lattice, so quantization noise already incurred is
+    /// kept, not undone — the promoted block costs Q8 bytes but carries Q4
+    /// fidelity until a fresh build (`quant::repack` documents this).
+    pub fn requantize_block(&self, b: usize, target: Precision) -> (usize, usize) {
+        let blk = &self.blocks[b];
+        let old = blk.mats();
+        if old.prec == target {
+            return (old.bytes, old.bytes);
+        }
+        let qmats: Vec<QMat> =
+            old.qmats.iter().map(|m| crate::quant::repack(m, target)).collect();
+        let bytes = 4 * (blk.g1.numel() + blk.g2.numel())
+            + qmats.iter().map(|m| m.size_bytes()).sum::<usize>();
+        blk.publish(Arc::new(BlockMats { prec: target, qmats, bytes }));
+        (old.bytes, bytes)
+    }
+
+    /// Blocks per precision rung, indexed by `Precision::tag()` — the
+    /// residency histogram `ServingMetrics::block_residency` reports.
+    pub fn block_residency(&self) -> [usize; 5] {
+        let mut out = [0usize; 5];
+        for b in &self.blocks {
+            out[b.prec().tag() as usize] += 1;
+        }
+        out
     }
 }
 
@@ -339,7 +437,7 @@ impl<'rt> ModelExecutor<'rt> {
         let mut h = self.rt.run_refs(&embed, &args)?;
 
         for blk in &qm.blocks {
-            let exe = self.rt.load(&self.artifact(self.block_artifact(blk.prec)))?;
+            let exe = self.rt.load(&self.artifact(self.block_artifact(blk.prec())))?;
             let mut args: Vec<&xla::Literal> = Vec::with_capacity(1 + blk.args.len());
             args.push(&h);
             args.extend(blk.args.iter());
@@ -445,9 +543,10 @@ mod tests {
                 QuantizedModel::build_pooled(&model, &plan, &Pool::new(workers)).unwrap();
             assert_eq!(pooled.blocks.len(), serial.blocks.len());
             for (a, b) in serial.blocks.iter().zip(&pooled.blocks) {
-                assert_eq!(a.prec, b.prec);
-                assert_eq!(a.bytes, b.bytes);
-                assert_eq!(a.qmats, b.qmats, "workers={workers}");
+                let (am, bm) = (a.mats(), b.mats());
+                assert_eq!(am.prec, bm.prec);
+                assert_eq!(am.bytes, bm.bytes);
+                assert_eq!(am.qmats, bm.qmats, "workers={workers}");
             }
             assert_eq!(pooled.blocks_bytes(), serial.blocks_bytes());
         }
@@ -525,6 +624,62 @@ mod tests {
         assert!(raw.resident_bytes() > q8.resident_bytes());
         assert!(q8.resident_bytes() > qm.resident_bytes());
         assert!(qm.resident_bytes() > t2.resident_bytes());
+    }
+
+    #[test]
+    fn requantize_block_swaps_payloads_and_accounting() {
+        use crate::zoo::gen::{synthetic_model_dir, Profile, SyntheticArch};
+        let model = synthetic_model_dir(&SyntheticArch {
+            schema: Schema {
+                name: "requant".into(),
+                n_blocks: 4,
+                d_model: 96,
+                n_heads: 4,
+                d_ff: 384,
+                vocab: 256,
+                seq_len: 16,
+                eval_batch: 4,
+            },
+            profile: Profile::RampUp,
+            seed: 4242,
+        });
+        let n = model.schema.n_blocks;
+        let qm =
+            QuantizedModel::build(&model, &QuantPlan::uniform("m", n, Precision::Q8)).unwrap();
+        let before = qm.resident_bytes();
+        assert_eq!(qm.block_residency()[Precision::Q8.tag() as usize], n);
+
+        // same-precision swap is a no-op
+        let (old, new) = qm.requantize_block(0, Precision::Q8);
+        assert_eq!(old, new);
+        assert_eq!(qm.resident_bytes(), before);
+
+        // demote block 0 to Q4: residency books shrink by exactly old - new
+        let (old, new) = qm.requantize_block(0, Precision::Q4);
+        assert!(new < old);
+        assert_eq!(qm.resident_bytes(), before - (old - new));
+        assert_eq!(qm.blocks[0].prec(), Precision::Q4);
+        let res = qm.block_residency();
+        assert_eq!(res[Precision::Q8.tag() as usize], n - 1);
+        assert_eq!(res[Precision::Q4.tag() as usize], 1);
+
+        // a snapshot taken before a swap keeps the old generation alive and
+        // untouched — this is the no-torn-reads guarantee decode rides
+        let pre = qm.blocks[1].mats();
+        qm.requantize_block(1, Precision::Q3);
+        assert_eq!(pre.prec, Precision::Q8);
+        assert_eq!(qm.blocks[1].prec(), Precision::Q3);
+
+        // promotion re-packs from the current (demoted) lattice
+        let demoted = qm.blocks[0].mats();
+        let (_, back) = qm.requantize_block(0, Precision::Q8);
+        let direct: Vec<QMat> = demoted
+            .qmats
+            .iter()
+            .map(|m| crate::quant::repack(m, Precision::Q8))
+            .collect();
+        assert_eq!(qm.blocks[0].mats().qmats, direct);
+        assert_eq!(back, qm.blocks[0].bytes());
     }
 
     #[test]

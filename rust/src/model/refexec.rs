@@ -187,12 +187,15 @@ impl ForwardPass {
         }
 
         for blk in &qm.blocks {
+            // one payload snapshot per block per pass: a concurrent requant
+            // swap can never tear a block mid-kernel (Arc clone, no alloc)
+            let mats = blk.mats();
             block_forward(
                 x,
                 dims,
                 &blk.g1.data,
                 &blk.g2.data,
-                &blk.qmats,
+                &mats.qmats,
                 &self.pool,
                 BlockBufs { xn, q, k, v, attn, proj, h1, tiles, scores },
             );
@@ -268,13 +271,16 @@ impl ForwardPass {
 
         for (bi, blk) in qm.blocks.iter().enumerate() {
             let key = st.key(bi);
-            let ff = blk.qmats[4].cols;
+            // payload snapshot: the whole step runs on one generation even
+            // if a requant swap publishes mid-step (Arc clone, no alloc)
+            let mats = blk.mats();
+            let ff = mats.qmats[4].cols;
             rms_into(x, &blk.g1.data, xn);
-            matvec_qmat(xn, &blk.qmats[0], &self.pool, tiles, q);
+            matvec_qmat(xn, &mats.qmats[0], &self.pool, tiles, q);
             {
                 let (ktok, vtok) = kv_tok.split_at_mut(d);
-                matvec_qmat(xn, &blk.qmats[1], &self.pool, tiles, ktok);
-                matvec_qmat(xn, &blk.qmats[2], &self.pool, tiles, vtok);
+                matvec_qmat(xn, &mats.qmats[1], &self.pool, tiles, ktok);
+                matvec_qmat(xn, &mats.qmats[2], &self.pool, tiles, vtok);
             }
             // the new token's K/V go through the cache codec like the rest
             // of the history: quantized-KV noise applies uniformly
@@ -287,17 +293,17 @@ impl ForwardPass {
                 let mut sc = scores[0].lock().unwrap();
                 decode_attention(q, hist, t + 1, s.n_heads, &mut sc[..t + 1], attn);
             }
-            matvec_qmat(attn, &blk.qmats[3], &self.pool, tiles, proj);
+            matvec_qmat(attn, &mats.qmats[3], &self.pool, tiles, proj);
             for j in 0..d {
                 x[j] += proj[j];
             }
             rms_into(x, &blk.g2.data, xn);
             let h1 = &mut h1[..ff];
-            matvec_qmat(xn, &blk.qmats[4], &self.pool, tiles, h1);
+            matvec_qmat(xn, &mats.qmats[4], &self.pool, tiles, h1);
             for h in h1.iter_mut() {
                 *h = gelu(*h);
             }
-            matvec_qmat(h1, &blk.qmats[5], &self.pool, tiles, proj);
+            matvec_qmat(h1, &mats.qmats[5], &self.pool, tiles, proj);
             for j in 0..d {
                 x[j] += proj[j];
             }
@@ -419,13 +425,17 @@ impl ForwardPass {
         }
 
         for (bi, blk) in qm.blocks.iter().enumerate() {
-            let ff = blk.qmats[4].cols;
+            // payload snapshot: every sequence in this batched step reads
+            // the same generation — a swap landing mid-step cannot split
+            // the batch across precisions (Arc clone, no alloc)
+            let mats = blk.mats();
+            let ff = mats.qmats[4].cols;
             rms_into(x, &blk.g1.data, xn);
             // one fused GEMM per weight matrix for ALL live sequences —
             // each packed tile unpacked once per step
-            matmul_qmat(xn, &blk.qmats[0], m, &self.pool, tiles, q);
-            matmul_qmat(xn, &blk.qmats[1], m, &self.pool, tiles, k);
-            matmul_qmat(xn, &blk.qmats[2], m, &self.pool, tiles, v);
+            matmul_qmat(xn, &mats.qmats[0], m, &self.pool, tiles, q);
+            matmul_qmat(xn, &mats.qmats[1], m, &self.pool, tiles, k);
+            matmul_qmat(xn, &mats.qmats[2], m, &self.pool, tiles, v);
             {
                 let mut sc = scores[0].lock().unwrap();
                 for (i, st) in states.iter().enumerate() {
@@ -453,17 +463,17 @@ impl ForwardPass {
                     );
                 }
             }
-            matmul_qmat(attn, &blk.qmats[3], m, &self.pool, tiles, proj);
+            matmul_qmat(attn, &mats.qmats[3], m, &self.pool, tiles, proj);
             for (xi, oi) in x.iter_mut().zip(proj.iter()) {
                 *xi += *oi;
             }
             rms_into(x, &blk.g2.data, xn);
             let h1 = &mut h1[..m * ff];
-            matmul_qmat(xn, &blk.qmats[4], m, &self.pool, tiles, h1);
+            matmul_qmat(xn, &mats.qmats[4], m, &self.pool, tiles, h1);
             for h in h1.iter_mut() {
                 *h = gelu(*h);
             }
-            matmul_qmat(h1, &blk.qmats[5], m, &self.pool, tiles, proj);
+            matmul_qmat(h1, &mats.qmats[5], m, &self.pool, tiles, proj);
             for (xi, oi) in x.iter_mut().zip(proj.iter()) {
                 *xi += *oi;
             }
@@ -757,7 +767,13 @@ pub fn forward(qm: &QuantizedModel, tokens: &[i32]) -> Result<Vec<f32>> {
 /// Dequantize every block's matrices to f32 — the shadow copies the fused
 /// path no longer keeps resident. Reference/bench use only.
 pub fn dequantize_blocks(qm: &QuantizedModel) -> Vec<Vec<Tensor>> {
-    qm.blocks.iter().map(|b| b.qmats.iter().map(dequantize).collect()).collect()
+    qm.blocks
+        .iter()
+        .map(|b| {
+            let mats = b.mats();
+            mats.qmats.iter().map(dequantize).collect()
+        })
+        .collect()
 }
 
 /// Serial dequantized-weights forward over pre-dequantized `mats` (one

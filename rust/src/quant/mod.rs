@@ -275,6 +275,22 @@ pub fn quantize_pooled(w: &Tensor, prec: Precision, pool: &Pool) -> QMat {
     QMat { prec, rows: k, cols: n, payload }
 }
 
+/// Re-pack an already-quantized matrix at a different precision — the
+/// building block of online requantization (`serving::requant`). The same
+/// target is a cheap clone; otherwise the matrix is dequantized and
+/// re-quantized on the target lattice. Note the information floor: a
+/// demotion then promotion (Q8 → Q4 → Q8) re-packs from the *Q4* lattice,
+/// so promoted payloads carry the coarsest precision the block passed
+/// through — repack never recovers bits, it only changes storage. Repack at
+/// the same precision is exact (`requantize_is_fixed_point`), so swap
+/// round-trips that end where they started at the same rung are no-ops.
+pub fn repack(m: &QMat, target: Precision) -> QMat {
+    if m.prec == target {
+        return m.clone();
+    }
+    quantize(&dequantize(m), target)
+}
+
 /// Map bands in parallel and concatenate the segments in band order.
 fn concat<E: Send + Clone>(
     pool: &Pool,
@@ -914,6 +930,125 @@ mod tests {
             QMat::from_packed_bytes(&f),
             Err(QuantError::BadShape { rows: u32::MAX as usize, cols: u32::MAX as usize })
         );
+    }
+
+    const ALL_PRECISIONS: [Precision; 5] =
+        [Precision::Raw, Precision::Q8, Precision::Q4, Precision::Q3, Precision::T2];
+
+    #[test]
+    fn precision_tag_roundtrip_is_exhaustive_and_stable() {
+        // every variant survives tag() -> from_tag(), the tag values are the
+        // documented wire constants, and they are pairwise distinct
+        for p in ALL_PRECISIONS {
+            assert_eq!(Precision::from_tag(p.tag()), Some(p), "{}", p.label());
+        }
+        assert_eq!(Precision::Raw.tag(), 0);
+        assert_eq!(Precision::Q8.tag(), 1);
+        assert_eq!(Precision::Q4.tag(), 2);
+        assert_eq!(Precision::Q3.tag(), 3);
+        assert_eq!(Precision::T2.tag(), 4);
+        let mut tags: Vec<u8> = ALL_PRECISIONS.iter().map(|p| p.tag()).collect();
+        tags.sort_unstable();
+        tags.dedup();
+        assert_eq!(tags.len(), ALL_PRECISIONS.len(), "tags must be distinct");
+        // every byte outside the assigned range is rejected, not mis-mapped
+        for t in 5..=u8::MAX {
+            assert_eq!(Precision::from_tag(t), None, "tag {t}");
+        }
+    }
+
+    #[test]
+    fn bits_per_param_and_matrix_bytes_are_consistent() {
+        // matrix_bytes must equal ceil-packed payload (bits_per_param) plus
+        // the per-column f32 scales, for every variant and several
+        // group-aligned shapes — the size model the requant controller's
+        // byte accounting and the wire format both ride
+        for (k, n) in [(8usize, 1usize), (16, 8), (32, 24), (96, 56), (64, 3)] {
+            for p in ALL_PRECISIONS {
+                let scale_bytes = if p == Precision::Raw { 0 } else { 4 * n };
+                let payload_bits = p.bits_per_param() * (k * n) as f64;
+                // k is a multiple of 8, so every format packs without edge
+                // padding and the bit count is whole
+                let expect = (payload_bits / 8.0) as usize + scale_bytes;
+                assert_eq!(p.matrix_bytes(k, n), expect, "{} {k}x{n}", p.label());
+            }
+        }
+        // packed QMats agree with the static size model
+        let w = rand_tensor(32, 24, 31, 0.5);
+        for p in ALL_PRECISIONS {
+            let q = quantize(&w, p);
+            assert_eq!(q.size_bytes(), p.matrix_bytes(32, 24), "{}", p.label());
+            let scale_bytes = if p == Precision::Raw { 0 } else { 4 * 24 };
+            assert_eq!(
+                q.packed_bytes().len() + scale_bytes,
+                q.size_bytes(),
+                "{}: payload + scales == size_bytes",
+                p.label()
+            );
+        }
+    }
+
+    #[test]
+    fn wire_rejects_tag_payload_length_disagreement() {
+        // flip ONLY the precision tag on an otherwise valid frame: the
+        // declared payload length no longer matches the bytes present, and
+        // the frame must fail typed (Truncated or TrailingBytes) rather
+        // than parse into a mis-typed QMat. 16x8 is group-aligned for every
+        // format, so the shape itself stays valid — only the length lies.
+        let w = rand_tensor(16, 8, 24, 0.5);
+        for from in ALL_PRECISIONS {
+            let frame = quantize(&w, from).wire_bytes();
+            for to in ALL_PRECISIONS {
+                if to == from {
+                    continue;
+                }
+                let mut f = frame.clone();
+                f[5] = to.tag();
+                let got = QMat::from_packed_bytes(&f);
+                match (&got, from == Precision::Raw || to == Precision::Raw) {
+                    // Raw frames carry no scales, quantized ones do: a
+                    // Raw<->quantized tag flip also trips the scale count
+                    (Err(QuantError::ScaleCountMismatch { .. }), true) => {}
+                    (Err(QuantError::Truncated { .. }), false)
+                    | (Err(QuantError::TrailingBytes { .. }), false) => {}
+                    _ => panic!(
+                        "{} frame retagged {} must fail on length: {got:?}",
+                        from.label(),
+                        to.label()
+                    ),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn repack_changes_precision_and_is_identity_at_the_same_rung() {
+        let w = rand_tensor(32, 24, 29, 0.6);
+        let q8 = quantize(&w, Precision::Q8);
+        // same precision: exact clone, payload bytes untouched
+        assert_eq!(repack(&q8, Precision::Q8), q8);
+        // demotion re-packs on the coarser lattice
+        let q4 = repack(&q8, Precision::Q4);
+        assert_eq!(q4.prec, Precision::Q4);
+        assert_eq!((q4.rows, q4.cols), (32, 24));
+        assert!(q4.size_bytes() < q8.size_bytes());
+        // round-trip Q8 -> Q4 -> Q8: shape and size restored, but the
+        // payload now carries the Q4 information floor (documented loss)
+        let back = repack(&q4, Precision::Q8);
+        assert_eq!(back.prec, Precision::Q8);
+        assert_eq!(back.size_bytes(), q8.size_bytes());
+        // the promoted payload stays on the Q4 lattice to within the Q8
+        // rounding error — it must NOT recover the original Q8 detail
+        let (q4d, backd) = (dequantize(&q4), dequantize(&back));
+        let s8 = back.scales().unwrap();
+        for i in 0..32 {
+            for j in 0..24 {
+                assert!(
+                    (backd.at2(i, j) - q4d.at2(i, j)).abs() <= 0.5 * s8[j] + 1e-7,
+                    "({i},{j}): promotion must re-encode the Q4 lattice"
+                );
+            }
+        }
     }
 
     #[test]

@@ -162,6 +162,28 @@ pub fn bytes_human(b: usize) -> String {
     }
 }
 
+/// Compact rendering of a block-precision residency histogram (indexed by
+/// `Precision::tag()`): non-empty buckets as `label:count`, e.g.
+/// `8bit:20 4bit:10 3bit:2`. `empty` when no blocks are booked at all.
+pub fn residency_compact(counts: &[usize; 5]) -> String {
+    let parts: Vec<String> = counts
+        .iter()
+        .enumerate()
+        .filter(|(_, &c)| c > 0)
+        .map(|(tag, &c)| {
+            let label = crate::quant::Precision::from_tag(tag as u8)
+                .map(|p| p.label())
+                .unwrap_or("?");
+            format!("{label}:{c}")
+        })
+        .collect();
+    if parts.is_empty() {
+        "empty".to_string()
+    } else {
+        parts.join(" ")
+    }
+}
+
 /// Resident-weight accounting table: one row per `(label, resident_bytes,
 /// f32_baseline_bytes)` triple — what a replica actually pins when serving
 /// from packed payloads vs the same weights held fully in f32
@@ -244,6 +266,13 @@ mod tests {
         assert_eq!(bytes_human(2048), "2.0 KiB");
         assert_eq!(bytes_human(5 * 1024 * 1024 + 512 * 1024), "5.5 MiB");
         assert_eq!(bytes_human(3 * 1024 * 1024 * 1024), "3.0 GiB");
+    }
+
+    #[test]
+    fn residency_compact_skips_empty_buckets() {
+        assert_eq!(residency_compact(&[0, 0, 0, 0, 0]), "empty");
+        assert_eq!(residency_compact(&[0, 20, 10, 2, 0]), "8bit:20 4bit:10 3bit:2");
+        assert_eq!(residency_compact(&[1, 0, 0, 0, 3]), "raw:1 1.58bit:3");
     }
 
     #[test]

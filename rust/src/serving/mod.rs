@@ -86,6 +86,22 @@
 //! refcount books at exit (`KvCache::check_invariants`), reporting
 //! violations via `kv_leaked_seqs`.
 //!
+//! **Online requantization** (DESIGN.md §15): with `--requant on`, each
+//! shard runs a precision controller (`serving::requant`) at its queue-turn
+//! boundaries — the only points where nothing is in flight on that shard.
+//! Under memory pressure (resident weight bytes + live KV bytes above
+//! `--requant-high-mb`) it re-packs the lowest-entropy eligible block one
+//! rung down Q8 → Q4 → Q3, guided by entropy rank and, when a trained
+//! FastEWQ classifier is supplied, per-block eligibility; when pressure
+//! falls below `--requant-low-mb` and the queue is idle, demoted blocks
+//! promote back toward their plan precision. Swaps publish atomically
+//! (Arc swap per block, `model::BlockMats`), so in-flight batched decode
+//! streams are never torn — `tests/decode_equivalence.rs` forces scripted
+//! swap schedules under live decode to prove streams stay well-formed and
+//! schedule-deterministic, and the chaos suite crosses swaps with shard
+//! death to prove neither pages nor old payloads leak. Residency and swap
+//! traffic surface as `ServingMetrics::block_residency` / `requant_*`.
+//!
 //! Cross-machine block placement (from `cluster::Distribution`) is simulated:
 //! each batch is charged `hops × link_latency` of virtual network time,
 //! reported separately from wall-clock latency.
@@ -94,6 +110,7 @@
 pub mod faultfx;
 pub mod kvcache;
 mod queues;
+pub mod requant;
 pub mod trace;
 
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -308,10 +325,30 @@ pub struct ServingMetrics {
     pub wall_time: Duration,
     pub max_batch_observed: usize,
     pub virtual_network_us: u64,
-    /// Resident weight bytes across all replicas (each shard reports its
-    /// `QuantizedModel::resident_bytes`; `merge` sums them) — the packed
-    /// footprint the memory-reduction claim is measured by.
+    /// Resident weight bytes across all replicas — the **fleet** total
+    /// (each shard reports its `QuantizedModel::resident_bytes`; `merge`
+    /// sums them) — the packed footprint the memory-reduction claim is
+    /// measured by. Requant swaps update the reporting shard's value live,
+    /// so at shutdown this reflects post-swap packing, and
+    /// `requant_bytes_freed - requant_bytes_regrown` reconciles against the
+    /// drop from the build-time footprint.
     pub resident_weight_bytes: usize,
+    /// Resident weight bytes of ONE replica (`merge` takes the max, so a
+    /// fleet of identical replicas reports the per-replica figure the
+    /// summary reads like — the fleet total above is `n_shards ×` this,
+    /// modulo requant divergence between shards).
+    pub resident_weight_bytes_per_replica: usize,
+    /// Requant swaps committed across all shards (forced + pressure).
+    pub requant_swaps: usize,
+    /// Bytes released by requant demotions across all shards.
+    pub requant_bytes_freed: usize,
+    /// Bytes re-acquired by requant promotions across all shards.
+    pub requant_bytes_regrown: usize,
+    /// Blocks resident per precision rung at shard exit, indexed by
+    /// `Precision::tag()` and summed across shards (`merge` adds
+    /// element-wise): the per-precision block-residency histogram. A fleet
+    /// without requant reports every block at its plan precision.
+    pub block_residency: [usize; 5],
     /// Windows taken from peer queues across all shards (steals + rescues).
     pub steals: usize,
     /// Shard-worker park → wake transitions across all shards.
@@ -404,7 +441,18 @@ impl ServingMetrics {
         self.wall_time = self.wall_time.max(other.wall_time);
         self.max_batch_observed = self.max_batch_observed.max(other.max_batch_observed);
         self.virtual_network_us += other.virtual_network_us;
+        // fleet bytes sum; the per-replica figure takes the max so merging
+        // N identical replicas still reads as one replica's footprint
         self.resident_weight_bytes += other.resident_weight_bytes;
+        self.resident_weight_bytes_per_replica = self
+            .resident_weight_bytes_per_replica
+            .max(other.resident_weight_bytes_per_replica);
+        self.requant_swaps += other.requant_swaps;
+        self.requant_bytes_freed += other.requant_bytes_freed;
+        self.requant_bytes_regrown += other.requant_bytes_regrown;
+        for (mine, theirs) in self.block_residency.iter_mut().zip(other.block_residency) {
+            *mine += theirs;
+        }
         self.steals += other.steals;
         self.wakes += other.wakes;
         self.decode_steps += other.decode_steps;
@@ -424,18 +472,27 @@ impl ServingMetrics {
     }
 
     pub fn summary(&self) -> String {
+        // an empty sample set (everything shed/expired) renders n/a — a
+        // literal "0us" would read as an impossibly fast server
+        let pct = |p: f64| -> String {
+            if self.latencies_us.is_empty() {
+                "n/a".into()
+            } else {
+                format!("{}us", self.percentile_us(p))
+            }
+        };
         let mut s = format!(
             "{} reqs in {:?} ({:.1} req/s), batches {} (mean {:.2}, max {}), \
-             p50 {}us p95 {}us p99 {}us, virtual-net {}us",
+             p50 {} p95 {} p99 {}, virtual-net {}us",
             self.completed,
             self.wall_time,
             self.throughput_rps(),
             self.batches,
             self.mean_batch(),
             self.max_batch_observed,
-            self.percentile_us(0.50),
-            self.percentile_us(0.95),
-            self.percentile_us(0.99),
+            pct(0.50),
+            pct(0.95),
+            pct(0.99),
             self.virtual_network_us,
         );
         if self.rejected > 0 {
@@ -480,8 +537,23 @@ impl ServingMetrics {
         }
         if self.resident_weight_bytes > 0 {
             s.push_str(&format!(
-                ", resident {}",
-                crate::report::bytes_human(self.resident_weight_bytes)
+                ", resident {} ({}/replica)",
+                crate::report::bytes_human(self.resident_weight_bytes),
+                crate::report::bytes_human(self.resident_weight_bytes_per_replica)
+            ));
+        }
+        if self.requant_swaps > 0 {
+            s.push_str(&format!(
+                ", requant {} swaps (freed {}, regrown {})",
+                self.requant_swaps,
+                crate::report::bytes_human(self.requant_bytes_freed),
+                crate::report::bytes_human(self.requant_bytes_regrown)
+            ));
+        }
+        if self.block_residency.iter().any(|&c| c > 0) {
+            s.push_str(&format!(
+                ", blocks [{}]",
+                crate::report::residency_compact(&self.block_residency)
             ));
         }
         if self.shards.len() > 1 {
@@ -613,6 +685,9 @@ impl Coordinator {
         network_hops: usize,
         link_latency_us: u64,
     ) -> Result<Self> {
+        // degenerate knobs fail here, typed, instead of clamping silently or
+        // hanging downstream (`ServeConfig::validate`)
+        cfg.validate()?;
         let n_shards = cfg.workers.max(1);
         let net_us = network_hops as u64 * link_latency_us;
         let batch_cap = cfg.max_batch.min(model.schema.eval_batch).max(1);
@@ -636,6 +711,25 @@ impl Coordinator {
             (cfg.default_deadline_ms > 0).then(|| Duration::from_millis(cfg.default_deadline_ms));
         #[cfg(any(test, feature = "chaos"))]
         let chaos_sched = cfg.chaos.clone().unwrap_or_default();
+
+        // requant policy, built once and shared across shards: eligibility
+        // (plan ladder ∩ optional FastEWQ classifier verdicts), entropy
+        // order, ceilings, watermarks. Also built when only a forced-swap
+        // schedule is present, so scripted swaps work with the pressure
+        // policy off.
+        let requant_plan: Option<Arc<requant::RequantPlan>> =
+            (cfg.requant || !cfg.requant_forced.is_empty()).then(|| {
+                let classifier = cfg
+                    .requant_classifier
+                    .as_deref()
+                    .and_then(crate::fastewq::FastEwq::load_optional);
+                Arc::new(requant::RequantPlan::build(
+                    &cfg,
+                    &model.schema,
+                    &plan,
+                    classifier.as_ref(),
+                ))
+            });
 
         // the shared per-shard work queues the whole fleet drains
         let queues: Arc<ShardQueues<Work>> = Arc::new(ShardQueues::new(n_shards));
@@ -661,6 +755,8 @@ impl Coordinator {
                 max_decode_batch,
                 max_live_seqs,
                 prefix_cache: cfg.prefix_cache,
+                requant: requant_plan.clone(),
+                requant_forced: cfg.requant_forced.clone(),
                 board: board.clone(),
                 #[cfg(any(test, feature = "chaos"))]
                 faults: chaos_sched.for_shard(shard),
@@ -752,7 +848,7 @@ impl Coordinator {
         let _ = self.tx.send(Msg::Req(Request {
             id,
             context,
-            max_new_tokens: max_new_tokens.max(1),
+            max_new_tokens,
             submitted: Instant::now(),
             deadline,
             resp: rtx,
@@ -905,7 +1001,15 @@ fn batcher(rx: Receiver<Msg>, fleet: Fleet, batch_cap: usize, max_wait: Duration
         // blocking wait for the first request (or stop)
         if pending.is_empty() {
             match rx.recv() {
-                Ok(Msg::Req(r)) => pending.push(r),
+                Ok(Msg::Req(r)) => {
+                    // a zero-token generation has no terminal response to
+                    // stream; reject it typed instead of silently clamping
+                    if r.max_new_tokens == 0 {
+                        reject(&r, Status::InvalidContext, &mut acct);
+                    } else {
+                        pending.push(r);
+                    }
+                }
                 Ok(Msg::Stop(mtx)) => {
                     finalize(Some(mtx), handles, acct.metrics);
                     return;
@@ -922,7 +1026,15 @@ fn batcher(rx: Receiver<Msg>, fleet: Fleet, batch_cap: usize, max_wait: Duration
         let mut stop: Option<Sender<ServingMetrics>> = None;
         while pending.len() < batch_cap && window_start.elapsed() < max_wait {
             match rx.recv_timeout(max_wait.saturating_sub(window_start.elapsed())) {
-                Ok(Msg::Req(r)) => pending.push(r),
+                Ok(Msg::Req(r)) => {
+                    // a zero-token generation has no terminal response to
+                    // stream; reject it typed instead of silently clamping
+                    if r.max_new_tokens == 0 {
+                        reject(&r, Status::InvalidContext, &mut acct);
+                    } else {
+                        pending.push(r);
+                    }
+                }
                 Ok(Msg::Stop(mtx)) => {
                     stop = Some(mtx);
                     break;
@@ -962,6 +1074,12 @@ struct ShardCtx {
     /// before charging the KV budget (DESIGN.md §14; off = the equivalence
     /// oracle that always ingests fresh)
     prefix_cache: bool,
+    /// fleet-shared requant policy (`None` = requant fully off: no
+    /// controller is built and block precisions never move)
+    requant: Option<Arc<requant::RequantPlan>>,
+    /// scripted swap schedule (each shard applies it at its own item
+    /// ordinals; see `config::ForcedSwap`)
+    requant_forced: Vec<crate::config::ForcedSwap>,
     /// fleet-shared live per-status counters
     board: Arc<StatusBoard>,
     /// this shard's deterministic fault-injection plan (chaos harness)
@@ -1009,6 +1127,8 @@ fn shard_worker(
         max_decode_batch,
         max_live_seqs,
         prefix_cache,
+        requant,
+        requant_forced,
         board,
         ..
     } = ctx;
@@ -1049,6 +1169,13 @@ fn shard_worker(
 
     let mut acct = Acct::new(shard, board);
     acct.metrics.resident_weight_bytes = qm.resident_bytes();
+    acct.metrics.resident_weight_bytes_per_replica = qm.resident_bytes();
+    // this shard's precision controller (None = requant fully off); swaps
+    // only ever land at the top of the queue loop, between work items
+    let mut requant_ctl =
+        requant.map(|p| requant::Controller::new(p, requant_forced));
+    // work items dequeued so far — the forced-swap schedule's clock
+    let mut item_ord = 0usize;
     let started = Instant::now();
     // this shard's KV cache (decoding sequences are pinned to it) and the
     // reused decode logits buffers (single-row for per-sequence turns and
@@ -1072,6 +1199,24 @@ fn shard_worker(
         if stolen {
             acct.occ.steals += 1;
         }
+        // requant swaps land HERE, at the step boundary: the item just
+        // popped has not started and nothing else is in flight on this
+        // shard, so publishing a new payload generation can never tear a
+        // decode step (snapshots taken mid-step keep the old generation).
+        // Scripted swaps fire first (deterministic timing for the
+        // equivalence harness), then one pressure evaluation.
+        if let Some(ctl) = requant_ctl.as_mut() {
+            ctl.force(&qm, item_ord);
+            // depth includes the item just popped (its slot frees at
+            // `complete`), so <= 1 means nothing else is waiting
+            let queue_idle = queues.depth_snapshot()[shard] <= 1;
+            ctl.step(&qm, kv.allocated_bytes(), queue_idle);
+            // keep residency live so `requant_bytes_freed` reconciles
+            // against the reported footprint at any shutdown point
+            acct.metrics.resident_weight_bytes = qm.resident_bytes();
+            acct.metrics.resident_weight_bytes_per_replica = qm.resident_bytes();
+        }
+        item_ord += 1;
         match work {
             Work::Prefill(batch) => {
                 #[cfg(test)]
@@ -1201,6 +1346,19 @@ fn shard_worker(
         acct.metrics.kv_leaked_seqs += 1;
     }
     acct.metrics.queue_depth_hwm = queues.depth_hwm(shard);
+    // final precision books: the residency histogram is reported even with
+    // requant off (all blocks sit in their build-time bucket), and the swap
+    // counters come straight from the controller so
+    //   initial_resident - final_resident == bytes_freed - bytes_regrown
+    // holds at any shutdown point
+    acct.metrics.block_residency = qm.block_residency();
+    acct.metrics.resident_weight_bytes = qm.resident_bytes();
+    acct.metrics.resident_weight_bytes_per_replica = qm.resident_bytes();
+    if let Some(ctl) = requant_ctl.as_ref() {
+        acct.metrics.requant_swaps = ctl.swaps;
+        acct.metrics.requant_bytes_freed = ctl.bytes_freed;
+        acct.metrics.requant_bytes_regrown = ctl.bytes_regrown;
+    }
     acct.metrics.wall_time = started.elapsed();
     let Acct { metrics: mut m, occ, .. } = acct;
     m.shards = vec![occ];
@@ -1758,7 +1916,131 @@ mod tests {
             3 * expected,
             "every shard pins exactly one packed replica"
         );
+        assert_eq!(
+            m.resident_weight_bytes_per_replica, expected,
+            "the per-replica figure is one replica's footprint, not the fleet sum"
+        );
+        // residency is reported even with requant off: every replica's
+        // blocks sit in their build-time bucket
+        assert_eq!(m.block_residency[Precision::Q4.tag() as usize], 3 * 2);
+        assert_eq!(m.block_residency.iter().sum::<usize>(), 3 * 2);
         assert!(m.summary().contains("resident"));
+        assert!(m.summary().contains("/replica"));
+    }
+
+    /// Every degenerate knob fails at `start_with_model`, typed and naming
+    /// the knob — not as a silent clamp or a downstream hang — and a
+    /// zero-token generation is rejected per-request the same way.
+    #[test]
+    fn degenerate_serve_configs_are_rejected_at_startup() {
+        let model = tiny_model();
+        let plan =
+            QuantPlan::uniform(&model.schema.name, model.schema.n_blocks, Precision::Q8);
+        let bad = [
+            (ServeConfig { max_decode_batch: 0, ..Default::default() }, "max_decode_batch"),
+            (ServeConfig { kv_budget_mb: 0.0, ..Default::default() }, "kv_budget_mb"),
+            (ServeConfig { kv_budget_mb: f64::NAN, ..Default::default() }, "kv_budget_mb"),
+            (ServeConfig { forward_workers: 0, ..Default::default() }, "forward_workers"),
+            (
+                ServeConfig {
+                    requant: true,
+                    requant_low_mb: 64.0,
+                    requant_high_mb: 48.0,
+                    ..Default::default()
+                },
+                "requant",
+            ),
+        ];
+        for (cfg, knob) in bad {
+            let err = Coordinator::start_with_model(model.clone(), plan.clone(), cfg, 0, 0)
+                .err()
+                .expect("degenerate config must fail startup");
+            let msg = format!("{err}");
+            assert!(msg.contains(knob), "error names the offending knob {knob}: {msg}");
+        }
+        // the request-level twin: max_new_tokens == 0 used to be clamped to
+        // 1 in submit_inner, answering a question nobody asked
+        let coord =
+            Coordinator::start_with_model(model, plan, ServeConfig::default(), 0, 0).unwrap();
+        let rx = coord.submit_gen(vec![1, 2], 0);
+        let resps: Vec<Response> = rx.iter().collect();
+        assert_eq!(resps.len(), 1, "exactly one terminal response");
+        assert_eq!(resps[0].status, Status::InvalidContext);
+        assert_eq!(resps[0].next_token, INVALID_TOKEN);
+        let m = coord.shutdown();
+        assert_eq!(m.rejected, 1);
+        assert_eq!(m.statuses[Status::InvalidContext.index()], 1);
+    }
+
+    /// When every request was rejected the latency sample set is empty; the
+    /// summary must say `n/a`, not fabricate a `p50 0us` figure.
+    #[test]
+    fn summary_renders_na_for_percentiles_when_nothing_completed_ok() {
+        let model = tiny_model();
+        let plan =
+            QuantPlan::uniform(&model.schema.name, model.schema.n_blocks, Precision::Q8);
+        let cfg = ServeConfig { max_batch: 4, max_wait_us: 300, ..Default::default() };
+        let coord = Coordinator::start_with_model(model, plan, cfg, 0, 0).unwrap();
+        // out-of-vocab and zero-token: both rejected, excluded from latencies
+        let a = coord.submit(vec![9999]);
+        let b = coord.submit_gen(vec![1, 2], 0);
+        assert_eq!(coord.recv_or_dump(&a, RECV_T).status, Status::InvalidContext);
+        assert_eq!(coord.recv_or_dump(&b, RECV_T).status, Status::InvalidContext);
+        let m = coord.shutdown();
+        assert!(m.latencies_us.is_empty(), "rejects never enter the latency sample");
+        let s = m.summary();
+        assert!(s.contains("p50 n/a p95 n/a p99 n/a"), "empty percentiles render n/a: {s}");
+        assert!(!s.contains("p50 0us"), "no fabricated zero percentile: {s}");
+    }
+
+    /// Scripted swaps on a live coordinator: the controller's byte books
+    /// must reconcile exactly against the reported resident footprint, and
+    /// the residency histogram must account for every block of every
+    /// replica.
+    #[test]
+    fn forced_requant_books_reconcile_with_resident_footprint() {
+        let model = tiny_model();
+        let plan =
+            QuantPlan::uniform(&model.schema.name, model.schema.n_blocks, Precision::Q8);
+        let initial = QuantizedModel::build(&model, &plan).unwrap().resident_bytes();
+        let forced = vec![
+            crate::config::ForcedSwap { after_item: 0, block: 0, prec: Precision::Q4 },
+            crate::config::ForcedSwap { after_item: 1, block: 1, prec: Precision::Q3 },
+            crate::config::ForcedSwap { after_item: 2, block: 0, prec: Precision::Q8 },
+        ];
+        let cfg = ServeConfig {
+            workers: 1,
+            max_batch: 1,
+            max_wait_us: 200,
+            requant_forced: forced,
+            ..Default::default()
+        };
+        let coord = Coordinator::start_with_model(model, plan, cfg, 0, 0).unwrap();
+        // serialized submission so item ordinals are deterministic; enough
+        // items that every scripted swap fires
+        for i in 0..5 {
+            let rx = coord.submit(vec![(i % 64) as i32, 1, 2]);
+            let r = coord.recv_or_dump(&rx, RECV_T);
+            assert_eq!(r.status, Status::Ok, "request {i} served across swaps");
+        }
+        let m = coord.shutdown();
+        assert_eq!(m.requant_swaps, 3, "every scripted swap fired");
+        assert!(m.requant_bytes_freed > 0);
+        assert!(m.requant_bytes_regrown > 0, "the Q8 restore regrows bytes");
+        assert_eq!(
+            initial - m.resident_weight_bytes,
+            m.requant_bytes_freed - m.requant_bytes_regrown,
+            "controller books reconcile with the reported footprint"
+        );
+        assert_eq!(
+            m.resident_weight_bytes, m.resident_weight_bytes_per_replica,
+            "single replica: fleet total equals the per-replica figure"
+        );
+        // final residency: block 0 back at Q8, block 1 parked at Q3
+        assert_eq!(m.block_residency[Precision::Q8.tag() as usize], 1);
+        assert_eq!(m.block_residency[Precision::Q3.tag() as usize], 1);
+        assert_eq!(m.block_residency.iter().sum::<usize>(), 2, "every block accounted");
+        assert!(m.summary().contains("requant 3 swaps"));
     }
 
     #[test]
@@ -2115,8 +2397,10 @@ mod tests {
         assert_eq!(m.rejected, 2);
         assert_eq!(m.statuses[Status::InvalidContext.index()], 2);
         // a kv budget too small for even one page fails generations cleanly
-        // (and classic requests, which never touch the cache, still work)
-        let cfg = ServeConfig { kv_budget_mb: 0.0, max_wait_us: 300, ..Default::default() };
+        // (and classic requests, which never touch the cache, still work);
+        // the budget must be positive to pass startup validation, so use one
+        // that cannot fit a single page rather than zero
+        let cfg = ServeConfig { kv_budget_mb: 1e-6, max_wait_us: 300, ..Default::default() };
         let coord = Coordinator::start_with_model(model, plan, cfg, 0, 0).unwrap();
         let starved = coord.submit_gen(vec![1, 2], 4);
         let resps: Vec<Response> = starved.iter().collect();
@@ -2499,6 +2783,12 @@ mod tests {
             prefix_tokens_reused: 16,
             kv_shared_bytes: 256,
             kv_leaked_seqs: 0,
+            resident_weight_bytes_per_replica: 1000,
+            requant_swaps: 2,
+            requant_bytes_freed: 300,
+            requant_bytes_regrown: 100,
+            block_residency: [0, 1, 1, 0, 0],
+            ..Default::default()
         };
         let b = ServingMetrics {
             completed: 2,
@@ -2529,6 +2819,12 @@ mod tests {
             prefix_tokens_reused: 32,
             kv_shared_bytes: 512,
             kv_leaked_seqs: 0,
+            resident_weight_bytes_per_replica: 800,
+            requant_swaps: 1,
+            requant_bytes_freed: 50,
+            requant_bytes_regrown: 0,
+            block_residency: [0, 1, 0, 1, 0],
+            ..Default::default()
         };
         a.merge(b);
         assert_eq!(a.completed, 5);
@@ -2553,6 +2849,14 @@ mod tests {
         assert_eq!(a.prefix_tokens_reused, 48, "reused-token counts sum across shards");
         assert_eq!(a.kv_shared_bytes, 768, "shared-page byte counts sum across shards");
         assert_eq!(a.kv_leaked_seqs, 0);
+        // fleet total sums; the per-replica figure is a representative
+        // footprint, so it merges as max, never a sum
+        assert_eq!(a.resident_weight_bytes_per_replica, 1000);
+        assert_eq!(a.requant_swaps, 3, "swap counts sum across shards");
+        assert_eq!(a.requant_bytes_freed, 350);
+        assert_eq!(a.requant_bytes_regrown, 100);
+        assert_eq!(a.block_residency, [0, 2, 1, 1, 0], "residency merges element-wise");
+        assert!(a.summary().contains("requant 3 swaps"));
         assert!(a.summary().contains("prefix hits 3"));
         assert!(a.summary().contains("shed 1"));
         assert!(a.summary().contains("q-hwm 5"));

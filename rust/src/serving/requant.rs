@@ -1,0 +1,400 @@
+//! Online precision controller (DESIGN.md §15): per-replica adaptive
+//! requantization under live load.
+//!
+//! Each shard holds a `Controller` and calls it once per queue turn, at the
+//! step boundary right after dequeue — the popped item has not started and
+//! nothing else is in flight on that shard, so a swap committed here can
+//! never tear a decode step. The controller compares the replica's memory
+//! pressure (`QuantizedModel::resident_bytes` + live KV bytes) against the
+//! configured watermarks:
+//!
+//! - **above `high_bytes`**: demote the lowest-entropy eligible block one
+//!   rung down the Q8 → Q4 → Q3 ladder (the paper's layer-entropy result:
+//!   low-entropy blocks tolerate aggressive quantization best, and the
+//!   FastEWQ classifier confirms per-block eligibility in O(1) without
+//!   touching weights);
+//! - **below `low_bytes` with an idle queue**: promote the highest-entropy
+//!   demoted block one rung back toward its plan-assigned ceiling.
+//!
+//! One rung per boundary keeps the off-hot-path repack cost bounded and
+//! lets pressure re-evaluate between moves. The swap itself is
+//! `QuantizedModel::requantize_block`: re-pack on the controller's thread,
+//! publish via Arc swap — in-flight snapshots keep the old generation alive
+//! until their step finishes, so streams spanning a swap stay well-formed
+//! (the forced-swap properties in `tests/decode_equivalence.rs` pin this).
+//!
+//! Promotion has an information floor: a demoted block re-packs from its
+//! current lattice, so Q8 → Q4 → Q8 restores the *bytes* but carries Q4
+//! fidelity until a fresh build (`quant::repack`). That is the right
+//! trade-off for a live replica — the alternative is keeping an f32 shadow
+//! copy resident, which is exactly the footprint this controller exists to
+//! shed.
+
+use std::sync::Arc;
+
+use crate::config::{ForcedSwap, ServeConfig};
+use crate::ewq::QuantPlan;
+use crate::fastewq::FastEwq;
+use crate::model::QuantizedModel;
+use crate::quant::Precision;
+use crate::zoo::Schema;
+
+/// One rung down the online ladder (Raw and T2 blocks are never touched:
+/// Raw is a deliberate full-precision assignment, T2 has no lower rung and
+/// promoting it would misrepresent its ternary lattice as Q3).
+fn demote_rung(p: Precision) -> Option<Precision> {
+    match p {
+        Precision::Q8 => Some(Precision::Q4),
+        Precision::Q4 => Some(Precision::Q3),
+        _ => None,
+    }
+}
+
+/// One rung back up the ladder.
+fn promote_rung(p: Precision) -> Option<Precision> {
+    match p {
+        Precision::Q3 => Some(Precision::Q4),
+        Precision::Q4 => Some(Precision::Q8),
+        _ => None,
+    }
+}
+
+/// Fleet-shared requant policy, built once at coordinator startup and
+/// shared `Arc`-wise with every shard: which blocks may move, in what
+/// entropy order, toward which ceilings, between which watermarks.
+pub struct RequantPlan {
+    /// Whether block `b` may be touched at all: its plan precision is on
+    /// the Q8/Q4/Q3 ladder AND the FastEWQ classifier (when provided)
+    /// marks it safe to quantize.
+    pub eligible: Vec<bool>,
+    /// Block indices in ascending entropy order (`QuantPlan::priority`):
+    /// demotions walk it front-to-back (lowest entropy first), promotions
+    /// back-to-front.
+    pub order: Vec<usize>,
+    /// Per-block promotion ceiling — the plan's assigned precision.
+    pub ceiling: Vec<Precision>,
+    /// Promote below this pressure (bytes), when the queue is idle.
+    pub low_bytes: usize,
+    /// Demote above this pressure (bytes).
+    pub high_bytes: usize,
+    /// Whether pressure-driven stepping is on (`ServeConfig::requant`).
+    /// Scripted `ForcedSwap`s apply regardless, so equivalence tests can
+    /// pin swap timing without enabling the pressure policy.
+    pub auto: bool,
+}
+
+impl RequantPlan {
+    pub fn build(
+        cfg: &ServeConfig,
+        schema: &Schema,
+        plan: &QuantPlan,
+        classifier: Option<&FastEwq>,
+    ) -> Self {
+        let n = schema.n_blocks;
+        assert_eq!(plan.assignments.len(), n);
+        // Every block matrix packs along k ∈ {d_model, d_ff}; Q3 (the
+        // ladder's strictest rung) needs k % 8 == 0, so a model whose dims
+        // break that must never enter the demotion path — `quant::repack`
+        // would assert mid-serve. Gate it here, once, for the whole fleet.
+        let dims_ok = schema.d_model % 8 == 0 && schema.d_ff % 8 == 0;
+        let eligible: Vec<bool> = (0..n)
+            .map(|b| {
+                let on_ladder = matches!(
+                    plan.assignments[b],
+                    Precision::Q8 | Precision::Q4 | Precision::Q3
+                );
+                dims_ok && on_ladder && classifier.map_or(true, |c| c.classify_block(schema, b))
+            })
+            .collect();
+        // plans built without entropy analysis (uniform) carry an identity
+        // priority; tolerate a malformed one rather than panic a shard
+        let order: Vec<usize> = if plan.priority.len() == n
+            && plan.priority.iter().all(|&b| b < n)
+        {
+            plan.priority.clone()
+        } else {
+            (0..n).collect()
+        };
+        Self {
+            eligible,
+            order,
+            ceiling: plan.assignments.clone(),
+            low_bytes: (cfg.requant_low_mb.max(0.0) * 1e6) as usize,
+            high_bytes: (cfg.requant_high_mb.max(0.0) * 1e6) as usize,
+            auto: cfg.requant,
+        }
+    }
+}
+
+/// Per-shard controller state: the shared policy, this shard's progress
+/// through the scripted swap schedule, and its swap accounting (surfaced
+/// as `ServingMetrics::requant_*` at shard exit).
+pub struct Controller {
+    plan: Arc<RequantPlan>,
+    /// Scripted swaps sorted by `after_item`; `forced_idx` is the cursor.
+    forced: Vec<ForcedSwap>,
+    forced_idx: usize,
+    /// Swaps committed (forced + pressure-driven; same-rung no-ops excluded).
+    pub swaps: usize,
+    /// Bytes released by demotions.
+    pub bytes_freed: usize,
+    /// Bytes re-acquired by promotions.
+    pub bytes_regrown: usize,
+}
+
+impl Controller {
+    pub fn new(plan: Arc<RequantPlan>, mut forced: Vec<ForcedSwap>) -> Self {
+        forced.sort_by_key(|f| f.after_item);
+        Self { plan, forced, forced_idx: 0, swaps: 0, bytes_freed: 0, bytes_regrown: 0 }
+    }
+
+    /// Commit one swap and book its bytes. Returns false (and commits
+    /// nothing) when the block is already at `target`.
+    fn swap(&mut self, qm: &QuantizedModel, block: usize, target: Precision) -> bool {
+        if qm.blocks[block].prec() == target {
+            return false;
+        }
+        let (old, new) = qm.requantize_block(block, target);
+        self.swaps += 1;
+        if new < old {
+            self.bytes_freed += old - new;
+        } else {
+            self.bytes_regrown += new - old;
+        }
+        true
+    }
+
+    /// Fire every scripted swap whose `after_item <= item_ord`, in schedule
+    /// order. `item_ord` is how many work items this shard dequeued
+    /// *before* the current one, so `after_item: k` lands at the boundary
+    /// between the shard's k-th and (k+1)-th item.
+    pub fn force(&mut self, qm: &QuantizedModel, item_ord: usize) {
+        while self.forced_idx < self.forced.len()
+            && self.forced[self.forced_idx].after_item <= item_ord
+        {
+            let f = self.forced[self.forced_idx].clone();
+            self.forced_idx += 1;
+            self.swap(qm, f.block, f.prec);
+        }
+    }
+
+    /// One pressure evaluation at a step boundary. At most one rung moves
+    /// per call. Returns whether a swap was committed.
+    pub fn step(&mut self, qm: &QuantizedModel, kv_bytes: usize, queue_idle: bool) -> bool {
+        if !self.plan.auto {
+            return false;
+        }
+        let pressure = qm.resident_bytes() + kv_bytes;
+        if pressure > self.plan.high_bytes {
+            for &b in &self.plan.order {
+                if !self.plan.eligible[b] {
+                    continue;
+                }
+                if let Some(t) = demote_rung(qm.blocks[b].prec()) {
+                    return self.swap(qm, b, t);
+                }
+            }
+        } else if pressure < self.plan.low_bytes && queue_idle {
+            for &b in self.plan.order.iter().rev() {
+                if !self.plan.eligible[b] {
+                    continue;
+                }
+                let cur = qm.blocks[b].prec();
+                if cur < self.plan.ceiling[b] {
+                    if let Some(t) = promote_rung(cur) {
+                        return self.swap(qm, b, t);
+                    }
+                }
+            }
+        }
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::zoo::gen::{synthetic_model_dir, Profile, SyntheticArch};
+
+    fn arch(n_blocks: usize) -> SyntheticArch {
+        SyntheticArch {
+            schema: Schema {
+                name: "requant-ctl".into(),
+                n_blocks,
+                d_model: 96,
+                n_heads: 4,
+                d_ff: 384,
+                vocab: 256,
+                seq_len: 16,
+                eval_batch: 4,
+            },
+            profile: Profile::RampUp,
+            seed: 31,
+        }
+    }
+
+    fn model_and_plan(n: usize, prec: Precision) -> (QuantizedModel, QuantPlan) {
+        let model = synthetic_model_dir(&arch(n));
+        let plan = QuantPlan::uniform("m", n, prec);
+        (QuantizedModel::build(&model, &plan).unwrap(), plan)
+    }
+
+    fn cfg(low_mb: f64, high_mb: f64, auto: bool) -> ServeConfig {
+        ServeConfig {
+            requant: auto,
+            requant_low_mb: low_mb,
+            requant_high_mb: high_mb,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn plan_eligibility_excludes_off_ladder_blocks_and_respects_priority() {
+        let model = synthetic_model_dir(&arch(4));
+        let mut plan = QuantPlan::uniform("m", 4, Precision::Q8);
+        plan.assignments[1] = Precision::Raw;
+        plan.assignments[2] = Precision::T2;
+        plan.priority = vec![3, 0, 2, 1];
+        let qm = QuantizedModel::build(&model, &plan).unwrap();
+        let rp = RequantPlan::build(&cfg(1.0, 2.0, true), &qm.schema, &plan, None);
+        assert_eq!(rp.eligible, vec![true, false, false, true]);
+        assert_eq!(rp.order, vec![3, 0, 2, 1]);
+        assert_eq!(rp.ceiling, plan.assignments);
+        assert_eq!(rp.low_bytes, 1_000_000);
+        assert_eq!(rp.high_bytes, 2_000_000);
+        // a malformed priority falls back to identity order
+        let mut bad = plan.clone();
+        bad.priority = vec![9, 9];
+        let rp = RequantPlan::build(&cfg(1.0, 2.0, true), &qm.schema, &bad, None);
+        assert_eq!(rp.order, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn pressure_demotes_in_entropy_order_down_the_ladder() {
+        let (qm, plan) = model_and_plan(4, Precision::Q8);
+        // high watermark of 0 bytes is unreachable-low: always over pressure
+        let rp = Arc::new(RequantPlan::build(&cfg(0.0, 1e-9, true), &qm.schema, &plan, None));
+        let mut ctl = Controller::new(rp, Vec::new());
+        let start = qm.resident_bytes();
+        // priority is ascending entropy; demotions must follow it
+        let order = plan.priority.clone();
+        assert!(ctl.step(&qm, 0, false));
+        assert_eq!(qm.blocks[order[0]].prec(), Precision::Q4, "lowest entropy demotes first");
+        assert!(ctl.step(&qm, 0, false));
+        assert_eq!(qm.blocks[order[0]].prec(), Precision::Q3, "same block takes the next rung");
+        assert!(ctl.step(&qm, 0, false));
+        assert_eq!(qm.blocks[order[1]].prec(), Precision::Q4, "then the next-lowest block");
+        assert_eq!(ctl.swaps, 3);
+        assert_eq!(ctl.bytes_regrown, 0);
+        assert_eq!(start - qm.resident_bytes(), ctl.bytes_freed, "books reconcile");
+        // exhaust the ladder: every eligible block bottoms out at Q3, then
+        // pressure steps become no-ops instead of thrashing
+        while ctl.step(&qm, 0, false) {}
+        assert!(qm.blocks.iter().all(|b| b.prec() == Precision::Q3));
+        assert!(!ctl.step(&qm, 0, false));
+    }
+
+    #[test]
+    fn idle_promotion_returns_to_ceiling_and_books_reconcile() {
+        let (qm, plan) = model_and_plan(3, Precision::Q8);
+        let start = qm.resident_bytes();
+        // huge watermarks: always under the low mark
+        let rp = Arc::new(RequantPlan::build(&cfg(1e6, 2e6, true), &qm.schema, &plan, None));
+        let mut ctl = Controller::new(rp, Vec::new());
+        // pre-demote two blocks via the forced path
+        ctl.force_swap_for_test(&qm, 0, Precision::Q3);
+        ctl.force_swap_for_test(&qm, 2, Precision::Q4);
+        assert_eq!(ctl.swaps, 2);
+        // busy queue blocks promotion
+        assert!(!ctl.step(&qm, 0, false));
+        // idle: promote one rung per boundary until every block is back at
+        // its plan ceiling
+        let mut guard = 0;
+        while ctl.step(&qm, 0, true) {
+            guard += 1;
+            assert!(guard < 10, "promotion must terminate");
+        }
+        assert!(qm.blocks.iter().all(|b| b.prec() == Precision::Q8));
+        assert_eq!(qm.resident_bytes(), start, "byte accounting returns to the ceiling");
+        assert_eq!(
+            ctl.bytes_freed, ctl.bytes_regrown,
+            "freed and regrown reconcile after a full round trip"
+        );
+        // at ceiling + idle: no-op, never promotes past the plan
+        assert!(!ctl.step(&qm, 0, true));
+    }
+
+    #[test]
+    fn kv_bytes_count_toward_pressure() {
+        let (qm, plan) = model_and_plan(2, Precision::Q8);
+        let resident = qm.resident_bytes();
+        // high watermark just above the weights alone: weights-only is calm,
+        // weights + KV is over
+        let high_mb = (resident + 1) as f64 / 1e6;
+        let rp =
+            Arc::new(RequantPlan::build(&cfg(high_mb / 2.0, high_mb, true), &qm.schema, &plan, None));
+        let mut ctl = Controller::new(rp, Vec::new());
+        assert!(!ctl.step(&qm, 0, false), "no KV pressure: no swap");
+        assert!(ctl.step(&qm, 4096, false), "KV bytes push pressure over the mark");
+    }
+
+    #[test]
+    fn forced_schedule_fires_in_item_order_and_skips_noops() {
+        let (qm, _plan) = model_and_plan(2, Precision::Q8);
+        let plan = QuantPlan::uniform("m", 2, Precision::Q8);
+        let rp = Arc::new(RequantPlan::build(&cfg(1.0, 2.0, false), &qm.schema, &plan, None));
+        let forced = vec![
+            ForcedSwap { after_item: 3, block: 0, prec: Precision::Q8 }, // no-op rung
+            ForcedSwap { after_item: 1, block: 0, prec: Precision::Q4 },
+            ForcedSwap { after_item: 3, block: 1, prec: Precision::Q3 },
+        ];
+        let mut ctl = Controller::new(rp, forced);
+        ctl.force(&qm, 0);
+        assert_eq!(ctl.swaps, 0, "nothing due before item 1");
+        assert_eq!(qm.blocks[0].prec(), Precision::Q8);
+        ctl.force(&qm, 1);
+        assert_eq!(qm.blocks[0].prec(), Precision::Q4);
+        assert_eq!(ctl.swaps, 1);
+        ctl.force(&qm, 5);
+        assert_eq!(qm.blocks[1].prec(), Precision::Q3, "late swaps catch up");
+        assert_eq!(ctl.swaps, 2, "the same-rung scripted swap is not counted");
+        // auto is off: pressure stepping never fires even over the mark
+        assert!(!ctl.step(&qm, usize::MAX / 2, false));
+    }
+
+    #[test]
+    fn ladder_incompatible_dims_disable_every_block() {
+        // d_model = 96 is ladder-safe; a schema with d_ff not divisible by 8
+        // must come back fully ineligible so the controller never demotes
+        // into a rung `quant::repack` would reject.
+        let (qm, plan) = model_and_plan(3, Precision::Q8);
+        let mut bad = qm.schema.clone();
+        bad.d_ff = 100; // % 8 != 0
+        let rp = RequantPlan::build(&cfg(0.0, 1e-9, true), &bad, &plan, None);
+        assert!(rp.eligible.iter().all(|&e| !e));
+        let mut ctl = Controller::new(Arc::new(rp), Vec::new());
+        assert!(!ctl.step(&qm, usize::MAX / 2, false), "no eligible block: no swap under pressure");
+        assert_eq!(ctl.swaps, 0);
+    }
+
+    #[test]
+    fn classifier_gates_eligibility() {
+        use crate::ewq::EwqConfig;
+        use crate::fastewq::{build_dataset, FastEwq};
+        let (qm, plan) = model_and_plan(3, Precision::Q8);
+        let rows = build_dataset(150, 9, &[], &EwqConfig::default());
+        let fe = FastEwq::train(&rows, 12, 5, 3);
+        let rp = RequantPlan::build(&cfg(1.0, 2.0, true), &qm.schema, &plan, Some(&fe));
+        // the classifier's verdict — whatever it is for this tiny synthetic
+        // schema — must be what gates eligibility block-for-block
+        let verdicts = fe.classify_model(&qm.schema);
+        assert_eq!(rp.eligible, verdicts);
+    }
+
+    impl Controller {
+        /// Test seam: commit one swap outside a schedule.
+        fn force_swap_for_test(&mut self, qm: &QuantizedModel, block: usize, prec: Precision) {
+            self.swap(qm, block, prec);
+        }
+    }
+}

@@ -20,7 +20,7 @@
 use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::time::Duration;
 
-use ewq::config::{DispatchPolicy, ServeConfig};
+use ewq::config::{DispatchPolicy, ForcedSwap, ServeConfig};
 use ewq::ewq::QuantPlan;
 use ewq::quant::Precision;
 use ewq::serving::faultfx::ChaosSchedule;
@@ -101,6 +101,18 @@ fn run_fleet(model: &ModelDir, cfg: ServeConfig) -> (Vec<Vec<Response>>, Serving
     (streams, coord.shutdown())
 }
 
+/// CI crosses the whole harness with the requant controller armed
+/// (`EWQ_CHAOS_REQUANT=on`, DESIGN.md §15): with the default watermarks the
+/// tiny model never crosses the high mark and every block already sits at
+/// its ceiling, so ZERO swaps fire and every bit-exactness assertion below
+/// still holds — what the cross exercises is the controller's per-boundary
+/// pressure evaluation interleaved with shard deaths, stalls, and KV
+/// denials. Scripted-swap coverage (where streams legitimately change) is
+/// the dedicated test at the bottom.
+fn requant_armed() -> bool {
+    std::env::var("EWQ_CHAOS_REQUANT").map(|v| v == "on" || v == "1").unwrap_or(false)
+}
+
 fn base_cfg(policy: DispatchPolicy, max_decode_batch: usize) -> ServeConfig {
     ServeConfig {
         max_batch: 2,
@@ -108,6 +120,7 @@ fn base_cfg(policy: DispatchPolicy, max_decode_batch: usize) -> ServeConfig {
         workers: WORKERS,
         dispatch: policy,
         max_decode_batch,
+        requant: requant_armed(),
         ..Default::default()
     }
 }
@@ -159,6 +172,11 @@ fn every_request_gets_exactly_one_terminal_status_under_chaos() {
                 // surviving shard's exit-time page audit balanced exactly
                 // (dead shards' caches died with their threads)
                 assert_eq!(metrics.kv_leaked_seqs, 0, "{tag}: KV books unbalanced at exit");
+                // the EWQ_CHAOS_REQUANT=on cross must stay inert: armed
+                // controller, zero pressure, zero swaps — or the bit-exact
+                // prefix assertions below would be comparing different
+                // precisions
+                assert_eq!(metrics.requant_swaps, 0, "{tag}: armed-but-idle requant swapped");
                 assert_eq!(streams.len(), N_GEN + N_CLASSIC);
                 for (i, resps) in streams.iter().enumerate() {
                     assert!(!resps.is_empty(), "{tag}: request {i} got no terminal response");
@@ -195,6 +213,83 @@ fn every_request_gets_exactly_one_terminal_status_under_chaos() {
                             "{tag}: failed terminal must carry the sentinel"
                         );
                     }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn forced_requant_swaps_under_chaos_keep_every_stream_well_formed() {
+    // Scripted precision swaps (DESIGN.md §15) crossed with seeded faults.
+    // No bit-prefix claim here — a death or stall shifts item ordinals, so
+    // the swaps land at different decode positions than in a fault-free run
+    // and the streamed tokens legitimately differ. What must hold in every
+    // cell: the exactly-one-terminal contract, balanced KV refcounts on
+    // every surviving shard, the swaps actually firing, and the precision
+    // residency books accounting for every surviving replica's blocks.
+    let model = chaos_model();
+    let forced = vec![
+        ForcedSwap { after_item: 0, block: 0, prec: Precision::Q4 },
+        ForcedSwap { after_item: 2, block: 1, prec: Precision::Q4 },
+        ForcedSwap { after_item: 4, block: 0, prec: Precision::Q8 },
+    ];
+    for seed in [7u64, 42] {
+        let sched = ChaosSchedule::seeded(seed, WORKERS);
+        for policy in [DispatchPolicy::RoundRobin, DispatchPolicy::WorkSteal] {
+            for max_decode_batch in [1usize, 16] {
+                let tag = format!(
+                    "seed={seed} policy={policy:?} max_decode_batch={max_decode_batch}"
+                );
+                let mut cfg = base_cfg(policy, max_decode_batch);
+                cfg.chaos = Some(sched.clone());
+                cfg.requant_forced = forced.clone();
+                let (streams, metrics) = run_fleet(&model, cfg);
+                assert_eq!(metrics.kv_leaked_seqs, 0, "{tag}: KV books unbalanced at exit");
+                // at least one shard survives these seeds and pops items,
+                // so the schedule's head fires even under fire
+                assert!(metrics.requant_swaps > 0, "{tag}: no swap ever fired");
+                // every surviving replica books all of its blocks, each in
+                // exactly one precision bucket
+                let booked: usize = metrics.block_residency.iter().sum();
+                assert!(booked > 0, "{tag}: no residency reported");
+                assert_eq!(
+                    booked % model.schema.n_blocks,
+                    0,
+                    "{tag}: residency must cover whole replicas, got {booked}"
+                );
+                assert_eq!(streams.len(), N_GEN + N_CLASSIC);
+                for (i, resps) in streams.iter().enumerate() {
+                    assert!(!resps.is_empty(), "{tag}: request {i} got no terminal response");
+                    let (last, streamed) = resps.split_last().unwrap();
+                    for r in streamed {
+                        assert_eq!(r.status, Status::Ok, "{tag}: non-terminal non-Ok on {i}");
+                    }
+                    let expected = if i < N_GEN { GEN_TOKENS } else { 1 };
+                    assert!(
+                        resps.len() <= expected,
+                        "{tag}: request {i} over-answered ({} responses)",
+                        resps.len()
+                    );
+                    for r in resps {
+                        if r.status == Status::Ok {
+                            assert!(
+                                (0..64).contains(&r.next_token),
+                                "{tag}: request {i} streamed out-of-vocab {}",
+                                r.next_token
+                            );
+                        } else {
+                            assert_eq!(
+                                r.next_token,
+                                ewq::serving::INVALID_TOKEN,
+                                "{tag}: failed terminal must carry the sentinel"
+                            );
+                        }
+                    }
+                    assert!(
+                        last.status == Status::Ok || streamed.iter().all(|r| r.status == Status::Ok),
+                        "{tag}: request {i} mixed failure into the stream"
+                    );
                 }
             }
         }

@@ -712,6 +712,205 @@ fn prefix_cache_streams_bit_identical_to_off_oracle_across_serving_matrix() {
     }
 }
 
+// ---- online requantization under live decode (DESIGN.md §15) ---------------
+
+/// Serve `n_req` generation requests of `n_tok` tokens under an arbitrary
+/// config; `serialize` drains each stream before submitting the next (the
+/// deterministic-placement mode the forced-swap equivalence cells need).
+/// Returns per-request `(token, status)` streams plus merged metrics.
+fn serve_requant_streams(
+    model: &ewq::zoo::ModelDir,
+    cfg: ewq::config::ServeConfig,
+    n_req: usize,
+    n_tok: usize,
+    serialize: bool,
+) -> (Vec<Vec<(i32, ewq::serving::Status)>>, ewq::serving::ServingMetrics) {
+    use ewq::serving::Coordinator;
+    let s = &model.schema;
+    let plan = QuantPlan::uniform(&s.name, s.n_blocks, Precision::Q8);
+    let coord = Coordinator::start_with_model(model.clone(), plan, cfg, 0, 0).unwrap();
+    let v = s.vocab as i32;
+    let ctx_for = |i: usize| vec![(i as i32 * 5 + 1) % v, (i as i32 * 11 + 3) % v];
+    let collect = |rx: std::sync::mpsc::Receiver<ewq::serving::Response>| {
+        rx.iter().map(|r| (r.next_token, r.status)).collect::<Vec<_>>()
+    };
+    let streams: Vec<Vec<(i32, ewq::serving::Status)>> = if serialize {
+        (0..n_req).map(|i| collect(coord.submit_gen(ctx_for(i), n_tok))).collect()
+    } else {
+        let rxs: Vec<_> = (0..n_req).map(|i| coord.submit_gen(ctx_for(i), n_tok)).collect();
+        rxs.into_iter().map(collect).collect()
+    };
+    (streams, coord.shutdown())
+}
+
+fn assert_well_formed(
+    streams: &[Vec<(i32, ewq::serving::Status)>],
+    n_tok: usize,
+    cell: &str,
+) {
+    for (i, st) in streams.iter().enumerate() {
+        assert_eq!(st.len(), n_tok, "{cell}: stream {i} length");
+        for &(tok, status) in st {
+            assert_eq!(status, ewq::serving::Status::Ok, "{cell}: stream {i}");
+            assert!((0..64).contains(&tok), "{cell}: stream {i} token {tok}");
+        }
+    }
+}
+
+#[test]
+fn batched_streams_unchanged_when_requant_is_armed_without_pressure() {
+    // requant ON with the default (enormous) watermarks: the controller
+    // evaluates pressure at every step boundary but never crosses high, and
+    // every block already sits at its ceiling so idle promotion is a no-op
+    // — zero swaps, and every stream bit-identical to requant OFF, across
+    // the full worker/policy/batch-cap matrix
+    let model = serve_model();
+    let cfg = |requant: bool, workers, dispatch, max_db| ewq::config::ServeConfig {
+        max_batch: 4,
+        max_wait_us: 500,
+        workers,
+        dispatch,
+        max_decode_batch: max_db,
+        requant,
+        ..Default::default()
+    };
+    let (baseline, _) = serve_requant_streams(
+        &model,
+        cfg(false, 1, ewq::config::DispatchPolicy::WorkSteal, 1),
+        5,
+        4,
+        false,
+    );
+    assert_well_formed(&baseline, 4, "baseline");
+    for policy in ALL_POLICIES {
+        for workers in worker_matrix() {
+            for max_db in [1usize, 4, 16] {
+                let cell = format!(
+                    "workers={workers} policy={} max_db={max_db}",
+                    policy.label()
+                );
+                let (streams, m) = serve_requant_streams(
+                    &model,
+                    cfg(true, workers, policy, max_db),
+                    5,
+                    4,
+                    false,
+                );
+                assert_eq!(baseline, streams, "armed-but-idle requant moved a bit: {cell}");
+                assert_eq!(m.requant_swaps, 0, "no pressure, no swaps: {cell}");
+                assert_eq!(m.kv_leaked_seqs, 0, "{cell}");
+            }
+        }
+    }
+}
+
+#[test]
+fn forced_requant_swaps_yield_schedule_deterministic_batched_streams() {
+    // the acceptance scenario: a scripted Q8 -> Q4 -> Q8 round-trip on
+    // block 0 (plus a parked Q4 on block 1) fires between work items while
+    // generation streams are live, across 1/2/7(/CI) workers and all three
+    // dispatch policies. Submission is serialized so window placement is
+    // deterministic under RoundRobin (the rr counter) and ShortestQueue
+    // (empty-queue tie-break): those cells must reproduce bit-for-bit
+    // across runs. WorkSteal races stealing against the popper, so swap
+    // ordinals land on different shards run to run — its cells assert
+    // well-formedness and the books, not bit-equality.
+    let model = serve_model();
+    let forced = vec![
+        ewq::config::ForcedSwap { after_item: 0, block: 0, prec: Precision::Q4 },
+        ewq::config::ForcedSwap { after_item: 1, block: 1, prec: Precision::Q4 },
+        ewq::config::ForcedSwap { after_item: 2, block: 0, prec: Precision::Q8 },
+    ];
+    for policy in ALL_POLICIES {
+        for workers in worker_matrix() {
+            let cell = format!("workers={workers} policy={}", policy.label());
+            let run = || {
+                serve_requant_streams(
+                    &model,
+                    ewq::config::ServeConfig {
+                        max_batch: 4,
+                        max_wait_us: 500,
+                        workers,
+                        dispatch: policy,
+                        max_decode_batch: 4,
+                        requant_forced: forced.clone(),
+                        ..Default::default()
+                    },
+                    6,
+                    4,
+                    true,
+                )
+            };
+            let (streams_a, m_a) = run();
+            let (streams_b, m_b) = run();
+            assert_well_formed(&streams_a, 4, &cell);
+            assert_well_formed(&streams_b, 4, &cell);
+            // every shard that processed any request popped >= 3 items
+            // (its admission window + pinned decode turns), so it fired
+            // the whole schedule
+            assert!(m_a.requant_swaps >= 3, "{cell}: swaps {}", m_a.requant_swaps);
+            assert!(m_a.requant_bytes_freed > 0, "{cell}");
+            assert!(m_a.requant_bytes_regrown > 0, "{cell}: the Q8 restore regrows");
+            assert_eq!(m_a.kv_leaked_seqs, 0, "{cell}");
+            assert_eq!(m_b.kv_leaked_seqs, 0, "{cell}");
+            // exit residency accounts for every block of every replica
+            assert_eq!(
+                m_a.block_residency.iter().sum::<usize>(),
+                workers * model.schema.n_blocks,
+                "{cell}"
+            );
+            if !matches!(policy, ewq::config::DispatchPolicy::WorkSteal) {
+                assert_eq!(
+                    streams_a, streams_b,
+                    "{cell}: deterministic placement must reproduce bit-for-bit"
+                );
+                assert_eq!(m_a.requant_swaps, m_b.requant_swaps, "{cell}");
+            }
+        }
+    }
+}
+
+#[test]
+fn concurrent_batched_decode_spans_forced_requant_swaps_on_one_shard() {
+    // six concurrent generation streams fused through max_decode_batch=8 on
+    // a single shard, with scripted swaps walking block 0 down the whole
+    // ladder and back (Q8 -> Q4, then block 1 -> Q3, then block 0 -> Q8)
+    // while the cohort is mid-flight: every stream stays well-formed, the
+    // fused path demonstrably ran across swap boundaries, and the
+    // controller's byte books reconcile exactly against the final resident
+    // footprint
+    let model = serve_model();
+    let s = &model.schema;
+    let plan = QuantPlan::uniform(&s.name, s.n_blocks, Precision::Q8);
+    let initial = QuantizedModel::build(&model, &plan).unwrap().resident_bytes();
+    let cfg = ewq::config::ServeConfig {
+        max_batch: 4,
+        max_wait_us: 500,
+        workers: 1,
+        max_decode_batch: 8,
+        requant_forced: vec![
+            ewq::config::ForcedSwap { after_item: 0, block: 0, prec: Precision::Q4 },
+            ewq::config::ForcedSwap { after_item: 1, block: 1, prec: Precision::Q3 },
+            ewq::config::ForcedSwap { after_item: 3, block: 0, prec: Precision::Q8 },
+        ],
+        ..Default::default()
+    };
+    let (streams, m) = serve_requant_streams(&model, cfg, 6, 6, false);
+    assert_well_formed(&streams, 6, "single-shard fused");
+    assert!(m.batched_steps > 0, "the fused decode path must have run");
+    assert_eq!(m.requant_swaps, 3, "single shard fires the whole schedule");
+    assert_eq!(
+        initial - m.resident_weight_bytes,
+        m.requant_bytes_freed - m.requant_bytes_regrown,
+        "books reconcile with the final footprint"
+    );
+    // final residency: block 0 restored to Q8, block 1 parked at Q3
+    assert_eq!(m.block_residency[Precision::Q8.tag() as usize], 1);
+    assert_eq!(m.block_residency[Precision::Q3.tag() as usize], 1);
+    assert_eq!(m.block_residency.iter().sum::<usize>(), s.n_blocks);
+    assert_eq!(m.kv_leaked_seqs, 0);
+}
+
 #[test]
 fn decode_context_window_overflow_fails_cleanly_on_random_models() {
     // the window guard holds for arbitrary geometry, and a failed step
