@@ -1,6 +1,6 @@
 # Repo-level convenience targets. `make verify` mirrors the tier-1 gate.
 
-.PHONY: verify fmt clippy doc test test-scalar test-chaos bench bench-smoke bench-compare artifacts
+.PHONY: verify fmt clippy doc test test-scalar test-chaos bench bench-smoke bench-compare pgo artifacts
 
 verify:
 	cd rust && cargo build --release && cargo test -q
@@ -62,6 +62,15 @@ bench-compare:
 	cd rust && cargo run --release --bin bench_compare -- \
 		../BENCH_kernels.json ../BENCH_serving.json ../BENCH_decode.json \
 		../BENCH_baseline.json
+
+# Profile-guided-optimization lane (DESIGN.md §16): baseline quick bench ->
+# -Cprofile-generate rebuild + profile run over the same fused-kernel
+# workload -> llvm-profdata merge (from the rustup llvm-tools component,
+# discovered inside the sysroot) -> -Cprofile-use rebuild -> report-only
+# baseline-vs-PGO comparison. Exits 0 with instructions when llvm-profdata
+# is absent, so it is safe to invoke anywhere.
+pgo:
+	bash scripts/pgo.sh
 
 # Build the AOT artifacts (flagship weights + HLO text). Requires the
 # python/JAX toolchain; the Rust crate runs offline without them.

@@ -27,8 +27,10 @@
 //! `BENCH_decode.json` (override with `EWQ_BENCH_OUT`; `EWQ_BENCH_QUICK=1`
 //! shortens the sampling budget for the CI smoke lane). `bench_compare`
 //! tracks the `decode_tok_s_raw_kv` and `decode_tok_s_batched` keys against
-//! `BENCH_baseline.json` (plus the optional `decode_tok_s_prefix_*` keys)
-//! and gates `decode_tok_s_batched / decode_tok_s_raw_kv >=
+//! `BENCH_baseline.json` (plus the optional `decode_tok_s_prefix_*` and
+//! `pinned_decode_tok_s` keys — the latter emitted only when worker
+//! pinning actually engages: a multi-core host whose kernel accepted the
+//! pins) and gates `decode_tok_s_batched / decode_tok_s_raw_kv >=
 //! EWQ_BENCH_BATCHED_MIN`.
 
 use ewq::bench_util::{black_box, Bench};
@@ -113,12 +115,12 @@ fn main() {
     // per-sequence numbers above are serial, so the raw_kv/batched pair
     // brackets amortization + parallelism together).
     let pool_workers = ParallelConfig::auto().workers;
-    let decode_window_batched = |batch: usize| {
-        let mut fp = ForwardPass::new(&s, Pool::from_config(&ParallelConfig::auto()));
+    let decode_window_batched = |batch: usize, pool: &Pool, tag: &str| {
+        let mut fp = ForwardPass::new(&s, pool.clone());
         let mut cache = KvCache::new(geom, 1 << 28, Precision::Raw);
         let mut logits = vec![0.0f32; batch * s.vocab];
         let mut seq = 0u64;
-        let name = format!("batched decode, {batch} seqs x {} tokens", s.seq_len);
+        let name = format!("batched decode{tag}, {batch} seqs x {} tokens", s.seq_len);
         let sample = bench().run(&name, || {
             let mut states: Vec<DecodeState> = (0..batch)
                 .map(|i| DecodeState::new(seq + i as u64, s.n_blocks))
@@ -142,14 +144,35 @@ fn main() {
         });
         sample.throughput((batch * s.seq_len) as f64)
     };
-    let tok_s_b1 = decode_window_batched(1);
-    let tok_s_b4 = decode_window_batched(4);
-    let tok_s_b16 = decode_window_batched(16);
+    let auto_pool = Pool::from_config(&ParallelConfig::auto());
+    let tok_s_b1 = decode_window_batched(1, &auto_pool, "");
+    let tok_s_b4 = decode_window_batched(4, &auto_pool, "");
+    let tok_s_b16 = decode_window_batched(16, &auto_pool, "");
     println!(
         "    => batched decode ({pool_workers} workers): b1 {tok_s_b1:.1}, b4 {tok_s_b4:.1}, \
          b16 {tok_s_b16:.1} tok/s ({:.2}x serial per-seq raw kv)",
         tok_s_b16 / tok_s_raw.max(1e-9)
     );
+
+    // the same b16 window on a pinned pool — the OPTIONAL
+    // `pinned_decode_tok_s` key, emitted only when pinning actually engaged
+    // (multi-core host, kernel-accepted pins); elsewhere it is logged as
+    // skipped so bench_compare lists it instead of gating on it
+    let pin_pool = Pool::from_config(&ParallelConfig::auto().pinned(true));
+    pin_pool.scope(|_| {}); // force the lazy spawn so pin_events is real
+    let pinned_engaged =
+        ewq::par::affinity::available_cores() > 1 && pin_pool.pin_events() > 0;
+    let pinned_tok_s =
+        pinned_engaged.then(|| decode_window_batched(16, &pin_pool, " [pinned]"));
+    match pinned_tok_s {
+        Some(t) => println!(
+            "    => pinned batched decode: {t:.1} tok/s ({:.2}x unpinned b16)",
+            t / tok_s_b16.max(1e-9)
+        ),
+        None => println!(
+            "    (worker pinning not engaged on this host — pinned_decode_tok_s skipped)"
+        ),
+    }
 
     // prefix-share sweep: full-window generation where a fraction of every
     // request's context is a common shared prefix (a system prompt). With
@@ -249,6 +272,9 @@ fn main() {
     );
 
     let out = std::env::var("EWQ_BENCH_OUT").unwrap_or_else(|_| "BENCH_decode.json".into());
+    let pinned_json = pinned_tok_s
+        .map(|t| format!("  \"pinned_decode_tok_s\": {t:.3},\n"))
+        .unwrap_or_default();
     let json = format!(
         "{{\n  \"model\": \"{}\",\n  \"plan\": \"mixed-q4q8\",\n  \"kernel_path\": \"{}\",\n  \
          \"decode_window\": {},\n  \
@@ -256,7 +282,7 @@ fn main() {
          \"decode_tok_s_q4_kv\": {tok_s_q4:.3},\n  \
          \"decode_tok_s_batched\": {tok_s_b16:.3},\n  \
          \"decode_tok_s_batched_b1\": {tok_s_b1:.3},\n  \
-         \"decode_tok_s_batched_b4\": {tok_s_b4:.3},\n  \
+         \"decode_tok_s_batched_b4\": {tok_s_b4:.3},\n{pinned_json}  \
          \"decode_tok_s_prefix_0\": {tok_s_p0:.3},\n  \
          \"decode_tok_s_prefix_0.5\": {tok_s_p05:.3},\n  \
          \"decode_tok_s_prefix_0.9\": {tok_s_p09:.3},\n  \

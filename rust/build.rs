@@ -1,0 +1,38 @@
+// Build-time gate for the AVX-512 kernel backend (DESIGN.md §16).
+//
+// The AVX-512F intrinsics used by `src/simd.rs` stabilized in Rust 1.89;
+// older toolchains must still compile this crate (the seed promise is
+// "builds fully offline on stable"). So instead of a hard `#[cfg(target_arch
+// = "x86_64")]` on the AVX-512 bodies, we emit a custom cfg `ewq_avx512`
+// only when BOTH hold:
+//
+//   * the target is x86_64 (the intrinsics exist at all), and
+//   * the compiling rustc is >= 1.89 (the intrinsics are stable).
+//
+// When the cfg is absent the `Avx512` path still exists as an enum variant
+// — `available()` just returns false and the dispatcher falls back — so the
+// env-pin surface (`EWQ_KERNEL_PATH=avx512` warns and degrades) behaves
+// identically everywhere.
+//
+// `rustc-check-cfg` registers the custom cfg with the `unexpected_cfgs`
+// lint (clippy runs with `-D warnings`).
+
+use std::process::Command;
+
+fn rustc_minor() -> Option<u32> {
+    let rustc = std::env::var("RUSTC").unwrap_or_else(|_| "rustc".into());
+    let out = Command::new(rustc).arg("--version").output().ok()?;
+    let text = String::from_utf8(out.stdout).ok()?;
+    // "rustc 1.89.0 (…)" — second whitespace field, second dot field.
+    let ver = text.split_whitespace().nth(1)?;
+    ver.split('.').nth(1)?.parse().ok()
+}
+
+fn main() {
+    println!("cargo:rustc-check-cfg=cfg(ewq_avx512)");
+    let x86_64 = std::env::var("CARGO_CFG_TARGET_ARCH").as_deref() == Ok("x86_64");
+    if x86_64 && rustc_minor().is_some_and(|m| m >= 89) {
+        println!("cargo:rustc-cfg=ewq_avx512");
+    }
+    println!("cargo:rerun-if-changed=build.rs");
+}

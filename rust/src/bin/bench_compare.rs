@@ -51,11 +51,13 @@ const KEYS: [&str; 8] = [
 /// Optional tracked metrics (higher is better): compared only when present
 /// in BOTH the current results and the baseline, listed as skipped in the
 /// verdict line otherwise. The overload-sweep goodput, the prefix-share
-/// decode sweep, and the requant pressure sweep land here because a
-/// missing row (quick mode, older bench binary, a dims-incompatible bench
-/// model skipping the requant sweep) is a coverage gap to surface, not a
-/// hard gate failure like a vanished kernel metric.
-const OPTIONAL_KEYS: [&str; 7] = [
+/// decode sweep, the requant pressure sweep, and the hardware-gated
+/// AVX-512 / pinned-worker cells land here because a missing row (quick
+/// mode, older bench binary, a dims-incompatible bench model skipping the
+/// requant sweep, a runner without avx512f or with a single core) is a
+/// coverage gap to surface, not a hard gate failure like a vanished
+/// kernel metric.
+const OPTIONAL_KEYS: [&str; 9] = [
     "overload_goodput_rps_1x",
     "overload_goodput_rps_2x",
     "decode_tok_s_prefix_0",
@@ -63,6 +65,8 @@ const OPTIONAL_KEYS: [&str; 7] = [
     "decode_tok_s_prefix_0.9",
     "requant_swaps",
     "requant_bytes_freed",
+    "gemm_gflops_q8_avx512",
+    "pinned_decode_tok_s",
 ];
 
 /// Extract the number following `"key":` in a flat JSON document.

@@ -65,27 +65,40 @@ impl Config {
 pub struct ParallelConfig {
     /// Number of worker threads (>= 1; 1 = serial reference path).
     pub workers: usize,
+    /// Pin pool helper threads to cores at spawn (best-effort
+    /// `sched_setaffinity`; see `par::affinity`). Results are bit-identical
+    /// pinned or not — this only buys cache/NUMA locality, so it defaults
+    /// off and degrades to a counted no-op where the kernel refuses it.
+    pub pin_workers: bool,
 }
 
 impl ParallelConfig {
     /// Serial reference configuration.
     pub fn serial() -> Self {
-        Self { workers: 1 }
+        Self { workers: 1, pin_workers: false }
     }
 
     /// One worker per available hardware thread.
     pub fn auto() -> Self {
         let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-        Self { workers }
+        Self { workers, pin_workers: false }
     }
 
     pub fn with_workers(workers: usize) -> Self {
-        Self { workers: workers.max(1) }
+        Self { workers: workers.max(1), pin_workers: false }
     }
 
-    /// Read `[parallel] workers = N` (defaults to `auto`).
+    /// Builder-style toggle for worker pinning.
+    pub fn pinned(mut self, pin: bool) -> Self {
+        self.pin_workers = pin;
+        self
+    }
+
+    /// Read `[parallel] workers = N` and `[parallel] pin_workers = bool`
+    /// (defaults: `auto`, unpinned).
     pub fn from_config(c: &Config) -> Result<Self> {
-        Ok(Self::with_workers(c.get_or("parallel", "workers", Self::auto().workers)?))
+        Ok(Self::with_workers(c.get_or("parallel", "workers", Self::auto().workers)?)
+            .pinned(c.get_or("parallel", "pin_workers", false)?))
     }
 
     /// Worker count exercised by the cross-worker determinism tests:
@@ -232,6 +245,13 @@ pub struct ServeConfig {
     /// bands / attention rows). 1 = serial forward; raise on hosts with
     /// spare cores per shard. Responses are identical either way.
     pub forward_workers: usize,
+    /// Pin each shard worker and its forward pool to a disjoint block of
+    /// cores (`ewq serve --pin on`): shard `i` owns cores
+    /// `i*forward_workers .. (i+1)*forward_workers` (mod the host core
+    /// count), the shard thread pins itself to the block's first core and
+    /// its pool helpers spread over the rest. Best-effort and
+    /// bit-identical either way (DESIGN.md §16); off by default.
+    pub pin_workers: bool,
     /// Tokens to generate per request in the demo drivers (`ewq serve
     /// --decode-tokens`, examples): 0/1 = classic single next-token
     /// requests, N > 1 = streaming generation through the per-shard KV
@@ -310,6 +330,7 @@ impl Default for ServeConfig {
             workers: 1,
             dispatch: DispatchPolicy::default(),
             forward_workers: 1,
+            pin_workers: false,
             decode_tokens: 0,
             kv_precision: crate::quant::Precision::Raw,
             kv_budget_mb: 64.0,
@@ -342,6 +363,7 @@ impl ServeConfig {
             workers: c.get_or("serve", "workers", d.workers)?,
             dispatch: c.get_or("serve", "dispatch", d.dispatch)?,
             forward_workers: c.get_or("serve", "forward_workers", d.forward_workers)?,
+            pin_workers: c.get_or("serve", "pin_workers", d.pin_workers)?,
             decode_tokens: c.get_or("serve", "decode_tokens", d.decode_tokens)?,
             kv_precision: c.get_or("serve", "kv_precision", d.kv_precision)?,
             kv_budget_mb: c.get_or("serve", "kv_budget_mb", d.kv_budget_mb)?,
@@ -471,6 +493,16 @@ mod tests {
         assert_eq!(s.max_live_sequences, 0);
         assert_eq!(s.default_deadline_ms, 0, "no deadline by default");
         assert!(s.prefix_cache, "prefix caching is on by default");
+        assert!(!s.pin_workers, "pinning is opt-in");
+    }
+
+    #[test]
+    fn pin_workers_serve_option_parses() {
+        let c = Config::parse("[serve]\npin_workers = true\nforward_workers = 2\n").unwrap();
+        let s = ServeConfig::from_config(&c).unwrap();
+        assert!(s.pin_workers);
+        assert_eq!(s.forward_workers, 2);
+        assert!(!ServeConfig::default().pin_workers, "off by default");
     }
 
     #[test]
@@ -616,13 +648,17 @@ mod tests {
         assert_eq!(ParallelConfig::serial().workers, 1);
         assert!(ParallelConfig::auto().workers >= 1);
         assert_eq!(ParallelConfig::with_workers(0).workers, 1);
-        let c = Config::parse("[parallel]\nworkers = 6\n").unwrap();
-        assert_eq!(ParallelConfig::from_config(&c).unwrap().workers, 6);
+        assert!(!ParallelConfig::serial().pin_workers, "pinning defaults off");
+        assert!(!ParallelConfig::auto().pin_workers);
+        assert!(ParallelConfig::with_workers(2).pinned(true).pin_workers);
+        let c = Config::parse("[parallel]\nworkers = 6\npin_workers = true\n").unwrap();
+        let p = ParallelConfig::from_config(&c).unwrap();
+        assert_eq!(p.workers, 6);
+        assert!(p.pin_workers);
         let empty = Config::parse("").unwrap();
-        assert_eq!(
-            ParallelConfig::from_config(&empty).unwrap().workers,
-            ParallelConfig::auto().workers
-        );
+        let p = ParallelConfig::from_config(&empty).unwrap();
+        assert_eq!(p.workers, ParallelConfig::auto().workers);
+        assert!(!p.pin_workers);
     }
 
     #[test]

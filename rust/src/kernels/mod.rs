@@ -16,10 +16,16 @@
 //!     band — the shallow-m strategy (small batches, decode-adjacent
 //!     shapes), at the cost of each worker re-reading the (m,k) activations;
 //! - inside a band, W tiles are group-unpacked (`quant::dequantize_tile_path`)
-//!   into a per-worker scratch buffer (`TilePool`, 8 KiB — L1-resident) and
-//!   multiplied against the activation rows with a stride-1 inner loop;
-//! - the inner loops are **SIMD** (`crate::simd`, AVX2 behind runtime
-//!   detection; `EWQ_FORCE_SCALAR` pins the portable scalar fallback),
+//!   into a per-worker scratch tile (`TilePool`, 8 KiB, 64-byte-aligned —
+//!   L1-resident, and zmm stores never split a cache line) and multiplied
+//!   against the activation rows with a stride-1 inner loop. On SIMD paths
+//!   the band loop additionally issues software prefetch for the *next*
+//!   packed tile + scale group (`quant::prefetch_tile`) while the current
+//!   one unpacks — a pure hint that never moves a result bit; disable with
+//!   `EWQ_PREFETCH=0` (DESIGN.md §16);
+//! - the inner loops are **SIMD** (`crate::simd`, AVX-512F/AVX2 behind
+//!   runtime detection; `EWQ_KERNEL_PATH=scalar|avx2|avx512` pins an
+//!   explicit path, `EWQ_FORCE_SCALAR` pins the portable scalar fallback),
 //!   vectorized across the **n** dimension only — one lane per output
 //!   column — so `k` still accumulates in ascending order for every output
 //!   element, the same order as the serial reference matmul. The fused
@@ -28,16 +34,18 @@
 //! - `Payload::Raw` dispatches to `matmul_f32`, the k-tiled f32 kernel that
 //!   reads the payload in place (no tile copy needed).
 //!
-//! Steady-state calls do zero heap allocation — tile buffers live in a
-//! `TilePool` created once per executor (see `model::refexec::Scratch`) —
-//! and zero thread spawns: `par::Pool` keeps its workers parked between
-//! kernel invocations, so each call costs one publish + wake, not a
-//! spawn/join barrier (see DESIGN.md §9).
+//! Steady-state calls do zero heap allocation — each worker's tile buffer
+//! is allocated exactly once, on that worker's own thread the first time it
+//! claims a band (first-touch, so the page lands NUMA-local to a pinned
+//! worker; see `par::Pool::new_pinned`) — and zero thread spawns:
+//! `par::Pool` keeps its workers parked between kernel invocations, so each
+//! call costs one publish + wake, not a spawn/join barrier (see DESIGN.md
+//! §9).
 
 use std::sync::Mutex;
 
 use crate::par::Pool;
-use crate::quant::{dequantize_tile_path, Payload, QMat};
+use crate::quant::{dequantize_tile_path, prefetch_tile, Payload, QMat};
 use crate::simd::axpy;
 pub use crate::simd::{kernel_path, KernelPath};
 
@@ -48,27 +56,74 @@ pub const TILE_K: usize = 32;
 /// Tile width along the output (`n`) dimension; `TILE_K * TILE_N` f32 = 8 KiB.
 pub const TILE_N: usize = 64;
 
-/// Per-worker dequantization tile buffers, allocated once per executor and
+/// One worker's 64-byte-aligned `TILE_K * TILE_N` f32 scratch tile.
+/// `Vec<f32>` only guarantees 4-byte alignment; aligning to the cache line
+/// means a 64-byte zmm store never splits a line and every tile row starts
+/// on a line boundary, so the unpack writes and the axpy reads stream
+/// cleanly. Allocated zeroed so the first touch faults the pages in on the
+/// allocating (owning) worker's thread.
+struct AlignedTile {
+    ptr: std::ptr::NonNull<f32>,
+    len: usize,
+}
+
+// SAFETY: the tile is plainly-owned heap memory; the per-slot Mutex in
+// TilePool serializes every access across threads.
+unsafe impl Send for AlignedTile {}
+
+impl AlignedTile {
+    fn new(len: usize) -> Self {
+        let layout = std::alloc::Layout::from_size_align(len * 4, 64).unwrap();
+        // SAFETY: layout has non-zero size (len is TILE_K * TILE_N).
+        let raw = unsafe { std::alloc::alloc_zeroed(layout) } as *mut f32;
+        let ptr = std::ptr::NonNull::new(raw)
+            .unwrap_or_else(|| std::alloc::handle_alloc_error(layout));
+        Self { ptr, len }
+    }
+
+    fn as_mut_slice(&mut self) -> &mut [f32] {
+        // SAFETY: ptr owns `len` f32s for self's lifetime.
+        unsafe { std::slice::from_raw_parts_mut(self.ptr.as_ptr(), self.len) }
+    }
+}
+
+impl Drop for AlignedTile {
+    fn drop(&mut self) {
+        let layout = std::alloc::Layout::from_size_align(self.len * 4, 64).unwrap();
+        // SAFETY: allocated in `new` with this exact layout.
+        unsafe { std::alloc::dealloc(self.ptr.as_ptr() as *mut u8, layout) };
+    }
+}
+
+/// Per-worker dequantization tile buffers, created once per executor and
 /// reused by every `matmul_qmat` call — the scratch arena half that keeps
 /// the fused kernels allocation-free in steady state. Each worker locks its
-/// own (uncontended) slot once per band.
+/// own (uncontended) slot once per band; the aligned tile behind the slot
+/// is allocated lazily, on the owning worker's **first touch**, so under a
+/// pinned pool (`Pool::new_pinned`) the memory faults in NUMA-local to the
+/// core that will reuse it forever after. Construction itself allocates
+/// nothing and spawns nothing.
 pub struct TilePool {
-    bufs: Vec<Mutex<Vec<f32>>>,
+    bufs: Vec<Mutex<Option<AlignedTile>>>,
 }
 
 impl TilePool {
-    /// One `TILE_K * TILE_N` buffer per worker of `pool`.
+    /// One lazily-allocated `TILE_K * TILE_N` slot per worker of `pool`.
     pub fn new(pool: &Pool) -> Self {
-        Self {
-            bufs: (0..pool.workers())
-                .map(|_| Mutex::new(vec![0.0f32; TILE_K * TILE_N]))
-                .collect(),
-        }
+        Self { bufs: (0..pool.workers()).map(|_| Mutex::new(None)).collect() }
     }
 
     pub fn workers(&self) -> usize {
         self.bufs.len()
     }
+}
+
+/// Lock worker `wkr`'s slot and hand its tile to `f`, allocating the
+/// aligned tile on this (the owning) worker's first touch.
+#[inline]
+fn with_tile<R>(tiles: &TilePool, wkr: usize, f: impl FnOnce(&mut [f32]) -> R) -> R {
+    let mut slot = tiles.bufs[wkr].lock().unwrap();
+    f(slot.get_or_insert_with(|| AlignedTile::new(TILE_K * TILE_N)).as_mut_slice())
 }
 
 /// How `matmul_qmat` partitions its output over the pool. Either choice
@@ -216,9 +271,24 @@ pub fn matmul_qmat_with(
         tiles.workers(),
         pool.workers()
     );
+    // resolved once per call, like the path itself: prefetch rides on any
+    // SIMD path unless EWQ_PREFETCH turns it off
+    let pf = path.prefetches() && crate::simd::prefetch_enabled();
     match banding {
-        Banding::Rows => matmul_qmat_rows(a, w, m, k, n, pool, tiles, path, out),
-        Banding::Cols => matmul_qmat_cols(a, w, m, k, n, pool, tiles, path, out),
+        Banding::Rows => matmul_qmat_rows(a, w, m, k, n, pool, tiles, path, pf, out),
+        Banding::Cols => matmul_qmat_cols(a, w, m, k, n, pool, tiles, path, pf, out),
+    }
+}
+
+/// The next `(k0, n0)` tile origin after the current one in a band's sweep
+/// order (n fastest, then k) — where the prefetch hint points. May land
+/// past the matrix; `prefetch_tile` clamps.
+#[inline]
+fn next_tile(k0: usize, n0: usize, n_end: usize) -> (usize, usize) {
+    if n0 + TILE_N < n_end {
+        (k0, n0 + TILE_N)
+    } else {
+        (k0 + TILE_K, 0)
     }
 }
 
@@ -233,29 +303,34 @@ fn matmul_qmat_rows(
     pool: &Pool,
     tiles: &TilePool,
     path: KernelPath,
+    pf: bool,
     out: &mut [f32],
 ) {
     let band = band_rows(m, pool);
     pool.par_bands_mut(out, band * n, |wkr, bi, chunk| {
-        let mut tile = tiles.bufs[wkr].lock().unwrap();
-        let tile = tile.as_mut_slice();
-        let r0 = bi * band;
-        let rows = chunk.len() / n;
-        chunk.fill(0.0);
-        for k0 in (0..k).step_by(TILE_K) {
-            let kh = TILE_K.min(k - k0);
-            for n0 in (0..n).step_by(TILE_N) {
-                let nw = TILE_N.min(n - n0);
-                dequantize_tile_path(w, k0..k0 + kh, n0..n0 + nw, path, &mut tile[..kh * nw]);
-                for ri in 0..rows {
-                    let arow = &a[(r0 + ri) * k + k0..(r0 + ri) * k + k0 + kh];
-                    let orow = &mut chunk[ri * n + n0..ri * n + n0 + nw];
-                    for (kk, &av) in arow.iter().enumerate() {
-                        axpy(orow, av, &tile[kk * nw..(kk + 1) * nw], path);
+        with_tile(tiles, wkr, |tile| {
+            let r0 = bi * band;
+            let rows = chunk.len() / n;
+            chunk.fill(0.0);
+            for k0 in (0..k).step_by(TILE_K) {
+                let kh = TILE_K.min(k - k0);
+                for n0 in (0..n).step_by(TILE_N) {
+                    let nw = TILE_N.min(n - n0);
+                    if pf {
+                        let (nk, nn) = next_tile(k0, n0, n);
+                        prefetch_tile(w, nk..nk + TILE_K, nn..nn + TILE_N);
+                    }
+                    dequantize_tile_path(w, k0..k0 + kh, n0..n0 + nw, path, &mut tile[..kh * nw]);
+                    for ri in 0..rows {
+                        let arow = &a[(r0 + ri) * k + k0..(r0 + ri) * k + k0 + kh];
+                        let orow = &mut chunk[ri * n + n0..ri * n + n0 + nw];
+                        for (kk, &av) in arow.iter().enumerate() {
+                            axpy(orow, av, &tile[kk * nw..(kk + 1) * nw], path);
+                        }
                     }
                 }
             }
-        }
+        });
     });
 }
 
@@ -274,37 +349,42 @@ fn matmul_qmat_cols(
     pool: &Pool,
     tiles: &TilePool,
     path: KernelPath,
+    pf: bool,
     out: &mut [f32],
 ) {
     let band = band_cols(n, pool);
     pool.par_col_bands_mut(out, n, band, |wkr, _bi, view| {
-        let mut tile = tiles.bufs[wkr].lock().unwrap();
-        let tile = tile.as_mut_slice();
-        let c0 = view.cols().start;
-        let cw = view.width();
-        for r in 0..m {
-            view.row_mut(r).fill(0.0);
-        }
-        for k0 in (0..k).step_by(TILE_K) {
-            let kh = TILE_K.min(k - k0);
-            for n0 in (0..cw).step_by(TILE_N) {
-                let nw = TILE_N.min(cw - n0);
-                dequantize_tile_path(
-                    w,
-                    k0..k0 + kh,
-                    c0 + n0..c0 + n0 + nw,
-                    path,
-                    &mut tile[..kh * nw],
-                );
-                for ri in 0..m {
-                    let arow = &a[ri * k + k0..ri * k + k0 + kh];
-                    let orow = &mut view.row_mut(ri)[n0..n0 + nw];
-                    for (kk, &av) in arow.iter().enumerate() {
-                        axpy(orow, av, &tile[kk * nw..(kk + 1) * nw], path);
+        with_tile(tiles, wkr, |tile| {
+            let c0 = view.cols().start;
+            let cw = view.width();
+            for r in 0..m {
+                view.row_mut(r).fill(0.0);
+            }
+            for k0 in (0..k).step_by(TILE_K) {
+                let kh = TILE_K.min(k - k0);
+                for n0 in (0..cw).step_by(TILE_N) {
+                    let nw = TILE_N.min(cw - n0);
+                    if pf {
+                        let (nk, nn) = next_tile(k0, n0, cw);
+                        prefetch_tile(w, nk..nk + TILE_K, c0 + nn..c0 + nn + TILE_N);
+                    }
+                    dequantize_tile_path(
+                        w,
+                        k0..k0 + kh,
+                        c0 + n0..c0 + n0 + nw,
+                        path,
+                        &mut tile[..kh * nw],
+                    );
+                    for ri in 0..m {
+                        let arow = &a[ri * k + k0..ri * k + k0 + kh];
+                        let orow = &mut view.row_mut(ri)[n0..n0 + nw];
+                        for (kk, &av) in arow.iter().enumerate() {
+                            axpy(orow, av, &tile[kk * nw..(kk + 1) * nw], path);
+                        }
                     }
                 }
             }
-        }
+        });
     });
 }
 
@@ -394,24 +474,35 @@ pub fn matvec_qmat_path(
         tiles.workers(),
         pool.workers()
     );
+    let pf = path.prefetches() && crate::simd::prefetch_enabled();
     let band = band_cols(n, pool);
     pool.par_bands_mut(out, band, |wkr, bi, chunk| {
-        let mut tile = tiles.bufs[wkr].lock().unwrap();
-        let tile = tile.as_mut_slice();
-        let c0 = bi * band;
-        let cw = chunk.len();
-        chunk.fill(0.0);
-        for k0 in (0..k).step_by(TILE_K) {
-            let kh = TILE_K.min(k - k0);
-            for n0 in (0..cw).step_by(TILE_N) {
-                let nw = TILE_N.min(cw - n0);
-                dequantize_tile_path(w, k0..k0 + kh, c0 + n0..c0 + n0 + nw, path, &mut tile[..kh * nw]);
-                let ochunk = &mut chunk[n0..n0 + nw];
-                for kk in 0..kh {
-                    axpy(ochunk, a[k0 + kk], &tile[kk * nw..(kk + 1) * nw], path);
+        with_tile(tiles, wkr, |tile| {
+            let c0 = bi * band;
+            let cw = chunk.len();
+            chunk.fill(0.0);
+            for k0 in (0..k).step_by(TILE_K) {
+                let kh = TILE_K.min(k - k0);
+                for n0 in (0..cw).step_by(TILE_N) {
+                    let nw = TILE_N.min(cw - n0);
+                    if pf {
+                        let (nk, nn) = next_tile(k0, n0, cw);
+                        prefetch_tile(w, nk..nk + TILE_K, c0 + nn..c0 + nn + TILE_N);
+                    }
+                    dequantize_tile_path(
+                        w,
+                        k0..k0 + kh,
+                        c0 + n0..c0 + n0 + nw,
+                        path,
+                        &mut tile[..kh * nw],
+                    );
+                    let ochunk = &mut chunk[n0..n0 + nw];
+                    for kk in 0..kh {
+                        axpy(ochunk, a[k0 + kk], &tile[kk * nw..(kk + 1) * nw], path);
+                    }
                 }
             }
-        }
+        });
     });
 }
 
@@ -423,10 +514,10 @@ mod tests {
     use crate::rng::Xoshiro256pp;
     use crate::tensor::Tensor;
 
-    /// Both inner-loop paths (Avx2 degrades to scalar off-x86, making the
-    /// comparisons trivially true there and real on any x86-64 runner) and
-    /// both banding strategies.
-    const PATHS: [KernelPath; 2] = [KernelPath::Scalar, KernelPath::Avx2];
+    /// All inner-loop paths (unavailable SIMD paths degrade to scalar,
+    /// making the comparisons trivially true there and real wherever the
+    /// hardware/toolchain can run them) and both banding strategies.
+    const PATHS: [KernelPath; 3] = [KernelPath::Scalar, KernelPath::Avx2, KernelPath::Avx512];
     const BANDINGS: [Banding; 2] = [Banding::Rows, Banding::Cols];
 
     /// The serial ikj reference the fused kernels must match bit-for-bit.
@@ -525,10 +616,10 @@ mod tests {
 
     #[test]
     fn every_path_banding_worker_combination_bit_identical() {
-        // The tentpole equivalence property: {Scalar, Avx2} x {Rows, Cols}
-        // x every packed precision x 1/2/7 workers — all 12+ combinations
-        // must reproduce the scalar serial row-banded kernel bit-for-bit
-        // (and that one the dequantized ikj reference).
+        // The tentpole equivalence property: {Scalar, Avx2, Avx512} x
+        // {Rows, Cols} x every packed precision x 1/2/7 workers — every
+        // combination must reproduce the scalar serial row-banded kernel
+        // bit-for-bit (and that one the dequantized ikj reference).
         check(
             0x51AD,
             18,
@@ -790,6 +881,117 @@ mod tests {
         // tile constants cover every packing group size
         for gr in [1usize, 2, 4, 8] {
             assert_eq!(TILE_K % gr, 0);
+        }
+    }
+
+    #[test]
+    fn tile_scratch_is_64_byte_aligned() {
+        // the satellite contract: scratch tiles sit on cache-line (and zmm)
+        // boundaries, are full-size, and come back zeroed
+        let mut t = AlignedTile::new(TILE_K * TILE_N);
+        let s = t.as_mut_slice();
+        assert_eq!(s.as_ptr() as usize % 64, 0, "64-byte alignment");
+        assert_eq!(s.len(), TILE_K * TILE_N);
+        assert!(s.iter().all(|&v| v == 0.0), "alloc_zeroed");
+        // and the slots a real kernel call touches are those same aligned
+        // tiles, allocated lazily: none before the call, >= 1 after
+        let pool = Pool::new(3);
+        let tiles = TilePool::new(&pool);
+        assert!(
+            tiles.bufs.iter().all(|b| b.lock().unwrap().is_none()),
+            "construction allocates no tiles"
+        );
+        let (m, k, n) = (4usize, 32usize, 130usize);
+        let a = rand_vec(m * k, 61, 0.5);
+        let w = quantize(&Tensor::new(vec![k, n], rand_vec(k * n, 62, 0.5)), Precision::Q8);
+        let mut out = vec![0.0f32; m * n];
+        matmul_qmat(&a, &w, m, &pool, &tiles, &mut out);
+        let mut touched = 0usize;
+        for b in &tiles.bufs {
+            if let Some(t) = b.lock().unwrap().as_mut() {
+                assert_eq!(t.as_mut_slice().as_ptr() as usize % 64, 0, "worker tile alignment");
+                touched += 1;
+            }
+        }
+        assert!(touched >= 1, "at least the claiming worker touched its tile");
+    }
+
+    #[test]
+    fn prefetch_on_off_bit_identical() {
+        // EWQ_PREFETCH is a pure scheduling hint: the auto-dispatched fused
+        // GEMM and GEMV must produce identical bits with it on and off, for
+        // every packed precision. Env-mutating, so it takes the simd env
+        // lock like the other toggle tests.
+        let _guard = crate::simd::env_lock();
+        let (m, k, n) = (5usize, 48usize, 150usize);
+        let a = rand_vec(m * k, 71, 0.8);
+        let pool = Pool::new(3);
+        let tiles = TilePool::new(&pool);
+        let old = std::env::var("EWQ_PREFETCH").ok();
+        for prec in [Precision::Q8, Precision::Q4, Precision::Q3, Precision::T2] {
+            let w = quantize(&Tensor::new(vec![k, n], rand_vec(k * n, 72, 0.5)), prec);
+            std::env::remove_var("EWQ_PREFETCH");
+            let mut on = vec![f32::NAN; m * n];
+            matmul_qmat(&a, &w, m, &pool, &tiles, &mut on);
+            let mut gemv_on = vec![f32::NAN; n];
+            matvec_qmat(&a[..k], &w, &pool, &tiles, &mut gemv_on);
+            std::env::set_var("EWQ_PREFETCH", "0");
+            let mut off = vec![f32::NAN; m * n];
+            matmul_qmat(&a, &w, m, &pool, &tiles, &mut off);
+            let mut gemv_off = vec![f32::NAN; n];
+            matvec_qmat(&a[..k], &w, &pool, &tiles, &mut gemv_off);
+            assert_bits_eq(&on, &off, &format!("{} gemm prefetch on vs off", prec.label()));
+            assert_bits_eq(
+                &gemv_on,
+                &gemv_off,
+                &format!("{} gemv prefetch on vs off", prec.label()),
+            );
+        }
+        match old {
+            Some(v) => std::env::set_var("EWQ_PREFETCH", v),
+            None => std::env::remove_var("EWQ_PREFETCH"),
+        }
+    }
+
+    #[test]
+    fn ragged_tile_edges_bit_identical_across_paths() {
+        // k and n deliberately NOT multiples of TILE_K/TILE_N: the partial
+        // tiles at both edges drive the 16-lane AVX-512 unpacks (and the
+        // 8-lane AVX2 ones) through their scalar tails, where a lane-width
+        // bug would hide on round shapes
+        for &(m, k, n) in &[(3usize, 40usize, 65usize), (5, 24, 63), (2, 56, 97), (4, 8, 15)] {
+            assert!(k % 8 == 0 && k % TILE_K != 0 && n % TILE_N != 0, "shape picks its edge");
+            let a = rand_vec(m * k, 500 + k as u64, 0.8);
+            for prec in [Precision::Q8, Precision::Q4, Precision::Q3, Precision::T2] {
+                let w = quantize(&Tensor::new(vec![k, n], rand_vec(k * n, 600 + n as u64, 0.5)), prec);
+                let serial_pool = Pool::serial();
+                let serial_tiles = TilePool::new(&serial_pool);
+                let mut baseline = vec![f32::NAN; m * n];
+                matmul_qmat_with(
+                    &a, &w, m, &serial_pool, &serial_tiles,
+                    KernelPath::Scalar, Banding::Rows, &mut baseline,
+                );
+                for workers in [1usize, 2, 7] {
+                    let pool = Pool::new(workers);
+                    let tiles = TilePool::new(&pool);
+                    for path in PATHS {
+                        for banding in BANDINGS {
+                            let mut out = vec![f32::NAN; m * n];
+                            matmul_qmat_with(&a, &w, m, &pool, &tiles, path, banding, &mut out);
+                            assert_bits_eq(
+                                &out,
+                                &baseline,
+                                &format!(
+                                    "{} {m}x{k}x{n} w={workers} {}/{}",
+                                    prec.label(),
+                                    path.label(),
+                                    banding.label()
+                                ),
+                            );
+                        }
+                    }
+                }
+            }
         }
     }
 

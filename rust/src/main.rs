@@ -13,7 +13,8 @@
 //!                            --max-queued-windows Q
 //!                            --max-live-seqs L --deadline-ms D
 //!                            --prefix-cache on|off --requant on|off
-//!                            --requant-low-mb MB --requant-high-mb MB]
+//!                            --requant-low-mb MB --requant-high-mb MB
+//!                            --pin on|off]
 //! ```
 //!
 //! Overload safety (DESIGN.md §13): `--max-queued-windows` bounds the
@@ -27,7 +28,10 @@
 //! above `--requant-high-mb` of resident-weight + KV pressure and promotes
 //! them back below `--requant-low-mb` when the shard queue is idle, using
 //! the trained FastEWQ classifier (when present in the artifacts dir) to
-//! pick eligible blocks.
+//! pick eligible blocks. `--pin on` (DESIGN.md §16, off by default) pins
+//! each shard worker and its forward pool to a disjoint block of host
+//! cores — best-effort `sched_setaffinity`, bit-identical output either
+//! way, purely a locality/throughput knob.
 
 use anyhow::{bail, Context, Result};
 
@@ -222,6 +226,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "off" | "false" | "0" => false,
         other => bail!("unknown --requant value {other} (on|off)"),
     };
+    let pin_workers = match args.opt("pin", "off".to_string())?.as_str() {
+        "on" | "true" | "1" => true,
+        "off" | "false" | "0" => false,
+        other => bail!("unknown --pin value {other} (on|off)"),
+    };
     let requant_low_mb =
         args.opt("requant-low-mb", ewq::config::ServeConfig::default().requant_low_mb)?;
     let requant_high_mb =
@@ -242,6 +251,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         max_live_sequences,
         default_deadline_ms,
         prefix_cache,
+        pin_workers,
         requant,
         requant_low_mb,
         requant_high_mb,
@@ -276,6 +286,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
             kv_precision.label(),
             if prefix_cache { "on" } else { "off" },
         );
+    }
+
+    if pin_workers {
+        println!("pinning: shard workers + forward pools on disjoint cores (best-effort)");
     }
 
     let vocab = model.schema.vocab as i32;

@@ -1159,6 +1159,33 @@ mod tests {
     }
 
     #[test]
+    fn forward_bit_identical_under_every_kernel_path_pin() {
+        // EWQ_KERNEL_PATH end-to-end: pinning each path (including avx512
+        // on hosts without it, where kernel_path() warns once and falls
+        // back) reproduces the auto-dispatched whole-model forward
+        // bit-for-bit. Same env-lock discipline as the force-scalar test.
+        let _guard = crate::simd::env_lock();
+        let model = tiny_model();
+        let plan = mixed_plan(model.schema.n_blocks);
+        let qm = QuantizedModel::build(&model, &plan).unwrap();
+        let toks = tokens(&model.schema);
+        let auto = ForwardPass::new(&model.schema, Pool::new(3)).forward(&qm, &toks).unwrap();
+        let old = std::env::var("EWQ_KERNEL_PATH").ok();
+        for pin in ["scalar", "avx2", "avx512"] {
+            std::env::set_var("EWQ_KERNEL_PATH", pin);
+            let pinned =
+                ForwardPass::new(&model.schema, Pool::new(3)).forward(&qm, &toks).unwrap();
+            for (i, (a, b)) in auto.iter().zip(&pinned).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "elem {i} pin={pin}: auto {a} vs {b}");
+            }
+        }
+        match old {
+            Some(v) => std::env::set_var("EWQ_KERNEL_PATH", v),
+            None => std::env::remove_var("EWQ_KERNEL_PATH"),
+        }
+    }
+
+    #[test]
     fn steady_state_pooled_forward_performs_zero_thread_spawns() {
         // the persistent-pool acceptance criterion: helpers are spawned on
         // the first pooled forward and only parked/woken by the ~7 kernel

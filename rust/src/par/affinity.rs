@@ -1,0 +1,155 @@
+//! Dependency-free core-affinity shim for worker pinning (DESIGN.md §16).
+//!
+//! The crate links no libc crate, so `sched_setaffinity`/`sched_getaffinity`
+//! are issued as raw syscalls on Linux (x86_64 and aarch64); every other
+//! target gets a no-op that reports "pinning unsupported". Pinning is
+//! always **best-effort**: a container seccomp policy or cpuset may refuse
+//! the syscall, and callers (the `Pool` spawn path, the serving shards)
+//! must treat a failed pin as a logged no-op, never an error — the kernels
+//! are bit-identical wherever the thread lands, pinning only buys locality.
+//!
+//! All calls target the *calling thread* (`pid == 0`), which is how the
+//! pool uses them: each helper pins itself first thing inside its spawn
+//! closure, so the affinity is set before the thread touches its
+//! first-touch `TilePool` scratch (NUMA first-touch placement).
+
+/// Width of the CPU mask handed to the kernel: 16 × 64 = 1024 CPUs, the
+/// conventional `CPU_SETSIZE`. Cores beyond that are rejected up front.
+const MASK_WORDS: usize = 16;
+
+#[cfg(all(target_os = "linux", target_arch = "x86_64"))]
+mod sys {
+    pub const SET_AFFINITY: usize = 203;
+    pub const GET_AFFINITY: usize = 204;
+
+    /// SAFETY: caller passes a mask of at least `len` valid bytes; the
+    /// kernel only reads (set) or writes (get) within that window.
+    pub unsafe fn sched_affinity(nr: usize, len: usize, mask: *mut u64) -> isize {
+        let mut ret = nr as isize;
+        std::arch::asm!(
+            "syscall",
+            inout("rax") ret,
+            in("rdi") 0usize, // pid 0 = calling thread
+            in("rsi") len,
+            in("rdx") mask,
+            out("rcx") _,
+            out("r11") _,
+            options(nostack),
+        );
+        ret
+    }
+}
+
+#[cfg(all(target_os = "linux", target_arch = "aarch64"))]
+mod sys {
+    pub const SET_AFFINITY: usize = 122;
+    pub const GET_AFFINITY: usize = 123;
+
+    /// SAFETY: caller passes a mask of at least `len` valid bytes; the
+    /// kernel only reads (set) or writes (get) within that window.
+    pub unsafe fn sched_affinity(nr: usize, len: usize, mask: *mut u64) -> isize {
+        let mut ret = 0isize; // pid 0 = calling thread
+        std::arch::asm!(
+            "svc 0",
+            inout("x0") ret,
+            in("x1") len,
+            in("x2") mask,
+            in("x8") nr,
+            options(nostack),
+        );
+        ret
+    }
+}
+
+/// Pin the calling thread to a single core. Returns `true` only when the
+/// kernel accepted the new mask; `false` for out-of-range cores, refused
+/// syscalls (seccomp, cpuset exclusion), and unsupported targets.
+#[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+pub fn pin_to_core(core: usize) -> bool {
+    if core >= MASK_WORDS * 64 {
+        return false;
+    }
+    let mut mask = [0u64; MASK_WORDS];
+    mask[core / 64] = 1u64 << (core % 64);
+    // SAFETY: the mask is a valid MASK_WORDS*8-byte buffer on our stack.
+    let ret = unsafe {
+        sys::sched_affinity(sys::SET_AFFINITY, MASK_WORDS * 8, mask.as_mut_ptr())
+    };
+    ret == 0
+}
+
+/// No-op fallback: pinning is unsupported off Linux/x86_64/aarch64.
+#[cfg(not(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64"))))]
+pub fn pin_to_core(_core: usize) -> bool {
+    false
+}
+
+/// The set of cores the calling thread may currently run on, ascending.
+/// `None` when the syscall is unavailable or refused — callers use that as
+/// the "skip the pinning assertion" signal in tests.
+#[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+pub fn current_affinity() -> Option<Vec<usize>> {
+    let mut mask = [0u64; MASK_WORDS];
+    // SAFETY: the mask is a valid MASK_WORDS*8-byte buffer on our stack.
+    let ret = unsafe {
+        sys::sched_affinity(sys::GET_AFFINITY, MASK_WORDS * 8, mask.as_mut_ptr())
+    };
+    // success returns the size in bytes of the kernel's cpumask copied out
+    if ret <= 0 {
+        return None;
+    }
+    let words = ((ret as usize) / 8).min(MASK_WORDS);
+    let mut cores = Vec::new();
+    for (w, &bits) in mask.iter().enumerate().take(words.max(1)) {
+        for b in 0..64 {
+            if bits & (1u64 << b) != 0 {
+                cores.push(w * 64 + b);
+            }
+        }
+    }
+    Some(cores)
+}
+
+/// No-op fallback: affinity is unreadable off Linux/x86_64/aarch64.
+#[cfg(not(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64"))))]
+pub fn current_affinity() -> Option<Vec<usize>> {
+    None
+}
+
+/// Core count the pinning layout should wrap around — `available_parallelism`
+/// with a floor of 1 (it errors on some sandboxes).
+pub fn available_cores() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn out_of_range_core_is_rejected() {
+        assert!(!pin_to_core(MASK_WORDS * 64));
+        assert!(!pin_to_core(usize::MAX));
+    }
+
+    #[test]
+    fn available_cores_is_at_least_one() {
+        assert!(available_cores() >= 1);
+    }
+
+    #[test]
+    fn pin_round_trips_through_getaffinity() {
+        // skip-tolerant: on non-Linux targets or under a seccomp policy
+        // that refuses sched_getaffinity there is nothing to assert
+        let Some(allowed) = current_affinity() else { return };
+        assert!(!allowed.is_empty(), "a running thread is allowed somewhere");
+        let target = allowed[0];
+        if !pin_to_core(target) {
+            return; // sandbox refused sched_setaffinity — best-effort
+        }
+        let now = current_affinity().expect("getaffinity worked a moment ago");
+        assert_eq!(now, vec![target], "pin narrows the mask to exactly one core");
+        // no restore needed: affinity is per-thread and this test thread
+        // ends with the test
+    }
+}

@@ -25,6 +25,15 @@
 //! - **Re-entrant by degradation**: a scope started while another scope of
 //!   the same pool is in flight (including from inside a scope body) runs
 //!   inline on the calling thread instead of deadlocking on the helpers.
+//! - **Optional core pinning**: `Pool::new_pinned` gives the pool a core
+//!   list; each helper pins itself (best-effort `sched_setaffinity`, see
+//!   [`affinity`]) first thing inside its spawn closure — before its first
+//!   allocation, so first-touch scratch like the kernels' `TilePool` lands
+//!   NUMA-local. The caller (worker 0) is never pinned by the pool; the
+//!   serving shards pin their own threads. A refused pin is a counted
+//!   no-op (`pin_events()` reports successes), never an error.
+
+pub mod affinity;
 
 use std::panic::AssertUnwindSafe;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
@@ -85,12 +94,19 @@ struct Core {
     /// finds the next epoch already published without waiting is not
     /// counted — it never parked).
     wakes: AtomicU64,
+    /// Helper threads successfully pinned to a core at spawn (telemetry +
+    /// test hook; stays 0 on unpinned pools and when the kernel refuses
+    /// `sched_setaffinity`).
+    pins: AtomicU64,
 }
 
 /// Owned by the `Pool` handles; dropping the last one shuts the helpers
 /// down and joins them.
 struct Shared {
     workers: usize,
+    /// Core list for helper pinning: helper `w` pins itself to
+    /// `cores[w % cores.len()]` at spawn. `None` = unpinned pool.
+    pin_cores: Option<Vec<usize>>,
     core: Arc<Core>,
     /// Helper thread handles, spawned lazily on the first parallel scope.
     handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
@@ -168,9 +184,22 @@ impl std::fmt::Debug for Pool {
 
 impl Pool {
     pub fn new(workers: usize) -> Self {
+        Self::new_pinned(workers, None)
+    }
+
+    /// Pool whose helpers pin themselves at spawn: helper `w` (1-based, the
+    /// caller is worker 0 and is never pinned by the pool) pins to
+    /// `cores[w % cores.len()]` before entering its park loop, so any
+    /// first-touch scratch it allocates is local to that core's node.
+    /// Pinning is best-effort — a refused `sched_setaffinity` (non-Linux,
+    /// seccomp, cpuset) degrades to an unpinned helper and is observable
+    /// only through `pin_events()`. `None` or an empty core list means
+    /// no pinning (identical to `Pool::new`).
+    pub fn new_pinned(workers: usize, pin_cores: Option<Vec<usize>>) -> Self {
         Self {
             shared: Arc::new(Shared {
                 workers: workers.max(1),
+                pin_cores: pin_cores.filter(|cs| !cs.is_empty()),
                 core: Arc::new(Core {
                     state: Mutex::new(State {
                         epoch: 0,
@@ -183,6 +212,7 @@ impl Pool {
                     done_cv: Condvar::new(),
                     spawns: AtomicU64::new(0),
                     wakes: AtomicU64::new(0),
+                    pins: AtomicU64::new(0),
                 }),
                 handles: Mutex::new(Vec::new()),
                 scope_lock: Mutex::new(()),
@@ -197,7 +227,12 @@ impl Pool {
     }
 
     pub fn from_config(cfg: &ParallelConfig) -> Self {
-        Self::new(cfg.workers)
+        if cfg.pin_workers {
+            let n = affinity::available_cores();
+            Self::new_pinned(cfg.workers, Some((0..cfg.workers.max(1)).map(|w| w % n).collect()))
+        } else {
+            Self::new(cfg.workers)
+        }
     }
 
     pub fn workers(&self) -> usize {
@@ -217,6 +252,14 @@ impl Pool {
         self.shared.core.wakes.load(Ordering::Relaxed)
     }
 
+    /// Helpers successfully pinned to a core at spawn. At most
+    /// `workers() - 1`; exactly 0 on unpinned pools, and possibly 0 on a
+    /// pinned pool whose sandbox refuses `sched_setaffinity` (pinning is
+    /// best-effort by design).
+    pub fn pin_events(&self) -> u64 {
+        self.shared.core.pins.load(Ordering::Relaxed)
+    }
+
     /// Spawn any missing helper threads. Called with `scope_lock` held and
     /// no epoch outstanding, so the epoch read here is stable until the
     /// caller publishes the next job.
@@ -230,11 +273,21 @@ impl Pool {
         while hs.len() < helpers {
             let worker = hs.len() + 1;
             let core = self.shared.core.clone();
+            let pin = self.shared.pin_cores.as_ref().map(|cs| cs[worker % cs.len()]);
             self.shared.core.spawns.fetch_add(1, Ordering::Relaxed);
             hs.push(
                 std::thread::Builder::new()
                     .name(format!("ewq-pool-{worker}"))
-                    .spawn(move || helper_loop(core, worker, seen))
+                    .spawn(move || {
+                        // pin before the first allocation or park so the
+                        // helper's first-touch scratch is node-local
+                        if let Some(c) = pin {
+                            if affinity::pin_to_core(c) {
+                                core.pins.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                        helper_loop(core, worker, seen)
+                    })
                     .expect("spawn pool worker"),
             );
         }
@@ -816,5 +869,60 @@ mod tests {
     fn zero_workers_clamps_to_one() {
         assert_eq!(Pool::new(0).workers(), 1);
         assert_eq!(Pool::from_config(&ParallelConfig::with_workers(0)).workers(), 1);
+    }
+
+    #[test]
+    fn unpinned_pools_never_count_pin_events() {
+        let pool = Pool::new(3);
+        let _ = pool.par_map_range(8, |i| i);
+        assert_eq!(pool.pin_events(), 0);
+        // an empty core list means "no pinning", same as None
+        let empty = Pool::new_pinned(3, Some(Vec::new()));
+        let _ = empty.par_map_range(8, |i| i);
+        assert_eq!(empty.pin_events(), 0);
+    }
+
+    #[test]
+    fn pinned_pool_pins_helpers_at_spawn() {
+        // skip-tolerant by design: pinning is best-effort, and a sandbox
+        // that refuses sched_setaffinity must not fail the suite — the
+        // observable contract is "results identical, pin_events() counts
+        // only kernel-accepted pins"
+        let Some(allowed) = affinity::current_affinity() else { return };
+        assert!(!allowed.is_empty());
+        let target = allowed[0];
+        let pool = Pool::new_pinned(3, Some(vec![target]));
+        assert_eq!(pool.pin_events(), 0, "lazy: no pinning before the first scope");
+        let out = pool.par_map_range(16, |i| i * 2);
+        assert_eq!(out, (0..16).map(|i| i * 2).collect::<Vec<_>>());
+        assert!(pool.pin_events() <= 2, "at most workers - 1 helpers pin");
+        if pool.pin_events() == 2 {
+            // both helpers accepted the pin: their masks must now be
+            // exactly the target core (worker 0 — this thread — is not
+            // pinned by the pool)
+            let masks = Mutex::new(vec![None; 3]);
+            pool.scope(|w| {
+                if w > 0 {
+                    lock(&masks)[w] = Some(affinity::current_affinity());
+                }
+            });
+            for (w, m) in lock(&masks).iter().enumerate().skip(1) {
+                assert_eq!(
+                    m.clone().flatten().as_deref(),
+                    Some(&[target][..]),
+                    "helper {w} runs pinned to core {target}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn pinned_config_builds_pinned_pool_with_identical_results() {
+        let cfg = ParallelConfig::with_workers(3).pinned(true);
+        let pool = Pool::from_config(&cfg);
+        let serial: Vec<usize> = (0..64).map(|i| i * i + 1).collect();
+        assert_eq!(pool.par_map_range(64, |i| i * i + 1), serial);
+        // pin successes are bounded by helper count whatever the sandbox did
+        assert!(pool.pin_events() <= 2);
     }
 }

@@ -470,6 +470,58 @@ pub fn dequantize_tile_path(
     }
 }
 
+/// Issue software-prefetch hints for the packed bytes and scale group that
+/// `dequantize_tile_path(m, rows, cols, ..)` would read — the kernels call
+/// this for the *next* tile while unpacking the current one (DESIGN.md §16).
+/// Mirrors the payload indexing above exactly, but reads nothing and writes
+/// nothing: prefetch is a pure hint, so this can never change a result bit.
+/// Unlike the dequantizer it clamps instead of asserting — the "next tile"
+/// computed at a band edge may run past the matrix, and a partially- or
+/// fully-out-of-range tile must degrade to fewer (or zero) hints.
+pub fn prefetch_tile(m: &QMat, rows: Range<usize>, cols: Range<usize>) {
+    use crate::simd::prefetch_bytes;
+    let n = m.cols;
+    let rows = rows.start.min(m.rows)..rows.end.min(m.rows);
+    let cols = cols.start.min(n)..cols.end.min(n);
+    let tw = cols.len();
+    if tw == 0 || rows.is_empty() {
+        return;
+    }
+    match &m.payload {
+        Payload::Raw(d) => {
+            for i in rows {
+                prefetch_bytes(d[i * n + cols.start..].as_ptr() as *const u8, 4 * tw);
+            }
+        }
+        Payload::Q8 { q, s } => {
+            prefetch_bytes(s[cols.start..].as_ptr() as *const u8, 4 * tw);
+            for i in rows {
+                prefetch_bytes(q[i * n + cols.start..].as_ptr() as *const u8, tw);
+            }
+        }
+        Payload::Q4 { p, s } => {
+            prefetch_bytes(s[cols.start..].as_ptr() as *const u8, 4 * tw);
+            for g in rows.start / 2..rows.end / 2 {
+                prefetch_bytes(p[g * n + cols.start..].as_ptr() as *const u8, tw);
+            }
+        }
+        Payload::Q3 { p, s } => {
+            prefetch_bytes(s[cols.start..].as_ptr() as *const u8, 4 * tw);
+            for g in rows.start / 8..rows.end / 8 {
+                for j in 0..3 {
+                    prefetch_bytes(p[(3 * g + j) * n + cols.start..].as_ptr() as *const u8, tw);
+                }
+            }
+        }
+        Payload::T2 { p, s } => {
+            prefetch_bytes(s[cols.start..].as_ptr() as *const u8, 4 * tw);
+            for g in rows.start / 4..rows.end / 4 {
+                prefetch_bytes(p[g * n + cols.start..].as_ptr() as *const u8, tw);
+            }
+        }
+    }
+}
+
 impl QMat {
     /// Stored size in bytes (payload + scales).
     pub fn size_bytes(&self) -> usize {
@@ -721,6 +773,35 @@ mod tests {
                 assert!(
                     (r - r.round()).abs() < 1e-5 && (-1.0..=1.0).contains(&r.round()),
                     "ratio {r}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn prefetch_tile_tolerates_every_edge_and_overrun() {
+        // the next-tile lookahead may hand this any rectangle, including
+        // ones past the matrix edge; it must never panic and (being a pure
+        // hint) never perturb a later dequant
+        let w = rand_tensor(64, 48, 77, 0.5);
+        for prec in [Precision::Raw, Precision::Q8, Precision::Q4, Precision::Q3, Precision::T2]
+        {
+            let q = quantize(&w, prec);
+            let expect = dequantize(&q);
+            for (rows, cols) in [
+                (0..32, 0..48),   // interior
+                (32..64, 40..48), // ragged right edge
+                (56..64, 0..13),  // ragged bottom edge
+                (64..96, 0..48),  // fully past the rows
+                (32..64, 48..64), // fully past the cols
+                (48..80, 40..80), // straddles both edges
+            ] {
+                prefetch_tile(&q, rows.clone(), cols.clone());
+                assert_eq!(
+                    dequantize(&q),
+                    expect,
+                    "{} rows={rows:?} cols={cols:?}",
+                    prec.label()
                 );
             }
         }

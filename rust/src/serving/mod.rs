@@ -731,6 +731,19 @@ impl Coordinator {
                 ))
             });
 
+        // disjoint per-shard core blocks when pinning is on: shard i owns
+        // cores [i*fwd_workers, (i+1)*fwd_workers) wrapped around the host
+        // core count, so co-located shards never share a core until the
+        // host is oversubscribed
+        let pin_blocks: Option<Vec<Vec<usize>>> = cfg.pin_workers.then(|| {
+            let ncores = crate::par::affinity::available_cores();
+            (0..n_shards)
+                .map(|i| {
+                    (i * fwd_workers..(i + 1) * fwd_workers).map(|c| c % ncores).collect()
+                })
+                .collect()
+        });
+
         // the shared per-shard work queues the whole fleet drains
         let queues: Arc<ShardQueues<Work>> = Arc::new(ShardQueues::new(n_shards));
         let board = Arc::new(StatusBoard::new());
@@ -755,6 +768,7 @@ impl Coordinator {
                 max_decode_batch,
                 max_live_seqs,
                 prefix_cache: cfg.prefix_cache,
+                pin_cores: pin_blocks.as_ref().map(|b| b[shard].clone()),
                 requant: requant_plan.clone(),
                 requant_forced: cfg.requant_forced.clone(),
                 board: board.clone(),
@@ -1074,6 +1088,12 @@ struct ShardCtx {
     /// before charging the KV budget (DESIGN.md §14; off = the equivalence
     /// oracle that always ingests fresh)
     prefix_cache: bool,
+    /// this shard's disjoint core block when `pin_workers` is on
+    /// (DESIGN.md §16): the shard thread pins itself to `cores[0]` before
+    /// building its replica (so the packed payloads are first-touched
+    /// node-local) and the forward pool's helpers spread over the block.
+    /// Best-effort; `None` = unpinned.
+    pin_cores: Option<Vec<usize>>,
     /// fleet-shared requant policy (`None` = requant fully off: no
     /// controller is built and block precisions never move)
     requant: Option<Arc<requant::RequantPlan>>,
@@ -1127,12 +1147,20 @@ fn shard_worker(
         max_decode_batch,
         max_live_seqs,
         prefix_cache,
+        pin_cores,
         requant,
         requant_forced,
         board,
         ..
     } = ctx;
     let mut guard = DeathGuard { shard, queues: queues.clone(), armed: true };
+    // pin this shard thread to its block's first core *before* building the
+    // replica, so the packed payloads it allocates are first-touched on the
+    // node the shard will run on (best-effort: a refused pin changes
+    // nothing but locality)
+    if let Some(cores) = &pin_cores {
+        let _ = crate::par::affinity::pin_to_core(cores[0]);
+    }
     // Runtime lives entirely inside this thread (PJRT client is not Send).
     let setup = (|| -> Result<_> {
         let rt = Runtime::cpu()?;
@@ -1146,7 +1174,7 @@ fn shard_worker(
             return Err(e);
         }
     };
-    let ex = ModelExecutor::with_pool(&rt, &model, Pool::new(fwd_workers));
+    let ex = ModelExecutor::with_pool(&rt, &model, Pool::new_pinned(fwd_workers, pin_cores));
     let (b, s) = (model.schema.eval_batch, model.schema.seq_len);
     let v = model.schema.vocab;
     let n_blocks = model.schema.n_blocks;
@@ -2345,6 +2373,39 @@ mod tests {
         assert!(m.batches >= 1, "classic windows executed as batched prefill");
         // 4 sequences x (2 ingest + 4 extra) decode steps
         assert_eq!(m.decode_steps, 4 * 6);
+    }
+
+    #[test]
+    fn pinned_serving_streams_match_unpinned_bitwise() {
+        // `--pin on` is a pure locality knob: shard threads and their
+        // forward pools land on disjoint cores (best-effort), and every
+        // response stream must be identical to the unpinned run — the
+        // kernels are bit-stable wherever the threads execute
+        let model = tiny_model();
+        let plan =
+            QuantPlan::uniform(&model.schema.name, model.schema.n_blocks, Precision::Q8);
+        let run = |pin: bool| {
+            let cfg = ServeConfig {
+                max_batch: 2,
+                max_wait_us: 300,
+                workers: 2,
+                forward_workers: 2,
+                pin_workers: pin,
+                ..Default::default()
+            };
+            let coord =
+                Coordinator::start_with_model(model.clone(), plan.clone(), cfg, 0, 0).unwrap();
+            let rxs: Vec<_> =
+                (0..4).map(|i| coord.submit_gen(vec![(1 + i) % 64, 5], 4)).collect();
+            let streams: Vec<Vec<i32>> =
+                rxs.into_iter().map(|rx| rx.iter().map(|r| r.next_token).collect()).collect();
+            coord.shutdown();
+            streams
+        };
+        let unpinned = run(false);
+        let pinned = run(true);
+        assert_eq!(unpinned, pinned, "pinning must never move a bit");
+        assert!(unpinned.iter().all(|s| s.len() == 4));
     }
 
     #[test]

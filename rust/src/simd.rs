@@ -11,18 +11,34 @@
 //! scalar fallback's `acc += a * x` by up to half an ulp per term. The
 //! dequantizers widen small integers (|q| ≤ 127) to f32 — an exact
 //! conversion — and multiply by the per-column scale with the same one
-//! rounding the scalar unpack performs. Net: for identical inputs the SIMD
-//! and scalar paths produce identical bits, which is what lets the kernel
-//! property suites assert `to_bits()` equality between them.
+//! rounding the scalar unpack performs. Net: for identical inputs the
+//! scalar, AVX2 (8-lane) and AVX-512 (16-lane) paths produce identical
+//! bits, which is what lets the kernel property suites assert `to_bits()`
+//! equality between them. Lane *width* is irrelevant to the result: widening
+//! 8 → 16 columns per step changes which columns round together, not how any
+//! single column rounds.
 //!
-//! **Dispatch.** `kernel_path()` picks the widest available path once per
-//! kernel invocation: `EWQ_FORCE_SCALAR` (any value except empty/`0`) pins
-//! the portable scalar code — threaded like `EWQ_TEST_WORKERS`, so CI can
-//! run the whole suite under it and the fallback can never rot — otherwise
-//! AVX2 when the CPU reports it (cached by `is_x86_feature_detected!`),
-//! otherwise scalar. Passing `KernelPath::Avx2` on a machine without AVX2
-//! degrades safely to scalar inside each primitive; the unsafe intrinsic
-//! blocks are only ever entered behind the runtime check.
+//! **Dispatch.** `kernel_path()` picks the path once per kernel invocation:
+//! `EWQ_KERNEL_PATH=scalar|avx2|avx512` pins an explicit path (winning over
+//! `EWQ_FORCE_SCALAR`; an unavailable pin warns once on stderr and degrades
+//! to the detected path); otherwise `EWQ_FORCE_SCALAR` (any value except
+//! empty/`0`) pins the portable scalar code — threaded like
+//! `EWQ_TEST_WORKERS`, so CI can run the whole suite under it and the
+//! fallback can never rot — otherwise the widest path the CPU reports
+//! (AVX-512F, then AVX2, cached by `is_x86_feature_detected!`), otherwise
+//! scalar. Passing an unsupported `KernelPath` into a primitive degrades
+//! safely to scalar inside that primitive; the unsafe intrinsic blocks are
+//! only ever entered behind the runtime check. The AVX-512 bodies are
+//! additionally compile-time gated on `ewq_avx512` (build.rs: x86_64 and
+//! rustc ≥ 1.89, where the intrinsics are stable) so older toolchains still
+//! build the crate — there the path simply reports unavailable.
+//!
+//! **Prefetch.** `prefetch_bytes` issues `_mm_prefetch` T0 hints one cache
+//! line apart — the kernels use it to pull the *next* packed tile and its
+//! scale group into L1 while dequantizing the current one (DESIGN.md §16).
+//! Prefetching is a pure hint: it never faults and never changes a bit, so
+//! it rides on any non-scalar path (`KernelPath::prefetches()`) and can be
+//! disabled with `EWQ_PREFETCH=0` for A/B benching.
 
 /// Which inner-loop implementation a kernel call runs. Resolved once per
 /// kernel invocation (`kernel_path()`) and threaded through the tile loops,
@@ -35,18 +51,34 @@ pub enum KernelPath {
     Scalar,
     /// 256-bit AVX2 lanes across the output-column dimension.
     Avx2,
+    /// 512-bit AVX-512F lanes across the output-column dimension — same
+    /// mul-then-add discipline, twice the columns per step.
+    Avx512,
 }
 
 impl KernelPath {
-    /// Label for bench JSON / logs: `"scalar"` or `"avx2"`.
+    /// Label for bench JSON / logs: `"scalar"`, `"avx2"` or `"avx512"`.
     pub fn label(self) -> &'static str {
         match self {
             KernelPath::Scalar => "scalar",
             KernelPath::Avx2 => "avx2",
+            KernelPath::Avx512 => "avx512",
         }
     }
 
-    /// Whether this path's instructions can actually run on this CPU.
+    /// Parse an `EWQ_KERNEL_PATH` value (case-insensitive). `None` for
+    /// anything that is not a known path name.
+    pub fn parse(s: &str) -> Option<KernelPath> {
+        match s.to_ascii_lowercase().as_str() {
+            "scalar" => Some(KernelPath::Scalar),
+            "avx2" => Some(KernelPath::Avx2),
+            "avx512" => Some(KernelPath::Avx512),
+            _ => None,
+        }
+    }
+
+    /// Whether this path's instructions can actually run on this CPU (and,
+    /// for AVX-512, whether the toolchain compiled the bodies at all).
     /// `Scalar` is always available; the dispatchers fall back to it when
     /// an unavailable path is requested, so a stale `KernelPath` value can
     /// never fault.
@@ -54,7 +86,16 @@ impl KernelPath {
         match self {
             KernelPath::Scalar => true,
             KernelPath::Avx2 => avx2_available(),
+            KernelPath::Avx512 => avx512_available(),
         }
+    }
+
+    /// Whether the tile loops should issue software prefetch for the next
+    /// packed tile on this path. Scalar stays a pure reference
+    /// implementation — no hints, nothing hidden behind it — so the
+    /// prefetch-on/off A-B in the property suite is a real comparison.
+    pub fn prefetches(self) -> bool {
+        !matches!(self, KernelPath::Scalar)
     }
 }
 
@@ -70,6 +111,18 @@ fn avx2_available() -> bool {
     false
 }
 
+#[cfg(ewq_avx512)]
+fn avx512_available() -> bool {
+    // `ewq_avx512` (build.rs) implies x86_64 + rustc >= 1.89: the bodies
+    // exist; this is the same cached cpuid probe as avx2_available
+    is_x86_feature_detected!("avx512f")
+}
+
+#[cfg(not(ewq_avx512))]
+fn avx512_available() -> bool {
+    false
+}
+
 /// Whether `EWQ_FORCE_SCALAR` pins the scalar path. Any value other than
 /// empty or `"0"` forces scalar (so the CI matrix can pass `0` to mean
 /// "off" and `1` to mean "on"). Read per kernel call, like
@@ -81,31 +134,140 @@ pub fn force_scalar() -> bool {
     }
 }
 
-/// The override/detection rule with the environment factored out (pure, so
-/// it is testable without touching the process environment).
+/// The path pinned via `EWQ_KERNEL_PATH`, if any. An unrecognized value
+/// warns once on stderr and behaves as unset (auto-detection), so a typo'd
+/// pin degrades loudly rather than silently running the wrong path.
+pub fn pinned_path() -> Option<KernelPath> {
+    match std::env::var("EWQ_KERNEL_PATH") {
+        Ok(v) if !v.is_empty() => {
+            let parsed = KernelPath::parse(&v);
+            if parsed.is_none() {
+                warn_unknown_once(&v);
+            }
+            parsed
+        }
+        _ => None,
+    }
+}
+
+/// The detection rule with the environment factored out (pure, so it is
+/// testable without touching the process environment): scalar when forced,
+/// else the widest path the CPU supports.
 pub fn path_for(force_scalar: bool) -> KernelPath {
-    if !force_scalar && avx2_available() {
+    if force_scalar {
+        KernelPath::Scalar
+    } else if avx512_available() {
+        KernelPath::Avx512
+    } else if avx2_available() {
         KernelPath::Avx2
     } else {
         KernelPath::Scalar
     }
 }
 
-/// The path the fused kernels select for this call: scalar under
-/// `EWQ_FORCE_SCALAR`, else the widest the CPU supports.
-pub fn kernel_path() -> KernelPath {
-    path_for(force_scalar())
+/// The full override rule, pure for testability: a pinned path wins when it
+/// is available (including pinning `scalar` with `EWQ_FORCE_SCALAR` unset,
+/// or pinning a SIMD path with it set — the explicit pin is the stronger
+/// statement); an unavailable pin falls back to detection. Returns the
+/// selected path plus `Some(requested)` when a fallback happened, so the
+/// caller can warn.
+pub fn resolve_path(
+    pinned: Option<KernelPath>,
+    force_scalar: bool,
+) -> (KernelPath, Option<KernelPath>) {
+    match pinned {
+        Some(p) if p.available() => (p, None),
+        Some(p) => (path_for(force_scalar), Some(p)),
+        None => (path_for(force_scalar), None),
+    }
 }
 
-/// Serializes the tests that mutate `EWQ_FORCE_SCALAR` (process-wide
-/// state): a test that sets the var and asserts on the resulting path must
-/// not interleave with another test's save/restore. Every *other* test is
-/// path-agnostic — the bit-identity contract — so only the mutators need
-/// the lock.
+/// The path the fused kernels select for this call: `EWQ_KERNEL_PATH` when
+/// pinned (with a once-per-process stderr warning if the pin is
+/// unavailable), else scalar under `EWQ_FORCE_SCALAR`, else the widest the
+/// CPU supports.
+pub fn kernel_path() -> KernelPath {
+    let (path, fell_back) = resolve_path(pinned_path(), force_scalar());
+    if let Some(requested) = fell_back {
+        warn_fallback_once(requested, path);
+    }
+    path
+}
+
+/// One-line, once-per-process stderr note that a pinned-but-unavailable
+/// path degraded. Returns whether this call printed (false on every call
+/// after the first), which is what the fallback test pins.
+fn warn_fallback_once(requested: KernelPath, selected: KernelPath) -> bool {
+    use std::sync::atomic::{AtomicBool, Ordering};
+    static WARNED: AtomicBool = AtomicBool::new(false);
+    if WARNED.swap(true, Ordering::Relaxed) {
+        return false;
+    }
+    eprintln!(
+        "ewq: EWQ_KERNEL_PATH={} is pinned but unavailable on this CPU/toolchain; \
+         falling back to {}",
+        requested.label(),
+        selected.label()
+    );
+    true
+}
+
+/// Once-per-process stderr note for an unparseable `EWQ_KERNEL_PATH` value.
+fn warn_unknown_once(value: &str) {
+    use std::sync::atomic::{AtomicBool, Ordering};
+    static WARNED: AtomicBool = AtomicBool::new(false);
+    if !WARNED.swap(true, Ordering::Relaxed) {
+        eprintln!(
+            "ewq: unrecognized EWQ_KERNEL_PATH={value:?} (want scalar|avx2|avx512); \
+             using auto-detection"
+        );
+    }
+}
+
+/// Serializes the tests that mutate `EWQ_FORCE_SCALAR` / `EWQ_KERNEL_PATH`
+/// (process-wide state): a test that sets a var and asserts on the
+/// resulting path must not interleave with another test's save/restore.
+/// Every *other* test is path-agnostic — the bit-identity contract — so
+/// only the mutators need the lock.
 #[cfg(test)]
 pub(crate) fn env_lock() -> std::sync::MutexGuard<'static, ()> {
     static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
     LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+// ---- software prefetch ---------------------------------------------------------
+
+/// Whether `EWQ_PREFETCH` leaves next-tile prefetching on (the default).
+/// `0`, `off` or empty disables it — the A/B knob the bench and the
+/// prefetch-on-vs-off bit-identity cell use. Read once per kernel call and
+/// threaded as a bool, like the path itself.
+pub fn prefetch_enabled() -> bool {
+    match std::env::var("EWQ_PREFETCH") {
+        Ok(v) => !(v.is_empty() || v == "0" || v.eq_ignore_ascii_case("off")),
+        Err(_) => true,
+    }
+}
+
+/// Issue T0 prefetch hints covering `len` bytes from `p`, one per 64-byte
+/// cache line. A pure scheduling hint: never faults (even on a bad
+/// address), never writes, never changes a result bit. No-op off x86_64.
+#[inline]
+pub fn prefetch_bytes(p: *const u8, len: usize) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        use std::arch::x86_64::{_mm_prefetch, _MM_HINT_T0};
+        let mut off = 0usize;
+        while off < len {
+            // SAFETY: prefetch is architecturally defined to be safe for
+            // any address, valid or not — it cannot fault or trap.
+            unsafe { _mm_prefetch::<_MM_HINT_T0>(p.wrapping_add(off) as *const i8) };
+            off += 64;
+        }
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        let _ = (p, len);
+    }
 }
 
 // ---- axpy: the FMA-shaped inner loop of every kernel ---------------------------
@@ -123,6 +285,15 @@ pub fn axpy(acc: &mut [f32], a: f32, x: &[f32], path: KernelPath) {
             if avx2_available() {
                 // SAFETY: AVX2 confirmed present at runtime.
                 unsafe { axpy_avx2(acc, a, x) };
+                return;
+            }
+            axpy_scalar(acc, a, x)
+        }
+        KernelPath::Avx512 => {
+            #[cfg(ewq_avx512)]
+            if avx512_available() {
+                // SAFETY: AVX-512F confirmed present at runtime.
+                unsafe { axpy_avx512(acc, a, x) };
                 return;
             }
             axpy_scalar(acc, a, x)
@@ -158,16 +329,38 @@ unsafe fn axpy_avx2(acc: &mut [f32], a: f32, x: &[f32]) {
     }
 }
 
+#[cfg(ewq_avx512)]
+#[target_feature(enable = "avx512f")]
+unsafe fn axpy_avx512(acc: &mut [f32], a: f32, x: &[f32]) {
+    use std::arch::x86_64::*;
+    let n = acc.len().min(x.len());
+    let av = _mm512_set1_ps(a);
+    let mut j = 0usize;
+    while j + 16 <= n {
+        let xv = _mm512_loadu_ps(x.as_ptr().add(j));
+        let ov = _mm512_loadu_ps(acc.as_ptr().add(j));
+        // mul then add — NOT _mm512_fmadd_ps (see axpy_avx2)
+        let r = _mm512_add_ps(ov, _mm512_mul_ps(av, xv));
+        _mm512_storeu_ps(acc.as_mut_ptr().add(j), r);
+        j += 16;
+    }
+    while j < n {
+        acc[j] += a * x[j];
+        j += 1;
+    }
+}
+
 // ---- per-format dequant rows: the unpack half of dequantize_tile ----------------
 //
 // All slices are one tile-row wide (`tw` elements of the column band);
 // `s` is the per-column scale slice for the same columns. Out rows are
 // contiguous. Scalar bodies are byte-for-byte the arithmetic the packers
-// in `quant` invert; the AVX2 bodies widen 8 columns per step.
+// in `quant` invert; the AVX2 bodies widen 8 columns per step, the
+// AVX-512 bodies 16.
 
 /// Q8: `out[j] = q[j] as f32 * s[j]`.
 pub fn dequant_q8_row(q: &[i8], s: &[f32], out: &mut [f32], path: KernelPath) {
-    // hard contract, not a debug_assert: the AVX2 body stores through raw
+    // hard contract, not a debug_assert: the SIMD bodies store through raw
     // pointers, so a mis-sized release-build call must panic here rather
     // than write out of bounds
     assert!(q.len() == out.len() && s.len() == out.len(), "q8 row slice lengths must match");
@@ -178,6 +371,15 @@ pub fn dequant_q8_row(q: &[i8], s: &[f32], out: &mut [f32], path: KernelPath) {
             if avx2_available() {
                 // SAFETY: AVX2 confirmed present at runtime.
                 unsafe { dequant_q8_avx2(q, s, out) };
+                return;
+            }
+            dequant_q8_scalar(q, s, out)
+        }
+        KernelPath::Avx512 => {
+            #[cfg(ewq_avx512)]
+            if avx512_available() {
+                // SAFETY: AVX-512F confirmed present at runtime.
+                unsafe { dequant_q8_avx512(q, s, out) };
                 return;
             }
             dequant_q8_scalar(q, s, out)
@@ -212,10 +414,31 @@ unsafe fn dequant_q8_avx2(q: &[i8], s: &[f32], out: &mut [f32]) {
     }
 }
 
+#[cfg(ewq_avx512)]
+#[target_feature(enable = "avx512f")]
+unsafe fn dequant_q8_avx512(q: &[i8], s: &[f32], out: &mut [f32]) {
+    use std::arch::x86_64::*;
+    // equal lengths guaranteed by the dispatcher's hard assert
+    let tw = out.len();
+    let mut j = 0usize;
+    while j + 16 <= tw {
+        let bytes = _mm_loadu_si128(q.as_ptr().add(j) as *const __m128i);
+        let iv = _mm512_cvtepi8_epi32(bytes);
+        let fv = _mm512_cvtepi32_ps(iv);
+        let sv = _mm512_loadu_ps(s.as_ptr().add(j));
+        _mm512_storeu_ps(out.as_mut_ptr().add(j), _mm512_mul_ps(fv, sv));
+        j += 16;
+    }
+    while j < tw {
+        out[j] = q[j] as f32 * s[j];
+        j += 1;
+    }
+}
+
 /// Q4: one packed byte row → two output rows (`out` is `2*tw`: the lo-nibble
 /// row followed by the hi-nibble row; codes carry a +8 bias).
 pub fn dequant_q4_rows(p: &[u8], s: &[f32], out: &mut [f32], path: KernelPath) {
-    // hard contract (see dequant_q8_row): the AVX2 body's strided stores
+    // hard contract (see dequant_q8_row): the SIMD bodies' strided stores
     // must never run against a short `out`
     assert!(
         out.len() == 2 * p.len() && s.len() == p.len(),
@@ -228,6 +451,15 @@ pub fn dequant_q4_rows(p: &[u8], s: &[f32], out: &mut [f32], path: KernelPath) {
             if avx2_available() {
                 // SAFETY: AVX2 confirmed present at runtime.
                 unsafe { dequant_q4_avx2(p, s, out) };
+                return;
+            }
+            dequant_q4_scalar(p, s, out)
+        }
+        KernelPath::Avx512 => {
+            #[cfg(ewq_avx512)]
+            if avx512_available() {
+                // SAFETY: AVX-512F confirmed present at runtime.
+                unsafe { dequant_q4_avx512(p, s, out) };
                 return;
             }
             dequant_q4_scalar(p, s, out)
@@ -277,10 +509,41 @@ unsafe fn dequant_q4_avx2(p: &[u8], s: &[f32], out: &mut [f32]) {
     }
 }
 
+#[cfg(ewq_avx512)]
+#[target_feature(enable = "avx512f")]
+unsafe fn dequant_q4_avx512(p: &[u8], s: &[f32], out: &mut [f32]) {
+    use std::arch::x86_64::*;
+    // out.len() == 2 * p.len() guaranteed by the dispatcher's hard assert
+    let tw = p.len();
+    let (lo, hi) = out.split_at_mut(tw);
+    let mask = _mm512_set1_epi32(0xF);
+    let bias = _mm512_set1_epi32(8);
+    let mut j = 0usize;
+    while j + 16 <= tw {
+        let bytes = _mm_loadu_si128(p.as_ptr().add(j) as *const __m128i);
+        let bv = _mm512_cvtepu8_epi32(bytes);
+        let sv = _mm512_loadu_ps(s.as_ptr().add(j));
+        let lo_q = _mm512_sub_epi32(_mm512_and_si512(bv, mask), bias);
+        let hi_q = _mm512_sub_epi32(
+            _mm512_and_si512(_mm512_srli_epi32::<4>(bv), mask),
+            bias,
+        );
+        _mm512_storeu_ps(lo.as_mut_ptr().add(j), _mm512_mul_ps(_mm512_cvtepi32_ps(lo_q), sv));
+        _mm512_storeu_ps(hi.as_mut_ptr().add(j), _mm512_mul_ps(_mm512_cvtepi32_ps(hi_q), sv));
+        j += 16;
+    }
+    while j < tw {
+        let b = p[j];
+        lo[j] = ((b & 0xF) as i32 - 8) as f32 * s[j];
+        hi[j] = (((b >> 4) & 0xF) as i32 - 8) as f32 * s[j];
+        j += 1;
+    }
+}
+
 /// Q3: three packed byte rows (the 24-bit little-endian bitstream of eight
 /// 3-bit codes per column, +4 bias) → eight output rows (`out` is `8*tw`).
 pub fn dequant_q3_rows(b0: &[u8], b1: &[u8], b2: &[u8], s: &[f32], out: &mut [f32], path: KernelPath) {
-    // hard contract (see dequant_q8_row): the AVX2 body's strided stores
+    // hard contract (see dequant_q8_row): the SIMD bodies' strided stores
     // must never run against a short `out`
     assert!(
         out.len() == 8 * b0.len()
@@ -296,6 +559,15 @@ pub fn dequant_q3_rows(b0: &[u8], b1: &[u8], b2: &[u8], s: &[f32], out: &mut [f3
             if avx2_available() {
                 // SAFETY: AVX2 confirmed present at runtime.
                 unsafe { dequant_q3_avx2(b0, b1, b2, s, out) };
+                return;
+            }
+            dequant_q3_scalar(b0, b1, b2, s, out)
+        }
+        KernelPath::Avx512 => {
+            #[cfg(ewq_avx512)]
+            if avx512_available() {
+                // SAFETY: AVX-512F confirmed present at runtime.
+                unsafe { dequant_q3_avx512(b0, b1, b2, s, out) };
                 return;
             }
             dequant_q3_scalar(b0, b1, b2, s, out)
@@ -353,10 +625,47 @@ unsafe fn dequant_q3_avx2(b0: &[u8], b1: &[u8], b2: &[u8], s: &[f32], out: &mut 
     }
 }
 
+#[cfg(ewq_avx512)]
+#[target_feature(enable = "avx512f")]
+unsafe fn dequant_q3_avx512(b0: &[u8], b1: &[u8], b2: &[u8], s: &[f32], out: &mut [f32]) {
+    use std::arch::x86_64::*;
+    // all lengths guaranteed by the dispatcher's hard assert
+    let tw = b0.len();
+    let mask = _mm512_set1_epi32(0x7);
+    let bias = _mm512_set1_epi32(4);
+    let mut j = 0usize;
+    while j + 16 <= tw {
+        let v0 = _mm512_cvtepu8_epi32(_mm_loadu_si128(b0.as_ptr().add(j) as *const __m128i));
+        let v1 = _mm512_cvtepu8_epi32(_mm_loadu_si128(b1.as_ptr().add(j) as *const __m128i));
+        let v2 = _mm512_cvtepu8_epi32(_mm_loadu_si128(b2.as_ptr().add(j) as *const __m128i));
+        let bits = _mm512_or_si512(
+            v0,
+            _mm512_or_si512(_mm512_slli_epi32::<8>(v1), _mm512_slli_epi32::<16>(v2)),
+        );
+        let sv = _mm512_loadu_ps(s.as_ptr().add(j));
+        for r in 0..8i32 {
+            let shifted = _mm512_srlv_epi32(bits, _mm512_set1_epi32(3 * r));
+            let q = _mm512_sub_epi32(_mm512_and_si512(shifted, mask), bias);
+            _mm512_storeu_ps(
+                out.as_mut_ptr().add(r as usize * b0.len() + j),
+                _mm512_mul_ps(_mm512_cvtepi32_ps(q), sv),
+            );
+        }
+        j += 16;
+    }
+    while j < tw {
+        let bits = b0[j] as u32 | ((b1[j] as u32) << 8) | ((b2[j] as u32) << 16);
+        for r in 0..8 {
+            out[r * b0.len() + j] = (((bits >> (3 * r)) & 0x7) as i32 - 4) as f32 * s[j];
+        }
+        j += 1;
+    }
+}
+
 /// T2: one packed byte row (four 2-bit ternary codes per column, +1 bias)
 /// → four output rows (`out` is `4*tw`).
 pub fn dequant_t2_rows(p: &[u8], s: &[f32], out: &mut [f32], path: KernelPath) {
-    // hard contract (see dequant_q8_row): the AVX2 body's strided stores
+    // hard contract (see dequant_q8_row): the SIMD bodies' strided stores
     // must never run against a short `out`
     assert!(
         out.len() == 4 * p.len() && s.len() == p.len(),
@@ -369,6 +678,15 @@ pub fn dequant_t2_rows(p: &[u8], s: &[f32], out: &mut [f32], path: KernelPath) {
             if avx2_available() {
                 // SAFETY: AVX2 confirmed present at runtime.
                 unsafe { dequant_t2_avx2(p, s, out) };
+                return;
+            }
+            dequant_t2_scalar(p, s, out)
+        }
+        KernelPath::Avx512 => {
+            #[cfg(ewq_avx512)]
+            if avx512_available() {
+                // SAFETY: AVX-512F confirmed present at runtime.
+                unsafe { dequant_t2_avx512(p, s, out) };
                 return;
             }
             dequant_t2_scalar(p, s, out)
@@ -418,15 +736,47 @@ unsafe fn dequant_t2_avx2(p: &[u8], s: &[f32], out: &mut [f32]) {
     }
 }
 
+#[cfg(ewq_avx512)]
+#[target_feature(enable = "avx512f")]
+unsafe fn dequant_t2_avx512(p: &[u8], s: &[f32], out: &mut [f32]) {
+    use std::arch::x86_64::*;
+    // all lengths guaranteed by the dispatcher's hard assert
+    let tw = p.len();
+    let mask = _mm512_set1_epi32(0x3);
+    let bias = _mm512_set1_epi32(1);
+    let mut j = 0usize;
+    while j + 16 <= tw {
+        let bv = _mm512_cvtepu8_epi32(_mm_loadu_si128(p.as_ptr().add(j) as *const __m128i));
+        let sv = _mm512_loadu_ps(s.as_ptr().add(j));
+        for r in 0..4i32 {
+            let shifted = _mm512_srlv_epi32(bv, _mm512_set1_epi32(2 * r));
+            let q = _mm512_sub_epi32(_mm512_and_si512(shifted, mask), bias);
+            _mm512_storeu_ps(
+                out.as_mut_ptr().add(r as usize * p.len() + j),
+                _mm512_mul_ps(_mm512_cvtepi32_ps(q), sv),
+            );
+        }
+        j += 16;
+    }
+    while j < tw {
+        let b = p[j];
+        for r in 0..4 {
+            out[r * p.len() + j] = (((b >> (2 * r)) & 0x3) as i32 - 1) as f32 * s[j];
+        }
+        j += 1;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::rng::Xoshiro256pp;
 
-    /// Both paths to exercise: Avx2 degrades to scalar where unsupported,
-    /// so the bit-identity assertions below are trivially true there and
-    /// real comparisons on any x86-64 CI runner.
-    const PATHS: [KernelPath; 2] = [KernelPath::Scalar, KernelPath::Avx2];
+    /// All paths to exercise: unavailable paths degrade to scalar inside
+    /// each primitive, so the bit-identity assertions below are trivially
+    /// true there and real comparisons wherever the hardware (and, for
+    /// AVX-512, the toolchain) can run them.
+    const PATHS: [KernelPath; 3] = [KernelPath::Scalar, KernelPath::Avx2, KernelPath::Avx512];
 
     fn rand_f32(len: usize, seed: u64) -> Vec<f32> {
         let mut r = Xoshiro256pp::new(seed);
@@ -441,26 +791,37 @@ mod tests {
     }
 
     #[test]
-    fn path_labels_and_availability() {
+    fn path_labels_parse_and_availability() {
         assert_eq!(KernelPath::Scalar.label(), "scalar");
         assert_eq!(KernelPath::Avx2.label(), "avx2");
+        assert_eq!(KernelPath::Avx512.label(), "avx512");
+        for p in PATHS {
+            assert_eq!(KernelPath::parse(p.label()), Some(p), "label round-trips");
+        }
+        assert_eq!(KernelPath::parse("AVX512"), Some(KernelPath::Avx512), "case-insensitive");
+        assert_eq!(KernelPath::parse("sse9"), None);
         assert!(KernelPath::Scalar.available(), "scalar is always available");
         // the selected path must itself be available
         assert!(kernel_path().available());
         assert_eq!(path_for(true), KernelPath::Scalar, "force wins over detection");
-        if KernelPath::Avx2.available() {
+        if KernelPath::Avx512.available() {
+            assert_eq!(path_for(false), KernelPath::Avx512, "widest wins");
+        } else if KernelPath::Avx2.available() {
             assert_eq!(path_for(false), KernelPath::Avx2);
         } else {
             assert_eq!(path_for(false), KernelPath::Scalar);
         }
+        assert!(!KernelPath::Scalar.prefetches(), "scalar stays a pure reference");
+        assert!(KernelPath::Avx2.prefetches());
+        assert!(KernelPath::Avx512.prefetches());
     }
 
     #[test]
     fn force_scalar_env_toggle() {
-        // the env lock serializes us against the other EWQ_FORCE_SCALAR
-        // mutator (refexec's forced-scalar forward test); everything else
-        // is path-agnostic (bit-identity), so a transient scalar window is
-        // harmless
+        // the env lock serializes us against the other env mutators
+        // (refexec's forced-scalar forward test, the kernel-path pin test
+        // below); everything else is path-agnostic (bit-identity), so a
+        // transient scalar window is harmless
         let _guard = env_lock();
         let old = std::env::var("EWQ_FORCE_SCALAR").ok();
         std::env::set_var("EWQ_FORCE_SCALAR", "1");
@@ -477,9 +838,98 @@ mod tests {
     }
 
     #[test]
+    fn kernel_path_env_pin_toggle() {
+        // EWQ_KERNEL_PATH pins an explicit path and wins over
+        // EWQ_FORCE_SCALAR; an unavailable or unknown value degrades to
+        // detection (the fallback mapping itself is pinned by
+        // resolve_path_falls_back_when_pin_unavailable, env-free)
+        let _guard = env_lock();
+        let old_pin = std::env::var("EWQ_KERNEL_PATH").ok();
+        let old_force = std::env::var("EWQ_FORCE_SCALAR").ok();
+        std::env::set_var("EWQ_KERNEL_PATH", "scalar");
+        std::env::remove_var("EWQ_FORCE_SCALAR");
+        assert_eq!(pinned_path(), Some(KernelPath::Scalar));
+        assert_eq!(kernel_path(), KernelPath::Scalar, "pin beats detection");
+        if KernelPath::Avx2.available() {
+            std::env::set_var("EWQ_KERNEL_PATH", "avx2");
+            std::env::set_var("EWQ_FORCE_SCALAR", "1");
+            assert_eq!(kernel_path(), KernelPath::Avx2, "explicit pin beats force-scalar");
+        }
+        std::env::set_var("EWQ_KERNEL_PATH", "not-a-path");
+        std::env::remove_var("EWQ_FORCE_SCALAR");
+        assert_eq!(pinned_path(), None, "unknown value behaves as unset");
+        assert_eq!(kernel_path(), path_for(false));
+        std::env::set_var("EWQ_KERNEL_PATH", "");
+        assert_eq!(pinned_path(), None, "empty behaves as unset");
+        match old_pin {
+            Some(v) => std::env::set_var("EWQ_KERNEL_PATH", v),
+            None => std::env::remove_var("EWQ_KERNEL_PATH"),
+        }
+        match old_force {
+            Some(v) => std::env::set_var("EWQ_FORCE_SCALAR", v),
+            None => std::env::remove_var("EWQ_FORCE_SCALAR"),
+        }
+    }
+
+    #[test]
+    fn resolve_path_falls_back_when_pin_unavailable() {
+        // pure — no environment involved
+        assert_eq!(resolve_path(None, false), (path_for(false), None));
+        assert_eq!(resolve_path(None, true), (KernelPath::Scalar, None));
+        for p in PATHS {
+            let (selected, fell_back) = resolve_path(Some(p), false);
+            if p.available() {
+                assert_eq!((selected, fell_back), (p, None), "available pin is honored");
+            } else {
+                assert_eq!(selected, path_for(false), "unavailable pin degrades to detection");
+                assert_eq!(fell_back, Some(p), "and reports what was requested");
+            }
+            assert!(selected.available(), "the selected path can always run");
+        }
+    }
+
+    #[test]
+    fn fallback_warning_fires_at_most_once_per_process() {
+        // an earlier genuine fallback (e.g. EWQ_KERNEL_PATH=avx512 on an
+        // AVX2 host running this whole binary) may already have consumed
+        // the once-flag, so only the *idempotence* half is assertable: after
+        // any one call, every later call must be silent
+        let _ = warn_fallback_once(KernelPath::Avx512, KernelPath::Scalar);
+        assert!(
+            !warn_fallback_once(KernelPath::Avx512, KernelPath::Scalar),
+            "second warning must be suppressed"
+        );
+        assert!(!warn_fallback_once(KernelPath::Avx2, KernelPath::Scalar));
+    }
+
+    #[test]
+    fn prefetch_env_toggle_and_hint_safety() {
+        let _guard = env_lock();
+        let old = std::env::var("EWQ_PREFETCH").ok();
+        std::env::remove_var("EWQ_PREFETCH");
+        assert!(prefetch_enabled(), "default is on");
+        for off in ["0", "off", "OFF", ""] {
+            std::env::set_var("EWQ_PREFETCH", off);
+            assert!(!prefetch_enabled(), "{off:?} disables");
+        }
+        std::env::set_var("EWQ_PREFETCH", "1");
+        assert!(prefetch_enabled());
+        match old {
+            Some(v) => std::env::set_var("EWQ_PREFETCH", v),
+            None => std::env::remove_var("EWQ_PREFETCH"),
+        }
+        // hints never fault: in-bounds, zero-length, and null all no-op
+        let buf = [0u8; 256];
+        prefetch_bytes(buf.as_ptr(), buf.len());
+        prefetch_bytes(buf.as_ptr(), 0);
+        prefetch_bytes(std::ptr::null(), 64);
+    }
+
+    #[test]
     fn axpy_paths_bit_identical_all_lengths() {
-        // ragged lengths on purpose: full 8-lane chunks plus scalar tails
-        for len in [0usize, 1, 7, 8, 9, 16, 31, 64, 67] {
+        // ragged lengths on purpose: full 8- and 16-lane chunks plus the
+        // scalar tails on either side of both boundaries
+        for len in [0usize, 1, 7, 8, 9, 15, 16, 17, 31, 33, 47, 64, 67] {
             let x = rand_f32(len, 10 + len as u64);
             let base = rand_f32(len, 20 + len as u64);
             let a = 0.37821f32;
@@ -495,7 +945,7 @@ mod tests {
 
     #[test]
     fn dequant_q8_paths_bit_identical() {
-        for tw in [1usize, 5, 8, 13, 24, 33] {
+        for tw in [1usize, 5, 8, 13, 16, 24, 31, 33] {
             let mut r = Xoshiro256pp::new(tw as u64);
             let q: Vec<i8> = (0..tw).map(|_| (r.next_u64() & 0xFF) as u8 as i8).collect();
             let s = rand_f32(tw, 40 + tw as u64).iter().map(|v| v.abs() + 1e-3).collect::<Vec<_>>();
@@ -511,7 +961,7 @@ mod tests {
 
     #[test]
     fn dequant_q4_q3_t2_paths_bit_identical() {
-        for tw in [1usize, 7, 8, 13, 32, 41] {
+        for tw in [1usize, 7, 8, 13, 16, 17, 31, 32, 41] {
             let mut r = Xoshiro256pp::new(100 + tw as u64);
             let bytes = |r: &mut Xoshiro256pp| (0..tw).map(|_| (r.next_u64() & 0xFF) as u8).collect::<Vec<u8>>();
             let p = bytes(&mut r);

@@ -228,6 +228,82 @@ fn decode_streams_bit_identical_under_forced_scalar_kernels() {
 }
 
 #[test]
+fn decode_streams_bit_identical_under_every_kernel_path_pin() {
+    // The generalized pin: EWQ_KERNEL_PATH={scalar,avx2,avx512} each
+    // reproduce the auto-dispatched decode stream bit-for-bit. Pinning a
+    // path the host lacks (avx512 on most CI runners) exercises the
+    // warn-once fallback — which must also be bit-identical, since it lands
+    // on the auto path. Same own-process env save/restore discipline as the
+    // force-scalar test above, asserts deferred until after the restore.
+    check(0x6A7B, 4, 8, gen_case, |case| {
+        let qm = build(case)?;
+        for kv in [Precision::Raw, Precision::Q8, Precision::Q4] {
+            let auto = decode_stream(&qm, case, kv, 2)?;
+            let old = std::env::var("EWQ_KERNEL_PATH").ok();
+            let mut pinned = Vec::new();
+            for pin in ["scalar", "avx2", "avx512"] {
+                std::env::set_var("EWQ_KERNEL_PATH", pin);
+                pinned.push((pin, decode_stream(&qm, case, kv, 2)));
+            }
+            match old {
+                Some(v) => std::env::set_var("EWQ_KERNEL_PATH", v),
+                None => std::env::remove_var("EWQ_KERNEL_PATH"),
+            }
+            for (pin, stream) in pinned {
+                let stream = stream?;
+                for (t, (a, b)) in stream.iter().zip(&auto).enumerate() {
+                    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+                        if x.to_bits() != y.to_bits() {
+                            return Err(format!(
+                                "{} kv decode differs under EWQ_KERNEL_PATH={pin}: t={t} \
+                                 elem {i}: pinned {x} vs auto {y} (precs={:?})",
+                                kv.label(),
+                                case.precs
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn decode_streams_bit_identical_with_prefetch_disabled() {
+    // EWQ_PREFETCH=0 strips the software prefetch out of the band loops;
+    // prefetch is advisory (it loads cache lines, never values), so the
+    // stream must not move a bit either way.
+    check(0x9F37, 4, 8, gen_case, |case| {
+        let qm = build(case)?;
+        for kv in [Precision::Raw, Precision::Q8] {
+            let on = decode_stream(&qm, case, kv, 2)?;
+            let old = std::env::var("EWQ_PREFETCH").ok();
+            std::env::set_var("EWQ_PREFETCH", "0");
+            let off = decode_stream(&qm, case, kv, 2);
+            match old {
+                Some(v) => std::env::set_var("EWQ_PREFETCH", v),
+                None => std::env::remove_var("EWQ_PREFETCH"),
+            }
+            let off = off?;
+            for (t, (a, b)) in off.iter().zip(&on).enumerate() {
+                for (i, (x, y)) in a.iter().zip(b).enumerate() {
+                    if x.to_bits() != y.to_bits() {
+                        return Err(format!(
+                            "{} kv decode differs with prefetch off: t={t} elem {i}: \
+                             off {x} vs on {y} (precs={:?})",
+                            kv.label(),
+                            case.precs
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn property_batched_decode_bit_identical_to_per_sequence_for_random_models() {
     // the continuous-batching property over random models, precision mixes
     // and KV geometries: a ragged decode_step_batched cohort — sequence i
@@ -479,6 +555,36 @@ fn batched_serving_streams_bit_identical_under_forced_scalar_kernels() {
         assert_eq!(
             auto, streams,
             "policy={label} max_decode_batch={max_db} under EWQ_FORCE_SCALAR=1"
+        );
+    }
+}
+
+#[test]
+fn batched_serving_streams_bit_identical_under_kernel_path_pins() {
+    // the batched-decode level of the {scalar, avx2, avx512} matrix: every
+    // pinned path (including an avx512 pin that falls back on hosts without
+    // the hardware) reproduces the auto-dispatched serving streams exactly.
+    // Same own-process env discipline as the force-scalar serving test.
+    let model = serve_model();
+    let (auto, _) = serve_streams(&model, 2, ewq::config::DispatchPolicy::WorkSteal, 16, 5, 4);
+    let old = std::env::var("EWQ_KERNEL_PATH").ok();
+    let mut pinned = Vec::new();
+    for pin in ["scalar", "avx2", "avx512"] {
+        std::env::set_var("EWQ_KERNEL_PATH", pin);
+        for max_db in [1usize, 16] {
+            let (streams, _) =
+                serve_streams(&model, 2, ewq::config::DispatchPolicy::WorkSteal, max_db, 5, 4);
+            pinned.push((pin, max_db, streams));
+        }
+    }
+    match old {
+        Some(v) => std::env::set_var("EWQ_KERNEL_PATH", v),
+        None => std::env::remove_var("EWQ_KERNEL_PATH"),
+    }
+    for (pin, max_db, streams) in pinned {
+        assert_eq!(
+            auto, streams,
+            "max_decode_batch={max_db} under EWQ_KERNEL_PATH={pin}"
         );
     }
 }

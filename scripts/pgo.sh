@@ -1,0 +1,96 @@
+#!/usr/bin/env bash
+# Profile-guided-optimization lane for the fused quantized kernels.
+#
+# Pipeline (all steps run from the repo root, artifacts land in rust/target
+# and BENCH_*.json files at the repo root):
+#
+#   1. baseline   — plain release build, quick bench_runtime run
+#                   -> BENCH_pgo_baseline.json
+#   2. instrument — rebuild with -Cprofile-generate, re-run the same quick
+#                   bench workload so the profile covers the fused GEMM /
+#                   GEMV / decode hot loops that PGO should optimize
+#   3. merge      — llvm-profdata merge the .profraw shards into one
+#                   .profdata (llvm-profdata ships with the rustup
+#                   `llvm-tools` component; we look it up inside the
+#                   active sysroot so no extra install is needed)
+#   4. optimize   — rebuild with -Cprofile-use and re-run the quick bench
+#                   -> BENCH_pgo.json
+#   5. compare    — print baseline-vs-PGO ratios for the tracked GFLOP/s
+#                   and decode keys (report-only: PGO wins are
+#                   machine-dependent, so this lane never gates)
+#
+# The workload profiled is `EWQ_BENCH_QUICK=1 cargo bench --bench
+# bench_runtime` — the same fused kernels bench_compare gates on — so the
+# profile weights the band-tiled GEMM inner loops, the dequant unpacks and
+# the batched decode path rather than test scaffolding.
+#
+# Graceful degradation: if cargo/rustc or llvm-profdata are missing the
+# script explains what to install and exits 0, so `make pgo` is safe to
+# invoke on hosts without the llvm-tools component.
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+ROOT="$(pwd)"
+
+if ! command -v cargo >/dev/null 2>&1 || ! command -v rustc >/dev/null 2>&1; then
+    echo "pgo: cargo/rustc not found on PATH — install a Rust toolchain first" >&2
+    exit 0
+fi
+
+SYSROOT="$(rustc --print sysroot)"
+HOST="$(rustc -vV | awk '/^host: / { print $2 }')"
+PROFDATA="$SYSROOT/lib/rustlib/$HOST/bin/llvm-profdata"
+if [ ! -x "$PROFDATA" ]; then
+    # Some distros put a matching llvm-profdata on PATH instead.
+    if command -v llvm-profdata >/dev/null 2>&1; then
+        PROFDATA="$(command -v llvm-profdata)"
+    else
+        echo "pgo: llvm-profdata not found (looked in $SYSROOT/lib/rustlib/$HOST/bin)" >&2
+        echo "pgo: install it with: rustup component add llvm-tools" >&2
+        exit 0
+    fi
+fi
+
+PGO_DIR="$ROOT/rust/target/pgo-profiles"
+MERGED="$PGO_DIR/merged.profdata"
+rm -rf "$PGO_DIR"
+mkdir -p "$PGO_DIR"
+
+run_quick_bench() {
+    # $1 = output json path (repo-root relative), RUSTFLAGS inherited.
+    (cd rust && EWQ_BENCH_QUICK=1 EWQ_BENCH_OUT="../$1" \
+        cargo bench --bench bench_runtime)
+}
+
+echo "== pgo step 1/5: baseline build + quick bench =="
+run_quick_bench BENCH_pgo_baseline.json
+
+echo "== pgo step 2/5: instrumented build + profile run =="
+RUSTFLAGS="-Cprofile-generate=$PGO_DIR" run_quick_bench BENCH_pgo_instrumented.json
+
+echo "== pgo step 3/5: merging profiles =="
+"$PROFDATA" merge -o "$MERGED" "$PGO_DIR"/*.profraw
+echo "pgo: merged $(ls "$PGO_DIR"/*.profraw | wc -l) profraw shard(s) -> $MERGED"
+
+echo "== pgo step 4/5: profile-guided build + quick bench =="
+# -pgo-warn-missing-function keeps cold functions (bench scaffolding not
+# covered by the profile) a warning rather than an error.
+RUSTFLAGS="-Cprofile-use=$MERGED -Cllvm-args=-pgo-warn-missing-function" \
+    run_quick_bench BENCH_pgo.json
+
+echo "== pgo step 5/5: baseline vs PGO (higher is better, report-only) =="
+for key in gflops_fused_serial gflops_fused_pooled \
+        gemm_gflops_q8_simd gemm_gflops_q4_simd \
+        gemv_gflops_8bit gemv_gflops_4bit; do
+    base="$(grep -o "\"$key\": *[0-9.]*" BENCH_pgo_baseline.json | awk '{print $2}')"
+    pgo="$(grep -o "\"$key\": *[0-9.]*" BENCH_pgo.json | awk '{print $2}')"
+    if [ -n "$base" ] && [ -n "$pgo" ]; then
+        awk -v k="$key" -v b="$base" -v p="$pgo" \
+            'BEGIN { printf "  %-24s baseline %8.3f  pgo %8.3f  ratio %.3fx\n", k, b, p, p / b }'
+    else
+        echo "  $key: missing from one side, skipped"
+    fi
+done
+echo "pgo: done — BENCH_pgo.json holds the profile-guided run" \
+     "(the instrumented run's numbers in BENCH_pgo_instrumented.json are" \
+     "counter-inflated and only exist to generate the profile)"
